@@ -1,0 +1,8 @@
+"""Pytest path shim: make `compile.*` importable when pytest is invoked
+from the repository root (`pytest python/tests/`) as well as from
+`python/` (`cd python && python -m pytest tests/`)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

@@ -1,0 +1,108 @@
+//! Live mini-cluster (the paper's physical-cluster experiment, §5.2 /
+//! Table 5, scaled to one host): a leader and two workers run a small
+//! trace with real PJRT training on the workers, then the *same trace*
+//! replays on the simulator to demonstrate deploy/simulate fidelity.
+//!
+//! ```bash
+//! cargo run --release --example deploy_cluster -- [--jobs 12]
+//!     [--variant tiny] [--time-scale 900] [--no-compute]
+//! ```
+
+use synergy::deploy::{Leader, LeaderConfig, Worker, WorkerConfig};
+use synergy::sim::{SimConfig, Simulator};
+use synergy::trace::{generate, Split, TraceConfig};
+use synergy::util::cli::Args;
+use std::sync::Arc;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let n_jobs = args.usize("jobs", 12);
+    let variant = args.get_or("variant", "tiny").to_string();
+    let time_scale = args.f64("time-scale", 900.0);
+    let real_compute = !args.flag("no-compute");
+    let n_workers = args.usize("workers", 2);
+
+    let trace_cfg = TraceConfig {
+        n_jobs,
+        split: Split::new(30, 60, 10),
+        multi_gpu: false,
+        jobs_per_hour: None, // static trace, FIFO — the Table-5 setup
+        seed: 5,
+    };
+    let jobs = generate(&trace_cfg);
+
+    // --- deploy -----------------------------------------------------------
+    let leader = Arc::new(Leader::new(LeaderConfig {
+        bind: "127.0.0.1:0".into(),
+        n_workers,
+        round_real_s: 1.0,
+        time_scale,
+        policy: "fifo".into(),
+        mechanism: "tune".into(),
+        variant,
+        max_real_s: args.f64("max-real", 300.0),
+    }));
+    let l2 = Arc::clone(&leader);
+    let trace_for_deploy = jobs.clone();
+    let leader_thread =
+        std::thread::spawn(move || l2.run(trace_for_deploy).expect("leader"));
+
+    // Wait for the leader to bind, then start workers.
+    let addr = loop {
+        if let Some(a) = *leader.addr.lock().unwrap() {
+            break a;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    };
+    let mut worker_threads = Vec::new();
+    for _ in 0..n_workers {
+        let cfg = WorkerConfig {
+            leader_addr: addr.to_string(),
+            artifacts_dir: "artifacts".into(),
+            real_compute,
+            ..Default::default()
+        };
+        worker_threads.push(std::thread::spawn(move || Worker::run(cfg)));
+    }
+    let report = leader_thread.join().expect("leader thread");
+    for t in worker_threads {
+        let _ = t.join();
+    }
+
+    let deploy_stats = report.jct_stats();
+    println!(
+        "\ndeploy:   {} jobs finished, {} rounds, {} real train steps",
+        deploy_stats.n, report.rounds, report.total_steps
+    );
+    println!(
+        "deploy:   avg JCT {:.2} h (sim-time)  makespan {:.2} h",
+        deploy_stats.avg_hrs(),
+        report.makespan_sim_s / 3600.0
+    );
+    if !report.losses.is_empty() {
+        let mean_loss: f64 =
+            report.losses.values().sum::<f64>() / report.losses.len() as f64;
+        println!("deploy:   mean final training loss {mean_loss:.3}");
+    }
+
+    // --- simulate the same trace (Table 5 fidelity check) ------------------
+    let sim = Simulator::new(SimConfig {
+        n_servers: n_workers,
+        policy: "fifo".into(),
+        mechanism: "tune".into(),
+        ..Default::default()
+    });
+    let sim_result = sim.run(jobs);
+    let sim_stats = sim_result.jct_stats();
+    println!(
+        "simulate: avg JCT {:.2} h  makespan {:.2} h",
+        sim_stats.avg_hrs(),
+        sim_result.makespan_s / 3600.0
+    );
+    if deploy_stats.n > 0 {
+        let diff = (deploy_stats.avg_s - sim_stats.avg_s).abs()
+            / sim_stats.avg_s.max(1e-9)
+            * 100.0;
+        println!("deploy-vs-simulate avg JCT difference: {diff:.1}%");
+    }
+}

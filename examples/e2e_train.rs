@@ -1,0 +1,87 @@
+//! End-to-end driver: train the AOT-compiled transformer through the full
+//! three-layer stack (Pallas kernels -> JAX train step -> HLO text ->
+//! rust PJRT runtime) and log the loss curve.
+//!
+//! Proves all layers compose: the Layer-1 fused-attention/LayerNorm
+//! kernels execute inside the Layer-2 train-step HLO, driven entirely
+//! from rust with device-resident parameters.
+//!
+//! ```bash
+//! cargo run --release --example e2e_train -- [--variant gpt100m]
+//!     [--steps 300] [--lr 0.2] [--out e2e_loss.csv]
+//! ```
+//!
+//! Defaults train the ~100M-parameter `gpt100m` variant for 300 steps on
+//! the synthetic bigram corpus; the loss must fall well below the
+//! ln(vocab) uniform baseline. Results are recorded in EXPERIMENTS.md.
+
+use synergy::runtime::{Runtime, SyntheticCorpus, Trainer};
+use synergy::util::cli::Args;
+use std::io::Write;
+use std::time::Instant;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let variant = args.get_or("variant", "gpt100m").to_string();
+    let steps = args.usize("steps", 300);
+    let lr = args.f64("lr", 0.2) as f32;
+    let artifacts = args.get_or("artifacts", "artifacts").to_string();
+    let out_path = args.get_or("out", "e2e_loss.csv").to_string();
+
+    println!("e2e_train: variant={variant} steps={steps} lr={lr}");
+    let t0 = Instant::now();
+    let rt = Runtime::cpu().expect("pjrt cpu client");
+    let (meta, exe) = rt
+        .load_variant(&artifacts, &variant)
+        .expect("load artifact (run `make artifacts` first)");
+    println!(
+        "loaded {}: {:.1}M params, batch={} seq={} vocab={} (compile {:?})",
+        meta.variant,
+        meta.param_count as f64 / 1e6,
+        meta.batch,
+        meta.seq_len,
+        meta.vocab,
+        t0.elapsed()
+    );
+    let uniform = (meta.vocab as f64).ln();
+    let mut corpus = SyntheticCorpus::new(meta.vocab, 7);
+    let mut trainer =
+        Trainer::new(&rt.client, exe, meta, 0).expect("trainer init");
+
+    let mut csv = String::from("step,loss,seconds\n");
+    let train_start = Instant::now();
+    let mut first = f64::NAN;
+    let mut last = f64::NAN;
+    for step in 1..=steps {
+        let toks = corpus.batch(trainer.meta.batch, trainer.meta.seq_len);
+        let loss = trainer.train_step(&toks, lr).expect("train step") as f64;
+        if step == 1 {
+            first = loss;
+        }
+        last = loss;
+        csv.push_str(&format!(
+            "{step},{loss:.4},{:.2}\n",
+            train_start.elapsed().as_secs_f64()
+        ));
+        if step == 1 || step % 25 == 0 {
+            println!(
+                "step {step:>4}  loss {loss:>7.4}  (uniform baseline {uniform:.3})  {:.2} s/step",
+                train_start.elapsed().as_secs_f64() / step as f64
+            );
+        }
+    }
+    std::fs::File::create(&out_path)
+        .and_then(|mut f| f.write_all(csv.as_bytes()))
+        .expect("write loss csv");
+
+    let sps = steps as f64 / train_start.elapsed().as_secs_f64();
+    println!(
+        "\ndone: loss {first:.3} -> {last:.3} over {steps} steps \
+         ({sps:.2} steps/s); curve in {out_path}"
+    );
+    assert!(
+        last < first && last < uniform,
+        "loss must descend below the uniform baseline"
+    );
+    println!("loss curve OK (descending, below ln(V)={uniform:.2})");
+}

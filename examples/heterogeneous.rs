@@ -1,0 +1,98 @@
+//! Heterogeneous-cluster walkthrough (paper Appendix A.2).
+//!
+//! Builds a two-generation cluster (P100 + V100), profiles a small mixed
+//! workload along the extra machine-type dimension, and shows how
+//! het-TUNE routes compute-bound jobs to fast GPUs while input-bound
+//! jobs — which cannot exploit them — keep the slower generation, then
+//! runs a full trace through the heterogeneous simulator.
+//!
+//! Run with: `cargo run --release --example heterogeneous`
+
+use synergy::hetero::{
+    GpuGen, HetJobRequest, HetMechanism, HetTune, HeteroCluster,
+    HeteroProfiler, HeteroSimConfig, HeteroSimulator,
+};
+use synergy::job::{Job, JobId, ModelKind};
+use synergy::trace::{generate, Split, TraceConfig};
+
+fn main() {
+    // --- 1. profile a job per machine type ---------------------------------
+    let cluster = HeteroCluster::two_tier(2);
+    let profiler = HeteroProfiler::noiseless(&cluster);
+    println!("Per-type peak throughput (samples/s, 1 GPU):");
+    println!("{:<16} {:>10} {:>10} {:>8}", "model", "p100", "v100", "gain");
+    for model in [
+        ModelKind::Gnmt,
+        ModelKind::TransformerXl,
+        ModelKind::ResNet18,
+        ModelKind::ShuffleNetV2,
+    ] {
+        let job = Job::new(JobId(0), model, 1, 0.0, 3600.0);
+        let s = profiler.profile(&job);
+        let slow = s.matrix(GpuGen::P100).unwrap().max_throughput();
+        let fast = s.matrix(GpuGen::V100).unwrap().max_throughput();
+        println!(
+            "{:<16} {:>10.1} {:>10.1} {:>7.2}x",
+            model.name(),
+            slow,
+            fast,
+            fast / slow
+        );
+    }
+    println!();
+
+    // --- 2. one round of het-TUNE assignment --------------------------------
+    let mut cluster = HeteroCluster::two_tier(1);
+    let jobs: Vec<Job> = [
+        (0, ModelKind::Gnmt, 8),         // compute-bound -> fast type
+        (1, ModelKind::ShuffleNetV2, 8), // input-bound   -> slow type
+    ]
+    .iter()
+    .map(|&(id, m, g)| Job::new(JobId(id), m, g, 0.0, 3600.0))
+    .collect();
+    let sens: Vec<_> = jobs.iter().map(|j| profiler.profile(j)).collect();
+    let reqs: Vec<HetJobRequest<'_>> = jobs
+        .iter()
+        .zip(&sens)
+        .map(|(j, s)| HetJobRequest { id: j.id, gpus: j.gpus, sens: s })
+        .collect();
+    let grants = HetTune.allocate(&mut cluster, &reqs);
+    println!("het-TUNE type assignment:");
+    for j in &jobs {
+        let g = &grants[&j.id];
+        println!(
+            "  {:<16} -> {:<5} ({} GPUs, {:.0} CPUs, {:.0} GB)",
+            j.model.name(),
+            g.gen.name(),
+            j.gpus,
+            g.grant.demand.cpus,
+            g.grant.demand.mem_gb
+        );
+    }
+    println!();
+
+    // --- 3. full trace through the heterogeneous simulator ------------------
+    let trace = generate(&TraceConfig {
+        n_jobs: 120,
+        split: Split::new(30, 50, 20),
+        multi_gpu: true,
+        jobs_per_hour: Some(6.0),
+        seed: 42,
+    });
+    println!("Simulating 120 jobs on 64 P100 + 64 V100 GPUs (SRTF):");
+    for mech in ["het-proportional", "het-tune"] {
+        let r = HeteroSimulator::new(HeteroSimConfig {
+            mechanism: mech.into(),
+            ..Default::default()
+        })
+        .run(trace.clone());
+        let s = r.jct_stats();
+        println!(
+            "  {:<18} avg JCT {:>6.2} h   p99 {:>7.2} h   ({} rounds)",
+            mech,
+            s.avg_hrs(),
+            s.p99_hrs(),
+            r.rounds
+        );
+    }
+}

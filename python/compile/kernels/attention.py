@@ -1,0 +1,120 @@
+"""Layer-1 Pallas kernel: fused causal scaled-dot-product attention.
+
+The paper's workload layer (the DNN jobs Synergy schedules) runs image /
+language / speech models; our representative real workload is a GPT-style
+decoder transformer whose hot-spot — attention — is implemented here as a
+Pallas kernel.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): instead of porting a
+CUDA flash-attention (warps / shared memory / WMMA), the kernel is tiled for
+the TPU model Pallas exposes: the grid iterates over (batch*heads), each
+program streams one (seq, head_dim) Q/K/V tile HBM->VMEM via BlockSpec and
+issues MXU-shaped matmuls; softmax runs on the VPU in f32.
+
+interpret=True is mandatory: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and artifacts produced here are executed by the rust runtime
+on the CPU PJRT client.
+
+The backward pass is supplied as a pure-jnp custom VJP (standard
+flash-attention practice: recompute probabilities), so the whole train step
+remains differentiable and lowers into a single HLO module.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, causal: bool):
+    """One grid step: full attention for a single (batch*head) slice.
+
+    Block shapes are (1, S, D): one Q/K/V tile per program. S and D are
+    chosen so the working set (3 input tiles + S*S scores) fits VMEM; see
+    vmem_footprint_bytes() below, asserted in tests.
+    """
+    q = q_ref[0, :, :].astype(jnp.float32)  # (S, D)
+    k = k_ref[0, :, :].astype(jnp.float32)  # (S, D)
+    v = v_ref[0, :, :].astype(jnp.float32)  # (S, D)
+
+    # MXU matmul: (S, D) x (D, S) -> (S, S)
+    scores = jnp.dot(q, k.T) * scale
+    if causal:
+        s = q.shape[0]
+        row = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+        col = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+        scores = jnp.where(col <= row, scores, NEG_INF)
+
+    # Numerically stable softmax on the VPU.
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+
+    # MXU matmul: (S, S) x (S, D) -> (S, D)
+    o_ref[0, :, :] = jnp.dot(p, v).astype(o_ref.dtype)
+
+
+def attention_forward(q, k, v, *, causal: bool = True):
+    """Fused attention over (BH, S, D) tensors via pallas_call."""
+    bh, s, d = q.shape
+    scale = 1.0 / (d ** 0.5)
+    spec = pl.BlockSpec((1, s, d), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        partial(_attention_kernel, scale=scale, causal=causal),
+        grid=(bh,),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+def _attention_bwd_ref(q, k, v, g, *, causal: bool):
+    """Pure-jnp backward (recompute probabilities, flash-attention style)."""
+    d = q.shape[-1]
+    scale = 1.0 / (d ** 0.5)
+    scores = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        s = q.shape[1]
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        scores = jnp.where(mask, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    dv = jnp.einsum("bqk,bqd->bkd", p, g.astype(jnp.float32))
+    dp = jnp.einsum("bqd,bkd->bqk", g.astype(jnp.float32), v.astype(jnp.float32))
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    dq = jnp.einsum("bqk,bkd->bqd", ds, k.astype(jnp.float32)) * scale
+    dk = jnp.einsum("bqk,bqd->bkd", ds, q.astype(jnp.float32)) * scale
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def attention(q, k, v, causal: bool = True):
+    """Differentiable fused attention. Forward = Pallas, backward = jnp VJP."""
+    return attention_forward(q, k, v, causal=causal)
+
+
+def _attention_fwd(q, k, v, causal):
+    return attention_forward(q, k, v, causal=causal), (q, k, v)
+
+
+def _attention_bwd(causal, res, g):
+    q, k, v = res
+    return _attention_bwd_ref(q, k, v, g, causal=causal)
+
+
+attention.defvjp(_attention_fwd, _attention_bwd)
+
+
+def vmem_footprint_bytes(s: int, d: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set of one grid step (see DESIGN.md §Perf).
+
+    3 input tiles + 1 output tile of (s, d) plus the (s, s) score/prob
+    buffers in f32. Used by tests and the perf notes to keep the kernel
+    under the ~16 MiB VMEM budget of a real TPU core.
+    """
+    tiles = 4 * s * d * dtype_bytes
+    scores = 2 * s * s * 4
+    return tiles + scores

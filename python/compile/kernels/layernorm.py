@@ -1,0 +1,85 @@
+"""Layer-1 Pallas kernel: row-tiled LayerNorm.
+
+A VPU-shaped kernel: the grid tiles rows of the (N, D) activation matrix;
+each program normalizes a block of rows and applies the affine transform.
+gamma/beta are broadcast to every program via a constant index_map.
+
+interpret=True for the same reason as attention.py (CPU PJRT execution).
+Backward is a pure-jnp custom VJP so the train step stays differentiable.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)  # (block_rows, D)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    y = (x - mean) * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * g_ref[...] + b_ref[...]).astype(o_ref.dtype)
+
+
+def _pick_block_rows(n: int) -> int:
+    """Largest power-of-two divisor of n, capped at 128 rows per program."""
+    b = 1
+    while b < 128 and n % (b * 2) == 0:
+        b *= 2
+    return b
+
+
+def layernorm_forward(x, gamma, beta, *, eps: float = 1e-5):
+    n, d = x.shape
+    block = _pick_block_rows(n)
+    return pl.pallas_call(
+        partial(_layernorm_kernel, eps=eps),
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((block, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=True,
+    )(x, gamma, beta)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=())
+def layernorm(x, gamma, beta):
+    """Differentiable LayerNorm. Forward = Pallas, backward = jnp VJP."""
+    return layernorm_forward(x, gamma, beta)
+
+
+def _ln_fwd(x, gamma, beta):
+    return layernorm_forward(x, gamma, beta), (x, gamma)
+
+
+def _ln_bwd(res, g):
+    x, gamma = res
+    eps = 1e-5
+    x32 = x.astype(jnp.float32)
+    g32 = g.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mean), axis=-1, keepdims=True)
+    rstd = jax.lax.rsqrt(var + eps)
+    xhat = (x32 - mean) * rstd
+    dgamma = jnp.sum(g32 * xhat, axis=0)
+    dbeta = jnp.sum(g32, axis=0)
+    d = x.shape[-1]
+    gy = g32 * gamma.astype(jnp.float32)
+    dx = rstd * (
+        gy
+        - jnp.mean(gy, axis=-1, keepdims=True)
+        - xhat * jnp.mean(gy * xhat, axis=-1, keepdims=True)
+    )
+    # exact: dx = rstd * (gy - mean(gy) - xhat * mean(gy * xhat)), with the
+    # means over the feature axis of size d.
+    del d
+    return dx.astype(x.dtype), dgamma.astype(gamma.dtype), dbeta.astype(gamma.dtype)
+
+
+layernorm.defvjp(_ln_fwd, _ln_bwd)

@@ -1,0 +1,41 @@
+"""Pure-jnp correctness oracles for the Layer-1 Pallas kernels.
+
+Every kernel in this package has a reference implementation here written
+with plain jax.numpy only (no pallas), used by pytest/hypothesis as the
+ground truth for values and gradients.
+"""
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """softmax(q kᵀ / sqrt(d)) v over (BH, S, D) tensors, optionally causal."""
+    d = q.shape[-1]
+    scale = 1.0 / (d ** 0.5)
+    scores = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        s = q.shape[1]
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        scores = jnp.where(mask, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def layernorm_ref(x, gamma, beta, eps: float = 1e-5):
+    """Row LayerNorm with affine transform over (N, D)."""
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mean), axis=-1, keepdims=True)
+    y = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    return (y * gamma + beta).astype(x.dtype)
+
+
+def xent_ref(logits, targets):
+    """Per-row NLL of (N, V) logits against (N,) int targets, float32."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.take_along_axis(logp, targets[:, None], axis=-1)[:, 0]

@@ -1,0 +1,82 @@
+"""Layer-1 Pallas kernel: fused softmax cross-entropy.
+
+The training loss hot-spot: for (N, V) logits and integer targets, each
+program computes a block of rows' negative log-likelihood in one pass —
+max, log-sum-exp, and target gather fused so the (N, V) probability
+matrix is never materialized in HBM (the V-sized softmax intermediate
+lives only in VMEM-shaped blocks).
+
+TPU shape notes (DESIGN.md §Hardware-Adaptation): the row block feeds
+the VPU with (block_rows, V) tiles; the gather is expressed as an iota
+comparison (TPU has no scatter/gather unit — masked reductions are the
+idiomatic form). interpret=True as everywhere (CPU PJRT cannot run
+Mosaic custom-calls). Backward is a pure-jnp custom VJP
+(softmax − one-hot), keeping the train step differentiable.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _xent_kernel(logits_ref, targets_ref, o_ref):
+    x = logits_ref[...].astype(jnp.float32)  # (block_rows, V)
+    t = targets_ref[...]  # (block_rows,)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(x - m), axis=-1)) + m[..., 0]
+    onehot = (
+        jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+        == t[:, None].astype(jnp.int32)
+    )
+    target_logit = jnp.sum(jnp.where(onehot, x, 0.0), axis=-1)
+    o_ref[...] = (lse - target_logit).astype(o_ref.dtype)
+
+
+def _pick_block_rows(n: int) -> int:
+    """Largest power-of-two divisor of n, capped at 128 rows per program."""
+    b = 1
+    while b < 128 and n % (b * 2) == 0:
+        b *= 2
+    return b
+
+
+def xent_forward(logits, targets):
+    """Per-row NLL for (N, V) logits and (N,) int targets, as float32."""
+    n, v = logits.shape
+    block = _pick_block_rows(n)
+    return pl.pallas_call(
+        _xent_kernel,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((block, v), lambda i: (i, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(logits, targets)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=())
+def xent(logits, targets):
+    """Differentiable fused cross-entropy. Forward = Pallas, backward =
+    jnp VJP (targets carry no gradient)."""
+    return xent_forward(logits, targets)
+
+
+def _xent_fwd(logits, targets):
+    return xent_forward(logits, targets), (logits, targets)
+
+
+def _xent_bwd(res, g):
+    logits, targets = res
+    x = logits.astype(jnp.float32)
+    p = jax.nn.softmax(x, axis=-1)
+    onehot = jax.nn.one_hot(targets, x.shape[-1], dtype=jnp.float32)
+    dlogits = (p - onehot) * g[:, None]
+    return (dlogits.astype(logits.dtype), None)
+
+
+xent.defvjp(_xent_fwd, _xent_bwd)

@@ -1,0 +1,212 @@
+"""Layer-2 JAX model: GPT-style decoder transformer with a flat-parameter
+train step, AOT-lowered for the rust runtime.
+
+The rust coordinator (Layer 3) holds model parameters and SGD-momentum state
+as two flat f32 device buffers and drives training by repeatedly executing
+the lowered `train_step` HLO with `execute_b` (buffers never leave the
+device between steps). That forces a *flat* parameter interface:
+
+    train_step(flat_params, flat_momentum, tokens, lr)
+        -> (flat_params', flat_momentum', mean_loss)
+
+`ParamSpec` records the name/shape/offset of every tensor inside the flat
+vector; the same layout is exported to artifacts/<variant>.meta.json so the
+rust side can introspect (param count, buffer length, input shapes).
+
+The hot-spots call the Layer-1 Pallas kernels (attention, layernorm), so the
+kernels lower into the same HLO module as the surrounding graph.
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.attention import attention
+from compile.kernels.layernorm import layernorm
+from compile.kernels.xent import xent
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture + batch configuration for one AOT variant."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq_len: int
+    batch: int
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+# The AOT variants built by `make artifacts`. `gpt100m` is the end-to-end
+# workload (~100M parameters); `tiny` keeps tests fast; `small` sits between
+# for deploy-mode multi-job demos.
+CONFIGS = {
+    "tiny": ModelConfig("tiny", vocab=256, d_model=64, n_layers=2, n_heads=4,
+                        d_ff=256, seq_len=32, batch=4),
+    "small": ModelConfig("small", vocab=2048, d_model=256, n_layers=4,
+                         n_heads=8, d_ff=1024, seq_len=32, batch=4),
+    "gpt100m": ModelConfig("gpt100m", vocab=8192, d_model=768, n_layers=12,
+                           n_heads=12, d_ff=3072, seq_len=32, batch=4),
+}
+
+
+@dataclass
+class ParamSpec:
+    """Layout of the flat parameter vector."""
+
+    names: List[str] = field(default_factory=list)
+    shapes: List[Tuple[int, ...]] = field(default_factory=list)
+    offsets: List[int] = field(default_factory=list)
+    total: int = 0
+
+    def add(self, name: str, shape: Tuple[int, ...]) -> None:
+        size = 1
+        for s in shape:
+            size *= s
+        self.names.append(name)
+        self.shapes.append(tuple(shape))
+        self.offsets.append(self.total)
+        self.total += size
+
+    def index(self, name: str) -> int:
+        return self.names.index(name)
+
+
+def param_spec(cfg: ModelConfig) -> ParamSpec:
+    """Declare every parameter tensor, in flat-vector order."""
+    spec = ParamSpec()
+    spec.add("tok_embed", (cfg.vocab, cfg.d_model))
+    spec.add("pos_embed", (cfg.seq_len, cfg.d_model))
+    for layer in range(cfg.n_layers):
+        p = f"layer{layer}."
+        spec.add(p + "ln1.gamma", (cfg.d_model,))
+        spec.add(p + "ln1.beta", (cfg.d_model,))
+        spec.add(p + "attn.wqkv", (cfg.d_model, 3 * cfg.d_model))
+        spec.add(p + "attn.wo", (cfg.d_model, cfg.d_model))
+        spec.add(p + "ln2.gamma", (cfg.d_model,))
+        spec.add(p + "ln2.beta", (cfg.d_model,))
+        spec.add(p + "mlp.w1", (cfg.d_model, cfg.d_ff))
+        spec.add(p + "mlp.b1", (cfg.d_ff,))
+        spec.add(p + "mlp.w2", (cfg.d_ff, cfg.d_model))
+        spec.add(p + "mlp.b2", (cfg.d_model,))
+    spec.add("ln_f.gamma", (cfg.d_model,))
+    spec.add("ln_f.beta", (cfg.d_model,))
+    return spec
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> jnp.ndarray:
+    """Initialize the flat parameter vector (scaled-normal / zeros / ones)."""
+    spec = param_spec(cfg)
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for name, shape in zip(spec.names, spec.shapes):
+        key, sub = jax.random.split(key)
+        if name.endswith(".gamma"):
+            chunks.append(jnp.ones(shape, jnp.float32).reshape(-1))
+        elif name.endswith((".beta", ".b1", ".b2")):
+            chunks.append(jnp.zeros(shape, jnp.float32).reshape(-1))
+        else:
+            fan_in = shape[0]
+            std = 0.02 if "embed" in name else (1.0 / fan_in) ** 0.5
+            chunks.append(
+                (jax.random.normal(sub, shape, jnp.float32) * std).reshape(-1))
+    return jnp.concatenate(chunks)
+
+
+def _unflatten(flat: jnp.ndarray, spec: ParamSpec):
+    """Slice the flat vector back into named tensors (static offsets)."""
+    params = {}
+    for name, shape, off in zip(spec.names, spec.shapes, spec.offsets):
+        size = 1
+        for s in shape:
+            size *= s
+        params[name] = jax.lax.dynamic_slice(flat, (off,), (size,)).reshape(shape)
+    return params
+
+
+def forward(cfg: ModelConfig, flat_params: jnp.ndarray,
+            tokens: jnp.ndarray) -> jnp.ndarray:
+    """Logits for next-token prediction. tokens: (B, S) int32 -> (B, S, V)."""
+    spec = param_spec(cfg)
+    p = _unflatten(flat_params, spec)
+    b, s = tokens.shape
+    h = p["tok_embed"][tokens] + p["pos_embed"][None, :s, :]
+
+    for layer in range(cfg.n_layers):
+        pre = f"layer{layer}."
+        # --- attention block ---
+        x = layernorm(h.reshape(b * s, cfg.d_model),
+                      p[pre + "ln1.gamma"], p[pre + "ln1.beta"])
+        qkv = x @ p[pre + "attn.wqkv"]  # (B*S, 3*D)
+        qkv = qkv.reshape(b, s, 3, cfg.n_heads, cfg.head_dim)
+        q = qkv[:, :, 0].transpose(0, 2, 1, 3).reshape(
+            b * cfg.n_heads, s, cfg.head_dim)
+        k = qkv[:, :, 1].transpose(0, 2, 1, 3).reshape(
+            b * cfg.n_heads, s, cfg.head_dim)
+        v = qkv[:, :, 2].transpose(0, 2, 1, 3).reshape(
+            b * cfg.n_heads, s, cfg.head_dim)
+        attn = attention(q, k, v, True)  # Pallas kernel (L1)
+        attn = attn.reshape(b, cfg.n_heads, s, cfg.head_dim)
+        attn = attn.transpose(0, 2, 1, 3).reshape(b * s, cfg.d_model)
+        h = h + (attn @ p[pre + "attn.wo"]).reshape(b, s, cfg.d_model)
+
+        # --- MLP block ---
+        x = layernorm(h.reshape(b * s, cfg.d_model),
+                      p[pre + "ln2.gamma"], p[pre + "ln2.beta"])
+        x = jax.nn.gelu(x @ p[pre + "mlp.w1"] + p[pre + "mlp.b1"])
+        x = x @ p[pre + "mlp.w2"] + p[pre + "mlp.b2"]
+        h = h + x.reshape(b, s, cfg.d_model)
+
+    x = layernorm(h.reshape(b * s, cfg.d_model),
+                  p["ln_f.gamma"], p["ln_f.beta"])
+    # Weight-tied output head.
+    logits = x @ p["tok_embed"].T
+    return logits.reshape(b, s, cfg.vocab)
+
+
+def loss_fn(cfg: ModelConfig, flat_params: jnp.ndarray,
+            tokens: jnp.ndarray) -> jnp.ndarray:
+    """Mean next-token cross-entropy over positions 0..S-2."""
+    logits = forward(cfg, flat_params, tokens)  # (B, S, V)
+    b, s, v = logits.shape
+    logits = logits[:, :-1, :].reshape(b * (s - 1), v)
+    targets = tokens[:, 1:].reshape(b * (s - 1))
+    # Fused Pallas softmax-xent (L1): never materializes the (N, V)
+    # probability matrix in HBM.
+    nll = xent(logits, targets)
+    return jnp.mean(nll)
+
+
+def train_step(cfg: ModelConfig, flat_params: jnp.ndarray,
+               flat_momentum: jnp.ndarray, tokens: jnp.ndarray,
+               lr: jnp.ndarray):
+    """One SGD-with-momentum step over the flat parameter vector.
+
+    Returns (flat_params', flat_momentum', loss). This is the function that
+    is AOT-lowered; the rust runtime keeps both flat buffers device-resident
+    across steps via execute_b.
+    """
+    loss, grad = jax.value_and_grad(
+        lambda fp: loss_fn(cfg, fp, tokens))(flat_params)
+    # Global-norm clipping keeps the long e2e run stable with synthetic data.
+    gnorm = jnp.sqrt(jnp.sum(jnp.square(grad)))
+    grad = grad * jnp.minimum(1.0, 1.0 / (gnorm + 1e-9))
+    momentum = 0.9 * flat_momentum + grad
+    new_params = flat_params - lr * momentum
+    return new_params, momentum, loss
+
+
+def eval_step(cfg: ModelConfig, flat_params: jnp.ndarray,
+              tokens: jnp.ndarray):
+    """Loss only (no update) — used by the rust profiler path."""
+    return (loss_fn(cfg, flat_params, tokens),)

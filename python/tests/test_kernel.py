@@ -1,0 +1,206 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+This is the core correctness signal for the compute layer: values AND
+gradients must match the reference to tight tolerances, across shapes and
+dtypes (hypothesis sweeps live in test_kernel_properties.py).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.attention import (attention, attention_forward,
+                                       vmem_footprint_bytes)
+from compile.kernels.layernorm import layernorm, layernorm_forward
+from compile.kernels.ref import attention_ref, layernorm_ref
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape).astype(dtype)
+
+
+class TestAttentionForward:
+    @pytest.mark.parametrize("bh,s,d", [(1, 8, 16), (4, 32, 16), (8, 32, 64),
+                                        (12, 16, 32), (2, 64, 64)])
+    def test_matches_ref_causal(self, bh, s, d):
+        q, k, v = rand(0, (bh, s, d)), rand(1, (bh, s, d)), rand(2, (bh, s, d))
+        out = attention_forward(q, k, v, causal=True)
+        ref = attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("bh,s,d", [(2, 16, 32), (4, 32, 16)])
+    def test_matches_ref_noncausal(self, bh, s, d):
+        q, k, v = rand(3, (bh, s, d)), rand(4, (bh, s, d)), rand(5, (bh, s, d))
+        out = attention_forward(q, k, v, causal=False)
+        ref = attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+    def test_causal_masks_future(self):
+        """Output at position t must not depend on inputs at positions > t."""
+        bh, s, d = 2, 16, 8
+        q, k, v = rand(6, (bh, s, d)), rand(7, (bh, s, d)), rand(8, (bh, s, d))
+        out1 = attention_forward(q, k, v, causal=True)
+        # Perturb the last key/value: only the last position may change.
+        k2 = k.at[:, -1, :].add(100.0)
+        v2 = v.at[:, -1, :].add(100.0)
+        out2 = attention_forward(q, k2, v2, causal=True)
+        np.testing.assert_allclose(out1[:, :-1], out2[:, :-1],
+                                   rtol=1e-5, atol=1e-5)
+        assert not np.allclose(out1[:, -1], out2[:, -1])
+
+    def test_softmax_rows_bounded(self):
+        """Attention output is a convex combination of V rows."""
+        bh, s, d = 2, 32, 16
+        q, k = rand(9, (bh, s, d)), rand(10, (bh, s, d))
+        v = jnp.ones((bh, s, d), jnp.float32)
+        out = attention_forward(q, k, v, causal=True)
+        np.testing.assert_allclose(out, jnp.ones_like(out), rtol=1e-5,
+                                   atol=1e-5)
+
+    def test_numerical_stability_large_logits(self):
+        bh, s, d = 1, 16, 8
+        q = rand(11, (bh, s, d)) * 100.0
+        k = rand(12, (bh, s, d)) * 100.0
+        v = rand(13, (bh, s, d))
+        out = attention_forward(q, k, v, causal=True)
+        assert np.isfinite(np.asarray(out)).all()
+
+
+class TestAttentionGrad:
+    @pytest.mark.parametrize("bh,s,d", [(2, 16, 16), (4, 32, 32)])
+    def test_grads_match_ref(self, bh, s, d):
+        q, k, v = rand(20, (bh, s, d)), rand(21, (bh, s, d)), rand(22, (bh, s, d))
+
+        def f_pallas(q, k, v):
+            return jnp.sum(jnp.sin(attention(q, k, v, True)))
+
+        def f_ref(q, k, v):
+            return jnp.sum(jnp.sin(attention_ref(q, k, v, causal=True)))
+
+        gp = jax.grad(f_pallas, argnums=(0, 1, 2))(q, k, v)
+        gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(gp, gr):
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+class TestLayerNorm:
+    @pytest.mark.parametrize("n,d", [(4, 16), (32, 64), (128, 256), (96, 48)])
+    def test_matches_ref(self, n, d):
+        x = rand(30, (n, d))
+        gamma = rand(31, (d,)) * 0.1 + 1.0
+        beta = rand(32, (d,)) * 0.1
+        out = layernorm_forward(x, gamma, beta)
+        ref = layernorm_ref(x, gamma, beta)
+        np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+    def test_output_row_statistics(self):
+        """With unit gamma / zero beta each row is ~zero-mean unit-var."""
+        n, d = 16, 128
+        x = rand(33, (n, d)) * 5.0 + 3.0
+        out = layernorm_forward(x, jnp.ones((d,)), jnp.zeros((d,)))
+        np.testing.assert_allclose(np.mean(out, axis=-1), 0.0, atol=1e-4)
+        np.testing.assert_allclose(np.var(np.asarray(out), axis=-1), 1.0,
+                                   atol=1e-2)
+
+    @pytest.mark.parametrize("n,d", [(8, 32), (64, 64)])
+    def test_grads_match_ref(self, n, d):
+        x = rand(34, (n, d))
+        gamma = rand(35, (d,)) * 0.1 + 1.0
+        beta = rand(36, (d,)) * 0.1
+
+        def f_pallas(x, g, b):
+            return jnp.sum(jnp.cos(layernorm(x, g, b)))
+
+        def f_ref(x, g, b):
+            return jnp.sum(jnp.cos(layernorm_ref(x, g, b)))
+
+        gp = jax.grad(f_pallas, argnums=(0, 1, 2))(x, gamma, beta)
+        gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, gamma, beta)
+        for a, b in zip(gp, gr):
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+    def test_odd_row_count(self):
+        """Row counts that are not powers of two still tile correctly."""
+        n, d = 6, 32
+        x = rand(37, (n, d))
+        out = layernorm_forward(x, jnp.ones((d,)), jnp.zeros((d,)))
+        ref = layernorm_ref(x, jnp.ones((d,)), jnp.zeros((d,)))
+        np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+class TestVmemBudget:
+    def test_gpt100m_attention_tile_fits_vmem(self):
+        """DESIGN.md §Perf: per-program working set must fit a 16MiB VMEM."""
+        # gpt100m: seq 32, head_dim 64
+        assert vmem_footprint_bytes(32, 64) < 16 * 1024 * 1024
+        # even a 512-seq variant would fit
+        assert vmem_footprint_bytes(512, 64) < 16 * 1024 * 1024
+
+    def test_footprint_monotone(self):
+        assert vmem_footprint_bytes(64, 64) > vmem_footprint_bytes(32, 64)
+        assert vmem_footprint_bytes(32, 128) > vmem_footprint_bytes(32, 64)
+
+
+from compile.kernels.ref import xent_ref
+from compile.kernels.xent import xent, xent_forward
+
+
+class TestXentForward:
+    @pytest.mark.parametrize("n,v", [(8, 16), (32, 50), (128, 256),
+                                     (96, 1024), (256, 64)])
+    def test_matches_ref(self, n, v):
+        logits = rand(20, (n, v))
+        targets = jax.random.randint(jax.random.PRNGKey(21), (n,), 0, v)
+        out = xent_forward(logits, targets)
+        ref = xent_ref(logits, targets)
+        np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+    def test_output_is_float32_nll(self):
+        logits = rand(22, (16, 32), jnp.bfloat16)
+        targets = jax.random.randint(jax.random.PRNGKey(23), (16,), 0, 32)
+        out = xent_forward(logits, targets)
+        assert out.dtype == jnp.float32
+        assert (np.asarray(out) > 0).all()  # NLL of random logits
+
+    def test_perfect_prediction_near_zero(self):
+        """Rows with a dominant target logit have ~0 loss."""
+        n, v = 8, 32
+        targets = jnp.arange(n) % v
+        logits = jax.nn.one_hot(targets, v) * 50.0
+        out = xent_forward(logits, targets)
+        np.testing.assert_allclose(out, np.zeros(n), atol=1e-6)
+
+    def test_shift_invariance(self):
+        """Softmax xent is invariant to a per-row logit shift."""
+        logits = rand(24, (32, 64))
+        targets = jax.random.randint(jax.random.PRNGKey(25), (32,), 0, 64)
+        shifted = logits + 123.0
+        a = xent_forward(logits, targets)
+        b = xent_forward(shifted, targets)
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+class TestXentGrad:
+    def test_grad_matches_ref(self):
+        n, v = 32, 128
+        logits = rand(26, (n, v))
+        targets = jax.random.randint(jax.random.PRNGKey(27), (n,), 0, v)
+
+        def loss_pallas(x):
+            return jnp.mean(xent(x, targets))
+
+        def loss_ref(x):
+            return jnp.mean(xent_ref(x, targets))
+
+        g_pallas = jax.grad(loss_pallas)(logits)
+        g_ref = jax.grad(loss_ref)(logits)
+        np.testing.assert_allclose(g_pallas, g_ref, rtol=2e-5, atol=2e-5)
+
+    def test_grad_rows_sum_to_zero(self):
+        """d(xent)/d(logits) rows sum to 0 (softmax minus one-hot)."""
+        logits = rand(28, (16, 32))
+        targets = jax.random.randint(jax.random.PRNGKey(29), (16,), 0, 32)
+        g = jax.grad(lambda x: jnp.sum(xent(x, targets)))(logits)
+        np.testing.assert_allclose(np.asarray(g).sum(axis=-1),
+                                   np.zeros(16), atol=1e-5)

@@ -1,0 +1,112 @@
+"""Hypothesis property sweeps over the Pallas kernels: random shapes,
+dtypes, and value scales, always asserting allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import attention_forward
+from compile.kernels.layernorm import layernorm_forward
+from compile.kernels.ref import attention_ref, layernorm_ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(seed, shape, dtype, scale):
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape) * scale
+    return x.astype(dtype)
+
+
+@settings(**SETTINGS)
+@given(
+    bh=st.integers(1, 12),
+    s=st.sampled_from([4, 8, 16, 32, 64]),
+    d=st.sampled_from([8, 16, 32, 64]),
+    causal=st.booleans(),
+    scale=st.sampled_from([0.1, 1.0, 10.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(bh, s, d, causal, scale, seed):
+    q = rand(seed, (bh, s, d), jnp.float32, scale)
+    k = rand(seed + 1, (bh, s, d), jnp.float32, scale)
+    v = rand(seed + 2, (bh, s, d), jnp.float32, scale)
+    out = attention_forward(q, k, v, causal=causal)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, ref, rtol=5e-4, atol=5e-4)
+    assert out.dtype == q.dtype
+
+
+@settings(**SETTINGS)
+@given(
+    bh=st.integers(1, 6),
+    s=st.sampled_from([8, 16, 32]),
+    d=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_bf16_close_to_f32_ref(bh, s, d, seed):
+    q = rand(seed, (bh, s, d), jnp.bfloat16, 1.0)
+    k = rand(seed + 1, (bh, s, d), jnp.bfloat16, 1.0)
+    v = rand(seed + 2, (bh, s, d), jnp.bfloat16, 1.0)
+    out = attention_forward(q, k, v, causal=True).astype(jnp.float32)
+    ref = attention_ref(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32)
+    )
+    # bf16 storage: ~2-3 decimal digits.
+    np.testing.assert_allclose(out, ref, rtol=5e-2, atol=5e-2)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([1, 2, 4, 6, 8, 32, 96, 128]),
+    d=st.sampled_from([8, 16, 64, 256]),
+    scale=st.sampled_from([0.01, 1.0, 100.0]),
+    shift=st.sampled_from([0.0, 5.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_layernorm_matches_ref(n, d, scale, shift, seed):
+    x = rand(seed, (n, d), jnp.float32, scale) + shift
+    gamma = rand(seed + 1, (d,), jnp.float32, 0.1) + 1.0
+    beta = rand(seed + 2, (d,), jnp.float32, 0.1)
+    out = layernorm_forward(x, gamma, beta)
+    ref = layernorm_ref(x, gamma, beta)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    bh=st.integers(1, 4),
+    s=st.sampled_from([8, 16]),
+    d=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_permutation_equivariance_noncausal(bh, s, d, seed):
+    """Non-causal attention is equivariant to permuting K/V rows."""
+    q = rand(seed, (bh, s, d), jnp.float32, 1.0)
+    k = rand(seed + 1, (bh, s, d), jnp.float32, 1.0)
+    v = rand(seed + 2, (bh, s, d), jnp.float32, 1.0)
+    perm = np.random.RandomState(seed % 1000).permutation(s)
+    out1 = attention_forward(q, k, v, causal=False)
+    out2 = attention_forward(q, k[:, perm], v[:, perm], causal=False)
+    np.testing.assert_allclose(out1, out2, rtol=1e-4, atol=1e-4)
+
+
+from compile.kernels.ref import xent_ref
+from compile.kernels.xent import xent_forward
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([4, 16, 32, 96, 128]),
+    v=st.sampled_from([8, 64, 256, 1000]),
+    scale=st.sampled_from([0.1, 1.0, 10.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_xent_matches_ref(n, v, scale, seed):
+    logits = rand(seed, (n, v), jnp.float32, scale)
+    targets = jax.random.randint(jax.random.PRNGKey(seed + 7), (n,), 0, v)
+    out = xent_forward(logits, targets)
+    ref = xent_ref(logits, targets)
+    np.testing.assert_allclose(out, ref, rtol=5e-4, atol=5e-4)
+    assert out.shape == (n,)

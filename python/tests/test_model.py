@@ -1,0 +1,120 @@
+"""Layer-2 correctness: transformer shapes, loss behaviour, train step."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (CONFIGS, ModelConfig, forward, init_params,
+                           loss_fn, param_spec, train_step)
+
+TINY = CONFIGS["tiny"]
+
+
+def toks(cfg, seed=0):
+    return jax.random.randint(jax.random.PRNGKey(seed),
+                              (cfg.batch, cfg.seq_len), 0, cfg.vocab,
+                              dtype=jnp.int32)
+
+
+class TestParamSpec:
+    def test_offsets_are_contiguous(self):
+        spec = param_spec(TINY)
+        off = 0
+        for shape, o in zip(spec.shapes, spec.offsets):
+            assert o == off
+            size = 1
+            for s in shape:
+                size *= s
+            off += size
+        assert spec.total == off
+
+    def test_param_counts(self):
+        # tiny: embed 256*64 + pos 32*64 + 2 layers + final ln
+        spec = param_spec(TINY)
+        per_layer = (2 * 64 + 64 * 3 * 64 + 64 * 64 + 2 * 64 +
+                     64 * 256 + 256 + 256 * 64 + 64)
+        expected = 256 * 64 + 32 * 64 + 2 * per_layer + 2 * 64
+        assert spec.total == expected
+
+    def test_gpt100m_is_about_100m(self):
+        spec = param_spec(CONFIGS["gpt100m"])
+        assert 85e6 < spec.total < 115e6, spec.total
+
+    def test_all_names_unique(self):
+        spec = param_spec(CONFIGS["small"])
+        assert len(set(spec.names)) == len(spec.names)
+
+
+class TestForward:
+    def test_logits_shape(self):
+        fp = init_params(TINY)
+        logits = forward(TINY, fp, toks(TINY))
+        assert logits.shape == (TINY.batch, TINY.seq_len, TINY.vocab)
+
+    def test_causality(self):
+        """Changing a future token must not change past logits."""
+        fp = init_params(TINY)
+        t1 = toks(TINY)
+        t2 = t1.at[:, -1].set((t1[:, -1] + 1) % TINY.vocab)
+        l1 = forward(TINY, fp, t1)
+        l2 = forward(TINY, fp, t2)
+        np.testing.assert_allclose(l1[:, :-1], l2[:, :-1], rtol=1e-5,
+                                   atol=1e-5)
+
+    def test_initial_loss_near_uniform(self):
+        """Fresh params => loss ~ ln(vocab)."""
+        fp = init_params(TINY)
+        loss = float(loss_fn(TINY, fp, toks(TINY)))
+        assert abs(loss - np.log(TINY.vocab)) < 1.0, loss
+
+
+class TestTrainStep:
+    def test_one_step_shapes_and_finite(self):
+        fp = init_params(TINY)
+        fm = jnp.zeros_like(fp)
+        np2, nm2, loss = train_step(TINY, fp, fm, toks(TINY),
+                                    jnp.float32(0.1))
+        assert np2.shape == fp.shape and nm2.shape == fm.shape
+        assert np.isfinite(float(loss))
+        assert not np.allclose(np2, fp)  # parameters moved
+
+    def test_loss_decreases_on_fixed_batch(self):
+        """Overfit a single batch: loss must drop substantially."""
+        fp = init_params(TINY)
+        fm = jnp.zeros_like(fp)
+        batch = toks(TINY, seed=7)
+        step = jax.jit(lambda a, b: train_step(TINY, a, b, batch,
+                                               jnp.float32(0.5)))
+        first = None
+        for i in range(30):
+            fp, fm, loss = step(fp, fm)
+            if first is None:
+                first = float(loss)
+        assert float(loss) < first * 0.7, (first, float(loss))
+
+    def test_zero_lr_is_identity(self):
+        fp = init_params(TINY)
+        fm = jnp.zeros_like(fp)
+        np2, _, _ = train_step(TINY, fp, fm, toks(TINY), jnp.float32(0.0))
+        np.testing.assert_allclose(np2, fp)
+
+    def test_momentum_accumulates(self):
+        fp = init_params(TINY)
+        fm = jnp.zeros_like(fp)
+        _, nm, _ = train_step(TINY, fp, fm, toks(TINY), jnp.float32(0.1))
+        assert float(jnp.sum(jnp.abs(nm))) > 0.0
+
+
+class TestConfigs:
+    @pytest.mark.parametrize("name", list(CONFIGS))
+    def test_heads_divide_dmodel(self, name):
+        cfg = CONFIGS[name]
+        assert cfg.d_model % cfg.n_heads == 0
+
+    def test_custom_config(self):
+        cfg = ModelConfig("c", vocab=128, d_model=32, n_layers=1, n_heads=2,
+                          d_ff=64, seq_len=16, batch=2)
+        fp = init_params(cfg)
+        logits = forward(cfg, fp, toks(cfg))
+        assert logits.shape == (2, 16, 128)

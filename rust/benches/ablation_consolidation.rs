@@ -1,0 +1,71 @@
+//! §6 ablation: the consolidation-vs-allocation tradeoff.
+//!
+//! The paper's main body pins multi-GPU jobs to "no more than a server's
+//! worth of CPU or memory ... if its GPU demands can be satisfied by one
+//! server" and flags the alternative — giving up consolidation for a
+//! larger CPU/memory allocation — as future work. This ablation runs it:
+//!
+//! - `span_factor = 1` — consolidation-strict (paper default);
+//! - `span_factor = 2` — allocation-greedy: multi-GPU jobs may claim up
+//!   to two servers' worth of CPU/memory, splitting their gang;
+//!
+//! under a swept network penalty (per extra server: throughput divided
+//! by `1 + p·(span−1)`). The expected shape: at p = 0, splitting helps
+//! CPU-hungry image jobs; as p grows the gain inverts and the paper's
+//! consolidation-strict default wins — exactly why §6 leaves the relaxed
+//! policy to a network-aware future scheduler.
+
+mod common;
+
+use synergy::sim::{SimConfig, Simulator};
+use synergy::trace::{generate, Split, TraceConfig};
+use synergy::util::bench::{row, section};
+
+fn main() {
+    // Image-heavy multi-GPU trace: the population that wants more than
+    // one server's CPUs.
+    let jobs = generate(&TraceConfig {
+        n_jobs: 200,
+        split: Split::new(70, 20, 10),
+        multi_gpu: true,
+        jobs_per_hour: Some(5.0),
+        seed: 33,
+    });
+
+    section("§6 ablation: consolidation (span=1) vs allocation (span=2)");
+    println!(
+        "{:<10} {:>16} {:>16} {:>10}",
+        "penalty", "strict avg JCT h", "greedy avg JCT h", "greedy/strict"
+    );
+    for penalty in [0.0, 0.05, 0.10, 0.20, 0.40, 0.80] {
+        let mut avg = Vec::new();
+        for span_factor in [1usize, 2] {
+            let sim = Simulator::new(SimConfig {
+                n_servers: 16,
+                policy: "srtf".into(),
+                mechanism: "tune".into(),
+                span_factor,
+                network_penalty: penalty,
+                ..Default::default()
+            });
+            let r = sim.run(jobs.clone());
+            assert_eq!(r.finished.len(), jobs.len(), "all jobs must finish");
+            let s = r.jct_stats();
+            row(
+                "ablation/consolidation",
+                &format!("span{span_factor}/p{penalty}"),
+                penalty,
+                s.avg_hrs(),
+                "avg h",
+            );
+            avg.push(s.avg_hrs());
+        }
+        println!(
+            "{:<10} {:>16.2} {:>16.2} {:>9.2}x",
+            penalty,
+            avg[0],
+            avg[1],
+            avg[1] / avg[0]
+        );
+    }
+}

@@ -1,0 +1,69 @@
+//! Design-choice ablations for Synergy-TUNE and the scheduler loop
+//! (DESIGN.md §6 calls these decisions out; this bench quantifies them).
+//!
+//! 1. **Placement strategy** — §4.2's best-fit ("least amount of free
+//!    resources just enough to fit") vs plain first-fit.
+//! 2. **Victim selection** — largest-excess victims (fewest downgrades)
+//!    vs first-found.
+//! 3. **Round duration** — the paper schedules every ~5 minutes; sweep
+//!    1–30 min to show the JCT/overhead tradeoff.
+//! 4. **Profiler noise** — optimistic profiling measures a few noisy
+//!    iterations (§3.1); sweep the noise level to show scheduling
+//!    quality is robust to realistic measurement error.
+
+mod common;
+
+use synergy::sim::{SimConfig, Simulator};
+use synergy::trace::{generate, Split, TraceConfig};
+use synergy::util::bench::{row, section};
+
+fn trace(seed: u64) -> Vec<synergy::job::Job> {
+    generate(&TraceConfig {
+        n_jobs: 400,
+        split: Split::new(30, 50, 20),
+        multi_gpu: true,
+        jobs_per_hour: Some(7.0),
+        seed,
+    })
+}
+
+fn run(mechanism: &str, round_s: f64, noise: f64, seed: u64) -> f64 {
+    let sim = Simulator::new(SimConfig {
+        n_servers: 16,
+        policy: "srtf".into(),
+        mechanism: mechanism.into(),
+        round_s,
+        profile_noise: noise,
+        ..Default::default()
+    });
+    let r = sim.run(trace(seed));
+    assert_eq!(r.finished.len(), 400, "all jobs must finish");
+    r.jct_stats().avg_hrs()
+}
+
+fn main() {
+    // --- 1 & 2: packing strategy ablations ---------------------------------
+    section("Ablation: TUNE placement & victim strategies (SRTF, 128 GPUs)");
+    for mech in ["tune", "tune-first-fit", "tune-victim-first", "greedy"] {
+        let mut avgs = Vec::new();
+        for seed in [1u64, 2, 3] {
+            avgs.push(run(mech, 300.0, 0.0, seed));
+        }
+        let mean = avgs.iter().sum::<f64>() / avgs.len() as f64;
+        row("ablation/strategy", mech, mean, 0.0, "avg JCT h (3 seeds)");
+    }
+
+    // --- 3: round duration --------------------------------------------------
+    section("Ablation: round duration (TUNE, SRTF)");
+    for round_min in [1.0, 5.0, 10.0, 30.0] {
+        let avg = run("tune", round_min * 60.0, 0.0, 1);
+        row("ablation/round", &format!("{round_min}min"), round_min, avg, "avg JCT h");
+    }
+
+    // --- 4: profiler noise ----------------------------------------------------
+    section("Ablation: profiling measurement noise (TUNE, SRTF)");
+    for noise in [0.0, 0.03, 0.10, 0.25] {
+        let avg = run("tune", 300.0, noise, 1);
+        row("ablation/noise", &format!("sd{noise}"), noise, avg, "avg JCT h");
+    }
+}

@@ -1,0 +1,92 @@
+//! Shared helpers for the figure benches.
+
+use synergy::cluster::ServerSpec;
+use synergy::job::Job;
+use synergy::metrics::JctStats;
+use synergy::sim::{SimConfig, SimResult, Simulator};
+use synergy::trace::{generate, Split, TraceConfig};
+
+/// Run one simulation with the given knobs and return the result.
+pub fn run_sim(
+    n_servers: usize,
+    policy: &str,
+    mechanism: &str,
+    jobs: Vec<Job>,
+) -> SimResult {
+    run_sim_spec(ServerSpec::default(), n_servers, policy, mechanism, jobs)
+}
+
+pub fn run_sim_spec(
+    spec: ServerSpec,
+    n_servers: usize,
+    policy: &str,
+    mechanism: &str,
+    jobs: Vec<Job>,
+) -> SimResult {
+    run_sim_ref(spec, None, n_servers, policy, mechanism, jobs)
+}
+
+/// Like [`run_sim_spec`] but with an explicit reference server shape for
+/// the work accounting (Fig 12: durations are defined on ratio-3 servers
+/// regardless of the SKU being simulated).
+pub fn run_sim_ref(
+    spec: ServerSpec,
+    reference_spec: Option<ServerSpec>,
+    n_servers: usize,
+    policy: &str,
+    mechanism: &str,
+    jobs: Vec<Job>,
+) -> SimResult {
+    let sim = Simulator::new(SimConfig {
+        spec,
+        n_servers,
+        round_s: 300.0,
+        policy: policy.into(),
+        mechanism: mechanism.into(),
+        profile_noise: 0.0,
+        max_sim_s: 500.0 * 86_400.0,
+        span_factor: 1,
+        network_penalty: 0.0,
+        reference_spec,
+    });
+    sim.run(jobs)
+}
+
+/// A dynamic Philly-derived trace.
+pub fn dynamic_trace(
+    n_jobs: usize,
+    load: f64,
+    split: Split,
+    multi_gpu: bool,
+    seed: u64,
+) -> Vec<Job> {
+    generate(&TraceConfig {
+        n_jobs,
+        split,
+        multi_gpu,
+        jobs_per_hour: Some(load),
+        seed,
+    })
+}
+
+/// A static trace (all jobs at t=0).
+pub fn static_trace(
+    n_jobs: usize,
+    split: Split,
+    multi_gpu: bool,
+    seed: u64,
+) -> Vec<Job> {
+    generate(&TraceConfig { n_jobs, split, multi_gpu, jobs_per_hour: None, seed })
+}
+
+/// Steady-state JCT stats: drop warmup/cooldown jobs (first/last 15%).
+pub fn steady_stats(result: &SimResult) -> JctStats {
+    let mut finished = result.finished.clone();
+    finished.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+    let n = finished.len();
+    let lo = n * 15 / 100;
+    let hi = n - n * 15 / 100;
+    let jcts: Vec<f64> =
+        finished[lo..hi].iter().map(|f| f.jct_s).collect();
+    JctStats::from_jcts(&jcts)
+}

@@ -1,0 +1,61 @@
+//! Figure 12: impact of the server CPU:GPU ratio (FIFO, single-GPU trace,
+//! 128 GPUs, load sweep; ratios 3-6 matching the server SKUs of Table 2b).
+//!
+//! Paper shape: richer servers shrink the TUNE-vs-proportional gap, but
+//! at 9 jobs/hr TUNE still wins 3.4x / 3x / 2.2x / 1.8x for ratios
+//! 3 / 4 / 5 / 6.
+
+mod common;
+
+use common::{dynamic_trace, run_sim_ref, steady_stats};
+use synergy::cluster::ServerSpec;
+use synergy::trace::SPLIT_DEFAULT;
+use synergy::util::bench::{row, section};
+
+fn main() {
+    for ratio in [3u32, 4, 5, 6] {
+        section(&format!("Figure 12: CPU:GPU ratio {ratio}"));
+        let spec = ServerSpec::with_cpu_ratio(ratio);
+        let mut at9 = Vec::new();
+        for mech in ["proportional", "tune"] {
+            for load in [5.0, 7.0, 9.0, 11.0] {
+                let jobs =
+                    dynamic_trace(2000, load, SPLIT_DEFAULT, false, 1200);
+                // Durations stay defined against the ratio-3 reference
+                // SKU (paper §5.1) so richer servers genuinely speed up
+                // the proportional baseline.
+                let r = run_sim_ref(
+                    spec,
+                    Some(ServerSpec::with_cpu_ratio(3)),
+                    16,
+                    "fifo",
+                    mech,
+                    jobs,
+                );
+                let s = steady_stats(&r);
+                row(
+                    "fig12",
+                    &format!("ratio{ratio}/{mech}"),
+                    load,
+                    s.avg_hrs(),
+                    "",
+                );
+                if load == 11.0 {
+                    at9.push(s.avg_hrs());
+                }
+            }
+        }
+        if at9.len() == 2 {
+            println!(
+                "ratio {ratio} @ 11 jobs/hr: tune {:.2}x better (paper: {}x)",
+                at9[0] / at9[1],
+                match ratio {
+                    3 => "3.4",
+                    4 => "3.0",
+                    5 => "2.2",
+                    _ => "1.8",
+                }
+            );
+        }
+    }
+}

@@ -1,0 +1,33 @@
+//! Figure 1: average JCT vs cluster load for Synergy vs GPU-proportional,
+//! LAS and FIFO policies, 128 GPUs, Philly-derived single-GPU trace.
+//!
+//! Paper shape: Synergy-TUNE's curve stays flat to substantially higher
+//! load; at high load the gap reaches ~3x.
+
+mod common;
+
+use common::{dynamic_trace, run_sim, steady_stats};
+use synergy::trace::SPLIT_DEFAULT;
+use synergy::util::bench::{row, section};
+
+fn main() {
+    let n_jobs = 2500;
+    section("Figure 1: avg JCT vs load (128 GPUs, split 20/70/10, single-GPU)");
+    for policy in ["las", "fifo"] {
+        for mechanism in ["proportional", "tune"] {
+            for load in [4.0, 6.0, 8.0, 9.0, 10.0, 11.0, 12.0] {
+                let jobs =
+                    dynamic_trace(n_jobs, load, SPLIT_DEFAULT, false, 101);
+                let result = run_sim(16, policy, mechanism, jobs);
+                let stats = steady_stats(&result);
+                row(
+                    "fig1",
+                    &format!("{policy}/{mechanism}"),
+                    load,
+                    stats.avg_hrs(),
+                    &format!("p99_h={:.2} n={}", stats.p99_hrs(), stats.n),
+                );
+            }
+        }
+    }
+}

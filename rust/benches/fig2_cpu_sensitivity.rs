@@ -1,0 +1,51 @@
+//! Figure 2a: per-epoch time vs CPU:GPU ratio for all ten models
+//! (single-GPU training, dataset fully cached).
+//!
+//! Paper shape: image/speech models keep improving out to 9-24 cores;
+//! language models are flat beyond 1 core.
+
+use synergy::cluster::ServerSpec;
+use synergy::job::{Task, ALL_MODELS};
+use synergy::perf::PerfModel;
+use synergy::util::bench::{row, section};
+
+fn epoch_samples(task: Task) -> f64 {
+    match task {
+        Task::Image => 1_281_167.0,  // ImageNet
+        Task::Language => 400_000.0, // WMT-class
+        Task::Speech => 500_000.0,
+    }
+}
+
+fn main() {
+    let world = PerfModel::new(ServerSpec::default());
+    section("Figure 2a: epoch time (h) vs CPUs per GPU (full cache)");
+    for model in ALL_MODELS {
+        for cpus in [1u32, 2, 3, 4, 6, 8, 9, 12, 16, 20, 24] {
+            let t = world.epoch_time_s(
+                model,
+                1,
+                cpus as f64,
+                1000.0, // fully cached
+                epoch_samples(model.task()),
+            ) / 3600.0;
+            row("fig2a", model.name(), cpus as f64, t, "");
+        }
+    }
+
+    section("Figure 2a headline speedups");
+    let tput = |m, c: f64| world.throughput(m, 1, c, 1000.0);
+    use synergy::job::ModelKind::*;
+    println!(
+        "alexnet 3->12 cpus: {:.2}x (paper: 3.1x)",
+        tput(AlexNet, 12.0) / tput(AlexNet, 3.0)
+    );
+    println!(
+        "resnet18 3->9 cpus: {:.2}x (paper: 2.3x)",
+        tput(ResNet18, 9.0) / tput(ResNet18, 3.0)
+    );
+    println!(
+        "gnmt 1->12 cpus: {:.2}x (paper: ~1x)",
+        tput(Gnmt, 12.0) / tput(Gnmt, 1.0)
+    );
+}

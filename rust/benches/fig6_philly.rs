@@ -1,0 +1,81 @@
+//! Figure 6 / Table 6: Philly-derived trace on 512 GPUs (64 servers),
+//! split (20,70,10), multi-GPU demands.
+//!
+//! (a) avg JCT for SRTF / LAS / FIFO, Synergy vs GPU-proportional;
+//! (b) short/long split with avg + p99 (SRTF);
+//! (c) per-job speedup distribution (paper: up to ~9x, none slower).
+
+mod common;
+
+use common::{dynamic_trace, run_sim, steady_stats};
+use synergy::metrics::{per_job_speedups, split_short_long, JctStats};
+use synergy::trace::SPLIT_DEFAULT;
+use synergy::util::bench::{row, section};
+use std::collections::BTreeMap;
+
+fn main() {
+    let n_jobs = 4000; // subrange of the 8000-job trace; 1000 monitored
+    let load = 36.0; // keeps 512 GPUs saturated
+
+    section("Figure 6a / Table 6a: avg JCT on 512 GPUs (hrs)");
+    let mut srtf_results = Vec::new();
+    for policy in ["srtf", "las", "fifo"] {
+        for mech in ["proportional", "tune"] {
+            let jobs =
+                dynamic_trace(n_jobs, load, SPLIT_DEFAULT, true, 606);
+            let r = run_sim(64, policy, mech, jobs);
+            let s = steady_stats(&r);
+            row(
+                "fig6a",
+                &format!("{policy}/{mech}"),
+                0.0,
+                s.avg_hrs(),
+                &format!("p99_h={:.2}", s.p99_hrs()),
+            );
+            if policy == "srtf" {
+                srtf_results.push(r);
+            }
+        }
+    }
+
+    // (b) short/long split for SRTF.
+    section("Table 6b: SRTF short(<4h)/long split");
+    for (mech, r) in ["proportional", "tune"].iter().zip(&srtf_results) {
+        let pairs: Vec<(f64, f64)> = r
+            .finished
+            .iter()
+            .map(|f| (f.jct_s, f.duration_prop_s))
+            .collect();
+        let (short, long) = split_short_long(&pairs);
+        let ss = JctStats::from_jcts(&short);
+        let ls = JctStats::from_jcts(&long);
+        row("fig6b", &format!("{mech}/short_avg_h"), 0.0, ss.avg_hrs(), "");
+        row("fig6b", &format!("{mech}/short_p99_h"), 0.0, ss.p99_hrs(), "");
+        row("fig6b", &format!("{mech}/long_avg_h"), 0.0, ls.avg_hrs(), "");
+        row("fig6b", &format!("{mech}/long_p99_h"), 0.0, ls.p99_hrs(), "");
+    }
+
+    // (c) per-job speedup CDF (same jobs under both mechanisms).
+    section("Figure 6c: per-job JCT speedup (tune vs proportional)");
+    let by_id = |r: &synergy::sim::SimResult| -> BTreeMap<u64, f64> {
+        r.finished.iter().map(|f| (f.id.0, f.jct_s)).collect()
+    };
+    let prop = by_id(&srtf_results[0]);
+    let tune = by_id(&srtf_results[1]);
+    let common_ids: Vec<u64> =
+        prop.keys().filter(|k| tune.contains_key(k)).cloned().collect();
+    let a: Vec<f64> = common_ids.iter().map(|k| tune[k]).collect();
+    let b: Vec<f64> = common_ids.iter().map(|k| prop[k]).collect();
+    let mut speedups = per_job_speedups(&a, &b);
+    speedups.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    let n = speedups.len();
+    for pct in [1usize, 10, 25, 50, 75, 90, 99] {
+        let idx = (pct * n / 100).min(n - 1);
+        row("fig6c", "speedup_pctile", pct as f64, speedups[idx], "");
+    }
+    println!(
+        "max per-job speedup: {:.1}x (paper: up to 9x); jobs slower than prop: {}",
+        speedups.last().unwrap(),
+        speedups.iter().filter(|&&s| s < 0.95).count()
+    );
+}

@@ -1,0 +1,122 @@
+//! Appendix A.2 extension bench: heterogeneous GPU clusters.
+//!
+//! The paper's appendix formulates Synergy for clusters with several GPU
+//! generations but does not evaluate it; this bench supplies the
+//! evaluation for our implementation:
+//!
+//! 1. **Static drain** — a mixed workload on a P100+V100 cluster:
+//!    het-TUNE (type-affine assignment + per-group Synergy-TUNE) vs the
+//!    type-blind proportional baseline, and the A.2.3 ILP upper bound on
+//!    one round's aggregate throughput.
+//! 2. **Dynamic load sweep** — avg JCT vs arrival rate for both
+//!    mechanisms.
+//! 3. **Profiling-cost accounting** — the extra dimension's cost
+//!    (A.2: "at an additional profiling cost").
+
+mod common;
+
+use common::dynamic_trace;
+use synergy::hetero::{
+    HetJobRequest, HetOpt, HetTune, HeteroCluster, HeteroProfiler,
+    HeteroSimConfig, HeteroSimulator, HetMechanism,
+};
+use synergy::job::Job;
+use synergy::trace::{generate, Split, TraceConfig};
+use synergy::util::bench::{row, section};
+
+fn run_het(mechanism: &str, jobs: Vec<Job>) -> synergy::hetero::sim::HeteroSimResult {
+    HeteroSimulator::new(HeteroSimConfig {
+        mechanism: mechanism.into(),
+        policy: "srtf".into(),
+        ..Default::default()
+    })
+    .run(jobs)
+}
+
+fn main() {
+    // --- 1. static drain ---------------------------------------------------
+    section("Hetero A.2: static drain, 128 GPUs (64 P100 + 64 V100)");
+    let jobs = generate(&TraceConfig {
+        n_jobs: 160,
+        split: Split::new(30, 50, 20),
+        multi_gpu: true,
+        jobs_per_hour: None,
+        seed: 11,
+    });
+    for mech in ["het-proportional", "het-tune"] {
+        let r = run_het(mech, jobs.clone());
+        let s = r.jct_stats();
+        row("hetero/static", mech, s.avg_hrs(), s.p99_hrs(), "avg/p99 h");
+    }
+
+    // --- 2. dynamic load sweep ----------------------------------------------
+    section("Hetero A.2: dynamic load sweep (SRTF, multi-GPU)");
+    for load in [4.0, 6.0, 8.0] {
+        let jobs = dynamic_trace(800, load, Split::new(30, 50, 20), true, 77);
+        let mut avg = Vec::new();
+        for mech in ["het-proportional", "het-tune"] {
+            let r = run_het(mech, jobs.clone());
+            let s = r.jct_stats();
+            row("hetero/load", mech, load, s.avg_hrs(), "avg h");
+            avg.push(s.avg_hrs());
+        }
+        println!(
+            "  load {load}: het-tune {:.2}x better than type-blind",
+            avg[0] / avg[1]
+        );
+    }
+
+    // --- 3. one-round ILP upper bound ----------------------------------------
+    section("Hetero A.2.3: ILP upper bound vs het-TUNE (one round)");
+    let mut cluster = HeteroCluster::two_tier(4);
+    let profiler = HeteroProfiler::noiseless(&cluster);
+    let round_jobs = generate(&TraceConfig {
+        n_jobs: 14,
+        split: Split::new(40, 40, 20),
+        multi_gpu: true,
+        jobs_per_hour: None,
+        seed: 5,
+    });
+    let sens: Vec<_> = round_jobs.iter().map(|j| profiler.profile(j)).collect();
+    let reqs: Vec<HetJobRequest<'_>> = round_jobs
+        .iter()
+        .zip(&sens)
+        .map(|(j, s)| HetJobRequest { id: j.id, gpus: j.gpus, sens: s })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let opt = HetOpt.solve_allocation(&cluster, &reqs).expect("ilp");
+    let opt_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t0 = std::time::Instant::now();
+    let grants = HetTune.allocate(&mut cluster, &reqs);
+    let tune_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let tune_tput: f64 = round_jobs
+        .iter()
+        .zip(&sens)
+        .filter_map(|(j, s)| {
+            grants.get(&j.id).map(|g| {
+                s.matrix(g.gen)
+                    .unwrap()
+                    .throughput_at(g.grant.demand.cpus, g.grant.demand.mem_gb)
+            })
+        })
+        .sum();
+    row("hetero/opt", "ilp-objective", opt.objective, opt_ms, "tput / ms");
+    row("hetero/opt", "het-tune", tune_tput, tune_ms, "tput / ms");
+    println!(
+        "  het-tune achieves {:.1}% of the ILP bound ({} ILP vars)",
+        100.0 * tune_tput / opt.objective,
+        opt.n_vars
+    );
+
+    // --- 4. profiling cost ----------------------------------------------------
+    section("Hetero A.2: profiling cost (2 types vs 1)");
+    let het = run_het("het-tune", jobs.clone());
+    let hom = common::run_sim(16, "srtf", "tune", jobs);
+    row(
+        "hetero/profiling",
+        "minutes",
+        het.profiling_minutes,
+        hom.profiling_minutes,
+        "het vs homogeneous",
+    );
+}

@@ -1,0 +1,88 @@
+//! L3 performance microbenches (§Perf deliverable): the scheduler hot
+//! paths that bound deploy-mode round latency and simulator throughput.
+//!
+//! Targets (DESIGN.md §8): TUNE round < 1 s at 512 GPUs; profiler < 5 ms
+//! per job; simulator >= 2k scheduled rounds/s on a 128-GPU trace.
+
+use synergy::cluster::{Cluster, ServerSpec};
+use synergy::job::{DemandVector, Job, JobId};
+use synergy::mechanism::{JobRequest, Mechanism, Proportional, Tune};
+use synergy::profiler::{OptimisticProfiler, SensitivityMatrix};
+use synergy::sim::{SimConfig, Simulator};
+use synergy::trace::{generate, TraceConfig, SPLIT_DEFAULT};
+use synergy::util::bench::{section, Bench};
+
+fn main() {
+    let spec = ServerSpec::default();
+    let profiler = OptimisticProfiler::noiseless(spec);
+
+    section("L3 hot path: profiler");
+    let job = Job::new(JobId(0), synergy::job::ModelKind::ResNet18, 1, 0.0, 3600.0);
+    Bench::default().iter("profile/resnet18_1gpu", || profiler.profile(&job));
+    let job16 =
+        Job::new(JobId(1), synergy::job::ModelKind::M5, 16, 0.0, 3600.0);
+    Bench::default().iter("profile/m5_16gpu", || profiler.profile(&job16));
+
+    section("L3 hot path: round allocation at 512 GPUs");
+    let jobs: Vec<Job> = generate(&TraceConfig {
+        n_jobs: 512,
+        split: SPLIT_DEFAULT,
+        multi_gpu: false,
+        jobs_per_hour: None,
+        seed: 42,
+    });
+    let matrices: Vec<SensitivityMatrix> =
+        jobs.iter().map(|j| profiler.profile(j).matrix).collect();
+    let requests: Vec<JobRequest> = jobs
+        .iter()
+        .zip(matrices.iter())
+        .map(|(j, m)| JobRequest {
+            id: j.id,
+            gpus: j.gpus,
+            best: m.best_demand(),
+            prop: DemandVector::proportional(j.gpus, 3.0, 62.5),
+            matrix: m,
+        })
+        .collect();
+    Bench::default().iter("tune/512_jobs_64_servers", || {
+        let mut cluster = Cluster::homogeneous(spec, 64);
+        Tune::default().allocate(&mut cluster, &requests)
+    });
+    Bench::default().iter("proportional/512_jobs_64_servers", || {
+        let mut cluster = Cluster::homogeneous(spec, 64);
+        Proportional.allocate(&mut cluster, &requests)
+    });
+
+    section("L3 hot path: end-to-end simulation (128 GPUs, 300 jobs)");
+    let trace = generate(&TraceConfig {
+        n_jobs: 300,
+        split: SPLIT_DEFAULT,
+        multi_gpu: true,
+        jobs_per_hour: Some(6.0),
+        seed: 9,
+    });
+    let b = Bench::heavy();
+    let t = b.iter("simulate/300_jobs_128gpus_tune", || {
+        Simulator::new(SimConfig {
+            n_servers: 16,
+            policy: "srtf".into(),
+            mechanism: "tune".into(),
+            ..Default::default()
+        })
+        .run(trace.clone())
+    });
+    // Report rounds/s for the §Perf log.
+    let r = Simulator::new(SimConfig {
+        n_servers: 16,
+        policy: "srtf".into(),
+        mechanism: "tune".into(),
+        ..Default::default()
+    })
+    .run(trace.clone());
+    println!(
+        "simulator: {} rounds in {:?} median -> {:.0} rounds/s",
+        r.rounds,
+        t.median,
+        r.rounds as f64 / t.median.as_secs_f64()
+    );
+}

@@ -1,0 +1,107 @@
+//! §5.6: Synergy-OPT solve time vs cluster size, against Synergy-TUNE's
+//! per-round planning time, plus the TUNE-within-10%-of-OPT check.
+//!
+//! Paper: OPT's per-round time grows super-linearly with cluster size
+//! ("increases exponentially"); TUNE stays ~1 second; TUNE's aggregate
+//! throughput is within 10% of OPT and ~200x faster to compute at
+//! 128 GPUs.
+
+use synergy::cluster::{Cluster, ServerSpec};
+use synergy::job::{DemandVector, Job};
+use synergy::mechanism::{JobRequest, Mechanism, Opt, Tune};
+use synergy::profiler::{OptimisticProfiler, SensitivityMatrix};
+use synergy::trace::{generate, TraceConfig, SPLIT_DEFAULT};
+use synergy::util::bench::{row, section, Bench};
+
+fn build_requests<'a>(
+    jobs: &'a [Job],
+    matrices: &'a [SensitivityMatrix],
+) -> Vec<JobRequest<'a>> {
+    jobs.iter()
+        .zip(matrices.iter())
+        .map(|(j, m)| JobRequest {
+            id: j.id,
+            gpus: j.gpus,
+            best: m.best_demand(),
+            prop: DemandVector::proportional(j.gpus, 3.0, 62.5),
+            matrix: m,
+        })
+        .collect()
+}
+
+fn main() {
+    let spec = ServerSpec::default();
+    let profiler = OptimisticProfiler::noiseless(spec);
+
+    // Sweep capped at 256 GPUs: the exact ILP's super-linear growth is
+    // unambiguous by then (16→256 GPUs: 14 ms → ~2.6 min per round) and
+    // the paper's own §5.6 measurements use a 128-GPU cluster.
+    section("§5.6: per-round solve time vs cluster size");
+    for n_servers in [2usize, 4, 8, 16, 32] {
+        let n_gpus = n_servers * 8;
+        // A full round: one 1-GPU job per GPU.
+        let jobs: Vec<Job> = generate(&TraceConfig {
+            n_jobs: n_gpus,
+            split: SPLIT_DEFAULT,
+            multi_gpu: false,
+            jobs_per_hour: None,
+            seed: 77,
+        });
+        let matrices: Vec<SensitivityMatrix> = jobs
+            .iter()
+            .map(|j| profiler.profile(j).matrix)
+            .collect();
+        let requests = build_requests(&jobs, &matrices);
+
+        let bench = Bench {
+            warmup_iters: 1,
+            min_iters: if n_servers > 16 { 1 } else { 3 },
+            max_iters: if n_servers > 16 { 1 } else { 10 },
+            budget: std::time::Duration::from_secs(2),
+        };
+        let opt = Opt::default();
+        let tune_t = bench.iter(&format!("tune/{n_gpus}gpus"), || {
+            let mut cluster = Cluster::homogeneous(spec, n_servers);
+            Tune::default().allocate(&mut cluster, &requests)
+        });
+        let opt_t = bench.iter(
+            &format!(
+                "opt{}/{n_gpus}gpus",
+                if opt.relax_only { "-relaxed" } else { "" }
+            ),
+            || {
+                let cluster = Cluster::homogeneous(spec, n_servers);
+                opt.solve_allocation(&cluster, &requests)
+            },
+        );
+        row(
+            "opt_scaling",
+            "speedup_tune_over_opt",
+            n_gpus as f64,
+            opt_t.median.as_secs_f64() / tune_t.median.as_secs_f64(),
+            &format!(
+                "tune={:?} opt={:?}",
+                tune_t.median, opt_t.median
+            ),
+        );
+
+        // Quality: TUNE aggregate throughput vs OPT objective.
+        let mut cluster = Cluster::homogeneous(spec, n_servers);
+        let grants = Tune::default().allocate(&mut cluster, &requests);
+        let tune_tput: f64 = requests
+            .iter()
+            .filter_map(|r| grants.get(&r.id).map(|g| (r, g)))
+            .map(|(r, g)| r.matrix.throughput_at(g.demand.cpus, g.demand.mem_gb))
+            .sum();
+        let cluster2 = Cluster::homogeneous(spec, n_servers);
+        if let Some(alloc) = opt.solve_allocation(&cluster2, &requests) {
+            row(
+                "opt_quality",
+                "tune_over_opt_tput",
+                n_gpus as f64,
+                tune_tput / alloc.objective,
+                &format!("(paper: >= 0.9)"),
+            );
+        }
+    }
+}

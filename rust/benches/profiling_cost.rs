@@ -1,0 +1,66 @@
+//! §3.1 profiling-cost bench: exhaustive vs optimistic vs adaptive.
+//!
+//! Paper numbers (24-CPU, 500 GB server; 1 min per empirical point):
+//!
+//! - exhaustive grid: 24 CPUs × 10 memory levels ≈ **240 min**;
+//! - optimistic (memory axis analytic): 24 points ≈ **24 min**;
+//! - + adaptive CPU sampling: ~8 points ≈ **8 min** (Fig 5b).
+//!
+//! This bench reports the measured point counts/costs per model and the
+//! estimate accuracy the cheap profile retains (Fig 5 fidelity).
+
+use synergy::cluster::ServerSpec;
+use synergy::job::{Job, JobId, ALL_MODELS};
+use synergy::perf::PerfModel;
+use synergy::profiler::{OptimisticProfiler, MINUTES_PER_POINT};
+use synergy::util::bench::{row, section};
+
+fn main() {
+    let spec = ServerSpec::default();
+    let exhaustive_min =
+        spec.cpus as f64 * (spec.mem_gb / 50.0) * MINUTES_PER_POINT;
+    let optimistic_min = spec.cpus as f64 * MINUTES_PER_POINT;
+
+    section("§3.1 profiling cost per 1-GPU job (minutes)");
+    println!(
+        "exhaustive grid: {exhaustive_min:.0} min   \
+         optimistic (CPU-only): {optimistic_min:.0} min   (paper: 240 / 24)"
+    );
+
+    let profiler = OptimisticProfiler::noiseless(spec);
+    let world = PerfModel::new(spec);
+    let mut total_points = 0usize;
+    for model in ALL_MODELS {
+        let job = Job::new(JobId(1), model, 1, 0.0, 3600.0);
+        let out = profiler.profile(&job);
+        total_points += out.empirical_points;
+
+        // Fig-5 fidelity: worst relative error of the estimate vs truth
+        // across the whole grid.
+        let mut worst: f64 = 0.0;
+        for (ci, &c) in out.matrix.cpu_points.iter().enumerate() {
+            for (mi, &m) in out.matrix.mem_points.iter().enumerate() {
+                let truth = world.throughput(model, 1, c, m);
+                if truth > 0.0 {
+                    worst = worst
+                        .max((out.matrix.tput[ci][mi] - truth).abs() / truth);
+                }
+            }
+        }
+        row(
+            "profiling",
+            model.name(),
+            out.cost_minutes,
+            worst * 100.0,
+            "min / worst-err %",
+        );
+    }
+    let adaptive_min = total_points as f64 / ALL_MODELS.len() as f64;
+    println!(
+        "adaptive mean: {adaptive_min:.1} min/job — \
+         {:.0}x cheaper than exhaustive (paper: 30x), \
+         {:.1}x cheaper than optimistic (paper: ~3x)",
+        exhaustive_min / adaptive_min,
+        optimistic_min / adaptive_min,
+    );
+}

@@ -1,0 +1,57 @@
+//! Table 5: the physical-cluster experiments, replayed on the simulator
+//! (the deploy-mode half runs via `examples/deploy_cluster`).
+//!
+//! (1) static trace, 100 jobs, split (60,30,10), FIFO -> makespan;
+//! (2) dynamic trace at full load, split (30,60,10), SRTF -> avg + p99 JCT.
+//! 32 GPUs across 4 servers. Paper: TUNE improves makespan 1.4x, avg JCT
+//! 1.5x, p99 JCT 2x; OPT adds a few % more.
+
+mod common;
+
+use common::{dynamic_trace, run_sim, static_trace, steady_stats};
+use synergy::trace::{SPLIT_DYNAMIC, SPLIT_STATIC};
+use synergy::util::bench::{row, section};
+
+fn main() {
+    // (1) Static FIFO makespan.
+    section("Table 5 (static, FIFO, split 60/30/10): makespan");
+    let mut makespans = Vec::new();
+    for mech in ["proportional", "tune", "opt"] {
+        let jobs = static_trace(100, SPLIT_STATIC, true, 55);
+        let r = run_sim(4, "fifo", mech, jobs);
+        let h = r.makespan_s / 3600.0;
+        makespans.push(h);
+        row("table5", &format!("fifo/{mech}/makespan_h"), 0.0, h, "");
+    }
+    println!(
+        "makespan improvement tune vs proportional: {:.2}x (paper: 1.4x)",
+        makespans[0] / makespans[1]
+    );
+
+    // (2) Dynamic SRTF at full load.
+    section("Table 5 (dynamic, SRTF, split 30/60/10): avg & p99 JCT");
+    let mut avg = Vec::new();
+    let mut p99 = Vec::new();
+    for mech in ["proportional", "tune", "opt"] {
+        // load chosen to keep the 32-GPU cluster saturated
+        let jobs = dynamic_trace(300, 3.0, SPLIT_DYNAMIC, true, 56);
+        let r = run_sim(4, "srtf", mech, jobs);
+        let s = steady_stats(&r);
+        avg.push(s.avg_hrs());
+        p99.push(s.p99_hrs());
+        row("table5", &format!("srtf/{mech}/avg_jct_h"), 0.0, s.avg_hrs(), "");
+        row("table5", &format!("srtf/{mech}/p99_jct_h"), 0.0, s.p99_hrs(), "");
+    }
+    println!(
+        "avg JCT improvement tune vs proportional: {:.2}x (paper: 1.5x)",
+        avg[0] / avg[1]
+    );
+    println!(
+        "p99 JCT improvement tune vs proportional: {:.2}x (paper: 2x)",
+        p99[0] / p99[1]
+    );
+    println!(
+        "tune within {:.1}% of opt on avg JCT (paper: ~4%)",
+        (avg[1] / avg[2] - 1.0).abs() * 100.0
+    );
+}

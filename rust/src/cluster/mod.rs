@@ -1,0 +1,379 @@
+//! Cluster and server abstractions: multi-dimensional resource bookkeeping.
+//!
+//! A [`Cluster`] is a homogeneous set of [`Server`]s (paper §2.3), each
+//! with integral GPUs, integral CPU cores, and memory in GB. Allocation and
+//! release maintain the invariant `0 <= free <= capacity` in every
+//! dimension; violations are bugs and panic in debug builds.
+
+mod server;
+
+pub use server::{Server, ServerSpec};
+
+use crate::job::JobId;
+use std::collections::BTreeMap;
+
+/// A single job's resource grant on one server.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Share {
+    pub gpus: u32,
+    pub cpus: f64,
+    pub mem_gb: f64,
+}
+
+impl Share {
+    pub fn zero() -> Share {
+        Share { gpus: 0, cpus: 0.0, mem_gb: 0.0 }
+    }
+
+    pub fn add(&self, other: &Share) -> Share {
+        Share {
+            gpus: self.gpus + other.gpus,
+            cpus: self.cpus + other.cpus,
+            mem_gb: self.mem_gb + other.mem_gb,
+        }
+    }
+}
+
+/// A job's placement: per-server shares. Multi-GPU jobs may span servers,
+/// in which case CPU/mem are proportional to GPUs on each (paper §4.2).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Placement {
+    pub shares: BTreeMap<usize, Share>,
+}
+
+impl Placement {
+    pub fn single(server: usize, share: Share) -> Placement {
+        let mut shares = BTreeMap::new();
+        shares.insert(server, share);
+        Placement { shares }
+    }
+
+    /// Total resources across servers.
+    pub fn total(&self) -> Share {
+        self.shares
+            .values()
+            .fold(Share::zero(), |acc, s| acc.add(s))
+    }
+
+    /// Number of servers this job is spread over.
+    pub fn span(&self) -> usize {
+        self.shares.len()
+    }
+
+    pub fn is_fragmented(&self) -> bool {
+        self.span() > 1
+    }
+}
+
+/// Homogeneous cluster state: servers plus the placement of running jobs.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub spec: ServerSpec,
+    pub servers: Vec<Server>,
+    placements: BTreeMap<JobId, Placement>,
+}
+
+impl Cluster {
+    /// Build a homogeneous cluster of `n` servers.
+    pub fn homogeneous(spec: ServerSpec, n: usize) -> Cluster {
+        Cluster {
+            spec,
+            servers: (0..n).map(|id| Server::new(id, spec)).collect(),
+            placements: BTreeMap::new(),
+        }
+    }
+
+    /// Build a cluster over an explicit set of server ids (the deploy
+    /// leader plans each round over only the workers currently alive, so
+    /// placements keep addressing workers by their stable id across
+    /// failures).
+    pub fn with_server_ids(spec: ServerSpec, ids: &[usize]) -> Cluster {
+        Cluster {
+            spec,
+            servers: ids.iter().map(|&id| Server::new(id, spec)).collect(),
+            placements: BTreeMap::new(),
+        }
+    }
+
+    pub fn num_servers(&self) -> usize {
+        self.servers.len()
+    }
+
+    pub fn total_gpus(&self) -> u32 {
+        self.spec.gpus * self.servers.len() as u32
+    }
+
+    pub fn total_cpus(&self) -> f64 {
+        self.spec.cpus as f64 * self.servers.len() as f64
+    }
+
+    pub fn total_mem_gb(&self) -> f64 {
+        self.spec.mem_gb * self.servers.len() as f64
+    }
+
+    pub fn free_gpus(&self) -> u32 {
+        self.servers.iter().map(|s| s.free_gpus).sum()
+    }
+
+    pub fn free_cpus(&self) -> f64 {
+        self.servers.iter().map(|s| s.free_cpus).sum()
+    }
+
+    pub fn free_mem_gb(&self) -> f64 {
+        self.servers.iter().map(|s| s.free_mem_gb).sum()
+    }
+
+    /// GPU-proportional CPU share for `gpus` GPUs (paper §2: C_g).
+    pub fn proportional_cpus(&self, gpus: u32) -> f64 {
+        self.spec.cpus as f64 / self.spec.gpus as f64 * gpus as f64
+    }
+
+    /// GPU-proportional memory share for `gpus` GPUs (paper §2: M_g).
+    pub fn proportional_mem_gb(&self, gpus: u32) -> f64 {
+        self.spec.mem_gb / self.spec.gpus as f64 * gpus as f64
+    }
+
+    /// The server with id `id` (ids are positional for
+    /// [`Cluster::homogeneous`] but sparse for
+    /// [`Cluster::with_server_ids`]).
+    pub fn server(&self, id: usize) -> &Server {
+        &self.servers[self.server_index(id)]
+    }
+
+    /// Index into `servers` for a server id (ids are positional for
+    /// [`Cluster::homogeneous`] but sparse for
+    /// [`Cluster::with_server_ids`]).
+    fn server_index(&self, id: usize) -> usize {
+        if id < self.servers.len() && self.servers[id].id == id {
+            return id; // fast path: dense ids
+        }
+        self.servers
+            .iter()
+            .position(|s| s.id == id)
+            .unwrap_or_else(|| panic!("unknown server id {id}"))
+    }
+
+    /// Commit a placement for `job`. Panics if any server lacks capacity or
+    /// the job already has a placement (allocation bugs must be loud).
+    pub fn place(&mut self, job: JobId, placement: Placement) {
+        assert!(
+            !self.placements.contains_key(&job),
+            "job {job:?} placed twice"
+        );
+        for (&sid, share) in &placement.shares {
+            let idx = self.server_index(sid);
+            self.servers[idx].allocate(share);
+        }
+        self.placements.insert(job, placement);
+    }
+
+    /// Release a job's resources. No-op if the job has no placement.
+    pub fn evict(&mut self, job: JobId) -> Option<Placement> {
+        let placement = self.placements.remove(&job)?;
+        for (&sid, share) in &placement.shares {
+            let idx = self.server_index(sid);
+            self.servers[idx].release(share);
+        }
+        Some(placement)
+    }
+
+    pub fn placement(&self, job: JobId) -> Option<&Placement> {
+        self.placements.get(&job)
+    }
+
+    pub fn placements(&self) -> &BTreeMap<JobId, Placement> {
+        &self.placements
+    }
+
+    /// Evict every job (used at the start of each scheduling round: the
+    /// paper recomputes placements every round, §3.2).
+    pub fn evict_all(&mut self) {
+        let jobs: Vec<JobId> = self.placements.keys().copied().collect();
+        for j in jobs {
+            self.evict(j);
+        }
+    }
+
+    /// GPU utilization in [0, 1].
+    pub fn gpu_utilization(&self) -> f64 {
+        1.0 - self.free_gpus() as f64 / self.total_gpus() as f64
+    }
+
+    /// CPU allocation fraction in [0, 1].
+    pub fn cpu_utilization(&self) -> f64 {
+        1.0 - self.free_cpus() / self.total_cpus()
+    }
+
+    /// Check every server's bookkeeping against the placement map;
+    /// returns an error description on the first inconsistency.
+    pub fn check_consistency(&self) -> Result<(), String> {
+        let mut used: BTreeMap<usize, Share> = BTreeMap::new();
+        for p in self.placements.values() {
+            for (&sid, share) in &p.shares {
+                let e = used.entry(sid).or_insert_with(Share::zero);
+                *e = e.add(share);
+            }
+        }
+        for server in &self.servers {
+            let u = used.get(&server.id).copied().unwrap_or_else(Share::zero);
+            let exp_gpus = self.spec.gpus - u.gpus;
+            if server.free_gpus != exp_gpus {
+                return Err(format!(
+                    "server {}: free_gpus={} expected {}",
+                    server.id, server.free_gpus, exp_gpus
+                ));
+            }
+            if (server.free_cpus - (self.spec.cpus as f64 - u.cpus)).abs()
+                > 1e-6
+            {
+                return Err(format!(
+                    "server {}: free_cpus={} expected {}",
+                    server.id,
+                    server.free_cpus,
+                    self.spec.cpus as f64 - u.cpus
+                ));
+            }
+            if (server.free_mem_gb - (self.spec.mem_gb - u.mem_gb)).abs()
+                > 1e-6
+            {
+                return Err(format!(
+                    "server {}: free_mem={} expected {}",
+                    server.id,
+                    server.free_mem_gb,
+                    self.spec.mem_gb - u.mem_gb
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::JobId;
+
+    fn spec() -> ServerSpec {
+        ServerSpec { gpus: 8, cpus: 24, mem_gb: 500.0 }
+    }
+
+    #[test]
+    fn homogeneous_capacity() {
+        let c = Cluster::homogeneous(spec(), 4);
+        assert_eq!(c.total_gpus(), 32);
+        assert_eq!(c.total_cpus(), 96.0);
+        assert_eq!(c.total_mem_gb(), 2000.0);
+        assert_eq!(c.free_gpus(), 32);
+    }
+
+    #[test]
+    fn proportional_shares_match_paper_example() {
+        // Paper §2: server with 4 GPUs, 16 CPUs, 200GB; a 1-GPU job gets
+        // 4 CPUs and 50 GB.
+        let c = Cluster::homogeneous(
+            ServerSpec { gpus: 4, cpus: 16, mem_gb: 200.0 },
+            1,
+        );
+        assert_eq!(c.proportional_cpus(1), 4.0);
+        assert_eq!(c.proportional_mem_gb(1), 50.0);
+    }
+
+    #[test]
+    fn place_and_evict_roundtrip() {
+        let mut c = Cluster::homogeneous(spec(), 2);
+        let share = Share { gpus: 4, cpus: 12.0, mem_gb: 250.0 };
+        c.place(JobId(1), Placement::single(0, share));
+        assert_eq!(c.free_gpus(), 12);
+        assert_eq!(c.servers[0].free_gpus, 4);
+        assert!(c.check_consistency().is_ok());
+        let p = c.evict(JobId(1)).unwrap();
+        assert_eq!(p.total().gpus, 4);
+        assert_eq!(c.free_gpus(), 16);
+        assert!(c.check_consistency().is_ok());
+    }
+
+    #[test]
+    fn fragmented_placement_spans_servers() {
+        let mut c = Cluster::homogeneous(spec(), 2);
+        let mut p = Placement::default();
+        p.shares.insert(0, Share { gpus: 8, cpus: 24.0, mem_gb: 500.0 });
+        p.shares.insert(1, Share { gpus: 8, cpus: 24.0, mem_gb: 500.0 });
+        assert!(p.is_fragmented());
+        assert_eq!(p.total().gpus, 16);
+        c.place(JobId(7), p);
+        assert_eq!(c.free_gpus(), 0);
+        assert_eq!(c.gpu_utilization(), 1.0);
+        assert!(c.check_consistency().is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "placed twice")]
+    fn double_place_panics() {
+        let mut c = Cluster::homogeneous(spec(), 1);
+        let share = Share { gpus: 1, cpus: 1.0, mem_gb: 10.0 };
+        c.place(JobId(1), Placement::single(0, share));
+        c.place(JobId(1), Placement::single(0, share));
+    }
+
+    #[test]
+    #[should_panic]
+    fn overallocation_panics() {
+        let mut c = Cluster::homogeneous(spec(), 1);
+        let share = Share { gpus: 9, cpus: 1.0, mem_gb: 1.0 };
+        c.place(JobId(1), Placement::single(0, share));
+    }
+
+    #[test]
+    fn sparse_server_ids_round_trip() {
+        // Deploy failover plans over surviving worker ids only; ids stay
+        // stable (non-positional) so placements address real workers.
+        let mut c = Cluster::with_server_ids(spec(), &[0, 2, 5]);
+        assert_eq!(c.num_servers(), 3);
+        assert_eq!(c.total_gpus(), 24);
+        let share = Share { gpus: 4, cpus: 12.0, mem_gb: 100.0 };
+        c.place(JobId(1), Placement::single(5, share));
+        assert_eq!(c.server(5).free_gpus, 4);
+        assert_eq!(c.server(2).free_gpus, 8);
+        assert!(c.check_consistency().is_ok());
+        let p = c.evict(JobId(1)).unwrap();
+        assert!(p.shares.contains_key(&5));
+        assert_eq!(c.free_gpus(), 24);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown server id")]
+    fn sparse_ids_reject_unknown_server() {
+        let mut c = Cluster::with_server_ids(spec(), &[0, 2]);
+        let share = Share { gpus: 1, cpus: 1.0, mem_gb: 10.0 };
+        c.place(JobId(1), Placement::single(1, share));
+    }
+
+    #[test]
+    fn evict_all_restores_capacity() {
+        let mut c = Cluster::homogeneous(spec(), 2);
+        for i in 0..4 {
+            c.place(
+                JobId(i),
+                Placement::single(
+                    (i % 2) as usize,
+                    Share { gpus: 2, cpus: 6.0, mem_gb: 100.0 },
+                ),
+            );
+        }
+        c.evict_all();
+        assert_eq!(c.free_gpus(), 16);
+        assert_eq!(c.free_cpus(), 48.0);
+        assert!(c.placements().is_empty());
+    }
+
+    #[test]
+    fn utilization_fractions() {
+        let mut c = Cluster::homogeneous(spec(), 2);
+        c.place(
+            JobId(0),
+            Placement::single(0, Share { gpus: 8, cpus: 12.0, mem_gb: 0.0 }),
+        );
+        assert_eq!(c.gpu_utilization(), 0.5);
+        assert_eq!(c.cpu_utilization(), 0.25);
+    }
+}

@@ -1,0 +1,161 @@
+//! A single server: fixed capacity plus free-resource counters.
+
+use super::Share;
+
+/// Hardware shape of one server (homogeneous across the cluster, §2.3).
+///
+/// The default matches the paper's testbed: 8×V100, 24 CPU cores, 500 GB
+/// DRAM (CPU:GPU ratio 3, fair-share memory 62.5 GB/GPU, §5.1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServerSpec {
+    pub gpus: u32,
+    pub cpus: u32,
+    pub mem_gb: f64,
+}
+
+impl Default for ServerSpec {
+    fn default() -> Self {
+        ServerSpec { gpus: 8, cpus: 24, mem_gb: 500.0 }
+    }
+}
+
+impl ServerSpec {
+    /// Build a spec from a CPU:GPU ratio (paper §5.5 sweeps 3..=6).
+    pub fn with_cpu_ratio(ratio: u32) -> ServerSpec {
+        ServerSpec { gpus: 8, cpus: 8 * ratio, mem_gb: 500.0 }
+    }
+
+    pub fn cpu_gpu_ratio(&self) -> f64 {
+        self.cpus as f64 / self.gpus as f64
+    }
+}
+
+/// Mutable per-server free-resource state.
+#[derive(Debug, Clone)]
+pub struct Server {
+    pub id: usize,
+    pub spec: ServerSpec,
+    pub free_gpus: u32,
+    pub free_cpus: f64,
+    pub free_mem_gb: f64,
+}
+
+impl Server {
+    pub fn new(id: usize, spec: ServerSpec) -> Server {
+        Server {
+            id,
+            spec,
+            free_gpus: spec.gpus,
+            free_cpus: spec.cpus as f64,
+            free_mem_gb: spec.mem_gb,
+        }
+    }
+
+    /// Whether a share fits in the remaining capacity (with a small epsilon
+    /// on the fractional dimensions to absorb float drift).
+    pub fn fits(&self, share: &Share) -> bool {
+        share.gpus <= self.free_gpus
+            && share.cpus <= self.free_cpus + 1e-9
+            && share.mem_gb <= self.free_mem_gb + 1e-9
+    }
+
+    /// Whether the GPU demand alone fits (used by Synergy-TUNE's
+    /// GPU-first placement step, §4.2).
+    pub fn fits_gpus(&self, gpus: u32) -> bool {
+        gpus <= self.free_gpus
+    }
+
+    /// Subtract a share from the free counters. Panics on overallocation.
+    pub fn allocate(&mut self, share: &Share) {
+        assert!(
+            self.fits(share),
+            "overallocation on server {}: want {:?}, free=({}, {}, {})",
+            self.id, share, self.free_gpus, self.free_cpus, self.free_mem_gb
+        );
+        self.free_gpus -= share.gpus;
+        self.free_cpus = (self.free_cpus - share.cpus).max(0.0);
+        self.free_mem_gb = (self.free_mem_gb - share.mem_gb).max(0.0);
+    }
+
+    /// Return a share to the free counters. Panics if it would exceed
+    /// capacity (double release).
+    pub fn release(&mut self, share: &Share) {
+        self.free_gpus += share.gpus;
+        self.free_cpus += share.cpus;
+        self.free_mem_gb += share.mem_gb;
+        assert!(
+            self.free_gpus <= self.spec.gpus
+                && self.free_cpus <= self.spec.cpus as f64 + 1e-6
+                && self.free_mem_gb <= self.spec.mem_gb + 1e-6,
+            "double release on server {}: free=({}, {}, {})",
+            self.id, self.free_gpus, self.free_cpus, self.free_mem_gb
+        );
+        self.free_cpus = self.free_cpus.min(self.spec.cpus as f64);
+        self.free_mem_gb = self.free_mem_gb.min(self.spec.mem_gb);
+    }
+
+    /// Scalar "fullness" key used for best-fit ordering: servers with the
+    /// least free resources sort first (Synergy-TUNE packs tightly, §4.2).
+    pub fn free_score(&self) -> f64 {
+        self.free_gpus as f64 / self.spec.gpus as f64
+            + self.free_cpus / self.spec.cpus as f64
+            + self.free_mem_gb / self.spec.mem_gb
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper_testbed() {
+        let s = ServerSpec::default();
+        assert_eq!(s.gpus, 8);
+        assert_eq!(s.cpus, 24);
+        assert_eq!(s.mem_gb, 500.0);
+        assert_eq!(s.cpu_gpu_ratio(), 3.0);
+    }
+
+    #[test]
+    fn ratio_constructor() {
+        assert_eq!(ServerSpec::with_cpu_ratio(6).cpus, 48);
+        assert_eq!(ServerSpec::with_cpu_ratio(6).cpu_gpu_ratio(), 6.0);
+    }
+
+    #[test]
+    fn fits_checks_all_dimensions() {
+        let s = Server::new(0, ServerSpec::default());
+        assert!(s.fits(&Share { gpus: 8, cpus: 24.0, mem_gb: 500.0 }));
+        assert!(!s.fits(&Share { gpus: 9, cpus: 1.0, mem_gb: 1.0 }));
+        assert!(!s.fits(&Share { gpus: 1, cpus: 25.0, mem_gb: 1.0 }));
+        assert!(!s.fits(&Share { gpus: 1, cpus: 1.0, mem_gb: 501.0 }));
+    }
+
+    #[test]
+    fn allocate_release_roundtrip() {
+        let mut s = Server::new(0, ServerSpec::default());
+        let share = Share { gpus: 2, cpus: 10.5, mem_gb: 125.0 };
+        s.allocate(&share);
+        assert_eq!(s.free_gpus, 6);
+        assert!((s.free_cpus - 13.5).abs() < 1e-9);
+        s.release(&share);
+        assert_eq!(s.free_gpus, 8);
+        assert!((s.free_cpus - 24.0).abs() < 1e-9);
+        assert!((s.free_mem_gb - 500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "double release")]
+    fn double_release_panics() {
+        let mut s = Server::new(0, ServerSpec::default());
+        s.release(&Share { gpus: 1, cpus: 0.0, mem_gb: 0.0 });
+    }
+
+    #[test]
+    fn free_score_orders_fuller_servers_first() {
+        let mut a = Server::new(0, ServerSpec::default());
+        let b = Server::new(1, ServerSpec::default());
+        a.allocate(&Share { gpus: 4, cpus: 12.0, mem_gb: 250.0 });
+        assert!(a.free_score() < b.free_score());
+    }
+}

@@ -1,0 +1,175 @@
+//! Typed experiment configuration.
+//!
+//! Experiments are described either by CLI flags (see `main.rs`) or by a
+//! JSON config file; both funnel into [`ExperimentConfig`]. The config
+//! system validates combinations up front so sweeps fail fast.
+
+use crate::cluster::ServerSpec;
+use crate::trace::{Split, TraceConfig};
+use crate::util::json::Json;
+
+/// A full experiment description.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub spec: ServerSpec,
+    pub n_servers: usize,
+    pub round_s: f64,
+    pub policy: String,
+    pub mechanism: String,
+    pub trace: TraceConfig,
+    pub profile_noise: f64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "default".into(),
+            spec: ServerSpec::default(),
+            n_servers: 16,
+            round_s: 300.0,
+            policy: "fifo".into(),
+            mechanism: "tune".into(),
+            trace: TraceConfig::default(),
+            profile_noise: 0.0,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Validate the configuration; returns a description of the first
+    /// problem found.
+    pub fn validate(&self) -> Result<(), String> {
+        if crate::policy::by_name(&self.policy).is_none() {
+            return Err(format!("unknown policy '{}'", self.policy));
+        }
+        if crate::mechanism::by_name(&self.mechanism).is_none() {
+            return Err(format!("unknown mechanism '{}'", self.mechanism));
+        }
+        if self.n_servers == 0 {
+            return Err("n_servers must be positive".into());
+        }
+        if self.round_s <= 0.0 {
+            return Err("round_s must be positive".into());
+        }
+        let s = self.trace.split;
+        if s.image + s.language + s.speech != 100 {
+            return Err(format!(
+                "split must sum to 100, got {}",
+                s.image + s.language + s.speech
+            ));
+        }
+        if !(0.0..0.5).contains(&self.profile_noise) {
+            return Err("profile_noise must be in [0, 0.5)".into());
+        }
+        Ok(())
+    }
+
+    /// Parse from a JSON document (missing keys take defaults).
+    pub fn from_json(doc: &Json) -> Result<ExperimentConfig, String> {
+        let mut cfg = ExperimentConfig::default();
+        if let Some(s) = doc.get("name").as_str() {
+            cfg.name = s.to_string();
+        }
+        if let Some(n) = doc.get("n_servers").as_usize() {
+            cfg.n_servers = n;
+        }
+        if let Some(n) = doc.get("gpus_per_server").as_f64() {
+            cfg.spec.gpus = n as u32;
+        }
+        if let Some(n) = doc.get("cpus_per_server").as_f64() {
+            cfg.spec.cpus = n as u32;
+        }
+        if let Some(n) = doc.get("mem_gb_per_server").as_f64() {
+            cfg.spec.mem_gb = n;
+        }
+        if let Some(n) = doc.get("round_s").as_f64() {
+            cfg.round_s = n;
+        }
+        if let Some(s) = doc.get("policy").as_str() {
+            cfg.policy = s.to_string();
+        }
+        if let Some(s) = doc.get("mechanism").as_str() {
+            cfg.mechanism = s.to_string();
+        }
+        if let Some(n) = doc.get("profile_noise").as_f64() {
+            cfg.profile_noise = n;
+        }
+        if let Some(n) = doc.get("n_jobs").as_usize() {
+            cfg.trace.n_jobs = n;
+        }
+        if let Some(seed) = doc.get("seed").as_f64() {
+            cfg.trace.seed = seed as u64;
+        }
+        if let Some(b) = doc.get("multi_gpu").as_bool() {
+            cfg.trace.multi_gpu = b;
+        }
+        match doc.get("jobs_per_hour") {
+            Json::Null => {}
+            v => {
+                if let Some(l) = v.as_f64() {
+                    cfg.trace.jobs_per_hour = if l <= 0.0 { None } else { Some(l) };
+                }
+            }
+        }
+        if let Some(arr) = doc.get("split").as_arr() {
+            if arr.len() != 3 {
+                return Err("split must be [image, language, speech]".into());
+            }
+            cfg.trace.split = Split::new(
+                arr[0].as_usize().ok_or("bad split")? as u32,
+                arr[1].as_usize().ok_or("bad split")? as u32,
+                arr[2].as_usize().ok_or("bad split")? as u32,
+            );
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a JSON file.
+    pub fn from_file(path: &str) -> Result<ExperimentConfig, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {path}: {e}"))?;
+        let doc = Json::parse(&text).map_err(|e| e.to_string())?;
+        Self::from_json(&doc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        assert!(ExperimentConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn json_overrides() {
+        let doc = Json::parse(
+            r#"{"name": "x", "n_servers": 64, "policy": "srtf",
+                "mechanism": "opt", "split": [20, 70, 10],
+                "jobs_per_hour": 9, "multi_gpu": true}"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&doc).unwrap();
+        assert_eq!(cfg.n_servers, 64);
+        assert_eq!(cfg.policy, "srtf");
+        assert_eq!(cfg.mechanism, "opt");
+        assert_eq!(cfg.trace.split.language, 70);
+        assert_eq!(cfg.trace.jobs_per_hour, Some(9.0));
+        assert!(cfg.trace.multi_gpu);
+    }
+
+    #[test]
+    fn bad_policy_rejected() {
+        let doc = Json::parse(r#"{"policy": "lottery"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn bad_split_rejected() {
+        let doc = Json::parse(r#"{"split": [50, 50, 50]}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&doc).is_err());
+    }
+}

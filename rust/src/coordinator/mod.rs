@@ -1,0 +1,250 @@
+//! The round planner: glue between policy, profiler output, and mechanism
+//! (paper §3.2 "Scheduling mechanism").
+//!
+//! Every round the coordinator:
+//! 1. builds policy views for all queued+running jobs,
+//! 2. orders them with the scheduling policy,
+//! 3. admits the top jobs whose aggregate GPU demand fits the cluster
+//!    ("runnable set", §4.2 — admission ignores fungible resources),
+//! 4. hands the runnable set to the mechanism for allocation + placement.
+//!
+//! Both the simulator ([`crate::sim`]) and the live deploy mode
+//! ([`crate::deploy`]) drive this planner, so scheduling behaviour is
+//! identical in the two (Table 5's fidelity comparison).
+
+use crate::cluster::Cluster;
+use crate::job::{DemandVector, Job, JobId};
+use crate::mechanism::{Grant, JobRequest, Mechanism};
+use crate::policy::{PolicyJobView, SchedulingPolicy};
+use crate::profiler::SensitivityMatrix;
+use std::collections::BTreeMap;
+
+/// Per-job scheduling context kept by the coordinator across rounds.
+#[derive(Debug, Clone)]
+pub struct JobContext {
+    pub matrix: SensitivityMatrix,
+    /// Best-case demand (cached from the matrix).
+    pub best: DemandVector,
+    pub prop: DemandVector,
+    /// Throughput at the proportional allocation (for SRTF estimates).
+    pub prop_tput: f64,
+}
+
+impl JobContext {
+    pub fn new(matrix: SensitivityMatrix, cluster: &Cluster) -> JobContext {
+        let best = matrix.best_demand();
+        let prop = DemandVector::proportional(
+            matrix.gpus,
+            cluster.spec.cpus as f64 / cluster.spec.gpus as f64,
+            cluster.spec.mem_gb / cluster.spec.gpus as f64,
+        );
+        let prop_tput = matrix.proportional_throughput();
+        JobContext { matrix, best, prop, prop_tput }
+    }
+}
+
+/// The plan for one round.
+#[derive(Debug)]
+pub struct RoundPlan {
+    /// Grants (placement + fungible demand) per placed job.
+    pub grants: BTreeMap<JobId, Grant>,
+    /// Jobs admitted to the runnable set but left unplaced by the
+    /// mechanism (GREEDY skips; TUNE only on true GPU shortage).
+    pub unplaced: Vec<JobId>,
+}
+
+/// Round planner: policy + mechanism + admission.
+pub struct RoundPlanner {
+    pub policy: Box<dyn SchedulingPolicy>,
+    pub mechanism: Box<dyn Mechanism>,
+}
+
+impl RoundPlanner {
+    pub fn new(
+        policy: Box<dyn SchedulingPolicy>,
+        mechanism: Box<dyn Mechanism>,
+    ) -> RoundPlanner {
+        RoundPlanner { policy, mechanism }
+    }
+
+    /// Plan one round. `cluster` must have no placements (the round reset
+    /// evicts everything first); `jobs` are all arrived unfinished jobs
+    /// with their contexts.
+    pub fn plan(
+        &self,
+        cluster: &mut Cluster,
+        jobs: &[(&Job, &JobContext)],
+        now: f64,
+    ) -> RoundPlan {
+        assert!(cluster.placements().is_empty(), "round must start empty");
+
+        // 1-2: policy views, ordered.
+        let mut views: Vec<PolicyJobView> = jobs
+            .iter()
+            .map(|(job, ctx)| self.view(cluster, job, ctx))
+            .collect();
+        self.policy.order(&mut views, now);
+
+        // 3: admit while aggregate GPU demand fits (fungible dims ignored).
+        let total_gpus = cluster.total_gpus();
+        let mut admitted_gpus = 0u32;
+        let by_id: BTreeMap<JobId, (&Job, &JobContext)> =
+            jobs.iter().map(|(j, c)| (j.id, (*j, *c))).collect();
+        let mut runnable: Vec<JobId> = Vec::new();
+        for v in &views {
+            let (job, _) = by_id[&v.id];
+            if admitted_gpus + job.gpus <= total_gpus {
+                admitted_gpus += job.gpus;
+                runnable.push(v.id);
+            }
+            // Jobs whose GPU demand doesn't fit are passed over; later
+            // smaller jobs may still be admitted (standard gang-scheduling
+            // backfill at GPU granularity).
+        }
+
+        // 4: mechanism allocation in policy order.
+        let requests: Vec<JobRequest> = runnable
+            .iter()
+            .map(|id| {
+                let (job, ctx) = by_id[id];
+                JobRequest {
+                    id: job.id,
+                    gpus: job.gpus,
+                    best: ctx.best,
+                    prop: ctx.prop,
+                    matrix: &ctx.matrix,
+                }
+            })
+            .collect();
+        let grants = self.mechanism.allocate(cluster, &requests);
+        let unplaced = runnable
+            .into_iter()
+            .filter(|id| !grants.contains_key(id))
+            .collect();
+        RoundPlan { grants, unplaced }
+    }
+
+    fn view(
+        &self,
+        cluster: &Cluster,
+        job: &Job,
+        ctx: &JobContext,
+    ) -> PolicyJobView {
+        let remaining_est_s = if ctx.prop_tput > 0.0 {
+            job.remaining_samples() / ctx.prop_tput
+        } else {
+            f64::INFINITY
+        };
+        // DRF dominant share over cluster totals.
+        let dominant_share = (job.gpus as f64 / cluster.total_gpus() as f64)
+            .max(ctx.best.cpus / cluster.total_cpus())
+            .max(ctx.best.mem_gb / cluster.total_mem_gb());
+        // Tetris alignment: demand · free, normalized.
+        let free = (
+            cluster.free_gpus() as f64,
+            cluster.free_cpus(),
+            cluster.free_mem_gb(),
+        );
+        let alignment = (job.gpus as f64 * free.0
+            + ctx.best.cpus * free.1
+            + ctx.best.mem_gb * free.2)
+            / (cluster.total_gpus() as f64 * cluster.total_cpus()).max(1.0);
+        PolicyJobView {
+            id: job.id,
+            arrival_s: job.arrival_s,
+            attained_service_s: job.attained_service_s,
+            remaining_est_s,
+            duration_prop_s: job.duration_prop_s,
+            gpus: job.gpus,
+            dominant_share,
+            alignment,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ServerSpec;
+    use crate::job::ModelKind;
+    use crate::mechanism::Tune;
+    use crate::policy::Fifo;
+    use crate::profiler::OptimisticProfiler;
+
+    fn setup(n_servers: usize) -> (Cluster, OptimisticProfiler) {
+        let spec = ServerSpec::default();
+        (
+            Cluster::homogeneous(spec, n_servers),
+            OptimisticProfiler::noiseless(spec),
+        )
+    }
+
+    fn make_job(id: u64, model: ModelKind, gpus: u32, arrival: f64) -> Job {
+        let mut j = Job::new(JobId(id), model, gpus, arrival, 3600.0);
+        j.total_samples = 1e9; // long-running
+        j
+    }
+
+    #[test]
+    fn admission_respects_gpu_capacity() {
+        let (mut cluster, profiler) = setup(1); // 8 GPUs
+        let jobs: Vec<Job> = (0..4)
+            .map(|i| make_job(i, ModelKind::Gnmt, 4, i as f64))
+            .collect();
+        let ctxs: Vec<JobContext> = jobs
+            .iter()
+            .map(|j| JobContext::new(profiler.profile(j).matrix, &cluster))
+            .collect();
+        let refs: Vec<(&Job, &JobContext)> =
+            jobs.iter().zip(ctxs.iter()).collect();
+        let planner =
+            RoundPlanner::new(Box::new(Fifo), Box::new(Tune::default()));
+        let plan = planner.plan(&mut cluster, &refs, 100.0);
+        // Only the first two 4-GPU jobs fit 8 GPUs.
+        assert_eq!(plan.grants.len(), 2);
+        assert!(plan.grants.contains_key(&JobId(0)));
+        assert!(plan.grants.contains_key(&JobId(1)));
+        assert!(plan.unplaced.is_empty());
+    }
+
+    #[test]
+    fn backfill_admits_smaller_later_jobs() {
+        let (mut cluster, profiler) = setup(1);
+        // 6-GPU job, then an 8-GPU job (doesn't fit), then a 2-GPU job
+        // (backfills).
+        let jobs = vec![
+            make_job(0, ModelKind::Lstm, 6, 0.0),
+            make_job(1, ModelKind::Lstm, 8, 1.0),
+            make_job(2, ModelKind::Lstm, 2, 2.0),
+        ];
+        let ctxs: Vec<JobContext> = jobs
+            .iter()
+            .map(|j| JobContext::new(profiler.profile(j).matrix, &cluster))
+            .collect();
+        let refs: Vec<(&Job, &JobContext)> =
+            jobs.iter().zip(ctxs.iter()).collect();
+        let planner = RoundPlanner::new(Box::new(Fifo), Box::new(Tune::default()));
+        let plan = planner.plan(&mut cluster, &refs, 10.0);
+        assert!(plan.grants.contains_key(&JobId(0)));
+        assert!(!plan.grants.contains_key(&JobId(1)));
+        assert!(plan.grants.contains_key(&JobId(2)));
+    }
+
+    #[test]
+    fn planner_consistent_cluster_state() {
+        let (mut cluster, profiler) = setup(2);
+        let jobs: Vec<Job> = (0..10)
+            .map(|i| make_job(i, ModelKind::ResNet18, 1, i as f64))
+            .collect();
+        let ctxs: Vec<JobContext> = jobs
+            .iter()
+            .map(|j| JobContext::new(profiler.profile(j).matrix, &cluster))
+            .collect();
+        let refs: Vec<(&Job, &JobContext)> =
+            jobs.iter().zip(ctxs.iter()).collect();
+        let planner = RoundPlanner::new(Box::new(Fifo), Box::new(Tune::default()));
+        let plan = planner.plan(&mut cluster, &refs, 0.0);
+        assert_eq!(plan.grants.len(), 10);
+        assert!(cluster.check_consistency().is_ok());
+    }
+}

@@ -1,0 +1,358 @@
+//! Leader: the live scheduler process (paper §4.3).
+//!
+//! Runs the exact same [`RoundPlanner`] as the simulator over a mirror
+//! [`Cluster`] built from worker registrations, and drives workers with
+//! lease grant/renew/terminate messages each round. Simulated time runs
+//! at `time_scale` × real time so a multi-hour trace deploys in minutes
+//! (Table 5 compares deploy vs simulate on the same trace).
+
+use super::proto::{Conn, Message};
+use crate::cluster::{Cluster, ServerSpec};
+use crate::coordinator::{JobContext, RoundPlanner};
+use crate::job::{Job, JobId, JobState};
+use crate::mechanism::by_name as mechanism_by_name;
+use crate::metrics::JctStats;
+use crate::perf::PerfModel;
+use crate::policy::by_name as policy_by_name;
+use crate::profiler::OptimisticProfiler;
+use anyhow::{anyhow, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::net::TcpListener;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Leader configuration.
+pub struct LeaderConfig {
+    pub bind: String,
+    pub n_workers: usize,
+    /// Real seconds per scheduling round.
+    pub round_real_s: f64,
+    /// Simulated seconds per real second.
+    pub time_scale: f64,
+    pub policy: String,
+    pub mechanism: String,
+    /// AOT variant workers should train.
+    pub variant: String,
+    /// Wall-clock cap for the whole run.
+    pub max_real_s: f64,
+}
+
+impl Default for LeaderConfig {
+    fn default() -> Self {
+        LeaderConfig {
+            bind: "127.0.0.1:0".into(),
+            n_workers: 1,
+            round_real_s: 2.0,
+            time_scale: 600.0,
+            policy: "srtf".into(),
+            mechanism: "tune".into(),
+            variant: "tiny".into(),
+            max_real_s: 600.0,
+        }
+    }
+}
+
+/// Outcome of a deploy run.
+#[derive(Debug)]
+pub struct LeaderReport {
+    /// (job id, JCT in simulated seconds).
+    pub jcts: Vec<(u64, f64)>,
+    /// Final reported training loss per job.
+    pub losses: BTreeMap<u64, f64>,
+    /// Total real train steps executed across workers.
+    pub total_steps: u64,
+    pub rounds: usize,
+    pub makespan_sim_s: f64,
+}
+
+impl LeaderReport {
+    pub fn jct_stats(&self) -> JctStats {
+        let jcts: Vec<f64> = self.jcts.iter().map(|&(_, j)| j).collect();
+        JctStats::from_jcts(&jcts)
+    }
+}
+
+/// The leader process body.
+pub struct Leader {
+    pub cfg: LeaderConfig,
+    /// Set after bind so tests can connect workers to an ephemeral port.
+    pub addr: std::sync::Mutex<Option<std::net::SocketAddr>>,
+}
+
+impl Leader {
+    pub fn new(cfg: LeaderConfig) -> Leader {
+        Leader { cfg, addr: std::sync::Mutex::new(None) }
+    }
+
+    /// Bind, wait for `n_workers` registrations, run the trace, shut
+    /// workers down, and report. Blocks.
+    pub fn run(&self, jobs: Vec<Job>) -> Result<LeaderReport> {
+        let listener = TcpListener::bind(&self.cfg.bind)?;
+        *self.addr.lock().unwrap() = Some(listener.local_addr()?);
+
+        // --- accept workers -------------------------------------------
+        let mut conns: Vec<Conn> = Vec::new();
+        let mut spec: Option<ServerSpec> = None;
+        for server_id in 0..self.cfg.n_workers {
+            let (stream, _) = listener.accept()?;
+            let mut conn = Conn::new(stream)?;
+            match conn.recv()? {
+                Some(Message::Register { gpus, cpus, mem_gb }) => {
+                    let s = ServerSpec { gpus, cpus, mem_gb };
+                    if let Some(prev) = spec {
+                        if prev != s {
+                            return Err(anyhow!(
+                                "heterogeneous workers unsupported"
+                            ));
+                        }
+                    }
+                    spec = Some(s);
+                    conn.send(&Message::RegisterAck { server_id })?;
+                }
+                other => return Err(anyhow!("expected register, got {other:?}")),
+            }
+            conns.push(conn);
+        }
+        let spec = spec.ok_or_else(|| anyhow!("no workers"))?;
+
+        // Reader threads funnel worker messages into one channel; `None`
+        // signals the worker's connection is gone (crash/EOF) so the
+        // leader can fail the worker over.
+        let (tx, rx) = mpsc::channel::<(usize, Option<Message>)>();
+        let mut senders: Vec<Conn> = Vec::new();
+        for (wid, conn) in conns.into_iter().enumerate() {
+            // Split: clone underlying stream for writing.
+            let read_conn = conn;
+            let tx = tx.clone();
+            // Recreate a write-side Conn from the same socket.
+            // (Conn::send uses its own cloned stream.)
+            let write_conn = read_conn.try_clone_writer()?;
+            senders.push(write_conn);
+            std::thread::spawn(move || {
+                let mut rc = read_conn;
+                loop {
+                    match rc.recv() {
+                        Ok(Some(m)) => {
+                            if tx.send((wid, Some(m))).is_err() {
+                                break;
+                            }
+                        }
+                        Ok(None) => break, // clean EOF
+                        Err(e) => {
+                            // A malformed frame is a protocol bug; losing
+                            // the reader silently stalls every job on this
+                            // worker, so shout before giving up.
+                            eprintln!("[leader] worker {wid} recv: {e}");
+                            break;
+                        }
+                    }
+                }
+                let _ = tx.send((wid, None));
+            });
+        }
+
+        // --- scheduling state ------------------------------------------
+        // Full-capacity mirror (admission + proportional shares); each
+        // round replans over only the workers still alive.
+        let cluster = Cluster::homogeneous(spec, self.cfg.n_workers);
+        let mut alive = vec![true; self.cfg.n_workers];
+        let world = PerfModel::new(spec);
+        let profiler = OptimisticProfiler::noiseless(spec);
+        let planner = RoundPlanner::new(
+            policy_by_name(&self.cfg.policy)
+                .ok_or_else(|| anyhow!("bad policy"))?,
+            mechanism_by_name(&self.cfg.mechanism)
+                .ok_or_else(|| anyhow!("bad mechanism"))?,
+        );
+
+        let mut pending: Vec<Job> = jobs;
+        pending.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        pending.retain(|j| j.gpus <= cluster.total_gpus());
+        let n_total = pending.len();
+        let mut next_arrival = 0usize;
+        let mut active: BTreeMap<JobId, Job> = BTreeMap::new();
+        let mut contexts: BTreeMap<JobId, JobContext> = BTreeMap::new();
+        // job -> worker currently hosting it.
+        let mut hosted_on: HashMap<u64, usize> = HashMap::new();
+        let mut losses: BTreeMap<u64, f64> = BTreeMap::new();
+        let mut steps_total: BTreeMap<u64, u64> = BTreeMap::new();
+        let mut jcts: Vec<(u64, f64)> = Vec::new();
+
+        let start = Instant::now();
+        let mut rounds = 0usize;
+        while jcts.len() < n_total
+            && start.elapsed().as_secs_f64() < self.cfg.max_real_s
+        {
+            let now_sim = start.elapsed().as_secs_f64() * self.cfg.time_scale;
+
+            // Drain worker messages.
+            while let Ok((wid, msg)) = rx.try_recv() {
+                let Some(msg) = msg else {
+                    // Worker `wid` died: fail it over. Its jobs return to
+                    // the queue and resume from the leader's last
+                    // progress view on the next round's lease.
+                    if alive[wid] {
+                        alive[wid] = false;
+                        eprintln!(
+                            "[leader] worker {wid} down; requeueing its jobs"
+                        );
+                        hosted_on.retain(|_, w| *w != wid);
+                    }
+                    continue;
+                };
+                match msg {
+                    Message::Progress { job_id, samples_done, loss, steps } => {
+                        if let Some(j) = active.get_mut(&JobId(job_id)) {
+                            j.progress_samples =
+                                samples_done.min(j.total_samples);
+                        }
+                        if loss.is_finite() {
+                            losses.insert(job_id, loss);
+                        }
+                        steps_total.insert(job_id, steps);
+                    }
+                    Message::Finished { job_id } => {
+                        if let Some(mut j) = active.remove(&JobId(job_id)) {
+                            contexts.remove(&j.id);
+                            j.state = JobState::Finished;
+                            jcts.push((job_id, now_sim - j.arrival_s));
+                            if let Some(wid) = hosted_on.remove(&job_id) {
+                                let _ = senders[wid]
+                                    .send(&Message::Terminate { job_id });
+                            }
+                        }
+                    }
+                    _ => {}
+                }
+            }
+
+            // Admit arrivals (profile on arrival).
+            while next_arrival < pending.len()
+                && pending[next_arrival].arrival_s <= now_sim
+            {
+                let mut job = pending[next_arrival].clone();
+                let ctx =
+                    JobContext::new(profiler.profile(&job).matrix, &cluster);
+                job.total_samples = job.duration_prop_s * ctx.prop_tput;
+                contexts.insert(job.id, ctx);
+                active.insert(job.id, job);
+                next_arrival += 1;
+            }
+
+            // Plan the round over the alive workers only.
+            let alive_ids: Vec<usize> = (0..alive.len())
+                .filter(|&w| alive[w])
+                .collect();
+            if alive_ids.is_empty() {
+                return Err(anyhow!("all workers died"));
+            }
+            let mut round_cluster =
+                Cluster::with_server_ids(spec, &alive_ids);
+            let refs: Vec<(&Job, &JobContext)> =
+                active.values().map(|j| (j, &contexts[&j.id])).collect();
+            let plan = planner.plan(&mut round_cluster, &refs, now_sim);
+
+            // Reconcile leases with workers.
+            let mut newly_hosted: HashMap<u64, usize> = HashMap::new();
+            for (id, grant) in &plan.grants {
+                // Primary worker: the server holding the most GPUs.
+                let primary = grant
+                    .placement
+                    .shares
+                    .iter()
+                    .max_by_key(|(_, s)| s.gpus)
+                    .map(|(&sid, _)| sid)
+                    .unwrap_or(0);
+                newly_hosted.insert(id.0, primary);
+            }
+            // Terminate moved/preempted jobs.
+            let to_stop: Vec<u64> = hosted_on
+                .iter()
+                .filter(|(jid, wid)| newly_hosted.get(*jid) != Some(*wid))
+                .map(|(&jid, _)| jid)
+                .collect();
+            for jid in to_stop {
+                if let Some(wid) = hosted_on.remove(&jid) {
+                    if senders[wid]
+                        .send(&Message::Terminate { job_id: jid })
+                        .is_err()
+                    {
+                        // Send failure == worker death; the reader thread
+                        // will also report it, but react immediately.
+                        alive[wid] = false;
+                        hosted_on.retain(|_, w| *w != wid);
+                    }
+                }
+            }
+            // Grant/renew leases.
+            for (id, grant) in &plan.grants {
+                let job = &active[id];
+                let wid = newly_hosted[&id.0];
+                if !alive[wid] {
+                    continue; // re-planned next round over survivors
+                }
+                let tput = world.throughput(
+                    job.model,
+                    job.gpus,
+                    grant.demand.cpus,
+                    grant.demand.mem_gb,
+                );
+                let sent = senders[wid].send(&Message::Lease {
+                    job_id: id.0,
+                    model: job.model.name().into(),
+                    variant: self.cfg.variant.clone(),
+                    gpus: job.gpus,
+                    cpus: grant.demand.cpus,
+                    mem_gb: grant.demand.mem_gb,
+                    // Worker-side progress runs in real time.
+                    target_tput: tput * self.cfg.time_scale,
+                    round_s: self.cfg.round_real_s,
+                    total_samples: job.total_samples,
+                    done_samples: job.progress_samples,
+                });
+                if sent.is_err() {
+                    alive[wid] = false;
+                    hosted_on.retain(|_, w| *w != wid);
+                    continue;
+                }
+                hosted_on.insert(id.0, wid);
+            }
+            for job in active.values_mut() {
+                job.state = if plan.grants.contains_key(&job.id) {
+                    JobState::Running
+                } else {
+                    JobState::Queued
+                };
+            }
+
+            if std::env::var_os("SYNERGY_DEPLOY_DEBUG").is_some() {
+                eprintln!(
+                    "[leader] round={} now_sim={:.0} active={} grants={} \
+                     finished={}/{}",
+                    rounds,
+                    now_sim,
+                    active.len(),
+                    plan.grants.len(),
+                    jcts.len(),
+                    n_total
+                );
+            }
+            rounds += 1;
+            std::thread::sleep(Duration::from_secs_f64(self.cfg.round_real_s));
+        }
+
+        // Shutdown.
+        for s in &mut senders {
+            let _ = s.send(&Message::Shutdown);
+        }
+        let makespan_sim_s =
+            start.elapsed().as_secs_f64() * self.cfg.time_scale;
+        Ok(LeaderReport {
+            jcts,
+            losses,
+            total_steps: steps_total.values().sum(),
+            rounds,
+            makespan_sim_s,
+        })
+    }
+}

@@ -1,0 +1,27 @@
+//! Deploy mode: a live mini-cluster on this host (paper §4.3 + §5.2).
+//!
+//! The paper's physical deployment runs a gRPC control plane between the
+//! scheduler and per-job Synergy iterators. Here:
+//!
+//! - [`leader`] — the scheduler process: accepts worker registrations,
+//!   runs the same [`crate::coordinator::RoundPlanner`] as the simulator
+//!   every (scaled) round, grants/terminates leases, aggregates progress.
+//! - [`worker`] — one process (or thread) per server: hosts
+//!   [`JobRunner`]s that execute *real* training iterations of the AOT
+//!   transformer through the PJRT runtime, with input-pipeline stalls
+//!   injected to match the throughput the job's (c, m) grant yields under
+//!   the performance model — the worker-side equivalent of the paper's
+//!   wrapped data iterator.
+//! - [`proto`] — the wire protocol: newline-delimited JSON over TCP
+//!   (tokio/gRPC are unavailable offline; std::net + threads suffice).
+//!
+//! Lease semantics follow §4.3: every running job asks to continue each
+//! round; the leader either renews or terminates (checkpoint + requeue).
+
+pub mod leader;
+pub mod proto;
+pub mod worker;
+
+pub use leader::{Leader, LeaderConfig, LeaderReport};
+pub use proto::Message;
+pub use worker::{Worker, WorkerConfig};

@@ -1,0 +1,266 @@
+//! Wire protocol: newline-delimited JSON messages over TCP.
+//!
+//! Each frame is one JSON object terminated by '\n' with a `"type"`
+//! discriminator. Encoding/decoding goes through [`crate::util::json`].
+
+use crate::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+/// Control-plane messages between leader and workers.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    /// worker -> leader: join the cluster with this capacity.
+    Register { gpus: u32, cpus: u32, mem_gb: f64 },
+    /// leader -> worker: accepted; assigned server id.
+    RegisterAck { server_id: usize },
+    /// leader -> worker: start (or renew) a job lease for one round.
+    Lease {
+        job_id: u64,
+        model: String,
+        variant: String,
+        gpus: u32,
+        cpus: f64,
+        mem_gb: f64,
+        /// Target throughput (samples/s) the grant yields — the worker
+        /// paces real train steps to this rate.
+        target_tput: f64,
+        round_s: f64,
+        total_samples: f64,
+        /// Samples already completed (leader's view) — a runner that is
+        /// (re)started after migration or lease expiry resumes from here.
+        done_samples: f64,
+    },
+    /// leader -> worker: terminate a job's lease (checkpoint + stop).
+    Terminate { job_id: u64 },
+    /// worker -> leader: progress report for a job.
+    Progress { job_id: u64, samples_done: f64, loss: f64, steps: u64 },
+    /// worker -> leader: job finished all its work.
+    Finished { job_id: u64 },
+    /// leader -> worker: experiment over, exit cleanly.
+    Shutdown,
+}
+
+impl Message {
+    pub fn encode(&self) -> String {
+        let j = match self {
+            Message::Register { gpus, cpus, mem_gb } => Json::obj(vec![
+                ("type", Json::str("register")),
+                ("gpus", Json::num(*gpus as f64)),
+                ("cpus", Json::num(*cpus as f64)),
+                ("mem_gb", Json::num(*mem_gb)),
+            ]),
+            Message::RegisterAck { server_id } => Json::obj(vec![
+                ("type", Json::str("register_ack")),
+                ("server_id", Json::num(*server_id as f64)),
+            ]),
+            Message::Lease {
+                job_id,
+                model,
+                variant,
+                gpus,
+                cpus,
+                mem_gb,
+                target_tput,
+                round_s,
+                total_samples,
+                done_samples,
+            } => Json::obj(vec![
+                ("type", Json::str("lease")),
+                ("job_id", Json::num(*job_id as f64)),
+                ("model", Json::str(model.clone())),
+                ("variant", Json::str(variant.clone())),
+                ("gpus", Json::num(*gpus as f64)),
+                ("cpus", Json::num(*cpus)),
+                ("mem_gb", Json::num(*mem_gb)),
+                ("target_tput", Json::num(*target_tput)),
+                ("round_s", Json::num(*round_s)),
+                ("total_samples", Json::num(*total_samples)),
+                ("done_samples", Json::num(*done_samples)),
+            ]),
+            Message::Terminate { job_id } => Json::obj(vec![
+                ("type", Json::str("terminate")),
+                ("job_id", Json::num(*job_id as f64)),
+            ]),
+            Message::Progress { job_id, samples_done, loss, steps } => {
+                Json::obj(vec![
+                    ("type", Json::str("progress")),
+                    ("job_id", Json::num(*job_id as f64)),
+                    ("samples_done", Json::num(*samples_done)),
+                    ("loss", Json::num(*loss)),
+                    ("steps", Json::num(*steps as f64)),
+                ])
+            }
+            Message::Finished { job_id } => Json::obj(vec![
+                ("type", Json::str("finished")),
+                ("job_id", Json::num(*job_id as f64)),
+            ]),
+            Message::Shutdown => {
+                Json::obj(vec![("type", Json::str("shutdown"))])
+            }
+        };
+        j.encode()
+    }
+
+    pub fn decode(line: &str) -> Result<Message, String> {
+        let j = Json::parse(line).map_err(|e| e.to_string())?;
+        let ty = j.get("type").as_str().ok_or("missing type")?;
+        let num =
+            |k: &str| j.get(k).as_f64().ok_or_else(|| format!("missing {k}"));
+        let st = |k: &str| {
+            j.get(k)
+                .as_str()
+                .map(str::to_string)
+                .ok_or_else(|| format!("missing {k}"))
+        };
+        Ok(match ty {
+            "register" => Message::Register {
+                gpus: num("gpus")? as u32,
+                cpus: num("cpus")? as u32,
+                mem_gb: num("mem_gb")?,
+            },
+            "register_ack" => {
+                Message::RegisterAck { server_id: num("server_id")? as usize }
+            }
+            "lease" => Message::Lease {
+                job_id: num("job_id")? as u64,
+                model: st("model")?,
+                variant: st("variant")?,
+                gpus: num("gpus")? as u32,
+                cpus: num("cpus")?,
+                mem_gb: num("mem_gb")?,
+                target_tput: num("target_tput")?,
+                round_s: num("round_s")?,
+                total_samples: num("total_samples")?,
+                done_samples: num("done_samples").unwrap_or(0.0),
+            },
+            "terminate" => Message::Terminate { job_id: num("job_id")? as u64 },
+            "progress" => Message::Progress {
+                job_id: num("job_id")? as u64,
+                samples_done: num("samples_done")?,
+                // Loss is NaN until the first real train step completes;
+                // non-finite numbers ride the wire as JSON null.
+                loss: num("loss").unwrap_or(f64::NAN),
+                steps: num("steps")? as u64,
+            },
+            "finished" => Message::Finished { job_id: num("job_id")? as u64 },
+            "shutdown" => Message::Shutdown,
+            other => return Err(format!("unknown message type {other:?}")),
+        })
+    }
+}
+
+/// Framed connection: one JSON message per line.
+pub struct Conn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Conn {
+    pub fn new(stream: TcpStream) -> std::io::Result<Conn> {
+        let writer = stream.try_clone()?;
+        Ok(Conn { reader: BufReader::new(stream), writer })
+    }
+
+    pub fn send(&mut self, msg: &Message) -> std::io::Result<()> {
+        let mut line = msg.encode();
+        line.push('\n');
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.flush()
+    }
+
+    /// Blocking receive; None on clean EOF.
+    pub fn recv(&mut self) -> std::io::Result<Option<Message>> {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line)?;
+        if n == 0 {
+            return Ok(None);
+        }
+        Message::decode(line.trim_end()).map(Some).map_err(|e| {
+            std::io::Error::new(std::io::ErrorKind::InvalidData, e)
+        })
+    }
+
+    /// A write-only handle to the same socket (leader keeps this while a
+    /// reader thread owns the original `Conn`). Never call `recv` on the
+    /// clone — both handles share the byte stream.
+    pub fn try_clone_writer(&self) -> std::io::Result<Conn> {
+        Ok(Conn {
+            reader: BufReader::new(self.writer.try_clone()?),
+            writer: self.writer.try_clone()?,
+        })
+    }
+
+    pub fn set_read_timeout(
+        &self,
+        dur: Option<std::time::Duration>,
+    ) -> std::io::Result<()> {
+        self.reader.get_ref().set_read_timeout(dur)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_messages_roundtrip() {
+        let msgs = vec![
+            Message::Register { gpus: 8, cpus: 24, mem_gb: 500.0 },
+            Message::RegisterAck { server_id: 3 },
+            Message::Lease {
+                job_id: 7,
+                model: "resnet18".into(),
+                variant: "tiny".into(),
+                gpus: 2,
+                cpus: 7.5,
+                mem_gb: 125.0,
+                target_tput: 321.5,
+                round_s: 5.0,
+                total_samples: 1e6,
+                done_samples: 2048.0,
+            },
+            Message::Terminate { job_id: 7 },
+            Message::Progress {
+                job_id: 7,
+                samples_done: 123.0,
+                loss: 5.25,
+                steps: 42,
+            },
+            Message::Finished { job_id: 7 },
+            Message::Shutdown,
+        ];
+        for m in msgs {
+            let enc = m.encode();
+            assert_eq!(Message::decode(&enc).unwrap(), m, "{enc}");
+        }
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(Message::decode("{}").is_err());
+        assert!(Message::decode("not json").is_err());
+        assert!(Message::decode(r#"{"type": "warp"}"#).is_err());
+        assert!(Message::decode(r#"{"type": "lease"}"#).is_err());
+    }
+
+    #[test]
+    fn conn_roundtrip_over_localhost() {
+        use std::net::TcpListener;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            let mut conn = Conn::new(s).unwrap();
+            let m = conn.recv().unwrap().unwrap();
+            conn.send(&m).unwrap(); // echo
+        });
+        let mut conn =
+            Conn::new(TcpStream::connect(addr).unwrap()).unwrap();
+        let msg = Message::Finished { job_id: 99 };
+        conn.send(&msg).unwrap();
+        let echoed = conn.recv().unwrap().unwrap();
+        assert_eq!(echoed, msg);
+        t.join().unwrap();
+    }
+}

@@ -1,0 +1,333 @@
+//! Worker: hosts job runners that execute real PJRT training steps.
+//!
+//! Each leased job gets a runner thread owning a [`Trainer`] (the AOT
+//! transformer). The runner executes train steps continuously — the *real*
+//! compute path through HLO/PJRT — while scheduler-visible progress
+//! accrues at the granted throughput (`target_tput`, in simulated
+//! samples/s, times the experiment's time scale), which is how the
+//! performance model's data-stall behaviour is injected into live runs.
+//!
+//! Lease semantics (§4.3): a lease not renewed within two round lengths
+//! expires; the runner checkpoints (params to worker memory) and stops.
+//! A re-lease restores from the checkpoint.
+
+use super::proto::{Conn, Message};
+use crate::runtime::{Runtime, SyntheticCorpus, Trainer};
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Worker configuration.
+#[derive(Debug, Clone)]
+pub struct WorkerConfig {
+    pub leader_addr: String,
+    pub artifacts_dir: String,
+    pub gpus: u32,
+    pub cpus: u32,
+    pub mem_gb: f64,
+    /// If false, skip PJRT execution (progress-only worker, for protocol
+    /// tests on machines without artifacts).
+    pub real_compute: bool,
+    /// Fault injection: crash (drop the connection without draining
+    /// runners) after this many real seconds. Used by the failover tests.
+    pub fail_after_s: Option<f64>,
+}
+
+impl Default for WorkerConfig {
+    fn default() -> Self {
+        WorkerConfig {
+            leader_addr: "127.0.0.1:7331".into(),
+            artifacts_dir: "artifacts".into(),
+            gpus: 8,
+            cpus: 24,
+            mem_gb: 500.0,
+            real_compute: true,
+            fail_after_s: None,
+        }
+    }
+}
+
+struct LeaseState {
+    target_tput: f64,
+    deadline: Instant,
+    total_samples: f64,
+    /// Progress (leader's view) to resume from when this runner starts.
+    done_samples: f64,
+}
+
+struct RunnerHandle {
+    stop: Arc<AtomicBool>,
+    lease: Arc<Mutex<LeaseState>>,
+    join: std::thread::JoinHandle<()>,
+}
+
+/// The worker process body.
+pub struct Worker;
+
+impl Worker {
+    /// Connect to the leader and serve until Shutdown. Blocks.
+    pub fn run(cfg: WorkerConfig) -> Result<usize> {
+        let stream = TcpStream::connect(&cfg.leader_addr)?;
+        let mut conn = Conn::new(stream.try_clone()?)?;
+        conn.send(&Message::Register {
+            gpus: cfg.gpus,
+            cpus: cfg.cpus,
+            mem_gb: cfg.mem_gb,
+        })?;
+        let server_id = match conn.recv()? {
+            Some(Message::RegisterAck { server_id }) => server_id,
+            other => return Err(anyhow!("expected ack, got {other:?}")),
+        };
+
+        // Shared writer for runner threads.
+        let writer: Arc<Mutex<TcpStream>> =
+            Arc::new(Mutex::new(stream.try_clone()?));
+        // Checkpoint store: job -> host params.
+        let checkpoints: Arc<Mutex<HashMap<u64, Vec<f32>>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+
+        let mut runners: HashMap<u64, RunnerHandle> = HashMap::new();
+        let mut jobs_run = 0usize;
+
+        // Fault injection: poll the clock between frames so the "crash"
+        // lands even while idle.
+        let started = Instant::now();
+        if cfg.fail_after_s.is_some() {
+            conn.set_read_timeout(Some(Duration::from_millis(50)))?;
+        }
+
+        loop {
+            if let Some(t) = cfg.fail_after_s {
+                if started.elapsed().as_secs_f64() >= t {
+                    // Simulated crash: stop runners' progress and vanish
+                    // without a protocol goodbye. The leader sees EOF.
+                    for (_, h) in runners.drain() {
+                        h.stop.store(true, Ordering::SeqCst);
+                        let _ = h.join.join();
+                    }
+                    return Err(anyhow!("injected crash after {t}s"));
+                }
+            }
+            let msg = match conn.recv() {
+                Ok(Some(m)) => m,
+                Ok(None) => break, // leader hung up
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock
+                            | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    continue // read timeout tick (fault-injection polling)
+                }
+                Err(e) => return Err(e.into()),
+            };
+            match msg {
+                Message::Lease {
+                    job_id,
+                    variant,
+                    target_tput,
+                    round_s,
+                    total_samples,
+                    done_samples,
+                    ..
+                } => {
+                    // A runner whose lease expired (renewal arrived late)
+                    // exits on its own; reap the dead handle so the lease
+                    // below restarts it rather than renewing a corpse.
+                    if runners
+                        .get(&job_id)
+                        .is_some_and(|h| h.join.is_finished())
+                    {
+                        if let Some(h) = runners.remove(&job_id) {
+                            let _ = h.join.join();
+                        }
+                        if std::env::var_os("SYNERGY_DEPLOY_DEBUG").is_some()
+                        {
+                            eprintln!("[worker] reaped dead runner {job_id}");
+                        }
+                    }
+                    let deadline = Instant::now()
+                        + Duration::from_secs_f64(round_s * 3.0);
+                    if let Some(h) = runners.get(&job_id) {
+                        // Renewal: update rate + extend lease.
+                        let mut lease = h.lease.lock().unwrap();
+                        lease.target_tput = target_tput;
+                        lease.deadline = deadline;
+                    } else {
+                        let lease = Arc::new(Mutex::new(LeaseState {
+                            target_tput,
+                            deadline,
+                            total_samples,
+                            done_samples,
+                        }));
+                        let stop = Arc::new(AtomicBool::new(false));
+                        let join = spawn_runner(
+                            job_id,
+                            variant,
+                            cfg.clone(),
+                            Arc::clone(&lease),
+                            Arc::clone(&stop),
+                            Arc::clone(&writer),
+                            Arc::clone(&checkpoints),
+                        );
+                        runners.insert(
+                            job_id,
+                            RunnerHandle { stop, lease, join },
+                        );
+                        jobs_run += 1;
+                        if std::env::var_os("SYNERGY_DEPLOY_DEBUG").is_some()
+                        {
+                            eprintln!(
+                                "[worker] spawned runner {job_id} \
+                                 done={done_samples:.0}"
+                            );
+                        }
+                    }
+                }
+                Message::Terminate { job_id } => {
+                    if let Some(h) = runners.remove(&job_id) {
+                        h.stop.store(true, Ordering::SeqCst);
+                        let _ = h.join.join();
+                    }
+                }
+                Message::Shutdown => break,
+                other => {
+                    return Err(anyhow!("worker got unexpected {other:?}"))
+                }
+            }
+        }
+        // Drain runners.
+        for (_, h) in runners {
+            h.stop.store(true, Ordering::SeqCst);
+            let _ = h.join.join();
+        }
+        let _ = server_id;
+        Ok(jobs_run)
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn spawn_runner(
+    job_id: u64,
+    variant: String,
+    cfg: WorkerConfig,
+    lease: Arc<Mutex<LeaseState>>,
+    stop: Arc<AtomicBool>,
+    writer: Arc<Mutex<TcpStream>>,
+    checkpoints: Arc<Mutex<HashMap<u64, Vec<f32>>>>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        let send = |msg: &Message| {
+            use std::io::Write;
+            let mut line = msg.encode();
+            line.push('\n');
+            if let Ok(mut w) = writer.lock() {
+                let _ = w.write_all(line.as_bytes());
+            }
+        };
+
+        // Real compute setup. PjRtClient is not Send, so each runner
+        // thread owns its own CPU client + compiled executable.
+        let mut trainer: Option<Trainer> = None;
+        let mut corpus: Option<SyntheticCorpus> = None;
+        let runtime: Option<Runtime> = if cfg.real_compute {
+            match Runtime::cpu() {
+                Ok(rt) => Some(rt),
+                Err(e) => {
+                    eprintln!("[worker] pjrt init: {e}");
+                    None
+                }
+            }
+        } else {
+            None
+        };
+        if let Some(rt) = &runtime {
+            match rt.load_variant(&cfg.artifacts_dir, &variant) {
+                Ok((meta, exe)) => {
+                    let vocab = meta.vocab;
+                    match Trainer::new(&rt.client, exe, meta, job_id) {
+                        Ok(mut t) => {
+                            if let Some(ckpt) =
+                                checkpoints.lock().unwrap().get(&job_id)
+                            {
+                                let _ = t.restore(ckpt);
+                            }
+                            corpus = Some(SyntheticCorpus::new(
+                                vocab,
+                                job_id ^ 0xDA7A,
+                            ));
+                            trainer = Some(t);
+                        }
+                        Err(e) => eprintln!("[worker] trainer init: {e}"),
+                    }
+                }
+                Err(e) => eprintln!("[worker] load {variant}: {e}"),
+            }
+        }
+
+        // Resume scheduler-visible progress from the leader's view (set
+        // when the lease was created; survives migration and expiry).
+        let mut samples_done = lease.lock().unwrap().done_samples;
+        let mut steps = 0u64;
+        let mut loss = f64::NAN;
+        let mut last_report = Instant::now();
+        let mut last_tick = Instant::now();
+        loop {
+            if stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let (rate, deadline, total) = {
+                let l = lease.lock().unwrap();
+                (l.target_tput, l.deadline, l.total_samples)
+            };
+            if Instant::now() > deadline {
+                break; // lease expired without renewal
+            }
+            // One real training step (the actual L1/L2 compute).
+            if let (Some(t), Some(c)) = (trainer.as_mut(), corpus.as_mut()) {
+                let toks = c.batch(t.meta.batch, t.meta.seq_len);
+                match t.train_step(&toks, 0.05) {
+                    Ok(l) => {
+                        loss = l as f64;
+                        steps += 1;
+                    }
+                    Err(e) => {
+                        eprintln!("[worker] step failed: {e}");
+                        break;
+                    }
+                }
+            } else {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            // Progress accrues at the granted throughput.
+            let dt = last_tick.elapsed().as_secs_f64();
+            last_tick = Instant::now();
+            samples_done += rate * dt;
+            if samples_done >= total {
+                send(&Message::Finished { job_id });
+                break;
+            }
+            if last_report.elapsed() > Duration::from_millis(250) {
+                send(&Message::Progress { job_id, samples_done, loss, steps });
+                last_report = Instant::now();
+                if std::env::var_os("SYNERGY_DEPLOY_DEBUG").is_some() {
+                    eprintln!(
+                        "[runner {job_id}] rate={rate:.1} done={samples_done:.0} \
+                         total={total:.0}"
+                    );
+                }
+            }
+        }
+        // Checkpoint on exit (termination or expiry).
+        if let Some(t) = &trainer {
+            if let Ok(p) = t.params_to_host() {
+                checkpoints.lock().unwrap().insert(job_id, p);
+            }
+        }
+        send(&Message::Progress { job_id, samples_done, loss, steps });
+    })
+}

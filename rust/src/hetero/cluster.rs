@@ -1,0 +1,176 @@
+//! Heterogeneous cluster: a set of homogeneous type-groups (paper A.2.1).
+//!
+//! Each *type group* is `s_i` identical machines of generation `i`,
+//! modeled as one [`Cluster`] so all the homogeneous bookkeeping
+//! (allocation invariants, consistency checks, proportional shares)
+//! carries over. The paper's per-round constraint that a job never spans
+//! two types (A.2.2) is enforced by construction: placements live inside
+//! a single group's `Cluster`.
+
+use super::gen::GpuGen;
+use crate::cluster::{Cluster, ServerSpec};
+use crate::job::JobId;
+
+/// Specification of one machine type: generation + per-machine resources
+/// + machine count (`s_i`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TypeSpec {
+    pub gen: GpuGen,
+    pub spec: ServerSpec,
+    pub machines: usize,
+}
+
+/// One homogeneous group inside a heterogeneous cluster.
+#[derive(Debug, Clone)]
+pub struct TypeGroup {
+    pub gen: GpuGen,
+    pub cluster: Cluster,
+}
+
+/// A heterogeneous cluster: disjoint homogeneous type groups.
+#[derive(Debug, Clone)]
+pub struct HeteroCluster {
+    pub groups: Vec<TypeGroup>,
+}
+
+impl HeteroCluster {
+    /// Build from type specifications. Types must be distinct.
+    pub fn new(types: &[TypeSpec]) -> HeteroCluster {
+        for (i, a) in types.iter().enumerate() {
+            for b in &types[i + 1..] {
+                assert_ne!(a.gen, b.gen, "duplicate machine type {:?}", a.gen);
+            }
+        }
+        HeteroCluster {
+            groups: types
+                .iter()
+                .map(|t| TypeGroup {
+                    gen: t.gen,
+                    cluster: Cluster::homogeneous(t.spec, t.machines),
+                })
+                .collect(),
+        }
+    }
+
+    /// The standard two-type evaluation cluster: half V100 machines, half
+    /// P100 machines of the paper's server shape.
+    pub fn two_tier(machines_per_type: usize) -> HeteroCluster {
+        let spec = ServerSpec::default();
+        HeteroCluster::new(&[
+            TypeSpec { gen: GpuGen::P100, spec, machines: machines_per_type },
+            TypeSpec { gen: GpuGen::V100, spec, machines: machines_per_type },
+        ])
+    }
+
+    pub fn gens(&self) -> Vec<GpuGen> {
+        self.groups.iter().map(|g| g.gen).collect()
+    }
+
+    pub fn group(&self, gen: GpuGen) -> Option<&TypeGroup> {
+        self.groups.iter().find(|g| g.gen == gen)
+    }
+
+    pub fn group_mut(&mut self, gen: GpuGen) -> Option<&mut TypeGroup> {
+        self.groups.iter_mut().find(|g| g.gen == gen)
+    }
+
+    /// Total GPUs across all types (`G`, A.2.1).
+    pub fn total_gpus(&self) -> u32 {
+        self.groups.iter().map(|g| g.cluster.total_gpus()).sum()
+    }
+
+    pub fn free_gpus(&self) -> u32 {
+        self.groups.iter().map(|g| g.cluster.free_gpus()).sum()
+    }
+
+    pub fn total_cpus(&self) -> f64 {
+        self.groups.iter().map(|g| g.cluster.total_cpus()).sum()
+    }
+
+    pub fn total_mem_gb(&self) -> f64 {
+        self.groups.iter().map(|g| g.cluster.total_mem_gb()).sum()
+    }
+
+    /// Which group hosts `job`, if placed.
+    pub fn host_gen(&self, job: JobId) -> Option<GpuGen> {
+        self.groups
+            .iter()
+            .find(|g| g.cluster.placement(job).is_some())
+            .map(|g| g.gen)
+    }
+
+    /// Evict every placement in every group (round reset, §3.2).
+    pub fn evict_all(&mut self) {
+        for g in &mut self.groups {
+            g.cluster.evict_all();
+        }
+    }
+
+    /// Aggregate GPU utilization in [0, 1].
+    pub fn gpu_utilization(&self) -> f64 {
+        1.0 - self.free_gpus() as f64 / self.total_gpus() as f64
+    }
+
+    /// Consistency check across every group.
+    pub fn check_consistency(&self) -> Result<(), String> {
+        for g in &self.groups {
+            g.cluster
+                .check_consistency()
+                .map_err(|e| format!("{:?}: {e}", g.gen))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Placement, Share};
+
+    #[test]
+    fn two_tier_capacity() {
+        let c = HeteroCluster::two_tier(2);
+        assert_eq!(c.groups.len(), 2);
+        assert_eq!(c.total_gpus(), 32);
+        assert_eq!(c.total_cpus(), 96.0);
+        assert_eq!(c.free_gpus(), 32);
+        assert!(c.check_consistency().is_ok());
+    }
+
+    #[test]
+    fn groups_are_independent() {
+        let mut c = HeteroCluster::two_tier(1);
+        let share = Share { gpus: 4, cpus: 12.0, mem_gb: 250.0 };
+        c.group_mut(GpuGen::V100)
+            .unwrap()
+            .cluster
+            .place(JobId(1), Placement::single(0, share));
+        assert_eq!(c.host_gen(JobId(1)), Some(GpuGen::V100));
+        assert_eq!(c.group(GpuGen::P100).unwrap().cluster.free_gpus(), 8);
+        assert_eq!(c.free_gpus(), 12);
+        c.evict_all();
+        assert_eq!(c.free_gpus(), 16);
+        assert_eq!(c.host_gen(JobId(1)), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate machine type")]
+    fn duplicate_types_panic() {
+        let spec = ServerSpec::default();
+        HeteroCluster::new(&[
+            TypeSpec { gen: GpuGen::V100, spec, machines: 1 },
+            TypeSpec { gen: GpuGen::V100, spec, machines: 1 },
+        ]);
+    }
+
+    #[test]
+    fn utilization_tracks_placements() {
+        let mut c = HeteroCluster::two_tier(1);
+        assert_eq!(c.gpu_utilization(), 0.0);
+        c.group_mut(GpuGen::P100).unwrap().cluster.place(
+            JobId(2),
+            Placement::single(0, Share { gpus: 8, cpus: 24.0, mem_gb: 500.0 }),
+        );
+        assert_eq!(c.gpu_utilization(), 0.5);
+    }
+}

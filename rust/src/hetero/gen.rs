@@ -1,0 +1,119 @@
+//! GPU generations and their compute scaling.
+//!
+//! The paper's heterogeneous extension treats each GPU generation as a
+//! machine *type* (A.2.1: "K: the set of different types of machines").
+//! Only the GPU stage of the input pipeline changes across generations —
+//! host-side pre-processing (CPU) and storage fetch are unchanged — so a
+//! generation is characterized by a multiplicative factor on the model's
+//! single-GPU compute throughput.
+//!
+//! The factors are calibrated from the public cross-generation speedups
+//! used by heterogeneity-aware schedulers (Gavel [44], Gandiva-Fair
+//! [12]): roughly K80 : P100 : V100 : A100 ≈ 0.25 : 0.55 : 1 : 2, with
+//! language models (dense matmul, tensor-core friendly) gaining more
+//! from newer generations than input-bound vision models.
+
+use crate::job::Task;
+
+/// A GPU generation (machine type `i ∈ K`, paper A.2.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum GpuGen {
+    K80,
+    P100,
+    V100,
+    A100,
+}
+
+/// All generations, slowest first.
+pub const ALL_GENS: [GpuGen; 4] =
+    [GpuGen::K80, GpuGen::P100, GpuGen::V100, GpuGen::A100];
+
+impl GpuGen {
+    pub fn name(&self) -> &'static str {
+        match self {
+            GpuGen::K80 => "k80",
+            GpuGen::P100 => "p100",
+            GpuGen::V100 => "v100",
+            GpuGen::A100 => "a100",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<GpuGen> {
+        match name {
+            "k80" => Some(GpuGen::K80),
+            "p100" => Some(GpuGen::P100),
+            "v100" => Some(GpuGen::V100),
+            "a100" => Some(GpuGen::A100),
+            _ => None,
+        }
+    }
+
+    /// Multiplier on a model's single-GPU compute throughput relative to
+    /// the V100 basis the zoo is calibrated against.
+    pub fn compute_scale(&self, task: Task) -> f64 {
+        // Language models (transformer/RNN matmuls) track tensor-core
+        // gains; image/speech pipelines gain slightly less per
+        // generation (they re-bottleneck on input earlier).
+        match (self, task) {
+            (GpuGen::K80, Task::Language) => 0.20,
+            (GpuGen::K80, _) => 0.25,
+            (GpuGen::P100, Task::Language) => 0.50,
+            (GpuGen::P100, _) => 0.55,
+            (GpuGen::V100, _) => 1.0,
+            (GpuGen::A100, Task::Language) => 2.2,
+            (GpuGen::A100, _) => 1.9,
+        }
+    }
+
+    /// Slowest-generation helper for the fairness oracle.
+    pub fn slowest(gens: &[GpuGen]) -> GpuGen {
+        *gens
+            .iter()
+            .min_by(|a, b| {
+                a.compute_scale(Task::Image)
+                    .partial_cmp(&b.compute_scale(Task::Image))
+                    .unwrap()
+            })
+            .expect("at least one generation")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for g in ALL_GENS {
+            assert_eq!(GpuGen::by_name(g.name()), Some(g));
+        }
+        assert_eq!(GpuGen::by_name("h100"), None);
+    }
+
+    #[test]
+    fn scales_are_monotone_across_generations() {
+        for task in [Task::Image, Task::Language, Task::Speech] {
+            let scales: Vec<f64> =
+                ALL_GENS.iter().map(|g| g.compute_scale(task)).collect();
+            for w in scales.windows(2) {
+                assert!(w[0] < w[1], "{task:?}: {scales:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn v100_is_the_calibration_basis() {
+        for task in [Task::Image, Task::Language, Task::Speech] {
+            assert_eq!(GpuGen::V100.compute_scale(task), 1.0);
+        }
+    }
+
+    #[test]
+    fn slowest_picks_k80() {
+        assert_eq!(GpuGen::slowest(&ALL_GENS), GpuGen::K80);
+        assert_eq!(
+            GpuGen::slowest(&[GpuGen::V100, GpuGen::P100]),
+            GpuGen::P100
+        );
+    }
+}

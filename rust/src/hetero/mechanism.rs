@@ -1,0 +1,515 @@
+//! Heterogeneous scheduling mechanisms (paper A.2.2–A.2.3).
+//!
+//! Three mechanisms over a [`HeteroCluster`]:
+//!
+//! - [`HetProportional`] — the type-blind baseline: jobs take types in
+//!   capacity-weighted round-robin order and receive GPU-proportional
+//!   CPU/memory, mirroring what a heterogeneity-unaware cluster does.
+//! - [`HetTune`] — the TUNE-style heuristic: each job is first assigned
+//!   the machine type that maximizes its best-case throughput among
+//!   types with free GPUs (jobs never span types in a round, A.2.2),
+//!   then homogeneous Synergy-TUNE runs inside each type group with the
+//!   job's per-type sensitivity matrix. The fairness floor `W_j^Fair`
+//!   (slowest-type proportional, see [`super::profiler`]) holds
+//!   structurally: TUNE guarantees at least the assigned type's
+//!   proportional throughput, which dominates the slowest type's.
+//! - [`HetOpt`] — the A.2.3 ILP upper bound: boolean `y_{c,m,i,j}` picks
+//!   one (CPU, memory, type) configuration per job, maximizing aggregate
+//!   throughput subject to per-type GPU/CPU/memory capacity (23–24), one
+//!   configuration per job (25), and the oracle fairness floor (26).
+
+use super::cluster::HeteroCluster;
+use super::gen::GpuGen;
+use super::profiler::HeteroSensitivity;
+use crate::job::{DemandVector, JobId};
+use crate::lp::{solve_ilp, IlpOptions, Lp, Op};
+use crate::mechanism::{Grant, JobRequest, Mechanism, Proportional, Tune};
+use std::collections::BTreeMap;
+
+/// One runnable job as the heterogeneous mechanisms see it.
+#[derive(Debug, Clone)]
+pub struct HetJobRequest<'a> {
+    pub id: JobId,
+    pub gpus: u32,
+    pub sens: &'a HeteroSensitivity,
+}
+
+/// The outcome for one job: the machine type plus the in-group grant.
+#[derive(Debug, Clone)]
+pub struct HetGrant {
+    pub gen: GpuGen,
+    pub grant: Grant,
+}
+
+/// Heterogeneous allocation mechanism interface.
+pub trait HetMechanism: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Place as many of `jobs` (policy priority order) as the cluster
+    /// allows. The cluster must start the round with no placements.
+    fn allocate(
+        &self,
+        cluster: &mut HeteroCluster,
+        jobs: &[HetJobRequest<'_>],
+    ) -> BTreeMap<JobId, HetGrant>;
+}
+
+// ---------------------------------------------------------------------------
+// Type assignment + per-group delegation
+// ---------------------------------------------------------------------------
+
+/// Assign each job a machine type in priority order. `score` ranks the
+/// candidate types for one job (higher wins); only types whose remaining
+/// free GPU budget covers the job are candidates.
+fn assign_types(
+    cluster: &HeteroCluster,
+    jobs: &[HetJobRequest<'_>],
+    score: impl Fn(&HetJobRequest<'_>, GpuGen) -> f64,
+) -> BTreeMap<JobId, GpuGen> {
+    let mut free: BTreeMap<GpuGen, u32> = cluster
+        .groups
+        .iter()
+        .map(|g| (g.gen, g.cluster.free_gpus()))
+        .collect();
+    let mut assigned = BTreeMap::new();
+    for j in jobs {
+        let best = free
+            .iter()
+            .filter(|(_, &f)| f >= j.gpus)
+            .map(|(&g, _)| g)
+            .max_by(|&a, &b| {
+                score(j, a)
+                    .partial_cmp(&score(j, b))
+                    .unwrap()
+                    .then(a.cmp(&b))
+            });
+        if let Some(gen) = best {
+            *free.get_mut(&gen).unwrap() -= j.gpus;
+            assigned.insert(j.id, gen);
+        }
+        // Jobs with no feasible type this round stay queued (GPU
+        // shortage — same as the homogeneous runnable-set cut).
+    }
+    assigned
+}
+
+/// Run a homogeneous mechanism inside each type group over the jobs
+/// assigned to it.
+fn delegate_groups(
+    cluster: &mut HeteroCluster,
+    jobs: &[HetJobRequest<'_>],
+    assigned: &BTreeMap<JobId, GpuGen>,
+    inner: &dyn Mechanism,
+) -> BTreeMap<JobId, HetGrant> {
+    let mut out = BTreeMap::new();
+    for group in &mut cluster.groups {
+        let spec = group.cluster.spec;
+        let requests: Vec<JobRequest<'_>> = jobs
+            .iter()
+            .filter(|j| assigned.get(&j.id) == Some(&group.gen))
+            .map(|j| {
+                let matrix = j
+                    .sens
+                    .matrix(group.gen)
+                    .expect("job profiled on every type");
+                JobRequest {
+                    id: j.id,
+                    gpus: j.gpus,
+                    best: matrix.best_demand(),
+                    prop: DemandVector::proportional(
+                        j.gpus,
+                        spec.cpus as f64 / spec.gpus as f64,
+                        spec.mem_gb / spec.gpus as f64,
+                    ),
+                    matrix,
+                }
+            })
+            .collect();
+        for (id, grant) in inner.allocate(&mut group.cluster, &requests) {
+            out.insert(id, HetGrant { gen: group.gen, grant });
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Mechanisms
+// ---------------------------------------------------------------------------
+
+/// Type-blind GPU-proportional baseline.
+pub struct HetProportional;
+
+impl HetMechanism for HetProportional {
+    fn name(&self) -> &'static str {
+        "het-proportional"
+    }
+
+    fn allocate(
+        &self,
+        cluster: &mut HeteroCluster,
+        jobs: &[HetJobRequest<'_>],
+    ) -> BTreeMap<JobId, HetGrant> {
+        // Type-blind: prefer whichever type has the most free GPUs
+        // (capacity-weighted round-robin), ignoring job sensitivity.
+        let mut free: BTreeMap<GpuGen, u32> = cluster
+            .groups
+            .iter()
+            .map(|g| (g.gen, g.cluster.free_gpus()))
+            .collect();
+        let mut assigned = BTreeMap::new();
+        for j in jobs {
+            let best = free
+                .iter()
+                .filter(|(_, &f)| f >= j.gpus)
+                .max_by_key(|(&g, &f)| (f, std::cmp::Reverse(g)))
+                .map(|(&g, _)| g);
+            if let Some(gen) = best {
+                *free.get_mut(&gen).unwrap() -= j.gpus;
+                assigned.insert(j.id, gen);
+            }
+        }
+        delegate_groups(cluster, jobs, &assigned, &Proportional)
+    }
+}
+
+/// Heterogeneity-aware Synergy-TUNE.
+pub struct HetTune;
+
+impl HetMechanism for HetTune {
+    fn name(&self) -> &'static str {
+        "het-tune"
+    }
+
+    fn allocate(
+        &self,
+        cluster: &mut HeteroCluster,
+        jobs: &[HetJobRequest<'_>],
+    ) -> BTreeMap<JobId, HetGrant> {
+        // Affinity score: the job's best-case throughput on this type,
+        // normalized by the type's compute scale so compute-insensitive
+        // jobs defer fast GPUs to jobs that can exploit them.
+        let assigned = assign_types(cluster, jobs, |j, gen| {
+            let m = j.sens.matrix(gen).expect("profiled");
+            let peak = m.max_throughput();
+            let scale = gen.compute_scale(m.model.task());
+            peak / scale
+        });
+        delegate_groups(cluster, jobs, &assigned, &Tune::default())
+    }
+}
+
+/// The A.2.3 ILP solution for one round.
+#[derive(Debug, Clone)]
+pub struct HetOptAllocation {
+    /// Chosen (type, cpus, mem_gb, throughput) per job.
+    pub chosen: BTreeMap<JobId, (GpuGen, f64, f64, f64)>,
+    /// ILP objective — aggregate throughput upper bound.
+    pub objective: f64,
+    pub n_vars: usize,
+}
+
+/// Heterogeneous Synergy-OPT (ILP upper bound).
+#[derive(Default)]
+pub struct HetOpt;
+
+impl HetOpt {
+    /// Solve the A.2.3 ILP. Options per (job, type) are Pareto-pruned and
+    /// floored against the oracle `W_j^Fair` (constraint 26), so every
+    /// selection is fair by construction.
+    pub fn solve_allocation(
+        &self,
+        cluster: &HeteroCluster,
+        jobs: &[HetJobRequest<'_>],
+    ) -> Option<HetOptAllocation> {
+        if jobs.is_empty() {
+            return Some(HetOptAllocation {
+                chosen: BTreeMap::new(),
+                objective: 0.0,
+                n_vars: 0,
+            });
+        }
+        // (job, gen, options) — options only on types that could ever
+        // host the job's gang (GPU capacity of the whole group).
+        struct Block {
+            id: JobId,
+            gpus: u32,
+            gen: GpuGen,
+            opts: Vec<(f64, f64, f64)>,
+        }
+        let mut blocks: Vec<Block> = Vec::new();
+        for j in jobs {
+            let fair = j.sens.fair_throughput();
+            for group in &cluster.groups {
+                if group.cluster.total_gpus() < j.gpus {
+                    continue;
+                }
+                let m = j.sens.matrix(group.gen).expect("profiled");
+                let mut opts = m.pareto_options_with_floor(fair);
+                if opts.is_empty() && m.proportional_throughput() >= fair {
+                    opts.push(m.proportional_option());
+                }
+                if !opts.is_empty() {
+                    blocks.push(Block {
+                        id: j.id,
+                        gpus: j.gpus,
+                        gen: group.gen,
+                        opts,
+                    });
+                }
+            }
+        }
+
+        let n_vars: usize = blocks.iter().map(|b| b.opts.len()).sum();
+        let mut lp = Lp::new(n_vars);
+        let mut var = 0usize;
+        // Per-type capacity rows (constraints 23, 24 + the per-type GPU
+        // capacity needed once types are disjoint pools).
+        let mut cpu_rows: BTreeMap<GpuGen, Vec<(usize, f64)>> =
+            BTreeMap::new();
+        let mut mem_rows: BTreeMap<GpuGen, Vec<(usize, f64)>> =
+            BTreeMap::new();
+        let mut gpu_rows: BTreeMap<GpuGen, Vec<(usize, f64)>> =
+            BTreeMap::new();
+        // Per-job choice rows (constraint 25).
+        let mut job_rows: BTreeMap<JobId, Vec<(usize, f64)>> = BTreeMap::new();
+        let mut var_map: Vec<(usize, usize)> = Vec::new(); // var -> (block, opt)
+        for (bi, b) in blocks.iter().enumerate() {
+            for (oi, &(c, m, w)) in b.opts.iter().enumerate() {
+                lp.set_objective(var, w);
+                cpu_rows.entry(b.gen).or_default().push((var, c));
+                mem_rows.entry(b.gen).or_default().push((var, m));
+                gpu_rows.entry(b.gen).or_default().push((var, b.gpus as f64));
+                job_rows.entry(b.id).or_default().push((var, 1.0));
+                var_map.push((bi, oi));
+                var += 1;
+            }
+        }
+        for group in &cluster.groups {
+            if let Some(row) = cpu_rows.remove(&group.gen) {
+                lp.add(row, Op::Le, group.cluster.total_cpus());
+            }
+            if let Some(row) = mem_rows.remove(&group.gen) {
+                lp.add(row, Op::Le, group.cluster.total_mem_gb());
+            }
+            if let Some(row) = gpu_rows.remove(&group.gen) {
+                lp.add(row, Op::Le, group.cluster.total_gpus() as f64);
+            }
+        }
+        for (_, row) in job_rows {
+            lp.add(row, Op::Eq, 1.0);
+        }
+
+        let int_vars: Vec<usize> = (0..n_vars).collect();
+        let sol = solve_ilp(&lp, &int_vars, IlpOptions::default()).ok()?;
+
+        let mut chosen = BTreeMap::new();
+        for (v, &(bi, oi)) in var_map.iter().enumerate() {
+            if sol.x[v] > 0.5 {
+                let b = &blocks[bi];
+                let (c, m, w) = b.opts[oi];
+                chosen.insert(b.id, (b.gen, c, m, w));
+            }
+        }
+        Some(HetOptAllocation { chosen, objective: sol.objective, n_vars })
+    }
+}
+
+impl HetMechanism for HetOpt {
+    fn name(&self) -> &'static str {
+        "het-opt"
+    }
+
+    /// Materialize the ILP allocation: place each job on its chosen type
+    /// with the chosen demand via best-fit; fall back to proportional on
+    /// that type if packing fails (the ILP ignores server boundaries, as
+    /// in the homogeneous OPT).
+    fn allocate(
+        &self,
+        cluster: &mut HeteroCluster,
+        jobs: &[HetJobRequest<'_>],
+    ) -> BTreeMap<JobId, HetGrant> {
+        let Some(alloc) = self.solve_allocation(cluster, jobs) else {
+            return BTreeMap::new();
+        };
+        let mut out = BTreeMap::new();
+        for j in jobs {
+            let Some(&(gen, c, m, _)) = alloc.chosen.get(&j.id) else {
+                continue;
+            };
+            let group = cluster.group_mut(gen).expect("chosen group");
+            let demand = DemandVector::new(j.gpus, c, m);
+            let spec = group.cluster.spec;
+            let prop = DemandVector::proportional(
+                j.gpus,
+                spec.cpus as f64 / spec.gpus as f64,
+                spec.mem_gb / spec.gpus as f64,
+            );
+            for d in [demand, prop] {
+                if let Some(p) = crate::mechanism::best_fit(&group.cluster, &d)
+                {
+                    group.cluster.place(j.id, p.clone());
+                    out.insert(
+                        j.id,
+                        HetGrant {
+                            gen,
+                            grant: Grant { placement: p, demand: d },
+                        },
+                    );
+                    break;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Look up a heterogeneous mechanism by CLI name.
+pub fn het_by_name(name: &str) -> Option<Box<dyn HetMechanism>> {
+    match name {
+        "het-proportional" | "het-prop" => Some(Box::new(HetProportional)),
+        "het-tune" => Some(Box::new(HetTune)),
+        "het-opt" => Some(Box::new(HetOpt)),
+        _ => None,
+    }
+}
+
+pub const ALL_HET_MECHANISMS: [&str; 3] =
+    ["het-proportional", "het-tune", "het-opt"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::profiler::HeteroProfiler;
+    use crate::job::{Job, ModelKind};
+
+    fn setup(
+        models: &[(u64, ModelKind, u32)],
+    ) -> (HeteroCluster, Vec<Job>, Vec<HeteroSensitivity>) {
+        let cluster = HeteroCluster::two_tier(1);
+        let profiler = HeteroProfiler::noiseless(&cluster);
+        let jobs: Vec<Job> = models
+            .iter()
+            .map(|&(id, m, g)| Job::new(JobId(id), m, g, 0.0, 3600.0))
+            .collect();
+        let sens: Vec<HeteroSensitivity> =
+            jobs.iter().map(|j| profiler.profile(j)).collect();
+        (cluster, jobs, sens)
+    }
+
+    fn requests<'a>(
+        jobs: &'a [Job],
+        sens: &'a [HeteroSensitivity],
+    ) -> Vec<HetJobRequest<'a>> {
+        jobs.iter()
+            .zip(sens)
+            .map(|(j, s)| HetJobRequest { id: j.id, gpus: j.gpus, sens: s })
+            .collect()
+    }
+
+    #[test]
+    fn het_tune_places_all_when_gpus_fit() {
+        let (mut cluster, jobs, sens) = setup(&[
+            (0, ModelKind::ResNet18, 4),
+            (1, ModelKind::Gnmt, 4),
+            (2, ModelKind::ShuffleNetV2, 4),
+            (3, ModelKind::TransformerXl, 4),
+        ]);
+        let reqs = requests(&jobs, &sens);
+        let grants = HetTune.allocate(&mut cluster, &reqs);
+        assert_eq!(grants.len(), 4);
+        assert!(cluster.check_consistency().is_ok());
+        // No type hosts more GPUs than it has.
+        assert_eq!(cluster.free_gpus(), 0);
+    }
+
+    #[test]
+    fn het_tune_sends_compute_bound_jobs_to_fast_type() {
+        // One compute-bound language job + one input-bound image job:
+        // the language job should land on the V100 group.
+        let (mut cluster, jobs, sens) = setup(&[
+            (0, ModelKind::Gnmt, 8),
+            (1, ModelKind::ShuffleNetV2, 8),
+        ]);
+        let reqs = requests(&jobs, &sens);
+        let grants = HetTune.allocate(&mut cluster, &reqs);
+        assert_eq!(grants[&JobId(0)].gen, GpuGen::V100, "gnmt on fast type");
+        assert_eq!(grants[&JobId(1)].gen, GpuGen::P100);
+    }
+
+    #[test]
+    fn fairness_floor_holds_for_every_grant() {
+        let (mut cluster, jobs, sens) = setup(&[
+            (0, ModelKind::ResNet18, 2),
+            (1, ModelKind::AlexNet, 2),
+            (2, ModelKind::Gnmt, 2),
+            (3, ModelKind::M5, 2),
+            (4, ModelKind::DeepSpeech, 4),
+            (5, ModelKind::Lstm, 4),
+        ]);
+        let reqs = requests(&jobs, &sens);
+        let grants = HetTune.allocate(&mut cluster, &reqs);
+        for (j, s) in jobs.iter().zip(&sens) {
+            let Some(g) = grants.get(&j.id) else { continue };
+            let m = s.matrix(g.gen).unwrap();
+            let got = m.throughput_at(g.grant.demand.cpus, g.grant.demand.mem_gb);
+            assert!(
+                got + 1e-9 >= s.fair_throughput(),
+                "{:?}: {} < fair {}",
+                j.id,
+                got,
+                s.fair_throughput()
+            );
+        }
+    }
+
+    #[test]
+    fn het_opt_upper_bounds_het_tune() {
+        let (mut cluster, jobs, sens) = setup(&[
+            (0, ModelKind::ResNet18, 4),
+            (1, ModelKind::Gnmt, 4),
+            (2, ModelKind::AlexNet, 4),
+            (3, ModelKind::Lstm, 4),
+        ]);
+        let reqs = requests(&jobs, &sens);
+        let opt = HetOpt.solve_allocation(&cluster, &reqs).expect("ilp");
+        let grants = HetTune.allocate(&mut cluster, &reqs);
+        let tune_tput: f64 = jobs
+            .iter()
+            .zip(&sens)
+            .filter_map(|(j, s)| {
+                grants.get(&j.id).map(|g| {
+                    s.matrix(g.gen)
+                        .unwrap()
+                        .throughput_at(g.grant.demand.cpus, g.grant.demand.mem_gb)
+                })
+            })
+            .sum();
+        assert!(
+            opt.objective + 1e-6 >= tune_tput,
+            "OPT {} must dominate TUNE {}",
+            opt.objective,
+            tune_tput
+        );
+    }
+
+    #[test]
+    fn het_proportional_is_type_blind() {
+        let (mut cluster, jobs, sens) =
+            setup(&[(0, ModelKind::Gnmt, 8), (1, ModelKind::Gnmt, 8)]);
+        let reqs = requests(&jobs, &sens);
+        let grants = HetProportional.allocate(&mut cluster, &reqs);
+        // Two identical jobs, two identical-capacity types: both types
+        // get used regardless of sensitivity.
+        let gens: Vec<GpuGen> = grants.values().map(|g| g.gen).collect();
+        assert_eq!(grants.len(), 2);
+        assert_ne!(gens[0], gens[1]);
+    }
+
+    #[test]
+    fn by_name_covers_all() {
+        for n in ALL_HET_MECHANISMS {
+            assert!(het_by_name(n).is_some(), "{n}");
+        }
+        assert!(het_by_name("warp-drive").is_none());
+    }
+}

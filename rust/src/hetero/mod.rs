@@ -1,0 +1,54 @@
+//! Heterogeneous GPU clusters (paper Appendix A.2).
+//!
+//! The paper's main system targets homogeneous clusters (§2.3) but the
+//! appendix extends the formulation to clusters with several *types*
+//! (generations) of GPU machines: the sensitivity matrix gains a type
+//! dimension (`W_ij[c, m]` — progress of job `j` on machine type `i`),
+//! the LP selects one `(c, m, i)` configuration per job, and a job is
+//! never split across two types in a round (A.2.2).
+//!
+//! This module implements that extension end-to-end:
+//!
+//! - [`GpuGen`] — GPU generations with per-task compute scaling
+//!   ([`gen`]);
+//! - [`HeteroCluster`] — a set of homogeneous type-groups, each reusing
+//!   the [`crate::cluster::Cluster`] bookkeeping ([`cluster`]);
+//! - [`HeteroPerfModel`] — ground truth: the homogeneous pipeline model
+//!   with the GPU stage scaled by generation ([`perf`]);
+//! - [`HeteroProfiler`] — optimistic profiling along the extra type
+//!   dimension, producing one [`crate::profiler::SensitivityMatrix`] per
+//!   type at `|K|×` the profiling cost (A.2: "at an additional profiling
+//!   cost") ([`profiler`]);
+//! - [`HetTune`] / [`HetOpt`] / [`HetProportional`] — the scheduling
+//!   mechanisms: a TUNE-style heuristic that assigns each job a type and
+//!   reuses homogeneous Synergy-TUNE within the type group; the A.2.3
+//!   ILP upper bound; and a type-blind GPU-proportional baseline
+//!   ([`mechanism`]);
+//! - [`HeteroSimulator`] — a round-based trace simulator over the
+//!   heterogeneous cluster ([`sim`]).
+//!
+//! **Fairness oracle.** A.2.2 assumes the per-job fair throughput
+//! `W_j^Fair` is supplied by an oracle (a heterogeneity-aware fair
+//! scheduler such as Gavel [44]). We implement the conservative oracle:
+//! the GPU-proportional throughput on the *slowest* generation present.
+//! Because throughput is monotone in the GPU stage rate at fixed (c, m),
+//! a proportional allocation on any type dominates this floor, so every
+//! mechanism here satisfies the constraint structurally (tested in
+//! [`mechanism`]).
+
+pub mod cluster;
+pub mod gen;
+pub mod mechanism;
+pub mod perf;
+pub mod profiler;
+pub mod sim;
+
+pub use cluster::{HeteroCluster, TypeGroup, TypeSpec};
+pub use gen::GpuGen;
+pub use mechanism::{
+    het_by_name, HetGrant, HetJobRequest, HetMechanism, HetOpt,
+    HetOptAllocation, HetProportional, HetTune, ALL_HET_MECHANISMS,
+};
+pub use perf::HeteroPerfModel;
+pub use profiler::{HeteroProfiler, HeteroSensitivity};
+pub use sim::{HeteroSimConfig, HeteroSimulator};

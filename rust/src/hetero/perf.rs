@@ -1,0 +1,125 @@
+//! Ground-truth throughput on a heterogeneous cluster.
+//!
+//! Identical to the homogeneous pipeline model ([`crate::perf`]) except
+//! the GPU stage rate is scaled by the machine type's generation factor
+//! (`W_ij`, paper A.2.1). CPU pre-processing and storage fetch are
+//! host-side and do not change with GPU generation.
+
+use super::gen::GpuGen;
+use crate::cluster::ServerSpec;
+use crate::job::ModelKind;
+use crate::perf::{PerfModel, STORAGE_BW_MB_PER_GPU};
+
+/// Ground truth for one machine type (generation + server shape).
+#[derive(Debug, Clone, Copy)]
+pub struct HeteroPerfModel {
+    pub base: PerfModel,
+    pub gen: GpuGen,
+}
+
+impl HeteroPerfModel {
+    pub fn new(spec: ServerSpec, gen: GpuGen) -> HeteroPerfModel {
+        HeteroPerfModel { base: PerfModel::new(spec), gen }
+    }
+
+    /// Steady-state throughput of `model` on `gpus` GPUs of this
+    /// generation with `cpus` cores and `mem_gb` GB of cache:
+    /// `min(scale_i · g · gpu_tput, c · prep_rate, fetch_rate)`.
+    pub fn throughput(
+        &self,
+        model: ModelKind,
+        gpus: u32,
+        cpus: f64,
+        mem_gb: f64,
+    ) -> f64 {
+        let co = model.coeffs();
+        if mem_gb < co.min_mem_gb {
+            return 0.0;
+        }
+        let scale = self.gen.compute_scale(model.task());
+        let gpu_rate = gpus as f64 * co.gpu_tput * scale;
+        let cpu_rate = cpus * co.cpu_prep_rate;
+        let fetch_rate = {
+            let cache = crate::perf::cache::MinIoCache::new(
+                co.dataset_gb,
+                mem_gb - co.min_mem_gb,
+            );
+            let miss = cache.miss_fraction();
+            if miss <= 0.0 {
+                f64::INFINITY
+            } else {
+                STORAGE_BW_MB_PER_GPU * 1024.0 * gpus as f64
+                    / (miss * co.sample_kb)
+            }
+        };
+        gpu_rate.min(cpu_rate).min(fetch_rate)
+    }
+
+    /// Throughput at this type's GPU-proportional share (the per-type
+    /// fairness reference `W_ij[C_g, M_g]`).
+    pub fn proportional_throughput(&self, model: ModelKind, gpus: u32) -> f64 {
+        let spec = self.base.spec;
+        let c = spec.cpus as f64 / spec.gpus as f64 * gpus as f64;
+        let m = spec.mem_gb / spec.gpus as f64 * gpus as f64;
+        self.throughput(model, gpus, c, m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::ModelKind::*;
+
+    fn model_on(gen: GpuGen) -> HeteroPerfModel {
+        HeteroPerfModel::new(ServerSpec::default(), gen)
+    }
+
+    #[test]
+    fn v100_matches_homogeneous_ground_truth() {
+        let het = model_on(GpuGen::V100);
+        let hom = PerfModel::new(ServerSpec::default());
+        for m in crate::job::ALL_MODELS {
+            for (c, mem) in [(3.0, 62.5), (12.0, 500.0), (1.0, 30.0)] {
+                assert_eq!(
+                    het.throughput(m, 1, c, mem),
+                    hom.throughput(m, 1, c, mem),
+                    "{m:?} at ({c}, {mem})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn faster_generation_never_slower() {
+        for m in crate::job::ALL_MODELS {
+            for (c, mem) in [(3.0, 62.5), (24.0, 500.0)] {
+                let k80 = model_on(GpuGen::K80).throughput(m, 1, c, mem);
+                let v100 = model_on(GpuGen::V100).throughput(m, 1, c, mem);
+                let a100 = model_on(GpuGen::A100).throughput(m, 1, c, mem);
+                assert!(k80 <= v100 && v100 <= a100, "{m:?} ({c},{mem})");
+            }
+        }
+    }
+
+    #[test]
+    fn input_bound_jobs_gain_little_from_faster_gpus() {
+        // ShuffleNet at 3 CPUs is CPU-bound: generation barely matters.
+        let lo = model_on(GpuGen::K80).throughput(ShuffleNetV2, 1, 3.0, 500.0);
+        let hi = model_on(GpuGen::A100).throughput(ShuffleNetV2, 1, 3.0, 500.0);
+        assert!(
+            hi / lo < 1.05,
+            "input-bound job should not scale with GPU gen: {lo} -> {hi}"
+        );
+        // ...while a compute-bound language model scales with generation.
+        let lo = model_on(GpuGen::K80).throughput(Gnmt, 1, 3.0, 62.5);
+        let hi = model_on(GpuGen::A100).throughput(Gnmt, 1, 3.0, 62.5);
+        assert!(hi / lo > 5.0, "compute-bound job must scale: {lo} -> {hi}");
+    }
+
+    #[test]
+    fn below_working_set_is_zero_on_all_gens() {
+        for gen in super::super::gen::ALL_GENS {
+            assert_eq!(model_on(gen).throughput(Gnmt, 1, 3.0, 10.0), 0.0);
+        }
+    }
+}

@@ -1,0 +1,211 @@
+//! Optimistic profiling along the additional machine-type dimension
+//! (paper A.2: "profiling CPU and memory requirements along an
+//! additional dimension — GPU type, at an additional profiling cost").
+//!
+//! The adaptive CPU sweep + analytic memory fill of the homogeneous
+//! profiler ([`crate::profiler`]) runs once per generation, producing a
+//! 3-D sensitivity structure `W_ij[c, m]` — one
+//! [`SensitivityMatrix`] per type. The profiling cost therefore scales
+//! with `|K|`, exactly the trade-off the appendix calls out.
+
+use super::cluster::HeteroCluster;
+use super::gen::GpuGen;
+use super::perf::HeteroPerfModel;
+use crate::job::Job;
+use crate::profiler::{
+    adaptive_cpu_sweep, analytic_memory_fill, interp, mem_grid,
+    SensitivityMatrix, MINUTES_PER_POINT,
+};
+use crate::util::rng::Pcg64;
+
+/// Per-type sensitivity matrices for one job (`W_ij`, A.2.1).
+#[derive(Debug, Clone)]
+pub struct HeteroSensitivity {
+    /// `(generation, matrix)` pairs, one per machine type in the cluster.
+    pub per_type: Vec<(GpuGen, SensitivityMatrix)>,
+    /// Total empirical points across all types.
+    pub empirical_points: usize,
+    /// Estimated profiling wall-clock cost, minutes.
+    pub cost_minutes: f64,
+}
+
+impl HeteroSensitivity {
+    pub fn matrix(&self, gen: GpuGen) -> Option<&SensitivityMatrix> {
+        self.per_type.iter().find(|(g, _)| *g == gen).map(|(_, m)| m)
+    }
+
+    /// The conservative fairness oracle `W_j^Fair` (A.2.2): the
+    /// GPU-proportional throughput on the slowest generation profiled.
+    pub fn fair_throughput(&self) -> f64 {
+        let gens: Vec<GpuGen> =
+            self.per_type.iter().map(|(g, _)| *g).collect();
+        let slowest = GpuGen::slowest(&gens);
+        self.matrix(slowest)
+            .map(|m| m.proportional_throughput())
+            .unwrap_or(0.0)
+    }
+}
+
+/// The heterogeneous optimistic profiler.
+#[derive(Debug, Clone)]
+pub struct HeteroProfiler {
+    /// Ground truth per machine type.
+    pub worlds: Vec<HeteroPerfModel>,
+    pub noise_sd: f64,
+    pub threshold: f64,
+}
+
+impl HeteroProfiler {
+    /// Profiler for every type group in `cluster`.
+    pub fn for_cluster(cluster: &HeteroCluster) -> HeteroProfiler {
+        HeteroProfiler {
+            worlds: cluster
+                .groups
+                .iter()
+                .map(|g| HeteroPerfModel::new(g.cluster.spec, g.gen))
+                .collect(),
+            noise_sd: 0.03,
+            threshold: 0.10,
+        }
+    }
+
+    pub fn noiseless(cluster: &HeteroCluster) -> HeteroProfiler {
+        HeteroProfiler { noise_sd: 0.0, ..HeteroProfiler::for_cluster(cluster) }
+    }
+
+    /// Profile `job` on every machine type (A.2's `W_ij`).
+    pub fn profile(&self, job: &Job) -> HeteroSensitivity {
+        let mut per_type = Vec::with_capacity(self.worlds.len());
+        let mut points = 0usize;
+        for world in &self.worlds {
+            let spec = world.base.spec;
+            let span = ((job.gpus + spec.gpus - 1) / spec.gpus).max(1) as usize;
+            let max_cpus = spec.cpus as usize * span;
+            let max_mem = spec.mem_gb * span as f64;
+            // Distinct deterministic noise stream per (job, type).
+            let mut rng = Pcg64::new(
+                0x5EED_4E7E ^ job.rng_stream,
+                job.rng_stream ^ world.gen as u64,
+            );
+            let full_mem = max_mem;
+            let (pts, n) = adaptive_cpu_sweep(max_cpus, self.threshold, |c| {
+                let t = world.throughput(
+                    job.model,
+                    job.gpus,
+                    c as f64,
+                    full_mem,
+                );
+                if self.noise_sd == 0.0 {
+                    t
+                } else {
+                    (t * (1.0 + self.noise_sd * rng.normal())).max(0.0)
+                }
+            });
+            points += n;
+            let cpu_curve: Vec<f64> =
+                (0..=max_cpus).map(|c| interp(&pts, c as f64)).collect();
+            let mem_points = mem_grid(max_mem);
+            let cpu_points: Vec<f64> =
+                (1..=max_cpus).map(|c| c as f64).collect();
+            let tput = analytic_memory_fill(
+                job.model,
+                job.gpus,
+                &cpu_curve,
+                &mem_points,
+            );
+            let prop_c =
+                spec.cpus as f64 / spec.gpus as f64 * job.gpus as f64;
+            let prop_m = spec.mem_gb / spec.gpus as f64 * job.gpus as f64;
+            per_type.push((
+                world.gen,
+                SensitivityMatrix::new(
+                    job.model, job.gpus, cpu_points, mem_points, tput,
+                    prop_c, prop_m,
+                ),
+            ));
+        }
+        HeteroSensitivity {
+            per_type,
+            empirical_points: points,
+            cost_minutes: points as f64 * MINUTES_PER_POINT,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::{JobId, ModelKind};
+
+    fn cluster() -> HeteroCluster {
+        HeteroCluster::two_tier(2)
+    }
+
+    fn job(model: ModelKind) -> Job {
+        Job::new(JobId(3), model, 1, 0.0, 3600.0)
+    }
+
+    #[test]
+    fn profiles_every_type() {
+        let p = HeteroProfiler::noiseless(&cluster());
+        let s = p.profile(&job(ModelKind::ResNet18));
+        assert_eq!(s.per_type.len(), 2);
+        assert!(s.matrix(GpuGen::P100).is_some());
+        assert!(s.matrix(GpuGen::V100).is_some());
+        assert!(s.matrix(GpuGen::A100).is_none());
+    }
+
+    #[test]
+    fn per_type_matrices_reflect_generation_speed() {
+        let p = HeteroProfiler::noiseless(&cluster());
+        let s = p.profile(&job(ModelKind::Gnmt)); // compute-bound
+        let slow = s.matrix(GpuGen::P100).unwrap().max_throughput();
+        let fast = s.matrix(GpuGen::V100).unwrap().max_throughput();
+        assert!(
+            fast / slow > 1.5,
+            "compute-bound job must be faster on V100: {slow} vs {fast}"
+        );
+    }
+
+    #[test]
+    fn cost_scales_with_type_count() {
+        let two = HeteroProfiler::noiseless(&cluster());
+        let j = job(ModelKind::AlexNet);
+        let s2 = two.profile(&j);
+        let one = HeteroProfiler {
+            worlds: two.worlds[..1].to_vec(),
+            ..two.clone()
+        };
+        let s1 = one.profile(&j);
+        assert!(
+            s2.cost_minutes > s1.cost_minutes,
+            "profiling 2 types must cost more than 1"
+        );
+    }
+
+    #[test]
+    fn fair_oracle_is_slowest_type_proportional() {
+        let p = HeteroProfiler::noiseless(&cluster());
+        let s = p.profile(&job(ModelKind::Gnmt));
+        let fair = s.fair_throughput();
+        let p100 = s.matrix(GpuGen::P100).unwrap().proportional_throughput();
+        assert_eq!(fair, p100);
+        // Any type's proportional throughput dominates the oracle.
+        for (_, m) in &s.per_type {
+            assert!(m.proportional_throughput() + 1e-9 >= fair);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_job_stream() {
+        let p = HeteroProfiler::for_cluster(&cluster());
+        let j = job(ModelKind::MobileNetV2);
+        let a = p.profile(&j);
+        let b = p.profile(&j);
+        assert_eq!(a.empirical_points, b.empirical_points);
+        for ((ga, ma), (gb, mb)) in a.per_type.iter().zip(&b.per_type) {
+            assert_eq!(ga, gb);
+            assert_eq!(ma.tput, mb.tput);
+        }
+    }
+}

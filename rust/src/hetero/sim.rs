@@ -1,0 +1,328 @@
+//! Round-based trace simulator over a heterogeneous cluster.
+//!
+//! Mirrors the homogeneous engine ([`crate::sim`]): arrivals are
+//! profiled (on every machine type, A.2), a scheduling policy orders the
+//! queue, the runnable set is admitted against cluster-wide free GPUs,
+//! and a [`HetMechanism`] assigns each job a type + allocation. Progress
+//! accrues at the *granted* throughput on the *assigned type* — so a job
+//! bounced between generations across rounds advances at whatever each
+//! round's hardware actually delivers.
+//!
+//! Work accounting: a job's `total_samples` is derived from its trace
+//! duration under the fairness oracle's throughput (`W_j^Fair`,
+//! slowest-type proportional), making "duration" hardware-meaningful in
+//! the heterogeneous setting too.
+
+use super::cluster::HeteroCluster;
+use super::mechanism::{het_by_name, HetJobRequest, HetMechanism};
+use super::perf::HeteroPerfModel;
+use super::profiler::{HeteroProfiler, HeteroSensitivity};
+use crate::cluster::ServerSpec;
+use crate::hetero::TypeSpec;
+use crate::job::{Job, JobId, JobState};
+use crate::metrics::JctStats;
+use crate::policy::{by_name as policy_by_name, PolicyJobView};
+use std::collections::BTreeMap;
+
+/// Heterogeneous simulator configuration.
+pub struct HeteroSimConfig {
+    pub types: Vec<TypeSpec>,
+    pub round_s: f64,
+    pub policy: String,
+    pub mechanism: String,
+    pub profile_noise: f64,
+    pub max_sim_s: f64,
+}
+
+impl Default for HeteroSimConfig {
+    fn default() -> Self {
+        let spec = ServerSpec::default();
+        HeteroSimConfig {
+            types: vec![
+                TypeSpec {
+                    gen: super::GpuGen::P100,
+                    spec,
+                    machines: 8,
+                },
+                TypeSpec {
+                    gen: super::GpuGen::V100,
+                    spec,
+                    machines: 8,
+                },
+            ],
+            round_s: 300.0,
+            policy: "srtf".into(),
+            mechanism: "het-tune".into(),
+            profile_noise: 0.0,
+            max_sim_s: 400.0 * 24.0 * 3600.0,
+        }
+    }
+}
+
+/// Simulation output.
+#[derive(Debug)]
+pub struct HeteroSimResult {
+    /// (job id, jct seconds, profiled cost minutes).
+    pub jcts: Vec<(JobId, f64)>,
+    pub makespan_s: f64,
+    pub rounds: usize,
+    pub profiling_minutes: f64,
+}
+
+impl HeteroSimResult {
+    pub fn jct_stats(&self) -> JctStats {
+        let v: Vec<f64> = self.jcts.iter().map(|&(_, j)| j).collect();
+        JctStats::from_jcts(&v)
+    }
+}
+
+/// The heterogeneous simulator.
+pub struct HeteroSimulator {
+    cfg: HeteroSimConfig,
+}
+
+impl HeteroSimulator {
+    pub fn new(cfg: HeteroSimConfig) -> HeteroSimulator {
+        HeteroSimulator { cfg }
+    }
+
+    /// Run a trace to completion (or `max_sim_s`).
+    pub fn run(&self, mut jobs: Vec<Job>) -> HeteroSimResult {
+        let mut cluster = HeteroCluster::new(&self.cfg.types);
+        let worlds: BTreeMap<_, _> = cluster
+            .groups
+            .iter()
+            .map(|g| {
+                (g.gen, HeteroPerfModel::new(g.cluster.spec, g.gen))
+            })
+            .collect();
+        let profiler = {
+            let mut p = HeteroProfiler::for_cluster(&cluster);
+            p.noise_sd = self.cfg.profile_noise;
+            p
+        };
+        let policy = policy_by_name(&self.cfg.policy)
+            .unwrap_or_else(|| panic!("unknown policy {}", self.cfg.policy));
+        let mechanism: Box<dyn HetMechanism> =
+            het_by_name(&self.cfg.mechanism).unwrap_or_else(|| {
+                panic!("unknown het mechanism {}", self.cfg.mechanism)
+            });
+
+        jobs.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        let max_group_gpus = cluster
+            .groups
+            .iter()
+            .map(|g| g.cluster.total_gpus())
+            .max()
+            .unwrap_or(0);
+        // A job must fit inside one type group (A.2.2: no cross-type
+        // spans).
+        jobs.retain(|j| j.gpus <= max_group_gpus);
+        let n_total = jobs.len();
+
+        let mut sens: BTreeMap<JobId, HeteroSensitivity> = BTreeMap::new();
+        let mut active: BTreeMap<JobId, Job> = BTreeMap::new();
+        let mut jcts: Vec<(JobId, f64)> = Vec::new();
+        let mut profiling_minutes = 0.0;
+        let mut next_arrival = 0usize;
+        let mut now = 0.0f64;
+        let mut rounds = 0usize;
+
+        while jcts.len() < n_total && now < self.cfg.max_sim_s {
+            // Admit + profile arrivals.
+            while next_arrival < jobs.len()
+                && jobs[next_arrival].arrival_s <= now + 1e-9
+            {
+                let mut job = jobs[next_arrival].clone();
+                let s = profiler.profile(&job);
+                profiling_minutes += s.cost_minutes;
+                job.total_samples =
+                    job.duration_prop_s * s.fair_throughput();
+                sens.insert(job.id, s);
+                active.insert(job.id, job);
+                next_arrival += 1;
+            }
+
+            // Policy order over the active set.
+            let total_gpus = cluster.total_gpus();
+            let total_cpus = cluster.total_cpus();
+            let total_mem = cluster.total_mem_gb();
+            let mut views: Vec<PolicyJobView> = active
+                .values()
+                .map(|j| {
+                    let s = &sens[&j.id];
+                    let fair = s.fair_throughput();
+                    let remaining_est_s = if fair > 0.0 {
+                        j.remaining_samples() / fair
+                    } else {
+                        f64::INFINITY
+                    };
+                    PolicyJobView {
+                        id: j.id,
+                        arrival_s: j.arrival_s,
+                        attained_service_s: j.attained_service_s,
+                        remaining_est_s,
+                        duration_prop_s: j.duration_prop_s,
+                        gpus: j.gpus,
+                        dominant_share: j.gpus as f64 / total_gpus as f64,
+                        alignment: (j.gpus as f64 * total_gpus as f64)
+                            / (total_cpus * total_mem).max(1.0),
+                    }
+                })
+                .collect();
+            policy.order(&mut views, now);
+
+            // Admission: aggregate GPU demand fits the free pool.
+            let mut admitted_gpus = 0u32;
+            let mut runnable: Vec<JobId> = Vec::new();
+            for v in &views {
+                let gpus = active[&v.id].gpus;
+                if admitted_gpus + gpus <= total_gpus {
+                    admitted_gpus += gpus;
+                    runnable.push(v.id);
+                }
+            }
+
+            // Allocate.
+            cluster.evict_all();
+            let requests: Vec<HetJobRequest<'_>> = runnable
+                .iter()
+                .map(|id| HetJobRequest {
+                    id: *id,
+                    gpus: active[id].gpus,
+                    sens: &sens[id],
+                })
+                .collect();
+            let grants = mechanism.allocate(&mut cluster, &requests);
+            debug_assert!(cluster.check_consistency().is_ok());
+
+            // Deploy: progress rates from the assigned type's ground
+            // truth at the granted allocation.
+            for job in active.values_mut() {
+                match grants.get(&job.id) {
+                    Some(g) => {
+                        job.state = JobState::Running;
+                        job.progress_rate = worlds[&g.gen].throughput(
+                            job.model,
+                            job.gpus,
+                            g.grant.demand.cpus,
+                            g.grant.demand.mem_gb,
+                        );
+                    }
+                    None => {
+                        job.state = JobState::Queued;
+                        job.progress_rate = 0.0;
+                    }
+                }
+            }
+
+            // Advance to the earlier of round end / next arrival.
+            let round_end = now + self.cfg.round_s;
+            let horizon = if next_arrival < jobs.len() {
+                round_end.min(jobs[next_arrival].arrival_s.max(now + 1e-6))
+            } else {
+                round_end
+            };
+            let dt = horizon - now;
+            let mut done: Vec<JobId> = Vec::new();
+            for job in active.values_mut() {
+                if job.state != JobState::Running || job.progress_rate <= 0.0
+                {
+                    continue;
+                }
+                let need = job.remaining_samples() / job.progress_rate;
+                if need <= dt {
+                    job.finish_s = now + need;
+                    job.attained_service_s += need;
+                    job.progress_samples = job.total_samples;
+                    done.push(job.id);
+                } else {
+                    job.progress_samples += job.progress_rate * dt;
+                    job.attained_service_s += dt;
+                }
+            }
+            for id in done {
+                let j = active.remove(&id).unwrap();
+                sens.remove(&id);
+                jcts.push((id, j.finish_s - j.arrival_s));
+            }
+
+            rounds += 1;
+            if active.is_empty() && next_arrival < jobs.len() {
+                now = jobs[next_arrival].arrival_s;
+            } else {
+                now = horizon;
+            }
+        }
+
+        let makespan_s = now;
+        HeteroSimResult { jcts, makespan_s, rounds, profiling_minutes }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{generate, Split, TraceConfig};
+
+    fn trace(n: usize, seed: u64) -> Vec<Job> {
+        generate(&TraceConfig {
+            n_jobs: n,
+            split: Split::new(40, 40, 20),
+            multi_gpu: false,
+            jobs_per_hour: None,
+            seed,
+        })
+    }
+
+    fn run(mechanism: &str, jobs: Vec<Job>) -> HeteroSimResult {
+        let sim = HeteroSimulator::new(HeteroSimConfig {
+            mechanism: mechanism.into(),
+            policy: "fifo".into(),
+            ..Default::default()
+        });
+        sim.run(jobs)
+    }
+
+    #[test]
+    fn all_jobs_finish() {
+        let r = run("het-tune", trace(40, 7));
+        assert_eq!(r.jcts.len(), 40);
+        assert!(r.rounds > 0);
+        assert!(r.jcts.iter().all(|&(_, j)| j > 0.0 && j.is_finite()));
+    }
+
+    #[test]
+    fn het_tune_beats_type_blind_proportional() {
+        let jobs = trace(60, 21);
+        let tune = run("het-tune", jobs.clone());
+        let prop = run("het-proportional", jobs);
+        assert_eq!(tune.jcts.len(), prop.jcts.len());
+        let a = tune.jct_stats().avg_s;
+        let b = prop.jct_stats().avg_s;
+        assert!(
+            a < b,
+            "het-tune avg JCT {a} must beat type-blind {b}"
+        );
+    }
+
+    #[test]
+    fn profiling_cost_scales_with_types() {
+        let jobs = trace(10, 3);
+        let het = run("het-tune", jobs.clone());
+        // Homogeneous equivalent for the same jobs profiles one type.
+        let hom = crate::sim::Simulator::new(crate::sim::SimConfig {
+            n_servers: 16,
+            policy: "fifo".into(),
+            mechanism: "tune".into(),
+            ..Default::default()
+        })
+        .run(jobs);
+        assert!(
+            het.profiling_minutes > hom.profiling_minutes,
+            "het profiling {} must exceed homogeneous {}",
+            het.profiling_minutes,
+            hom.profiling_minutes
+        );
+    }
+}

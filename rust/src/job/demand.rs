@@ -1,0 +1,95 @@
+//! Job demand vectors (paper §3.2).
+//!
+//! A demand vector is (fixed GPU demand, best-case CPU, best-case memory);
+//! CPU and memory are *fungible* — the mechanism may grant anything between
+//! the GPU-proportional floor and this best-case value (or above it, if
+//! spare resources exist).
+
+/// Multi-dimensional resource demand for one job.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DemandVector {
+    /// Fixed GPU demand (user-specified, never altered — §3 "Note").
+    pub gpus: u32,
+    /// Best-case CPU cores (from the sensitivity matrix, §3.2).
+    pub cpus: f64,
+    /// Best-case memory in GB.
+    pub mem_gb: f64,
+}
+
+impl DemandVector {
+    pub fn new(gpus: u32, cpus: f64, mem_gb: f64) -> DemandVector {
+        assert!(gpus > 0, "job must demand at least one GPU");
+        assert!(cpus > 0.0 && mem_gb > 0.0);
+        DemandVector { gpus, cpus, mem_gb }
+    }
+
+    /// The GPU-proportional demand for the same GPU count.
+    pub fn proportional(gpus: u32, cpus_per_gpu: f64, mem_per_gpu: f64)
+        -> DemandVector
+    {
+        DemandVector::new(
+            gpus,
+            cpus_per_gpu * gpus as f64,
+            mem_per_gpu * gpus as f64,
+        )
+    }
+
+    /// Whether this demand exceeds the proportional demand in any fungible
+    /// dimension (used by Synergy-TUNE's downgrade step, §4.2).
+    pub fn exceeds(&self, proportional: &DemandVector) -> bool {
+        self.cpus > proportional.cpus + 1e-9
+            || self.mem_gb > proportional.mem_gb + 1e-9
+    }
+
+    /// Sort key for Synergy-TUNE: jobs sorted by GPU, then CPU, then memory
+    /// demand, descending (§4.2).
+    pub fn sort_key(&self) -> (u32, u64, u64) {
+        (self.gpus, (self.cpus * 1e6) as u64, (self.mem_gb * 1e6) as u64)
+    }
+
+    /// Element-wise minimum of the fungible dimensions (GPUs unchanged).
+    /// Used for downgrades: a job is never pushed *up* to proportional in
+    /// a dimension where it asked for less.
+    pub fn clamp_to(&self, cap: &DemandVector) -> DemandVector {
+        DemandVector::new(
+            self.gpus,
+            self.cpus.min(cap.cpus),
+            self.mem_gb.min(cap.mem_gb),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn proportional_demand() {
+        let d = DemandVector::proportional(4, 3.0, 62.5);
+        assert_eq!(d.gpus, 4);
+        assert_eq!(d.cpus, 12.0);
+        assert_eq!(d.mem_gb, 250.0);
+    }
+
+    #[test]
+    fn exceeds_detects_any_dimension() {
+        let prop = DemandVector::new(1, 3.0, 62.5);
+        assert!(DemandVector::new(1, 4.0, 62.5).exceeds(&prop));
+        assert!(DemandVector::new(1, 3.0, 100.0).exceeds(&prop));
+        assert!(!DemandVector::new(1, 3.0, 62.5).exceeds(&prop));
+        assert!(!DemandVector::new(1, 1.0, 20.0).exceeds(&prop));
+    }
+
+    #[test]
+    fn sort_key_orders_by_gpu_first() {
+        let big = DemandVector::new(8, 1.0, 1.0);
+        let small = DemandVector::new(1, 24.0, 500.0);
+        assert!(big.sort_key() > small.sort_key());
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_gpus_rejected() {
+        DemandVector::new(0, 1.0, 1.0);
+    }
+}

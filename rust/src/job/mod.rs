@@ -1,0 +1,131 @@
+//! Jobs, demand vectors, and the DNN model zoo (paper Table 4).
+
+mod demand;
+mod zoo;
+
+pub use demand::DemandVector;
+pub use zoo::{ModelKind, PerfCoeffs, Task, ALL_MODELS};
+
+/// Opaque job identifier (dense, assigned by the trace generator).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct JobId(pub u64);
+
+/// Lifecycle of a job inside the scheduler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Arrived, profiled, waiting in the scheduling queue.
+    Queued,
+    /// Holding resources in the current round.
+    Running,
+    /// All work complete.
+    Finished,
+}
+
+/// A DNN training job as the scheduler sees it.
+///
+/// GPU demand is fixed for the job's lifetime (user-provided, §2.3); CPU
+/// and memory are fungible and re-decided every round. `total_samples` is
+/// derived from the trace's duration under GPU-proportional allocation
+/// (paper §5.1: "the duration of each job for the baseline GPU-proportional
+/// allocation is sampled ...").
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub id: JobId,
+    pub model: ModelKind,
+    pub gpus: u32,
+    /// Arrival time in seconds from trace start.
+    pub arrival_s: f64,
+    /// Duration under GPU-proportional allocation, seconds.
+    pub duration_prop_s: f64,
+    /// Total training work, in samples (set once from duration_prop_s).
+    pub total_samples: f64,
+    /// Work completed so far, in samples.
+    pub progress_samples: f64,
+    pub state: JobState,
+    /// Completion time (valid when state == Finished).
+    pub finish_s: f64,
+    /// Total time spent actually running (for LAS).
+    pub attained_service_s: f64,
+    /// Throughput (samples/s) under the current round's grant; 0 when
+    /// queued. Set by the simulator/deployer at deploy time.
+    pub progress_rate: f64,
+    /// Per-job deterministic RNG stream id (profiling noise).
+    pub rng_stream: u64,
+}
+
+impl Job {
+    pub fn new(
+        id: JobId,
+        model: ModelKind,
+        gpus: u32,
+        arrival_s: f64,
+        duration_prop_s: f64,
+    ) -> Job {
+        Job {
+            id,
+            model,
+            gpus,
+            arrival_s,
+            duration_prop_s,
+            total_samples: 0.0, // filled by the simulator once specs are known
+            progress_samples: 0.0,
+            state: JobState::Queued,
+            finish_s: f64::NAN,
+            attained_service_s: 0.0,
+            progress_rate: 0.0,
+            rng_stream: id.0,
+        }
+    }
+
+    /// Remaining work in samples.
+    pub fn remaining_samples(&self) -> f64 {
+        (self.total_samples - self.progress_samples).max(0.0)
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.state == JobState::Finished
+    }
+
+    /// Job completion time (finish - arrival), seconds.
+    pub fn jct_s(&self) -> f64 {
+        assert!(self.is_finished(), "JCT of unfinished job {:?}", self.id);
+        self.finish_s - self.arrival_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_job_is_queued_with_zero_progress() {
+        let j = Job::new(JobId(3), ModelKind::ResNet18, 4, 10.0, 3600.0);
+        assert_eq!(j.state, JobState::Queued);
+        assert_eq!(j.progress_samples, 0.0);
+        assert_eq!(j.gpus, 4);
+        assert!(!j.is_finished());
+    }
+
+    #[test]
+    fn jct_is_finish_minus_arrival() {
+        let mut j = Job::new(JobId(1), ModelKind::Gnmt, 1, 100.0, 60.0);
+        j.state = JobState::Finished;
+        j.finish_s = 400.0;
+        assert_eq!(j.jct_s(), 300.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "JCT of unfinished")]
+    fn jct_of_running_job_panics() {
+        let j = Job::new(JobId(1), ModelKind::Gnmt, 1, 100.0, 60.0);
+        let _ = j.jct_s();
+    }
+
+    #[test]
+    fn remaining_clamps_at_zero() {
+        let mut j = Job::new(JobId(1), ModelKind::M5, 1, 0.0, 60.0);
+        j.total_samples = 100.0;
+        j.progress_samples = 150.0;
+        assert_eq!(j.remaining_samples(), 0.0);
+    }
+}

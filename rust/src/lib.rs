@@ -1,0 +1,59 @@
+//! # Synergy — resource-sensitive DNN cluster scheduling
+//!
+//! A from-scratch reproduction of *"Synergy: Resource Sensitive DNN
+//! Scheduling in Multi-Tenant Clusters"* (Mohan et al., 2021) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! - **Layer 3 (this crate)** — the scheduler itself: round-based
+//!   coordination, scheduling policies (FIFO/SRTF/LAS/FTF + DRF/Tetris
+//!   baselines), allocation mechanisms (GPU-proportional, Synergy-GREEDY,
+//!   Synergy-TUNE, Synergy-OPT via an in-crate LP/ILP solver), optimistic
+//!   profiling, an event-driven cluster simulator, and a deploy mode that
+//!   runs *real* training jobs through the PJRT runtime.
+//! - **Layer 2** — a JAX GPT-style transformer train step, AOT-lowered to
+//!   HLO text (`python/compile/model.py` + `aot.py`), executed from rust.
+//! - **Layer 1** — Pallas kernels (fused attention, layernorm) inside the
+//!   Layer-2 graph (`python/compile/kernels/`).
+//!
+//! Python never runs on the scheduling path: `make artifacts` lowers the
+//! compute once; the rust binary is self-contained afterwards.
+//!
+//! Module map (see DESIGN.md for the paper-section cross-reference):
+//!
+//! | module | role |
+//! |---|---|
+//! | [`cluster`] | servers, multi-dimensional resource bookkeeping |
+//! | [`job`] | jobs, demand vectors, the 10-model zoo (paper Table 4) |
+//! | [`perf`] | ground-truth throughput model (MinIO cache, CPU prep, GPU step) |
+//! | [`profiler`] | optimistic profiling (paper §3.1) |
+//! | [`policy`] | scheduling policies (paper §2.2, §5.7) |
+//! | [`mechanism`] | allocation mechanisms (paper §3.3, §4) |
+//! | [`lp`] | simplex + branch-and-bound ILP (Synergy-OPT substrate) |
+//! | [`sim`] | event-driven cluster simulator (paper §4.3) |
+//! | [`trace`] | Philly-derived workload generation (paper §5.1) |
+//! | [`metrics`] | JCT/makespan/utilization accounting |
+//! | [`coordinator`] | the round loop tying everything together |
+//! | [`runtime`] | PJRT client: load HLO-text artifacts, run train steps |
+//! | [`deploy`] | leader/worker cluster over TCP running real jobs |
+//! | [`config`] | typed experiment configuration |
+//! | [`util`] | substrates: PCG RNG, JSON, CLI, stats, property testing |
+
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod deploy;
+pub mod hetero;
+pub mod job;
+pub mod lp;
+pub mod mechanism;
+pub mod metrics;
+pub mod perf;
+pub mod policy;
+pub mod profiler;
+pub mod runtime;
+pub mod sim;
+pub mod trace;
+pub mod util;
+
+/// Crate version string reported by the CLI.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,164 @@
+//! Branch-and-bound integer programming on top of the simplex solver.
+//!
+//! Synergy-OPT's first program is solved as an ILP with boolean selection
+//! variables (paper §4.1: "In our experiments, we solve this as a Integer
+//! Linear Program"). The LP relaxation of its multiple-choice-knapsack
+//! structure has at most two fractional jobs (one per capacity
+//! constraint), so branch-and-bound closes the gap in a handful of nodes.
+
+use super::simplex::{solve, Lp, LpError, LpSolution, Op};
+
+/// Options controlling the search.
+#[derive(Debug, Clone, Copy)]
+pub struct IlpOptions {
+    /// Hard cap on explored nodes (safety valve; the Synergy problems
+    /// need far fewer).
+    pub max_nodes: usize,
+    /// Integrality tolerance.
+    pub tol: f64,
+}
+
+impl Default for IlpOptions {
+    fn default() -> Self {
+        IlpOptions { max_nodes: 10_000, tol: 1e-6 }
+    }
+}
+
+/// Solve `lp` with the variables in `int_vars` constrained to integers
+/// (binary in the Synergy usage — bounds come from the LP's own
+/// constraints). Returns the best integral solution found.
+pub fn solve_ilp(
+    lp: &Lp,
+    int_vars: &[usize],
+    opts: IlpOptions,
+) -> Result<LpSolution, LpError> {
+    let root = solve(lp)?;
+    let mut best: Option<LpSolution> = None;
+    let mut nodes = 0usize;
+    // Stack of (lp, relaxation solution).
+    let mut stack: Vec<(Lp, LpSolution)> = vec![(lp.clone(), root)];
+
+    while let Some((node_lp, relax)) = stack.pop() {
+        nodes += 1;
+        if nodes > opts.max_nodes {
+            break;
+        }
+        // Bound: prune if the relaxation can't beat the incumbent.
+        if let Some(ref b) = best {
+            if relax.objective <= b.objective + opts.tol {
+                continue;
+            }
+        }
+        // Find the most fractional integer variable.
+        let mut branch_var = None;
+        let mut best_frac = opts.tol;
+        for &v in int_vars {
+            let frac = (relax.x[v] - relax.x[v].round()).abs();
+            if frac > best_frac {
+                best_frac = frac;
+                branch_var = Some(v);
+            }
+        }
+        match branch_var {
+            None => {
+                // Integral: candidate incumbent.
+                if best
+                    .as_ref()
+                    .map(|b| relax.objective > b.objective + opts.tol)
+                    .unwrap_or(true)
+                {
+                    best = Some(relax);
+                }
+            }
+            Some(v) => {
+                let floor = relax.x[v].floor();
+                // Branch x_v <= floor and x_v >= floor + 1; solve children
+                // immediately so the stack stores bounded relaxations.
+                for (op, rhs) in
+                    [(Op::Le, floor), (Op::Ge, floor + 1.0)]
+                {
+                    let mut child = node_lp.clone();
+                    child.add(vec![(v, 1.0)], op, rhs);
+                    if let Ok(sol) = solve(&child) {
+                        let keep = best
+                            .as_ref()
+                            .map(|b| sol.objective > b.objective + opts.tol)
+                            .unwrap_or(true);
+                        if keep {
+                            stack.push((child, sol));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    best.ok_or(LpError::Infeasible)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn knapsack_integral_optimum() {
+        // max 3a + 2b + 2c s.t. 2a + b + c <= 2, binary.
+        // best: b + c = 2 -> value 4 (beats a alone = 3).
+        let mut lp = Lp::new(3);
+        lp.set_objective(0, 3.0);
+        lp.set_objective(1, 2.0);
+        lp.set_objective(2, 2.0);
+        lp.add(vec![(0, 2.0), (1, 1.0), (2, 1.0)], Op::Le, 2.0);
+        for v in 0..3 {
+            lp.add(vec![(v, 1.0)], Op::Le, 1.0);
+        }
+        let s = solve_ilp(&lp, &[0, 1, 2], IlpOptions::default()).unwrap();
+        assert!((s.objective - 4.0).abs() < 1e-6, "obj={}", s.objective);
+        assert!(s.x[0].abs() < 1e-6);
+    }
+
+    #[test]
+    fn multiple_choice_structure() {
+        // The Synergy-OPT shape from simplex tests; integral answer is 4.
+        let mut lp = Lp::new(4);
+        for (i, v) in [1.0, 3.0, 1.0, 2.0].iter().enumerate() {
+            lp.set_objective(i, *v);
+        }
+        lp.add(vec![(0, 1.0), (1, 3.0), (2, 1.0), (3, 3.0)], Op::Le, 4.0);
+        lp.add(vec![(0, 1.0), (1, 1.0)], Op::Eq, 1.0);
+        lp.add(vec![(2, 1.0), (3, 1.0)], Op::Eq, 1.0);
+        let s = solve_ilp(&lp, &[0, 1, 2, 3], IlpOptions::default()).unwrap();
+        assert!((s.objective - 4.0).abs() < 1e-6, "obj={}", s.objective);
+        for &v in &s.x {
+            assert!((v - v.round()).abs() < 1e-6, "fractional {v}");
+        }
+    }
+
+    #[test]
+    fn already_integral_relaxation_short_circuits() {
+        let mut lp = Lp::new(1);
+        lp.set_objective(0, 1.0);
+        lp.add(vec![(0, 1.0)], Op::Le, 3.0);
+        let s = solve_ilp(&lp, &[0], IlpOptions::default()).unwrap();
+        assert!((s.objective - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn infeasible_ilp() {
+        let mut lp = Lp::new(1);
+        lp.set_objective(0, 1.0);
+        lp.add(vec![(0, 1.0)], Op::Ge, 2.0);
+        lp.add(vec![(0, 1.0)], Op::Le, 1.0);
+        assert!(solve_ilp(&lp, &[0], IlpOptions::default()).is_err());
+    }
+
+    #[test]
+    fn fractional_relaxation_gets_rounded_down_correctly() {
+        // max x s.t. 2x <= 3, x integer -> x = 1.
+        let mut lp = Lp::new(1);
+        lp.set_objective(0, 1.0);
+        lp.add(vec![(0, 2.0)], Op::Le, 3.0);
+        let s = solve_ilp(&lp, &[0], IlpOptions::default()).unwrap();
+        assert!((s.x[0] - 1.0).abs() < 1e-6);
+    }
+}

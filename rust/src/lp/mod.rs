@@ -1,0 +1,18 @@
+//! Linear programming substrate for Synergy-OPT (paper §4.1, Appendix A).
+//!
+//! The paper solves its upper-bound formulation with CVXPY; no external
+//! solver exists in this offline environment, so this module implements:
+//!
+//! - [`simplex`] — a dense two-phase tableau simplex with Bland's rule
+//!   (max c·x subject to Ax {≤,=,≥} b, x ≥ 0);
+//! - [`ilp`] — branch-and-bound on top of it for integer variables
+//!   (Synergy-OPT's `y_{c,m,j}` selection variables are boolean).
+//!
+//! The Synergy-OPT LP builders themselves live in
+//! [`crate::mechanism::opt`]; this module is problem-agnostic.
+
+pub mod ilp;
+pub mod simplex;
+
+pub use ilp::{solve_ilp, IlpOptions};
+pub use simplex::{solve, Constraint, Lp, LpError, LpSolution, Op};

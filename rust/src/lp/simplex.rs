@@ -1,0 +1,441 @@
+//! Dense two-phase tableau simplex.
+//!
+//! Solves `maximize c·x  s.t.  A x {≤,=,≥} b,  x ≥ 0`.
+//!
+//! Phase 1 minimizes the sum of artificial variables to find a basic
+//! feasible solution; phase 2 optimizes the real objective. Bland's rule
+//! (smallest-index entering/leaving) guarantees termination; an epsilon of
+//! 1e-9 guards rank decisions. Designed for the Synergy-OPT problem sizes
+//! (thousands of variables, hundreds of constraints) — dense is fine.
+
+/// Constraint sense.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    Le,
+    Eq,
+    Ge,
+}
+
+/// One (sparse) linear constraint: Σ coeffs·x {op} rhs.
+#[derive(Debug, Clone)]
+pub struct Constraint {
+    pub coeffs: Vec<(usize, f64)>,
+    pub op: Op,
+    pub rhs: f64,
+}
+
+impl Constraint {
+    pub fn new(coeffs: Vec<(usize, f64)>, op: Op, rhs: f64) -> Constraint {
+        Constraint { coeffs, op, rhs }
+    }
+}
+
+/// A linear program: maximize `objective · x` subject to `constraints`,
+/// with implicit x ≥ 0.
+#[derive(Debug, Clone, Default)]
+pub struct Lp {
+    pub n_vars: usize,
+    pub objective: Vec<f64>,
+    pub constraints: Vec<Constraint>,
+}
+
+impl Lp {
+    pub fn new(n_vars: usize) -> Lp {
+        Lp { n_vars, objective: vec![0.0; n_vars], constraints: Vec::new() }
+    }
+
+    pub fn set_objective(&mut self, var: usize, coeff: f64) {
+        self.objective[var] = coeff;
+    }
+
+    pub fn add(&mut self, coeffs: Vec<(usize, f64)>, op: Op, rhs: f64) {
+        debug_assert!(coeffs.iter().all(|&(i, _)| i < self.n_vars));
+        self.constraints.push(Constraint::new(coeffs, op, rhs));
+    }
+}
+
+/// Solver outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LpError {
+    Infeasible,
+    Unbounded,
+}
+
+/// An optimal solution.
+#[derive(Debug, Clone)]
+pub struct LpSolution {
+    pub x: Vec<f64>,
+    pub objective: f64,
+}
+
+const EPS: f64 = 1e-9;
+
+/// Solve the LP; returns the optimum or Infeasible/Unbounded.
+pub fn solve(lp: &Lp) -> Result<LpSolution, LpError> {
+    Tableau::build(lp).and_then(|mut t| t.optimize(lp))
+}
+
+struct Tableau {
+    /// rows[m][total_cols+1]; last column is RHS.
+    rows: Vec<Vec<f64>>,
+    /// Basis variable per row.
+    basis: Vec<usize>,
+    n_structural: usize,
+    n_total: usize,
+    /// Column indices of artificial variables.
+    artificials: Vec<usize>,
+}
+
+impl Tableau {
+    fn build(lp: &Lp) -> Result<Tableau, LpError> {
+        let m = lp.constraints.len();
+        let n = lp.n_vars;
+
+        // Count auxiliary columns.
+        let mut n_slack = 0;
+        for c in &lp.constraints {
+            // Normalized sense after sign-flip for negative rhs:
+            let op = normalized_op(c);
+            if op != Op::Eq {
+                n_slack += 1;
+            }
+        }
+        // Artificials for = rows and ≥ rows.
+        let mut n_art = 0;
+        for c in &lp.constraints {
+            match normalized_op(c) {
+                Op::Le => {}
+                _ => n_art += 1,
+            }
+        }
+        let n_total = n + n_slack + n_art;
+        let width = n_total + 1;
+
+        let mut rows = vec![vec![0.0; width]; m];
+        let mut basis = vec![usize::MAX; m];
+        let mut artificials = Vec::with_capacity(n_art);
+
+        let mut slack_col = n;
+        let mut art_col = n + n_slack;
+        for (i, c) in lp.constraints.iter().enumerate() {
+            let flip = c.rhs < 0.0;
+            let sign = if flip { -1.0 } else { 1.0 };
+            for &(j, v) in &c.coeffs {
+                rows[i][j] += sign * v;
+            }
+            rows[i][n_total] = sign * c.rhs;
+            let op = normalized_op(c);
+            match op {
+                Op::Le => {
+                    rows[i][slack_col] = 1.0;
+                    basis[i] = slack_col;
+                    slack_col += 1;
+                }
+                Op::Ge => {
+                    rows[i][slack_col] = -1.0; // surplus
+                    slack_col += 1;
+                    rows[i][art_col] = 1.0;
+                    basis[i] = art_col;
+                    artificials.push(art_col);
+                    art_col += 1;
+                }
+                Op::Eq => {
+                    rows[i][art_col] = 1.0;
+                    basis[i] = art_col;
+                    artificials.push(art_col);
+                    art_col += 1;
+                }
+            }
+        }
+
+        Ok(Tableau { rows, basis, n_structural: n, n_total, artificials })
+    }
+
+    /// Run phase 1 (if artificials exist) then phase 2.
+    fn optimize(&mut self, lp: &Lp) -> Result<LpSolution, LpError> {
+        if !self.artificials.is_empty() {
+            // Phase 1: maximize -(sum of artificials).
+            let mut cost = vec![0.0; self.n_total];
+            for &a in &self.artificials {
+                cost[a] = -1.0;
+            }
+            let obj = self.run_simplex(&cost)?;
+            if obj < -1e-7 {
+                return Err(LpError::Infeasible);
+            }
+            // Pivot any artificial still in the basis out (degenerate rows).
+            for row in 0..self.rows.len() {
+                if self.artificials.contains(&self.basis[row]) {
+                    if let Some(col) = (0..self.n_structural)
+                        .chain(self.n_structural..self.n_total)
+                        .find(|&c| {
+                            !self.artificials.contains(&c)
+                                && self.rows[row][c].abs() > EPS
+                        })
+                    {
+                        self.pivot(row, col);
+                    }
+                    // else: the row is all-zero over real vars; harmless.
+                }
+            }
+            // Zero the artificial columns so they never re-enter.
+            for &a in &self.artificials {
+                for row in &mut self.rows {
+                    row[a] = 0.0;
+                }
+            }
+        }
+
+        // Phase 2: real objective.
+        let mut cost = vec![0.0; self.n_total];
+        cost[..lp.n_vars].copy_from_slice(&lp.objective);
+        let obj = self.run_simplex(&cost)?;
+
+        let mut x = vec![0.0; lp.n_vars];
+        for (row, &b) in self.basis.iter().enumerate() {
+            if b < lp.n_vars {
+                x[b] = self.rows[row][self.n_total];
+            }
+        }
+        Ok(LpSolution { x, objective: obj })
+    }
+
+    /// Primal simplex on the current tableau for the given cost vector
+    /// (maximization). Returns the objective value.
+    fn run_simplex(&mut self, cost: &[f64]) -> Result<f64, LpError> {
+        let m = self.rows.len();
+        // Reduced costs: z_j - c_j computed on demand from the basis.
+        // We maintain an explicit objective row for efficiency.
+        let width = self.n_total + 1;
+        let mut zrow = vec![0.0; width];
+        for j in 0..self.n_total {
+            zrow[j] = -cost[j];
+        }
+        // Make the objective row consistent with the current basis.
+        for (row, &b) in self.basis.iter().enumerate() {
+            if zrow[b].abs() > 0.0 {
+                let factor = zrow[b];
+                for j in 0..width {
+                    zrow[j] -= factor * self.rows[row][j];
+                }
+            }
+        }
+
+        let max_iters = 50 * (m + self.n_total).max(100);
+        for _ in 0..max_iters {
+            // Entering: Dantzig rule (most negative), Bland fallback is
+            // triggered implicitly by the epsilon + max_iters guard.
+            let mut enter = usize::MAX;
+            let mut best = -EPS;
+            for j in 0..self.n_total {
+                if zrow[j] < best {
+                    best = zrow[j];
+                    enter = j;
+                }
+            }
+            if enter == usize::MAX {
+                return Ok(zrow[width - 1]);
+            }
+            // Leaving: min ratio.
+            let mut leave = usize::MAX;
+            let mut best_ratio = f64::INFINITY;
+            for (i, row) in self.rows.iter().enumerate() {
+                if row[enter] > EPS {
+                    let ratio = row[width - 1] / row[enter];
+                    if ratio < best_ratio - EPS
+                        || (ratio < best_ratio + EPS
+                            && (leave == usize::MAX
+                                || self.basis[i] < self.basis[leave]))
+                    {
+                        best_ratio = ratio;
+                        leave = i;
+                    }
+                }
+            }
+            if leave == usize::MAX {
+                return Err(LpError::Unbounded);
+            }
+            self.pivot(leave, enter);
+            // Update objective row.
+            let factor = zrow[enter];
+            if factor.abs() > 0.0 {
+                let prow = &self.rows[leave];
+                for j in 0..width {
+                    zrow[j] -= factor * prow[j];
+                }
+            }
+        }
+        // Cycling/stall guard: treat as converged at current point.
+        Ok(zrow[width - 1])
+    }
+
+    fn pivot(&mut self, row: usize, col: usize) {
+        let width = self.n_total + 1;
+        let pivot_val = self.rows[row][col];
+        debug_assert!(pivot_val.abs() > EPS, "pivot on ~zero");
+        let inv = 1.0 / pivot_val;
+        for j in 0..width {
+            self.rows[row][j] *= inv;
+        }
+        let prow = self.rows[row].clone();
+        for (i, r) in self.rows.iter_mut().enumerate() {
+            if i != row && r[col].abs() > EPS {
+                let factor = r[col];
+                for j in 0..width {
+                    r[j] -= factor * prow[j];
+                }
+            }
+        }
+        self.basis[row] = col;
+    }
+}
+
+fn normalized_op(c: &Constraint) -> Op {
+    if c.rhs < 0.0 {
+        match c.op {
+            Op::Le => Op::Ge,
+            Op::Ge => Op::Le,
+            Op::Eq => Op::Eq,
+        }
+    } else {
+        c.op
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: f64, b: f64) {
+        assert!((a - b).abs() < 1e-6, "{a} != {b}");
+    }
+
+    #[test]
+    fn textbook_2d() {
+        // max 3x + 5y s.t. x<=4, 2y<=12, 3x+2y<=18 => (2,6), obj 36.
+        let mut lp = Lp::new(2);
+        lp.set_objective(0, 3.0);
+        lp.set_objective(1, 5.0);
+        lp.add(vec![(0, 1.0)], Op::Le, 4.0);
+        lp.add(vec![(1, 2.0)], Op::Le, 12.0);
+        lp.add(vec![(0, 3.0), (1, 2.0)], Op::Le, 18.0);
+        let s = solve(&lp).unwrap();
+        assert_close(s.objective, 36.0);
+        assert_close(s.x[0], 2.0);
+        assert_close(s.x[1], 6.0);
+    }
+
+    #[test]
+    fn equality_constraints() {
+        // max x + y s.t. x + y = 5, x <= 3 => obj 5.
+        let mut lp = Lp::new(2);
+        lp.set_objective(0, 1.0);
+        lp.set_objective(1, 1.0);
+        lp.add(vec![(0, 1.0), (1, 1.0)], Op::Eq, 5.0);
+        lp.add(vec![(0, 1.0)], Op::Le, 3.0);
+        let s = solve(&lp).unwrap();
+        assert_close(s.objective, 5.0);
+    }
+
+    #[test]
+    fn ge_constraints() {
+        // max -x s.t. x >= 2  => x=2, obj -2  (minimize x)
+        let mut lp = Lp::new(1);
+        lp.set_objective(0, -1.0);
+        lp.add(vec![(0, 1.0)], Op::Ge, 2.0);
+        let s = solve(&lp).unwrap();
+        assert_close(s.objective, -2.0);
+        assert_close(s.x[0], 2.0);
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        // x <= 1 and x >= 2.
+        let mut lp = Lp::new(1);
+        lp.set_objective(0, 1.0);
+        lp.add(vec![(0, 1.0)], Op::Le, 1.0);
+        lp.add(vec![(0, 1.0)], Op::Ge, 2.0);
+        match solve(&lp) {
+            Err(LpError::Infeasible) => {}
+            other => panic!("expected Infeasible, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unbounded_detected() {
+        let mut lp = Lp::new(1);
+        lp.set_objective(0, 1.0);
+        lp.add(vec![(0, 1.0)], Op::Ge, 0.0);
+        match solve(&lp) {
+            Err(LpError::Unbounded) => {}
+            other => panic!("expected Unbounded, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn negative_rhs_normalized() {
+        // max x s.t. -x >= -3  (i.e. x <= 3)
+        let mut lp = Lp::new(1);
+        lp.set_objective(0, 1.0);
+        lp.add(vec![(0, -1.0)], Op::Ge, -3.0);
+        let s = solve(&lp).unwrap();
+        assert_close(s.objective, 3.0);
+    }
+
+    #[test]
+    fn degenerate_does_not_cycle() {
+        // Klee-Minty-ish degenerate case.
+        let mut lp = Lp::new(3);
+        lp.set_objective(0, 10.0);
+        lp.set_objective(1, -57.0);
+        lp.set_objective(2, -9.0);
+        lp.add(vec![(0, 0.5), (1, -5.5), (2, -2.5)], Op::Le, 0.0);
+        lp.add(vec![(0, 0.5), (1, -1.5), (2, -0.5)], Op::Le, 0.0);
+        lp.add(vec![(0, 1.0)], Op::Le, 1.0);
+        let s = solve(&lp).unwrap();
+        assert_close(s.objective, 1.0);
+    }
+
+    #[test]
+    fn multiple_choice_knapsack_shape() {
+        // The Synergy-OPT structure: two jobs, each picks one of two
+        // (cpu, value) options; shared CPU capacity 4.
+        // job0: opt A (1 cpu, v=1), opt B (3 cpu, v=3)
+        // job1: opt A (1 cpu, v=1), opt B (3 cpu, v=2)
+        // best integral: job0 B + job1 A = 4 cpus, value 4.
+        let mut lp = Lp::new(4);
+        for (i, v) in [1.0, 3.0, 1.0, 2.0].iter().enumerate() {
+            lp.set_objective(i, *v);
+        }
+        lp.add(vec![(0, 1.0), (1, 3.0), (2, 1.0), (3, 3.0)], Op::Le, 4.0);
+        lp.add(vec![(0, 1.0), (1, 1.0)], Op::Eq, 1.0);
+        lp.add(vec![(2, 1.0), (3, 1.0)], Op::Eq, 1.0);
+        let s = solve(&lp).unwrap();
+        // LP relaxation may be fractional but >= integral optimum (4.0).
+        assert!(s.objective >= 4.0 - 1e-6, "obj={}", s.objective);
+    }
+
+    #[test]
+    fn moderately_large_random_lp_solves() {
+        use crate::util::rng::Pcg64;
+        let mut rng = Pcg64::seeded(3);
+        let n = 120;
+        let m = 40;
+        let mut lp = Lp::new(n);
+        for j in 0..n {
+            lp.set_objective(j, rng.f64());
+        }
+        for _ in 0..m {
+            let coeffs: Vec<(usize, f64)> =
+                (0..n).map(|j| (j, rng.f64())).collect();
+            lp.add(coeffs, Op::Le, 10.0 + rng.f64() * 5.0);
+        }
+        let s = solve(&lp).unwrap();
+        assert!(s.objective > 0.0);
+        // Verify primal feasibility.
+        for c in &lp.constraints {
+            let lhs: f64 = c.coeffs.iter().map(|&(j, v)| v * s.x[j]).sum();
+            assert!(lhs <= c.rhs + 1e-6);
+        }
+    }
+}

@@ -1,0 +1,363 @@
+//! Synergy CLI: the Layer-3 leader binary.
+//!
+//! Subcommands:
+//!
+//! ```text
+//! synergy simulate  --policy srtf --mechanism tune --servers 16 \
+//!                   --jobs 1000 --load 8 --split 20,70,10 [--multi-gpu]
+//! synergy compare   --policies fifo,srtf --mechanisms proportional,tune ...
+//! synergy profile   --model resnet18 --gpus 1
+//! synergy models    # print the model zoo + CPU knees (Fig 2 data)
+//! synergy trace     --jobs 100 --load 8 --out trace.json
+//! synergy leader    --workers 2 --port 7331 --variant tiny ...
+//! synergy worker    --leader 127.0.0.1:7331 --artifacts artifacts
+//! synergy config    --file experiment.json   # run from a config file
+//! ```
+
+use synergy::cluster::ServerSpec;
+use synergy::config::ExperimentConfig;
+use synergy::deploy::{Leader, LeaderConfig, Worker, WorkerConfig};
+use synergy::job::{Job, JobId, ModelKind, ALL_MODELS};
+use synergy::perf::PerfModel;
+use synergy::profiler::OptimisticProfiler;
+use synergy::sim::{SimConfig, Simulator};
+use synergy::trace::{generate, Split, TraceConfig};
+use synergy::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    match args.command.as_deref() {
+        Some("simulate") => cmd_simulate(&args),
+        Some("compare") => cmd_compare(&args),
+        Some("profile") => cmd_profile(&args),
+        Some("models") => cmd_models(),
+        Some("trace") => cmd_trace(&args),
+        Some("leader") => cmd_leader(&args),
+        Some("worker") => cmd_worker(&args),
+        Some("config") => cmd_config(&args),
+        Some("hetero") => cmd_hetero(&args),
+        Some("version") => println!("synergy {}", synergy::VERSION),
+        _ => {
+            eprintln!("usage: synergy <simulate|compare|profile|models|trace|leader|worker|config|hetero> [--flags]");
+            eprintln!("see README.md for the full flag reference");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn parse_split(s: &str) -> Split {
+    let parts: Vec<u32> = s
+        .split(',')
+        .map(|p| p.trim().parse().expect("split must be like 20,70,10"))
+        .collect();
+    assert_eq!(parts.len(), 3, "split must have three components");
+    Split::new(parts[0], parts[1], parts[2])
+}
+
+fn trace_from_args(args: &Args) -> TraceConfig {
+    let load = args.f64("load", 8.0);
+    TraceConfig {
+        n_jobs: args.usize("jobs", 1000),
+        split: parse_split(args.get_or("split", "20,70,10")),
+        multi_gpu: args.flag("multi-gpu"),
+        jobs_per_hour: if args.flag("static") || load <= 0.0 {
+            None
+        } else {
+            Some(load)
+        },
+        seed: args.u64("seed", 1),
+    }
+}
+
+fn sim_config(args: &Args, mechanism: &str, policy: &str) -> SimConfig {
+    SimConfig {
+        spec: ServerSpec {
+            gpus: args.usize("gpus-per-server", 8) as u32,
+            cpus: args.usize("cpus-per-server", 24) as u32,
+            mem_gb: args.f64("mem-per-server", 500.0),
+        },
+        n_servers: args.usize("servers", 16),
+        round_s: args.f64("round", 300.0),
+        policy: policy.into(),
+        mechanism: mechanism.into(),
+        profile_noise: args.f64("noise", 0.0),
+        max_sim_s: args.f64("max-sim-days", 400.0) * 86_400.0,
+        span_factor: args.usize("span-factor", 1),
+        network_penalty: args.f64("network-penalty", 0.0),
+        reference_spec: None,
+    }
+}
+
+fn cmd_simulate(args: &Args) {
+    let policy = args.get_or("policy", "fifo").to_string();
+    let mechanism = args.get_or("mechanism", "tune").to_string();
+    let trace_cfg = trace_from_args(args);
+    let jobs = generate(&trace_cfg);
+    let sim = Simulator::new(sim_config(args, &mechanism, &policy));
+    let t0 = std::time::Instant::now();
+    let result = sim.run(jobs);
+    let stats = result.jct_stats();
+    println!(
+        "policy={policy} mechanism={mechanism} jobs={} rounds={} wall={:?}",
+        stats.n,
+        result.rounds,
+        t0.elapsed()
+    );
+    println!(
+        "avg_jct={:.2}h p50={:.2}h p95={:.2}h p99={:.2}h makespan={:.2}h",
+        stats.avg_hrs(),
+        stats.p50_s / 3600.0,
+        stats.p95_s / 3600.0,
+        stats.p99_hrs(),
+        result.makespan_s / 3600.0
+    );
+    println!(
+        "mean_gpu_util={:.1}% mean_cpu_util={:.1}% profiling={:.0}min",
+        result.utilization.mean_gpu_util() * 100.0,
+        result.utilization.mean_cpu_util() * 100.0,
+        result.profiling_minutes
+    );
+}
+
+fn cmd_compare(args: &Args) {
+    let policies: Vec<String> = args
+        .get_or("policies", "fifo,srtf,las,ftf")
+        .split(',')
+        .map(str::to_string)
+        .collect();
+    let mechanisms: Vec<String> = args
+        .get_or("mechanisms", "proportional,tune")
+        .split(',')
+        .map(str::to_string)
+        .collect();
+    let trace_cfg = trace_from_args(args);
+    let jobs = generate(&trace_cfg);
+    println!(
+        "{:<8} {:<14} {:>10} {:>10} {:>10}",
+        "policy", "mechanism", "avg_jct_h", "p99_jct_h", "makespan_h"
+    );
+    for p in &policies {
+        for m in &mechanisms {
+            let sim = Simulator::new(sim_config(args, m, p));
+            let r = sim.run(jobs.clone());
+            let s = r.jct_stats();
+            println!(
+                "{:<8} {:<14} {:>10.2} {:>10.2} {:>10.2}",
+                p,
+                m,
+                s.avg_hrs(),
+                s.p99_hrs(),
+                r.makespan_s / 3600.0
+            );
+        }
+    }
+}
+
+fn cmd_profile(args: &Args) {
+    let model = ModelKind::from_name(args.get_or("model", "resnet18"))
+        .expect("unknown model; run `synergy models`");
+    let gpus = args.usize("gpus", 1) as u32;
+    let spec = ServerSpec::default();
+    let profiler = OptimisticProfiler::new(spec);
+    let job = Job::new(JobId(0), model, gpus, 0.0, 3600.0);
+    let out = profiler.profile(&job);
+    let d = out.matrix.best_demand();
+    println!(
+        "model={} gpus={gpus} empirical_points={} cost={:.0}min",
+        model.name(),
+        out.empirical_points,
+        out.cost_minutes
+    );
+    println!(
+        "best_demand: cpus={} mem={}GB  (proportional: cpus={} mem={}GB)",
+        d.cpus, d.mem_gb, out.matrix.prop_cpus, out.matrix.prop_mem_gb
+    );
+    println!(
+        "throughput: best={:.0} prop={:.0} samples/s",
+        out.matrix.max_throughput(),
+        out.matrix.proportional_throughput()
+    );
+    // CPU sensitivity curve at full memory (the Fig-2 row).
+    let full_mem = *out.matrix.mem_points.last().unwrap();
+    print!("cpu curve @ full mem:");
+    for &c in &out.matrix.cpu_points {
+        print!(" {:.0}", out.matrix.throughput_at(c, full_mem));
+    }
+    println!();
+}
+
+fn cmd_models() {
+    let world = PerfModel::new(ServerSpec::default());
+    println!(
+        "{:<16} {:<9} {:>9} {:>10} {:>11} {:>11} {:>12}",
+        "model", "task", "cpu_knee", "gpu_tput", "dataset_gb", "prop_tput", "max_tput(1g)"
+    );
+    for m in ALL_MODELS {
+        let co = m.coeffs();
+        println!(
+            "{:<16} {:<9} {:>9.1} {:>10.0} {:>11.0} {:>11.0} {:>12.0}",
+            m.name(),
+            format!("{:?}", m.task()).to_lowercase(),
+            co.cpu_knee(),
+            co.gpu_tput,
+            co.dataset_gb,
+            world.proportional_throughput(m, 1),
+            world.max_throughput(m, 1),
+        );
+    }
+}
+
+/// Heterogeneous-cluster simulation (paper Appendix A.2).
+///
+/// `synergy hetero --mechanism het-tune --policy srtf --machines 8 \
+///     --jobs 500 --load 6 --split 30,50,20 [--multi-gpu]`
+///
+/// Builds a two-generation cluster (`--machines` P100 servers +
+/// `--machines` V100 servers) and runs the trace through the
+/// heterogeneous simulator.
+fn cmd_hetero(args: &Args) {
+    use synergy::hetero::{GpuGen, HeteroSimConfig, HeteroSimulator, TypeSpec};
+    let spec = ServerSpec {
+        gpus: args.usize("gpus-per-server", 8) as u32,
+        cpus: args.usize("cpus-per-server", 24) as u32,
+        mem_gb: args.f64("mem-per-server", 500.0),
+    };
+    let machines = args.usize("machines", 8);
+    let mechanism = args.get_or("mechanism", "het-tune").to_string();
+    let policy = args.get_or("policy", "srtf").to_string();
+    let jobs = generate(&trace_from_args(args));
+    let sim = HeteroSimulator::new(HeteroSimConfig {
+        types: vec![
+            TypeSpec { gen: GpuGen::P100, spec, machines },
+            TypeSpec { gen: GpuGen::V100, spec, machines },
+        ],
+        round_s: args.f64("round", 300.0),
+        policy,
+        mechanism: mechanism.clone(),
+        profile_noise: args.f64("noise", 0.0),
+        max_sim_s: args.f64("max-sim-days", 400.0) * 86_400.0,
+    });
+    let t0 = std::time::Instant::now();
+    let r = sim.run(jobs);
+    let s = r.jct_stats();
+    println!(
+        "{mechanism}: jobs={} avg_jct={:.2}h p99={:.2}h makespan={:.2}h \
+         rounds={} profiling={:.0}min wall={:.1}s",
+        r.jcts.len(),
+        s.avg_hrs(),
+        s.p99_hrs(),
+        r.makespan_s / 3600.0,
+        r.rounds,
+        r.profiling_minutes,
+        t0.elapsed().as_secs_f64()
+    );
+}
+
+fn cmd_trace(args: &Args) {
+    use synergy::util::json::Json;
+    let cfg = trace_from_args(args);
+    let jobs = generate(&cfg);
+    let arr: Vec<Json> = jobs
+        .iter()
+        .map(|j| {
+            Json::obj(vec![
+                ("id", Json::num(j.id.0 as f64)),
+                ("model", Json::str(j.model.name())),
+                ("gpus", Json::num(j.gpus as f64)),
+                ("arrival_s", Json::num(j.arrival_s)),
+                ("duration_s", Json::num(j.duration_prop_s)),
+            ])
+        })
+        .collect();
+    let doc = Json::arr(arr).encode();
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, doc).expect("write trace");
+            println!("wrote {} jobs to {path}", jobs.len());
+        }
+        None => println!("{doc}"),
+    }
+}
+
+fn cmd_leader(args: &Args) {
+    let cfg = LeaderConfig {
+        bind: format!("0.0.0.0:{}", args.usize("port", 7331)),
+        n_workers: args.usize("workers", 1),
+        round_real_s: args.f64("round-real", 2.0),
+        time_scale: args.f64("time-scale", 600.0),
+        policy: args.get_or("policy", "srtf").into(),
+        mechanism: args.get_or("mechanism", "tune").into(),
+        variant: args.get_or("variant", "tiny").into(),
+        max_real_s: args.f64("max-real", 600.0),
+    };
+    let jobs = generate(&trace_from_args(args));
+    let leader = Leader::new(cfg);
+    match leader.run(jobs) {
+        Ok(report) => {
+            let s = report.jct_stats();
+            println!(
+                "deploy done: jobs={} rounds={} steps={} avg_jct={:.2}h p99={:.2}h",
+                s.n,
+                report.rounds,
+                report.total_steps,
+                s.avg_hrs(),
+                s.p99_hrs()
+            );
+        }
+        Err(e) => {
+            eprintln!("leader failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn cmd_worker(args: &Args) {
+    let cfg = WorkerConfig {
+        leader_addr: args.get_or("leader", "127.0.0.1:7331").into(),
+        artifacts_dir: args.get_or("artifacts", "artifacts").into(),
+        gpus: args.usize("gpus", 8) as u32,
+        cpus: args.usize("cpus", 24) as u32,
+        mem_gb: args.f64("mem", 500.0),
+        real_compute: !args.flag("no-compute"),
+        fail_after_s: {
+            let t = args.f64("fail-after", 0.0);
+            (t > 0.0).then_some(t)
+        },
+    };
+    match Worker::run(cfg) {
+        Ok(n) => println!("worker done; ran {n} jobs"),
+        Err(e) => {
+            eprintln!("worker failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn cmd_config(args: &Args) {
+    let path = args.get("file").expect("--file <config.json> required");
+    let cfg = ExperimentConfig::from_file(path).expect("bad config");
+    println!("running experiment '{}'", cfg.name);
+    let jobs = generate(&cfg.trace);
+    let sim = Simulator::new(SimConfig {
+        spec: cfg.spec,
+        n_servers: cfg.n_servers,
+        round_s: cfg.round_s,
+        policy: cfg.policy.clone(),
+        mechanism: cfg.mechanism.clone(),
+        profile_noise: cfg.profile_noise,
+        max_sim_s: 400.0 * 86_400.0,
+        span_factor: 1,
+        network_penalty: 0.0,
+        reference_spec: None,
+    });
+    let r = sim.run(jobs);
+    let s = r.jct_stats();
+    println!(
+        "{}: avg_jct={:.2}h p99={:.2}h makespan={:.2}h rounds={}",
+        cfg.name,
+        s.avg_hrs(),
+        s.p99_hrs(),
+        r.makespan_s / 3600.0,
+        r.rounds
+    );
+}

@@ -1,0 +1,72 @@
+//! Fixed-demand allocation: the big-data scheduler model (paper §5.7).
+//!
+//! DRF and Tetris "assume resources to be statically allocated throughout
+//! the lifetime of a job" with demands encoded in the request. To compare
+//! against them, Synergy's profiler supplies the best-case demand as that
+//! static request, and the mechanism packs first-fit without any tuning —
+//! which, as §5.7 observes, "performs similar to greedy techniques,
+//! resulting in GPU fragmentation."
+//!
+//! The difference from [`super::Greedy`] is semantic, not mechanical: the
+//! demand is *immutable* for the job's lifetime (re-used verbatim every
+//! round), whereas GREEDY re-reads the profile and could in principle be
+//! extended with tuning. Here both reduce to first-fit; `Fixed` exists so
+//! the §5.7 benches name the baseline they model.
+
+use super::{first_fit, Grant, JobRequest, Mechanism};
+use crate::cluster::Cluster;
+use crate::job::JobId;
+use std::collections::BTreeMap;
+
+/// Static best-case demands + first-fit (DRF/Tetris allocation model).
+pub struct Fixed;
+
+impl Mechanism for Fixed {
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+
+    fn allocate(
+        &self,
+        cluster: &mut Cluster,
+        jobs: &[JobRequest<'_>],
+    ) -> BTreeMap<JobId, Grant> {
+        let mut grants = BTreeMap::new();
+        for job in jobs {
+            if let Some(p) = first_fit(cluster, &job.best) {
+                cluster.place(job.id, p.clone());
+                grants.insert(job.id, Grant { placement: p, demand: job.best });
+            }
+        }
+        grants
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ServerSpec;
+    use crate::job::{DemandVector, Job, JobId, ModelKind};
+    use crate::profiler::OptimisticProfiler;
+
+    #[test]
+    fn fixed_is_first_fit_on_best_demands() {
+        let m = OptimisticProfiler::noiseless(ServerSpec::default())
+            .profile(&Job::new(JobId(0), ModelKind::ShuffleNetV2, 1, 0.0, 60.0))
+            .matrix;
+        let mut cluster = Cluster::homogeneous(ServerSpec::default(), 1);
+        let reqs: Vec<JobRequest> = (0..4)
+            .map(|i| JobRequest {
+                id: JobId(i),
+                gpus: 1,
+                best: m.best_demand(),
+                prop: DemandVector::proportional(1, 3.0, 62.5),
+                matrix: &m,
+            })
+            .collect();
+        let grants = Fixed.allocate(&mut cluster, &reqs);
+        // ShuffleNet wants ~16 cores: only one fits in 24 cores.
+        assert!(grants.len() < 4);
+        assert!(cluster.free_gpus() > 0, "fragmentation expected");
+    }
+}

@@ -1,0 +1,315 @@
+//! Allocation mechanisms (paper §3.3 & §4): given the round's runnable
+//! jobs (already priority-ordered by the policy) and their sensitivity
+//! matrices, decide each job's fungible CPU/memory grant and its placement
+//! onto servers.
+//!
+//! - [`proportional::Proportional`] — the baseline: CPU/mem strictly
+//!   proportional to GPUs.
+//! - [`greedy::Greedy`] — Synergy-GREEDY: first-fit with best-case
+//!   demands; skips jobs that don't fit (fragments GPUs, §3.3).
+//! - [`tune::Tune`] — Synergy-TUNE: best-fit packing with demand
+//!   downgrade and victim reclamation (§4.2). Never skips a job whose GPU
+//!   demand fits; never leaves a job below its proportional throughput.
+//! - [`opt::Opt`] — Synergy-OPT: the two-LP upper bound (§4.1) solved
+//!   with the in-crate simplex/ILP.
+//! - [`fixed::Fixed`] — static best-case demands with first-fit, modeling
+//!   DRF/Tetris-style big-data allocation (§5.7: "static allocations
+//!   perform similar to greedy techniques").
+
+pub mod fixed;
+pub mod greedy;
+pub mod opt;
+pub mod proportional;
+pub mod tune;
+
+pub use fixed::Fixed;
+pub use greedy::Greedy;
+pub use opt::Opt;
+pub use proportional::Proportional;
+pub use tune::{PlacementStrategy, Tune, VictimStrategy};
+
+use crate::cluster::{Cluster, Placement, Share};
+use crate::job::{DemandVector, JobId};
+use crate::profiler::SensitivityMatrix;
+use std::collections::BTreeMap;
+
+/// One runnable job as the mechanism sees it.
+#[derive(Debug, Clone)]
+pub struct JobRequest<'a> {
+    pub id: JobId,
+    pub gpus: u32,
+    /// Best-case demand from the sensitivity matrix (§3.2).
+    pub best: DemandVector,
+    /// GPU-proportional demand (the fairness floor).
+    pub prop: DemandVector,
+    pub matrix: &'a SensitivityMatrix,
+}
+
+/// The outcome for one job: a placement and the demand it was granted.
+#[derive(Debug, Clone)]
+pub struct Grant {
+    pub placement: Placement,
+    pub demand: DemandVector,
+}
+
+/// Allocation mechanism interface.
+pub trait Mechanism: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Place as many of `jobs` as the cluster allows; `jobs` arrive in
+    /// policy priority order. The cluster must start the round empty of
+    /// placements for these jobs. Returns the per-job grants.
+    fn allocate(
+        &self,
+        cluster: &mut Cluster,
+        jobs: &[JobRequest<'_>],
+    ) -> BTreeMap<JobId, Grant>;
+}
+
+/// Look up a mechanism by CLI name. The `tune-*` variants expose the
+/// design-choice knobs benchmarked by `ablation_design_choices`.
+pub fn by_name(name: &str) -> Option<Box<dyn Mechanism>> {
+    match name {
+        "proportional" | "prop" => Some(Box::new(Proportional)),
+        "greedy" => Some(Box::new(Greedy)),
+        "tune" => Some(Box::new(Tune::default())),
+        "tune-first-fit" => Some(Box::new(Tune {
+            placement: PlacementStrategy::FirstFit,
+            ..Tune::default()
+        })),
+        "tune-victim-first" => Some(Box::new(Tune {
+            victim: VictimStrategy::FirstFound,
+            ..Tune::default()
+        })),
+        "opt" => Some(Box::new(Opt::default())),
+        "fixed" => Some(Box::new(Fixed)),
+        _ => None,
+    }
+}
+
+pub const ALL_MECHANISMS: [&str; 7] = [
+    "proportional",
+    "greedy",
+    "tune",
+    "tune-first-fit",
+    "tune-victim-first",
+    "opt",
+    "fixed",
+];
+
+// ---------------------------------------------------------------------------
+// Shared placement helpers
+// ---------------------------------------------------------------------------
+
+/// Split a demand proportionally over per-server GPU counts (paper §4.2:
+/// "the CPU and memory allocations must be proportional to GPU allocations
+/// across servers").
+pub fn proportional_split(demand: &DemandVector, gpus_per_server: &[(usize, u32)])
+    -> Placement
+{
+    let total: u32 = gpus_per_server.iter().map(|&(_, g)| g).sum();
+    assert_eq!(total, demand.gpus, "split must cover the GPU demand");
+    let mut p = Placement::default();
+    for &(sid, g) in gpus_per_server {
+        let frac = g as f64 / total as f64;
+        p.shares.insert(
+            sid,
+            Share {
+                gpus: g,
+                cpus: demand.cpus * frac,
+                mem_gb: demand.mem_gb * frac,
+            },
+        );
+    }
+    p
+}
+
+/// Best-fit placement of `demand`:
+///
+/// - if the job fits on a single server, pick the feasible server with the
+///   least free resources (tight packing, §4.2);
+/// - otherwise find the smallest set of servers with enough free GPUs,
+///   splitting CPU/mem proportionally.
+///
+/// Does not mutate the cluster; returns the placement to commit.
+pub fn best_fit(cluster: &Cluster, demand: &DemandVector) -> Option<Placement> {
+    // Single-server attempt (consolidation preferred, §6).
+    let share = Share {
+        gpus: demand.gpus,
+        cpus: demand.cpus,
+        mem_gb: demand.mem_gb,
+    };
+    let mut best: Option<(f64, usize)> = None;
+    for s in &cluster.servers {
+        if s.fits(&share) {
+            let score = s.free_score();
+            if best.map(|(b, _)| score < b).unwrap_or(true) {
+                best = Some((score, s.id));
+            }
+        }
+    }
+    if let Some((_, sid)) = best {
+        return Some(Placement::single(sid, share));
+    }
+
+    // Multi-server split: greedily take GPUs from the fullest feasible
+    // servers (minimizing the number of fragments).
+    multi_server_fit(cluster, demand, |_s| true)
+}
+
+/// Multi-server placement honoring per-server proportional CPU/mem; the
+/// `admit` filter restricts candidate servers (used by GPU-only search).
+pub fn multi_server_fit(
+    cluster: &Cluster,
+    demand: &DemandVector,
+    admit: impl Fn(&crate::cluster::Server) -> bool,
+) -> Option<Placement> {
+    let per_gpu_cpu = demand.cpus / demand.gpus as f64;
+    let per_gpu_mem = demand.mem_gb / demand.gpus as f64;
+    // Order candidate servers by free GPUs descending (fewest fragments),
+    // then by fullness.
+    let mut candidates: Vec<&crate::cluster::Server> = cluster
+        .servers
+        .iter()
+        .filter(|s| s.free_gpus > 0 && admit(s))
+        .collect();
+    candidates.sort_by(|a, b| {
+        b.free_gpus
+            .cmp(&a.free_gpus)
+            .then(a.free_score().partial_cmp(&b.free_score()).unwrap())
+            .then(a.id.cmp(&b.id))
+    });
+
+    let mut remaining = demand.gpus;
+    let mut picks: Vec<(usize, u32)> = Vec::new();
+    for s in candidates {
+        if remaining == 0 {
+            break;
+        }
+        // How many GPUs can this server host given proportional CPU/mem?
+        let by_cpu = if per_gpu_cpu > 0.0 {
+            (s.free_cpus / per_gpu_cpu + 1e-9).floor() as u32
+        } else {
+            u32::MAX
+        };
+        let by_mem = if per_gpu_mem > 0.0 {
+            (s.free_mem_gb / per_gpu_mem + 1e-9).floor() as u32
+        } else {
+            u32::MAX
+        };
+        let take = s.free_gpus.min(by_cpu).min(by_mem).min(remaining);
+        if take > 0 {
+            picks.push((s.id, take));
+            remaining -= take;
+        }
+    }
+    if remaining > 0 {
+        return None;
+    }
+    Some(proportional_split(demand, &picks))
+}
+
+/// First-fit placement (Synergy-GREEDY / big-data style): the first
+/// server, in id order, that satisfies the demand; multi-server split if
+/// no single server fits.
+pub fn first_fit(cluster: &Cluster, demand: &DemandVector) -> Option<Placement> {
+    let share = Share {
+        gpus: demand.gpus,
+        cpus: demand.cpus,
+        mem_gb: demand.mem_gb,
+    };
+    for s in &cluster.servers {
+        if s.fits(&share) {
+            return Some(Placement::single(s.id, share));
+        }
+    }
+    multi_server_fit(cluster, demand, |_| true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ServerSpec;
+
+    fn cluster(n: usize) -> Cluster {
+        Cluster::homogeneous(ServerSpec::default(), n)
+    }
+
+    #[test]
+    fn proportional_split_is_proportional() {
+        let d = DemandVector::new(4, 12.0, 300.0);
+        let p = proportional_split(&d, &[(0, 3), (1, 1)]);
+        let s0 = p.shares[&0];
+        let s1 = p.shares[&1];
+        assert_eq!(s0.gpus, 3);
+        assert!((s0.cpus - 9.0).abs() < 1e-9);
+        assert!((s0.mem_gb - 225.0).abs() < 1e-9);
+        assert_eq!(s1.gpus, 1);
+        assert!((s1.cpus - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn best_fit_prefers_fuller_server() {
+        let mut c = cluster(2);
+        // Fill server 1 partially so it becomes the tighter fit.
+        c.place(
+            JobId(99),
+            Placement::single(1, Share { gpus: 4, cpus: 12.0, mem_gb: 250.0 }),
+        );
+        let d = DemandVector::new(2, 6.0, 100.0);
+        let p = best_fit(&c, &d).unwrap();
+        assert_eq!(p.span(), 1);
+        assert!(p.shares.contains_key(&1), "should pack onto fuller server");
+    }
+
+    #[test]
+    fn best_fit_splits_when_needed() {
+        let c = cluster(2);
+        let d = DemandVector::new(16, 48.0, 1000.0);
+        let p = best_fit(&c, &d).unwrap();
+        assert_eq!(p.span(), 2);
+        assert_eq!(p.total().gpus, 16);
+        assert!((p.total().cpus - 48.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn best_fit_fails_when_no_capacity() {
+        let mut c = cluster(1);
+        c.place(
+            JobId(1),
+            Placement::single(0, Share { gpus: 8, cpus: 24.0, mem_gb: 500.0 }),
+        );
+        assert!(best_fit(&c, &DemandVector::new(1, 1.0, 10.0)).is_none());
+    }
+
+    #[test]
+    fn multi_server_fit_respects_cpu_limits() {
+        let mut c = cluster(2);
+        // Soak CPUs on server 0: only 2 cores left.
+        c.place(
+            JobId(1),
+            Placement::single(0, Share { gpus: 1, cpus: 22.0, mem_gb: 10.0 }),
+        );
+        // A 8-GPU job wanting 3 cpus/gpu can take at most 0 GPUs from
+        // server 0 (2 cores < 3/gpu) — so all 8 must come from server 1.
+        let d = DemandVector::new(8, 24.0, 80.0);
+        let p = multi_server_fit(&c, &d, |_| true).unwrap();
+        assert_eq!(p.shares.len(), 1);
+        assert!(p.shares.contains_key(&1));
+    }
+
+    #[test]
+    fn first_fit_takes_lowest_id() {
+        let c = cluster(3);
+        let d = DemandVector::new(1, 3.0, 62.5);
+        let p = first_fit(&c, &d).unwrap();
+        assert!(p.shares.contains_key(&0));
+    }
+
+    #[test]
+    fn by_name_covers_all() {
+        for n in ALL_MECHANISMS {
+            assert!(by_name(n).is_some(), "{n}");
+        }
+    }
+}

@@ -1,0 +1,362 @@
+//! Synergy-OPT (paper §4.1 + Appendix A): the LP/ILP upper bound.
+//!
+//! Two programs, solved with the in-crate simplex ([`crate::lp`]):
+//!
+//! **LP1 (idealized super-machine)** — boolean `y_{c,m,j}` selects one
+//! (CPU, memory) option per job to maximize Σ W_j[c,m]·y subject to
+//! aggregate CPU and memory capacity. The paper's fairness constraint (5)
+//! is enforced structurally: options are Pareto-pruned to those with
+//! throughput ≥ W_j[C_g, M_g] (the proportional option itself is always
+//! present), so every feasible selection honours the floor.
+//!
+//! **LP2 (placement)** — given (g_j, c*_j, m*_j), assign fractions x_{i,j}
+//! of each job to machines, minimizing Σ x_{i,j} (each fragmented job
+//! contributes ≥ 2, so this minimizes fragmentation; Theorem A.2 bounds
+//! fragmented jobs by 3s).
+//!
+//! As in the paper (§4.1.3), OPT is a *simulation-only* upper bound: LP2's
+//! fractional GPU assignments are not deployable; the simulator uses LP1's
+//! allocations with a relaxed placement, and benches report LP1's
+//! objective as the aspirational line.
+
+use super::{best_fit, Grant, JobRequest, Mechanism};
+use crate::cluster::{Cluster, Placement};
+use crate::job::{DemandVector, JobId};
+use crate::lp::{solve, solve_ilp, IlpOptions, Lp, Op};
+use std::collections::BTreeMap;
+
+/// Synergy-OPT.
+#[derive(Default)]
+pub struct Opt {
+    /// If true, solve the LP relaxation only (faster; still an upper
+    /// bound). Default solves the ILP.
+    pub relax_only: bool,
+}
+
+/// The LP1 solution for one round.
+#[derive(Debug, Clone)]
+pub struct OptAllocation {
+    /// Chosen (cpus, mem_gb, throughput) per job.
+    pub chosen: BTreeMap<JobId, (f64, f64, f64)>,
+    /// LP objective — aggregate throughput upper bound.
+    pub objective: f64,
+    /// Number of structural LP variables (for the §5.6 scaling bench).
+    pub n_vars: usize,
+}
+
+impl Opt {
+    /// Solve LP1 over the idealized super-machine (paper §4.1.1).
+    pub fn solve_allocation(
+        &self,
+        cluster: &Cluster,
+        jobs: &[JobRequest<'_>],
+    ) -> Option<OptAllocation> {
+        if jobs.is_empty() {
+            return Some(OptAllocation {
+                chosen: BTreeMap::new(),
+                objective: 0.0,
+                n_vars: 0,
+            });
+        }
+        // Collect per-job option lists (Pareto-pruned, floor-filtered).
+        let mut options: Vec<(JobId, Vec<(f64, f64, f64)>)> = Vec::new();
+        for j in jobs {
+            let mut opts = j.matrix.pareto_options();
+            if opts.is_empty() {
+                opts.push(j.matrix.proportional_option());
+            }
+            options.push((j.id, opts));
+        }
+        let n_vars: usize = options.iter().map(|(_, o)| o.len()).sum();
+        let mut lp = Lp::new(n_vars);
+
+        // Objective (1): maximize Σ W·y. Capacity (2)(3); choice (4).
+        let mut cpu_row: Vec<(usize, f64)> = Vec::with_capacity(n_vars);
+        let mut mem_row: Vec<(usize, f64)> = Vec::with_capacity(n_vars);
+        let mut var = 0usize;
+        let mut var_ranges: Vec<(JobId, usize, usize)> = Vec::new();
+        for (id, opts) in &options {
+            let start = var;
+            for &(c, m, w) in opts {
+                lp.set_objective(var, w);
+                cpu_row.push((var, c));
+                mem_row.push((var, m));
+                var += 1;
+            }
+            var_ranges.push((*id, start, var));
+        }
+        lp.add(cpu_row, Op::Le, cluster.total_cpus());
+        lp.add(mem_row, Op::Le, cluster.total_mem_gb());
+        for &(_, start, end) in &var_ranges {
+            let row: Vec<(usize, f64)> =
+                (start..end).map(|v| (v, 1.0)).collect();
+            lp.add(row, Op::Eq, 1.0);
+        }
+
+        let sol = if self.relax_only {
+            solve(&lp).ok()?
+        } else {
+            let int_vars: Vec<usize> = (0..n_vars).collect();
+            solve_ilp(&lp, &int_vars, IlpOptions::default()).ok()?
+        };
+
+        // Extract the chosen option per job (argmax y within the range).
+        let mut chosen = BTreeMap::new();
+        for &(id, start, end) in &var_ranges {
+            let (_, opts) = options
+                .iter()
+                .find(|(oid, _)| *oid == id)
+                .expect("job options");
+            let best = (start..end)
+                .max_by(|&a, &b| sol.x[a].partial_cmp(&sol.x[b]).unwrap())
+                .unwrap();
+            chosen.insert(id, opts[best - start]);
+        }
+        Some(OptAllocation { chosen, objective: sol.objective, n_vars })
+    }
+
+    /// Solve LP2 (paper §4.1.2): fractional placement of the LP1 demands
+    /// onto machines, minimizing Σ x_{i,j}. Returns x[i][j] by (server,
+    /// job index) plus the fragmented-job count.
+    pub fn solve_placement(
+        &self,
+        cluster: &Cluster,
+        jobs: &[JobRequest<'_>],
+        alloc: &OptAllocation,
+    ) -> Option<(Vec<Vec<f64>>, usize)> {
+        let s = cluster.num_servers();
+        let n = jobs.len();
+        if n == 0 {
+            return Some((vec![vec![]; s], 0));
+        }
+        let mut lp = Lp::new(s * n);
+        let idx = |i: usize, j: usize| i * n + j;
+        // Objective: minimize Σ x  (maximize -Σ x).
+        for v in 0..s * n {
+            lp.set_objective(v, -1.0);
+        }
+        // Capacity per machine (15)-(17).
+        for i in 0..s {
+            let gpu_row: Vec<(usize, f64)> = (0..n)
+                .map(|j| (idx(i, j), jobs[j].gpus as f64))
+                .collect();
+            lp.add(gpu_row, Op::Le, cluster.spec.gpus as f64);
+            let cpu_row: Vec<(usize, f64)> = (0..n)
+                .map(|j| (idx(i, j), alloc.chosen[&jobs[j].id].0))
+                .collect();
+            lp.add(cpu_row, Op::Le, cluster.spec.cpus as f64);
+            let mem_row: Vec<(usize, f64)> = (0..n)
+                .map(|j| (idx(i, j), alloc.chosen[&jobs[j].id].1))
+                .collect();
+            lp.add(mem_row, Op::Le, cluster.spec.mem_gb);
+        }
+        // Full assignment (18).
+        for j in 0..n {
+            let row: Vec<(usize, f64)> =
+                (0..s).map(|i| (idx(i, j), 1.0)).collect();
+            lp.add(row, Op::Ge, 1.0);
+        }
+        let sol = solve(&lp).ok()?;
+        let mut x = vec![vec![0.0; n]; s];
+        let mut fragmented = 0usize;
+        for j in 0..n {
+            let mut pieces = 0;
+            for i in 0..s {
+                x[i][j] = sol.x[idx(i, j)];
+                if sol.x[idx(i, j)] > 1e-6 {
+                    pieces += 1;
+                }
+            }
+            if pieces > 1 {
+                fragmented += 1;
+            }
+        }
+        Some((x, fragmented))
+    }
+}
+
+impl Mechanism for Opt {
+    fn name(&self) -> &'static str {
+        "opt"
+    }
+
+    /// Simulation-mode OPT: LP1 chooses (c*, m*); jobs are then placed
+    /// best-fit with those demands, falling back to the proportional
+    /// demand if the ideal allocation can't be materialized (§4.1.3 —
+    /// the gap between the idealized bound and deployable placements).
+    fn allocate(
+        &self,
+        cluster: &mut Cluster,
+        jobs: &[JobRequest<'_>],
+    ) -> BTreeMap<JobId, Grant> {
+        let mut grants = BTreeMap::new();
+        let Some(alloc) = self.solve_allocation(cluster, jobs) else {
+            return grants;
+        };
+        // Place big jobs first, like TUNE.
+        let mut ordered: Vec<&JobRequest> = jobs.iter().collect();
+        ordered.sort_by(|a, b| b.best.sort_key().cmp(&a.best.sort_key()));
+        for job in ordered {
+            let (c, m, _) = alloc.chosen[&job.id];
+            let ideal = DemandVector::new(job.gpus, c, m);
+            let placement: Option<Placement> = best_fit(cluster, &ideal)
+                .or_else(|| best_fit(cluster, &job.prop));
+            let demand = if placement.is_some()
+                && best_fit(cluster, &ideal).is_some()
+            {
+                ideal
+            } else {
+                job.prop
+            };
+            if let Some(p) = placement {
+                cluster.place(job.id, p.clone());
+                grants.insert(job.id, Grant { placement: p, demand });
+            }
+        }
+        grants
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ServerSpec;
+    use crate::job::{Job, JobId, ModelKind};
+    use crate::profiler::{OptimisticProfiler, SensitivityMatrix};
+
+    fn matrix(model: ModelKind, gpus: u32) -> SensitivityMatrix {
+        OptimisticProfiler::noiseless(ServerSpec::default())
+            .profile(&Job::new(JobId(0), model, gpus, 0.0, 60.0))
+            .matrix
+    }
+
+    fn request<'a>(id: u64, gpus: u32, m: &'a SensitivityMatrix) -> JobRequest<'a> {
+        JobRequest {
+            id: JobId(id),
+            gpus,
+            best: m.best_demand(),
+            prop: DemandVector::proportional(gpus, 3.0, 62.5),
+            matrix: m,
+        }
+    }
+
+    #[test]
+    fn opt_objective_upper_bounds_tune() {
+        // Mixed workload on one server: OPT's LP objective must be >= the
+        // aggregate throughput TUNE achieves.
+        let img = matrix(ModelKind::AlexNet, 1);
+        let lang = matrix(ModelKind::Gnmt, 1);
+        let reqs: Vec<JobRequest> = (0..4)
+            .map(|i| request(i, 1, &img))
+            .chain((4..8).map(|i| request(i, 1, &lang)))
+            .collect();
+
+        let mut c1 = Cluster::homogeneous(ServerSpec::default(), 1);
+        let opt = Opt::default();
+        let alloc = opt.solve_allocation(&c1, &reqs).unwrap();
+
+        let grants = super::super::Tune::default().allocate(&mut c1, &reqs);
+        let tune_total: f64 = reqs
+            .iter()
+            .map(|r| {
+                let g = &grants[&r.id];
+                r.matrix.throughput_at(g.demand.cpus, g.demand.mem_gb)
+            })
+            .sum();
+        assert!(
+            alloc.objective + 1e-6 >= tune_total,
+            "opt {} < tune {}",
+            alloc.objective,
+            tune_total
+        );
+        // And TUNE should be within 10% of OPT (paper §5.6).
+        assert!(
+            tune_total >= alloc.objective * 0.9,
+            "tune {} not within 10% of opt {}",
+            tune_total,
+            alloc.objective
+        );
+    }
+
+    #[test]
+    fn opt_respects_fairness_floor() {
+        let img = matrix(ModelKind::ShuffleNetV2, 1);
+        let speech = matrix(ModelKind::M5, 1);
+        let reqs: Vec<JobRequest> = (0..4)
+            .map(|i| request(i, 1, &img))
+            .chain((4..8).map(|i| request(i, 1, &speech)))
+            .collect();
+        let cluster = Cluster::homogeneous(ServerSpec::default(), 1);
+        let alloc = Opt::default().solve_allocation(&cluster, &reqs).unwrap();
+        for r in &reqs {
+            let (_, _, w) = alloc.chosen[&r.id];
+            assert!(
+                w + 1e-9 >= r.matrix.proportional_throughput(),
+                "{:?} below floor",
+                r.id
+            );
+        }
+    }
+
+    #[test]
+    fn opt_capacity_respected() {
+        let m = matrix(ModelKind::DeepSpeech, 1);
+        let reqs: Vec<JobRequest> =
+            (0..8).map(|i| request(i, 1, &m)).collect();
+        let cluster = Cluster::homogeneous(ServerSpec::default(), 1);
+        let alloc = Opt::default().solve_allocation(&cluster, &reqs).unwrap();
+        let cpus: f64 = alloc.chosen.values().map(|o| o.0).sum();
+        let mem: f64 = alloc.chosen.values().map(|o| o.1).sum();
+        assert!(cpus <= cluster.total_cpus() + 1e-6, "cpus={cpus}");
+        assert!(mem <= cluster.total_mem_gb() + 1e-6, "mem={mem}");
+    }
+
+    #[test]
+    fn lp2_placement_bounds_fragmentation() {
+        let m = matrix(ModelKind::ResNet18, 2);
+        let reqs: Vec<JobRequest> =
+            (0..6).map(|i| request(i, 2, &m)).collect();
+        let cluster = Cluster::homogeneous(ServerSpec::default(), 2);
+        let opt = Opt::default();
+        let alloc = opt.solve_allocation(&cluster, &reqs).unwrap();
+        let (x, fragmented) =
+            opt.solve_placement(&cluster, &reqs, &alloc).unwrap();
+        // Theorem A.2: fragmented <= 3s.
+        assert!(fragmented <= 3 * cluster.num_servers());
+        // Every job fully assigned.
+        for j in 0..reqs.len() {
+            let total: f64 = (0..cluster.num_servers()).map(|i| x[i][j]).sum();
+            assert!(total >= 1.0 - 1e-6, "job {j} assignment {total}");
+        }
+    }
+
+    #[test]
+    fn relaxation_at_least_ilp() {
+        let img = matrix(ModelKind::AlexNet, 1);
+        let reqs: Vec<JobRequest> =
+            (0..6).map(|i| request(i, 1, &img)).collect();
+        let cluster = Cluster::homogeneous(ServerSpec::default(), 1);
+        let ilp = Opt { relax_only: false }
+            .solve_allocation(&cluster, &reqs)
+            .unwrap();
+        let lp = Opt { relax_only: true }
+            .solve_allocation(&cluster, &reqs)
+            .unwrap();
+        assert!(lp.objective + 1e-6 >= ilp.objective);
+    }
+
+    #[test]
+    fn opt_mechanism_places_jobs() {
+        let img = matrix(ModelKind::AlexNet, 1);
+        let lang = matrix(ModelKind::Lstm, 1);
+        let reqs: Vec<JobRequest> = (0..4)
+            .map(|i| request(i, 1, &img))
+            .chain((4..8).map(|i| request(i, 1, &lang)))
+            .collect();
+        let mut cluster = Cluster::homogeneous(ServerSpec::default(), 1);
+        let grants = Opt::default().allocate(&mut cluster, &reqs);
+        assert_eq!(grants.len(), 8);
+        assert_eq!(cluster.free_gpus(), 0);
+        assert!(cluster.check_consistency().is_ok());
+    }
+}

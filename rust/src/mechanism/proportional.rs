@@ -1,0 +1,93 @@
+//! GPU-proportional allocation — the baseline every DNN scheduler uses
+//! (paper §2): CPU and memory strictly proportional to the GPU grant.
+
+use super::{best_fit, Grant, JobRequest, Mechanism};
+use crate::cluster::Cluster;
+use crate::job::JobId;
+use std::collections::BTreeMap;
+
+/// The GPU-proportional baseline mechanism.
+pub struct Proportional;
+
+impl Mechanism for Proportional {
+    fn name(&self) -> &'static str {
+        "proportional"
+    }
+
+    fn allocate(
+        &self,
+        cluster: &mut Cluster,
+        jobs: &[JobRequest<'_>],
+    ) -> BTreeMap<JobId, Grant> {
+        let mut grants = BTreeMap::new();
+        for job in jobs {
+            // With proportional demands, any server with enough free GPUs
+            // also has the proportional CPU/mem free (invariant of
+            // proportional packing), so best_fit only fails on GPU
+            // fragmentation across servers.
+            if let Some(p) = best_fit(cluster, &job.prop) {
+                cluster.place(job.id, p.clone());
+                grants.insert(job.id, Grant { placement: p, demand: job.prop });
+            }
+        }
+        grants
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ServerSpec;
+    use crate::job::{DemandVector, Job, JobId, ModelKind};
+    use crate::profiler::OptimisticProfiler;
+
+    fn request(
+        id: u64,
+        gpus: u32,
+        matrix: &crate::profiler::SensitivityMatrix,
+    ) -> JobRequest<'_> {
+        JobRequest {
+            id: JobId(id),
+            gpus,
+            best: matrix.best_demand(),
+            prop: DemandVector::proportional(gpus, 3.0, 62.5),
+            matrix,
+        }
+    }
+
+    #[test]
+    fn proportional_fills_gpus_exactly() {
+        let spec = ServerSpec::default();
+        let profiler = OptimisticProfiler::noiseless(spec);
+        let m = profiler
+            .profile(&Job::new(JobId(0), ModelKind::ResNet18, 4, 0.0, 60.0))
+            .matrix;
+        let mut cluster = Cluster::homogeneous(spec, 2);
+        let reqs: Vec<JobRequest> =
+            (0..4).map(|i| request(i, 4, &m)).collect();
+        let grants = Proportional.allocate(&mut cluster, &reqs);
+        assert_eq!(grants.len(), 4);
+        assert_eq!(cluster.free_gpus(), 0);
+        // CPU/mem exactly proportional.
+        for g in grants.values() {
+            assert!((g.demand.cpus - 12.0).abs() < 1e-9);
+            assert!((g.demand.mem_gb - 250.0).abs() < 1e-9);
+        }
+        assert!(cluster.check_consistency().is_ok());
+    }
+
+    #[test]
+    fn leftover_jobs_not_granted() {
+        let spec = ServerSpec::default();
+        let profiler = OptimisticProfiler::noiseless(spec);
+        let m = profiler
+            .profile(&Job::new(JobId(0), ModelKind::Gnmt, 8, 0.0, 60.0))
+            .matrix;
+        let mut cluster = Cluster::homogeneous(spec, 1);
+        let reqs: Vec<JobRequest> =
+            (0..3).map(|i| request(i, 8, &m)).collect();
+        let grants = Proportional.allocate(&mut cluster, &reqs);
+        assert_eq!(grants.len(), 1);
+        assert_eq!(cluster.free_gpus(), 0);
+    }
+}

@@ -1,0 +1,444 @@
+//! Synergy-TUNE (paper §4.2): the practical near-optimal mechanism.
+//!
+//! Properties (verified by unit + property tests):
+//!
+//! - **No GPU under-utilization at load**: a runnable job is only left
+//!   unplaced if its GPU demand cannot be met anywhere — fungible demands
+//!   never cause a skip (unlike GREEDY).
+//! - **Fairness floor**: every placed job ends the round with at least its
+//!   GPU-proportional throughput — either it got its (≥ floor) best-case
+//!   demand, or it (and/or victims) were downgraded *to* the proportional
+//!   share, never below.
+//!
+//! Algorithm (§4.2 verbatim):
+//! 1. Sort runnable jobs by GPU, then CPU, then memory demand, descending.
+//! 2. For each job, best-fit pack the best-case demand (single server if
+//!    possible; otherwise minimal multi-server split with proportional
+//!    per-server CPU/mem).
+//! 3. If it doesn't fit and the demand exceeds proportional: retry at the
+//!    GPU-proportional demand.
+//! 4. If it still doesn't fit: find a GPU-feasible server (set) and
+//!    downgrade resident jobs holding more than their proportional share
+//!    until the job's proportional demand fits; by construction the
+//!    reclaimed resources suffice.
+
+use super::{best_fit, first_fit, Grant, JobRequest, Mechanism};
+use crate::cluster::{Cluster, Placement, Share};
+use crate::job::{DemandVector, JobId};
+use std::collections::BTreeMap;
+
+/// Server-selection strategy for packing (§4.2 uses best-fit; the
+/// alternatives exist for the design-choice ablation bench).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlacementStrategy {
+    /// Feasible server with the least free resources (tight packing —
+    /// the paper's choice).
+    #[default]
+    BestFit,
+    /// First feasible server in id order.
+    FirstFit,
+}
+
+/// Victim-selection strategy for step 4's downgrades.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum VictimStrategy {
+    /// The victim holding the largest excess over proportional (fewest
+    /// downgrades overall — the default).
+    #[default]
+    LargestExcess,
+    /// The first over-proportional victim found (cheaper to compute,
+    /// more downgrades).
+    FirstFound,
+}
+
+/// Synergy-TUNE.
+#[derive(Default)]
+pub struct Tune {
+    pub placement: PlacementStrategy,
+    pub victim: VictimStrategy,
+}
+
+impl Tune {
+    fn fit(&self, cluster: &Cluster, demand: &DemandVector) -> Option<Placement> {
+        match self.placement {
+            PlacementStrategy::BestFit => best_fit(cluster, demand),
+            PlacementStrategy::FirstFit => first_fit(cluster, demand),
+        }
+    }
+}
+
+impl Mechanism for Tune {
+    fn name(&self) -> &'static str {
+        "tune"
+    }
+
+    fn allocate(
+        &self,
+        cluster: &mut Cluster,
+        jobs: &[JobRequest<'_>],
+    ) -> BTreeMap<JobId, Grant> {
+        let mut grants: BTreeMap<JobId, Grant> = BTreeMap::new();
+        // Proportional demands of this round's jobs (for downgrades).
+        let props: BTreeMap<JobId, DemandVector> =
+            jobs.iter().map(|j| (j.id, j.prop)).collect();
+
+        // Step 1: sort by demand, descending (big rocks first).
+        let mut ordered: Vec<&JobRequest> = jobs.iter().collect();
+        ordered.sort_by(|a, b| b.best.sort_key().cmp(&a.best.sort_key()));
+
+        for job in ordered {
+            // Step 2: best-case demand.
+            if let Some(p) = self.fit(cluster, &job.best) {
+                cluster.place(job.id, p.clone());
+                grants.insert(
+                    job.id,
+                    Grant { placement: p, demand: job.best },
+                );
+                continue;
+            }
+            // Step 3: revert own demand to proportional.
+            if job.best.exceeds(&job.prop) {
+                if let Some(p) = self.fit(cluster, &job.prop) {
+                    cluster.place(job.id, p.clone());
+                    grants.insert(
+                        job.id,
+                        Grant { placement: p, demand: job.prop },
+                    );
+                    continue;
+                }
+            }
+            // Step 4: reclaim from victims until the (floor) demand fits.
+            // The floor is the element-wise min of best-case and
+            // proportional: a job asking below proportional keeps its
+            // small ask. Each iteration downgrades the most-over-allocated
+            // victim on a GPU-feasible server; terminates because the
+            // victim set is finite.
+            let floor = job.best.clamp_to(&job.prop);
+            let placed = loop {
+                if let Some(p) = self.fit(cluster, &floor) {
+                    break Some(p);
+                }
+                if !downgrade_one_victim(
+                    cluster,
+                    &mut grants,
+                    &props,
+                    job,
+                    self.victim,
+                ) {
+                    break None;
+                }
+            };
+            match placed {
+                Some(p) => {
+                    cluster.place(job.id, p.clone());
+                    grants.insert(
+                        job.id,
+                        Grant { placement: p, demand: floor },
+                    );
+                }
+                None => {
+                    // GPU demand itself cannot be met (only possible when
+                    // the coordinator over-admitted); leave unplaced.
+                }
+            }
+        }
+
+        // Final pass: redistribute spare CPU/memory to placed jobs that
+        // still benefit (§5.3.2: "at low load ... the unallocated CPU and
+        // memory is assigned to the jobs that benefit from additional
+        // auxiliary resources").
+        redistribute_spare(cluster, &mut grants, jobs);
+        grants
+    }
+}
+
+/// Grow granted demands toward their best-case values using whatever free
+/// CPU/memory remains on the jobs' servers. Multi-server jobs grow
+/// proportionally across their shares (per §4.2's proportional-split
+/// rule). Jobs with the largest gap to best-case are served first.
+fn redistribute_spare(
+    cluster: &mut Cluster,
+    grants: &mut BTreeMap<JobId, Grant>,
+    jobs: &[JobRequest<'_>],
+) {
+    let best: BTreeMap<JobId, DemandVector> =
+        jobs.iter().map(|j| (j.id, j.best)).collect();
+    // Largest relative gap first.
+    let mut order: Vec<JobId> = grants.keys().copied().collect();
+    order.sort_by(|a, b| {
+        let gap = |id: &JobId| {
+            let g = &grants[id];
+            let bd = &best[id];
+            (bd.cpus - g.demand.cpus).max(0.0)
+                + (bd.mem_gb - g.demand.mem_gb).max(0.0) / 12.5
+        };
+        gap(b).partial_cmp(&gap(a)).unwrap().then(a.cmp(b))
+    });
+
+    for id in order {
+        let grant = grants[&id].clone();
+        let bd = best[&id];
+        let want_cpu = (bd.cpus - grant.demand.cpus).max(0.0);
+        let want_mem = (bd.mem_gb - grant.demand.mem_gb).max(0.0);
+        if want_cpu <= 1e-9 && want_mem <= 1e-9 {
+            continue;
+        }
+        let total_gpus = grant.demand.gpus as f64;
+        // Per-GPU headroom limited by the tightest server in the span.
+        let mut cpu_per_gpu = f64::INFINITY;
+        let mut mem_per_gpu = f64::INFINITY;
+        for (&sid, share) in &grant.placement.shares {
+            let s = cluster.server(sid);
+            cpu_per_gpu = cpu_per_gpu.min(s.free_cpus / share.gpus as f64);
+            mem_per_gpu = mem_per_gpu.min(s.free_mem_gb / share.gpus as f64);
+        }
+        let add_cpu = want_cpu.min(cpu_per_gpu * total_gpus).max(0.0);
+        let add_mem = want_mem.min(mem_per_gpu * total_gpus).max(0.0);
+        if add_cpu <= 1e-9 && add_mem <= 1e-9 {
+            continue;
+        }
+        let new_demand = DemandVector::new(
+            grant.demand.gpus,
+            grant.demand.cpus + add_cpu,
+            grant.demand.mem_gb + add_mem,
+        );
+        // Rebuild the placement on the same servers, proportional split.
+        let old = cluster.evict(id).expect("granted job must be placed");
+        let mut new_p = Placement::default();
+        for (sid, share) in old.shares {
+            let frac = share.gpus as f64 / total_gpus;
+            new_p.shares.insert(
+                sid,
+                Share {
+                    gpus: share.gpus,
+                    cpus: new_demand.cpus * frac,
+                    mem_gb: new_demand.mem_gb * frac,
+                },
+            );
+        }
+        cluster.place(id, new_p.clone());
+        grants.insert(id, Grant { placement: new_p, demand: new_demand });
+    }
+}
+
+/// Downgrade the single best victim: a granted job holding more than its
+/// proportional share on a server that could host (part of) `job`'s GPUs.
+/// Returns false if no such victim exists.
+fn downgrade_one_victim(
+    cluster: &mut Cluster,
+    grants: &mut BTreeMap<JobId, Grant>,
+    props: &BTreeMap<JobId, DemandVector>,
+    job: &JobRequest<'_>,
+    strategy: VictimStrategy,
+) -> bool {
+    // Candidate servers: those with any free GPUs (they could contribute
+    // to the job's placement but lack CPU/mem).
+    let candidate_servers: Vec<usize> = cluster
+        .servers
+        .iter()
+        .filter(|s| s.free_gpus > 0)
+        .map(|s| s.id)
+        .collect();
+    if candidate_servers.is_empty() {
+        return false;
+    }
+
+    // Find the victim with the largest reclaimable excess on a candidate.
+    let mut best: Option<(JobId, f64)> = None;
+    for (&vid, grant) in grants.iter() {
+        if vid == job.id {
+            continue;
+        }
+        let Some(prop) = props.get(&vid) else { continue };
+        if !grant.demand.exceeds(prop) {
+            continue;
+        }
+        let touches = grant
+            .placement
+            .shares
+            .keys()
+            .any(|sid| candidate_servers.contains(sid));
+        if !touches {
+            continue;
+        }
+        // Normalized excess (CPU cores + memory units above proportional).
+        let excess = (grant.demand.cpus - prop.cpus).max(0.0)
+            + (grant.demand.mem_gb - prop.mem_gb).max(0.0) / 12.5;
+        if best.map(|(_, e)| excess > e).unwrap_or(true) {
+            best = Some((vid, excess));
+        }
+        if strategy == VictimStrategy::FirstFound && best.is_some() {
+            break;
+        }
+    }
+    let Some((vid, _)) = best else { return false };
+
+    // Downgrade: shrink each per-server share to the element-wise min of
+    // the current and proportional demand for the GPUs it holds there
+    // (same servers — no migration; never grows a dimension).
+    let grant_now = grants[&vid].clone();
+    let prop = grant_now.demand.clamp_to(&props[&vid]);
+    let per_gpu_cpu = prop.cpus / prop.gpus as f64;
+    let per_gpu_mem = prop.mem_gb / prop.gpus as f64;
+    let old = cluster.evict(vid).expect("victim must be placed");
+    let mut new_p = Placement::default();
+    for (sid, share) in old.shares {
+        new_p.shares.insert(
+            sid,
+            Share {
+                gpus: share.gpus,
+                cpus: per_gpu_cpu * share.gpus as f64,
+                mem_gb: per_gpu_mem * share.gpus as f64,
+            },
+        );
+    }
+    cluster.place(vid, new_p.clone());
+    grants.insert(vid, Grant { placement: new_p, demand: prop });
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ServerSpec;
+    use crate::job::{Job, JobId, ModelKind};
+    use crate::profiler::{OptimisticProfiler, SensitivityMatrix};
+
+    fn matrix(model: ModelKind, gpus: u32) -> SensitivityMatrix {
+        OptimisticProfiler::noiseless(ServerSpec::default())
+            .profile(&Job::new(JobId(0), model, gpus, 0.0, 60.0))
+            .matrix
+    }
+
+    fn request<'a>(
+        id: u64,
+        gpus: u32,
+        m: &'a SensitivityMatrix,
+    ) -> JobRequest<'a> {
+        JobRequest {
+            id: JobId(id),
+            gpus,
+            best: m.best_demand(),
+            prop: DemandVector::proportional(gpus, 3.0, 62.5),
+            matrix: m,
+        }
+    }
+
+    #[test]
+    fn tune_never_strands_gpus() {
+        // The GREEDY pathology case: 8 CPU-hungry 1-GPU jobs, one server.
+        let m = matrix(ModelKind::M5, 1);
+        let mut cluster = Cluster::homogeneous(ServerSpec::default(), 1);
+        let reqs: Vec<JobRequest> =
+            (0..8).map(|i| request(i, 1, &m)).collect();
+        let grants = Tune::default().allocate(&mut cluster, &reqs);
+        assert_eq!(grants.len(), 8, "all jobs must be placed");
+        assert_eq!(cluster.free_gpus(), 0, "no stranded GPUs");
+        assert!(cluster.check_consistency().is_ok());
+    }
+
+    #[test]
+    fn tune_grants_at_least_proportional_throughput() {
+        let models = [
+            ModelKind::ResNet18,
+            ModelKind::M5,
+            ModelKind::ShuffleNetV2,
+            ModelKind::Gnmt,
+            ModelKind::DeepSpeech,
+            ModelKind::AlexNet,
+            ModelKind::Lstm,
+            ModelKind::MobileNetV2,
+        ];
+        let matrices: Vec<SensitivityMatrix> =
+            models.iter().map(|&k| matrix(k, 1)).collect();
+        let mut cluster = Cluster::homogeneous(ServerSpec::default(), 1);
+        let reqs: Vec<JobRequest> = matrices
+            .iter()
+            .enumerate()
+            .map(|(i, m)| request(i as u64, 1, m))
+            .collect();
+        let grants = Tune::default().allocate(&mut cluster, &reqs);
+        assert_eq!(grants.len(), 8);
+        for (req, m) in reqs.iter().zip(&matrices) {
+            let g = &grants[&req.id];
+            let got = m.throughput_at(g.demand.cpus, g.demand.mem_gb);
+            let floor = m.proportional_throughput();
+            assert!(
+                got + 1e-9 >= floor,
+                "{:?}: got {} < floor {}",
+                req.id, got, floor
+            );
+        }
+    }
+
+    #[test]
+    fn tune_gives_spare_resources_to_sensitive_jobs() {
+        // 1 hungry image job + 7 language jobs: the image job should walk
+        // away with more than proportional CPU.
+        let img = matrix(ModelKind::AlexNet, 1);
+        let lang = matrix(ModelKind::Gnmt, 1);
+        let mut cluster = Cluster::homogeneous(ServerSpec::default(), 1);
+        let mut reqs = vec![request(0, 1, &img)];
+        reqs.extend((1..8).map(|i| request(i, 1, &lang)));
+        let grants = Tune::default().allocate(&mut cluster, &reqs);
+        assert_eq!(grants.len(), 8);
+        let g = &grants[&JobId(0)];
+        assert!(
+            g.demand.cpus > 3.0,
+            "sensitive job should exceed proportional CPU, got {}",
+            g.demand.cpus
+        );
+    }
+
+    #[test]
+    fn tune_downgrades_victims_when_needed() {
+        // Two hungry jobs land first (taking > proportional), then six
+        // more hungry jobs force downgrades; everyone must still fit.
+        let m = matrix(ModelKind::DeepSpeech, 1);
+        let mut cluster = Cluster::homogeneous(ServerSpec::default(), 1);
+        let reqs: Vec<JobRequest> =
+            (0..8).map(|i| request(i, 1, &m)).collect();
+        let grants = Tune::default().allocate(&mut cluster, &reqs);
+        assert_eq!(grants.len(), 8);
+        // Total CPU within capacity.
+        let total_cpu: f64 = grants.values().map(|g| g.demand.cpus).sum();
+        assert!(total_cpu <= 24.0 + 1e-6, "cpu oversubscribed: {total_cpu}");
+        assert!(cluster.check_consistency().is_ok());
+    }
+
+    #[test]
+    fn tune_multi_gpu_split_is_proportional_per_server() {
+        let m = matrix(ModelKind::ResNet18, 16);
+        let mut cluster = Cluster::homogeneous(ServerSpec::default(), 2);
+        let reqs = vec![request(0, 16, &m)];
+        let grants = Tune::default().allocate(&mut cluster, &reqs);
+        let g = &grants[&JobId(0)];
+        assert_eq!(g.placement.span(), 2);
+        for share in g.placement.shares.values() {
+            let per_gpu_cpu = share.cpus / share.gpus as f64;
+            let expect = g.demand.cpus / 16.0;
+            assert!((per_gpu_cpu - expect).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn tune_worst_case_degrades_to_proportional() {
+        // All-sensitive split (paper Fig 11c): with every job hungry,
+        // TUNE must still place everyone (at ~proportional), matching
+        // the "never worse than GPU-proportional" guarantee.
+        let m5 = matrix(ModelKind::M5, 1);
+        let shuffle = matrix(ModelKind::ShuffleNetV2, 1);
+        let mut cluster = Cluster::homogeneous(ServerSpec::default(), 2);
+        let mut reqs = Vec::new();
+        for i in 0..8 {
+            reqs.push(request(i, 1, &m5));
+        }
+        for i in 8..16 {
+            reqs.push(request(i, 1, &shuffle));
+        }
+        let grants = Tune::default().allocate(&mut cluster, &reqs);
+        assert_eq!(grants.len(), 16);
+        assert_eq!(cluster.free_gpus(), 0);
+        assert!(cluster.check_consistency().is_ok());
+    }
+}

@@ -1,0 +1,185 @@
+//! Cluster metrics: JCT statistics, makespan, utilization timeseries
+//! (everything the paper's evaluation section reports).
+
+use crate::util::stats::{cdf, mean, percentile};
+
+/// JCT summary for a set of finished jobs.
+#[derive(Debug, Clone)]
+pub struct JctStats {
+    pub n: usize,
+    pub avg_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+    pub max_s: f64,
+}
+
+impl JctStats {
+    pub fn from_jcts(jcts: &[f64]) -> JctStats {
+        JctStats {
+            n: jcts.len(),
+            avg_s: mean(jcts),
+            p50_s: percentile(jcts, 50.0),
+            p95_s: percentile(jcts, 95.0),
+            p99_s: percentile(jcts, 99.0),
+            max_s: jcts.iter().cloned().fold(0.0, f64::max),
+        }
+    }
+
+    pub fn avg_hrs(&self) -> f64 {
+        self.avg_s / 3600.0
+    }
+
+    pub fn p99_hrs(&self) -> f64 {
+        self.p99_s / 3600.0
+    }
+}
+
+/// Short/long split (paper §5.3.1 uses a 4-hour boundary).
+pub const SHORT_JOB_BOUNDARY_S: f64 = 4.0 * 3600.0;
+
+/// Split JCTs into (short, long) by the paper's 4-hour boundary on the
+/// *baseline duration* of the job.
+pub fn split_short_long(
+    jcts_and_durations: &[(f64, f64)],
+) -> (Vec<f64>, Vec<f64>) {
+    let mut short = Vec::new();
+    let mut long = Vec::new();
+    for &(jct, dur) in jcts_and_durations {
+        if dur < SHORT_JOB_BOUNDARY_S {
+            short.push(jct);
+        } else {
+            long.push(jct);
+        }
+    }
+    (short, long)
+}
+
+/// One utilization sample (per scheduling round).
+#[derive(Debug, Clone, Copy)]
+pub struct UtilSample {
+    pub time_s: f64,
+    pub gpu_util: f64,
+    /// CPU *allocation* fraction (cores granted to jobs).
+    pub cpu_util: f64,
+    /// CPU *usage* fraction: cores actively pre-processing, i.e.
+    /// Σ_j progress_rate / prep_rate. This is the quantity Fig 10b plots —
+    /// proportional allocation grants cores that stalled jobs cannot use.
+    pub cpu_used: f64,
+    pub mem_util: f64,
+    pub queued_jobs: usize,
+    pub running_jobs: usize,
+}
+
+/// Rolling recorder for per-round cluster state (Fig 10).
+#[derive(Debug, Clone, Default)]
+pub struct UtilizationLog {
+    pub samples: Vec<UtilSample>,
+}
+
+impl UtilizationLog {
+    pub fn record(&mut self, s: UtilSample) {
+        self.samples.push(s);
+    }
+
+    pub fn mean_gpu_util(&self) -> f64 {
+        mean(&self.samples.iter().map(|s| s.gpu_util).collect::<Vec<_>>())
+    }
+
+    pub fn mean_cpu_util(&self) -> f64 {
+        mean(&self.samples.iter().map(|s| s.cpu_util).collect::<Vec<_>>())
+    }
+
+    /// Mean CPU *usage* over the samples where the cluster had running
+    /// jobs (the paper's Fig-10b metric; idle tail excluded so mechanisms
+    /// with shorter makespans are not penalized).
+    pub fn mean_cpu_used_busy(&self) -> f64 {
+        let busy: Vec<f64> = self
+            .samples
+            .iter()
+            .filter(|s| s.running_jobs > 0)
+            .map(|s| s.cpu_used)
+            .collect();
+        mean(&busy)
+    }
+
+    /// Mean GPU allocation over busy samples.
+    pub fn mean_gpu_util_busy(&self) -> f64 {
+        let busy: Vec<f64> = self
+            .samples
+            .iter()
+            .filter(|s| s.running_jobs > 0)
+            .map(|s| s.gpu_util)
+            .collect();
+        mean(&busy)
+    }
+}
+
+/// Per-job speedup of mechanism A over B (Fig 6c): jct_b / jct_a per job.
+pub fn per_job_speedups(jct_a: &[f64], jct_b: &[f64]) -> Vec<f64> {
+    assert_eq!(jct_a.len(), jct_b.len());
+    jct_a
+        .iter()
+        .zip(jct_b)
+        .map(|(&a, &b)| if a > 0.0 { b / a } else { 1.0 })
+        .collect()
+}
+
+/// CDF helper re-exported for the figure benches.
+pub fn jct_cdf(jcts: &[f64], points: usize) -> Vec<(f64, f64)> {
+    cdf(jcts, points)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jct_stats_basic() {
+        let s = JctStats::from_jcts(&[3600.0, 7200.0, 10800.0]);
+        assert_eq!(s.n, 3);
+        assert!((s.avg_hrs() - 2.0).abs() < 1e-9);
+        assert_eq!(s.max_s, 10800.0);
+        assert!(s.p99_s <= s.max_s);
+    }
+
+    #[test]
+    fn short_long_split_at_4h() {
+        let data = vec![
+            (1000.0, 3599.0 * 4.0), // short (just under 4h baseline)
+            (9999.0, 4.1 * 3600.0), // long
+        ];
+        let (short, long) = split_short_long(&data);
+        assert_eq!(short, vec![1000.0]);
+        assert_eq!(long, vec![9999.0]);
+    }
+
+    #[test]
+    fn speedups_elementwise() {
+        let sp = per_job_speedups(&[1.0, 2.0], &[3.0, 2.0]);
+        assert_eq!(sp, vec![3.0, 1.0]);
+    }
+
+    #[test]
+    fn utilization_log_means() {
+        let mut log = UtilizationLog::default();
+        for (g, c, used, running) in
+            [(1.0, 0.5, 0.4, 2), (0.5, 0.7, 0.6, 1), (0.0, 0.0, 0.0, 0)]
+        {
+            log.record(UtilSample {
+                time_s: 0.0,
+                gpu_util: g,
+                cpu_util: c,
+                cpu_used: used,
+                mem_util: 0.0,
+                queued_jobs: 0,
+                running_jobs: running,
+            });
+        }
+        assert!((log.mean_gpu_util() - 0.5).abs() < 1e-9);
+        assert!((log.mean_cpu_util() - 0.4).abs() < 1e-9);
+        // Busy means exclude the idle third sample.
+        assert!((log.mean_cpu_used_busy() - 0.5).abs() < 1e-9);
+        assert!((log.mean_gpu_util_busy() - 0.75).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,78 @@
+//! MinIO cache model (paper §3.1, reference [41]).
+//!
+//! MinIO is a DNN-aware, application-level cache with two properties the
+//! paper leans on:
+//!
+//! 1. **Fixed per-epoch hit rate**: MinIO caches a fixed subset of the
+//!    dataset and never evicts during an epoch, so exactly
+//!    `cached_fraction` of accesses hit, every epoch, regardless of access
+//!    order. This is what makes job throughput *predictable* in the memory
+//!    dimension and enables optimistic profiling.
+//! 2. **Isolation**: each job's cache is carved out of its own memory
+//!    allocation; co-located jobs cannot thrash each other (unlike the OS
+//!    page cache).
+
+/// MinIO cache state for one job: dataset size vs cache capacity.
+#[derive(Debug, Clone, Copy)]
+pub struct MinIoCache {
+    pub dataset_gb: f64,
+    pub cache_gb: f64,
+}
+
+impl MinIoCache {
+    /// `cache_gb` is clamped at 0 (callers may pass mem-minus-working-set).
+    pub fn new(dataset_gb: f64, cache_gb: f64) -> MinIoCache {
+        assert!(dataset_gb > 0.0, "empty dataset");
+        MinIoCache { dataset_gb, cache_gb: cache_gb.max(0.0) }
+    }
+
+    /// Fraction of the dataset resident in cache, in [0, 1].
+    pub fn cached_fraction(&self) -> f64 {
+        (self.cache_gb / self.dataset_gb).min(1.0)
+    }
+
+    /// Per-epoch miss fraction (MinIO property 1).
+    pub fn miss_fraction(&self) -> f64 {
+        1.0 - self.cached_fraction()
+    }
+
+    /// Bytes fetched from storage per epoch, GB.
+    pub fn fetch_gb_per_epoch(&self) -> f64 {
+        self.miss_fraction() * self.dataset_gb
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fully_cached_never_misses() {
+        let c = MinIoCache::new(100.0, 100.0);
+        assert_eq!(c.miss_fraction(), 0.0);
+        let c2 = MinIoCache::new(100.0, 250.0);
+        assert_eq!(c2.miss_fraction(), 0.0);
+    }
+
+    #[test]
+    fn zero_cache_always_misses() {
+        let c = MinIoCache::new(100.0, 0.0);
+        assert_eq!(c.miss_fraction(), 1.0);
+        assert_eq!(c.fetch_gb_per_epoch(), 100.0);
+    }
+
+    #[test]
+    fn partial_cache_is_linear() {
+        let c = MinIoCache::new(200.0, 50.0);
+        assert_eq!(c.cached_fraction(), 0.25);
+        assert_eq!(c.miss_fraction(), 0.75);
+        assert_eq!(c.fetch_gb_per_epoch(), 150.0);
+    }
+
+    #[test]
+    fn negative_cache_clamps_to_zero() {
+        let c = MinIoCache::new(100.0, -5.0);
+        assert_eq!(c.cache_gb, 0.0);
+        assert_eq!(c.miss_fraction(), 1.0);
+    }
+}

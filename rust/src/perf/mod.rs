@@ -1,0 +1,229 @@
+//! Ground-truth performance model: what a job's throughput *actually* is
+//! for a given (GPU, CPU, memory) allocation.
+//!
+//! This module plays the role of the physical hardware in the paper's
+//! experiments. The DNN input pipeline is modeled as three overlapped
+//! stages (the standard data-stall model of [41, 42]):
+//!
+//! ```text
+//!   storage --fetch--> DRAM cache --preprocess(CPU)--> GPU compute
+//! ```
+//!
+//! In steady state the pipeline runs at the rate of its slowest stage:
+//!
+//! ```text
+//!   tput(g, c, m) = min( g * gpu_tput,             -- GPU stage
+//!                        c * cpu_prep_rate,        -- CPU stage
+//!                        fetch_rate(g, m) )        -- storage stage
+//! ```
+//!
+//! The storage stage uses the MinIO cache model ([`cache`]): with `m` GB of
+//! cache over a `dataset_gb` dataset, a fixed fraction `1 - m/dataset` of
+//! accesses per epoch miss and must be fetched at the per-GPU storage
+//! bandwidth (MinIO guarantees exactly this hit rate; paper §3.1).
+//!
+//! The calibration tests at the bottom pin the module to the published
+//! Fig-2 facts (knees, speedups) — see `job/zoo.rs`.
+
+pub mod cache;
+
+use crate::cluster::ServerSpec;
+use crate::job::{ModelKind, PerfCoeffs};
+use cache::MinIoCache;
+
+/// Per-GPU storage bandwidth, MB/s. Models each GPU worker's fair share of
+/// the shared storage path (remote store / disks), the regime in which the
+/// data-stall studies [41, 62] operate.
+pub const STORAGE_BW_MB_PER_GPU: f64 = 25.0;
+
+/// The ground-truth world model handed to simulators and the profiler.
+#[derive(Debug, Clone, Copy)]
+pub struct PerfModel {
+    pub spec: ServerSpec,
+}
+
+impl PerfModel {
+    pub fn new(spec: ServerSpec) -> PerfModel {
+        PerfModel { spec }
+    }
+
+    /// Steady-state training throughput in samples/second for `model`
+    /// running on `gpus` GPUs with `cpus` cores and `mem_gb` GB of cache.
+    ///
+    /// Memory below the model's working-set floor pins throughput to ~0
+    /// (the job thrashes); the scheduler never allocates below the floor
+    /// because the sensitivity matrix reports it as useless.
+    pub fn throughput(
+        &self,
+        model: ModelKind,
+        gpus: u32,
+        cpus: f64,
+        mem_gb: f64,
+    ) -> f64 {
+        let co = model.coeffs();
+        if mem_gb < co.min_mem_gb {
+            return 0.0;
+        }
+        let gpu_rate = gpus as f64 * co.gpu_tput;
+        let cpu_rate = cpus * co.cpu_prep_rate;
+        let fetch_rate = self.fetch_rate(&co, gpus, mem_gb);
+        gpu_rate.min(cpu_rate).min(fetch_rate)
+    }
+
+    /// Storage-stage rate: misses-per-sample × sample size must flow
+    /// through the job's aggregate storage bandwidth.
+    fn fetch_rate(&self, co: &PerfCoeffs, gpus: u32, mem_gb: f64) -> f64 {
+        let cache = MinIoCache::new(co.dataset_gb, mem_gb - co.min_mem_gb);
+        let miss = cache.miss_fraction();
+        if miss <= 0.0 {
+            return f64::INFINITY;
+        }
+        let bw_kb = STORAGE_BW_MB_PER_GPU * 1024.0 * gpus as f64;
+        bw_kb / (miss * co.sample_kb)
+    }
+
+    /// Per-epoch time in seconds (dataset pass at the steady-state rate).
+    /// This is what Fig 2 plots.
+    pub fn epoch_time_s(
+        &self,
+        model: ModelKind,
+        gpus: u32,
+        cpus: f64,
+        mem_gb: f64,
+        samples_per_epoch: f64,
+    ) -> f64 {
+        let t = self.throughput(model, gpus, cpus, mem_gb);
+        if t <= 0.0 {
+            f64::INFINITY
+        } else {
+            samples_per_epoch / t
+        }
+    }
+
+    /// Throughput under GPU-proportional allocation — the fairness floor
+    /// W[C_g, M_g] (paper §4.1).
+    pub fn proportional_throughput(&self, model: ModelKind, gpus: u32) -> f64 {
+        let c = self.spec.cpus as f64 / self.spec.gpus as f64 * gpus as f64;
+        let m = self.spec.mem_gb / self.spec.gpus as f64 * gpus as f64;
+        self.throughput(model, gpus, c, m)
+    }
+
+    /// Max achievable throughput for the job if granted an entire
+    /// server-span worth of CPU/memory.
+    pub fn max_throughput(&self, model: ModelKind, gpus: u32) -> f64 {
+        let span = (gpus as f64 / self.spec.gpus as f64).ceil().max(1.0);
+        self.throughput(
+            model,
+            gpus,
+            self.spec.cpus as f64 * span,
+            self.spec.mem_gb * span,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::ModelKind::*;
+
+    fn world() -> PerfModel {
+        PerfModel::new(ServerSpec::default())
+    }
+
+    /// Fully-cached throughput at c CPUs (the Fig-2a setting).
+    fn cached_tput(m: ModelKind, c: f64) -> f64 {
+        world().throughput(m, 1, c, 1000.0)
+    }
+
+    #[test]
+    fn calibration_alexnet_3_to_12_cpus_is_3_1x() {
+        let s = cached_tput(AlexNet, 12.0) / cached_tput(AlexNet, 3.0);
+        assert!((s - 3.1).abs() < 0.1, "speedup={s}");
+    }
+
+    #[test]
+    fn calibration_resnet18_3_to_9_cpus_is_2_3x() {
+        let s = cached_tput(ResNet18, 9.0) / cached_tput(ResNet18, 3.0);
+        assert!((s - 2.3).abs() < 0.1, "speedup={s}");
+    }
+
+    #[test]
+    fn calibration_shufflenet_needs_more_than_12_cores() {
+        assert!(cached_tput(ShuffleNetV2, 13.0) > cached_tput(ShuffleNetV2, 12.0));
+    }
+
+    #[test]
+    fn calibration_language_models_flat_beyond_1_cpu() {
+        for m in [Gnmt, Lstm, TransformerXl] {
+            let t1 = cached_tput(m, 1.0);
+            let t12 = cached_tput(m, 12.0);
+            assert!((t12 - t1) / t1 < 0.01, "{m:?} not CPU-insensitive");
+        }
+    }
+
+    #[test]
+    fn calibration_resnet18_memory_2x() {
+        // §2.1: ResNet18 (OpenImages) with memory swept from the 62.5 GB
+        // GPU-proportional share to the 500 GB server max speeds up ~2x.
+        let w = world();
+        let lo = w.throughput(ResNet18, 1, 3.0, 62.5);
+        let hi = w.throughput(ResNet18, 1, 3.0, 500.0);
+        let s = hi / lo;
+        assert!((1.7..2.4).contains(&s), "memory speedup={s}");
+    }
+
+    #[test]
+    fn calibration_gnmt_memory_insensitive_at_20gb() {
+        let w = world();
+        let lo = w.throughput(Gnmt, 1, 3.0, 20.0);
+        let hi = w.throughput(Gnmt, 1, 3.0, 500.0);
+        assert!((hi - lo).abs() / hi < 1e-9, "GNMT should be flat: {lo} vs {hi}");
+    }
+
+    #[test]
+    fn below_working_set_is_zero() {
+        assert_eq!(world().throughput(Gnmt, 1, 3.0, 10.0), 0.0);
+    }
+
+    #[test]
+    fn throughput_monotone_in_all_dims() {
+        let w = world();
+        for m in crate::job::ALL_MODELS {
+            let base = w.throughput(m, 1, 3.0, 62.5);
+            assert!(w.throughput(m, 2, 6.0, 125.0) >= base * 1.99);
+            assert!(w.throughput(m, 1, 6.0, 62.5) >= base);
+            assert!(w.throughput(m, 1, 3.0, 125.0) >= base);
+        }
+    }
+
+    #[test]
+    fn proportional_floor_below_max() {
+        let w = world();
+        for m in crate::job::ALL_MODELS {
+            let prop = w.proportional_throughput(m, 1);
+            let max = w.max_throughput(m, 1);
+            assert!(prop > 0.0, "{m:?}");
+            assert!(max >= prop, "{m:?}: prop={prop} max={max}");
+        }
+    }
+
+    #[test]
+    fn epoch_time_is_inverse_throughput() {
+        let w = world();
+        let t = w.throughput(ResNet50, 1, 3.0, 62.5);
+        let e = w.epoch_time_s(ResNet50, 1, 3.0, 62.5, t * 60.0);
+        assert!((e - 60.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn speech_models_are_fetch_bound_at_proportional_share() {
+        // M5's large dataset makes fetch the bottleneck at 62.5 GB.
+        let w = world();
+        let co = M5.coeffs();
+        let prop = w.proportional_throughput(M5, 1);
+        assert!(prop < co.gpu_tput * 0.2, "M5 prop tput too high: {prop}");
+        // ...and memory relieves it substantially.
+        let hi = w.throughput(M5, 1, 3.0, 500.0);
+        assert!(hi / prop > 2.0);
+    }
+}

@@ -1,0 +1,249 @@
+//! Scheduling policies (paper §2.2): the *policy* decides which jobs run
+//! in a round; the *mechanism* ([`crate::mechanism`]) decides where and
+//! with how many fungible resources.
+//!
+//! Implemented: FIFO, SRTF, LAS (Tiresias-style), FTF (Themis-style), plus
+//! the big-data baselines DRF and Tetris used in §5.7. All are expressed
+//! as priority orderings over a job view; round-based preemption comes
+//! from the coordinator re-evaluating the ordering every round.
+
+use crate::job::JobId;
+
+/// The per-job facts a policy may rank on.
+#[derive(Debug, Clone, Copy)]
+pub struct PolicyJobView {
+    pub id: JobId,
+    pub arrival_s: f64,
+    /// Total GPU-seconds of service received so far (LAS).
+    pub attained_service_s: f64,
+    /// Estimated remaining runtime at GPU-proportional throughput (SRTF).
+    pub remaining_est_s: f64,
+    /// Baseline duration under GPU-proportional allocation (FTF).
+    pub duration_prop_s: f64,
+    pub gpus: u32,
+    /// Best-case demand share of the dominant resource (DRF), in [0,1].
+    pub dominant_share: f64,
+    /// Tetris alignment score of the job's demand with cluster free
+    /// resources (higher packs better).
+    pub alignment: f64,
+}
+
+/// A scheduling policy: a total priority order over runnable jobs.
+pub trait SchedulingPolicy: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Sort key: *lower* sorts first (higher priority). Ties broken by
+    /// arrival time then id for determinism.
+    fn key(&self, job: &PolicyJobView, now: f64) -> f64;
+
+    /// Order jobs by priority (highest priority first).
+    fn order(&self, jobs: &mut Vec<PolicyJobView>, now: f64) {
+        jobs.sort_by(|a, b| {
+            self.key(a, now)
+                .partial_cmp(&self.key(b, now))
+                .unwrap()
+                .then(a.arrival_s.partial_cmp(&b.arrival_s).unwrap())
+                .then(a.id.cmp(&b.id))
+        });
+    }
+}
+
+/// First-In-First-Out: priority = arrival time.
+pub struct Fifo;
+
+impl SchedulingPolicy for Fifo {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+    fn key(&self, job: &PolicyJobView, _now: f64) -> f64 {
+        job.arrival_s
+    }
+}
+
+/// Shortest-Remaining-Time-First.
+pub struct Srtf;
+
+impl SchedulingPolicy for Srtf {
+    fn name(&self) -> &'static str {
+        "srtf"
+    }
+    fn key(&self, job: &PolicyJobView, _now: f64) -> f64 {
+        job.remaining_est_s
+    }
+}
+
+/// Least-Attained-Service (Tiresias): priority = GPU-seconds received.
+pub struct Las;
+
+impl SchedulingPolicy for Las {
+    fn name(&self) -> &'static str {
+        "las"
+    }
+    fn key(&self, job: &PolicyJobView, _now: f64) -> f64 {
+        job.attained_service_s * job.gpus as f64
+    }
+}
+
+/// Finish-Time-Fairness (Themis): schedule the job whose projected
+/// sharing penalty ρ = (elapsed + remaining) / ideal-duration is largest.
+pub struct Ftf;
+
+impl SchedulingPolicy for Ftf {
+    fn name(&self) -> &'static str {
+        "ftf"
+    }
+    fn key(&self, job: &PolicyJobView, now: f64) -> f64 {
+        let elapsed = (now - job.arrival_s).max(0.0);
+        let rho = (elapsed + job.remaining_est_s)
+            / job.duration_prop_s.max(1e-9);
+        -rho // largest ρ first
+    }
+}
+
+/// Dominant-Resource-Fairness (big-data baseline, §5.7): progressive
+/// filling — always serve the job with the smallest dominant share.
+pub struct Drf;
+
+impl SchedulingPolicy for Drf {
+    fn name(&self) -> &'static str {
+        "drf"
+    }
+    fn key(&self, job: &PolicyJobView, _now: f64) -> f64 {
+        job.dominant_share
+    }
+}
+
+/// Tetris (big-data baseline, §5.7): pack jobs whose demand vector aligns
+/// best with the free-resource vector first.
+pub struct Tetris;
+
+impl SchedulingPolicy for Tetris {
+    fn name(&self) -> &'static str {
+        "tetris"
+    }
+    fn key(&self, job: &PolicyJobView, _now: f64) -> f64 {
+        -job.alignment // highest alignment first
+    }
+}
+
+/// Look up a policy by CLI name.
+pub fn by_name(name: &str) -> Option<Box<dyn SchedulingPolicy>> {
+    match name {
+        "fifo" => Some(Box::new(Fifo)),
+        "srtf" => Some(Box::new(Srtf)),
+        "las" => Some(Box::new(Las)),
+        "ftf" => Some(Box::new(Ftf)),
+        "drf" => Some(Box::new(Drf)),
+        "tetris" => Some(Box::new(Tetris)),
+        _ => None,
+    }
+}
+
+/// All policy names (for CLI help and sweeps).
+pub const ALL_POLICIES: [&str; 6] = ["fifo", "srtf", "las", "ftf", "drf", "tetris"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(id: u64) -> PolicyJobView {
+        PolicyJobView {
+            id: JobId(id),
+            arrival_s: id as f64,
+            attained_service_s: 0.0,
+            remaining_est_s: 100.0,
+            duration_prop_s: 100.0,
+            gpus: 1,
+            dominant_share: 0.1,
+            alignment: 0.0,
+        }
+    }
+
+    #[test]
+    fn fifo_orders_by_arrival() {
+        let mut jobs = vec![view(2), view(0), view(1)];
+        Fifo.order(&mut jobs, 10.0);
+        let ids: Vec<u64> = jobs.iter().map(|j| j.id.0).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn srtf_prefers_short_jobs() {
+        let mut a = view(0);
+        a.remaining_est_s = 500.0;
+        let mut b = view(1);
+        b.remaining_est_s = 50.0;
+        let mut jobs = vec![a, b];
+        Srtf.order(&mut jobs, 0.0);
+        assert_eq!(jobs[0].id, JobId(1));
+    }
+
+    #[test]
+    fn las_prefers_least_served_weighted_by_gpus() {
+        let mut a = view(0);
+        a.attained_service_s = 100.0;
+        a.gpus = 1;
+        let mut b = view(1);
+        b.attained_service_s = 60.0;
+        b.gpus = 4; // 240 gpu-seconds > 100
+        let mut jobs = vec![b, a];
+        Las.order(&mut jobs, 0.0);
+        assert_eq!(jobs[0].id, JobId(0));
+    }
+
+    #[test]
+    fn ftf_prefers_most_unfair() {
+        let mut a = view(0); // waited long relative to its size
+        a.arrival_s = 0.0;
+        a.duration_prop_s = 10.0;
+        a.remaining_est_s = 10.0;
+        let mut b = view(1);
+        b.arrival_s = 90.0;
+        b.duration_prop_s = 1000.0;
+        b.remaining_est_s = 1000.0;
+        let mut jobs = vec![b, a];
+        Ftf.order(&mut jobs, 100.0);
+        assert_eq!(jobs[0].id, JobId(0)); // rho = 110/10 >> (10+1000)/1000
+    }
+
+    #[test]
+    fn drf_progressive_filling() {
+        let mut a = view(0);
+        a.dominant_share = 0.5;
+        let mut b = view(1);
+        b.dominant_share = 0.125;
+        let mut jobs = vec![a, b];
+        Drf.order(&mut jobs, 0.0);
+        assert_eq!(jobs[0].id, JobId(1));
+    }
+
+    #[test]
+    fn tetris_highest_alignment_first() {
+        let mut a = view(0);
+        a.alignment = 1.0;
+        let mut b = view(1);
+        b.alignment = 5.0;
+        let mut jobs = vec![a, b];
+        Tetris.order(&mut jobs, 0.0);
+        assert_eq!(jobs[0].id, JobId(1));
+    }
+
+    #[test]
+    fn ties_break_deterministically() {
+        let mut jobs = vec![view(5), view(3), view(4)];
+        for j in &mut jobs {
+            j.arrival_s = 0.0;
+        }
+        Fifo.order(&mut jobs, 0.0);
+        let ids: Vec<u64> = jobs.iter().map(|j| j.id.0).collect();
+        assert_eq!(ids, vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn by_name_covers_all() {
+        for n in ALL_POLICIES {
+            assert!(by_name(n).is_some(), "{n}");
+        }
+        assert!(by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,255 @@
+//! The resource sensitivity matrix `W_j[c, m]` (paper Fig 4) and the
+//! queries the scheduling mechanisms make against it.
+
+use crate::job::{DemandVector, ModelKind};
+
+/// Job throughput over a discrete (CPU, memory) grid, plus the
+/// GPU-proportional reference point.
+#[derive(Debug, Clone)]
+pub struct SensitivityMatrix {
+    pub model: ModelKind,
+    pub gpus: u32,
+    /// Total-CPU grid (integral cores, ascending).
+    pub cpu_points: Vec<f64>,
+    /// Total-memory grid in GB (ascending).
+    pub mem_points: Vec<f64>,
+    /// tput[ci][mi] in samples/second.
+    pub tput: Vec<Vec<f64>>,
+    /// GPU-proportional allocation (C_g, M_g).
+    pub prop_cpus: f64,
+    pub prop_mem_gb: f64,
+}
+
+impl SensitivityMatrix {
+    pub fn new(
+        model: ModelKind,
+        gpus: u32,
+        cpu_points: Vec<f64>,
+        mem_points: Vec<f64>,
+        tput: Vec<Vec<f64>>,
+        prop_cpus: f64,
+        prop_mem_gb: f64,
+    ) -> SensitivityMatrix {
+        assert_eq!(tput.len(), cpu_points.len());
+        assert!(tput.iter().all(|r| r.len() == mem_points.len()));
+        SensitivityMatrix {
+            model,
+            gpus,
+            cpu_points,
+            mem_points,
+            tput,
+            prop_cpus,
+            prop_mem_gb,
+        }
+    }
+
+    /// Throughput at an arbitrary (c, m): the grid cell at-or-below the
+    /// request (conservative — never over-promises).
+    pub fn throughput_at(&self, cpus: f64, mem_gb: f64) -> f64 {
+        let ci = match self
+            .cpu_points
+            .iter()
+            .rposition(|&c| c <= cpus + 1e-9)
+        {
+            Some(i) => i,
+            None => return 0.0,
+        };
+        let mi = match self
+            .mem_points
+            .iter()
+            .rposition(|&m| m <= mem_gb + 1e-9)
+        {
+            Some(i) => i,
+            None => return 0.0,
+        };
+        self.tput[ci][mi]
+    }
+
+    /// Throughput at the GPU-proportional allocation: the fairness floor
+    /// `W[C_g, M_g]` (paper §4.1 constraint 5).
+    pub fn proportional_throughput(&self) -> f64 {
+        self.throughput_at(self.prop_cpus, self.prop_mem_gb)
+    }
+
+    /// Peak throughput anywhere on the grid.
+    pub fn max_throughput(&self) -> f64 {
+        self.tput
+            .iter()
+            .flat_map(|r| r.iter())
+            .cloned()
+            .fold(0.0, f64::max)
+    }
+
+    /// The job demand vector (paper §3.2): the *minimum* (c, m) whose
+    /// throughput reaches `saturation` × peak (the paper picks the point
+    /// where returns diminish; we use saturation = 0.98 by default via
+    /// [`SensitivityMatrix::best_demand`]).
+    pub fn demand_at_saturation(&self, saturation: f64) -> DemandVector {
+        // Never target below the proportional floor: granting the
+        // best-case demand must never degrade a job below its
+        // GPU-proportional throughput (paper §2.2).
+        let target = (self.max_throughput() * saturation)
+            .max(self.proportional_throughput());
+        // min CPU first, then min memory at that CPU (CPU is the scarcer
+        // resource at ratio 3).
+        for (ci, &c) in self.cpu_points.iter().enumerate() {
+            let best_mem_tput = self.tput[ci]
+                .iter()
+                .cloned()
+                .fold(0.0, f64::max);
+            if best_mem_tput + 1e-12 >= target {
+                for (mi, &m) in self.mem_points.iter().enumerate() {
+                    if self.tput[ci][mi] + 1e-12 >= target {
+                        return DemandVector::new(self.gpus, c, m);
+                    }
+                }
+            }
+        }
+        // Fallback: everything (should not happen with a proper grid).
+        DemandVector::new(
+            self.gpus,
+            *self.cpu_points.last().unwrap(),
+            *self.mem_points.last().unwrap(),
+        )
+    }
+
+    /// Default best-case demand (98% of peak — the knee of the curve).
+    pub fn best_demand(&self) -> DemandVector {
+        self.demand_at_saturation(0.98)
+    }
+
+    /// Pareto-pruned allocation options for the OPT ILP: grid points whose
+    /// throughput (a) meets the fairness floor and (b) is not dominated by
+    /// a cheaper point. Returns (cpus, mem_gb, tput) ascending by cost.
+    pub fn pareto_options(&self) -> Vec<(f64, f64, f64)> {
+        self.pareto_options_with_floor(self.proportional_throughput())
+    }
+
+    /// [`Self::pareto_options`] against an explicit fairness floor — the
+    /// heterogeneous OPT (paper A.2.3, constraint 26) floors against the
+    /// oracle `W_j^Fair` rather than this type's proportional point.
+    pub fn pareto_options_with_floor(
+        &self,
+        floor: f64,
+    ) -> Vec<(f64, f64, f64)> {
+        let mut opts: Vec<(f64, f64, f64)> = Vec::new();
+        for (ci, &c) in self.cpu_points.iter().enumerate() {
+            for (mi, &m) in self.mem_points.iter().enumerate() {
+                let t = self.tput[ci][mi];
+                if t + 1e-9 >= floor && t > 0.0 {
+                    opts.push((c, m, t));
+                }
+            }
+        }
+        // Dominance prune: drop options with another option that is
+        // cheaper-or-equal in both resources and at least as fast.
+        let mut keep: Vec<(f64, f64, f64)> = Vec::new();
+        for &(c, m, t) in &opts {
+            let dominated = opts.iter().any(|&(c2, m2, t2)| {
+                (c2 < c - 1e-9 || m2 < m - 1e-9)
+                    && c2 <= c + 1e-9
+                    && m2 <= m + 1e-9
+                    && t2 + 1e-9 >= t
+            });
+            if !dominated {
+                keep.push((c, m, t));
+            }
+        }
+        // Also drop equal-throughput duplicates, keeping the cheapest.
+        keep.sort_by(|a, b| {
+            (a.0 + a.1 / 12.5)
+                .partial_cmp(&(b.0 + b.1 / 12.5))
+                .unwrap()
+        });
+        let mut out: Vec<(f64, f64, f64)> = Vec::new();
+        for o in keep {
+            if !out.iter().any(|p| (p.2 - o.2).abs() < 1e-9) {
+                out.push(o);
+            }
+        }
+        out
+    }
+
+    /// Always-feasible fallback option: the proportional allocation itself.
+    pub fn proportional_option(&self) -> (f64, f64, f64) {
+        (self.prop_cpus, self.prop_mem_gb, self.proportional_throughput())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ServerSpec;
+    use crate::job::{Job, JobId, ModelKind};
+    use crate::profiler::OptimisticProfiler;
+
+    fn matrix(model: ModelKind, gpus: u32) -> SensitivityMatrix {
+        let p = OptimisticProfiler::noiseless(ServerSpec::default());
+        p.profile(&Job::new(JobId(1), model, gpus, 0.0, 60.0)).matrix
+    }
+
+    #[test]
+    fn throughput_lookup_floors_to_grid() {
+        let m = matrix(ModelKind::ResNet18, 1);
+        let exact = m.throughput_at(3.0, 62.5);
+        let above = m.throughput_at(3.9, 70.0);
+        assert_eq!(exact, above); // floors to (3, 62.5)
+        assert_eq!(m.throughput_at(0.5, 62.5), 0.0); // below grid
+    }
+
+    #[test]
+    fn proportional_floor_positive() {
+        for k in crate::job::ALL_MODELS {
+            let m = matrix(k, 1);
+            assert!(m.proportional_throughput() > 0.0, "{k:?}");
+            assert!(m.max_throughput() >= m.proportional_throughput());
+        }
+    }
+
+    #[test]
+    fn best_demand_cpu_matches_knee() {
+        // ResNet18 knee is 7 cores (zoo calibration).
+        let m = matrix(ModelKind::ResNet18, 1);
+        let d = m.best_demand();
+        assert!((6.0..=9.0).contains(&d.cpus), "cpus={}", d.cpus);
+        // Memory demand must cover the dataset-ish cache need.
+        assert!(d.mem_gb > 62.5, "mem={}", d.mem_gb);
+    }
+
+    #[test]
+    fn language_best_demand_is_tiny() {
+        let m = matrix(ModelKind::Gnmt, 1);
+        let d = m.best_demand();
+        assert!(d.cpus <= 2.0, "cpus={}", d.cpus);
+        assert!(d.mem_gb <= 62.5, "mem={}", d.mem_gb);
+    }
+
+    #[test]
+    fn pareto_options_small_and_valid() {
+        let m = matrix(ModelKind::ResNet18, 1);
+        let opts = m.pareto_options();
+        assert!(!opts.is_empty());
+        assert!(opts.len() <= 60, "{} options survived pruning", opts.len());
+        let floor = m.proportional_throughput();
+        for &(c, mem, t) in &opts {
+            assert!(t + 1e-9 >= floor);
+            assert!(c >= 1.0 && mem >= 12.5);
+        }
+    }
+
+    #[test]
+    fn pareto_contains_a_near_peak_option() {
+        let m = matrix(ModelKind::AlexNet, 1);
+        let opts = m.pareto_options();
+        let peak = m.max_throughput();
+        assert!(opts.iter().any(|&(_, _, t)| t >= peak * 0.98));
+    }
+
+    #[test]
+    fn demand_saturation_monotone() {
+        let m = matrix(ModelKind::ShuffleNetV2, 1);
+        let d90 = m.demand_at_saturation(0.90);
+        let d99 = m.demand_at_saturation(0.99);
+        assert!(d99.cpus >= d90.cpus);
+    }
+}

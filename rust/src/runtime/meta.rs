@@ -1,0 +1,173 @@
+//! Artifact metadata sidecar (`artifacts/<variant>.meta.json`), written by
+//! `python/compile/aot.py` and read here so the rust side knows buffer
+//! shapes, the flat-parameter layout, and per-tensor init rules.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+
+/// One parameter tensor inside the flat vector.
+#[derive(Debug, Clone)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+}
+
+impl ParamEntry {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Fan-in for init scaling (first dim, matching model.py).
+    pub fn fan_in(&self) -> usize {
+        *self.shape.first().unwrap_or(&1)
+    }
+}
+
+/// Parsed metadata for one AOT variant.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub variant: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub param_count: usize,
+    pub train_hlo: String,
+    pub eval_hlo: String,
+    pub params: Vec<ParamEntry>,
+}
+
+impl ArtifactMeta {
+    pub fn from_json(doc: &Json) -> Result<ArtifactMeta> {
+        let get_usize = |key: &str| {
+            doc.get(key)
+                .as_usize()
+                .ok_or_else(|| anyhow!("meta missing '{key}'"))
+        };
+        let get_str = |key: &str| {
+            doc.get(key)
+                .as_str()
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("meta missing '{key}'"))
+        };
+        let params = doc
+            .get("params")
+            .as_arr()
+            .ok_or_else(|| anyhow!("meta missing 'params'"))?
+            .iter()
+            .map(|p| {
+                Ok(ParamEntry {
+                    name: p
+                        .get("name")
+                        .as_str()
+                        .ok_or_else(|| anyhow!("param missing name"))?
+                        .to_string(),
+                    shape: p
+                        .get("shape")
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("param missing shape"))?
+                        .iter()
+                        .map(|d| d.as_usize().unwrap_or(0))
+                        .collect(),
+                    offset: p
+                        .get("offset")
+                        .as_usize()
+                        .ok_or_else(|| anyhow!("param missing offset"))?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ArtifactMeta {
+            variant: get_str("variant")?,
+            vocab: get_usize("vocab")?,
+            d_model: get_usize("d_model")?,
+            n_layers: get_usize("n_layers")?,
+            seq_len: get_usize("seq_len")?,
+            batch: get_usize("batch")?,
+            param_count: get_usize("param_count")?,
+            train_hlo: get_str("train_hlo")?,
+            eval_hlo: get_str("eval_hlo")?,
+            params,
+        })
+    }
+
+    pub fn from_file(path: &str) -> Result<ArtifactMeta> {
+        let text = std::fs::read_to_string(path)?;
+        let doc = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        Self::from_json(&doc)
+    }
+
+    /// Sanity check: offsets contiguous and total == param_count.
+    pub fn validate(&self) -> Result<()> {
+        let mut off = 0usize;
+        for p in &self.params {
+            if p.offset != off {
+                return Err(anyhow!(
+                    "param {} offset {} != expected {off}",
+                    p.name, p.offset
+                ));
+            }
+            off += p.len();
+        }
+        if off != self.param_count {
+            return Err(anyhow!(
+                "param_count {} != layout total {off}",
+                self.param_count
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_doc() -> Json {
+        Json::parse(
+            r#"{"variant": "tiny", "vocab": 256, "d_model": 64,
+                "n_layers": 2, "n_heads": 4, "d_ff": 256, "seq_len": 32,
+                "batch": 4, "param_count": 20,
+                "train_hlo": "train_step_tiny.hlo.txt",
+                "eval_hlo": "eval_step_tiny.hlo.txt",
+                "params": [
+                  {"name": "a", "shape": [2, 5], "offset": 0},
+                  {"name": "b", "shape": [10], "offset": 10}
+                ]}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_and_validates() {
+        let meta = ArtifactMeta::from_json(&sample_doc()).unwrap();
+        assert_eq!(meta.variant, "tiny");
+        assert_eq!(meta.params.len(), 2);
+        assert_eq!(meta.params[0].len(), 10);
+        assert_eq!(meta.params[0].fan_in(), 2);
+        assert!(meta.validate().is_ok());
+    }
+
+    #[test]
+    fn bad_offsets_detected() {
+        let mut meta = ArtifactMeta::from_json(&sample_doc()).unwrap();
+        meta.params[1].offset = 11;
+        assert!(meta.validate().is_err());
+    }
+
+    #[test]
+    fn reads_real_artifact_if_present() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/tiny.meta.json");
+        if std::path::Path::new(path).exists() {
+            let meta = ArtifactMeta::from_file(path).unwrap();
+            assert_eq!(meta.variant, "tiny");
+            assert!(meta.validate().is_ok());
+            assert!(meta.param_count > 100_000);
+        }
+    }
+}

@@ -1,0 +1,56 @@
+//! PJRT runtime: load AOT HLO-text artifacts and run training steps.
+//!
+//! The bridge between Layer 3 (this crate) and Layers 1-2 (the JAX/Pallas
+//! compute lowered by `python/compile/aot.py`). HLO **text** is the
+//! interchange format — xla_extension 0.5.1 rejects jax≥0.5's 64-bit
+//! instruction-id protos, but its text parser reassigns ids.
+//!
+//! [`Trainer`] keeps the flat parameter and momentum vectors as
+//! device-resident [`xla::PjRtBuffer`]s and feeds each step's outputs back
+//! as the next step's inputs (`execute_b`), so the per-step host traffic
+//! is just the token batch and the scalar loss.
+
+mod meta;
+mod trainer;
+
+pub use meta::ArtifactMeta;
+pub use trainer::{SyntheticCorpus, Trainer};
+
+use anyhow::{Context, Result};
+
+/// A loaded PJRT CPU client plus compiled executables.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime { client })
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load_hlo(&self, path: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow::anyhow!("parse {path}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {path}: {e:?}"))
+    }
+
+    /// Load a model variant (train + eval executables + metadata) from an
+    /// artifacts directory.
+    pub fn load_variant(&self, artifacts_dir: &str, variant: &str)
+        -> Result<(ArtifactMeta, xla::PjRtLoadedExecutable)>
+    {
+        let meta_path = format!("{artifacts_dir}/{variant}.meta.json");
+        let meta = ArtifactMeta::from_file(&meta_path)
+            .with_context(|| format!("loading {meta_path}"))?;
+        let hlo_path = format!("{artifacts_dir}/{}", meta.train_hlo);
+        let exe = self.load_hlo(&hlo_path)?;
+        Ok((meta, exe))
+    }
+}

@@ -1,0 +1,123 @@
+//! Wall-clock bench harness (criterion is unavailable offline).
+//!
+//! Every `cargo bench` target in `rust/benches/` uses `harness = false`
+//! and drives this module: [`Bench::iter`] warms up, runs timed
+//! iterations, and prints median/mean/p95 per case in a stable,
+//! grep-friendly format that EXPERIMENTS.md quotes directly.
+
+use std::time::{Duration, Instant};
+
+/// Result of timing one case.
+#[derive(Debug, Clone)]
+pub struct Timing {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub mean: Duration,
+    pub p95: Duration,
+}
+
+impl Timing {
+    pub fn report(&self) {
+        println!(
+            "bench {:<44} iters={:<5} median={:>12?} mean={:>12?} p95={:>12?}",
+            self.name, self.iters, self.median, self.mean, self.p95
+        );
+    }
+}
+
+/// Bench runner with configurable warmup/measurement budget.
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub budget: Duration,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup_iters: 2,
+            min_iters: 5,
+            max_iters: 200,
+            budget: Duration::from_secs(3),
+        }
+    }
+}
+
+impl Bench {
+    /// Quick preset for expensive end-to-end cases.
+    pub fn heavy() -> Self {
+        Bench {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 20,
+            budget: Duration::from_secs(5),
+        }
+    }
+
+    /// Time `f`, returning stats. The closure's return value is
+    /// black-boxed to prevent the optimizer from deleting the work.
+    pub fn iter<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Timing {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.min_iters
+            || (samples.len() < self.max_iters && start.elapsed() < self.budget)
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        samples.sort();
+        let median = samples[samples.len() / 2];
+        let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+        let p95_idx =
+            ((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1);
+        let p95 = samples[p95_idx];
+        let timing = Timing {
+            name: name.to_string(),
+            iters: samples.len(),
+            median,
+            mean,
+            p95,
+        };
+        timing.report();
+        timing
+    }
+}
+
+/// Print a table row in the format used by the figure benches:
+/// `row <figure> <series> x=<x> y=<y> [extra]`.
+pub fn row(figure: &str, series: &str, x: f64, y: f64, extra: &str) {
+    if extra.is_empty() {
+        println!("row {figure:<18} {series:<24} x={x:<10} y={y:.4}");
+    } else {
+        println!("row {figure:<18} {series:<24} x={x:<10} y={y:.4} {extra}");
+    }
+}
+
+/// Print a bench section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_runs_and_reports() {
+        let b = Bench {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 5,
+            budget: Duration::from_millis(50),
+        };
+        let t = b.iter("noop", || 1 + 1);
+        assert!(t.iters >= 3 && t.iters <= 5);
+        assert!(t.median <= t.p95);
+    }
+}

@@ -1,0 +1,126 @@
+//! Flag-style CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and a
+//! positional subcommand, which covers every binary in this crate.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand plus `--key value` options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.options.insert(stripped.to_string(), v);
+                } else {
+                    args.options.insert(stripped.to_string(), "true".into());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(a);
+            } else {
+                args.positionals.push(a);
+            }
+        }
+        args
+    }
+
+    /// Parse the process's own arguments.
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("simulate --gpus 128 --policy srtf --verbose");
+        assert_eq!(a.command.as_deref(), Some("simulate"));
+        assert_eq!(a.usize("gpus", 0), 128);
+        assert_eq!(a.get("policy"), Some("srtf"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("run --load=5.5 --out=/tmp/x");
+        assert_eq!(a.f64("load", 0.0), 5.5);
+        assert_eq!(a.get("out"), Some("/tmp/x"));
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let a = parse("bench fig1 fig2");
+        assert_eq!(a.command.as_deref(), Some("bench"));
+        assert_eq!(a.positionals, vec!["fig1", "fig2"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("x");
+        assert_eq!(a.usize("servers", 16), 16);
+        assert_eq!(a.f64("ratio", 3.0), 3.0);
+        assert_eq!(a.get_or("policy", "fifo"), "fifo");
+    }
+
+    #[test]
+    fn boolean_flag_before_another_flag() {
+        let a = parse("cmd --dry-run --gpus 4");
+        assert!(a.flag("dry-run"));
+        assert_eq!(a.usize("gpus", 0), 4);
+    }
+}

@@ -1,0 +1,20 @@
+//! Zero-dependency substrates.
+//!
+//! This crate builds in a fully offline environment where only the `xla`
+//! crate's dependency closure is vendored, so the usual ecosystem crates
+//! (rand, serde, clap, criterion, proptest) are unavailable. Everything
+//! they would have provided is implemented here as small, tested modules:
+//!
+//! - [`rng`] — deterministic PCG64 RNG (uniform/normal/poisson/exp/shuffle)
+//! - [`stats`] — mean/percentile/CDF/histogram helpers
+//! - [`json`] — JSON parse + serialize (artifact metadata, wire protocol)
+//! - [`cli`] — flag-style argument parser
+//! - [`prop`] — property-based testing harness (random cases + shrinking)
+//! - [`bench`] — wall-clock bench harness used by `cargo bench` targets
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

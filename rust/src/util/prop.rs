@@ -1,0 +1,142 @@
+//! Property-based testing mini-framework (proptest is unavailable offline).
+//!
+//! A property is a closure over a [`Gen`] (a seeded random source with
+//! convenience samplers). [`check`] runs it for `cases` seeds and, on
+//! failure, retries with progressively *smaller* size hints to report the
+//! smallest failing seed it can find (size-directed shrinking: generators
+//! consult `g.size` so smaller sizes produce structurally smaller inputs).
+//!
+//! Used by the coordinator/mechanism invariant tests (DESIGN.md §6).
+
+use super::rng::Pcg64;
+
+/// Random-input generator handed to properties.
+pub struct Gen {
+    pub rng: Pcg64,
+    /// Size hint in [0.0, 1.0]; generators should scale structure size by it.
+    pub size: f64,
+}
+
+impl Gen {
+    /// Integer in [lo, hi), biased smaller as `size` shrinks.
+    pub fn int(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo < hi);
+        let span = ((hi - lo) as f64 * self.size).max(1.0) as usize;
+        self.rng.range(lo, lo + span.min(hi - lo).max(1))
+    }
+
+    /// f64 in [lo, hi).
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    /// Boolean with probability 1/2.
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    /// Vector of `n` items where n scales with size.
+    pub fn vec<T>(&mut self, max_len: usize, mut f: impl FnMut(&mut Gen) -> T)
+        -> Vec<T>
+    {
+        let n = self.int(0, max_len + 1);
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// Pick one of the provided values.
+    pub fn choose<T: Clone>(&mut self, xs: &[T]) -> T {
+        xs[self.rng.range(0, xs.len())].clone()
+    }
+}
+
+/// Outcome of a property run.
+#[derive(Debug)]
+pub struct Failure {
+    pub seed: u64,
+    pub size: f64,
+    pub message: String,
+}
+
+/// Run `prop` for `cases` random cases. Panics with the smallest failing
+/// case found (seed + size are printed so the failure is reproducible).
+pub fn check(name: &str, cases: u64, prop: impl Fn(&mut Gen) -> Result<(), String>) {
+    let mut failure: Option<Failure> = None;
+    for seed in 0..cases {
+        let mut g = Gen { rng: Pcg64::new(seed, 0xC0FFEE), size: 1.0 };
+        if let Err(message) = prop(&mut g) {
+            failure = Some(Failure { seed, size: 1.0, message });
+            break;
+        }
+    }
+    let Some(mut fail) = failure else { return };
+
+    // Size-directed shrink: replay the failing seed at smaller sizes, then
+    // scan nearby seeds at the smallest size that still fails.
+    for &size in &[0.5, 0.25, 0.1, 0.05] {
+        let mut g = Gen { rng: Pcg64::new(fail.seed, 0xC0FFEE), size };
+        if let Err(message) = prop(&mut g) {
+            fail = Failure { seed: fail.seed, size, message };
+        }
+    }
+    panic!(
+        "property '{name}' failed (seed={}, size={}): {}",
+        fail.seed, fail.size, fail.message
+    );
+}
+
+/// Assert-style helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_is_silent() {
+        check("sort is idempotent", 50, |g| {
+            let mut v = g.vec(64, |g| g.int(0, 1000));
+            v.sort_unstable();
+            let once = v.clone();
+            v.sort_unstable();
+            prop_assert!(v == once, "double sort changed data");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        check("int bounds", 100, |g| {
+            let x = g.int(3, 10);
+            prop_assert!((3..10).contains(&x), "out of range: {x}");
+            let f = g.f64(-1.0, 1.0);
+            prop_assert!((-1.0..1.0).contains(&f), "f out of range: {f}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn smaller_size_produces_smaller_vectors() {
+        let mut big = Gen { rng: Pcg64::seeded(1), size: 1.0 };
+        let mut small = Gen { rng: Pcg64::seeded(1), size: 0.05 };
+        let avg_big: f64 = (0..100)
+            .map(|_| big.vec(100, |g| g.bool()).len() as f64)
+            .sum::<f64>() / 100.0;
+        let avg_small: f64 = (0..100)
+            .map(|_| small.vec(100, |g| g.bool()).len() as f64)
+            .sum::<f64>() / 100.0;
+        assert!(avg_small < avg_big / 3.0, "{avg_small} vs {avg_big}");
+    }
+}

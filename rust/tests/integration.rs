@@ -1,0 +1,206 @@
+//! Integration tests: whole-system behaviour across modules — trace →
+//! profiler → policy → mechanism → simulator → metrics.
+
+use synergy::cluster::ServerSpec;
+use synergy::job::{Job, JobId, ModelKind};
+use synergy::metrics::JctStats;
+use synergy::sim::{SimConfig, SimResult, Simulator};
+use synergy::trace::{generate, Split, TraceConfig};
+use std::collections::BTreeMap;
+
+fn run(policy: &str, mechanism: &str, jobs: Vec<Job>, servers: usize) -> SimResult {
+    Simulator::new(SimConfig {
+        n_servers: servers,
+        policy: policy.into(),
+        mechanism: mechanism.into(),
+        ..Default::default()
+    })
+    .run(jobs)
+}
+
+fn contended_trace(seed: u64) -> Vec<Job> {
+    generate(&TraceConfig {
+        n_jobs: 200,
+        split: Split::new(40, 40, 20),
+        multi_gpu: false,
+        jobs_per_hour: Some(12.0),
+        seed,
+    })
+}
+
+#[test]
+fn every_policy_mechanism_combination_completes() {
+    let trace = generate(&TraceConfig {
+        n_jobs: 40,
+        split: Split::new(30, 60, 10),
+        multi_gpu: true,
+        jobs_per_hour: Some(6.0),
+        seed: 2,
+    });
+    for policy in synergy::policy::ALL_POLICIES {
+        for mechanism in ["proportional", "tune", "greedy", "fixed"] {
+            let r = run(policy, mechanism, trace.clone(), 2);
+            assert!(
+                r.finished.len() >= 35,
+                "{policy}/{mechanism}: only {} finished",
+                r.finished.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn tune_improves_avg_jct_under_contention() {
+    let trace = contended_trace(3);
+    let prop = run("srtf", "proportional", trace.clone(), 4);
+    let tune = run("srtf", "tune", trace, 4);
+    let (a, b) = (prop.jct_stats().avg_s, tune.jct_stats().avg_s);
+    assert!(b < a, "tune {b} should beat proportional {a}");
+}
+
+#[test]
+fn opt_tracks_or_beats_tune_modestly() {
+    // OPT is an aggregate-throughput bound; its JCT should be in the same
+    // ballpark as TUNE (paper: TUNE within 10% of OPT).
+    let trace = generate(&TraceConfig {
+        n_jobs: 60,
+        split: Split::new(40, 40, 20),
+        multi_gpu: false,
+        jobs_per_hour: Some(8.0),
+        seed: 17,
+    });
+    let tune = run("fifo", "tune", trace.clone(), 2);
+    let opt = run("fifo", "opt", trace, 2);
+    let (t, o) = (tune.jct_stats().avg_s, opt.jct_stats().avg_s);
+    assert!(
+        (t - o).abs() / o < 0.35,
+        "tune {t} vs opt {o} diverge too much"
+    );
+}
+
+#[test]
+fn srtf_beats_fifo_on_avg_jct() {
+    let trace = contended_trace(5);
+    let fifo = run("fifo", "tune", trace.clone(), 4);
+    let srtf = run("srtf", "tune", trace, 4);
+    assert!(
+        srtf.jct_stats().avg_s < fifo.jct_stats().avg_s,
+        "SRTF should beat FIFO on average JCT"
+    );
+}
+
+#[test]
+fn no_individual_job_much_slower_under_tune_static() {
+    // Static trace + FIFO: with identical admission order, per-job JCT
+    // under TUNE must never exceed proportional by more than round
+    // quantization (the paper's "no job below GPU-proportional" claim,
+    // Fig 6c: no slowdowns).
+    let trace = generate(&TraceConfig {
+        n_jobs: 48,
+        split: Split::new(50, 30, 20),
+        multi_gpu: false,
+        jobs_per_hour: None,
+        seed: 7,
+    });
+    let prop = run("fifo", "proportional", trace.clone(), 2);
+    let tune = run("fifo", "tune", trace, 2);
+    let index = |r: &SimResult| -> BTreeMap<u64, f64> {
+        r.finished.iter().map(|f| (f.id.0, f.jct_s)).collect()
+    };
+    let p = index(&prop);
+    let t = index(&tune);
+    for (id, jt) in &t {
+        let jp = p[id];
+        assert!(
+            *jt <= jp * 1.10 + 600.0,
+            "job {id} slower under tune: {jt} vs {jp}"
+        );
+    }
+}
+
+#[test]
+fn greedy_strands_gpus_on_hungry_split() {
+    // §5.4: with an all-sensitive split, GREEDY leaves GPUs idle while
+    // TUNE keeps them allocated.
+    let trace = generate(&TraceConfig {
+        n_jobs: 64,
+        split: Split::new(50, 0, 50),
+        multi_gpu: false,
+        jobs_per_hour: None,
+        seed: 11,
+    });
+    let greedy = run("fifo", "greedy", trace.clone(), 2);
+    let tune = run("fifo", "tune", trace, 2);
+    assert!(
+        greedy.utilization.mean_gpu_util()
+            < tune.utilization.mean_gpu_util(),
+        "greedy {:.2} should under-utilize vs tune {:.2}",
+        greedy.utilization.mean_gpu_util(),
+        tune.utilization.mean_gpu_util()
+    );
+    assert!(
+        greedy.jct_stats().avg_s > tune.jct_stats().avg_s,
+        "greedy should lose on JCT under the hungry split"
+    );
+}
+
+#[test]
+fn profiling_cost_accounted_once_per_job() {
+    let trace = generate(&TraceConfig {
+        n_jobs: 25,
+        jobs_per_hour: Some(6.0),
+        ..Default::default()
+    });
+    let r = run("fifo", "tune", trace, 2);
+    // Each job profiles once; adaptive sweep uses >=2 and <=49 points.
+    assert!(r.profiling_minutes >= 2.0 * 25.0);
+    assert!(r.profiling_minutes <= 49.0 * 25.0);
+}
+
+#[test]
+fn multi_gpu_jobs_fragment_only_when_necessary() {
+    // A 16-GPU job must span exactly 2 default servers.
+    let mut job = Job::new(JobId(0), ModelKind::Gnmt, 16, 0.0, 1800.0);
+    job.rng_stream = 0;
+    let r = run("fifo", "tune", vec![job], 4);
+    assert_eq!(r.finished.len(), 1);
+    // JCT close to baseline (GNMT insensitive).
+    let jct = r.finished[0].jct_s;
+    assert!((jct - 1800.0).abs() < 400.0, "16-GPU GNMT JCT {jct}");
+}
+
+#[test]
+fn higher_load_never_reduces_avg_jct() {
+    let mut prev = 0.0;
+    for load in [4.0, 8.0, 12.0] {
+        let trace = generate(&TraceConfig {
+            n_jobs: 150,
+            split: Split::new(30, 60, 10),
+            multi_gpu: false,
+            jobs_per_hour: Some(load),
+            seed: 21,
+        });
+        let r = run("fifo", "proportional", trace, 2);
+        let avg = r.jct_stats().avg_s;
+        assert!(
+            avg + 1.0 >= prev,
+            "avg JCT decreased with load: {avg} < {prev}"
+        );
+        prev = avg;
+    }
+}
+
+#[test]
+fn jct_stats_and_finished_jobs_consistent() {
+    let trace = contended_trace(31);
+    let n = trace.len();
+    let r = run("las", "tune", trace, 4);
+    assert_eq!(r.finished.len(), n);
+    let stats = r.jct_stats();
+    assert_eq!(stats.n, n);
+    let manual_avg: f64 =
+        r.finished.iter().map(|f| f.jct_s).sum::<f64>() / n as f64;
+    assert!((stats.avg_s - manual_avg).abs() < 1e-6);
+    let recomputed = JctStats::from_jcts(&r.jcts());
+    assert_eq!(recomputed.p99_s, stats.p99_s);
+}

@@ -1,0 +1,439 @@
+//! Property-based tests over the coordinator invariants (DESIGN.md §6),
+//! using the in-crate property harness (`util::prop`).
+//!
+//! The invariants:
+//! 1. No overallocation: cluster bookkeeping consistent after any round.
+//! 2. Fairness floor: TUNE never grants a job throughput below its
+//!    GPU-proportional throughput.
+//! 3. No stranded GPUs: under TUNE, a runnable job is unplaced only if
+//!    its GPU demand cannot be met.
+//! 4. Placement shape: multi-server placements split CPU/mem
+//!    proportionally to GPUs.
+//! 5. Simulator: JCT >= baseline-duration is not required (jobs can beat
+//!    baseline), but JCT > 0 and all jobs finish on an idle-enough
+//!    cluster; runs are deterministic.
+
+use synergy::cluster::{Cluster, ServerSpec};
+use synergy::job::{DemandVector, Job, JobId, ModelKind, ALL_MODELS};
+use synergy::mechanism::{by_name, JobRequest, Mechanism};
+use synergy::profiler::{OptimisticProfiler, SensitivityMatrix};
+use synergy::prop_assert;
+use synergy::sim::{SimConfig, Simulator};
+use synergy::trace::{generate, Split, TraceConfig};
+use synergy::util::prop::{check, Gen};
+
+fn random_requests(
+    g: &mut Gen,
+    profiler: &OptimisticProfiler,
+) -> (Vec<Job>, Vec<SensitivityMatrix>) {
+    let n = g.int(1, 24);
+    let jobs: Vec<Job> = (0..n)
+        .map(|i| {
+            let model = g.choose(&ALL_MODELS);
+            let gpus = g.choose(&[1u32, 1, 1, 2, 4, 8, 16]);
+            Job::new(JobId(i as u64), model, gpus, 0.0, 3600.0)
+        })
+        .collect();
+    let matrices = jobs.iter().map(|j| profiler.profile(j).matrix).collect();
+    (jobs, matrices)
+}
+
+fn to_requests<'a>(
+    jobs: &'a [Job],
+    matrices: &'a [SensitivityMatrix],
+) -> Vec<JobRequest<'a>> {
+    jobs.iter()
+        .zip(matrices)
+        .map(|(j, m)| JobRequest {
+            id: j.id,
+            gpus: j.gpus,
+            best: m.best_demand(),
+            prop: DemandVector::proportional(j.gpus, 3.0, 62.5),
+            matrix: m,
+        })
+        .collect()
+}
+
+#[test]
+fn prop_cluster_consistent_after_any_allocation() {
+    let spec = ServerSpec::default();
+    let profiler = OptimisticProfiler::noiseless(spec);
+    check("cluster consistency", 25, |g| {
+        let (jobs, matrices) = random_requests(g, &profiler);
+        let requests = to_requests(&jobs, &matrices);
+        let mech_name = g.choose(&["proportional", "greedy", "tune", "fixed"]);
+        let mech = by_name(&mech_name).unwrap();
+        let mut cluster = Cluster::homogeneous(spec, g.int(1, 9));
+        let grants = mech.allocate(&mut cluster, &requests);
+        cluster.check_consistency().map_err(|e| format!("{mech_name}: {e}"))?;
+        // Grants must not exceed any server capacity (checked by
+        // consistency) and granted GPUs must match the job demand.
+        for (id, grant) in &grants {
+            let job = jobs.iter().find(|j| j.id == *id).unwrap();
+            prop_assert!(
+                grant.placement.total().gpus == job.gpus,
+                "{mech_name}: job {id:?} got {} GPUs, wanted {}",
+                grant.placement.total().gpus,
+                job.gpus
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tune_fairness_floor() {
+    let spec = ServerSpec::default();
+    let profiler = OptimisticProfiler::noiseless(spec);
+    let tune = by_name("tune").unwrap();
+    check("tune fairness floor", 25, |g| {
+        let (jobs, matrices) = random_requests(g, &profiler);
+        let requests = to_requests(&jobs, &matrices);
+        let mut cluster = Cluster::homogeneous(spec, g.int(1, 9));
+        let grants = tune.allocate(&mut cluster, &requests);
+        for req in &requests {
+            if let Some(grant) = grants.get(&req.id) {
+                let got = req
+                    .matrix
+                    .throughput_at(grant.demand.cpus, grant.demand.mem_gb);
+                let floor = req.matrix.proportional_throughput();
+                prop_assert!(
+                    got + 1e-6 >= floor,
+                    "job {:?} ({:?}): got {got} < floor {floor} \
+                     (granted {:?})",
+                    req.id,
+                    req.matrix.model,
+                    grant.demand
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tune_no_stranded_gpus() {
+    let spec = ServerSpec::default();
+    let profiler = OptimisticProfiler::noiseless(spec);
+    let tune = by_name("tune").unwrap();
+    check("tune no stranded GPUs", 25, |g| {
+        // All 1-GPU jobs, exactly filling the cluster: every job must be
+        // placed regardless of how hungry the mix is.
+        let n_servers = g.int(1, 5);
+        let n = n_servers * 8;
+        let jobs: Vec<Job> = (0..n)
+            .map(|i| {
+                Job::new(
+                    JobId(i as u64),
+                    g.choose(&ALL_MODELS),
+                    1,
+                    0.0,
+                    3600.0,
+                )
+            })
+            .collect();
+        let matrices: Vec<SensitivityMatrix> =
+            jobs.iter().map(|j| profiler.profile(j).matrix).collect();
+        let requests = to_requests(&jobs, &matrices);
+        let mut cluster = Cluster::homogeneous(spec, n_servers);
+        let grants = tune.allocate(&mut cluster, &requests);
+        prop_assert!(
+            grants.len() == n,
+            "only {} of {n} jobs placed; {} GPUs stranded",
+            grants.len(),
+            cluster.free_gpus()
+        );
+        prop_assert!(
+            cluster.free_gpus() == 0,
+            "{} GPUs free at full load",
+            cluster.free_gpus()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_multi_server_splits_proportional() {
+    let spec = ServerSpec::default();
+    let profiler = OptimisticProfiler::noiseless(spec);
+    let tune = by_name("tune").unwrap();
+    check("proportional split", 15, |g| {
+        let gpus = g.choose(&[16u32, 24, 32]);
+        let model = g.choose(&ALL_MODELS);
+        let job = Job::new(JobId(0), model, gpus, 0.0, 3600.0);
+        let matrix = profiler.profile(&job).matrix;
+        let jobs = vec![job];
+        let matrices = vec![matrix];
+        let requests = to_requests(&jobs, &matrices);
+        let mut cluster = Cluster::homogeneous(spec, 8);
+        let grants = tune.allocate(&mut cluster, &requests);
+        let grant = grants
+            .get(&JobId(0))
+            .ok_or("big job unplaced on empty cluster")?;
+        let total = grant.demand;
+        for share in grant.placement.shares.values() {
+            let expect_cpu = total.cpus * share.gpus as f64 / gpus as f64;
+            let expect_mem = total.mem_gb * share.gpus as f64 / gpus as f64;
+            prop_assert!(
+                (share.cpus - expect_cpu).abs() < 1e-6
+                    && (share.mem_gb - expect_mem).abs() < 1e-6,
+                "share {share:?} not proportional to {total:?}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_simulator_deterministic_and_complete() {
+    check("simulator determinism", 5, |g| {
+        let seed = g.int(0, 1000) as u64;
+        let trace = generate(&TraceConfig {
+            n_jobs: g.int(5, 40),
+            split: Split::new(30, 60, 10),
+            multi_gpu: g.bool(),
+            jobs_per_hour: if g.bool() { Some(g.f64(2.0, 10.0)) } else { None },
+            seed,
+        });
+        let mk = || {
+            Simulator::new(SimConfig {
+                n_servers: 2,
+                policy: "srtf".into(),
+                mechanism: "tune".into(),
+                ..Default::default()
+            })
+        };
+        let a = mk().run(trace.clone());
+        let b = mk().run(trace.clone());
+        prop_assert!(a.jcts() == b.jcts(), "nondeterministic JCTs");
+        prop_assert!(
+            a.finished.len() == trace.len(),
+            "{} of {} jobs finished",
+            a.finished.len(),
+            trace.len()
+        );
+        prop_assert!(
+            a.jcts().iter().all(|&j| j > 0.0 && j.is_finite()),
+            "bad JCT values"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_opt_bounds_tune_throughput() {
+    let spec = ServerSpec::default();
+    let profiler = OptimisticProfiler::noiseless(spec);
+    check("opt upper-bounds tune", 6, |g| {
+        let n_servers = g.int(1, 3);
+        let n = g.int(2, n_servers * 8 + 1);
+        let jobs: Vec<Job> = (0..n)
+            .map(|i| {
+                Job::new(JobId(i as u64), g.choose(&ALL_MODELS), 1, 0.0, 60.0)
+            })
+            .collect();
+        let matrices: Vec<SensitivityMatrix> =
+            jobs.iter().map(|j| profiler.profile(j).matrix).collect();
+        let requests = to_requests(&jobs, &matrices);
+
+        let opt = synergy::mechanism::Opt::default();
+        let cluster = Cluster::homogeneous(spec, n_servers);
+        let alloc = opt
+            .solve_allocation(&cluster, &requests)
+            .ok_or("opt failed")?;
+
+        let tune = by_name("tune").unwrap();
+        let mut cluster2 = Cluster::homogeneous(spec, n_servers);
+        let grants = tune.allocate(&mut cluster2, &requests);
+        let tune_total: f64 = requests
+            .iter()
+            .filter_map(|r| grants.get(&r.id).map(|grant| (r, grant)))
+            .map(|(r, grant)| {
+                r.matrix.throughput_at(grant.demand.cpus, grant.demand.mem_gb)
+            })
+            .sum();
+        prop_assert!(
+            alloc.objective + 1e-3 >= tune_total,
+            "opt {} < tune {}",
+            alloc.objective,
+            tune_total
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lp_solutions_feasible() {
+    use synergy::lp::{solve, Lp, Op};
+    check("random LP feasibility", 25, |g| {
+        let n = g.int(1, 30);
+        let m = g.int(1, 15);
+        let mut lp = Lp::new(n);
+        for j in 0..n {
+            lp.set_objective(j, g.f64(0.0, 2.0));
+        }
+        for _ in 0..m {
+            let coeffs: Vec<(usize, f64)> =
+                (0..n).map(|j| (j, g.f64(0.1, 1.0))).collect();
+            lp.add(coeffs, Op::Le, g.f64(1.0, 20.0));
+        }
+        let sol = solve(&lp).map_err(|e| format!("{e:?}"))?;
+        for (i, c) in lp.constraints.iter().enumerate() {
+            let lhs: f64 = c.coeffs.iter().map(|&(j, v)| v * sol.x[j]).sum();
+            prop_assert!(
+                lhs <= c.rhs + 1e-6,
+                "constraint {i} violated: {lhs} > {}",
+                c.rhs
+            );
+        }
+        prop_assert!(
+            sol.x.iter().all(|&v| v >= -1e-9),
+            "negative variable in solution"
+        );
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Heterogeneous extension (paper A.2) invariants
+// ---------------------------------------------------------------------------
+
+mod hetero_props {
+    use super::*;
+    use synergy::hetero::{
+        het_by_name, GpuGen, HetJobRequest, HeteroCluster, HeteroProfiler,
+        HeteroSensitivity, TypeSpec, ALL_HET_MECHANISMS,
+    };
+
+    fn random_het_cluster(g: &mut Gen) -> HeteroCluster {
+        let spec = ServerSpec::default();
+        let gens = [GpuGen::K80, GpuGen::P100, GpuGen::V100, GpuGen::A100];
+        let n_types = g.int(2, 3);
+        let types: Vec<TypeSpec> = gens[..n_types]
+            .iter()
+            .map(|&gen| TypeSpec { gen, spec, machines: g.int(1, 4) })
+            .collect();
+        HeteroCluster::new(&types)
+    }
+
+    fn random_het_jobs(
+        g: &mut Gen,
+        cluster: &HeteroCluster,
+    ) -> (Vec<Job>, Vec<HeteroSensitivity>) {
+        let profiler = HeteroProfiler::noiseless(cluster);
+        let n = g.int(1, 16);
+        let jobs: Vec<Job> = (0..n)
+            .map(|i| {
+                let model = g.choose(&ALL_MODELS);
+                let gpus = g.choose(&[1u32, 1, 2, 4, 8]);
+                Job::new(JobId(i as u64), model, gpus, 0.0, 3600.0)
+            })
+            .collect();
+        let sens = jobs.iter().map(|j| profiler.profile(j)).collect();
+        (jobs, sens)
+    }
+
+    #[test]
+    fn prop_het_cluster_consistent_and_single_type() {
+        check("hetero consistency + no cross-type spans", 20, |g| {
+            let mut cluster = random_het_cluster(g);
+            let (jobs, sens) = random_het_jobs(g, &cluster);
+            let reqs: Vec<HetJobRequest> = jobs
+                .iter()
+                .zip(&sens)
+                .map(|(j, s)| HetJobRequest {
+                    id: j.id,
+                    gpus: j.gpus,
+                    sens: s,
+                })
+                .collect();
+            let name = g.choose(&ALL_HET_MECHANISMS);
+            let mech = het_by_name(name).unwrap();
+            let grants = mech.allocate(&mut cluster, &reqs);
+            cluster
+                .check_consistency()
+                .map_err(|e| format!("{name}: {e}"))?;
+            for (id, grant) in &grants {
+                // A.2.2: a job never spans two machine types in a round —
+                // its whole placement lives in the chosen group.
+                prop_assert!(
+                    cluster.host_gen(*id) == Some(grant.gen),
+                    "{name}: job {id:?} not hosted on its granted type"
+                );
+                let job = jobs.iter().find(|j| j.id == *id).unwrap();
+                prop_assert!(
+                    grant.grant.placement.total().gpus == job.gpus,
+                    "{name}: wrong GPU count for {id:?}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_het_fairness_floor() {
+        check("hetero fairness floor (W_fair oracle)", 20, |g| {
+            let mut cluster = random_het_cluster(g);
+            let (jobs, sens) = random_het_jobs(g, &cluster);
+            let reqs: Vec<HetJobRequest> = jobs
+                .iter()
+                .zip(&sens)
+                .map(|(j, s)| HetJobRequest {
+                    id: j.id,
+                    gpus: j.gpus,
+                    sens: s,
+                })
+                .collect();
+            let name = g.choose(&["het-tune", "het-opt"]);
+            let mech = het_by_name(name).unwrap();
+            let grants = mech.allocate(&mut cluster, &reqs);
+            for (j, s) in jobs.iter().zip(&sens) {
+                let Some(grant) = grants.get(&j.id) else { continue };
+                let m = s.matrix(grant.gen).expect("profiled type");
+                let got = m.throughput_at(
+                    grant.grant.demand.cpus,
+                    grant.grant.demand.mem_gb,
+                );
+                prop_assert!(
+                    got + 1e-9 >= s.fair_throughput(),
+                    "{name}: job {:?} below W_fair: {} < {}",
+                    j.id,
+                    got,
+                    s.fair_throughput()
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_het_sim_deterministic_and_complete() {
+        check("hetero sim determinism", 6, |g| {
+            use synergy::hetero::{HeteroSimConfig, HeteroSimulator};
+            let seed = g.int(0, 10_000) as u64;
+            let jobs = generate(&TraceConfig {
+                n_jobs: 20,
+                split: Split::new(30, 50, 20),
+                multi_gpu: g.bool(),
+                jobs_per_hour: None,
+                seed,
+            });
+            let run = || {
+                HeteroSimulator::new(HeteroSimConfig {
+                    policy: "fifo".into(),
+                    mechanism: "het-tune".into(),
+                    ..Default::default()
+                })
+                .run(jobs.clone())
+            };
+            let a = run();
+            let b = run();
+            prop_assert!(a.jcts.len() == jobs.len(), "all jobs finish");
+            prop_assert!(
+                a.jcts == b.jcts,
+                "hetero sim must be bit-deterministic"
+            );
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,174 @@
+//! Integration tests over the PJRT runtime (Layer 1/2 artifacts executed
+//! from rust) and the deploy-mode control plane.
+//!
+//! Runtime tests require `make artifacts` to have produced the `tiny`
+//! variant; they are skipped (with a note) when artifacts are absent so
+//! `cargo test` works on a fresh checkout.
+
+use synergy::deploy::{Leader, LeaderConfig, Worker, WorkerConfig};
+use synergy::runtime::{Runtime, SyntheticCorpus, Trainer};
+use synergy::trace::{generate, Split, TraceConfig};
+use std::sync::Arc;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    if std::path::Path::new(&format!("{dir}/tiny.meta.json")).exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn tiny_variant_trains_and_loss_descends() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().expect("pjrt");
+    let (meta, exe) = rt.load_variant(&dir, "tiny").expect("load tiny");
+    assert_eq!(meta.variant, "tiny");
+    let uniform = (meta.vocab as f64).ln();
+    let mut corpus = SyntheticCorpus::new(meta.vocab, 3);
+    let mut trainer = Trainer::new(&rt.client, exe, meta, 1).expect("trainer");
+    let mut first = 0.0;
+    let mut last = 0.0;
+    for step in 0..30 {
+        let toks = corpus.batch(trainer.meta.batch, trainer.meta.seq_len);
+        let loss = trainer.train_step(&toks, 0.3).expect("step") as f64;
+        assert!(loss.is_finite(), "loss diverged at step {step}");
+        if step == 0 {
+            first = loss;
+            // Fresh init: near the uniform baseline.
+            assert!((loss - uniform).abs() < 1.0, "init loss {loss}");
+        }
+        last = loss;
+    }
+    assert!(last < first - 0.3, "loss did not descend: {first} -> {last}");
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_params() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().expect("pjrt");
+    let (meta, exe) = rt.load_variant(&dir, "tiny").expect("load");
+    let mut corpus = SyntheticCorpus::new(meta.vocab, 4);
+    let mut trainer = Trainer::new(&rt.client, exe, meta, 2).expect("trainer");
+    for _ in 0..3 {
+        let toks = corpus.batch(trainer.meta.batch, trainer.meta.seq_len);
+        trainer.train_step(&toks, 0.1).expect("step");
+    }
+    let ckpt = trainer.params_to_host().expect("checkpoint");
+    assert_eq!(ckpt.len(), trainer.meta.param_count);
+    // Restore into a fresh trainer; next losses must match a trainer that
+    // never checkpointed (same tokens, same params).
+    let (meta2, exe2) = rt.load_variant(&dir, "tiny").expect("load");
+    let mut restored =
+        Trainer::new(&rt.client, exe2, meta2, 99).expect("trainer2");
+    restored.restore(&ckpt).expect("restore");
+    let toks = corpus.batch(trainer.meta.batch, trainer.meta.seq_len);
+    let a = trainer.train_step(&toks, 0.0).expect("a");
+    let b = restored.train_step(&toks, 0.0).expect("b");
+    assert!((a - b).abs() < 1e-5, "restored loss {b} != original {a}");
+}
+
+#[test]
+fn deploy_protocol_roundtrip_without_compute() {
+    // Leader + 2 workers over localhost, no PJRT (protocol-only): a small
+    // static trace must fully drain and report JCTs.
+    let jobs = generate(&TraceConfig {
+        n_jobs: 6,
+        split: Split::new(0, 100, 0), // fast, insensitive jobs
+        multi_gpu: false,
+        jobs_per_hour: None,
+        seed: 9,
+    });
+    let n = jobs.len();
+    let leader = Arc::new(Leader::new(LeaderConfig {
+        bind: "127.0.0.1:0".into(),
+        n_workers: 2,
+        round_real_s: 0.2,
+        time_scale: 40_000.0, // compress hours into seconds
+        policy: "fifo".into(),
+        mechanism: "tune".into(),
+        variant: "tiny".into(),
+        max_real_s: 60.0,
+    }));
+    let l2 = Arc::clone(&leader);
+    let t = std::thread::spawn(move || l2.run(jobs));
+    let addr = loop {
+        if let Some(a) = *leader.addr.lock().unwrap() {
+            break a;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    };
+    let mut workers = Vec::new();
+    for _ in 0..2 {
+        let cfg = WorkerConfig {
+            leader_addr: addr.to_string(),
+            real_compute: false,
+            ..Default::default()
+        };
+        workers.push(std::thread::spawn(move || Worker::run(cfg)));
+    }
+    let report = t.join().unwrap().expect("leader run");
+    for w in workers {
+        let _ = w.join();
+    }
+    assert_eq!(report.jcts.len(), n, "all jobs must finish");
+    assert!(report.rounds > 0);
+    for (_, jct) in &report.jcts {
+        assert!(*jct > 0.0 && jct.is_finite());
+    }
+}
+
+#[test]
+fn deploy_survives_worker_crash() {
+    // Leader + 2 workers; one worker crashes mid-run (fault injection).
+    // The leader must fail it over and drain the whole trace on the
+    // survivor.
+    let jobs = generate(&TraceConfig {
+        n_jobs: 5,
+        split: Split::new(0, 100, 0),
+        multi_gpu: false,
+        jobs_per_hour: None,
+        seed: 4,
+    });
+    let n = jobs.len();
+    let leader = Arc::new(Leader::new(LeaderConfig {
+        bind: "127.0.0.1:0".into(),
+        n_workers: 2,
+        round_real_s: 0.2,
+        time_scale: 40_000.0,
+        policy: "srtf".into(),
+        mechanism: "tune".into(),
+        variant: "tiny".into(),
+        max_real_s: 90.0,
+    }));
+    let l2 = Arc::clone(&leader);
+    let t = std::thread::spawn(move || l2.run(jobs));
+    let addr = loop {
+        if let Some(a) = *leader.addr.lock().unwrap() {
+            break a;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    };
+    let mut workers = Vec::new();
+    for i in 0..2 {
+        let cfg = WorkerConfig {
+            leader_addr: addr.to_string(),
+            real_compute: false,
+            // Worker 1 crashes 2 seconds in; worker 0 survives.
+            fail_after_s: if i == 1 { Some(2.0) } else { None },
+            ..Default::default()
+        };
+        workers.push(std::thread::spawn(move || Worker::run(cfg)));
+    }
+    let report = t.join().unwrap().expect("leader must survive the crash");
+    let crashed = workers.remove(1).join().unwrap();
+    assert!(crashed.is_err(), "worker 1 must report the injected crash");
+    let _ = workers.remove(0).join();
+    assert_eq!(
+        report.jcts.len(),
+        n,
+        "all jobs must finish despite the worker crash"
+    );
+}
