@@ -41,6 +41,7 @@ fn main() {
         mechanism: "tune".into(),
         variant,
         max_real_s: args.f64("max-real", 300.0),
+        quotas: None,
     }));
     let l2 = Arc::clone(&leader);
     let trace_for_deploy = jobs.clone();

@@ -5,6 +5,10 @@ use synergy::job::Job;
 use synergy::metrics::JctStats;
 use synergy::sim::{SimConfig, SimResult, Simulator};
 use synergy::trace::{generate, Split, TraceConfig};
+#[allow(unused_imports)]
+use synergy::workload::{
+    PhillyTraceConfig, PhillyTraceSource, WorkloadSource,
+};
 
 /// Run one simulation with the given knobs and return the result.
 pub fn run_sim(
@@ -77,6 +81,51 @@ pub fn static_trace(
     seed: u64,
 ) -> Vec<Job> {
     generate(&TraceConfig { n_jobs, split, multi_gpu, jobs_per_hour: None, seed })
+}
+
+/// Render jobs as a Philly-format CSV document (shared by the real-reader
+/// bench path: generate → serialize → re-ingest through the CSV reader).
+#[allow(dead_code)]
+pub fn to_philly_csv(jobs: &[Job]) -> String {
+    let mut out = String::from(
+        "job_id,vc,submit_time,gpus,duration_s,model,status\n",
+    );
+    for j in jobs {
+        out.push_str(&format!(
+            "j{},t{},{},{},{},{},Pass\n",
+            j.id.0,
+            j.tenant.0,
+            j.arrival_s,
+            j.gpus,
+            j.duration_prop_s,
+            j.model.name()
+        ));
+    }
+    out
+}
+
+/// A dynamic trace materialised as Philly CSV and read back through the
+/// real reader path ([`PhillyTraceSource`]).
+#[allow(dead_code)]
+pub fn dynamic_trace_via_philly_reader(
+    n_jobs: usize,
+    load: f64,
+    split: Split,
+    multi_gpu: bool,
+    seed: u64,
+) -> Vec<Job> {
+    let csv = to_philly_csv(&dynamic_trace(n_jobs, load, split, multi_gpu, seed));
+    let mut src = PhillyTraceSource::from_str(
+        &csv,
+        &PhillyTraceConfig {
+            duration_max_s: f64::INFINITY,
+            gpu_cap: 16,
+            seed,
+            ..PhillyTraceConfig::default()
+        },
+    )
+    .expect("re-ingest synthetic trace as Philly CSV");
+    src.drain_jobs()
 }
 
 /// Steady-state JCT stats: drop warmup/cooldown jobs (first/last 15%).

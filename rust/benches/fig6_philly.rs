@@ -7,11 +7,43 @@
 
 mod common;
 
-use common::{dynamic_trace, run_sim, steady_stats};
-use synergy::metrics::{per_job_speedups, split_short_long, JctStats};
+use common::{dynamic_trace_via_philly_reader, run_sim, steady_stats};
+use synergy::job::Job;
 use synergy::trace::SPLIT_DEFAULT;
+use synergy::metrics::{per_job_speedups, split_short_long, JctStats};
 use synergy::util::bench::{row, section};
+use synergy::workload::{PhillyTraceConfig, PhillyTraceSource, WorkloadSource};
 use std::collections::BTreeMap;
+
+/// The Philly jobs for one run, always through the real CSV-reader path:
+/// either `$SYNERGY_PHILLY_TRACE` (a real Philly-format CSV; λ-rescaled
+/// via `--load-scale` semantics to keep the cluster saturated) or the
+/// synthetic trace serialized + re-ingested through the reader.
+fn philly_jobs(n_jobs: usize, load: f64, seed: u64) -> Vec<Job> {
+    match std::env::var("SYNERGY_PHILLY_TRACE") {
+        Ok(path) => {
+            let mut src = PhillyTraceSource::new(PhillyTraceConfig {
+                path,
+                load_scale: std::env::var("SYNERGY_PHILLY_LOAD_SCALE")
+                    .ok()
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or(1.0),
+                max_jobs: Some(n_jobs),
+                seed,
+                ..PhillyTraceConfig::default()
+            })
+            .expect("read $SYNERGY_PHILLY_TRACE");
+            src.drain_jobs()
+        }
+        Err(_) => dynamic_trace_via_philly_reader(
+            n_jobs,
+            load,
+            SPLIT_DEFAULT,
+            true,
+            seed,
+        ),
+    }
+}
 
 fn main() {
     let n_jobs = 4000; // subrange of the 8000-job trace; 1000 monitored
@@ -21,8 +53,7 @@ fn main() {
     let mut srtf_results = Vec::new();
     for policy in ["srtf", "las", "fifo"] {
         for mech in ["proportional", "tune"] {
-            let jobs =
-                dynamic_trace(n_jobs, load, SPLIT_DEFAULT, true, 606);
+            let jobs = philly_jobs(n_jobs, load, 606);
             let r = run_sim(64, policy, mech, jobs);
             let s = steady_stats(&r);
             row(

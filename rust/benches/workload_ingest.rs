@@ -1,0 +1,134 @@
+//! Workload-ingestion throughput: jobs/second through (a) the Philly
+//! CSV parser, (b) the Alibaba adapter, and (c) tenant-quota admission.
+//!
+//! ```bash
+//! cargo bench --bench workload_ingest
+//! ```
+//!
+//! Writes the measured numbers to `BENCH_workload.json` at the repo root
+//! so later PRs can track the ingestion hot path.
+
+mod common;
+
+use common::to_philly_csv;
+use synergy::trace::{generate, TraceConfig, SPLIT_DEFAULT};
+use synergy::util::bench::{section, Bench};
+use synergy::util::json::Json;
+use synergy::workload::{
+    admit, AdmissionJob, AlibabaTraceConfig, AlibabaTraceSource,
+    PhillyTraceConfig, PhillyTraceSource, TenantQuotas, WorkloadSource,
+};
+use synergy::job::TenantId;
+
+const N_JOBS: usize = 50_000;
+
+fn alibaba_csv(rows: usize) -> String {
+    // Deterministic arithmetic pattern; content volume is what matters.
+    let mut out = String::from(
+        "timestamp,machine_id,cpu_util_percent,mem_util_percent\n",
+    );
+    for i in 0..rows {
+        let cpu = (i * 37) % 100;
+        let mem = (i * 53) % 100;
+        out.push_str(&format!(
+            "{},m_{},{cpu},{mem}\n",
+            i * 7,
+            i % 64,
+        ));
+    }
+    out
+}
+
+fn main() {
+    section("workload ingestion throughput");
+    let jobs = generate(&TraceConfig {
+        n_jobs: N_JOBS,
+        split: SPLIT_DEFAULT,
+        multi_gpu: true,
+        jobs_per_hour: Some(36.0),
+        seed: 99,
+    });
+    let philly_doc = to_philly_csv(&jobs);
+    let ali_doc = alibaba_csv(N_JOBS);
+
+    let bench = Bench::default();
+
+    // (a) Philly CSV: parse + normalize + sort + spec conversion.
+    let t_philly = bench.iter("philly_csv/parse_50k", || {
+        let mut src = PhillyTraceSource::from_str(
+            &philly_doc,
+            &PhillyTraceConfig::default(),
+        )
+        .unwrap();
+        let jobs = src.drain_jobs();
+        assert_eq!(jobs.len(), N_JOBS);
+        jobs
+    });
+    let philly_jps = N_JOBS as f64 / t_philly.median.as_secs_f64();
+
+    // (b) Alibaba adapter.
+    let t_ali = bench.iter("alibaba_csv/parse_50k", || {
+        let mut src = AlibabaTraceSource::from_str(
+            &ali_doc,
+            &AlibabaTraceConfig::default(),
+        )
+        .unwrap();
+        let jobs = src.drain_jobs();
+        assert_eq!(jobs.len(), N_JOBS);
+        jobs
+    });
+    let ali_jps = N_JOBS as f64 / t_ali.median.as_secs_f64();
+
+    // (c) Quota admission over the full queue (8 tenants, 512 GPUs).
+    let queue: Vec<AdmissionJob> = jobs
+        .iter()
+        .map(|j| AdmissionJob {
+            id: j.id,
+            tenant: TenantId((j.id.0 % 8) as u32),
+            gpus: j.gpus,
+        })
+        .collect();
+    let mut quotas = TenantQuotas::new();
+    for t in 0..8 {
+        quotas.set(TenantId(t), (t + 1) as f64);
+    }
+    let t_admit = bench.iter("admission/quota_50k_queue", || {
+        let out = admit(&queue, 512, Some(&quotas));
+        assert!(!out.admitted.is_empty());
+        out
+    });
+    let admit_jps = N_JOBS as f64 / t_admit.median.as_secs_f64();
+
+    println!(
+        "\nphilly_parse={philly_jps:.0} jobs/s  alibaba_parse={ali_jps:.0} \
+         jobs/s  quota_admission={admit_jps:.0} jobs/s"
+    );
+
+    // Persist for later PRs.
+    let doc = Json::obj(vec![
+        ("bench", Json::str("workload_ingest")),
+        ("n_jobs", Json::num(N_JOBS as f64)),
+        ("philly_parse_jobs_per_s", Json::num(philly_jps)),
+        ("alibaba_parse_jobs_per_s", Json::num(ali_jps)),
+        ("quota_admission_jobs_per_s", Json::num(admit_jps)),
+        (
+            "philly_parse_median_ms",
+            Json::num(t_philly.median.as_secs_f64() * 1e3),
+        ),
+        (
+            "alibaba_parse_median_ms",
+            Json::num(t_ali.median.as_secs_f64() * 1e3),
+        ),
+        (
+            "quota_admission_median_ms",
+            Json::num(t_admit.median.as_secs_f64() * 1e3),
+        ),
+    ])
+    .encode();
+    let out_path =
+        format!("{}/../BENCH_workload.json", env!("CARGO_MANIFEST_DIR"));
+    match std::fs::write(&out_path, format!("{doc}\n")) {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
+    }
+}

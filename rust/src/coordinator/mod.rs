@@ -5,7 +5,10 @@
 //! 1. builds policy views for all queued+running jobs,
 //! 2. orders them with the scheduling policy,
 //! 3. admits the top jobs whose aggregate GPU demand fits the cluster
-//!    ("runnable set", §4.2 — admission ignores fungible resources),
+//!    ("runnable set", §4.2 — admission ignores fungible resources);
+//!    with tenant quotas configured ([`RoundPlanner::with_quotas`]) the
+//!    admission walks the ordered queue under per-tenant GPU caps with a
+//!    work-conserving spill pass (see [`crate::workload::admission`]),
 //! 4. hands the runnable set to the mechanism for allocation + placement.
 //!
 //! Both the simulator ([`crate::sim`]) and the live deploy mode
@@ -17,6 +20,7 @@ use crate::job::{DemandVector, Job, JobId};
 use crate::mechanism::{Grant, JobRequest, Mechanism};
 use crate::policy::{PolicyJobView, SchedulingPolicy};
 use crate::profiler::SensitivityMatrix;
+use crate::workload::{admission, AdmissionJob, TenantQuotas};
 use std::collections::BTreeMap;
 
 /// Per-job scheduling context kept by the coordinator across rounds.
@@ -57,6 +61,9 @@ pub struct RoundPlan {
 pub struct RoundPlanner {
     pub policy: Box<dyn SchedulingPolicy>,
     pub mechanism: Box<dyn Mechanism>,
+    /// Per-tenant weights for quota admission; `None` = single-tenant
+    /// behaviour (plain GPU-capacity admission).
+    pub quotas: Option<TenantQuotas>,
 }
 
 impl RoundPlanner {
@@ -64,7 +71,16 @@ impl RoundPlanner {
         policy: Box<dyn SchedulingPolicy>,
         mechanism: Box<dyn Mechanism>,
     ) -> RoundPlanner {
-        RoundPlanner { policy, mechanism }
+        Self::with_quotas(policy, mechanism, None)
+    }
+
+    /// A planner with tenant-aware weighted-quota admission.
+    pub fn with_quotas(
+        policy: Box<dyn SchedulingPolicy>,
+        mechanism: Box<dyn Mechanism>,
+        quotas: Option<TenantQuotas>,
+    ) -> RoundPlanner {
+        RoundPlanner { policy, mechanism, quotas }
     }
 
     /// Plan one round. `cluster` must have no placements (the round reset
@@ -85,22 +101,23 @@ impl RoundPlanner {
             .collect();
         self.policy.order(&mut views, now);
 
-        // 3: admit while aggregate GPU demand fits (fungible dims ignored).
+        // 3: admit while aggregate GPU demand fits (fungible dims
+        // ignored). With quotas, per-tenant GPU caps apply first and
+        // stranded capacity spills work-conservingly; without quotas this
+        // is the standard gang-scheduling backfill at GPU granularity.
         let total_gpus = cluster.total_gpus();
-        let mut admitted_gpus = 0u32;
         let by_id: BTreeMap<JobId, (&Job, &JobContext)> =
             jobs.iter().map(|(j, c)| (j.id, (*j, *c))).collect();
-        let mut runnable: Vec<JobId> = Vec::new();
-        for v in &views {
-            let (job, _) = by_id[&v.id];
-            if admitted_gpus + job.gpus <= total_gpus {
-                admitted_gpus += job.gpus;
-                runnable.push(v.id);
-            }
-            // Jobs whose GPU demand doesn't fit are passed over; later
-            // smaller jobs may still be admitted (standard gang-scheduling
-            // backfill at GPU granularity).
-        }
+        let ordered: Vec<AdmissionJob> = views
+            .iter()
+            .map(|v| {
+                let (job, _) = by_id[&v.id];
+                AdmissionJob { id: job.id, tenant: job.tenant, gpus: job.gpus }
+            })
+            .collect();
+        let runnable =
+            admission::admit(&ordered, total_gpus, self.quotas.as_ref())
+                .admitted;
 
         // 4: mechanism allocation in policy order.
         let requests: Vec<JobRequest> = runnable
@@ -228,6 +245,43 @@ mod tests {
         assert!(plan.grants.contains_key(&JobId(0)));
         assert!(!plan.grants.contains_key(&JobId(1)));
         assert!(plan.grants.contains_key(&JobId(2)));
+    }
+
+    #[test]
+    fn quota_admission_caps_contended_tenant() {
+        use crate::job::TenantId;
+        let (mut cluster, profiler) = setup(1); // 8 GPUs
+        // Tenant 0 floods the queue first (8 jobs); tenant 1 arrives
+        // later with 4 jobs, but its 1:1 quota guarantees it half the
+        // cluster — FIFO alone would hand all 8 GPUs to tenant 0.
+        let mut jobs: Vec<Job> = (0..12)
+            .map(|i| make_job(i, ModelKind::Lstm, 1, i as f64))
+            .collect();
+        for j in jobs.iter_mut().skip(8) {
+            j.tenant = TenantId(1);
+        }
+        let ctxs: Vec<JobContext> = jobs
+            .iter()
+            .map(|j| JobContext::new(profiler.profile(j).matrix, &cluster))
+            .collect();
+        let refs: Vec<(&Job, &JobContext)> =
+            jobs.iter().zip(ctxs.iter()).collect();
+        let quotas = TenantQuotas::new()
+            .with(TenantId(0), 1.0)
+            .with(TenantId(1), 1.0);
+        let planner = RoundPlanner::with_quotas(
+            Box::new(Fifo),
+            Box::new(Tune::default()),
+            Some(quotas),
+        );
+        let plan = planner.plan(&mut cluster, &refs, 100.0);
+        // 4 GPUs per tenant despite FIFO favouring tenant 0's backlog...
+        let granted_t1 = (8..12)
+            .filter(|&i| plan.grants.contains_key(&JobId(i)))
+            .count();
+        assert_eq!(granted_t1, 4, "tenant 1 must get its weighted share");
+        // ...and capacity is fully used (work conserving).
+        assert_eq!(plan.grants.len(), 8);
     }
 
     #[test]

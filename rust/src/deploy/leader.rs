@@ -9,12 +9,13 @@
 use super::proto::{Conn, Message};
 use crate::cluster::{Cluster, ServerSpec};
 use crate::coordinator::{JobContext, RoundPlanner};
-use crate::job::{Job, JobId, JobState};
+use crate::job::{Job, JobId, JobState, TenantId};
 use crate::mechanism::by_name as mechanism_by_name;
-use crate::metrics::JctStats;
+use crate::metrics::{per_tenant_stats, JctStats};
 use crate::perf::PerfModel;
 use crate::policy::by_name as policy_by_name;
 use crate::profiler::OptimisticProfiler;
+use crate::workload::{ReplaySource, TenantQuotas, WorkloadSource};
 use anyhow::{anyhow, Result};
 use std::collections::{BTreeMap, HashMap};
 use std::net::TcpListener;
@@ -35,6 +36,8 @@ pub struct LeaderConfig {
     pub variant: String,
     /// Wall-clock cap for the whole run.
     pub max_real_s: f64,
+    /// Tenant GPU quotas for the round planner (None = single tenant).
+    pub quotas: Option<TenantQuotas>,
 }
 
 impl Default for LeaderConfig {
@@ -48,6 +51,7 @@ impl Default for LeaderConfig {
             mechanism: "tune".into(),
             variant: "tiny".into(),
             max_real_s: 600.0,
+            quotas: None,
         }
     }
 }
@@ -57,6 +61,8 @@ impl Default for LeaderConfig {
 pub struct LeaderReport {
     /// (job id, JCT in simulated seconds).
     pub jcts: Vec<(u64, f64)>,
+    /// Owning tenant of every admitted job.
+    pub tenant_of: BTreeMap<u64, TenantId>,
     /// Final reported training loss per job.
     pub losses: BTreeMap<u64, f64>,
     /// Total real train steps executed across workers.
@@ -69,6 +75,23 @@ impl LeaderReport {
     pub fn jct_stats(&self) -> JctStats {
         let jcts: Vec<f64> = self.jcts.iter().map(|&(_, j)| j).collect();
         JctStats::from_jcts(&jcts)
+    }
+
+    /// Per-tenant JCT summaries.
+    pub fn tenant_stats(&self) -> BTreeMap<TenantId, JctStats> {
+        let pairs: Vec<(TenantId, f64)> = self
+            .jcts
+            .iter()
+            .map(|&(id, jct)| {
+                let t = self
+                    .tenant_of
+                    .get(&id)
+                    .copied()
+                    .unwrap_or(TenantId::DEFAULT);
+                (t, jct)
+            })
+            .collect();
+        per_tenant_stats(&pairs)
     }
 }
 
@@ -84,9 +107,23 @@ impl Leader {
         Leader { cfg, addr: std::sync::Mutex::new(None) }
     }
 
-    /// Bind, wait for `n_workers` registrations, run the trace, shut
-    /// workers down, and report. Blocks.
+    /// Bind, wait for `n_workers` registrations, run a batch trace, shut
+    /// workers down, and report. Blocks. (Batch convenience wrapper over
+    /// [`Leader::run_stream`].)
     pub fn run(&self, jobs: Vec<Job>) -> Result<LeaderReport> {
+        self.run_stream(Box::new(ReplaySource::from_jobs(jobs)))
+    }
+
+    /// Like [`Leader::run`], but arrivals stream from a
+    /// [`WorkloadSource`] instead of an up-front job list: the leader
+    /// pulls the next spec lazily as simulated time passes it, so an
+    /// unbounded or file-backed trace deploys without materialising the
+    /// whole workload. The run ends when the source is exhausted and all
+    /// admitted jobs finished (or at `max_real_s`).
+    pub fn run_stream(
+        &self,
+        mut source: Box<dyn WorkloadSource>,
+    ) -> Result<LeaderReport> {
         let listener = TcpListener::bind(&self.cfg.bind)?;
         *self.addr.lock().unwrap() = Some(listener.local_addr()?);
 
@@ -158,20 +195,22 @@ impl Leader {
         let mut alive = vec![true; self.cfg.n_workers];
         let world = PerfModel::new(spec);
         let profiler = OptimisticProfiler::noiseless(spec);
-        let planner = RoundPlanner::new(
+        let planner = RoundPlanner::with_quotas(
             policy_by_name(&self.cfg.policy)
                 .ok_or_else(|| anyhow!("bad policy"))?,
             mechanism_by_name(&self.cfg.mechanism)
                 .ok_or_else(|| anyhow!("bad mechanism"))?,
+            self.cfg.quotas.clone(),
         );
 
-        let mut pending: Vec<Job> = jobs;
-        pending.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
-        pending.retain(|j| j.gpus <= cluster.total_gpus());
-        let n_total = pending.len();
-        let mut next_arrival = 0usize;
+        let total_gpus = cluster.total_gpus();
+        // The streaming head: the next not-yet-arrived job, pulled from
+        // the source only when simulated time reaches it.
+        let mut next_job: Option<Job> =
+            pull_feasible(source.as_mut(), total_gpus);
         let mut active: BTreeMap<JobId, Job> = BTreeMap::new();
         let mut contexts: BTreeMap<JobId, JobContext> = BTreeMap::new();
+        let mut tenant_of: BTreeMap<u64, TenantId> = BTreeMap::new();
         // job -> worker currently hosting it.
         let mut hosted_on: HashMap<u64, usize> = HashMap::new();
         let mut losses: BTreeMap<u64, f64> = BTreeMap::new();
@@ -180,7 +219,7 @@ impl Leader {
 
         let start = Instant::now();
         let mut rounds = 0usize;
-        while jcts.len() < n_total
+        while (next_job.is_some() || !active.is_empty())
             && start.elapsed().as_secs_f64() < self.cfg.max_real_s
         {
             let now_sim = start.elapsed().as_secs_f64() * self.cfg.time_scale;
@@ -226,17 +265,20 @@ impl Leader {
                 }
             }
 
-            // Admit arrivals (profile on arrival).
-            while next_arrival < pending.len()
-                && pending[next_arrival].arrival_s <= now_sim
+            // Admit arrivals (profile on arrival), pulling the stream
+            // forward only as far as simulated time has reached.
+            while next_job
+                .as_ref()
+                .is_some_and(|j| j.arrival_s <= now_sim)
             {
-                let mut job = pending[next_arrival].clone();
+                let mut job = next_job.take().unwrap();
                 let ctx =
                     JobContext::new(profiler.profile(&job).matrix, &cluster);
                 job.total_samples = job.duration_prop_s * ctx.prop_tput;
+                tenant_of.insert(job.id.0, job.tenant);
                 contexts.insert(job.id, ctx);
                 active.insert(job.id, job);
-                next_arrival += 1;
+                next_job = pull_feasible(source.as_mut(), total_gpus);
             }
 
             // Plan the round over the alive workers only.
@@ -328,13 +370,13 @@ impl Leader {
             if std::env::var_os("SYNERGY_DEPLOY_DEBUG").is_some() {
                 eprintln!(
                     "[leader] round={} now_sim={:.0} active={} grants={} \
-                     finished={}/{}",
+                     finished={} remaining_hint={:?}",
                     rounds,
                     now_sim,
                     active.len(),
                     plan.grants.len(),
                     jcts.len(),
-                    n_total
+                    source.len_hint()
                 );
             }
             rounds += 1;
@@ -349,10 +391,31 @@ impl Leader {
             start.elapsed().as_secs_f64() * self.cfg.time_scale;
         Ok(LeaderReport {
             jcts,
+            tenant_of,
             losses,
             total_steps: steps_total.values().sum(),
             rounds,
             makespan_sim_s,
         })
+    }
+}
+
+/// Pull the next spec the cluster can ever host; oversized gangs are
+/// dropped with a warning (the streaming analogue of the old up-front
+/// `retain`).
+fn pull_feasible(
+    source: &mut dyn WorkloadSource,
+    total_gpus: u32,
+) -> Option<Job> {
+    loop {
+        let spec = source.next_spec()?;
+        if spec.gpus <= total_gpus {
+            return Some(spec.into_job());
+        }
+        eprintln!(
+            "[leader] job {} demands {} GPUs > cluster capacity \
+             {total_gpus}; dropped",
+            spec.id.0, spec.gpus
+        );
     }
 }

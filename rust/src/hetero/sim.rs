@@ -108,7 +108,7 @@ impl HeteroSimulator {
                 panic!("unknown het mechanism {}", self.cfg.mechanism)
             });
 
-        jobs.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        jobs.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
         let max_group_gpus = cluster
             .groups
             .iter()

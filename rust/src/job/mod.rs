@@ -10,6 +10,17 @@ pub use zoo::{ModelKind, PerfCoeffs, Task, ALL_MODELS};
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct JobId(pub u64);
 
+/// Tenant (virtual cluster / team) identifier. Tenant ids are dense and
+/// assigned by the workload source ([`crate::workload`]); single-tenant
+/// workloads put every job in [`TenantId::DEFAULT`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TenantId(pub u32);
+
+impl TenantId {
+    /// The implicit tenant of jobs created without an explicit tenant.
+    pub const DEFAULT: TenantId = TenantId(0);
+}
+
 /// Lifecycle of a job inside the scheduler.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum JobState {
@@ -31,6 +42,8 @@ pub enum JobState {
 #[derive(Debug, Clone)]
 pub struct Job {
     pub id: JobId,
+    /// Owning tenant (weighted-quota admission keys on this).
+    pub tenant: TenantId,
     pub model: ModelKind,
     pub gpus: u32,
     /// Arrival time in seconds from trace start.
@@ -63,6 +76,7 @@ impl Job {
     ) -> Job {
         Job {
             id,
+            tenant: TenantId::DEFAULT,
             model,
             gpus,
             arrival_s,
@@ -75,6 +89,12 @@ impl Job {
             progress_rate: 0.0,
             rng_stream: id.0,
         }
+    }
+
+    /// Assign the job to a tenant (builder style; default is tenant 0).
+    pub fn with_tenant(mut self, tenant: TenantId) -> Job {
+        self.tenant = tenant;
+        self
     }
 
     /// Remaining work in samples.
@@ -119,6 +139,14 @@ mod tests {
     fn jct_of_running_job_panics() {
         let j = Job::new(JobId(1), ModelKind::Gnmt, 1, 100.0, 60.0);
         let _ = j.jct_s();
+    }
+
+    #[test]
+    fn default_tenant_and_builder_override() {
+        let j = Job::new(JobId(1), ModelKind::Lstm, 1, 0.0, 60.0);
+        assert_eq!(j.tenant, TenantId::DEFAULT);
+        let j = j.with_tenant(TenantId(3));
+        assert_eq!(j.tenant, TenantId(3));
     }
 
     #[test]

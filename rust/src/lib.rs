@@ -30,8 +30,9 @@
 //! | [`mechanism`] | allocation mechanisms (paper §3.3, §4) |
 //! | [`lp`] | simplex + branch-and-bound ILP (Synergy-OPT substrate) |
 //! | [`sim`] | event-driven cluster simulator (paper §4.3) |
-//! | [`trace`] | Philly-derived workload generation (paper §5.1) |
-//! | [`metrics`] | JCT/makespan/utilization accounting |
+//! | [`trace`] | Philly-derived synthetic workload generation (paper §5.1) |
+//! | [`workload`] | pluggable trace ingestion: `WorkloadSource` trait, Philly CSV + Alibaba readers, tenants & quota admission, streaming replay |
+//! | [`metrics`] | JCT/makespan/utilization accounting, per-tenant fairness |
 //! | [`coordinator`] | the round loop tying everything together |
 //! | [`runtime`] | PJRT client: load HLO-text artifacts, run train steps |
 //! | [`deploy`] | leader/worker cluster over TCP running real jobs |
@@ -54,6 +55,7 @@ pub mod runtime;
 pub mod sim;
 pub mod trace;
 pub mod util;
+pub mod workload;
 
 /// Crate version string reported by the CLI.
 pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -3,8 +3,12 @@
 //! Subcommands:
 //!
 //! ```text
-//! synergy simulate  --policy srtf --mechanism tune --servers 16 \
+//! synergy sim       --policy srtf --mechanism tune --servers 16 \
 //!                   --jobs 1000 --load 8 --split 20,70,10 [--multi-gpu]
+//!                   [--tenants a:2,b:1]
+//! synergy sim       --trace trace.csv --format philly|alibaba \
+//!                   [--load-scale 2 --duration-min 60 --duration-max 1e5]
+//!                   [--gpu-cap 16 --max-jobs 500 --keep-failed]
 //! synergy compare   --policies fifo,srtf --mechanisms proportional,tune ...
 //! synergy profile   --model resnet18 --gpus 1
 //! synergy models    # print the model zoo + CPU knees (Fig 2 data)
@@ -13,21 +17,30 @@
 //! synergy worker    --leader 127.0.0.1:7331 --artifacts artifacts
 //! synergy config    --file experiment.json   # run from a config file
 //! ```
+//!
+//! (`simulate` is an alias of `sim`.) See the [`synergy::workload`] docs
+//! for trace formats and the `--tenants name:weight,...` spec syntax.
 
 use synergy::cluster::ServerSpec;
 use synergy::config::ExperimentConfig;
 use synergy::deploy::{Leader, LeaderConfig, Worker, WorkerConfig};
 use synergy::job::{Job, JobId, ModelKind, ALL_MODELS};
+use synergy::metrics::jains_index;
 use synergy::perf::PerfModel;
 use synergy::profiler::OptimisticProfiler;
-use synergy::sim::{SimConfig, Simulator};
+use synergy::sim::{SimConfig, SimResult, Simulator};
 use synergy::trace::{generate, Split, TraceConfig};
 use synergy::util::cli::Args;
+use synergy::workload::{
+    AlibabaTraceConfig, AlibabaTraceSource, PhillyTraceConfig,
+    PhillyTraceSource, SyntheticSource, TenantQuotas, TenantSpec,
+    WorkloadSource,
+};
 
 fn main() {
     let args = Args::from_env();
     match args.command.as_deref() {
-        Some("simulate") => cmd_simulate(&args),
+        Some("sim") | Some("simulate") => cmd_simulate(&args),
         Some("compare") => cmd_compare(&args),
         Some("profile") => cmd_profile(&args),
         Some("models") => cmd_models(),
@@ -38,7 +51,7 @@ fn main() {
         Some("hetero") => cmd_hetero(&args),
         Some("version") => println!("synergy {}", synergy::VERSION),
         _ => {
-            eprintln!("usage: synergy <simulate|compare|profile|models|trace|leader|worker|config|hetero> [--flags]");
+            eprintln!("usage: synergy <sim|compare|profile|models|trace|leader|worker|config|hetero> [--flags]");
             eprintln!("see README.md for the full flag reference");
             std::process::exit(2);
         }
@@ -69,6 +82,136 @@ fn trace_from_args(args: &Args) -> TraceConfig {
     }
 }
 
+fn tenant_spec_from_args(args: &Args) -> Option<TenantSpec> {
+    args.get("tenants").map(|s| {
+        TenantSpec::parse(s).unwrap_or_else(|e| panic!("--tenants: {e}"))
+    })
+}
+
+/// A fully built workload: jobs + tenant metadata.
+struct WorkloadBundle {
+    jobs: Vec<Job>,
+    quotas: Option<TenantQuotas>,
+    tenant_names: Vec<String>,
+}
+
+/// Batch form of [`workload_source_from_args`]: drain the source into a
+/// job list (simulator & converter paths).
+fn workload_from_args(args: &Args) -> WorkloadBundle {
+    let (mut source, quotas, tenant_names) = workload_source_from_args(args);
+    WorkloadBundle { jobs: source.drain_jobs(), quotas, tenant_names }
+}
+
+/// Build the workload *source* from `--trace <path> --format
+/// philly|alibaba` (file traces) or the synthetic generator flags, with
+/// optional `--tenants name:weight,...` quotas (see
+/// [`synergy::workload`]). Streaming consumers (the deploy leader) take
+/// the source as-is; batch consumers use [`workload_from_args`].
+#[allow(clippy::type_complexity)]
+fn workload_source_from_args(
+    args: &Args,
+) -> (Box<dyn WorkloadSource>, Option<TenantQuotas>, Vec<String>) {
+    let spec = tenant_spec_from_args(args);
+    let max_jobs = {
+        let n = args.usize("max-jobs", 0);
+        (n > 0).then_some(n)
+    };
+    match args.get("trace") {
+        Some(path) => {
+            let source: Box<dyn WorkloadSource> =
+                match args.get_or("format", "philly") {
+                    "philly" => Box::new(
+                        PhillyTraceSource::new(PhillyTraceConfig {
+                            path: path.to_string(),
+                            load_scale: args.f64("load-scale", 1.0),
+                            duration_min_s: args.f64("duration-min", 1.0),
+                            duration_max_s: args
+                                .f64("duration-max", f64::INFINITY),
+                            gpu_cap: args.usize("gpu-cap", 16) as u32,
+                            max_jobs,
+                            split: parse_split(
+                                args.get_or("split", "20,70,10"),
+                            ),
+                            seed: args.u64("seed", 1),
+                            keep_failed: args.flag("keep-failed"),
+                        })
+                        .unwrap_or_else(|e| panic!("--trace {path}: {e}")),
+                    ),
+                    "alibaba" => Box::new(
+                        AlibabaTraceSource::new(AlibabaTraceConfig {
+                            path: path.to_string(),
+                            load_scale: args.f64("load-scale", 1.0),
+                            cpu_heavy_pct: args.f64("cpu-heavy", 60.0),
+                            mem_heavy_pct: args.f64("mem-heavy", 60.0),
+                            max_jobs,
+                            seed: args.u64("seed", 1),
+                        })
+                        .unwrap_or_else(|e| panic!("--trace {path}: {e}")),
+                    ),
+                    other => panic!(
+                        "unknown --format '{other}' (expected philly|alibaba)"
+                    ),
+                };
+            let tenant_names = source.tenant_names();
+            let quotas = spec.map(|s| {
+                for name in &s.names {
+                    if !tenant_names.contains(name) {
+                        eprintln!(
+                            "warning: --tenants name '{name}' matches no \
+                             tenant in the trace (trace tenants: \
+                             {tenant_names:?}); its weight is ignored"
+                        );
+                    }
+                }
+                s.quotas_for(&tenant_names)
+            });
+            (source, quotas, tenant_names)
+        }
+        None => {
+            let cfg = trace_from_args(args);
+            match spec {
+                Some(s) => {
+                    let source =
+                        SyntheticSource::new(cfg).with_tenants(s.clone());
+                    let tenant_names = source.tenant_names();
+                    (Box::new(source), Some(s.quotas()), tenant_names)
+                }
+                None => (
+                    Box::new(SyntheticSource::new(cfg)),
+                    None,
+                    vec!["default".to_string()],
+                ),
+            }
+        }
+    }
+}
+
+/// Print the per-tenant JCT table + Jain's fairness index.
+fn print_tenant_stats(result: &SimResult, tenant_names: &[String]) {
+    let by = result.tenant_stats();
+    println!("\nper-tenant JCT:");
+    println!(
+        "{:<16} {:>6} {:>10} {:>10} {:>10}",
+        "tenant", "jobs", "avg_jct_h", "p50_jct_h", "p99_jct_h"
+    );
+    for (t, s) in &by {
+        let name = tenant_names
+            .get(t.0 as usize)
+            .cloned()
+            .unwrap_or_else(|| format!("t{}", t.0));
+        println!(
+            "{:<16} {:>6} {:>10.2} {:>10.2} {:>10.2}",
+            name,
+            s.n,
+            s.avg_hrs(),
+            s.p50_s / 3600.0,
+            s.p99_hrs()
+        );
+    }
+    let avgs: Vec<f64> = by.values().map(|s| s.avg_s).collect();
+    println!("jain_fairness(avg_jct) = {:.3}", jains_index(&avgs));
+}
+
 fn sim_config(args: &Args, mechanism: &str, policy: &str) -> SimConfig {
     SimConfig {
         spec: ServerSpec {
@@ -91,11 +234,13 @@ fn sim_config(args: &Args, mechanism: &str, policy: &str) -> SimConfig {
 fn cmd_simulate(args: &Args) {
     let policy = args.get_or("policy", "fifo").to_string();
     let mechanism = args.get_or("mechanism", "tune").to_string();
-    let trace_cfg = trace_from_args(args);
-    let jobs = generate(&trace_cfg);
-    let sim = Simulator::new(sim_config(args, &mechanism, &policy));
+    let workload = workload_from_args(args);
+    let sim = Simulator::with_quotas(
+        sim_config(args, &mechanism, &policy),
+        workload.quotas.clone(),
+    );
     let t0 = std::time::Instant::now();
-    let result = sim.run(jobs);
+    let result = sim.run(workload.jobs);
     let stats = result.jct_stats();
     println!(
         "policy={policy} mechanism={mechanism} jobs={} rounds={} wall={:?}",
@@ -117,6 +262,9 @@ fn cmd_simulate(args: &Args) {
         result.utilization.mean_cpu_util() * 100.0,
         result.profiling_minutes
     );
+    if workload.tenant_names.len() > 1 || workload.quotas.is_some() {
+        print_tenant_stats(&result, &workload.tenant_names);
+    }
 }
 
 fn cmd_compare(args: &Args) {
@@ -255,13 +403,16 @@ fn cmd_hetero(args: &Args) {
 
 fn cmd_trace(args: &Args) {
     use synergy::util::json::Json;
-    let cfg = trace_from_args(args);
-    let jobs = generate(&cfg);
-    let arr: Vec<Json> = jobs
+    // Works for synthetic *and* file workloads, so this doubles as a
+    // trace converter: `synergy trace --trace x.csv --format alibaba`.
+    let workload = workload_from_args(args);
+    let arr: Vec<Json> = workload
+        .jobs
         .iter()
         .map(|j| {
             Json::obj(vec![
                 ("id", Json::num(j.id.0 as f64)),
+                ("tenant", Json::num(j.tenant.0 as f64)),
                 ("model", Json::str(j.model.name())),
                 ("gpus", Json::num(j.gpus as f64)),
                 ("arrival_s", Json::num(j.arrival_s)),
@@ -273,13 +424,17 @@ fn cmd_trace(args: &Args) {
     match args.get("out") {
         Some(path) => {
             std::fs::write(path, doc).expect("write trace");
-            println!("wrote {} jobs to {path}", jobs.len());
+            println!("wrote {} jobs to {path}", workload.jobs.len());
         }
         None => println!("{doc}"),
     }
 }
 
 fn cmd_leader(args: &Args) {
+    // Streaming arrival path: the leader pulls jobs from the source as
+    // their (scaled) arrival times pass — the trace is never
+    // materialised up front.
+    let (source, quotas, tenant_names) = workload_source_from_args(args);
     let cfg = LeaderConfig {
         bind: format!("0.0.0.0:{}", args.usize("port", 7331)),
         n_workers: args.usize("workers", 1),
@@ -289,10 +444,10 @@ fn cmd_leader(args: &Args) {
         mechanism: args.get_or("mechanism", "tune").into(),
         variant: args.get_or("variant", "tiny").into(),
         max_real_s: args.f64("max-real", 600.0),
+        quotas,
     };
-    let jobs = generate(&trace_from_args(args));
     let leader = Leader::new(cfg);
-    match leader.run(jobs) {
+    match leader.run_stream(source) {
         Ok(report) => {
             let s = report.jct_stats();
             println!(
@@ -303,6 +458,20 @@ fn cmd_leader(args: &Args) {
                 s.avg_hrs(),
                 s.p99_hrs()
             );
+            if tenant_names.len() > 1 {
+                for (t, ts) in report.tenant_stats() {
+                    let name = tenant_names
+                        .get(t.0 as usize)
+                        .cloned()
+                        .unwrap_or_else(|| format!("t{}", t.0));
+                    println!(
+                        "tenant {:<16} jobs={} avg_jct={:.2}h",
+                        name,
+                        ts.n,
+                        ts.avg_hrs()
+                    );
+                }
+            }
         }
         Err(e) => {
             eprintln!("leader failed: {e}");

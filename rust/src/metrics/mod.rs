@@ -1,7 +1,10 @@
 //! Cluster metrics: JCT statistics, makespan, utilization timeseries
-//! (everything the paper's evaluation section reports).
+//! (everything the paper's evaluation section reports), plus per-tenant
+//! JCT/fairness accounting for the multi-tenant workloads.
 
+use crate::job::TenantId;
 use crate::util::stats::{cdf, mean, percentile};
+use std::collections::BTreeMap;
 
 /// JCT summary for a set of finished jobs.
 #[derive(Debug, Clone)]
@@ -115,6 +118,35 @@ impl UtilizationLog {
     }
 }
 
+/// Per-tenant JCT summaries from `(tenant, jct)` pairs.
+pub fn per_tenant_stats(
+    jcts: &[(TenantId, f64)],
+) -> BTreeMap<TenantId, JctStats> {
+    let mut grouped: BTreeMap<TenantId, Vec<f64>> = BTreeMap::new();
+    for &(t, jct) in jcts {
+        grouped.entry(t).or_default().push(jct);
+    }
+    grouped
+        .into_iter()
+        .map(|(t, xs)| (t, JctStats::from_jcts(&xs)))
+        .collect()
+}
+
+/// Jain's fairness index over a set of per-tenant quantities:
+/// `(Σx)² / (n·Σx²)`, in `(0, 1]` with 1 = perfectly even. Returns 1.0
+/// for empty or all-zero input (nothing to be unfair about).
+pub fn jains_index(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 1.0;
+    }
+    let sum: f64 = xs.iter().sum();
+    let sq: f64 = xs.iter().map(|x| x * x).sum();
+    if sq <= 0.0 {
+        return 1.0;
+    }
+    (sum * sum) / (xs.len() as f64 * sq)
+}
+
 /// Per-job speedup of mechanism A over B (Fig 6c): jct_b / jct_a per job.
 pub fn per_job_speedups(jct_a: &[f64], jct_b: &[f64]) -> Vec<f64> {
     assert_eq!(jct_a.len(), jct_b.len());
@@ -158,6 +190,32 @@ mod tests {
     fn speedups_elementwise() {
         let sp = per_job_speedups(&[1.0, 2.0], &[3.0, 2.0]);
         assert_eq!(sp, vec![3.0, 1.0]);
+    }
+
+    #[test]
+    fn per_tenant_grouping() {
+        let jcts = vec![
+            (TenantId(0), 100.0),
+            (TenantId(1), 400.0),
+            (TenantId(0), 300.0),
+        ];
+        let by = per_tenant_stats(&jcts);
+        assert_eq!(by.len(), 2);
+        assert_eq!(by[&TenantId(0)].n, 2);
+        assert_eq!(by[&TenantId(0)].avg_s, 200.0);
+        assert_eq!(by[&TenantId(1)].avg_s, 400.0);
+    }
+
+    #[test]
+    fn jains_index_bounds() {
+        assert_eq!(jains_index(&[]), 1.0);
+        assert_eq!(jains_index(&[0.0, 0.0]), 1.0);
+        assert!((jains_index(&[5.0, 5.0, 5.0]) - 1.0).abs() < 1e-12);
+        // One tenant hogging everything → 1/n.
+        let skewed = jains_index(&[1.0, 0.0, 0.0, 0.0]);
+        assert!((skewed - 0.25).abs() < 1e-12);
+        let mid = jains_index(&[2.0, 1.0]);
+        assert!(mid > 0.25 && mid < 1.0);
     }
 
     #[test]

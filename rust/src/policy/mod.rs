@@ -37,12 +37,24 @@ pub trait SchedulingPolicy: Send + Sync {
     fn key(&self, job: &PolicyJobView, now: f64) -> f64;
 
     /// Order jobs by priority (highest priority first).
+    ///
+    /// NaN keys (e.g. an SRTF remaining-time estimate poisoned by a 0/0
+    /// throughput) are normalized to `+inf` so they deterministically
+    /// sort last instead of panicking mid-round. The normalization
+    /// matters: 0/0 yields a *sign-negative* NaN on x86-64, which a bare
+    /// `total_cmp` would sort ahead of every valid key.
     fn order(&self, jobs: &mut Vec<PolicyJobView>, now: f64) {
+        fn sane(k: f64) -> f64 {
+            if k.is_nan() {
+                f64::INFINITY
+            } else {
+                k
+            }
+        }
         jobs.sort_by(|a, b| {
-            self.key(a, now)
-                .partial_cmp(&self.key(b, now))
-                .unwrap()
-                .then(a.arrival_s.partial_cmp(&b.arrival_s).unwrap())
+            sane(self.key(a, now))
+                .total_cmp(&sane(self.key(b, now)))
+                .then(a.arrival_s.total_cmp(&b.arrival_s))
                 .then(a.id.cmp(&b.id))
         });
     }
@@ -237,6 +249,36 @@ mod tests {
         Fifo.order(&mut jobs, 0.0);
         let ids: Vec<u64> = jobs.iter().map(|j| j.id.0).collect();
         assert_eq!(ids, vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn nan_keys_do_not_panic_and_never_outrank_finite_keys() {
+        // Regression: `partial_cmp(...).unwrap()` panicked on NaN keys.
+        // An SRTF estimate can be NaN when remaining/throughput is 0/0 —
+        // and that NaN is *sign-negative* on x86-64, so it must be
+        // normalized, not just total_cmp'd (a bare total_cmp would give
+        // a poisoned job top priority).
+        let neg_nan = 0.0f64 / 0.0f64; // whatever sign the platform gives
+        let mut a = view(0);
+        a.remaining_est_s = neg_nan;
+        let mut b = view(1);
+        b.remaining_est_s = 50.0;
+        let mut c = view(2);
+        c.remaining_est_s = f64::NAN; // positive NaN
+        let mut jobs = vec![a, b, c];
+        Srtf.order(&mut jobs, 0.0);
+        // The finite key always wins; NaN jobs (either sign) rank with
+        // +inf and fall back to arrival/id tie-breaks.
+        assert_eq!(jobs[0].id, JobId(1));
+        assert_eq!(jobs[1].id, JobId(0));
+        assert_eq!(jobs[2].id, JobId(2));
+        // Re-sorting is stable/deterministic.
+        let ids: Vec<u64> = jobs.iter().map(|j| j.id.0).collect();
+        Srtf.order(&mut jobs, 0.0);
+        assert_eq!(
+            jobs.iter().map(|j| j.id.0).collect::<Vec<_>>(),
+            ids
+        );
     }
 
     #[test]

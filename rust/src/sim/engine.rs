@@ -2,12 +2,13 @@
 
 use crate::cluster::{Cluster, ServerSpec};
 use crate::coordinator::{JobContext, RoundPlanner};
-use crate::job::{Job, JobId, JobState};
+use crate::job::{Job, JobId, JobState, TenantId};
 use crate::mechanism::{by_name as mechanism_by_name, Grant};
-use crate::metrics::{JctStats, UtilSample, UtilizationLog};
+use crate::metrics::{per_tenant_stats, JctStats, UtilSample, UtilizationLog};
 use crate::perf::PerfModel;
 use crate::policy::by_name as policy_by_name;
 use crate::profiler::OptimisticProfiler;
+use crate::workload::TenantQuotas;
 use std::collections::BTreeMap;
 
 /// Simulator configuration.
@@ -70,6 +71,7 @@ pub struct SimResult {
 #[derive(Debug, Clone, Copy)]
 pub struct FinishedJob {
     pub id: JobId,
+    pub tenant: TenantId,
     pub gpus: u32,
     pub arrival_s: f64,
     pub duration_prop_s: f64,
@@ -83,6 +85,13 @@ impl SimResult {
 
     pub fn jct_stats(&self) -> JctStats {
         JctStats::from_jcts(&self.jcts())
+    }
+
+    /// Per-tenant JCT summaries (multi-tenant workloads).
+    pub fn tenant_stats(&self) -> BTreeMap<TenantId, JctStats> {
+        let pairs: Vec<(TenantId, f64)> =
+            self.finished.iter().map(|f| (f.tenant, f.jct_s)).collect();
+        per_tenant_stats(&pairs)
     }
 
     /// JCTs of a monitored subrange of jobs (steady-state window, §5.1).
@@ -101,22 +110,34 @@ impl SimResult {
 pub struct Simulator {
     cfg: SimConfig,
     world: PerfModel,
+    quotas: Option<TenantQuotas>,
 }
 
 impl Simulator {
     pub fn new(cfg: SimConfig) -> Simulator {
         let world = PerfModel::new(cfg.spec);
-        Simulator { cfg, world }
+        Simulator { cfg, world, quotas: None }
+    }
+
+    /// A simulator whose coordinator enforces tenant GPU quotas.
+    pub fn with_quotas(
+        cfg: SimConfig,
+        quotas: Option<TenantQuotas>,
+    ) -> Simulator {
+        let mut sim = Simulator::new(cfg);
+        sim.quotas = quotas;
+        sim
     }
 
     /// Run a trace to completion (or `max_sim_s`).
     pub fn run(&self, mut jobs: Vec<Job>) -> SimResult {
-        let planner = RoundPlanner::new(
+        let planner = RoundPlanner::with_quotas(
             policy_by_name(&self.cfg.policy)
                 .unwrap_or_else(|| panic!("unknown policy {}", self.cfg.policy)),
             mechanism_by_name(&self.cfg.mechanism).unwrap_or_else(|| {
                 panic!("unknown mechanism {}", self.cfg.mechanism)
             }),
+            self.quotas.clone(),
         );
         let mut cluster =
             Cluster::homogeneous(self.cfg.spec, self.cfg.n_servers);
@@ -126,7 +147,7 @@ impl Simulator {
             ..OptimisticProfiler::new(self.cfg.spec)
         };
 
-        jobs.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        jobs.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
         // Reject jobs that can never fit.
         jobs.retain(|j| j.gpus <= cluster.total_gpus());
 
@@ -235,6 +256,7 @@ impl Simulator {
                     contexts.remove(&id);
                     finished.push(FinishedJob {
                         id: j.id,
+                        tenant: j.tenant,
                         gpus: j.gpus,
                         arrival_s: j.arrival_s,
                         duration_prop_s: j.duration_prop_s,
@@ -407,6 +429,30 @@ mod tests {
     fn self_round_slack() -> f64 {
         // One round of slack: round-boundary quantization.
         301.0
+    }
+
+    #[test]
+    fn tenant_tags_flow_into_results_and_quotas_apply() {
+        use crate::workload::{SyntheticSource, TenantSpec, WorkloadSource};
+        let spec = TenantSpec::parse("a:1,b:1").unwrap();
+        let jobs = SyntheticSource::new(TraceConfig {
+            n_jobs: 24,
+            split: Split::new(0, 100, 0),
+            multi_gpu: false,
+            jobs_per_hour: None,
+            seed: 13,
+        })
+        .with_tenants(spec.clone())
+        .drain_jobs();
+        let sim =
+            Simulator::with_quotas(small_cfg("fifo", "tune"), Some(spec.quotas()));
+        let r = sim.run(jobs.clone());
+        assert_eq!(r.finished.len(), 24);
+        let by = r.tenant_stats();
+        // Both tenants appear with the right job counts.
+        let n_a = jobs.iter().filter(|j| j.tenant.0 == 0).count();
+        assert_eq!(by[&TenantId(0)].n, n_a);
+        assert_eq!(by[&TenantId(1)].n, 24 - n_a);
     }
 
     #[test]

@@ -15,4 +15,4 @@
 
 mod engine;
 
-pub use engine::{SimConfig, SimResult, Simulator};
+pub use engine::{FinishedJob, SimConfig, SimResult, Simulator};

@@ -13,8 +13,12 @@
 //! - **Arrivals** — static (all at t=0) or Poisson(λ jobs/hour).
 //! - **Model mix** — a workload *split* (image%, language%, speech%)
 //!   selects the task family; the model within the family is uniform.
+//!
+//! Real trace files (Philly CSV, Alibaba machine-utilization) are
+//! ingested by [`crate::workload`], which also hosts the streaming
+//! [`crate::workload::SyntheticSource`] this module's [`generate`] wraps.
 
-use crate::job::{Job, JobId, ModelKind, Task};
+use crate::job::{Job, ModelKind, Task};
 use crate::util::rng::Pcg64;
 
 /// Workload split: percentage of image/language/speech jobs (sums to 100).
@@ -115,26 +119,14 @@ pub fn sample_duration_s(rng: &mut Pcg64) -> f64 {
 }
 
 /// Generate a job trace.
+///
+/// Since the `workload/` refactor this is a thin batch wrapper over
+/// [`crate::workload::SyntheticSource`]; the output is byte-identical to
+/// the historical in-place generator for any `cfg` (golden-tested in
+/// `tests/workload.rs`).
 pub fn generate(cfg: &TraceConfig) -> Vec<Job> {
-    cfg.split.validate();
-    let mut rng = Pcg64::new(cfg.seed, 0x7EACE);
-    let demand = GpuDemandDist { multi_gpu: cfg.multi_gpu };
-    let mut t = 0.0f64;
-    (0..cfg.n_jobs)
-        .map(|i| {
-            let arrival = match cfg.jobs_per_hour {
-                None => 0.0,
-                Some(lam) => {
-                    t += rng.exponential(lam / 3600.0);
-                    t
-                }
-            };
-            let model = cfg.split.sample_model(&mut rng);
-            let gpus = demand.sample(&mut rng);
-            let duration = sample_duration_s(&mut rng);
-            Job::new(JobId(i as u64), model, gpus, arrival, duration)
-        })
-        .collect()
+    use crate::workload::{SyntheticSource, WorkloadSource};
+    SyntheticSource::new(*cfg).drain_jobs()
 }
 
 #[cfg(test)]

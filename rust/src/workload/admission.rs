@@ -1,0 +1,287 @@
+//! Tenant-aware weighted-quota admission (the multi-tenant half of the
+//! paper's setting: §1 "multi-tenant clusters" / the Philly analysis
+//! paper's per-VC queues).
+//!
+//! Each tenant holds a weight; a round's GPU capacity is apportioned to
+//! the tenants *present in the queue* by largest-remainder rounding of
+//! `total_gpus × wᵗ / Σw`. Admission walks the policy-ordered queue twice:
+//!
+//! 1. **Quota pass** — admit a job only while its tenant stays within its
+//!    integer GPU cap (and the cluster total).
+//! 2. **Spill pass (work-conserving)** — capacity a tenant could not use
+//!    (no demand, or gang sizes that don't pack) is handed to the
+//!    remaining jobs in policy order, so GPUs never idle because of
+//!    quotas alone.
+//!
+//! With no quotas configured the single-pass behaviour is byte-identical
+//! to the pre-tenancy coordinator: admit in policy order while aggregate
+//! GPU demand fits, passing over too-big jobs (gang backfill).
+
+use crate::job::{JobId, TenantId};
+use std::collections::BTreeMap;
+
+/// Per-tenant scheduling weights. Tenants absent from the map default to
+/// weight 1.0, so partially specified quota sets degrade gracefully.
+#[derive(Debug, Clone, Default)]
+pub struct TenantQuotas {
+    weights: BTreeMap<TenantId, f64>,
+}
+
+impl TenantQuotas {
+    pub fn new() -> TenantQuotas {
+        TenantQuotas::default()
+    }
+
+    /// Set one tenant's weight (must be positive).
+    pub fn set(&mut self, tenant: TenantId, weight: f64) {
+        assert!(weight > 0.0, "tenant weight must be positive");
+        self.weights.insert(tenant, weight);
+    }
+
+    /// Builder-style [`TenantQuotas::set`].
+    pub fn with(mut self, tenant: TenantId, weight: f64) -> TenantQuotas {
+        self.set(tenant, weight);
+        self
+    }
+
+    /// The weight of `tenant` (1.0 when unspecified).
+    pub fn weight(&self, tenant: TenantId) -> f64 {
+        self.weights.get(&tenant).copied().unwrap_or(1.0)
+    }
+
+    /// Number of explicitly configured tenants.
+    pub fn len(&self) -> usize {
+        self.weights.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.weights.is_empty()
+    }
+
+    /// Integer GPU caps for the tenants in `present`, apportioning
+    /// `total_gpus` by weight with largest-remainder rounding (ties break
+    /// toward the lower tenant id for determinism). Caps sum to
+    /// `total_gpus` whenever `present` is non-empty.
+    pub fn integer_caps(
+        &self,
+        present: &[TenantId],
+        total_gpus: u32,
+    ) -> BTreeMap<TenantId, u32> {
+        let mut caps: BTreeMap<TenantId, u32> = BTreeMap::new();
+        if present.is_empty() {
+            return caps;
+        }
+        let total_weight: f64 =
+            present.iter().map(|&t| self.weight(t)).sum();
+        let mut fractions: Vec<(TenantId, f64)> = Vec::new();
+        let mut assigned = 0u32;
+        for &t in present {
+            let exact =
+                total_gpus as f64 * self.weight(t) / total_weight;
+            let base = exact.floor() as u32;
+            caps.insert(t, base);
+            assigned += base;
+            fractions.push((t, exact - base as f64));
+        }
+        // Hand out the remainder to the largest fractional parts.
+        let mut leftover = total_gpus - assigned;
+        fractions.sort_by(|a, b| {
+            b.1.total_cmp(&a.1).then(a.0.cmp(&b.0))
+        });
+        for (t, _) in fractions {
+            if leftover == 0 {
+                break;
+            }
+            *caps.get_mut(&t).unwrap() += 1;
+            leftover -= 1;
+        }
+        caps
+    }
+}
+
+/// The admission-relevant facts of one queued job.
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionJob {
+    pub id: JobId,
+    pub tenant: TenantId,
+    pub gpus: u32,
+}
+
+/// Outcome of one admission round (inputs to the mechanism + audit trail).
+#[derive(Debug, Clone, Default)]
+pub struct AdmissionOutcome {
+    /// Admitted job ids: quota-pass admits in policy order, then spill
+    /// admits in policy order (spilled jobs rank below in-quota jobs).
+    pub admitted: Vec<JobId>,
+    /// GPUs admitted per tenant (for fairness accounting).
+    pub gpus_by_tenant: BTreeMap<TenantId, u32>,
+    /// Jobs admitted only by the work-conserving spill pass.
+    pub spilled: Vec<JobId>,
+}
+
+/// Admit jobs from the policy-ordered queue into `total_gpus` of capacity.
+///
+/// `quotas = None` reproduces the quota-free admission exactly (single
+/// pass, gang backfill) on a fast path that skips all per-tenant
+/// bookkeeping — `gpus_by_tenant` is populated only when quotas are on.
+/// See the module docs for the two-pass semantics with quotas.
+pub fn admit(
+    ordered: &[AdmissionJob],
+    total_gpus: u32,
+    quotas: Option<&TenantQuotas>,
+) -> AdmissionOutcome {
+    let mut out = AdmissionOutcome::default();
+    let mut used = 0u32;
+
+    // Fast path: the scheduler hot loop runs single-tenant by default.
+    let Some(quotas) = quotas else {
+        for job in ordered {
+            if used + job.gpus <= total_gpus {
+                used += job.gpus;
+                out.admitted.push(job.id);
+            }
+        }
+        return out;
+    };
+
+    let caps = {
+        let mut present: Vec<TenantId> =
+            ordered.iter().map(|j| j.tenant).collect();
+        present.sort_unstable();
+        present.dedup();
+        quotas.integer_caps(&present, total_gpus)
+    };
+
+    // Pass 1: within-quota.
+    let mut deferred: Vec<AdmissionJob> = Vec::new();
+    for job in ordered {
+        if used + job.gpus > total_gpus {
+            continue; // passed over; smaller later jobs may backfill
+        }
+        let cap = caps.get(&job.tenant).copied().unwrap_or(0);
+        let t_used =
+            out.gpus_by_tenant.get(&job.tenant).copied().unwrap_or(0);
+        if t_used + job.gpus > cap {
+            deferred.push(*job);
+            continue;
+        }
+        used += job.gpus;
+        *out.gpus_by_tenant.entry(job.tenant).or_insert(0) += job.gpus;
+        out.admitted.push(job.id);
+    }
+
+    // Pass 2: work-conserving spill of capacity quotas left stranded.
+    for job in &deferred {
+        if used + job.gpus > total_gpus {
+            continue;
+        }
+        used += job.gpus;
+        *out.gpus_by_tenant.entry(job.tenant).or_insert(0) += job.gpus;
+        out.admitted.push(job.id);
+        out.spilled.push(job.id);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(id: u64, tenant: u32, gpus: u32) -> AdmissionJob {
+        AdmissionJob { id: JobId(id), tenant: TenantId(tenant), gpus }
+    }
+
+    #[test]
+    fn no_quotas_matches_gang_backfill() {
+        // 8 GPUs: 6 fits, 8 passed over, 2 backfills.
+        let q = [job(0, 0, 6), job(1, 0, 8), job(2, 0, 2)];
+        let out = admit(&q, 8, None);
+        assert_eq!(out.admitted, vec![JobId(0), JobId(2)]);
+        assert!(out.spilled.is_empty());
+    }
+
+    #[test]
+    fn integer_caps_sum_to_total() {
+        let quotas = TenantQuotas::new()
+            .with(TenantId(0), 2.0)
+            .with(TenantId(1), 1.0);
+        let caps = quotas
+            .integer_caps(&[TenantId(0), TenantId(1)], 8);
+        assert_eq!(caps[&TenantId(0)] + caps[&TenantId(1)], 8);
+        // 2:1 over 8 GPUs → 5.33 : 2.67 → largest remainder gives 5:3.
+        assert_eq!(caps[&TenantId(0)], 5);
+        assert_eq!(caps[&TenantId(1)], 3);
+    }
+
+    #[test]
+    fn contended_tenants_capped_at_weighted_share() {
+        // Both tenants queue far more 1-GPU jobs than their cap; neither
+        // may exceed it.
+        let mut q = Vec::new();
+        for i in 0..16 {
+            q.push(job(i, (i % 2) as u32, 1));
+        }
+        let quotas = TenantQuotas::new()
+            .with(TenantId(0), 3.0)
+            .with(TenantId(1), 1.0);
+        let out = admit(&q, 8, Some(&quotas));
+        assert_eq!(out.admitted.len(), 8);
+        assert_eq!(out.gpus_by_tenant[&TenantId(0)], 6);
+        assert_eq!(out.gpus_by_tenant[&TenantId(1)], 2);
+        assert!(out.spilled.is_empty(), "contended: nothing to spill");
+    }
+
+    #[test]
+    fn spill_is_work_conserving() {
+        // Tenant 1 has no demand; tenant 0 absorbs the whole cluster.
+        let q = [job(0, 0, 4), job(1, 0, 4)];
+        let quotas = TenantQuotas::new()
+            .with(TenantId(0), 1.0)
+            .with(TenantId(1), 1.0);
+        let out = admit(&q, 8, Some(&quotas));
+        // Only tenant 0 is *present*, so it owns the full capacity.
+        assert_eq!(out.admitted.len(), 2);
+        assert_eq!(out.gpus_by_tenant[&TenantId(0)], 8);
+    }
+
+    #[test]
+    fn spill_fills_gang_fragmentation() {
+        // Tenant 1's cap is 4 but its only job needs 8 GPUs: its quota
+        // strands and tenant 0's deferred job takes the space.
+        let q = [job(0, 1, 8), job(1, 0, 4), job(2, 0, 4)];
+        let quotas = TenantQuotas::new()
+            .with(TenantId(0), 1.0)
+            .with(TenantId(1), 1.0);
+        let out = admit(&q, 8, Some(&quotas));
+        assert_eq!(out.admitted, vec![JobId(1), JobId(2)]);
+        assert_eq!(out.spilled, vec![JobId(2)]);
+        assert_eq!(out.gpus_by_tenant[&TenantId(0)], 8);
+    }
+
+    #[test]
+    fn unknown_tenants_default_to_weight_one() {
+        let quotas = TenantQuotas::new().with(TenantId(0), 1.0);
+        let caps = quotas.integer_caps(
+            &[TenantId(0), TenantId(7)],
+            8,
+        );
+        assert_eq!(caps[&TenantId(0)], 4);
+        assert_eq!(caps[&TenantId(7)], 4);
+    }
+
+    #[test]
+    fn deterministic_tie_break_on_remainders() {
+        let quotas = TenantQuotas::new()
+            .with(TenantId(0), 1.0)
+            .with(TenantId(1), 1.0)
+            .with(TenantId(2), 1.0);
+        // 8 / 3 → 2.67 each: two tenants get 3, lowest ids first.
+        let caps = quotas.integer_caps(
+            &[TenantId(0), TenantId(1), TenantId(2)],
+            8,
+        );
+        assert_eq!(caps[&TenantId(0)], 3);
+        assert_eq!(caps[&TenantId(1)], 3);
+        assert_eq!(caps[&TenantId(2)], 2);
+    }
+}

@@ -1,0 +1,241 @@
+//! Alibaba-style machine-utilization trace adapter (paper §5.7: "big
+//! data" workloads scheduled with DRF/Tetris-style static allocation).
+//!
+//! The Alibaba cluster-trace `machine_usage` table is a time series of
+//! per-machine CPU/memory utilization, not a job log. This adapter maps
+//! each utilization entry onto the *big-data job families* the paper's
+//! §5.7 comparison uses with the `Fixed` mechanism and DRF/Tetris
+//! policies:
+//!
+//! - **CPU-heavy** entries (`cpu ≥ cpu_heavy_pct`) become image-family
+//!   jobs (AlexNet / ShuffleNetV2): high CPU knee, the canonical
+//!   CPU-sensitive family.
+//! - **Memory-heavy** entries (`mem ≥ mem_heavy_pct`) become the
+//!   cache-hungry family (ResNet18-OpenImages / M5).
+//! - Entries heavy on **both** dimensions go to whichever utilization
+//!   is higher; everything else becomes language-family filler
+//!   (Lstm / Gnmt): insensitive jobs that static allocation serves well.
+//!
+//! GPU demand and duration scale deterministically with the entry's
+//! intensity, so a hotter machine produces a bigger, longer job. Each
+//! machine id becomes a tenant, which makes the `machine_usage` slice a
+//! ready-made multi-tenant contention workload.
+//!
+//! Expected CSV columns (header required, extra columns ignored):
+//!
+//! ```text
+//! timestamp,machine_id,cpu_util_percent,mem_util_percent
+//! 0,m_1,85,40
+//! ```
+
+use super::{
+    finalize_rows, CsvDoc, JobSpec, RawRow, TenantInterner, WorkloadSource,
+};
+use crate::job::ModelKind;
+use crate::util::rng::Pcg64;
+
+/// Adapter configuration.
+#[derive(Debug, Clone)]
+pub struct AlibabaTraceConfig {
+    pub path: String,
+    /// λ rescale, as in [`super::PhillyTraceConfig::load_scale`].
+    pub load_scale: f64,
+    /// CPU-utilization threshold (percent) for the CPU-heavy family.
+    pub cpu_heavy_pct: f64,
+    /// Memory-utilization threshold (percent) for the memory-heavy family.
+    pub mem_heavy_pct: f64,
+    /// Keep only the first N data rows (file order).
+    pub max_jobs: Option<usize>,
+    /// Seed for the within-family model choice.
+    pub seed: u64,
+}
+
+impl Default for AlibabaTraceConfig {
+    fn default() -> Self {
+        AlibabaTraceConfig {
+            path: String::new(),
+            load_scale: 1.0,
+            cpu_heavy_pct: 60.0,
+            mem_heavy_pct: 60.0,
+            max_jobs: None,
+            seed: 1,
+        }
+    }
+}
+
+/// A parsed Alibaba-style utilization trace, streamed in arrival order.
+pub struct AlibabaTraceSource {
+    specs: std::vec::IntoIter<JobSpec>,
+    tenant_names: Vec<String>,
+}
+
+impl AlibabaTraceSource {
+    pub fn new(cfg: AlibabaTraceConfig) -> Result<AlibabaTraceSource, String> {
+        if !(cfg.load_scale > 0.0) {
+            return Err("load_scale must be positive".to_string());
+        }
+        let text = std::fs::read_to_string(&cfg.path)
+            .map_err(|e| format!("read {}: {e}", cfg.path))?;
+        Self::from_str(&text, &cfg)
+    }
+
+    /// Parse from an in-memory CSV document.
+    pub fn from_str(
+        text: &str,
+        cfg: &AlibabaTraceConfig,
+    ) -> Result<AlibabaTraceSource, String> {
+        let doc = CsvDoc::parse(text)?;
+        let c_ts = doc.require_column("timestamp")?;
+        let c_machine = doc.require_column("machine_id")?;
+        let c_cpu = doc.require_column("cpu_util_percent")?;
+        let c_mem = doc.require_column("mem_util_percent")?;
+
+        let mut rng = Pcg64::new(cfg.seed, 0xA11BA);
+        let mut interner = TenantInterner::new();
+        let mut rows: Vec<RawRow> = Vec::new();
+
+        for row in doc.rows() {
+            if let Some(max) = cfg.max_jobs {
+                if rows.len() >= max {
+                    break;
+                }
+            }
+            let ts: f64 = row.parse(c_ts, "timestamp")?;
+            let cpu: f64 = row.parse(c_cpu, "cpu_util_percent")?;
+            let mem: f64 = row.parse(c_mem, "mem_util_percent")?;
+            if !(0.0..=100.0).contains(&cpu)
+                || !(0.0..=100.0).contains(&mem)
+            {
+                return Err(format!(
+                    "line {}: utilization must be in [0, 100]",
+                    row.line_no
+                ));
+            }
+            let tenant = interner.intern(row.cell(c_machine)?);
+            // Family thresholds (§5.7 job families); an entry heavy on
+            // *both* dimensions goes to the dominant one.
+            let cpu_heavy = cpu >= cfg.cpu_heavy_pct;
+            let mem_heavy = mem >= cfg.mem_heavy_pct;
+            let model = if cpu_heavy && (!mem_heavy || cpu >= mem) {
+                *rng.choose(&[ModelKind::AlexNet, ModelKind::ShuffleNetV2])
+            } else if mem_heavy {
+                *rng.choose(&[ModelKind::ResNet18, ModelKind::M5])
+            } else {
+                *rng.choose(&[ModelKind::Lstm, ModelKind::Gnmt])
+            };
+            // Intensity → gang size and duration (deterministic).
+            let intensity = cpu.max(mem);
+            let gpus = if intensity >= 80.0 {
+                4
+            } else if intensity >= 50.0 {
+                2
+            } else {
+                1
+            };
+            let duration_s =
+                (60.0 + (cpu + mem) / 200.0 * 7200.0).clamp(60.0, 7260.0);
+            rows.push((ts, tenant, model, gpus, duration_s));
+        }
+
+        Ok(AlibabaTraceSource {
+            specs: finalize_rows(rows, cfg.load_scale).into_iter(),
+            tenant_names: interner.into_names(),
+        })
+    }
+}
+
+impl WorkloadSource for AlibabaTraceSource {
+    fn name(&self) -> &'static str {
+        "alibaba-usage"
+    }
+
+    fn next_spec(&mut self) -> Option<JobSpec> {
+        self.specs.next()
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.specs.len())
+    }
+
+    fn tenant_names(&self) -> Vec<String> {
+        self.tenant_names.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::{Task, TenantId};
+
+    const SMALL: &str = "\
+timestamp,machine_id,cpu_util_percent,mem_util_percent
+0,m_1,85,40
+30,m_2,20,75
+60,m_1,30,30
+";
+
+    #[test]
+    fn maps_families_by_pressure() {
+        let mut src = AlibabaTraceSource::from_str(
+            SMALL,
+            &AlibabaTraceConfig::default(),
+        )
+        .unwrap();
+        let specs: Vec<JobSpec> =
+            std::iter::from_fn(|| src.next_spec()).collect();
+        assert_eq!(specs.len(), 3);
+        // 85% CPU → image family, 4 GPUs.
+        assert_eq!(specs[0].model.task(), Task::Image);
+        assert_eq!(specs[0].gpus, 4);
+        // 75% mem → memory-heavy family (image or speech zoo entries).
+        assert!(matches!(
+            specs[1].model,
+            ModelKind::ResNet18 | ModelKind::M5
+        ));
+        assert_eq!(specs[1].gpus, 2);
+        // Cool machine → language filler, 1 GPU.
+        assert_eq!(specs[2].model.task(), Task::Language);
+        assert_eq!(specs[2].gpus, 1);
+    }
+
+    #[test]
+    fn tenants_from_machines() {
+        let mut src = AlibabaTraceSource::from_str(
+            SMALL,
+            &AlibabaTraceConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(src.tenant_names(), vec!["m_1", "m_2"]);
+        let specs: Vec<JobSpec> =
+            std::iter::from_fn(|| src.next_spec()).collect();
+        assert_eq!(specs[0].tenant, TenantId(0));
+        assert_eq!(specs[1].tenant, TenantId(1));
+        assert_eq!(specs[2].tenant, TenantId(0));
+    }
+
+    #[test]
+    fn deterministic_and_rescalable() {
+        let run = || -> Vec<JobSpec> {
+            let cfg = AlibabaTraceConfig {
+                load_scale: 3.0,
+                ..AlibabaTraceConfig::default()
+            };
+            let mut src =
+                AlibabaTraceSource::from_str(SMALL, &cfg).unwrap();
+            std::iter::from_fn(|| src.next_spec()).collect()
+        };
+        let a = run();
+        assert_eq!(a, run());
+        assert_eq!(a[2].arrival_s, 20.0); // 60 / 3
+    }
+
+    #[test]
+    fn rejects_out_of_range_utilization() {
+        let bad = "timestamp,machine_id,cpu_util_percent,mem_util_percent\n0,m,150,10\n";
+        assert!(AlibabaTraceSource::from_str(
+            bad,
+            &AlibabaTraceConfig::default()
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,417 @@
+//! Pluggable workload ingestion: trace sources, tenants, streaming replay.
+//!
+//! The paper evaluates on the Microsoft Philly trace and on
+//! production-derived synthetic workloads, always in a *multi-tenant*
+//! cluster. This module is the single entry point for "where jobs come
+//! from":
+//!
+//! - [`WorkloadSource`] — the pluggable interface: a deterministic,
+//!   seedable stream of timestamped [`JobSpec`]s tagged with a
+//!   [`TenantId`]. Sources yield jobs in non-decreasing arrival order, so
+//!   both the simulator (batch) and the deploy leader (streaming) can
+//!   consume them incrementally.
+//! - [`SyntheticSource`] — the Philly-marginals generator
+//!   ([`crate::trace`] refactored behind the trait; byte-identical output
+//!   for the same [`TraceConfig`](crate::trace::TraceConfig)).
+//! - [`PhillyTraceSource`] — a Philly-format CSV reader with load-scaling
+//!   and time-warp knobs (λ rescale, duration clamp, GPU-demand remap).
+//! - [`AlibabaTraceSource`] — an Alibaba-style machine-utilization
+//!   adapter mapping CPU/memory-heavy entries onto the big-data
+//!   `Fixed`/DRF job families of §5.7.
+//! - [`admission`] — weighted-quota tenant admission (GPU share per
+//!   tenant with work-conserving spill), used by the coordinator ahead of
+//!   the policy ordering.
+//!
+//! ## Tenant spec syntax
+//!
+//! Tenants are named on the CLI as `name:weight` pairs:
+//! `--tenants a:2,b:1` gives tenant `a` twice tenant `b`'s GPU share.
+//! The weight is optional (`--tenants a,b` = equal shares). For file
+//! traces the names match the trace's own tenant column (Philly `vc`,
+//! Alibaba `machine_id` group); unmatched trace tenants default to
+//! weight 1.
+
+pub mod admission;
+mod alibaba;
+mod philly;
+mod synthetic;
+
+pub use admission::{admit, AdmissionJob, AdmissionOutcome, TenantQuotas};
+pub use alibaba::{AlibabaTraceConfig, AlibabaTraceSource};
+pub use philly::{PhillyTraceConfig, PhillyTraceSource};
+pub use synthetic::SyntheticSource;
+
+use crate::job::{Job, JobId, ModelKind, TenantId};
+
+/// One job as produced by a workload source: everything the scheduler
+/// needs to admit it, decoupled from the scheduler-internal [`Job`]
+/// bookkeeping fields.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct JobSpec {
+    pub id: JobId,
+    pub tenant: TenantId,
+    pub model: ModelKind,
+    pub gpus: u32,
+    /// Arrival time, seconds from trace start.
+    pub arrival_s: f64,
+    /// Duration under GPU-proportional allocation, seconds.
+    pub duration_s: f64,
+}
+
+impl JobSpec {
+    /// Convert into a scheduler [`Job`].
+    pub fn into_job(self) -> Job {
+        Job::new(self.id, self.model, self.gpus, self.arrival_s, self.duration_s)
+            .with_tenant(self.tenant)
+    }
+}
+
+/// A pluggable workload source: a deterministic stream of job specs in
+/// non-decreasing arrival order. Implementations must be fully
+/// reproducible from their construction parameters (seed included) —
+/// every consumer in the crate relies on replaying a source twice giving
+/// identical jobs.
+pub trait WorkloadSource: Send {
+    /// Source name for logs and reports.
+    fn name(&self) -> &'static str;
+
+    /// Next job spec, or `None` when the trace is exhausted.
+    fn next_spec(&mut self) -> Option<JobSpec>;
+
+    /// Remaining number of jobs, when known up front.
+    fn len_hint(&self) -> Option<usize> {
+        None
+    }
+
+    /// Human-readable tenant names, indexed by `TenantId.0`.
+    fn tenant_names(&self) -> Vec<String> {
+        vec!["default".to_string()]
+    }
+
+    /// Drain the source into scheduler jobs (batch consumers).
+    fn drain_jobs(&mut self) -> Vec<Job> {
+        let mut out = Vec::new();
+        while let Some(spec) = self.next_spec() {
+            out.push(spec.into_job());
+        }
+        out
+    }
+}
+
+/// Replay an in-memory job list as a stream (sorted by arrival). Bridges
+/// the batch world (`Vec<Job>`) to streaming consumers like the deploy
+/// leader.
+pub struct ReplaySource {
+    jobs: std::vec::IntoIter<Job>,
+    names: Vec<String>,
+}
+
+impl ReplaySource {
+    pub fn from_jobs(mut jobs: Vec<Job>) -> ReplaySource {
+        jobs.sort_by(|a, b| {
+            a.arrival_s.total_cmp(&b.arrival_s).then(a.id.cmp(&b.id))
+        });
+        let max_tenant = jobs.iter().map(|j| j.tenant.0).max().unwrap_or(0);
+        let names = (0..=max_tenant).map(|t| format!("t{t}")).collect();
+        ReplaySource { jobs: jobs.into_iter(), names }
+    }
+}
+
+impl WorkloadSource for ReplaySource {
+    fn name(&self) -> &'static str {
+        "replay"
+    }
+
+    fn next_spec(&mut self) -> Option<JobSpec> {
+        self.jobs.next().map(|j| JobSpec {
+            id: j.id,
+            tenant: j.tenant,
+            model: j.model,
+            gpus: j.gpus,
+            arrival_s: j.arrival_s,
+            duration_s: j.duration_prop_s,
+        })
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.jobs.len())
+    }
+
+    fn tenant_names(&self) -> Vec<String> {
+        self.names.clone()
+    }
+}
+
+/// Minimal comma-split CSV document shared by the trace readers: a
+/// header row plus trimmed cells, with `#` comments and blank lines
+/// skipped and 1-based line numbers preserved for error reporting.
+/// Cells must not contain commas (the supported trace projections never
+/// do).
+pub(crate) struct CsvDoc<'a> {
+    columns: Vec<&'a str>,
+    rows: Vec<CsvRow<'a>>,
+}
+
+/// One data row of a [`CsvDoc`].
+pub(crate) struct CsvRow<'a> {
+    pub(crate) line_no: usize,
+    cells: Vec<&'a str>,
+}
+
+impl<'a> CsvDoc<'a> {
+    pub(crate) fn parse(text: &'a str) -> Result<CsvDoc<'a>, String> {
+        let mut lines = text
+            .lines()
+            .enumerate()
+            .map(|(i, l)| (i + 1, l.trim()))
+            .filter(|(_, l)| !l.is_empty() && !l.starts_with('#'));
+        let (_, header) =
+            lines.next().ok_or_else(|| "empty trace file".to_string())?;
+        let columns = header.split(',').map(str::trim).collect();
+        let rows = lines
+            .map(|(line_no, l)| CsvRow {
+                line_no,
+                cells: l.split(',').map(str::trim).collect(),
+            })
+            .collect();
+        Ok(CsvDoc { columns, rows })
+    }
+
+    pub(crate) fn column(&self, name: &str) -> Option<usize> {
+        self.columns.iter().position(|c| *c == name)
+    }
+
+    pub(crate) fn require_column(&self, name: &str) -> Result<usize, String> {
+        self.column(name)
+            .ok_or_else(|| format!("missing column '{name}'"))
+    }
+
+    pub(crate) fn rows(&self) -> &[CsvRow<'a>] {
+        &self.rows
+    }
+}
+
+impl<'a> CsvRow<'a> {
+    pub(crate) fn cell(&self, idx: usize) -> Result<&'a str, String> {
+        self.cells.get(idx).copied().ok_or_else(|| {
+            format!("line {}: too few columns", self.line_no)
+        })
+    }
+
+    /// Parse cell `idx` as `T`, reporting `name` on failure.
+    pub(crate) fn parse<T: std::str::FromStr>(
+        &self,
+        idx: usize,
+        name: &str,
+    ) -> Result<T, String> {
+        self.cell(idx)?
+            .parse()
+            .map_err(|_| format!("line {}: bad {name}", self.line_no))
+    }
+}
+
+/// First-appearance tenant-name interner shared by the trace readers.
+pub(crate) struct TenantInterner {
+    ids: std::collections::BTreeMap<String, TenantId>,
+    names: Vec<String>,
+}
+
+impl TenantInterner {
+    pub(crate) fn new() -> TenantInterner {
+        TenantInterner { ids: std::collections::BTreeMap::new(), names: Vec::new() }
+    }
+
+    /// The id of `name`, allocating the next dense id on first sight.
+    pub(crate) fn intern(&mut self, name: &str) -> TenantId {
+        match self.ids.get(name) {
+            Some(&t) => t,
+            None => {
+                let t = TenantId(self.names.len() as u32);
+                self.ids.insert(name.to_string(), t);
+                self.names.push(name.to_string());
+                t
+            }
+        }
+    }
+
+    /// Interned names in id order; a lone `default` if nothing interned.
+    pub(crate) fn into_names(mut self) -> Vec<String> {
+        if self.names.is_empty() {
+            self.names.push("default".to_string());
+        }
+        self.names
+    }
+}
+
+/// A raw trace row before normalization: (timestamp, tenant, model,
+/// gpus, duration_s).
+pub(crate) type RawRow = (f64, TenantId, ModelKind, u32, f64);
+
+/// Shared reader epilogue: re-base timestamps to the earliest row, apply
+/// the λ rescale, sort by arrival, and assign dense [`JobId`]s.
+pub(crate) fn finalize_rows(rows: Vec<RawRow>, load_scale: f64) -> Vec<JobSpec> {
+    let t0 = rows.iter().map(|r| r.0).fold(f64::INFINITY, f64::min);
+    let mut specs: Vec<JobSpec> = rows
+        .into_iter()
+        .map(|(ts, tenant, model, gpus, duration_s)| JobSpec {
+            id: JobId(0), // assigned after sorting
+            tenant,
+            model,
+            gpus,
+            arrival_s: (ts - t0) / load_scale,
+            duration_s,
+        })
+        .collect();
+    specs.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
+    for (i, s) in specs.iter_mut().enumerate() {
+        s.id = JobId(i as u64);
+    }
+    specs
+}
+
+/// Parsed `--tenants` CLI spec: ordered names with weights.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSpec {
+    pub names: Vec<String>,
+    pub weights: Vec<f64>,
+}
+
+impl TenantSpec {
+    /// Parse `"a:2,b:1"` / `"a,b"` (missing weight = 1). Errors on empty
+    /// specs, duplicate names, and non-positive weights.
+    pub fn parse(s: &str) -> Result<TenantSpec, String> {
+        let mut names = Vec::new();
+        let mut weights = Vec::new();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (name, weight) = match part.split_once(':') {
+                Some((n, w)) => {
+                    let w: f64 = w.trim().parse().map_err(|_| {
+                        format!("bad tenant weight in '{part}'")
+                    })?;
+                    (n.trim().to_string(), w)
+                }
+                None => (part.to_string(), 1.0),
+            };
+            if !(weight > 0.0) {
+                return Err(format!(
+                    "tenant '{name}' weight must be positive"
+                ));
+            }
+            if names.contains(&name) {
+                return Err(format!("duplicate tenant '{name}'"));
+            }
+            names.push(name);
+            weights.push(weight);
+        }
+        if names.is_empty() {
+            return Err("empty tenant spec".to_string());
+        }
+        Ok(TenantSpec { names, weights })
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    /// The weight of `name`, if it is in the spec.
+    pub fn weight_of(&self, name: &str) -> Option<f64> {
+        self.names
+            .iter()
+            .position(|n| n == name)
+            .map(|i| self.weights[i])
+    }
+
+    /// Quotas keyed by this spec's own positional tenant ids (used with
+    /// [`SyntheticSource::with_tenants`]).
+    pub fn quotas(&self) -> TenantQuotas {
+        let mut q = TenantQuotas::new();
+        for (i, w) in self.weights.iter().enumerate() {
+            q.set(TenantId(i as u32), *w);
+        }
+        q
+    }
+
+    /// Quotas for a trace whose tenants are `trace_names` (positional
+    /// [`TenantId`]s): spec names are matched by string, unmatched trace
+    /// tenants keep the default weight 1.
+    pub fn quotas_for(&self, trace_names: &[String]) -> TenantQuotas {
+        let mut q = TenantQuotas::new();
+        for (i, name) in trace_names.iter().enumerate() {
+            if let Some(w) = self.weight_of(name) {
+                q.set(TenantId(i as u32), w);
+            }
+        }
+        q
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tenant_spec_parses_weights_and_defaults() {
+        let spec = TenantSpec::parse("a:2,b:1,c").unwrap();
+        assert_eq!(spec.names, vec!["a", "b", "c"]);
+        assert_eq!(spec.weights, vec![2.0, 1.0, 1.0]);
+        assert_eq!(spec.weight_of("a"), Some(2.0));
+        assert_eq!(spec.weight_of("z"), None);
+    }
+
+    #[test]
+    fn tenant_spec_rejects_garbage() {
+        assert!(TenantSpec::parse("").is_err());
+        assert!(TenantSpec::parse("a:x").is_err());
+        assert!(TenantSpec::parse("a:0").is_err());
+        assert!(TenantSpec::parse("a:-1").is_err());
+        assert!(TenantSpec::parse("a,a").is_err());
+    }
+
+    #[test]
+    fn tenant_spec_quotas_positional() {
+        let spec = TenantSpec::parse("a:3,b:1").unwrap();
+        let q = spec.quotas();
+        assert_eq!(q.weight(TenantId(0)), 3.0);
+        assert_eq!(q.weight(TenantId(1)), 1.0);
+        // Unspecified tenants fall back to 1.0.
+        assert_eq!(q.weight(TenantId(9)), 1.0);
+    }
+
+    #[test]
+    fn quotas_for_matches_by_name() {
+        let spec = TenantSpec::parse("vc2:4").unwrap();
+        let trace_names =
+            vec!["vc1".to_string(), "vc2".to_string()];
+        let q = spec.quotas_for(&trace_names);
+        assert_eq!(q.weight(TenantId(0)), 1.0); // vc1 unmatched
+        assert_eq!(q.weight(TenantId(1)), 4.0); // vc2 matched
+    }
+
+    #[test]
+    fn replay_source_sorts_and_streams() {
+        use crate::job::ModelKind;
+        let jobs = vec![
+            Job::new(JobId(1), ModelKind::Lstm, 1, 50.0, 60.0),
+            Job::new(JobId(0), ModelKind::Lstm, 2, 10.0, 60.0)
+                .with_tenant(TenantId(1)),
+        ];
+        let mut src = ReplaySource::from_jobs(jobs);
+        assert_eq!(src.len_hint(), Some(2));
+        let a = src.next_spec().unwrap();
+        assert_eq!(a.id, JobId(0));
+        assert_eq!(a.tenant, TenantId(1));
+        assert_eq!(a.gpus, 2);
+        let b = src.next_spec().unwrap();
+        assert_eq!(b.arrival_s, 50.0);
+        assert!(src.next_spec().is_none());
+        assert_eq!(src.len_hint(), Some(0));
+    }
+}

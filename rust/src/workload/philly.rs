@@ -1,0 +1,314 @@
+//! Philly-format CSV trace reader (paper §5.3.1; format after the Philly
+//! analysis paper, arXiv:1901.05758).
+//!
+//! The public Philly release is per-job rows with a virtual-cluster (VC)
+//! tag; this reader ingests a flat CSV projection of it:
+//!
+//! ```text
+//! job_id,vc,submit_time,gpus,duration_s,model,status
+//! j1,vc-a,0,1,3600,resnet18,Pass
+//! ```
+//!
+//! - **Required columns:** `submit_time` (seconds, any epoch — arrivals
+//!   are re-based to the earliest kept row), `gpus`, `duration_s`.
+//! - **Optional columns:** `vc` (tenant; defaults to a single `default`
+//!   tenant), `model` (a zoo name from `synergy models`; rows without a
+//!   model are sampled from the configured [`Split`]), `status` (only
+//!   `Pass` rows are kept unless [`keep_failed`] is set), `job_id`
+//!   (ignored — ids are re-assigned densely in arrival order).
+//! - Blank lines and `#` comments are skipped. Cells must not contain
+//!   commas (the Philly projection never does).
+//!
+//! Load-scaling / time-warp knobs: [`load_scale`] divides every
+//! inter-arrival gap (λ rescale), [`duration_min_s`]/[`duration_max_s`]
+//! clamp durations, and [`gpu_cap`] remaps outsized GPU demands down to
+//! the largest gang the target cluster supports.
+//!
+//! [`keep_failed`]: PhillyTraceConfig::keep_failed
+//! [`load_scale`]: PhillyTraceConfig::load_scale
+//! [`duration_min_s`]: PhillyTraceConfig::duration_min_s
+//! [`duration_max_s`]: PhillyTraceConfig::duration_max_s
+//! [`gpu_cap`]: PhillyTraceConfig::gpu_cap
+
+use super::{
+    finalize_rows, CsvDoc, JobSpec, RawRow, TenantInterner, WorkloadSource,
+};
+use crate::job::{ModelKind, TenantId};
+use crate::trace::{Split, SPLIT_DEFAULT};
+use crate::util::rng::Pcg64;
+
+/// Reader configuration (see module docs for knob semantics).
+#[derive(Debug, Clone)]
+pub struct PhillyTraceConfig {
+    pub path: String,
+    /// λ rescale: all inter-arrival gaps are divided by this (>1
+    /// compresses the trace onto a busier cluster). Must be positive.
+    pub load_scale: f64,
+    /// Duration clamp, seconds.
+    pub duration_min_s: f64,
+    pub duration_max_s: f64,
+    /// GPU-demand remap: demands above this are clamped down (0 disables).
+    pub gpu_cap: u32,
+    /// Keep only the first N data rows (file order).
+    pub max_jobs: Option<usize>,
+    /// Model mix for rows without a `model` column.
+    pub split: Split,
+    /// Seed for model sampling of model-less rows.
+    pub seed: u64,
+    /// Keep rows whose `status` is not `Pass`.
+    pub keep_failed: bool,
+}
+
+impl Default for PhillyTraceConfig {
+    fn default() -> Self {
+        PhillyTraceConfig {
+            path: String::new(),
+            load_scale: 1.0,
+            duration_min_s: 1.0,
+            duration_max_s: f64::INFINITY,
+            gpu_cap: 16,
+            max_jobs: None,
+            split: SPLIT_DEFAULT,
+            seed: 1,
+            keep_failed: false,
+        }
+    }
+}
+
+/// A parsed Philly-format trace, streamed in arrival order.
+pub struct PhillyTraceSource {
+    specs: std::vec::IntoIter<JobSpec>,
+    tenant_names: Vec<String>,
+}
+
+impl PhillyTraceSource {
+    /// Read and parse `cfg.path`. Errors carry the offending line number.
+    pub fn new(cfg: PhillyTraceConfig) -> Result<PhillyTraceSource, String> {
+        if !(cfg.load_scale > 0.0) {
+            return Err("load_scale must be positive".to_string());
+        }
+        if !(cfg.duration_min_s <= cfg.duration_max_s) {
+            return Err("duration clamp: min > max".to_string());
+        }
+        let text = std::fs::read_to_string(&cfg.path)
+            .map_err(|e| format!("read {}: {e}", cfg.path))?;
+        Self::from_str(&text, &cfg)
+    }
+
+    /// Parse from an in-memory CSV document (used by tests and benches).
+    pub fn from_str(
+        text: &str,
+        cfg: &PhillyTraceConfig,
+    ) -> Result<PhillyTraceSource, String> {
+        let doc = CsvDoc::parse(text)?;
+        let c_submit = doc.require_column("submit_time")?;
+        let c_gpus = doc.require_column("gpus")?;
+        let c_dur = doc.require_column("duration_s")?;
+        let c_vc = doc.column("vc");
+        let c_model = doc.column("model");
+        let c_status = doc.column("status");
+
+        let mut rng = Pcg64::new(cfg.seed, 0x9B177);
+        let mut interner = TenantInterner::new();
+        // (submit, tenant, model, gpus, duration), file order.
+        let mut rows: Vec<RawRow> = Vec::new();
+
+        for row in doc.rows() {
+            if let Some(max) = cfg.max_jobs {
+                if rows.len() >= max {
+                    break;
+                }
+            }
+            if let Some(ci) = c_status {
+                let status = row.cell(ci)?;
+                if !cfg.keep_failed && !status.eq_ignore_ascii_case("pass")
+                {
+                    continue;
+                }
+            }
+            let submit: f64 = row.parse(c_submit, "submit_time")?;
+            let gpus_raw: u32 = row.parse(c_gpus, "gpus")?;
+            let duration: f64 = row.parse(c_dur, "duration_s")?;
+            if gpus_raw == 0 || !duration.is_finite() || duration <= 0.0 {
+                return Err(format!(
+                    "line {}: gpus and duration_s must be positive",
+                    row.line_no
+                ));
+            }
+            let tenant = match c_vc {
+                None => TenantId::DEFAULT,
+                Some(ci) => {
+                    let vc = row.cell(ci)?;
+                    interner.intern(if vc.is_empty() { "default" } else { vc })
+                }
+            };
+            let model_name = match c_model {
+                Some(ci) => row.cell(ci)?,
+                None => "",
+            };
+            let model = if model_name.is_empty() {
+                cfg.split.sample_model(&mut rng)
+            } else {
+                ModelKind::from_name(model_name).ok_or_else(|| {
+                    format!(
+                        "line {}: unknown model '{model_name}'",
+                        row.line_no
+                    )
+                })?
+            };
+            let gpus = if cfg.gpu_cap > 0 {
+                gpus_raw.min(cfg.gpu_cap)
+            } else {
+                gpus_raw
+            };
+            let duration = duration
+                .clamp(cfg.duration_min_s, cfg.duration_max_s);
+            rows.push((submit, tenant, model, gpus, duration));
+        }
+
+        Ok(PhillyTraceSource {
+            specs: finalize_rows(rows, cfg.load_scale).into_iter(),
+            tenant_names: interner.into_names(),
+        })
+    }
+}
+
+impl WorkloadSource for PhillyTraceSource {
+    fn name(&self) -> &'static str {
+        "philly-csv"
+    }
+
+    fn next_spec(&mut self) -> Option<JobSpec> {
+        self.specs.next()
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.specs.len())
+    }
+
+    fn tenant_names(&self) -> Vec<String> {
+        self.tenant_names.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::JobId;
+
+    const SMALL: &str = "\
+# tiny hand-rolled trace
+job_id,vc,submit_time,gpus,duration_s,model,status
+j0,vc-a,100,1,3600,resnet18,Pass
+j1,vc-b,40,2,7200,gnmt,Pass
+j2,vc-a,70,32,1800,,Pass
+j3,vc-b,90,1,60,lstm,Killed
+";
+
+    #[test]
+    fn parses_and_sorts_by_arrival() {
+        let src = PhillyTraceSource::from_str(
+            SMALL,
+            &PhillyTraceConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(src.tenant_names(), vec!["vc-a", "vc-b"]);
+        let mut src = src;
+        let specs: Vec<JobSpec> =
+            std::iter::from_fn(|| src.next_spec()).collect();
+        // j3 is Killed → dropped by default.
+        assert_eq!(specs.len(), 3);
+        // Sorted by arrival, re-based to the earliest kept row (t=40).
+        assert_eq!(specs[0].arrival_s, 0.0); // j1
+        assert_eq!(specs[0].gpus, 2);
+        assert_eq!(specs[0].model, ModelKind::Gnmt);
+        assert_eq!(specs[1].arrival_s, 30.0); // j2
+        assert_eq!(specs[2].arrival_s, 60.0); // j0
+        assert_eq!(specs[2].model, ModelKind::ResNet18);
+        // Dense ids in arrival order.
+        assert_eq!(specs[1].id, JobId(1));
+        // 32-GPU demand remapped down to the 16-GPU cap.
+        assert_eq!(specs[1].gpus, 16);
+        // Tenant interning by first appearance: vc-a = 0, vc-b = 1.
+        assert_eq!(specs[2].tenant, TenantId(0));
+        assert_eq!(specs[0].tenant, TenantId(1));
+    }
+
+    #[test]
+    fn keep_failed_and_load_scale() {
+        let cfg = PhillyTraceConfig {
+            keep_failed: true,
+            load_scale: 2.0,
+            ..PhillyTraceConfig::default()
+        };
+        let mut src =
+            PhillyTraceSource::from_str(SMALL, &cfg).unwrap();
+        let specs: Vec<JobSpec> =
+            std::iter::from_fn(|| src.next_spec()).collect();
+        assert_eq!(specs.len(), 4);
+        // (100 - 40) / 2 = 30 for the last arrival.
+        assert_eq!(specs.last().unwrap().arrival_s, 30.0);
+    }
+
+    #[test]
+    fn duration_clamp_applies() {
+        let cfg = PhillyTraceConfig {
+            duration_min_s: 600.0,
+            duration_max_s: 4000.0,
+            ..PhillyTraceConfig::default()
+        };
+        let mut src =
+            PhillyTraceSource::from_str(SMALL, &cfg).unwrap();
+        while let Some(s) = src.next_spec() {
+            assert!((600.0..=4000.0).contains(&s.duration_s));
+        }
+    }
+
+    #[test]
+    fn model_less_rows_sample_deterministically() {
+        let take = |seed: u64| -> Vec<ModelKind> {
+            let cfg =
+                PhillyTraceConfig { seed, ..PhillyTraceConfig::default() };
+            let mut src =
+                PhillyTraceSource::from_str(SMALL, &cfg).unwrap();
+            std::iter::from_fn(|| src.next_spec())
+                .map(|s| s.model)
+                .collect()
+        };
+        assert_eq!(take(7), take(7));
+    }
+
+    #[test]
+    fn bad_input_reports_line() {
+        let bad = "submit_time,gpus,duration_s\n10,zero,60\n";
+        let err = PhillyTraceSource::from_str(
+            bad,
+            &PhillyTraceConfig::default(),
+        )
+        .unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(PhillyTraceSource::from_str(
+            "nope\n",
+            &PhillyTraceConfig::default()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn max_jobs_truncates_in_file_order() {
+        let cfg = PhillyTraceConfig {
+            max_jobs: Some(2),
+            keep_failed: true,
+            ..PhillyTraceConfig::default()
+        };
+        let mut src =
+            PhillyTraceSource::from_str(SMALL, &cfg).unwrap();
+        assert_eq!(src.len_hint(), Some(2));
+        let a = src.next_spec().unwrap();
+        let b = src.next_spec().unwrap();
+        assert!(src.next_spec().is_none());
+        // First two file rows are j0 (t=100) and j1 (t=40).
+        assert_eq!(a.arrival_s, 0.0);
+        assert_eq!(b.arrival_s, 60.0);
+    }
+}

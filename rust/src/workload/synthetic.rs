@@ -1,0 +1,182 @@
+//! The synthetic Philly-marginals generator behind [`WorkloadSource`].
+//!
+//! This is the original [`crate::trace::generate`] refactored into a
+//! streaming source. The RNG call sequence per job (arrival → model →
+//! GPU demand → duration) is preserved exactly, so for any
+//! [`TraceConfig`] the stream is **byte-identical** to the pre-refactor
+//! generator's output (guarded by a golden test in `tests/workload.rs`).
+//!
+//! Tenants: the base generator is single-tenant. [`with_tenants`]
+//! assigns each job a tenant sampled from a [`TenantSpec`]'s weights
+//! using a *separate* RNG stream, so turning tenancy on does not perturb
+//! any job field — the same seed yields the same jobs, only tagged.
+//!
+//! [`with_tenants`]: SyntheticSource::with_tenants
+
+use super::{JobSpec, TenantSpec, WorkloadSource};
+use crate::job::{JobId, TenantId};
+use crate::trace::{sample_duration_s, GpuDemandDist, TraceConfig};
+use crate::util::rng::Pcg64;
+
+/// RNG stream id of the job-field stream (shared with the historical
+/// generator — do not change, or the golden test breaks).
+const JOB_STREAM: u64 = 0x7EACE;
+/// RNG stream id of the independent tenant-assignment stream.
+const TENANT_STREAM: u64 = 0x7E7A7;
+
+/// Streaming synthetic workload (Philly marginals, paper §5.1).
+pub struct SyntheticSource {
+    cfg: TraceConfig,
+    rng: Pcg64,
+    tenant_rng: Pcg64,
+    tenants: Option<TenantSpec>,
+    demand: GpuDemandDist,
+    next_index: usize,
+    clock_s: f64,
+}
+
+impl SyntheticSource {
+    pub fn new(cfg: TraceConfig) -> SyntheticSource {
+        cfg.split.validate();
+        SyntheticSource {
+            cfg,
+            rng: Pcg64::new(cfg.seed, JOB_STREAM),
+            tenant_rng: Pcg64::new(cfg.seed, TENANT_STREAM),
+            tenants: None,
+            demand: GpuDemandDist { multi_gpu: cfg.multi_gpu },
+            next_index: 0,
+            clock_s: 0.0,
+        }
+    }
+
+    /// Tag jobs with tenants drawn from `spec`'s weights (independent RNG
+    /// stream; job fields are unaffected).
+    pub fn with_tenants(mut self, spec: TenantSpec) -> SyntheticSource {
+        assert!(!spec.is_empty(), "tenant spec must name a tenant");
+        self.tenants = Some(spec);
+        self
+    }
+}
+
+impl WorkloadSource for SyntheticSource {
+    fn name(&self) -> &'static str {
+        "synthetic"
+    }
+
+    fn next_spec(&mut self) -> Option<JobSpec> {
+        if self.next_index >= self.cfg.n_jobs {
+            return None;
+        }
+        let i = self.next_index;
+        self.next_index += 1;
+        // Identical sampling order to the historical generator.
+        let arrival_s = match self.cfg.jobs_per_hour {
+            None => 0.0,
+            Some(lam) => {
+                self.clock_s += self.rng.exponential(lam / 3600.0);
+                self.clock_s
+            }
+        };
+        let model = self.cfg.split.sample_model(&mut self.rng);
+        let gpus = self.demand.sample(&mut self.rng);
+        let duration_s = sample_duration_s(&mut self.rng);
+        let tenant = match &self.tenants {
+            None => TenantId::DEFAULT,
+            Some(spec) => TenantId(
+                self.tenant_rng.weighted(&spec.weights) as u32,
+            ),
+        };
+        Some(JobSpec {
+            id: JobId(i as u64),
+            tenant,
+            model,
+            gpus,
+            arrival_s,
+            duration_s,
+        })
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.cfg.n_jobs - self.next_index)
+    }
+
+    fn tenant_names(&self) -> Vec<String> {
+        match &self.tenants {
+            None => vec!["default".to_string()],
+            Some(spec) => spec.names.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::Task;
+
+    fn cfg(n: usize, seed: u64) -> TraceConfig {
+        TraceConfig { n_jobs: n, seed, ..TraceConfig::default() }
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let a: Vec<JobSpec> = {
+            let mut s = SyntheticSource::new(cfg(100, 5));
+            std::iter::from_fn(move || s.next_spec()).collect()
+        };
+        let b: Vec<JobSpec> = {
+            let mut s = SyntheticSource::new(cfg(100, 5));
+            std::iter::from_fn(move || s.next_spec()).collect()
+        };
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn tenant_tagging_leaves_job_fields_unchanged() {
+        let plain: Vec<JobSpec> = {
+            let mut s = SyntheticSource::new(cfg(200, 9));
+            std::iter::from_fn(move || s.next_spec()).collect()
+        };
+        let spec = TenantSpec::parse("a:2,b:1").unwrap();
+        let tagged: Vec<JobSpec> = {
+            let mut s =
+                SyntheticSource::new(cfg(200, 9)).with_tenants(spec);
+            std::iter::from_fn(move || s.next_spec()).collect()
+        };
+        assert_eq!(plain.len(), tagged.len());
+        for (p, t) in plain.iter().zip(&tagged) {
+            assert_eq!(p.id, t.id);
+            assert_eq!(p.model, t.model);
+            assert_eq!(p.gpus, t.gpus);
+            assert_eq!(p.arrival_s, t.arrival_s);
+            assert_eq!(p.duration_s, t.duration_s);
+        }
+        // Both tenants actually used, roughly 2:1.
+        let a = tagged.iter().filter(|s| s.tenant == TenantId(0)).count();
+        let b = tagged.iter().filter(|s| s.tenant == TenantId(1)).count();
+        assert!(a > b, "weighted assignment: {a} vs {b}");
+        assert!(b > 20, "minority tenant shouldn't starve: {b}");
+    }
+
+    #[test]
+    fn len_hint_counts_down() {
+        let mut s = SyntheticSource::new(cfg(3, 1));
+        assert_eq!(s.len_hint(), Some(3));
+        s.next_spec();
+        assert_eq!(s.len_hint(), Some(2));
+        while s.next_spec().is_some() {}
+        assert_eq!(s.len_hint(), Some(0));
+    }
+
+    #[test]
+    fn respects_split_families() {
+        let mut s = SyntheticSource::new(TraceConfig {
+            n_jobs: 300,
+            split: crate::trace::SPLIT_WORST, // 50/0/50
+            seed: 3,
+            ..TraceConfig::default()
+        });
+        while let Some(spec) = s.next_spec() {
+            assert_ne!(spec.model.task(), Task::Language);
+        }
+    }
+}

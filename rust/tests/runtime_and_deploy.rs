@@ -8,6 +8,7 @@
 use synergy::deploy::{Leader, LeaderConfig, Worker, WorkerConfig};
 use synergy::runtime::{Runtime, SyntheticCorpus, Trainer};
 use synergy::trace::{generate, Split, TraceConfig};
+use synergy::workload::{SyntheticSource, TenantSpec, WorkloadSource};
 use std::sync::Arc;
 
 fn artifacts_dir() -> Option<String> {
@@ -91,6 +92,7 @@ fn deploy_protocol_roundtrip_without_compute() {
         mechanism: "tune".into(),
         variant: "tiny".into(),
         max_real_s: 60.0,
+        quotas: None,
     }));
     let l2 = Arc::clone(&leader);
     let t = std::thread::spawn(move || l2.run(jobs));
@@ -121,6 +123,55 @@ fn deploy_protocol_roundtrip_without_compute() {
 }
 
 #[test]
+fn deploy_streams_arrivals_from_a_workload_source() {
+    // run_stream: the leader pulls jobs from a WorkloadSource as
+    // simulated time passes their arrivals (no up-front job list), and
+    // the report carries tenant tags through to per-tenant stats.
+    let source = SyntheticSource::new(TraceConfig {
+        n_jobs: 6,
+        split: Split::new(0, 100, 0),
+        multi_gpu: false,
+        jobs_per_hour: None, // static: stream drains immediately
+        seed: 11,
+    })
+    .with_tenants(TenantSpec::parse("a,b").unwrap());
+    let expected = source.len_hint().unwrap();
+    let leader = Arc::new(Leader::new(LeaderConfig {
+        bind: "127.0.0.1:0".into(),
+        n_workers: 1,
+        round_real_s: 0.2,
+        time_scale: 40_000.0,
+        policy: "fifo".into(),
+        mechanism: "tune".into(),
+        variant: "tiny".into(),
+        max_real_s: 60.0,
+        quotas: None,
+    }));
+    let l2 = Arc::clone(&leader);
+    let t = std::thread::spawn(move || l2.run_stream(Box::new(source)));
+    let addr = loop {
+        if let Some(a) = *leader.addr.lock().unwrap() {
+            break a;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    };
+    let cfg = WorkerConfig {
+        leader_addr: addr.to_string(),
+        real_compute: false,
+        ..Default::default()
+    };
+    let w = std::thread::spawn(move || Worker::run(cfg));
+    let report = t.join().unwrap().expect("leader run_stream");
+    let _ = w.join();
+    assert_eq!(report.jcts.len(), expected, "stream must fully drain");
+    assert_eq!(report.tenant_of.len(), expected);
+    let by_tenant = report.tenant_stats();
+    assert!(!by_tenant.is_empty());
+    let n: usize = by_tenant.values().map(|s| s.n).sum();
+    assert_eq!(n, expected);
+}
+
+#[test]
 fn deploy_survives_worker_crash() {
     // Leader + 2 workers; one worker crashes mid-run (fault injection).
     // The leader must fail it over and drain the whole trace on the
@@ -142,6 +193,7 @@ fn deploy_survives_worker_crash() {
         mechanism: "tune".into(),
         variant: "tiny".into(),
         max_real_s: 90.0,
+        quotas: None,
     }));
     let l2 = Arc::clone(&leader);
     let t = std::thread::spawn(move || l2.run(jobs));

@@ -1,0 +1,301 @@
+//! Integration tests for the `workload/` subsystem: source determinism,
+//! the synthetic golden path, CSV fixtures round-tripping, tenant-quota
+//! admission invariants end-to-end, and the streaming deploy path.
+
+use synergy::job::{Job, TenantId};
+use synergy::sim::{SimConfig, Simulator};
+use synergy::trace::{generate, sample_duration_s, GpuDemandDist, Split, TraceConfig};
+use synergy::util::rng::Pcg64;
+use synergy::workload::{
+    AlibabaTraceConfig, AlibabaTraceSource, PhillyTraceConfig,
+    PhillyTraceSource, SyntheticSource, TenantSpec, WorkloadSource,
+};
+
+fn fixture(name: &str) -> String {
+    format!("{}/tests/fixtures/{name}", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn philly_cfg() -> PhillyTraceConfig {
+    PhillyTraceConfig {
+        path: fixture("philly_small.csv"),
+        ..PhillyTraceConfig::default()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Golden test: the refactored SyntheticSource is byte-identical to the
+// historical in-place generator (same RNG stream, same call order).
+// ---------------------------------------------------------------------------
+
+/// The pre-refactor `trace::generate` body, replicated verbatim.
+fn legacy_generate(cfg: &TraceConfig) -> Vec<Job> {
+    use synergy::job::JobId;
+    cfg.split.validate();
+    let mut rng = Pcg64::new(cfg.seed, 0x7EACE);
+    let demand = GpuDemandDist { multi_gpu: cfg.multi_gpu };
+    let mut t = 0.0f64;
+    (0..cfg.n_jobs)
+        .map(|i| {
+            let arrival = match cfg.jobs_per_hour {
+                None => 0.0,
+                Some(lam) => {
+                    t += rng.exponential(lam / 3600.0);
+                    t
+                }
+            };
+            let model = cfg.split.sample_model(&mut rng);
+            let gpus = demand.sample(&mut rng);
+            let duration = sample_duration_s(&mut rng);
+            Job::new(JobId(i as u64), model, gpus, arrival, duration)
+        })
+        .collect()
+}
+
+#[test]
+fn synthetic_source_golden_vs_legacy_generator() {
+    for (seed, multi_gpu, load) in
+        [(1, false, Some(8.0)), (77, true, Some(3.0)), (5, true, None)]
+    {
+        let cfg = TraceConfig {
+            n_jobs: 500,
+            split: Split::new(20, 70, 10),
+            multi_gpu,
+            jobs_per_hour: load,
+            seed,
+        };
+        let legacy = legacy_generate(&cfg);
+        let new = generate(&cfg);
+        assert_eq!(legacy.len(), new.len());
+        for (a, b) in legacy.iter().zip(&new) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.model, b.model);
+            assert_eq!(a.gpus, b.gpus);
+            // Bit-exact, not approximate: same RNG stream.
+            assert_eq!(a.arrival_s.to_bits(), b.arrival_s.to_bits());
+            assert_eq!(
+                a.duration_prop_s.to_bits(),
+                b.duration_prop_s.to_bits()
+            );
+            assert_eq!(b.tenant, TenantId::DEFAULT);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Source determinism under a fixed seed.
+// ---------------------------------------------------------------------------
+
+fn drain(mut src: impl WorkloadSource) -> Vec<Job> {
+    src.drain_jobs()
+}
+
+#[test]
+fn every_source_is_deterministic_under_fixed_seed() {
+    let syn = |seed| {
+        drain(
+            SyntheticSource::new(TraceConfig {
+                n_jobs: 64,
+                seed,
+                ..TraceConfig::default()
+            })
+            .with_tenants(TenantSpec::parse("a:2,b:1").unwrap()),
+        )
+    };
+    let phl = || drain(PhillyTraceSource::new(philly_cfg()).unwrap());
+    let ali = || {
+        drain(
+            AlibabaTraceSource::new(AlibabaTraceConfig {
+                path: fixture("alibaba_small.csv"),
+                ..AlibabaTraceConfig::default()
+            })
+            .unwrap(),
+        )
+    };
+    for (a, b) in [
+        (syn(3), syn(3)),
+        (phl(), phl()),
+        (ali(), ali()),
+    ] {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.tenant, y.tenant);
+            assert_eq!(x.model, y.model);
+            assert_eq!(x.gpus, y.gpus);
+            assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits());
+            assert_eq!(
+                x.duration_prop_s.to_bits(),
+                y.duration_prop_s.to_bits()
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fixture round-trips.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn philly_fixture_roundtrip() {
+    let mut src = PhillyTraceSource::new(philly_cfg()).unwrap();
+    assert_eq!(src.tenant_names(), vec!["a", "b"]);
+    let hint = src.len_hint().unwrap();
+    let jobs = src.drain_jobs();
+    assert_eq!(jobs.len(), hint);
+    // The fixture has 40 rows, one of which is Killed (dropped).
+    assert_eq!(jobs.len(), 39);
+    // Arrivals re-based, sorted, ids dense.
+    assert_eq!(jobs[0].arrival_s, 0.0);
+    for (i, w) in jobs.windows(2).enumerate() {
+        assert!(w[0].arrival_s <= w[1].arrival_s, "unsorted at {i}");
+    }
+    for (i, j) in jobs.iter().enumerate() {
+        assert_eq!(j.id.0, i as u64);
+        assert!((1..=16).contains(&j.gpus));
+        assert!(j.duration_prop_s >= 1.0);
+        assert!(j.tenant == TenantId(0) || j.tenant == TenantId(1));
+    }
+    // Both tenants present.
+    assert!(jobs.iter().any(|j| j.tenant == TenantId(0)));
+    assert!(jobs.iter().any(|j| j.tenant == TenantId(1)));
+}
+
+#[test]
+fn philly_fixture_time_warp_knobs() {
+    let base = drain(PhillyTraceSource::new(philly_cfg()).unwrap());
+    let warped = drain(
+        PhillyTraceSource::new(PhillyTraceConfig {
+            load_scale: 4.0,
+            duration_min_s: 3600.0,
+            duration_max_s: 20_000.0,
+            gpu_cap: 4,
+            ..philly_cfg()
+        })
+        .unwrap(),
+    );
+    assert_eq!(base.len(), warped.len());
+    for (b, w) in base.iter().zip(&warped) {
+        assert!((w.arrival_s - b.arrival_s / 4.0).abs() < 1e-9);
+        assert!((3600.0..=20_000.0).contains(&w.duration_prop_s));
+        assert!(w.gpus <= 4);
+    }
+}
+
+#[test]
+fn alibaba_fixture_maps_to_big_data_families() {
+    let jobs = drain(
+        AlibabaTraceSource::new(AlibabaTraceConfig {
+            path: fixture("alibaba_small.csv"),
+            ..AlibabaTraceConfig::default()
+        })
+        .unwrap(),
+    );
+    assert_eq!(jobs.len(), 30);
+    // Machines → tenants (fixture uses m_1..m_4).
+    let tenants: std::collections::BTreeSet<u32> =
+        jobs.iter().map(|j| j.tenant.0).collect();
+    assert!(tenants.len() >= 3, "expected several machine-tenants");
+    for j in &jobs {
+        assert!((1..=4).contains(&j.gpus));
+        assert!(j.duration_prop_s >= 60.0);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tenant-quota admission invariants, end to end through the simulator.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn contended_static_trace_respects_weighted_shares() {
+    use synergy::workload::TenantQuotas;
+    // 2 servers × 8 GPUs; ~equal per-tenant demand (1:1 assignment), but
+    // a 3:1 GPU quota. The favoured tenant drains its equal backlog ~3×
+    // faster, so its average JCT must come out clearly lower.
+    let assign = TenantSpec::parse("big,small").unwrap(); // 1:1 jobs
+    let jobs = SyntheticSource::new(TraceConfig {
+        n_jobs: 64,
+        split: Split::new(0, 100, 0),
+        multi_gpu: false,
+        jobs_per_hour: None,
+        seed: 21,
+    })
+    .with_tenants(assign)
+    .drain_jobs();
+    let quotas = TenantQuotas::new()
+        .with(TenantId(0), 3.0)
+        .with(TenantId(1), 1.0);
+    let sim = Simulator::with_quotas(
+        SimConfig {
+            n_servers: 2,
+            policy: "fifo".into(),
+            mechanism: "proportional".into(),
+            ..Default::default()
+        },
+        Some(quotas),
+    );
+    let r = sim.run(jobs);
+    assert_eq!(r.finished.len(), 64, "everything must eventually finish");
+    let by = r.tenant_stats();
+    let big = &by[&TenantId(0)];
+    let small = &by[&TenantId(1)];
+    assert!(
+        big.avg_s < small.avg_s * 0.8,
+        "3:1 quota should speed up the favoured tenant: {} vs {}",
+        big.avg_s,
+        small.avg_s
+    );
+}
+
+#[test]
+fn quotas_do_not_strand_capacity_when_one_tenant_is_idle() {
+    // Tenant b never submits; tenant a must still use the whole cluster
+    // (work-conserving spill), so quotas must not slow it down.
+    let cfg = TraceConfig {
+        n_jobs: 40,
+        split: Split::new(0, 100, 0),
+        multi_gpu: false,
+        jobs_per_hour: None,
+        seed: 5,
+    };
+    let jobs = generate(&cfg); // all tenant 0
+    let sim_cfg = || SimConfig {
+        n_servers: 2,
+        policy: "fifo".into(),
+        mechanism: "proportional".into(),
+        ..Default::default()
+    };
+    let quotas = TenantSpec::parse("a:1,b:1").unwrap().quotas();
+    let plain = Simulator::new(sim_cfg()).run(jobs.clone());
+    let quoted =
+        Simulator::with_quotas(sim_cfg(), Some(quotas)).run(jobs);
+    assert_eq!(plain.finished.len(), quoted.finished.len());
+    let (a, b) =
+        (plain.jct_stats().avg_s, quoted.jct_stats().avg_s);
+    assert!(
+        (a - b).abs() < 1e-6,
+        "idle-tenant quotas must be work-conserving: {a} vs {b}"
+    );
+}
+
+#[test]
+fn philly_fixture_runs_end_to_end_with_quotas() {
+    // The ISSUE acceptance path: fixture trace + a:2,b:1 quotas.
+    let mut src = PhillyTraceSource::new(philly_cfg()).unwrap();
+    let names = src.tenant_names();
+    let jobs = src.drain_jobs();
+    let spec = TenantSpec::parse("a:2,b:1").unwrap();
+    let sim = Simulator::with_quotas(
+        SimConfig {
+            n_servers: 4,
+            policy: "srtf".into(),
+            mechanism: "tune".into(),
+            ..Default::default()
+        },
+        Some(spec.quotas_for(&names)),
+    );
+    let r = sim.run(jobs);
+    assert_eq!(r.finished.len(), 39);
+    let by = r.tenant_stats();
+    assert_eq!(by.len(), 2);
+    assert!(by.values().all(|s| s.n > 0 && s.avg_s.is_finite()));
+}
