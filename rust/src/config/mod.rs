@@ -3,13 +3,26 @@
 //! Experiments are described either by CLI flags (see `main.rs`) or by a
 //! JSON config file; both funnel into [`ExperimentConfig`]. The config
 //! system validates combinations up front so sweeps fail fast.
+//!
+//! Workload selection mirrors the CLI: with no `trace` key the synthetic
+//! generator runs (`n_jobs`/`split`/`seed`/...); with `"trace":
+//! "path.csv"` plus `"format": "philly" | "alibaba"` the file readers
+//! from [`crate::workload`] are used, and `"tenants": "a:2,b:1"` turns
+//! on weighted-quota admission either way. [`ExperimentConfig::to_json`]
+//! round-trips everything [`ExperimentConfig::from_json`] reads.
 
 use crate::cluster::ServerSpec;
+use crate::job::Job;
 use crate::trace::{Split, TraceConfig};
 use crate::util::json::Json;
+use crate::workload::{
+    AlibabaTraceConfig, AlibabaTraceSource, PhillyTraceConfig,
+    PhillyTraceSource, SyntheticSource, TenantQuotas, TenantSpec,
+    WorkloadSource,
+};
 
 /// A full experiment description.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ExperimentConfig {
     pub name: String,
     pub spec: ServerSpec,
@@ -19,6 +32,13 @@ pub struct ExperimentConfig {
     pub mechanism: String,
     pub trace: TraceConfig,
     pub profile_noise: f64,
+    /// Path to a trace file (`trace` JSON key); `None` = synthetic.
+    pub trace_path: Option<String>,
+    /// Trace file format (`format` JSON key): `philly` | `alibaba`.
+    pub trace_format: String,
+    /// Tenant weights (`tenants` JSON key, `name:weight,...` syntax);
+    /// `None` = single-tenant, no quota admission.
+    pub tenants: Option<TenantSpec>,
 }
 
 impl Default for ExperimentConfig {
@@ -32,6 +52,9 @@ impl Default for ExperimentConfig {
             mechanism: "tune".into(),
             trace: TraceConfig::default(),
             profile_noise: 0.0,
+            trace_path: None,
+            trace_format: "philly".into(),
+            tenants: None,
         }
     }
 }
@@ -61,6 +84,12 @@ impl ExperimentConfig {
         }
         if !(0.0..0.5).contains(&self.profile_noise) {
             return Err("profile_noise must be in [0, 0.5)".into());
+        }
+        if !matches!(self.trace_format.as_str(), "philly" | "alibaba") {
+            return Err(format!(
+                "unknown trace format '{}' (expected philly|alibaba)",
+                self.trace_format
+            ));
         }
         Ok(())
     }
@@ -122,8 +151,60 @@ impl ExperimentConfig {
                 arr[2].as_usize().ok_or("bad split")? as u32,
             );
         }
+        if let Some(s) = doc.get("trace").as_str() {
+            cfg.trace_path = Some(s.to_string());
+        }
+        if let Some(s) = doc.get("format").as_str() {
+            cfg.trace_format = s.to_string();
+        }
+        if let Some(s) = doc.get("tenants").as_str() {
+            cfg.tenants =
+                Some(TenantSpec::parse(s).map_err(|e| format!("tenants: {e}"))?);
+        }
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// Encode as the JSON document [`ExperimentConfig::from_json`] reads
+    /// (round-trip tested).
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("name", Json::str(self.name.clone())),
+            ("n_servers", Json::num(self.n_servers as f64)),
+            ("gpus_per_server", Json::num(self.spec.gpus as f64)),
+            ("cpus_per_server", Json::num(self.spec.cpus as f64)),
+            ("mem_gb_per_server", Json::num(self.spec.mem_gb)),
+            ("round_s", Json::num(self.round_s)),
+            ("policy", Json::str(self.policy.clone())),
+            ("mechanism", Json::str(self.mechanism.clone())),
+            ("profile_noise", Json::num(self.profile_noise)),
+            ("n_jobs", Json::num(self.trace.n_jobs as f64)),
+            ("seed", Json::num(self.trace.seed as f64)),
+            ("multi_gpu", Json::Bool(self.trace.multi_gpu)),
+            (
+                "jobs_per_hour",
+                match self.trace.jobs_per_hour {
+                    Some(l) => Json::num(l),
+                    None => Json::num(0.0), // 0 ⇒ static trace on read
+                },
+            ),
+            (
+                "split",
+                Json::arr(vec![
+                    Json::num(self.trace.split.image as f64),
+                    Json::num(self.trace.split.language as f64),
+                    Json::num(self.trace.split.speech as f64),
+                ]),
+            ),
+            ("format", Json::str(self.trace_format.clone())),
+        ];
+        if let Some(path) = &self.trace_path {
+            pairs.push(("trace", Json::str(path.clone())));
+        }
+        if let Some(spec) = &self.tenants {
+            pairs.push(("tenants", Json::str(spec.canonical())));
+        }
+        Json::obj(pairs)
     }
 
     /// Load from a JSON file.
@@ -132,6 +213,73 @@ impl ExperimentConfig {
             .map_err(|e| format!("read {path}: {e}"))?;
         let doc = Json::parse(&text).map_err(|e| e.to_string())?;
         Self::from_json(&doc)
+    }
+
+    /// Materialize the experiment's workload: jobs, tenant quotas (when
+    /// `tenants` is set), and tenant names for reporting. Config-file
+    /// runs reach the same readers as the CLI's
+    /// `--trace/--format/--tenants` flags; the readers' tuning knobs
+    /// (λ rescale, duration clamps, GPU cap, row limits) currently take
+    /// their defaults here — only the CLI exposes them.
+    pub fn workload(
+        &self,
+    ) -> Result<(Vec<Job>, Option<TenantQuotas>, Vec<String>), String> {
+        match &self.trace_path {
+            Some(path) => {
+                let mut source: Box<dyn WorkloadSource> =
+                    match self.trace_format.as_str() {
+                        "philly" => Box::new(PhillyTraceSource::new(
+                            PhillyTraceConfig {
+                                path: path.clone(),
+                                split: self.trace.split,
+                                seed: self.trace.seed,
+                                ..PhillyTraceConfig::default()
+                            },
+                        )?),
+                        "alibaba" => Box::new(AlibabaTraceSource::new(
+                            AlibabaTraceConfig {
+                                path: path.clone(),
+                                seed: self.trace.seed,
+                                ..AlibabaTraceConfig::default()
+                            },
+                        )?),
+                        other => {
+                            return Err(format!(
+                                "unknown trace format '{other}'"
+                            ))
+                        }
+                    };
+                let names = source.tenant_names();
+                let quotas = self.tenants.as_ref().map(|s| {
+                    // Mirror the CLI's behaviour for spec names absent
+                    // from the trace: warn, weight ignored.
+                    for name in &s.names {
+                        if !names.contains(name) {
+                            eprintln!(
+                                "warning: tenants name '{name}' matches no \
+                                 tenant in the trace (trace tenants: \
+                                 {names:?}); its weight is ignored"
+                            );
+                        }
+                    }
+                    s.quotas_for(&names)
+                });
+                Ok((source.drain_jobs(), quotas, names))
+            }
+            None => match &self.tenants {
+                Some(spec) => {
+                    let jobs = SyntheticSource::new(self.trace)
+                        .with_tenants(spec.clone())
+                        .drain_jobs();
+                    Ok((jobs, Some(spec.quotas()), spec.names.clone()))
+                }
+                None => Ok((
+                    SyntheticSource::new(self.trace).drain_jobs(),
+                    None,
+                    vec!["default".to_string()],
+                )),
+            },
+        }
     }
 }
 
@@ -159,6 +307,23 @@ mod tests {
         assert_eq!(cfg.trace.split.language, 70);
         assert_eq!(cfg.trace.jobs_per_hour, Some(9.0));
         assert!(cfg.trace.multi_gpu);
+        assert_eq!(cfg.trace_path, None);
+        assert_eq!(cfg.tenants, None);
+    }
+
+    #[test]
+    fn trace_and_tenant_keys_parse() {
+        let doc = Json::parse(
+            r#"{"trace": "t.csv", "format": "alibaba",
+                "tenants": "a:2,b:1"}"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&doc).unwrap();
+        assert_eq!(cfg.trace_path.as_deref(), Some("t.csv"));
+        assert_eq!(cfg.trace_format, "alibaba");
+        let spec = cfg.tenants.unwrap();
+        assert_eq!(spec.names, vec!["a", "b"]);
+        assert_eq!(spec.weights, vec![2.0, 1.0]);
     }
 
     #[test]
@@ -171,5 +336,81 @@ mod tests {
     fn bad_split_rejected() {
         let doc = Json::parse(r#"{"split": [50, 50, 50]}"#).unwrap();
         assert!(ExperimentConfig::from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn bad_format_and_tenants_rejected() {
+        let doc = Json::parse(r#"{"format": "borg"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&doc).is_err());
+        let doc = Json::parse(r#"{"tenants": "a:-3"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_everything() {
+        let mut cfg = ExperimentConfig {
+            name: "rt".into(),
+            n_servers: 4,
+            round_s: 120.0,
+            policy: "srtf".into(),
+            mechanism: "proportional".into(),
+            profile_noise: 0.05,
+            trace_path: Some("fixtures/philly_small.csv".into()),
+            trace_format: "philly".into(),
+            tenants: Some(TenantSpec::parse("a:2,b:1").unwrap()),
+            ..ExperimentConfig::default()
+        };
+        cfg.trace.n_jobs = 77;
+        cfg.trace.seed = 9;
+        cfg.trace.multi_gpu = true;
+        cfg.trace.jobs_per_hour = Some(6.5);
+        cfg.trace.split = Split::new(30, 50, 20);
+        let encoded = cfg.to_json().encode();
+        let back =
+            ExperimentConfig::from_json(&Json::parse(&encoded).unwrap())
+                .unwrap();
+        assert_eq!(back, cfg);
+
+        // A static trace (None) also survives the 0-means-static encoding.
+        cfg.trace.jobs_per_hour = None;
+        let encoded = cfg.to_json().encode();
+        let back =
+            ExperimentConfig::from_json(&Json::parse(&encoded).unwrap())
+                .unwrap();
+        assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn workload_reads_fixture_with_quotas() {
+        let cfg = ExperimentConfig {
+            trace_path: Some(format!(
+                "{}/tests/fixtures/philly_small.csv",
+                env!("CARGO_MANIFEST_DIR")
+            )),
+            trace_format: "philly".into(),
+            tenants: Some(TenantSpec::parse("a:2,b:1").unwrap()),
+            ..ExperimentConfig::default()
+        };
+        let (jobs, quotas, names) = cfg.workload().unwrap();
+        assert_eq!(jobs.len(), 39);
+        assert_eq!(names, vec!["a", "b"]);
+        let q = quotas.expect("tenants set");
+        assert_eq!(q.weight(crate::job::TenantId(0)), 2.0);
+        assert_eq!(q.weight(crate::job::TenantId(1)), 1.0);
+    }
+
+    #[test]
+    fn synthetic_workload_with_tenants() {
+        let mut cfg = ExperimentConfig {
+            tenants: Some(TenantSpec::parse("x:3,y:1").unwrap()),
+            ..ExperimentConfig::default()
+        };
+        cfg.trace.n_jobs = 50;
+        let (jobs, quotas, names) = cfg.workload().unwrap();
+        assert_eq!(jobs.len(), 50);
+        assert_eq!(names, vec!["x", "y"]);
+        assert!(quotas.is_some());
+        assert!(jobs.iter().any(|j| j.tenant.0 == 0));
+        assert!(jobs.iter().any(|j| j.tenant.0 == 1));
     }
 }

@@ -12,8 +12,13 @@
 //! 4. hands the runnable set to the mechanism for allocation + placement.
 //!
 //! Both the simulator ([`crate::sim`]) and the live deploy mode
-//! ([`crate::deploy`]) drive this planner, so scheduling behaviour is
-//! identical in the two (Table 5's fidelity comparison).
+//! ([`crate::deploy`]) drive the same pipeline, so scheduling behaviour
+//! is identical in the two (Table 5's fidelity comparison): the deploy
+//! leader calls [`RoundPlanner::plan`] directly, while the simulation
+//! core ([`crate::sim::run_events`]) composes the same shared pieces —
+//! [`policy_view`] for step 1, the policy's `order` for step 2, and
+//! [`crate::workload::admission::admit`] for step 3 — around its
+//! topology-generic [`crate::sim::ClusterModel`].
 
 use crate::cluster::Cluster;
 use crate::job::{DemandVector, Job, JobId};
@@ -97,7 +102,7 @@ impl RoundPlanner {
         // 1-2: policy views, ordered.
         let mut views: Vec<PolicyJobView> = jobs
             .iter()
-            .map(|(job, ctx)| self.view(cluster, job, ctx))
+            .map(|(job, ctx)| policy_view(cluster, job, ctx))
             .collect();
         self.policy.order(&mut views, now);
 
@@ -141,41 +146,44 @@ impl RoundPlanner {
         RoundPlan { grants, unplaced }
     }
 
-    fn view(
-        &self,
-        cluster: &Cluster,
-        job: &Job,
-        ctx: &JobContext,
-    ) -> PolicyJobView {
-        let remaining_est_s = if ctx.prop_tput > 0.0 {
-            job.remaining_samples() / ctx.prop_tput
-        } else {
-            f64::INFINITY
-        };
-        // DRF dominant share over cluster totals.
-        let dominant_share = (job.gpus as f64 / cluster.total_gpus() as f64)
-            .max(ctx.best.cpus / cluster.total_cpus())
-            .max(ctx.best.mem_gb / cluster.total_mem_gb());
-        // Tetris alignment: demand · free, normalized.
-        let free = (
-            cluster.free_gpus() as f64,
-            cluster.free_cpus(),
-            cluster.free_mem_gb(),
-        );
-        let alignment = (job.gpus as f64 * free.0
-            + ctx.best.cpus * free.1
-            + ctx.best.mem_gb * free.2)
-            / (cluster.total_gpus() as f64 * cluster.total_cpus()).max(1.0);
-        PolicyJobView {
-            id: job.id,
-            arrival_s: job.arrival_s,
-            attained_service_s: job.attained_service_s,
-            remaining_est_s,
-            duration_prop_s: job.duration_prop_s,
-            gpus: job.gpus,
-            dominant_share,
-            alignment,
-        }
+}
+
+/// Build the policy view of one job over the current cluster state.
+/// Shared by the round planner (deploy leader path) and the homogeneous
+/// [`crate::sim::ClusterModel`], so both rank jobs identically.
+pub fn policy_view(
+    cluster: &Cluster,
+    job: &Job,
+    ctx: &JobContext,
+) -> PolicyJobView {
+    let remaining_est_s = if ctx.prop_tput > 0.0 {
+        job.remaining_samples() / ctx.prop_tput
+    } else {
+        f64::INFINITY
+    };
+    // DRF dominant share over cluster totals.
+    let dominant_share = (job.gpus as f64 / cluster.total_gpus() as f64)
+        .max(ctx.best.cpus / cluster.total_cpus())
+        .max(ctx.best.mem_gb / cluster.total_mem_gb());
+    // Tetris alignment: demand · free, normalized.
+    let free = (
+        cluster.free_gpus() as f64,
+        cluster.free_cpus(),
+        cluster.free_mem_gb(),
+    );
+    let alignment = (job.gpus as f64 * free.0
+        + ctx.best.cpus * free.1
+        + ctx.best.mem_gb * free.2)
+        / (cluster.total_gpus() as f64 * cluster.total_cpus()).max(1.0);
+    PolicyJobView {
+        id: job.id,
+        arrival_s: job.arrival_s,
+        attained_service_s: job.attained_service_s,
+        remaining_est_s,
+        duration_prop_s: job.duration_prop_s,
+        gpus: job.gpus,
+        dominant_share,
+        alignment,
     }
 }
 

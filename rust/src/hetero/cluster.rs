@@ -87,8 +87,16 @@ impl HeteroCluster {
         self.groups.iter().map(|g| g.cluster.total_cpus()).sum()
     }
 
+    pub fn free_cpus(&self) -> f64 {
+        self.groups.iter().map(|g| g.cluster.free_cpus()).sum()
+    }
+
     pub fn total_mem_gb(&self) -> f64 {
         self.groups.iter().map(|g| g.cluster.total_mem_gb()).sum()
+    }
+
+    pub fn free_mem_gb(&self) -> f64 {
+        self.groups.iter().map(|g| g.cluster.free_mem_gb()).sum()
     }
 
     /// Which group hosts `job`, if placed.
@@ -109,6 +117,11 @@ impl HeteroCluster {
     /// Aggregate GPU utilization in [0, 1].
     pub fn gpu_utilization(&self) -> f64 {
         1.0 - self.free_gpus() as f64 / self.total_gpus() as f64
+    }
+
+    /// Aggregate CPU allocation fraction in [0, 1].
+    pub fn cpu_utilization(&self) -> f64 {
+        1.0 - self.free_cpus() / self.total_cpus()
     }
 
     /// Consistency check across every group.

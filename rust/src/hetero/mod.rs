@@ -51,4 +51,4 @@ pub use mechanism::{
 };
 pub use perf::HeteroPerfModel;
 pub use profiler::{HeteroProfiler, HeteroSensitivity};
-pub use sim::{HeteroSimConfig, HeteroSimulator};
+pub use sim::{HeteroModel, HeteroSimConfig, HeteroSimResult, HeteroSimulator};

@@ -1,27 +1,39 @@
-//! Round-based trace simulator over a heterogeneous cluster.
+//! Heterogeneous trace simulation: the second configuration of the
+//! shared event-driven core ([`crate::sim`]).
 //!
-//! Mirrors the homogeneous engine ([`crate::sim`]): arrivals are
-//! profiled (on every machine type, A.2), a scheduling policy orders the
-//! queue, the runnable set is admitted against cluster-wide free GPUs,
-//! and a [`HetMechanism`] assigns each job a type + allocation. Progress
-//! accrues at the *granted* throughput on the *assigned type* — so a job
-//! bounced between generations across rounds advances at whatever each
-//! round's hardware actually delivers.
+//! [`HeteroSimulator`] wires a [`HeteroCluster`], the per-type profiler
+//! (A.2), per-generation ground truths, and a [`HetMechanism`] into a
+//! [`HeteroModel`] and hands the loop to [`run_events`] — the *same*
+//! loop the homogeneous engine runs, so policy ordering, tenant-quota
+//! admission with work-conserving spill, streaming workload sources,
+//! progress accounting, and utilization metrics are shared code, not a
+//! fork. Progress accrues at the *granted* throughput on the *assigned
+//! type* — a job bounced between generations across rounds advances at
+//! whatever each round's hardware actually delivers.
 //!
 //! Work accounting: a job's `total_samples` is derived from its trace
 //! duration under the fairness oracle's throughput (`W_j^Fair`,
 //! slowest-type proportional), making "duration" hardware-meaningful in
-//! the heterogeneous setting too.
+//! the heterogeneous setting too. On a single-type V100 cluster the
+//! oracle coincides with the homogeneous proportional baseline, and the
+//! whole engine reproduces the homogeneous schedule bit-for-bit
+//! (`tests/scenarios.rs`).
 
 use super::cluster::HeteroCluster;
+use super::gen::GpuGen;
 use super::mechanism::{het_by_name, HetJobRequest, HetMechanism};
 use super::perf::HeteroPerfModel;
 use super::profiler::{HeteroProfiler, HeteroSensitivity};
 use crate::cluster::ServerSpec;
 use crate::hetero::TypeSpec;
-use crate::job::{Job, JobId, JobState};
-use crate::metrics::JctStats;
+use crate::job::{Job, JobId, TenantId};
+use crate::metrics::{per_tenant_stats, JctStats, UtilSample, UtilizationLog};
 use crate::policy::{by_name as policy_by_name, PolicyJobView};
+use crate::sim::{
+    run_events, utilization_sample, ClusterModel, CoreConfig, FinishedJob,
+    SimResult,
+};
+use crate::workload::TenantQuotas;
 use std::collections::BTreeMap;
 
 /// Heterogeneous simulator configuration.
@@ -62,201 +74,230 @@ impl Default for HeteroSimConfig {
 /// Simulation output.
 #[derive(Debug)]
 pub struct HeteroSimResult {
-    /// (job id, jct seconds, profiled cost minutes).
+    /// (job id, jct seconds) in completion order.
     pub jcts: Vec<(JobId, f64)>,
     pub makespan_s: f64,
     pub rounds: usize,
     pub profiling_minutes: f64,
+    /// Full per-job records (tenant-tagged), from the shared core.
+    pub finished: Vec<FinishedJob>,
+    /// Per-round utilization samples (shared-core accounting).
+    pub utilization: UtilizationLog,
 }
 
 impl HeteroSimResult {
+    fn from_result(r: SimResult) -> HeteroSimResult {
+        HeteroSimResult {
+            jcts: r.finished.iter().map(|f| (f.id, f.jct_s)).collect(),
+            makespan_s: r.makespan_s,
+            rounds: r.rounds,
+            profiling_minutes: r.profiling_minutes,
+            finished: r.finished,
+            utilization: r.utilization,
+        }
+    }
+
     pub fn jct_stats(&self) -> JctStats {
         let v: Vec<f64> = self.jcts.iter().map(|&(_, j)| j).collect();
         JctStats::from_jcts(&v)
     }
-}
 
-/// The heterogeneous simulator.
-pub struct HeteroSimulator {
-    cfg: HeteroSimConfig,
-}
-
-impl HeteroSimulator {
-    pub fn new(cfg: HeteroSimConfig) -> HeteroSimulator {
-        HeteroSimulator { cfg }
+    /// Per-tenant JCT summaries (multi-tenant workloads).
+    pub fn tenant_stats(&self) -> BTreeMap<TenantId, JctStats> {
+        let pairs: Vec<(TenantId, f64)> =
+            self.finished.iter().map(|f| (f.tenant, f.jct_s)).collect();
+        per_tenant_stats(&pairs)
     }
+}
 
-    /// Run a trace to completion (or `max_sim_s`).
-    pub fn run(&self, mut jobs: Vec<Job>) -> HeteroSimResult {
-        let mut cluster = HeteroCluster::new(&self.cfg.types);
-        let worlds: BTreeMap<_, _> = cluster
+/// The heterogeneous topology behind the shared core: disjoint type
+/// groups, per-generation ground truths, per-type sensitivity matrices,
+/// and a [`HetMechanism`].
+pub struct HeteroModel {
+    cluster: HeteroCluster,
+    worlds: BTreeMap<GpuGen, HeteroPerfModel>,
+    profiler: HeteroProfiler,
+    mechanism: Box<dyn HetMechanism>,
+    sens: BTreeMap<JobId, HeteroSensitivity>,
+    /// Largest single type group, GPUs — the gang-fit bound (A.2.2: no
+    /// cross-type spans).
+    max_group_gpus: u32,
+}
+
+impl HeteroModel {
+    /// Build the model a [`HeteroSimConfig`] describes.
+    pub fn from_config(cfg: &HeteroSimConfig) -> HeteroModel {
+        let cluster = HeteroCluster::new(&cfg.types);
+        let worlds: BTreeMap<GpuGen, HeteroPerfModel> = cluster
             .groups
             .iter()
-            .map(|g| {
-                (g.gen, HeteroPerfModel::new(g.cluster.spec, g.gen))
-            })
+            .map(|g| (g.gen, HeteroPerfModel::new(g.cluster.spec, g.gen)))
             .collect();
         let profiler = {
             let mut p = HeteroProfiler::for_cluster(&cluster);
-            p.noise_sd = self.cfg.profile_noise;
+            p.noise_sd = cfg.profile_noise;
             p
         };
-        let policy = policy_by_name(&self.cfg.policy)
-            .unwrap_or_else(|| panic!("unknown policy {}", self.cfg.policy));
-        let mechanism: Box<dyn HetMechanism> =
-            het_by_name(&self.cfg.mechanism).unwrap_or_else(|| {
-                panic!("unknown het mechanism {}", self.cfg.mechanism)
+        let mechanism: Box<dyn HetMechanism> = het_by_name(&cfg.mechanism)
+            .unwrap_or_else(|| {
+                panic!("unknown het mechanism {}", cfg.mechanism)
             });
-
-        jobs.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
         let max_group_gpus = cluster
             .groups
             .iter()
             .map(|g| g.cluster.total_gpus())
             .max()
             .unwrap_or(0);
-        // A job must fit inside one type group (A.2.2: no cross-type
-        // spans).
-        jobs.retain(|j| j.gpus <= max_group_gpus);
-        let n_total = jobs.len();
-
-        let mut sens: BTreeMap<JobId, HeteroSensitivity> = BTreeMap::new();
-        let mut active: BTreeMap<JobId, Job> = BTreeMap::new();
-        let mut jcts: Vec<(JobId, f64)> = Vec::new();
-        let mut profiling_minutes = 0.0;
-        let mut next_arrival = 0usize;
-        let mut now = 0.0f64;
-        let mut rounds = 0usize;
-
-        while jcts.len() < n_total && now < self.cfg.max_sim_s {
-            // Admit + profile arrivals.
-            while next_arrival < jobs.len()
-                && jobs[next_arrival].arrival_s <= now + 1e-9
-            {
-                let mut job = jobs[next_arrival].clone();
-                let s = profiler.profile(&job);
-                profiling_minutes += s.cost_minutes;
-                job.total_samples =
-                    job.duration_prop_s * s.fair_throughput();
-                sens.insert(job.id, s);
-                active.insert(job.id, job);
-                next_arrival += 1;
-            }
-
-            // Policy order over the active set.
-            let total_gpus = cluster.total_gpus();
-            let total_cpus = cluster.total_cpus();
-            let total_mem = cluster.total_mem_gb();
-            let mut views: Vec<PolicyJobView> = active
-                .values()
-                .map(|j| {
-                    let s = &sens[&j.id];
-                    let fair = s.fair_throughput();
-                    let remaining_est_s = if fair > 0.0 {
-                        j.remaining_samples() / fair
-                    } else {
-                        f64::INFINITY
-                    };
-                    PolicyJobView {
-                        id: j.id,
-                        arrival_s: j.arrival_s,
-                        attained_service_s: j.attained_service_s,
-                        remaining_est_s,
-                        duration_prop_s: j.duration_prop_s,
-                        gpus: j.gpus,
-                        dominant_share: j.gpus as f64 / total_gpus as f64,
-                        alignment: (j.gpus as f64 * total_gpus as f64)
-                            / (total_cpus * total_mem).max(1.0),
-                    }
-                })
-                .collect();
-            policy.order(&mut views, now);
-
-            // Admission: aggregate GPU demand fits the free pool.
-            let mut admitted_gpus = 0u32;
-            let mut runnable: Vec<JobId> = Vec::new();
-            for v in &views {
-                let gpus = active[&v.id].gpus;
-                if admitted_gpus + gpus <= total_gpus {
-                    admitted_gpus += gpus;
-                    runnable.push(v.id);
-                }
-            }
-
-            // Allocate.
-            cluster.evict_all();
-            let requests: Vec<HetJobRequest<'_>> = runnable
-                .iter()
-                .map(|id| HetJobRequest {
-                    id: *id,
-                    gpus: active[id].gpus,
-                    sens: &sens[id],
-                })
-                .collect();
-            let grants = mechanism.allocate(&mut cluster, &requests);
-            debug_assert!(cluster.check_consistency().is_ok());
-
-            // Deploy: progress rates from the assigned type's ground
-            // truth at the granted allocation.
-            for job in active.values_mut() {
-                match grants.get(&job.id) {
-                    Some(g) => {
-                        job.state = JobState::Running;
-                        job.progress_rate = worlds[&g.gen].throughput(
-                            job.model,
-                            job.gpus,
-                            g.grant.demand.cpus,
-                            g.grant.demand.mem_gb,
-                        );
-                    }
-                    None => {
-                        job.state = JobState::Queued;
-                        job.progress_rate = 0.0;
-                    }
-                }
-            }
-
-            // Advance to the earlier of round end / next arrival.
-            let round_end = now + self.cfg.round_s;
-            let horizon = if next_arrival < jobs.len() {
-                round_end.min(jobs[next_arrival].arrival_s.max(now + 1e-6))
-            } else {
-                round_end
-            };
-            let dt = horizon - now;
-            let mut done: Vec<JobId> = Vec::new();
-            for job in active.values_mut() {
-                if job.state != JobState::Running || job.progress_rate <= 0.0
-                {
-                    continue;
-                }
-                let need = job.remaining_samples() / job.progress_rate;
-                if need <= dt {
-                    job.finish_s = now + need;
-                    job.attained_service_s += need;
-                    job.progress_samples = job.total_samples;
-                    done.push(job.id);
-                } else {
-                    job.progress_samples += job.progress_rate * dt;
-                    job.attained_service_s += dt;
-                }
-            }
-            for id in done {
-                let j = active.remove(&id).unwrap();
-                sens.remove(&id);
-                jcts.push((id, j.finish_s - j.arrival_s));
-            }
-
-            rounds += 1;
-            if active.is_empty() && next_arrival < jobs.len() {
-                now = jobs[next_arrival].arrival_s;
-            } else {
-                now = horizon;
-            }
+        HeteroModel {
+            cluster,
+            worlds,
+            profiler,
+            mechanism,
+            sens: BTreeMap::new(),
+            max_group_gpus,
         }
+    }
+}
 
-        let makespan_s = now;
-        HeteroSimResult { jcts, makespan_s, rounds, profiling_minutes }
+impl ClusterModel for HeteroModel {
+    fn fits(&self, job: &Job) -> bool {
+        job.gpus <= self.max_group_gpus
+    }
+
+    fn total_gpus(&self) -> u32 {
+        self.cluster.total_gpus()
+    }
+
+    fn profile_arrival(&mut self, job: &mut Job) -> f64 {
+        // Profiled on every machine type (A.2's `W_ij`).
+        let s = self.profiler.profile(job);
+        job.total_samples = job.duration_prop_s * s.fair_throughput();
+        let cost = s.cost_minutes;
+        self.sens.insert(job.id, s);
+        cost
+    }
+
+    fn forget(&mut self, id: JobId) {
+        self.sens.remove(&id);
+    }
+
+    fn begin_round(&mut self) {
+        self.cluster.evict_all();
+    }
+
+    fn policy_views(&self, active: &BTreeMap<JobId, Job>) -> Vec<PolicyJobView> {
+        let total_gpus = self.cluster.total_gpus();
+        let total_cpus = self.cluster.total_cpus();
+        let total_mem = self.cluster.total_mem_gb();
+        active
+            .values()
+            .map(|j| {
+                let s = &self.sens[&j.id];
+                let fair = s.fair_throughput();
+                let remaining_est_s = if fair > 0.0 {
+                    j.remaining_samples() / fair
+                } else {
+                    f64::INFINITY
+                };
+                PolicyJobView {
+                    id: j.id,
+                    arrival_s: j.arrival_s,
+                    attained_service_s: j.attained_service_s,
+                    remaining_est_s,
+                    duration_prop_s: j.duration_prop_s,
+                    gpus: j.gpus,
+                    dominant_share: j.gpus as f64 / total_gpus as f64,
+                    alignment: (j.gpus as f64 * total_gpus as f64)
+                        / (total_cpus * total_mem).max(1.0),
+                }
+            })
+            .collect()
+    }
+
+    fn place_round(
+        &mut self,
+        runnable: &[JobId],
+        active: &BTreeMap<JobId, Job>,
+    ) -> BTreeMap<JobId, f64> {
+        let requests: Vec<HetJobRequest<'_>> = runnable
+            .iter()
+            .map(|id| HetJobRequest {
+                id: *id,
+                gpus: active[id].gpus,
+                sens: &self.sens[id],
+            })
+            .collect();
+        let grants = self.mechanism.allocate(&mut self.cluster, &requests);
+        debug_assert!(self.cluster.check_consistency().is_ok());
+        // Deploy: progress rates from the assigned type's ground truth at
+        // the granted allocation.
+        grants
+            .iter()
+            .map(|(id, g)| {
+                let job = &active[id];
+                let rate = self.worlds[&g.gen].throughput(
+                    job.model,
+                    job.gpus,
+                    g.grant.demand.cpus,
+                    g.grant.demand.mem_gb,
+                );
+                (*id, rate)
+            })
+            .collect()
+    }
+
+    fn utilization(&self, now: f64, active: &BTreeMap<JobId, Job>) -> UtilSample {
+        utilization_sample(
+            now,
+            active,
+            self.cluster.gpu_utilization(),
+            self.cluster.cpu_utilization(),
+            1.0 - self.cluster.free_mem_gb() / self.cluster.total_mem_gb(),
+            self.cluster.total_cpus(),
+        )
+    }
+}
+
+/// The heterogeneous simulator.
+pub struct HeteroSimulator {
+    cfg: HeteroSimConfig,
+    quotas: Option<TenantQuotas>,
+}
+
+impl HeteroSimulator {
+    pub fn new(cfg: HeteroSimConfig) -> HeteroSimulator {
+        HeteroSimulator { cfg, quotas: None }
+    }
+
+    /// A heterogeneous simulator whose admission enforces tenant GPU
+    /// quotas (the same weighted-quota + work-conserving-spill admission
+    /// as the homogeneous engine, via the shared core).
+    pub fn with_quotas(
+        cfg: HeteroSimConfig,
+        quotas: Option<TenantQuotas>,
+    ) -> HeteroSimulator {
+        let mut sim = HeteroSimulator::new(cfg);
+        sim.quotas = quotas;
+        sim
+    }
+
+    /// Run a trace to completion (or `max_sim_s`) through the shared
+    /// event-driven core.
+    pub fn run(&self, jobs: Vec<Job>) -> HeteroSimResult {
+        let policy = policy_by_name(&self.cfg.policy)
+            .unwrap_or_else(|| panic!("unknown policy {}", self.cfg.policy));
+        let mut model = HeteroModel::from_config(&self.cfg);
+        let r = run_events(
+            &mut model,
+            policy.as_ref(),
+            self.quotas.as_ref(),
+            &CoreConfig {
+                round_s: self.cfg.round_s,
+                max_sim_s: self.cfg.max_sim_s,
+            },
+            jobs,
+        );
+        HeteroSimResult::from_result(r)
     }
 }
 
@@ -323,6 +364,73 @@ mod tests {
             "het profiling {} must exceed homogeneous {}",
             het.profiling_minutes,
             hom.profiling_minutes
+        );
+    }
+
+    #[test]
+    fn quotas_cap_flooding_tenant_on_hetero_cluster() {
+        use crate::job::{ModelKind, TenantId};
+        use crate::metrics::jains_index;
+        // 1×P100 + 2×V100 machines = 24 GPUs. Tenant 0 floods the queue
+        // with 24 identical one-GPU jobs (exactly the cluster capacity);
+        // tenant 1 queues 24 more behind them. FIFO alone hands round 0
+        // entirely to tenant 0; a 1:1 quota must cap each tenant at 12
+        // GPUs per round, so half of tenant 1's backlog starts immediately
+        // instead of waiting out tenant 0's. Identical durations make the
+        // comparison deterministic (no heavy-tail sampling luck).
+        let mk_jobs = || -> Vec<Job> {
+            (0..48u64)
+                .map(|i| {
+                    Job::new(JobId(i), ModelKind::Lstm, 1, 0.0, 3600.0)
+                        .with_tenant(TenantId(if i < 24 { 0 } else { 1 }))
+                })
+                .collect()
+        };
+        let cfg = || HeteroSimConfig {
+            types: vec![
+                TypeSpec {
+                    gen: GpuGen::P100,
+                    spec: ServerSpec::default(),
+                    machines: 1,
+                },
+                TypeSpec {
+                    gen: GpuGen::V100,
+                    spec: ServerSpec::default(),
+                    machines: 2,
+                },
+            ],
+            policy: "fifo".into(),
+            mechanism: "het-tune".into(),
+            ..Default::default()
+        };
+        let quotas = TenantQuotas::new()
+            .with(TenantId(0), 1.0)
+            .with(TenantId(1), 1.0);
+        let plain = HeteroSimulator::new(cfg()).run(mk_jobs());
+        let fair =
+            HeteroSimulator::with_quotas(cfg(), Some(quotas)).run(mk_jobs());
+        assert_eq!(plain.jcts.len(), 48);
+        assert_eq!(fair.jcts.len(), 48);
+        let p = plain.tenant_stats();
+        let f = fair.tenant_stats();
+        let (p0, p1) = (p[&TenantId(0)].avg_s, p[&TenantId(1)].avg_s);
+        let (f0, f1) = (f[&TenantId(0)].avg_s, f[&TenantId(1)].avg_s);
+        // Without quotas FIFO starves tenant 1 behind tenant 0's backlog.
+        assert!(
+            p1 > p0 * 1.2,
+            "fifo baseline should favour the flooding tenant: {p0} vs {p1}"
+        );
+        // Quotas must strictly help the starved tenant (half its jobs now
+        // start in round 0 instead of waiting out tenant 0's backlog)...
+        assert!(
+            f1 < p1 - 1.0,
+            "quotas must speed up the starved tenant: {f1} vs {p1}"
+        );
+        // ...and improve Jain fairness over per-tenant average JCTs.
+        assert!(
+            jains_index(&[f0, f1]) > jains_index(&[p0, p1]),
+            "quotas must improve fairness: fair ({f0}, {f1}) vs plain \
+             ({p0}, {p1})"
         );
     }
 }

@@ -28,7 +28,7 @@ use synergy::job::{Job, JobId, ModelKind, ALL_MODELS};
 use synergy::metrics::jains_index;
 use synergy::perf::PerfModel;
 use synergy::profiler::OptimisticProfiler;
-use synergy::sim::{SimConfig, SimResult, Simulator};
+use synergy::sim::{SimConfig, Simulator};
 use synergy::trace::{generate, Split, TraceConfig};
 use synergy::util::cli::Args;
 use synergy::workload::{
@@ -187,14 +187,16 @@ fn workload_source_from_args(
 }
 
 /// Print the per-tenant JCT table + Jain's fairness index.
-fn print_tenant_stats(result: &SimResult, tenant_names: &[String]) {
-    let by = result.tenant_stats();
+fn print_tenant_stats(
+    by: &std::collections::BTreeMap<synergy::job::TenantId, synergy::metrics::JctStats>,
+    tenant_names: &[String],
+) {
     println!("\nper-tenant JCT:");
     println!(
         "{:<16} {:>6} {:>10} {:>10} {:>10}",
         "tenant", "jobs", "avg_jct_h", "p50_jct_h", "p99_jct_h"
     );
-    for (t, s) in &by {
+    for (t, s) in by {
         let name = tenant_names
             .get(t.0 as usize)
             .cloned()
@@ -263,7 +265,7 @@ fn cmd_simulate(args: &Args) {
         result.profiling_minutes
     );
     if workload.tenant_names.len() > 1 || workload.quotas.is_some() {
-        print_tenant_stats(&result, &workload.tenant_names);
+        print_tenant_stats(&result.tenant_stats(), &workload.tenant_names);
     }
 }
 
@@ -358,11 +360,13 @@ fn cmd_models() {
 /// Heterogeneous-cluster simulation (paper Appendix A.2).
 ///
 /// `synergy hetero --mechanism het-tune --policy srtf --machines 8 \
-///     --jobs 500 --load 6 --split 30,50,20 [--multi-gpu]`
+///     --jobs 500 --load 6 --split 30,50,20 [--multi-gpu]
+///     [--trace x.csv --format philly|alibaba] [--tenants a:2,b:1]`
 ///
 /// Builds a two-generation cluster (`--machines` P100 servers +
-/// `--machines` V100 servers) and runs the trace through the
-/// heterogeneous simulator.
+/// `--machines` V100 servers) and runs the workload through the shared
+/// event-driven core. Trace files and tenant quotas work exactly as in
+/// `synergy sim` — both engines are configurations of one loop.
 fn cmd_hetero(args: &Args) {
     use synergy::hetero::{GpuGen, HeteroSimConfig, HeteroSimulator, TypeSpec};
     let spec = ServerSpec {
@@ -373,20 +377,23 @@ fn cmd_hetero(args: &Args) {
     let machines = args.usize("machines", 8);
     let mechanism = args.get_or("mechanism", "het-tune").to_string();
     let policy = args.get_or("policy", "srtf").to_string();
-    let jobs = generate(&trace_from_args(args));
-    let sim = HeteroSimulator::new(HeteroSimConfig {
-        types: vec![
-            TypeSpec { gen: GpuGen::P100, spec, machines },
-            TypeSpec { gen: GpuGen::V100, spec, machines },
-        ],
-        round_s: args.f64("round", 300.0),
-        policy,
-        mechanism: mechanism.clone(),
-        profile_noise: args.f64("noise", 0.0),
-        max_sim_s: args.f64("max-sim-days", 400.0) * 86_400.0,
-    });
+    let workload = workload_from_args(args);
+    let sim = HeteroSimulator::with_quotas(
+        HeteroSimConfig {
+            types: vec![
+                TypeSpec { gen: GpuGen::P100, spec, machines },
+                TypeSpec { gen: GpuGen::V100, spec, machines },
+            ],
+            round_s: args.f64("round", 300.0),
+            policy,
+            mechanism: mechanism.clone(),
+            profile_noise: args.f64("noise", 0.0),
+            max_sim_s: args.f64("max-sim-days", 400.0) * 86_400.0,
+        },
+        workload.quotas.clone(),
+    );
     let t0 = std::time::Instant::now();
-    let r = sim.run(jobs);
+    let r = sim.run(workload.jobs);
     let s = r.jct_stats();
     println!(
         "{mechanism}: jobs={} avg_jct={:.2}h p99={:.2}h makespan={:.2}h \
@@ -399,6 +406,9 @@ fn cmd_hetero(args: &Args) {
         r.profiling_minutes,
         t0.elapsed().as_secs_f64()
     );
+    if workload.tenant_names.len() > 1 || workload.quotas.is_some() {
+        print_tenant_stats(&r.tenant_stats(), &workload.tenant_names);
+    }
 }
 
 fn cmd_trace(args: &Args) {
@@ -506,19 +516,25 @@ fn cmd_config(args: &Args) {
     let path = args.get("file").expect("--file <config.json> required");
     let cfg = ExperimentConfig::from_file(path).expect("bad config");
     println!("running experiment '{}'", cfg.name);
-    let jobs = generate(&cfg.trace);
-    let sim = Simulator::new(SimConfig {
-        spec: cfg.spec,
-        n_servers: cfg.n_servers,
-        round_s: cfg.round_s,
-        policy: cfg.policy.clone(),
-        mechanism: cfg.mechanism.clone(),
-        profile_noise: cfg.profile_noise,
-        max_sim_s: 400.0 * 86_400.0,
-        span_factor: 1,
-        network_penalty: 0.0,
-        reference_spec: None,
-    });
+    // Config files reach the same workload readers as the CLI flags:
+    // `trace`/`format` select a file source, `tenants` turns on quotas.
+    let (jobs, quotas, tenant_names) =
+        cfg.workload().expect("bad workload in config");
+    let sim = Simulator::with_quotas(
+        SimConfig {
+            spec: cfg.spec,
+            n_servers: cfg.n_servers,
+            round_s: cfg.round_s,
+            policy: cfg.policy.clone(),
+            mechanism: cfg.mechanism.clone(),
+            profile_noise: cfg.profile_noise,
+            max_sim_s: 400.0 * 86_400.0,
+            span_factor: 1,
+            network_penalty: 0.0,
+            reference_spec: None,
+        },
+        quotas.clone(),
+    );
     let r = sim.run(jobs);
     let s = r.jct_stats();
     println!(
@@ -529,4 +545,7 @@ fn cmd_config(args: &Args) {
         r.makespan_s / 3600.0,
         r.rounds
     );
+    if tenant_names.len() > 1 || quotas.is_some() {
+        print_tenant_stats(&r.tenant_stats(), &tenant_names);
+    }
 }

@@ -1,0 +1,497 @@
+//! The shared event-driven simulation core.
+//!
+//! Both the homogeneous simulator ([`crate::sim::Simulator`]) and the
+//! heterogeneous one ([`crate::hetero::HeteroSimulator`]) used to carry
+//! their own copies of the same scheduling loop; this module is the one
+//! copy both now configure. The split of responsibilities:
+//!
+//! - **The core** ([`run_events`]) owns the event queue and everything
+//!   workload- and tenant-related: arrival admission + profiling hooks,
+//!   policy ordering, weighted-quota admission with work-conserving
+//!   spill ([`crate::workload::admission`]), job progress, exact
+//!   completion recording, per-round utilization sampling, and metrics.
+//! - **The [`ClusterModel`]** owns everything topology-related: how a
+//!   job is profiled, how the policy view is derived from its context,
+//!   and how the runnable set is allocated and what throughput each
+//!   grant yields. The homogeneous model delegates to
+//!   [`crate::mechanism`]; the heterogeneous one to
+//!   [`crate::hetero::mechanism`].
+//!
+//! Because policy ordering, quota admission, progress arithmetic, and
+//! metric accounting are literally the same code on both paths, a
+//! scenario (trace × quotas × policy) behaves identically modulo the
+//! hardware model — same seed + same scenario ⇒ identical schedule from
+//! either entry point (golden-tested in `tests/scenarios.rs`, which also
+//! pins a single-type V100 heterogeneous cluster to the homogeneous
+//! engine bit-for-bit).
+//!
+//! ## Events
+//!
+//! The queue carries two event kinds:
+//!
+//! - [`SimEvent::Arrival`] — a job arrives (profiled on arrival, §3.1).
+//! - [`SimEvent::LeaseExpiry`] — the current round's resource leases end
+//!   (round-based scheduling, §3.2). Lease events are lazily invalidated
+//!   by round number: replanning earlier (an arrival) supersedes the
+//!   outstanding lease, exactly like a real round-based scheduler
+//!   preempting on queue change.
+//!
+//! Placements and completions are *derived*, not queued: a completion
+//! instant is fully determined by the round's grants, so the core
+//! records it exactly mid-round while the resources release at the next
+//! lease expiry (the paper's semantics — JCT is exact, reclamation is
+//! round-granular). Rounds with an unchanged, fully-running job set
+//! fast-forward without replanning (the schedule would be recomputed
+//! identically), which keeps 512-GPU × 8000-job traces tractable.
+
+use crate::job::{Job, JobId, JobState, TenantId};
+use crate::metrics::{per_tenant_stats, JctStats, UtilSample, UtilizationLog};
+use crate::policy::{PolicyJobView, SchedulingPolicy};
+use crate::workload::{admission, AdmissionJob, TenantQuotas};
+use std::collections::{BTreeMap, BinaryHeap};
+
+/// Core loop knobs shared by every topology.
+#[derive(Debug, Clone, Copy)]
+pub struct CoreConfig {
+    /// Scheduling round length, seconds (paper uses ~5 minutes).
+    pub round_s: f64,
+    /// Stop after this much simulated time (safety valve).
+    pub max_sim_s: f64,
+}
+
+impl Default for CoreConfig {
+    fn default() -> Self {
+        CoreConfig { round_s: 300.0, max_sim_s: 400.0 * 24.0 * 3600.0 }
+    }
+}
+
+/// What a topology must provide to the core loop. Implementations keep
+/// per-job scheduling context (sensitivity matrices) internally, keyed
+/// by [`JobId`].
+pub trait ClusterModel {
+    /// Can this job's gang ever be placed (one pool must fit it)?
+    fn fits(&self, job: &Job) -> bool;
+
+    /// Cluster-wide GPU capacity (the admission budget).
+    fn total_gpus(&self) -> u32;
+
+    /// Profile an arriving job: derive its total work (`total_samples`)
+    /// and cache its scheduling context. Returns the profiling cost in
+    /// minutes (§3.1 accounting).
+    fn profile_arrival(&mut self, job: &mut Job) -> f64;
+
+    /// Drop the context of a departed job.
+    fn forget(&mut self, id: JobId);
+
+    /// Reset placements for a new round (§3.2: placements are recomputed
+    /// from scratch every round).
+    fn begin_round(&mut self);
+
+    /// Policy views for the active set, in the map's (id) order; the
+    /// core orders them with the scheduling policy.
+    fn policy_views(&self, active: &BTreeMap<JobId, Job>) -> Vec<PolicyJobView>;
+
+    /// Allocate + place the admitted runnable set (policy order) and
+    /// return each placed job's progress rate (samples/s) for the round.
+    /// Jobs absent from the result stay queued.
+    fn place_round(
+        &mut self,
+        runnable: &[JobId],
+        active: &BTreeMap<JobId, Job>,
+    ) -> BTreeMap<JobId, f64>;
+
+    /// One utilization sample of the deployed round.
+    fn utilization(&self, now: f64, active: &BTreeMap<JobId, Job>) -> UtilSample;
+}
+
+/// An event in the simulation queue.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SimEvent {
+    /// Job `idx` (index into the arrival-sorted trace) arrives at `at`.
+    Arrival { at: f64, idx: usize },
+    /// Round `round`'s resource leases expire at `at`. Stale when the
+    /// core has moved past `round` (lazy invalidation).
+    LeaseExpiry { at: f64, round: usize },
+}
+
+impl SimEvent {
+    fn at(&self) -> f64 {
+        match *self {
+            SimEvent::Arrival { at, .. } | SimEvent::LeaseExpiry { at, .. } => at,
+        }
+    }
+
+    /// (time, kind, seq): arrivals before lease expiries at equal times,
+    /// then FIFO by index — a deterministic total order.
+    fn order_key(&self) -> (f64, u8, usize) {
+        match *self {
+            SimEvent::Arrival { at, idx } => (at, 0, idx),
+            SimEvent::LeaseExpiry { at, round } => (at, 1, round),
+        }
+    }
+}
+
+/// Max-heap entry ordered so the *earliest* event pops first.
+struct HeapEntry(SimEvent);
+
+impl PartialEq for HeapEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+
+impl Eq for HeapEntry {}
+
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for HeapEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        let (ta, ka, ia) = self.0.order_key();
+        let (tb, kb, ib) = other.0.order_key();
+        // Reversed: BinaryHeap pops the maximum, we want the minimum.
+        tb.total_cmp(&ta).then(kb.cmp(&ka)).then(ib.cmp(&ia))
+    }
+}
+
+/// The simulation event queue.
+struct EventQueue {
+    heap: BinaryHeap<HeapEntry>,
+}
+
+impl EventQueue {
+    fn new() -> EventQueue {
+        EventQueue { heap: BinaryHeap::new() }
+    }
+
+    fn push(&mut self, e: SimEvent) {
+        self.heap.push(HeapEntry(e));
+    }
+
+    /// Drop lease events from rounds other than `round` off the top.
+    fn drop_stale(&mut self, round: usize) {
+        while matches!(
+            self.heap.peek(),
+            Some(HeapEntry(SimEvent::LeaseExpiry { round: r, .. })) if *r != round
+        ) {
+            self.heap.pop();
+        }
+    }
+
+    /// Pop the next arrival due at or before `deadline`, if it is the
+    /// earliest live event.
+    fn pop_arrival_due(&mut self, deadline: f64, round: usize) -> Option<usize> {
+        self.drop_stale(round);
+        if let Some(HeapEntry(SimEvent::Arrival { at, idx })) = self.heap.peek() {
+            if *at <= deadline {
+                let idx = *idx;
+                self.heap.pop();
+                return Some(idx);
+            }
+        }
+        None
+    }
+
+    /// Time of the earliest live event.
+    fn next_at(&mut self, round: usize) -> Option<f64> {
+        self.drop_stale(round);
+        self.heap.peek().map(|e| e.0.at())
+    }
+
+    /// Time of the earliest queued arrival (used for the idle
+    /// fast-forward jump). Called between rounds, when every lease event
+    /// still in the heap is stale — so after [`EventQueue::drop_stale`]
+    /// the top is the next arrival (or the queue is drained), keeping
+    /// this O(log n) rather than a heap scan.
+    fn next_arrival_at(&mut self, round: usize) -> Option<f64> {
+        self.drop_stale(round);
+        match self.heap.peek() {
+            Some(HeapEntry(SimEvent::Arrival { at, .. })) => Some(*at),
+            _ => None,
+        }
+    }
+}
+
+/// Assemble one round's utilization sample from a topology's resource
+/// ratios plus the core-owned active-set accounting. Shared by both
+/// [`ClusterModel`] implementations so the metrics (notably the
+/// `cpu_used` Fig-10b quantity: Σ rate / per-core prep rate) cannot
+/// drift apart between engines.
+pub fn utilization_sample(
+    now: f64,
+    active: &BTreeMap<JobId, Job>,
+    gpu_util: f64,
+    cpu_util: f64,
+    mem_util: f64,
+    total_cpus: f64,
+) -> UtilSample {
+    let cpu_used: f64 = active
+        .values()
+        .filter(|j| j.state == JobState::Running)
+        .map(|j| j.progress_rate / j.model.coeffs().cpu_prep_rate)
+        .sum::<f64>()
+        / total_cpus;
+    UtilSample {
+        time_s: now,
+        gpu_util,
+        cpu_util,
+        cpu_used,
+        mem_util,
+        queued_jobs: active
+            .values()
+            .filter(|j| j.state == JobState::Queued)
+            .count(),
+        running_jobs: active
+            .values()
+            .filter(|j| j.state == JobState::Running)
+            .count(),
+    }
+}
+
+/// Simulation output (shared by both engines).
+#[derive(Debug)]
+pub struct SimResult {
+    /// Finished jobs in completion order (id, tenant, gpus, arrival,
+    /// baseline duration, JCT seconds).
+    pub finished: Vec<FinishedJob>,
+    pub makespan_s: f64,
+    pub rounds: usize,
+    pub utilization: UtilizationLog,
+    /// Total profiling cost across all jobs, minutes (§3.1 accounting).
+    pub profiling_minutes: f64,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct FinishedJob {
+    pub id: JobId,
+    pub tenant: TenantId,
+    pub gpus: u32,
+    pub arrival_s: f64,
+    pub duration_prop_s: f64,
+    pub jct_s: f64,
+}
+
+impl SimResult {
+    pub fn jcts(&self) -> Vec<f64> {
+        self.finished.iter().map(|f| f.jct_s).collect()
+    }
+
+    pub fn jct_stats(&self) -> JctStats {
+        JctStats::from_jcts(&self.jcts())
+    }
+
+    /// Per-tenant JCT summaries (multi-tenant workloads).
+    pub fn tenant_stats(&self) -> BTreeMap<TenantId, JctStats> {
+        let pairs: Vec<(TenantId, f64)> =
+            self.finished.iter().map(|f| (f.tenant, f.jct_s)).collect();
+        per_tenant_stats(&pairs)
+    }
+
+    /// JCTs of a monitored subrange of jobs (steady-state window, §5.1).
+    pub fn jcts_in_window(&self, from_idx: usize, n: usize) -> Vec<f64> {
+        self.finished
+            .iter()
+            .filter(|f| {
+                (f.id.0 as usize) >= from_idx && (f.id.0 as usize) < from_idx + n
+            })
+            .map(|f| f.jct_s)
+            .collect()
+    }
+}
+
+/// Run a trace to completion (or `cfg.max_sim_s`) over `model`.
+///
+/// The one scheduling loop behind both simulators: arrivals are profiled
+/// as their events fire, the policy orders the active set, quota
+/// admission cuts the runnable set ([`admission::admit`] — byte-identical
+/// to plain gang backfill when `quotas` is `None`), the model allocates,
+/// and jobs progress at their granted rates until the next event.
+pub fn run_events<M: ClusterModel + ?Sized>(
+    model: &mut M,
+    policy: &dyn SchedulingPolicy,
+    quotas: Option<&TenantQuotas>,
+    cfg: &CoreConfig,
+    mut jobs: Vec<Job>,
+) -> SimResult {
+    jobs.sort_by(|a, b| {
+        a.arrival_s.total_cmp(&b.arrival_s).then(a.id.cmp(&b.id))
+    });
+    // Reject jobs that can never fit.
+    jobs.retain(|j| model.fits(j));
+    let n_total = jobs.len();
+
+    let mut queue = EventQueue::new();
+    for (idx, j) in jobs.iter().enumerate() {
+        queue.push(SimEvent::Arrival { at: j.arrival_s, idx });
+    }
+
+    let mut profiling_minutes = 0.0;
+    let mut active: BTreeMap<JobId, Job> = BTreeMap::new();
+    let mut finished: Vec<FinishedJob> = Vec::new();
+    let mut util = UtilizationLog::default();
+    let mut now = 0.0f64;
+    let mut rounds = 0usize;
+    let mut last_set_changed = true;
+
+    while finished.len() < n_total && now < cfg.max_sim_s {
+        // Fire arrival events due now (profiling happens on arrival).
+        while let Some(idx) = queue.pop_arrival_due(now + 1e-9, rounds) {
+            let mut job = jobs[idx].clone();
+            profiling_minutes += model.profile_arrival(&mut job);
+            active.insert(job.id, job);
+            last_set_changed = true;
+        }
+
+        // Re-plan unless nothing can change the schedule: set unchanged
+        // and every active job already running (fast-forward).
+        if last_set_changed
+            || active.values().any(|j| j.state != JobState::Running)
+        {
+            model.begin_round();
+            let mut views = model.policy_views(&active);
+            policy.order(&mut views, now);
+            let ordered: Vec<AdmissionJob> = views
+                .iter()
+                .map(|v| {
+                    let j = &active[&v.id];
+                    AdmissionJob { id: j.id, tenant: j.tenant, gpus: j.gpus }
+                })
+                .collect();
+            let runnable =
+                admission::admit(&ordered, model.total_gpus(), quotas)
+                    .admitted;
+            let rates = model.place_round(&runnable, &active);
+            for job in active.values_mut() {
+                match rates.get(&job.id) {
+                    Some(&rate) => {
+                        job.state = JobState::Running;
+                        job.progress_rate = rate;
+                    }
+                    None => {
+                        job.state = JobState::Queued;
+                        job.progress_rate = 0.0;
+                    }
+                }
+            }
+            last_set_changed = false;
+        }
+
+        // Horizon: the earliest of this round's lease expiry and the next
+        // arrival event.
+        queue.push(SimEvent::LeaseExpiry { at: now + cfg.round_s, round: rounds });
+        let horizon = queue
+            .next_at(rounds)
+            .expect("lease event just pushed")
+            .max(now + 1e-6);
+        let dt = horizon - now;
+
+        // Progress running jobs; record exact finish times.
+        let mut any_finished = false;
+        for job in active.values_mut() {
+            if job.state != JobState::Running {
+                continue;
+            }
+            let tput = job.progress_rate;
+            if tput <= 0.0 {
+                continue;
+            }
+            let need = job.remaining_samples() / tput;
+            if need <= dt {
+                job.finish_s = now + need;
+                job.attained_service_s += need;
+                job.progress_samples = job.total_samples;
+                job.state = JobState::Finished;
+                any_finished = true;
+            } else {
+                job.progress_samples += tput * dt;
+                job.attained_service_s += dt;
+            }
+        }
+        if any_finished {
+            last_set_changed = true;
+            let done: Vec<JobId> = active
+                .values()
+                .filter(|j| j.state == JobState::Finished)
+                .map(|j| j.id)
+                .collect();
+            for id in done {
+                let j = active.remove(&id).unwrap();
+                model.forget(id);
+                finished.push(FinishedJob {
+                    id: j.id,
+                    tenant: j.tenant,
+                    gpus: j.gpus,
+                    arrival_s: j.arrival_s,
+                    duration_prop_s: j.duration_prop_s,
+                    jct_s: j.finish_s - j.arrival_s,
+                });
+            }
+        }
+
+        // Sample utilization once per executed round.
+        util.record(model.utilization(now, &active));
+
+        rounds += 1;
+        // Jump straight to the next arrival event when idle. The round
+        // counter just advanced, so this round's lease is already stale.
+        if active.is_empty() {
+            match queue.next_arrival_at(rounds) {
+                Some(at) => now = at,
+                None => now = horizon,
+            }
+        } else {
+            now = horizon;
+        }
+    }
+
+    let makespan_s = finished
+        .iter()
+        .map(|f| f.arrival_s + f.jct_s)
+        .fold(0.0, f64::max);
+    SimResult { finished, makespan_s, rounds, utilization: util, profiling_minutes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_queue_orders_by_time_then_kind() {
+        let mut q = EventQueue::new();
+        q.push(SimEvent::LeaseExpiry { at: 10.0, round: 0 });
+        q.push(SimEvent::Arrival { at: 10.0, idx: 1 });
+        q.push(SimEvent::Arrival { at: 5.0, idx: 0 });
+        // Earliest first; at equal time, arrivals before lease expiries.
+        assert_eq!(q.pop_arrival_due(20.0, 0), Some(0));
+        assert_eq!(q.pop_arrival_due(20.0, 0), Some(1));
+        assert_eq!(q.next_at(0), Some(10.0));
+        assert_eq!(q.pop_arrival_due(20.0, 0), None);
+    }
+
+    #[test]
+    fn stale_lease_events_are_skipped() {
+        let mut q = EventQueue::new();
+        q.push(SimEvent::LeaseExpiry { at: 3.0, round: 0 });
+        q.push(SimEvent::LeaseExpiry { at: 7.0, round: 2 });
+        q.push(SimEvent::Arrival { at: 5.0, idx: 4 });
+        // Round 2: the round-0 lease is stale; arrival at 5 wins.
+        assert_eq!(q.next_at(2), Some(5.0));
+        assert_eq!(q.pop_arrival_due(5.0, 2), Some(4));
+        assert_eq!(q.next_at(2), Some(7.0));
+    }
+
+    #[test]
+    fn next_arrival_skips_stale_lease_events() {
+        let mut q = EventQueue::new();
+        // A lease from round 0 is stale once the loop reaches round 1.
+        q.push(SimEvent::LeaseExpiry { at: 1.0, round: 0 });
+        assert_eq!(q.next_arrival_at(1), None);
+        q.push(SimEvent::Arrival { at: 9.0, idx: 0 });
+        q.push(SimEvent::Arrival { at: 4.0, idx: 1 });
+        q.push(SimEvent::LeaseExpiry { at: 2.0, round: 0 });
+        assert_eq!(q.next_arrival_at(1), Some(4.0));
+    }
+}

@@ -1,12 +1,23 @@
-//! The simulation engine.
+//! The homogeneous simulator: a thin configuration of the shared
+//! event-driven core ([`crate::sim::core`]).
+//!
+//! [`Simulator`] wires the homogeneous pieces — [`Cluster`] bookkeeping,
+//! the optimistic profiler, the ground-truth [`PerfModel`], and a
+//! [`Mechanism`] — into a [`HomoModel`] and hands the loop itself to
+//! [`run_events`]. Policy ordering, tenant-quota admission, progress,
+//! and metrics all live in the core, shared byte-for-byte with the
+//! heterogeneous engine.
 
+use super::core::{
+    run_events, utilization_sample, ClusterModel, CoreConfig, SimResult,
+};
 use crate::cluster::{Cluster, ServerSpec};
-use crate::coordinator::{JobContext, RoundPlanner};
-use crate::job::{Job, JobId, JobState, TenantId};
-use crate::mechanism::{by_name as mechanism_by_name, Grant};
-use crate::metrics::{per_tenant_stats, JctStats, UtilSample, UtilizationLog};
+use crate::coordinator::{policy_view, JobContext};
+use crate::job::{Job, JobId};
+use crate::mechanism::{by_name as mechanism_by_name, JobRequest, Mechanism};
+use crate::metrics::UtilSample;
 use crate::perf::PerfModel;
-use crate::policy::by_name as policy_by_name;
+use crate::policy::{by_name as policy_by_name, PolicyJobView};
 use crate::profiler::OptimisticProfiler;
 use crate::workload::TenantQuotas;
 use std::collections::BTreeMap;
@@ -55,71 +66,143 @@ impl Default for SimConfig {
     }
 }
 
-/// Simulation output.
-#[derive(Debug)]
-pub struct SimResult {
-    /// Finished jobs in arrival order (id, model, gpus, arrival, baseline
-    /// duration, JCT seconds).
-    pub finished: Vec<FinishedJob>,
-    pub makespan_s: f64,
-    pub rounds: usize,
-    pub utilization: UtilizationLog,
-    /// Total profiling cost across all jobs, minutes (§3.1 accounting).
-    pub profiling_minutes: f64,
+/// The homogeneous topology behind the shared core: one [`Cluster`], one
+/// ground-truth [`PerfModel`], per-job [`JobContext`]s from the
+/// optimistic profiler, and a homogeneous allocation [`Mechanism`].
+pub struct HomoModel {
+    cluster: Cluster,
+    world: PerfModel,
+    profiler: OptimisticProfiler,
+    mechanism: Box<dyn Mechanism>,
+    contexts: BTreeMap<JobId, JobContext>,
+    reference_spec: Option<ServerSpec>,
+    network_penalty: f64,
 }
 
-#[derive(Debug, Clone, Copy)]
-pub struct FinishedJob {
-    pub id: JobId,
-    pub tenant: TenantId,
-    pub gpus: u32,
-    pub arrival_s: f64,
-    pub duration_prop_s: f64,
-    pub jct_s: f64,
+impl HomoModel {
+    /// Build the model a [`SimConfig`] describes.
+    pub fn from_config(cfg: &SimConfig) -> HomoModel {
+        HomoModel {
+            cluster: Cluster::homogeneous(cfg.spec, cfg.n_servers),
+            world: PerfModel::new(cfg.spec),
+            profiler: OptimisticProfiler {
+                noise_sd: cfg.profile_noise,
+                span_factor: cfg.span_factor,
+                ..OptimisticProfiler::new(cfg.spec)
+            },
+            mechanism: mechanism_by_name(&cfg.mechanism).unwrap_or_else(|| {
+                panic!("unknown mechanism {}", cfg.mechanism)
+            }),
+            contexts: BTreeMap::new(),
+            reference_spec: cfg.reference_spec,
+            network_penalty: cfg.network_penalty,
+        }
+    }
 }
 
-impl SimResult {
-    pub fn jcts(&self) -> Vec<f64> {
-        self.finished.iter().map(|f| f.jct_s).collect()
+impl ClusterModel for HomoModel {
+    fn fits(&self, job: &Job) -> bool {
+        job.gpus <= self.cluster.total_gpus()
     }
 
-    pub fn jct_stats(&self) -> JctStats {
-        JctStats::from_jcts(&self.jcts())
+    fn total_gpus(&self) -> u32 {
+        self.cluster.total_gpus()
     }
 
-    /// Per-tenant JCT summaries (multi-tenant workloads).
-    pub fn tenant_stats(&self) -> BTreeMap<TenantId, JctStats> {
-        let pairs: Vec<(TenantId, f64)> =
-            self.finished.iter().map(|f| (f.tenant, f.jct_s)).collect();
-        per_tenant_stats(&pairs)
+    fn profile_arrival(&mut self, job: &mut Job) -> f64 {
+        let outcome = self.profiler.profile(job);
+        let ctx = JobContext::new(outcome.matrix, &self.cluster);
+        // Total work from the baseline duration (paper §5.1), against
+        // the reference server shape.
+        let ref_tput = match self.reference_spec {
+            Some(rs) => PerfModel::new(rs)
+                .proportional_throughput(job.model, job.gpus),
+            None => ctx.prop_tput,
+        };
+        job.total_samples = job.duration_prop_s * ref_tput;
+        self.contexts.insert(job.id, ctx);
+        outcome.cost_minutes
     }
 
-    /// JCTs of a monitored subrange of jobs (steady-state window, §5.1).
-    pub fn jcts_in_window(&self, from_idx: usize, n: usize) -> Vec<f64> {
-        self.finished
-            .iter()
-            .filter(|f| {
-                (f.id.0 as usize) >= from_idx && (f.id.0 as usize) < from_idx + n
-            })
-            .map(|f| f.jct_s)
+    fn forget(&mut self, id: JobId) {
+        self.contexts.remove(&id);
+    }
+
+    fn begin_round(&mut self) {
+        self.cluster.evict_all();
+    }
+
+    fn policy_views(&self, active: &BTreeMap<JobId, Job>) -> Vec<PolicyJobView> {
+        active
+            .values()
+            .map(|j| policy_view(&self.cluster, j, &self.contexts[&j.id]))
             .collect()
+    }
+
+    fn place_round(
+        &mut self,
+        runnable: &[JobId],
+        active: &BTreeMap<JobId, Job>,
+    ) -> BTreeMap<JobId, f64> {
+        let requests: Vec<JobRequest<'_>> = runnable
+            .iter()
+            .map(|id| {
+                let job = &active[id];
+                let ctx = &self.contexts[id];
+                JobRequest {
+                    id: *id,
+                    gpus: job.gpus,
+                    best: ctx.best,
+                    prop: ctx.prop,
+                    matrix: &ctx.matrix,
+                }
+            })
+            .collect();
+        let grants = self.mechanism.allocate(&mut self.cluster, &requests);
+        // Deploy: fix each granted job's progress rate for the round from
+        // the ground-truth model at its granted (c, m). Fragmented
+        // placements pay the data-parallel sync cost (§6 consolidation
+        // tradeoff; 0 in the paper's main body).
+        grants
+            .iter()
+            .map(|(id, grant)| {
+                let job = &active[id];
+                let rate = self.world.throughput(
+                    job.model,
+                    job.gpus,
+                    grant.demand.cpus,
+                    grant.demand.mem_gb,
+                );
+                let span = grant.placement.span().max(1) as f64;
+                (*id, rate / (1.0 + self.network_penalty * (span - 1.0)))
+            })
+            .collect()
+    }
+
+    fn utilization(&self, now: f64, active: &BTreeMap<JobId, Job>) -> UtilSample {
+        utilization_sample(
+            now,
+            active,
+            self.cluster.gpu_utilization(),
+            self.cluster.cpu_utilization(),
+            1.0 - self.cluster.free_mem_gb() / self.cluster.total_mem_gb(),
+            self.cluster.total_cpus(),
+        )
     }
 }
 
 /// The simulator.
 pub struct Simulator {
     cfg: SimConfig,
-    world: PerfModel,
     quotas: Option<TenantQuotas>,
 }
 
 impl Simulator {
     pub fn new(cfg: SimConfig) -> Simulator {
-        let world = PerfModel::new(cfg.spec);
-        Simulator { cfg, world, quotas: None }
+        Simulator { cfg, quotas: None }
     }
 
-    /// A simulator whose coordinator enforces tenant GPU quotas.
+    /// A simulator whose admission enforces tenant GPU quotas.
     pub fn with_quotas(
         cfg: SimConfig,
         quotas: Option<TenantQuotas>,
@@ -129,213 +212,22 @@ impl Simulator {
         sim
     }
 
-    /// Run a trace to completion (or `max_sim_s`).
-    pub fn run(&self, mut jobs: Vec<Job>) -> SimResult {
-        let planner = RoundPlanner::with_quotas(
-            policy_by_name(&self.cfg.policy)
-                .unwrap_or_else(|| panic!("unknown policy {}", self.cfg.policy)),
-            mechanism_by_name(&self.cfg.mechanism).unwrap_or_else(|| {
-                panic!("unknown mechanism {}", self.cfg.mechanism)
-            }),
-            self.quotas.clone(),
-        );
-        let mut cluster =
-            Cluster::homogeneous(self.cfg.spec, self.cfg.n_servers);
-        let profiler = OptimisticProfiler {
-            noise_sd: self.cfg.profile_noise,
-            span_factor: self.cfg.span_factor,
-            ..OptimisticProfiler::new(self.cfg.spec)
-        };
-
-        jobs.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
-        // Reject jobs that can never fit.
-        jobs.retain(|j| j.gpus <= cluster.total_gpus());
-
-        let mut contexts: BTreeMap<JobId, JobContext> = BTreeMap::new();
-        let mut profiling_minutes = 0.0;
-        let mut active: BTreeMap<JobId, Job> = BTreeMap::new();
-        let mut finished: Vec<FinishedJob> = Vec::new();
-        let mut util = UtilizationLog::default();
-
-        let mut next_arrival = 0usize; // index into jobs
-        let mut now = 0.0f64;
-        let mut rounds = 0usize;
-        let mut last_set_changed = true;
-        let n_total = jobs.len();
-
-        while (finished.len() < n_total) && now < self.cfg.max_sim_s {
-            // Admit arrivals up to `now` (profiling happens on arrival).
-            while next_arrival < jobs.len()
-                && jobs[next_arrival].arrival_s <= now + 1e-9
-            {
-                let mut job = jobs[next_arrival].clone();
-                let outcome = profiler.profile(&job);
-                profiling_minutes += outcome.cost_minutes;
-                let ctx = JobContext::new(outcome.matrix, &cluster);
-                // Total work from the baseline duration (paper §5.1),
-                // against the reference server shape.
-                let ref_tput = match self.cfg.reference_spec {
-                    Some(rs) => PerfModel::new(rs)
-                        .proportional_throughput(job.model, job.gpus),
-                    None => ctx.prop_tput,
-                };
-                job.total_samples = job.duration_prop_s * ref_tput;
-                contexts.insert(job.id, ctx);
-                active.insert(job.id, job);
-                next_arrival += 1;
-                last_set_changed = true;
-            }
-
-            // Fast-forward when nothing can change the plan: all active
-            // jobs running, queue empty, set unchanged.
-            if !last_set_changed && active.values().all(|j| j.state == JobState::Running)
-            {
-                // keep current placements; jobs keep progressing below.
-            } else {
-                // Re-plan the round.
-                cluster.evict_all();
-                let refs: Vec<(&Job, &JobContext)> = active
-                    .values()
-                    .map(|j| (j, &contexts[&j.id]))
-                    .collect();
-                let plan = planner.plan(&mut cluster, &refs, now);
-                // Update job states from grants.
-                let granted: BTreeMap<JobId, Grant> = plan.grants;
-                for job in active.values_mut() {
-                    job.state = if granted.contains_key(&job.id) {
-                        JobState::Running
-                    } else {
-                        JobState::Queued
-                    };
-                }
-                self.deploy_round(&granted, &mut active, &contexts);
-                last_set_changed = false;
-            }
-
-            // Determine the horizon of this round: next arrival or round
-            // boundary, whichever first.
-            let round_end = now + self.cfg.round_s;
-            let horizon = if next_arrival < jobs.len() {
-                round_end.min(jobs[next_arrival].arrival_s.max(now + 1e-6))
-            } else {
-                round_end
-            };
-            let dt = horizon - now;
-
-            // Progress running jobs; record exact finish times.
-            let mut any_finished = false;
-            for job in active.values_mut() {
-                if job.state != JobState::Running {
-                    continue;
-                }
-                let tput = job.progress_rate;
-                if tput <= 0.0 {
-                    continue;
-                }
-                let need = job.remaining_samples() / tput;
-                if need <= dt {
-                    job.finish_s = now + need;
-                    job.attained_service_s += need;
-                    job.progress_samples = job.total_samples;
-                    job.state = JobState::Finished;
-                    any_finished = true;
-                } else {
-                    job.progress_samples += tput * dt;
-                    job.attained_service_s += dt;
-                }
-            }
-            if any_finished {
-                last_set_changed = true;
-                let done: Vec<JobId> = active
-                    .values()
-                    .filter(|j| j.state == JobState::Finished)
-                    .map(|j| j.id)
-                    .collect();
-                for id in done {
-                    let j = active.remove(&id).unwrap();
-                    contexts.remove(&id);
-                    finished.push(FinishedJob {
-                        id: j.id,
-                        tenant: j.tenant,
-                        gpus: j.gpus,
-                        arrival_s: j.arrival_s,
-                        duration_prop_s: j.duration_prop_s,
-                        jct_s: j.finish_s - j.arrival_s,
-                    });
-                }
-            }
-
-            // Sample utilization once per executed round.
-            // Actual CPU usage: cores actively pre-processing across
-            // running jobs (rate / per-core prep rate).
-            let cpu_used: f64 = active
-                .values()
-                .filter(|j| j.state == JobState::Running)
-                .map(|j| j.progress_rate / j.model.coeffs().cpu_prep_rate)
-                .sum::<f64>()
-                / cluster.total_cpus();
-            util.record(UtilSample {
-                time_s: now,
-                gpu_util: cluster.gpu_utilization(),
-                cpu_util: cluster.cpu_utilization(),
-                cpu_used,
-                mem_util: 1.0
-                    - cluster.free_mem_gb() / cluster.total_mem_gb(),
-                queued_jobs: active
-                    .values()
-                    .filter(|j| j.state == JobState::Queued)
-                    .count(),
-                running_jobs: active
-                    .values()
-                    .filter(|j| j.state == JobState::Running)
-                    .count(),
-            });
-
-            rounds += 1;
-            // Jump straight to the next interesting instant when idle.
-            if active.is_empty() && next_arrival < jobs.len() {
-                now = jobs[next_arrival].arrival_s;
-            } else {
-                now = horizon;
-            }
-        }
-
-        let makespan_s = finished
-            .iter()
-            .map(|f| f.arrival_s + f.jct_s)
-            .fold(0.0, f64::max);
-        SimResult { finished, makespan_s, rounds, utilization: util, profiling_minutes }
-    }
-
-    /// Deploy: fix each granted job's progress rate for the round from the
-    /// ground-truth model at its granted (c, m).
-    fn deploy_round(
-        &self,
-        grants: &BTreeMap<JobId, Grant>,
-        active: &mut BTreeMap<JobId, Job>,
-        _contexts: &BTreeMap<JobId, JobContext>,
-    ) {
-        for (id, grant) in grants {
-            if let Some(job) = active.get_mut(id) {
-                let rate = self.world.throughput(
-                    job.model,
-                    job.gpus,
-                    grant.demand.cpus,
-                    grant.demand.mem_gb,
-                );
-                // Fragmented placements pay the data-parallel sync cost
-                // (§6 consolidation tradeoff; 0 in the paper's main body).
-                let span = grant.placement.span().max(1) as f64;
-                job.progress_rate = rate
-                    / (1.0 + self.cfg.network_penalty * (span - 1.0));
-            }
-        }
-        // Queued jobs make no progress.
-        for job in active.values_mut() {
-            if job.state != JobState::Running {
-                job.progress_rate = 0.0;
-            }
-        }
+    /// Run a trace to completion (or `max_sim_s`) through the shared
+    /// event-driven core.
+    pub fn run(&self, jobs: Vec<Job>) -> SimResult {
+        let policy = policy_by_name(&self.cfg.policy)
+            .unwrap_or_else(|| panic!("unknown policy {}", self.cfg.policy));
+        let mut model = HomoModel::from_config(&self.cfg);
+        run_events(
+            &mut model,
+            policy.as_ref(),
+            self.quotas.as_ref(),
+            &CoreConfig {
+                round_s: self.cfg.round_s,
+                max_sim_s: self.cfg.max_sim_s,
+            },
+            jobs,
+        )
     }
 }
 
@@ -433,6 +325,7 @@ mod tests {
 
     #[test]
     fn tenant_tags_flow_into_results_and_quotas_apply() {
+        use crate::job::TenantId;
         use crate::workload::{SyntheticSource, TenantSpec, WorkloadSource};
         let spec = TenantSpec::parse("a:1,b:1").unwrap();
         let jobs = SyntheticSource::new(TraceConfig {
@@ -462,6 +355,30 @@ mod tests {
         let b = Simulator::new(small_cfg("srtf", "tune")).run(trace);
         assert_eq!(a.jcts(), b.jcts());
         assert_eq!(a.rounds, b.rounds);
+    }
+
+    #[test]
+    fn simulator_and_bare_core_agree() {
+        // The Simulator entry point is nothing but configuration: driving
+        // the core directly with an equivalent HomoModel must reproduce
+        // the schedule bit-for-bit.
+        let trace = small_trace(24, 9);
+        let cfg = small_cfg("srtf", "tune");
+        let via_sim = Simulator::new(cfg).run(trace.clone());
+        let cfg = small_cfg("srtf", "tune");
+        let mut model = HomoModel::from_config(&cfg);
+        let via_core = run_events(
+            &mut model,
+            policy_by_name("srtf").unwrap().as_ref(),
+            None,
+            &CoreConfig { round_s: cfg.round_s, max_sim_s: cfg.max_sim_s },
+            trace,
+        );
+        assert_eq!(via_sim.rounds, via_core.rounds);
+        let bits = |r: &SimResult| -> Vec<(u64, u64)> {
+            r.finished.iter().map(|f| (f.id.0, f.jct_s.to_bits())).collect()
+        };
+        assert_eq!(bits(&via_sim), bits(&via_core));
     }
 
     #[test]

@@ -1,18 +1,30 @@
-//! Event-driven cluster simulator (paper §4.3).
+//! Event-driven cluster simulation (paper §4.3).
 //!
-//! Faithful to the paper's implementation: a global event queue carries
-//! job arrivals and schedule events; each schedule event runs the round
-//! planner ([`crate::coordinator`]) over the runnable jobs, deploys the
-//! allocations, and jobs progress at the throughput their (c, m) grant
-//! yields under the ground-truth [`PerfModel`]. A job finishing releases
-//! its lease at the next round boundary (round-based scheduling), but its
-//! JCT is recorded at the exact finish instant.
+//! Since the core unification, `sim` hosts the *shared* event-driven
+//! scheduling loop ([`core`]) plus its homogeneous configuration
+//! ([`engine`]). A global event queue carries job arrivals and round
+//! lease expiries; each planning pass runs the scheduling policy, the
+//! tenant-quota admission ([`crate::workload::admission`]), and the
+//! topology's allocation mechanism over the runnable jobs, then jobs
+//! progress at the throughput their (c, m) grant yields under the ground
+//! truth. A job finishing releases its lease at the next round boundary
+//! (round-based scheduling), but its JCT is recorded at the exact finish
+//! instant.
+//!
+//! The heterogeneous simulator ([`crate::hetero::sim`]) is the other
+//! configuration of the same core — same loop, same admission, same
+//! accounting, different [`ClusterModel`].
 //!
 //! Performance: rounds with an unchanged runnable set and an empty queue
 //! fast-forward to the next arrival/finish event (the schedule would be
 //! recomputed identically), which is what makes 512-GPU × 8000-job traces
 //! tractable (see EXPERIMENTS.md §Perf).
 
+mod core;
 mod engine;
 
-pub use engine::{FinishedJob, SimConfig, SimResult, Simulator};
+pub use self::core::{
+    run_events, utilization_sample, ClusterModel, CoreConfig, FinishedJob,
+    SimEvent, SimResult,
+};
+pub use engine::{HomoModel, SimConfig, Simulator};

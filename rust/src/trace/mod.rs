@@ -85,7 +85,7 @@ impl GpuDemandDist {
 }
 
 /// Trace generator configuration.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TraceConfig {
     pub n_jobs: usize,
     pub split: Split,

@@ -321,6 +321,17 @@ impl TenantSpec {
         self.names.is_empty()
     }
 
+    /// The canonical `name:weight,...` string this spec parses back from
+    /// (`TenantSpec::parse(&spec.canonical()) == spec`).
+    pub fn canonical(&self) -> String {
+        self.names
+            .iter()
+            .zip(&self.weights)
+            .map(|(n, w)| format!("{n}:{w}"))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
     /// The weight of `name`, if it is in the spec.
     pub fn weight_of(&self, name: &str) -> Option<f64> {
         self.names
@@ -373,6 +384,14 @@ mod tests {
         assert!(TenantSpec::parse("a:0").is_err());
         assert!(TenantSpec::parse("a:-1").is_err());
         assert!(TenantSpec::parse("a,a").is_err());
+    }
+
+    #[test]
+    fn tenant_spec_canonical_roundtrip() {
+        for s in ["a:2,b:1", "x:0.5,y:3,z:1", "solo:1"] {
+            let spec = TenantSpec::parse(s).unwrap();
+            assert_eq!(TenantSpec::parse(&spec.canonical()).unwrap(), spec);
+        }
     }
 
     #[test]

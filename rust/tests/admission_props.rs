@@ -1,0 +1,240 @@
+//! Property tests for the tenant-quota admission invariants (ISSUE 2),
+//! using the in-crate property harness (`util::prop`):
+//!
+//! 1. **Quota cap** — no tenant exceeds its weighted integer GPU cap
+//!    through the quota pass; only the work-conserving spill pass may
+//!    push a tenant past its cap, and only into capacity no other
+//!    tenant could use.
+//! 2. **Work conservation** — a job is left unadmitted only when the
+//!    remaining capacity cannot hold its gang: no GPU idles because of
+//!    quotas alone.
+//! 3. **Accounting** — per-tenant GPU tallies sum exactly to the
+//!    admitted total, the admitted set is duplicate-free, spilled ⊆
+//!    admitted, and completed-job accounting through the simulators
+//!    never goes negative.
+
+use std::collections::{BTreeMap, BTreeSet};
+use synergy::job::{JobId, TenantId};
+use synergy::prop_assert;
+use synergy::util::prop::{check, Gen};
+use synergy::workload::{admit, AdmissionJob, TenantQuotas};
+
+/// A random policy-ordered queue + quota set + GPU capacity.
+fn random_round(g: &mut Gen) -> (Vec<AdmissionJob>, TenantQuotas, u32) {
+    let n_tenants = g.int(1, 5);
+    let mut quotas = TenantQuotas::new();
+    for t in 0..n_tenants {
+        // Leave some tenants unspecified sometimes (default weight 1).
+        if g.bool() {
+            quotas.set(TenantId(t as u32), g.f64(0.5, 4.0));
+        }
+    }
+    let mut jobs = g.vec(40, |g| AdmissionJob {
+        id: JobId(0),
+        tenant: TenantId(g.int(0, n_tenants) as u32),
+        gpus: g.choose(&[1u32, 1, 1, 2, 4, 8]),
+    });
+    for (i, j) in jobs.iter_mut().enumerate() {
+        j.id = JobId(i as u64);
+    }
+    let total_gpus = g.int(1, 65) as u32;
+    (jobs, quotas, total_gpus)
+}
+
+#[test]
+fn prop_no_tenant_exceeds_quota_without_spill() {
+    check("quota cap", 200, |g| {
+        let (jobs, quotas, total) = random_round(g);
+        let out = admit(&jobs, total, Some(&quotas));
+        let present: Vec<TenantId> = {
+            let mut p: Vec<TenantId> = jobs.iter().map(|j| j.tenant).collect();
+            p.sort_unstable();
+            p.dedup();
+            p
+        };
+        let caps = quotas.integer_caps(&present, total);
+        let spilled: BTreeSet<JobId> = out.spilled.iter().copied().collect();
+        let by_id: BTreeMap<JobId, &AdmissionJob> =
+            jobs.iter().map(|j| (j.id, j)).collect();
+        // GPUs admitted per tenant inside the quota pass only.
+        let mut in_quota: BTreeMap<TenantId, u32> = BTreeMap::new();
+        for id in &out.admitted {
+            if !spilled.contains(id) {
+                let j = by_id[id];
+                *in_quota.entry(j.tenant).or_insert(0) += j.gpus;
+            }
+        }
+        for (t, used) in &in_quota {
+            let cap = caps.get(t).copied().unwrap_or(0);
+            prop_assert!(
+                *used <= cap,
+                "tenant {t:?} used {used} GPUs in-quota, cap {cap}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_spill_is_work_conserving() {
+    check("work-conserving spill", 200, |g| {
+        let (jobs, quotas, total) = random_round(g);
+        let with_quotas = g.bool();
+        let out = admit(&jobs, total, with_quotas.then_some(&quotas));
+        let admitted: BTreeSet<JobId> = out.admitted.iter().copied().collect();
+        let used: u32 = jobs
+            .iter()
+            .filter(|j| admitted.contains(&j.id))
+            .map(|j| j.gpus)
+            .sum();
+        prop_assert!(used <= total, "overcommitted: {used} > {total}");
+        // No idle GPU while a job waits: every unadmitted job's gang must
+        // overflow the leftover capacity.
+        for j in &jobs {
+            if !admitted.contains(&j.id) {
+                prop_assert!(
+                    used + j.gpus > total,
+                    "job {:?} ({} GPUs) left waiting with {} of {} GPUs free",
+                    j.id,
+                    j.gpus,
+                    total - used,
+                    total
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_admission_accounting_consistent() {
+    check("admission accounting", 200, |g| {
+        let (jobs, quotas, total) = random_round(g);
+        let out = admit(&jobs, total, Some(&quotas));
+        // Admitted ids unique and drawn from the queue.
+        let ids: BTreeSet<JobId> = out.admitted.iter().copied().collect();
+        prop_assert!(
+            ids.len() == out.admitted.len(),
+            "duplicate admissions: {:?}",
+            out.admitted
+        );
+        let queue_ids: BTreeSet<JobId> = jobs.iter().map(|j| j.id).collect();
+        prop_assert!(
+            ids.is_subset(&queue_ids),
+            "admitted a job that never queued"
+        );
+        // Spilled jobs are admitted jobs.
+        prop_assert!(
+            out.spilled.iter().all(|id| ids.contains(id)),
+            "spilled job not admitted"
+        );
+        // Per-tenant tallies sum exactly to the admitted GPU total.
+        let tally: u32 = out.gpus_by_tenant.values().sum();
+        let admitted_gpus: u32 = jobs
+            .iter()
+            .filter(|j| ids.contains(&j.id))
+            .map(|j| j.gpus)
+            .sum();
+        prop_assert!(
+            tally == admitted_gpus,
+            "tenant tally {tally} != admitted GPUs {admitted_gpus}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_admission_deterministic() {
+    check("admission determinism", 100, |g| {
+        let (jobs, quotas, total) = random_round(g);
+        let a = admit(&jobs, total, Some(&quotas));
+        let b = admit(&jobs, total, Some(&quotas));
+        prop_assert!(a.admitted == b.admitted, "nondeterministic admit");
+        prop_assert!(a.spilled == b.spilled, "nondeterministic spill");
+        Ok(())
+    });
+}
+
+/// Completed-job accounting never goes negative, end to end through both
+/// engines (homogeneous + heterogeneous run the same core loop).
+#[test]
+fn prop_sim_accounting_never_negative() {
+    use synergy::hetero::{HeteroSimConfig, HeteroSimulator};
+    use synergy::sim::{SimConfig, Simulator};
+    use synergy::trace::{generate, Split, TraceConfig};
+    use synergy::workload::TenantSpec;
+
+    check("sim accounting", 6, |g| {
+        let n_jobs = g.int(2, 12);
+        let jobs: Vec<synergy::job::Job> = generate(&TraceConfig {
+            n_jobs,
+            split: Split::new(30, 50, 20),
+            multi_gpu: false,
+            jobs_per_hour: if g.bool() { Some(6.0) } else { None },
+            seed: g.int(0, 1000) as u64,
+        })
+        .into_iter()
+        .enumerate()
+        .map(|(i, j)| j.with_tenant(TenantId((i % 2) as u32)))
+        .collect();
+        let quotas = TenantSpec::parse("a:2,b:1").unwrap().quotas();
+
+        let homo = Simulator::with_quotas(
+            SimConfig {
+                n_servers: 1,
+                policy: "srtf".into(),
+                mechanism: "tune".into(),
+                ..Default::default()
+            },
+            Some(quotas.clone()),
+        )
+        .run(jobs.clone());
+        let het = HeteroSimulator::with_quotas(
+            HeteroSimConfig {
+                policy: "srtf".into(),
+                mechanism: "het-tune".into(),
+                ..Default::default()
+            },
+            Some(quotas),
+        )
+        .run(jobs.clone());
+
+        prop_assert!(
+            homo.finished.len() == jobs.len(),
+            "homo lost jobs: {} of {}",
+            homo.finished.len(),
+            jobs.len()
+        );
+        prop_assert!(
+            het.finished.len() == jobs.len(),
+            "hetero lost jobs: {} of {}",
+            het.finished.len(),
+            jobs.len()
+        );
+        for f in homo.finished.iter().chain(het.finished.iter()) {
+            prop_assert!(
+                f.jct_s > 0.0 && f.jct_s.is_finite(),
+                "bad JCT {} for {:?}",
+                f.jct_s,
+                f.id
+            );
+            prop_assert!(
+                f.duration_prop_s > 0.0 && f.arrival_s >= 0.0,
+                "negative accounting for {:?}",
+                f.id
+            );
+        }
+        // Tenant stats partition the finished set.
+        let n_sum: usize = homo.tenant_stats().values().map(|s| s.n).sum();
+        prop_assert!(
+            n_sum == homo.finished.len(),
+            "tenant stats lose jobs: {n_sum}"
+        );
+        let n_sum: usize = het.tenant_stats().values().map(|s| s.n).sum();
+        prop_assert!(
+            n_sum == het.finished.len(),
+            "hetero tenant stats lose jobs: {n_sum}"
+        );
+        Ok(())
+    });
+}

@@ -1,0 +1,351 @@
+//! Deterministic scenario/property harness over the unified simulation
+//! core (ISSUE 2 acceptance):
+//!
+//! - a fixed-seed scenario matrix — {synthetic, philly_small.csv,
+//!   alibaba_small.csv} × {quotas off, on} × {homogeneous,
+//!   heterogeneous} — asserting repeated runs produce *identical*
+//!   metrics JSON, checked against golden files under `tests/golden/`;
+//! - cross-entry-point determinism: a single-type V100 heterogeneous
+//!   cluster reproduces the homogeneous engine's schedule bit-for-bit
+//!   (both are configurations of `sim::run_events`).
+//!
+//! Golden files bootstrap themselves: a missing golden is written on
+//! first run (and should be committed); set `UPDATE_GOLDENS=1` to
+//! regenerate after an intentional behaviour change. See
+//! `tests/golden/README.md` for how to add a scenario.
+
+use std::collections::BTreeMap;
+use synergy::hetero::{GpuGen, HeteroSimConfig, HeteroSimulator, TypeSpec};
+use synergy::job::{Job, TenantId};
+use synergy::metrics::{jains_index, JctStats};
+use synergy::sim::{SimConfig, Simulator};
+use synergy::trace::{Split, TraceConfig};
+use synergy::util::json::Json;
+use synergy::workload::{
+    AlibabaTraceConfig, AlibabaTraceSource, PhillyTraceConfig,
+    PhillyTraceSource, SyntheticSource, TenantQuotas, TenantSpec,
+    WorkloadSource,
+};
+
+fn fixture(name: &str) -> String {
+    format!("{}/tests/fixtures/{name}", env!("CARGO_MANIFEST_DIR"))
+}
+
+/// One cell of the scenario matrix.
+struct Scenario {
+    name: &'static str,
+    jobs: Vec<Job>,
+    quotas: Option<TenantQuotas>,
+    hetero: bool,
+}
+
+/// The workload third of the matrix: (tag, jobs, quotas-when-on).
+fn workloads() -> Vec<(&'static str, Vec<Job>, TenantQuotas)> {
+    let synthetic = {
+        let spec = TenantSpec::parse("a:2,b:1").unwrap();
+        let jobs = SyntheticSource::new(TraceConfig {
+            n_jobs: 24,
+            split: Split::new(30, 50, 20),
+            multi_gpu: false,
+            jobs_per_hour: Some(6.0),
+            seed: 42,
+        })
+        .with_tenants(spec.clone())
+        .drain_jobs();
+        ("synthetic", jobs, spec.quotas())
+    };
+    let philly = {
+        let mut src = PhillyTraceSource::new(PhillyTraceConfig {
+            path: fixture("philly_small.csv"),
+            ..PhillyTraceConfig::default()
+        })
+        .unwrap();
+        let names = src.tenant_names();
+        let quotas =
+            TenantSpec::parse("a:2,b:1").unwrap().quotas_for(&names);
+        ("philly_small", src.drain_jobs(), quotas)
+    };
+    let alibaba = {
+        let mut src = AlibabaTraceSource::new(AlibabaTraceConfig {
+            path: fixture("alibaba_small.csv"),
+            ..AlibabaTraceConfig::default()
+        })
+        .unwrap();
+        let names = src.tenant_names();
+        let quotas =
+            TenantSpec::parse("m_1:3").unwrap().quotas_for(&names);
+        ("alibaba_small", src.drain_jobs(), quotas)
+    };
+    vec![synthetic, philly, alibaba]
+}
+
+/// The full 3 × 2 × 2 matrix.
+fn matrix() -> Vec<Scenario> {
+    // Static names so goldens stay stable: <workload>_<quotas>_<engine>.
+    const NAMES: [[[&str; 2]; 2]; 3] = [
+        [
+            ["synthetic_plain_homo", "synthetic_plain_hetero"],
+            ["synthetic_quotas_homo", "synthetic_quotas_hetero"],
+        ],
+        [
+            ["philly_small_plain_homo", "philly_small_plain_hetero"],
+            ["philly_small_quotas_homo", "philly_small_quotas_hetero"],
+        ],
+        [
+            ["alibaba_small_plain_homo", "alibaba_small_plain_hetero"],
+            ["alibaba_small_quotas_homo", "alibaba_small_quotas_hetero"],
+        ],
+    ];
+    let mut out = Vec::new();
+    for (wi, (_, jobs, quotas)) in workloads().into_iter().enumerate() {
+        for (qi, q) in [None, Some(quotas)].into_iter().enumerate() {
+            for (hi, hetero) in [false, true].into_iter().enumerate() {
+                out.push(Scenario {
+                    name: NAMES[wi][qi][hi],
+                    jobs: jobs.clone(),
+                    quotas: q.clone(),
+                    hetero,
+                });
+            }
+        }
+    }
+    out
+}
+
+fn run_scenario(s: &Scenario) -> String {
+    let result_json = if s.hetero {
+        let sim = HeteroSimulator::with_quotas(
+            HeteroSimConfig {
+                types: vec![
+                    TypeSpec {
+                        gen: GpuGen::P100,
+                        spec: Default::default(),
+                        machines: 2,
+                    },
+                    TypeSpec {
+                        gen: GpuGen::V100,
+                        spec: Default::default(),
+                        machines: 2,
+                    },
+                ],
+                policy: "srtf".into(),
+                mechanism: "het-tune".into(),
+                ..Default::default()
+            },
+            s.quotas.clone(),
+        );
+        let r = sim.run(s.jobs.clone());
+        metrics_json(r.jct_stats(), r.tenant_stats(), r.makespan_s, r.rounds)
+    } else {
+        let sim = Simulator::with_quotas(
+            SimConfig {
+                n_servers: 4,
+                policy: "srtf".into(),
+                mechanism: "tune".into(),
+                ..Default::default()
+            },
+            s.quotas.clone(),
+        );
+        let r = sim.run(s.jobs.clone());
+        metrics_json(r.jct_stats(), r.tenant_stats(), r.makespan_s, r.rounds)
+    };
+    result_json
+}
+
+/// Canonical metrics document: JCT summary + Jain fairness over the
+/// per-tenant average JCTs. Values are rounded to 1 ms so the goldens
+/// are robust to libm ulp differences across hosts while still pinning
+/// the schedule.
+fn metrics_json(
+    stats: JctStats,
+    by_tenant: BTreeMap<TenantId, JctStats>,
+    makespan_s: f64,
+    rounds: usize,
+) -> String {
+    let r3 = |x: f64| (x * 1000.0).round() / 1000.0;
+    let tenant_avgs: Vec<f64> = by_tenant.values().map(|s| s.avg_s).collect();
+    let tenants: Vec<Json> = by_tenant
+        .iter()
+        .map(|(t, s)| {
+            Json::obj(vec![
+                ("tenant", Json::num(t.0 as f64)),
+                ("jobs", Json::num(s.n as f64)),
+                ("avg_jct_s", Json::num(r3(s.avg_s))),
+                ("p99_jct_s", Json::num(r3(s.p99_s))),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("jobs", Json::num(stats.n as f64)),
+        ("avg_jct_s", Json::num(r3(stats.avg_s))),
+        ("p50_jct_s", Json::num(r3(stats.p50_s))),
+        ("p99_jct_s", Json::num(r3(stats.p99_s))),
+        ("makespan_s", Json::num(r3(makespan_s))),
+        ("rounds", Json::num(rounds as f64)),
+        ("jain_fairness", Json::num(r3(jains_index(&tenant_avgs)))),
+        ("per_tenant", Json::arr(tenants)),
+    ])
+    .encode()
+}
+
+/// Compare `payload` against the checked-in golden, bootstrapping the
+/// file when absent (first toolchain run) or when `UPDATE_GOLDENS` is
+/// set.
+fn check_golden(name: &str, payload: &str) {
+    let dir = format!("{}/tests/golden", env!("CARGO_MANIFEST_DIR"));
+    let path = format!("{dir}/{name}.json");
+    let update = std::env::var("UPDATE_GOLDENS").is_ok();
+    if update || !std::path::Path::new(&path).exists() {
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(&path, format!("{payload}\n")).unwrap();
+        eprintln!("golden: wrote {path}");
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        want.trim(),
+        payload,
+        "golden mismatch for '{name}' — if the schedule change is \
+         intentional, rerun with UPDATE_GOLDENS=1 and commit the diff"
+    );
+}
+
+#[test]
+fn scenario_matrix_is_deterministic_and_matches_goldens() {
+    for s in matrix() {
+        let a = run_scenario(&s);
+        let b = run_scenario(&s);
+        assert_eq!(a, b, "scenario '{}' not deterministic across runs", s.name);
+        check_golden(s.name, &a);
+    }
+}
+
+#[test]
+fn hetero_single_v100_type_matches_homogeneous_engine_bitwise() {
+    // The strongest unification statement: on a heterogeneous "cluster"
+    // of one V100 type (compute scale 1.0 — the calibration basis), the
+    // heterogeneous engine must reproduce the homogeneous engine's
+    // schedule *bit for bit*: same core loop, same admission, same
+    // policy keys, same ground truth.
+    let spec = TenantSpec::parse("a:2,b:1").unwrap();
+    let jobs = SyntheticSource::new(TraceConfig {
+        n_jobs: 32,
+        split: Split::new(30, 50, 20),
+        multi_gpu: false,
+        jobs_per_hour: Some(8.0),
+        seed: 7,
+    })
+    .with_tenants(spec.clone())
+    .drain_jobs();
+
+    for (policy, with_quotas) in
+        [("fifo", false), ("srtf", false), ("srtf", true)]
+    {
+        let quotas = with_quotas.then(|| spec.quotas());
+        let homo = Simulator::with_quotas(
+            SimConfig {
+                n_servers: 2,
+                policy: policy.into(),
+                mechanism: "tune".into(),
+                ..Default::default()
+            },
+            quotas.clone(),
+        )
+        .run(jobs.clone());
+        let het = HeteroSimulator::with_quotas(
+            HeteroSimConfig {
+                types: vec![TypeSpec {
+                    gen: GpuGen::V100,
+                    spec: Default::default(),
+                    machines: 2,
+                }],
+                policy: policy.into(),
+                mechanism: "het-tune".into(),
+                ..Default::default()
+            },
+            quotas,
+        )
+        .run(jobs.clone());
+
+        assert_eq!(
+            homo.rounds, het.rounds,
+            "{policy}/quotas={with_quotas}: round counts diverge"
+        );
+        let homo_bits: Vec<(u64, u64)> = homo
+            .finished
+            .iter()
+            .map(|f| (f.id.0, f.jct_s.to_bits()))
+            .collect();
+        let het_bits: Vec<(u64, u64)> = het
+            .finished
+            .iter()
+            .map(|f| (f.id.0, f.jct_s.to_bits()))
+            .collect();
+        assert_eq!(
+            homo_bits, het_bits,
+            "{policy}/quotas={with_quotas}: single-V100 hetero must equal \
+             the homogeneous schedule bit-for-bit"
+        );
+    }
+}
+
+#[test]
+fn quota_toggle_changes_hetero_schedule_only_under_contention() {
+    // Sanity on the matrix's quota dimension: with one tenant absent the
+    // spill pass makes quotas a no-op (work conservation), while a
+    // contended two-tenant queue must actually be reshaped.
+    let jobs_single: Vec<Job> = SyntheticSource::new(TraceConfig {
+        n_jobs: 20,
+        split: Split::new(0, 100, 0),
+        multi_gpu: false,
+        jobs_per_hour: None,
+        seed: 11,
+    })
+    .drain_jobs();
+    let quotas = TenantSpec::parse("a:1,b:1").unwrap().quotas();
+    let cfg = || HeteroSimConfig {
+        types: vec![
+            TypeSpec {
+                gen: GpuGen::P100,
+                spec: Default::default(),
+                machines: 1,
+            },
+            TypeSpec {
+                gen: GpuGen::V100,
+                spec: Default::default(),
+                machines: 1,
+            },
+        ],
+        policy: "fifo".into(),
+        mechanism: "het-tune".into(),
+        ..Default::default()
+    };
+    let plain = HeteroSimulator::new(cfg()).run(jobs_single.clone());
+    let quoted = HeteroSimulator::with_quotas(cfg(), Some(quotas.clone()))
+        .run(jobs_single);
+    assert_eq!(
+        plain.jcts, quoted.jcts,
+        "idle-tenant quotas must be work-conserving on hetero too"
+    );
+
+    // Contended: interleave two tenants; quotas must change someone's JCT.
+    let jobs_two: Vec<Job> = SyntheticSource::new(TraceConfig {
+        n_jobs: 40,
+        split: Split::new(0, 100, 0),
+        multi_gpu: false,
+        jobs_per_hour: None,
+        seed: 11,
+    })
+    .drain_jobs()
+    .into_iter()
+    .enumerate()
+    .map(|(i, j)| j.with_tenant(TenantId(if i < 20 { 0 } else { 1 })))
+    .collect();
+    let plain = HeteroSimulator::new(cfg()).run(jobs_two.clone());
+    let quoted =
+        HeteroSimulator::with_quotas(cfg(), Some(quotas)).run(jobs_two);
+    assert_ne!(
+        plain.jcts, quoted.jcts,
+        "contended quotas must reshape the hetero schedule"
+    );
+}
