@@ -1,24 +1,26 @@
-//! Heterogeneous-cluster walkthrough (paper Appendix A.2).
+//! Heterogeneous-cluster walkthrough (paper Appendix A.2) — on the one
+//! type-generic stack: the same profiler, mechanisms and simulator that
+//! run the homogeneous examples, handed a two-generation fleet.
 //!
-//! Builds a two-generation cluster (P100 + V100), profiles a small mixed
-//! workload along the extra machine-type dimension, and shows how
-//! het-TUNE routes compute-bound jobs to fast GPUs while input-bound
-//! jobs — which cannot exploit them — keep the slower generation, then
-//! runs a full trace through the heterogeneous simulator.
+//! Builds a P100 + V100 fleet, profiles a small mixed workload along the
+//! machine-type dimension, and shows how TUNE's type assignment routes
+//! compute-bound jobs to fast GPUs while input-bound jobs — which cannot
+//! exploit them — keep the slower generation, then runs a full trace
+//! through the heterogeneous front-end of the shared simulator.
 //!
 //! Run with: `cargo run --release --example heterogeneous`
 
-use synergy::hetero::{
-    GpuGen, HetJobRequest, HetMechanism, HetTune, HeteroCluster,
-    HeteroProfiler, HeteroSimConfig, HeteroSimulator,
-};
+use synergy::cluster::{Fleet, GpuGen};
+use synergy::hetero::{HeteroSimConfig, HeteroSimulator};
 use synergy::job::{Job, JobId, ModelKind};
+use synergy::mechanism::{JobRequest, Mechanism, Tune};
+use synergy::profiler::{OptimisticProfiler, Sensitivity};
 use synergy::trace::{generate, Split, TraceConfig};
 
 fn main() {
     // --- 1. profile a job per machine type ---------------------------------
-    let cluster = HeteroCluster::two_tier(2);
-    let profiler = HeteroProfiler::noiseless(&cluster);
+    let fleet = Fleet::two_tier(2);
+    let profiler = OptimisticProfiler::noiseless_fleet(&fleet);
     println!("Per-type peak throughput (samples/s, 1 GPU):");
     println!("{:<16} {:>10} {:>10} {:>8}", "model", "p100", "v100", "gain");
     for model in [
@@ -41,8 +43,8 @@ fn main() {
     }
     println!();
 
-    // --- 2. one round of het-TUNE assignment --------------------------------
-    let mut cluster = HeteroCluster::two_tier(1);
+    // --- 2. one round of TUNE type assignment -------------------------------
+    let mut fleet = Fleet::two_tier(1);
     let jobs: Vec<Job> = [
         (0, ModelKind::Gnmt, 8),         // compute-bound -> fast type
         (1, ModelKind::ShuffleNetV2, 8), // input-bound   -> slow type
@@ -50,14 +52,14 @@ fn main() {
     .iter()
     .map(|&(id, m, g)| Job::new(JobId(id), m, g, 0.0, 3600.0))
     .collect();
-    let sens: Vec<_> = jobs.iter().map(|j| profiler.profile(j)).collect();
-    let reqs: Vec<HetJobRequest<'_>> = jobs
+    let sens: Vec<Sensitivity> = jobs.iter().map(|j| profiler.profile(j)).collect();
+    let reqs: Vec<JobRequest<'_>> = jobs
         .iter()
         .zip(&sens)
-        .map(|(j, s)| HetJobRequest { id: j.id, gpus: j.gpus, sens: s })
+        .map(|(j, s)| JobRequest { id: j.id, gpus: j.gpus, sens: s })
         .collect();
-    let grants = HetTune.allocate(&mut cluster, &reqs);
-    println!("het-TUNE type assignment:");
+    let grants = Tune::default().allocate(&mut fleet, &reqs);
+    println!("TUNE type assignment:");
     for j in &jobs {
         let g = &grants[&j.id];
         println!(
@@ -65,13 +67,13 @@ fn main() {
             j.model.name(),
             g.gen.name(),
             j.gpus,
-            g.grant.demand.cpus,
-            g.grant.demand.mem_gb
+            g.demand.cpus,
+            g.demand.mem_gb
         );
     }
     println!();
 
-    // --- 3. full trace through the heterogeneous simulator ------------------
+    // --- 3. full trace through the heterogeneous front-end ------------------
     let trace = generate(&TraceConfig {
         n_jobs: 120,
         split: Split::new(30, 50, 20),

@@ -13,13 +13,13 @@
 //! cargo run --release --example motivating_example
 //! ```
 
-use synergy::cluster::{Cluster, ServerSpec};
-use synergy::coordinator::{JobContext, RoundPlanner};
+use synergy::cluster::{Fleet, ServerSpec};
+use synergy::coordinator::RoundPlanner;
 use synergy::job::{Job, JobId, ModelKind};
 use synergy::mechanism::{by_name, Grant};
 use synergy::perf::PerfModel;
 use synergy::policy::Fifo;
-use synergy::profiler::OptimisticProfiler;
+use synergy::profiler::{OptimisticProfiler, Sensitivity};
 use std::collections::BTreeMap;
 
 // One epoch's worth of samples, for reporting epoch time like Fig 3.
@@ -33,7 +33,7 @@ fn epoch_samples(model: ModelKind) -> f64 {
 
 fn run_schedule(mechanism: &str) -> (BTreeMap<JobId, Grant>, Vec<(JobId, ModelKind, f64)>) {
     let spec = ServerSpec::default();
-    let mut cluster = Cluster::homogeneous(spec, 2);
+    let mut fleet = Fleet::homogeneous(spec, 2);
     let profiler = OptimisticProfiler::noiseless(spec);
     let world = PerfModel::new(spec);
 
@@ -47,16 +47,16 @@ fn run_schedule(mechanism: &str) -> (BTreeMap<JobId, Grant>, Vec<(JobId, ModelKi
     .map(|&(id, m)| Job::new(JobId(id), m, 4, 0.0, 3600.0))
     .collect();
 
-    let ctxs: Vec<JobContext> = jobs
+    let ctxs: Vec<Sensitivity> = jobs
         .iter()
-        .map(|j| JobContext::new(profiler.profile(j).matrix, &cluster))
+        .map(|j| profiler.profile(j))
         .collect();
-    let refs: Vec<(&Job, &JobContext)> = jobs.iter().zip(ctxs.iter()).collect();
+    let refs: Vec<(&Job, &Sensitivity)> = jobs.iter().zip(ctxs.iter()).collect();
     let planner = RoundPlanner::new(
         Box::new(Fifo),
         by_name(mechanism).expect("mechanism"),
     );
-    let plan = planner.plan(&mut cluster, &refs, 0.0);
+    let plan = planner.plan(&mut fleet, &refs, 0.0);
 
     let mut epochs = Vec::new();
     for j in &jobs {

@@ -52,6 +52,7 @@ pub fn run_sim_ref(
         span_factor: 1,
         network_penalty: 0.0,
         reference_spec,
+        types: None,
     });
     sim.run(jobs)
 }

@@ -2,13 +2,13 @@
 //! servers, GPU-proportional vs resource-sensitive, per-job epoch time and
 //! the average-JCT improvement (paper: ~1.5x).
 
-use synergy::cluster::{Cluster, ServerSpec};
-use synergy::coordinator::{JobContext, RoundPlanner};
+use synergy::cluster::{Fleet, ServerSpec};
+use synergy::coordinator::RoundPlanner;
 use synergy::job::{Job, JobId, ModelKind, Task};
 use synergy::mechanism::by_name;
 use synergy::perf::PerfModel;
 use synergy::policy::Fifo;
-use synergy::profiler::OptimisticProfiler;
+use synergy::profiler::{OptimisticProfiler, Sensitivity};
 use synergy::util::bench::{row, section};
 
 fn epoch_samples(task: Task) -> f64 {
@@ -36,16 +36,16 @@ fn main() {
     let mut avgs = Vec::new();
     for mech in ["proportional", "tune"] {
         section(&format!("Fig 3 / Table {}: {mech}", if mech == "tune" { 3 } else { 2 }));
-        let mut cluster = Cluster::homogeneous(spec, 2);
-        let ctxs: Vec<JobContext> = jobs
+        let mut fleet = Fleet::homogeneous(spec, 2);
+        let ctxs: Vec<Sensitivity> = jobs
             .iter()
-            .map(|j| JobContext::new(profiler.profile(j).matrix, &cluster))
+            .map(|j| profiler.profile(j))
             .collect();
-        let refs: Vec<(&Job, &JobContext)> =
+        let refs: Vec<(&Job, &Sensitivity)> =
             jobs.iter().zip(ctxs.iter()).collect();
         let planner =
             RoundPlanner::new(Box::new(Fifo), by_name(mech).unwrap());
-        let plan = planner.plan(&mut cluster, &refs, 0.0);
+        let plan = planner.plan(&mut fleet, &refs, 0.0);
         let mut total = 0.0;
         for j in &jobs {
             let g = &plan.grants[&j.id];

@@ -21,9 +21,10 @@ fn main() {
     section("Figure 5a: memory validation (ResNet18, 8 GPUs, 24 CPUs)");
     let job = Job::new(JobId(0), ModelKind::ResNet18, 8, 0.0, 3600.0);
     let out = profiler.profile(&job);
+    let matrix = out.primary();
     let mut worst: f64 = 0.0;
-    for &m in &out.matrix.mem_points {
-        let est = out.matrix.throughput_at(24.0, m);
+    for &m in &matrix.mem_points {
+        let est = matrix.throughput_at(24.0, m);
         let truth = world.throughput(ModelKind::ResNet18, 8, 24.0, m);
         if truth > 0.0 {
             let err = (est - truth).abs() / truth;
@@ -37,11 +38,12 @@ fn main() {
     section("Figure 5b: CPU validation (ResNet18, 1 GPU, full memory)");
     let job1 = Job::new(JobId(1), ModelKind::ResNet18, 1, 0.0, 3600.0);
     let out1 = profiler.profile(&job1);
-    let full_mem = *out1.matrix.mem_points.last().unwrap();
+    let matrix1 = out1.primary();
+    let full_mem = *matrix1.mem_points.last().unwrap();
     let t1 = world.throughput(ModelKind::ResNet18, 1, 1.0, 1000.0);
-    for &c in &out1.matrix.cpu_points {
+    for &c in &matrix1.cpu_points {
         // normalized runtime wrt 1 CPU (as the paper plots)
-        let est = t1 / out1.matrix.throughput_at(c, full_mem).max(1e-9);
+        let est = t1 / matrix1.throughput_at(c, full_mem).max(1e-9);
         let truth =
             t1 / world.throughput(ModelKind::ResNet18, 1, c, 1000.0);
         row("fig5b", "normalized_runtime", c, est, &format!("truth={truth:.3}"));

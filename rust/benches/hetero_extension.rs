@@ -1,13 +1,14 @@
-//! Appendix A.2 extension bench: heterogeneous GPU clusters.
+//! Appendix A.2 extension bench: heterogeneous GPU clusters through the
+//! one type-generic stack.
 //!
 //! The paper's appendix formulates Synergy for clusters with several GPU
 //! generations but does not evaluate it; this bench supplies the
 //! evaluation for our implementation:
 //!
-//! 1. **Static drain** — a mixed workload on a P100+V100 cluster:
-//!    het-TUNE (type-affine assignment + per-group Synergy-TUNE) vs the
-//!    type-blind proportional baseline, and the A.2.3 ILP upper bound on
-//!    one round's aggregate throughput.
+//! 1. **Static drain** — a mixed workload on a P100+V100 fleet: TUNE
+//!    (type-affine assignment + per-pool Synergy-TUNE) vs the type-blind
+//!    proportional baseline, and the A.2.3 ILP upper bound on one
+//!    round's aggregate throughput.
 //! 2. **Dynamic load sweep** — avg JCT vs arrival rate for both
 //!    mechanisms.
 //! 3. **Profiling-cost accounting** — the extra dimension's cost
@@ -16,15 +17,15 @@
 mod common;
 
 use common::dynamic_trace;
-use synergy::hetero::{
-    HetJobRequest, HetOpt, HetTune, HeteroCluster, HeteroProfiler,
-    HeteroSimConfig, HeteroSimulator, HetMechanism,
-};
+use synergy::cluster::Fleet;
+use synergy::hetero::{HeteroSimConfig, HeteroSimResult, HeteroSimulator};
 use synergy::job::Job;
+use synergy::mechanism::{JobRequest, Mechanism, Opt, Tune};
+use synergy::profiler::{OptimisticProfiler, Sensitivity};
 use synergy::trace::{generate, Split, TraceConfig};
 use synergy::util::bench::{row, section};
 
-fn run_het(mechanism: &str, jobs: Vec<Job>) -> synergy::hetero::sim::HeteroSimResult {
+fn run_het(mechanism: &str, jobs: Vec<Job>) -> HeteroSimResult {
     HeteroSimulator::new(HeteroSimConfig {
         mechanism: mechanism.into(),
         policy: "srtf".into(),
@@ -67,9 +68,9 @@ fn main() {
     }
 
     // --- 3. one-round ILP upper bound ----------------------------------------
-    section("Hetero A.2.3: ILP upper bound vs het-TUNE (one round)");
-    let mut cluster = HeteroCluster::two_tier(4);
-    let profiler = HeteroProfiler::noiseless(&cluster);
+    section("Hetero A.2.3: ILP upper bound vs TUNE (one round)");
+    let mut fleet = Fleet::two_tier(4);
+    let profiler = OptimisticProfiler::noiseless_fleet(&fleet);
     let round_jobs = generate(&TraceConfig {
         n_jobs: 14,
         split: Split::new(40, 40, 20),
@@ -77,17 +78,18 @@ fn main() {
         jobs_per_hour: None,
         seed: 5,
     });
-    let sens: Vec<_> = round_jobs.iter().map(|j| profiler.profile(j)).collect();
-    let reqs: Vec<HetJobRequest<'_>> = round_jobs
+    let sens: Vec<Sensitivity> =
+        round_jobs.iter().map(|j| profiler.profile(j)).collect();
+    let reqs: Vec<JobRequest<'_>> = round_jobs
         .iter()
         .zip(&sens)
-        .map(|(j, s)| HetJobRequest { id: j.id, gpus: j.gpus, sens: s })
+        .map(|(j, s)| JobRequest { id: j.id, gpus: j.gpus, sens: s })
         .collect();
     let t0 = std::time::Instant::now();
-    let opt = HetOpt.solve_allocation(&cluster, &reqs).expect("ilp");
+    let opt = Opt::default().solve_allocation(&fleet, &reqs).expect("ilp");
     let opt_ms = t0.elapsed().as_secs_f64() * 1e3;
     let t0 = std::time::Instant::now();
-    let grants = HetTune.allocate(&mut cluster, &reqs);
+    let grants = Tune::default().allocate(&mut fleet, &reqs);
     let tune_ms = t0.elapsed().as_secs_f64() * 1e3;
     let tune_tput: f64 = round_jobs
         .iter()
@@ -96,14 +98,14 @@ fn main() {
             grants.get(&j.id).map(|g| {
                 s.matrix(g.gen)
                     .unwrap()
-                    .throughput_at(g.grant.demand.cpus, g.grant.demand.mem_gb)
+                    .throughput_at(g.demand.cpus, g.demand.mem_gb)
             })
         })
         .sum();
     row("hetero/opt", "ilp-objective", opt.objective, opt_ms, "tput / ms");
-    row("hetero/opt", "het-tune", tune_tput, tune_ms, "tput / ms");
+    row("hetero/opt", "tune", tune_tput, tune_ms, "tput / ms");
     println!(
-        "  het-tune achieves {:.1}% of the ILP bound ({} ILP vars)",
+        "  tune achieves {:.1}% of the ILP bound ({} ILP vars)",
         100.0 * tune_tput / opt.objective,
         opt.n_vars
     );

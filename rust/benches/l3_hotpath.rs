@@ -4,10 +4,10 @@
 //! Targets (DESIGN.md §8): TUNE round < 1 s at 512 GPUs; profiler < 5 ms
 //! per job; simulator >= 2k scheduled rounds/s on a 128-GPU trace.
 
-use synergy::cluster::{Cluster, ServerSpec};
-use synergy::job::{DemandVector, Job, JobId};
+use synergy::cluster::{Fleet, ServerSpec};
+use synergy::job::{Job, JobId};
 use synergy::mechanism::{JobRequest, Mechanism, Proportional, Tune};
-use synergy::profiler::{OptimisticProfiler, SensitivityMatrix};
+use synergy::profiler::{OptimisticProfiler, Sensitivity};
 use synergy::sim::{SimConfig, Simulator};
 use synergy::trace::{generate, TraceConfig, SPLIT_DEFAULT};
 use synergy::util::bench::{section, Bench};
@@ -31,26 +31,20 @@ fn main() {
         jobs_per_hour: None,
         seed: 42,
     });
-    let matrices: Vec<SensitivityMatrix> =
-        jobs.iter().map(|j| profiler.profile(j).matrix).collect();
+    let sens: Vec<Sensitivity> =
+        jobs.iter().map(|j| profiler.profile(j)).collect();
     let requests: Vec<JobRequest> = jobs
         .iter()
-        .zip(matrices.iter())
-        .map(|(j, m)| JobRequest {
-            id: j.id,
-            gpus: j.gpus,
-            best: m.best_demand(),
-            prop: DemandVector::proportional(j.gpus, 3.0, 62.5),
-            matrix: m,
-        })
+        .zip(sens.iter())
+        .map(|(j, s)| JobRequest { id: j.id, gpus: j.gpus, sens: s })
         .collect();
     Bench::default().iter("tune/512_jobs_64_servers", || {
-        let mut cluster = Cluster::homogeneous(spec, 64);
-        Tune::default().allocate(&mut cluster, &requests)
+        let mut fleet = Fleet::homogeneous(spec, 64);
+        Tune::default().allocate(&mut fleet, &requests)
     });
     Bench::default().iter("proportional/512_jobs_64_servers", || {
-        let mut cluster = Cluster::homogeneous(spec, 64);
-        Proportional.allocate(&mut cluster, &requests)
+        let mut fleet = Fleet::homogeneous(spec, 64);
+        Proportional.allocate(&mut fleet, &requests)
     });
 
     section("L3 hot path: end-to-end simulation (128 GPUs, 300 jobs)");

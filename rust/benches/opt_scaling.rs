@@ -6,26 +6,20 @@
 //! throughput is within 10% of OPT and ~200x faster to compute at
 //! 128 GPUs.
 
-use synergy::cluster::{Cluster, ServerSpec};
-use synergy::job::{DemandVector, Job};
+use synergy::cluster::{Fleet, ServerSpec};
+use synergy::job::Job;
 use synergy::mechanism::{JobRequest, Mechanism, Opt, Tune};
-use synergy::profiler::{OptimisticProfiler, SensitivityMatrix};
+use synergy::profiler::{OptimisticProfiler, Sensitivity};
 use synergy::trace::{generate, TraceConfig, SPLIT_DEFAULT};
 use synergy::util::bench::{row, section, Bench};
 
 fn build_requests<'a>(
     jobs: &'a [Job],
-    matrices: &'a [SensitivityMatrix],
+    sens: &'a [Sensitivity],
 ) -> Vec<JobRequest<'a>> {
     jobs.iter()
-        .zip(matrices.iter())
-        .map(|(j, m)| JobRequest {
-            id: j.id,
-            gpus: j.gpus,
-            best: m.best_demand(),
-            prop: DemandVector::proportional(j.gpus, 3.0, 62.5),
-            matrix: m,
-        })
+        .zip(sens.iter())
+        .map(|(j, s)| JobRequest { id: j.id, gpus: j.gpus, sens: s })
         .collect()
 }
 
@@ -47,11 +41,9 @@ fn main() {
             jobs_per_hour: None,
             seed: 77,
         });
-        let matrices: Vec<SensitivityMatrix> = jobs
-            .iter()
-            .map(|j| profiler.profile(j).matrix)
-            .collect();
-        let requests = build_requests(&jobs, &matrices);
+        let sens: Vec<Sensitivity> =
+            jobs.iter().map(|j| profiler.profile(j)).collect();
+        let requests = build_requests(&jobs, &sens);
 
         let bench = Bench {
             warmup_iters: 1,
@@ -61,8 +53,8 @@ fn main() {
         };
         let opt = Opt::default();
         let tune_t = bench.iter(&format!("tune/{n_gpus}gpus"), || {
-            let mut cluster = Cluster::homogeneous(spec, n_servers);
-            Tune::default().allocate(&mut cluster, &requests)
+            let mut fleet = Fleet::homogeneous(spec, n_servers);
+            Tune::default().allocate(&mut fleet, &requests)
         });
         let opt_t = bench.iter(
             &format!(
@@ -70,8 +62,8 @@ fn main() {
                 if opt.relax_only { "-relaxed" } else { "" }
             ),
             || {
-                let cluster = Cluster::homogeneous(spec, n_servers);
-                opt.solve_allocation(&cluster, &requests)
+                let fleet = Fleet::homogeneous(spec, n_servers);
+                opt.solve_allocation(&fleet, &requests)
             },
         );
         row(
@@ -86,15 +78,20 @@ fn main() {
         );
 
         // Quality: TUNE aggregate throughput vs OPT objective.
-        let mut cluster = Cluster::homogeneous(spec, n_servers);
-        let grants = Tune::default().allocate(&mut cluster, &requests);
+        let mut fleet = Fleet::homogeneous(spec, n_servers);
+        let grants = Tune::default().allocate(&mut fleet, &requests);
         let tune_tput: f64 = requests
             .iter()
             .filter_map(|r| grants.get(&r.id).map(|g| (r, g)))
-            .map(|(r, g)| r.matrix.throughput_at(g.demand.cpus, g.demand.mem_gb))
+            .map(|(r, g)| {
+                r.sens
+                    .matrix(g.gen)
+                    .unwrap()
+                    .throughput_at(g.demand.cpus, g.demand.mem_gb)
+            })
             .sum();
-        let cluster2 = Cluster::homogeneous(spec, n_servers);
-        if let Some(alloc) = opt.solve_allocation(&cluster2, &requests) {
+        let fleet2 = Fleet::homogeneous(spec, n_servers);
+        if let Some(alloc) = opt.solve_allocation(&fleet2, &requests) {
             row(
                 "opt_quality",
                 "tune_over_opt_tput",

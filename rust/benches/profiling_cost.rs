@@ -37,13 +37,14 @@ fn main() {
 
         // Fig-5 fidelity: worst relative error of the estimate vs truth
         // across the whole grid.
+        let matrix = out.primary();
         let mut worst: f64 = 0.0;
-        for (ci, &c) in out.matrix.cpu_points.iter().enumerate() {
-            for (mi, &m) in out.matrix.mem_points.iter().enumerate() {
+        for (ci, &c) in matrix.cpu_points.iter().enumerate() {
+            for (mi, &m) in matrix.mem_points.iter().enumerate() {
                 let truth = world.throughput(model, 1, c, m);
                 if truth > 0.0 {
                     worst = worst
-                        .max((out.matrix.tput[ci][mi] - truth).abs() / truth);
+                        .max((matrix.tput[ci][mi] - truth).abs() / truth);
                 }
             }
         }

@@ -1,0 +1,264 @@
+//! The fleet: the canonical, type-generic cluster representation.
+//!
+//! A [`Fleet`] is a set of disjoint *type pools*, one per GPU generation
+//! present (paper A.2.1): pool `i` is `s_i` identical machines of
+//! generation `i`, modeled as one [`Cluster`] so the per-pool
+//! free-capacity indices (and all allocation invariants, consistency
+//! checks and proportional shares) carry over — a mechanism scanning for
+//! a best-fit server of one type stays O(servers-of-that-type). The
+//! paper's per-round constraint that a job never spans two types
+//! (A.2.2) is enforced by construction: placements live inside a single
+//! pool's `Cluster`.
+//!
+//! Heterogeneity is *data*, not a code path: the paper's homogeneous
+//! testbed (§2.3) is the one-pool special case ([`Fleet::homogeneous`]),
+//! and every scheduler layer — profiler, mechanisms, simulator,
+//! coordinator — operates on `Fleet` regardless of how many pools it
+//! holds.
+
+use super::gen::GpuGen;
+use super::{Cluster, ServerSpec};
+use crate::job::JobId;
+
+/// Specification of one machine type: generation + per-machine resources
+/// + machine count (`s_i`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TypeSpec {
+    pub gen: GpuGen,
+    pub spec: ServerSpec,
+    pub machines: usize,
+}
+
+/// One homogeneous pool inside a fleet.
+#[derive(Debug, Clone)]
+pub struct TypePool {
+    pub gen: GpuGen,
+    pub cluster: Cluster,
+}
+
+/// A fleet: disjoint homogeneous type pools.
+#[derive(Debug, Clone)]
+pub struct Fleet {
+    pub pools: Vec<TypePool>,
+}
+
+impl Fleet {
+    /// Build from type specifications. Types must be distinct.
+    pub fn new(types: &[TypeSpec]) -> Fleet {
+        for (i, a) in types.iter().enumerate() {
+            for b in &types[i + 1..] {
+                assert_ne!(a.gen, b.gen, "duplicate machine type {:?}", a.gen);
+            }
+        }
+        Fleet {
+            pools: types
+                .iter()
+                .map(|t| TypePool {
+                    gen: t.gen,
+                    cluster: Cluster::homogeneous_of(t.gen, t.spec, t.machines),
+                })
+                .collect(),
+        }
+    }
+
+    /// The one-type special case: `n` identical V100 machines (the
+    /// paper's homogeneous cluster, §2.3).
+    pub fn homogeneous(spec: ServerSpec, n: usize) -> Fleet {
+        Fleet {
+            pools: vec![TypePool {
+                gen: GpuGen::default(),
+                cluster: Cluster::homogeneous(spec, n),
+            }],
+        }
+    }
+
+    /// One-type V100 fleet over an explicit set of server ids (the
+    /// deploy leader plans each round over only the workers currently
+    /// alive, so placements keep addressing workers by stable id).
+    pub fn with_server_ids(spec: ServerSpec, ids: &[usize]) -> Fleet {
+        Fleet {
+            pools: vec![TypePool {
+                gen: GpuGen::default(),
+                cluster: Cluster::with_server_ids(spec, ids),
+            }],
+        }
+    }
+
+    /// The standard two-type evaluation fleet: half V100 machines, half
+    /// P100 machines of the paper's server shape.
+    pub fn two_tier(machines_per_type: usize) -> Fleet {
+        let spec = ServerSpec::default();
+        Fleet::new(&[
+            TypeSpec { gen: GpuGen::P100, spec, machines: machines_per_type },
+            TypeSpec { gen: GpuGen::V100, spec, machines: machines_per_type },
+        ])
+    }
+
+    /// Number of distinct machine types (`|K|`).
+    pub fn n_types(&self) -> usize {
+        self.pools.len()
+    }
+
+    /// Whether this fleet is the homogeneous special case.
+    pub fn is_single_type(&self) -> bool {
+        self.pools.len() == 1
+    }
+
+    pub fn gens(&self) -> Vec<GpuGen> {
+        self.pools.iter().map(|p| p.gen).collect()
+    }
+
+    pub fn pool(&self, gen: GpuGen) -> Option<&TypePool> {
+        self.pools.iter().find(|p| p.gen == gen)
+    }
+
+    pub fn pool_mut(&mut self, gen: GpuGen) -> Option<&mut TypePool> {
+        self.pools.iter_mut().find(|p| p.gen == gen)
+    }
+
+    /// Total GPUs across all types (`G`, A.2.1).
+    pub fn total_gpus(&self) -> u32 {
+        self.pools.iter().map(|p| p.cluster.total_gpus()).sum()
+    }
+
+    pub fn free_gpus(&self) -> u32 {
+        self.pools.iter().map(|p| p.cluster.free_gpus()).sum()
+    }
+
+    pub fn total_cpus(&self) -> f64 {
+        self.pools.iter().map(|p| p.cluster.total_cpus()).sum()
+    }
+
+    pub fn free_cpus(&self) -> f64 {
+        self.pools.iter().map(|p| p.cluster.free_cpus()).sum()
+    }
+
+    pub fn total_mem_gb(&self) -> f64 {
+        self.pools.iter().map(|p| p.cluster.total_mem_gb()).sum()
+    }
+
+    pub fn free_mem_gb(&self) -> f64 {
+        self.pools.iter().map(|p| p.cluster.free_mem_gb()).sum()
+    }
+
+    /// GPUs of the largest single pool — the gang-fit bound (A.2.2: a
+    /// job never spans two types in a round).
+    pub fn max_pool_gpus(&self) -> u32 {
+        self.pools
+            .iter()
+            .map(|p| p.cluster.total_gpus())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Which pool hosts `job`, if placed.
+    pub fn host_gen(&self, job: JobId) -> Option<GpuGen> {
+        self.pools
+            .iter()
+            .find(|p| p.cluster.placement(job).is_some())
+            .map(|p| p.gen)
+    }
+
+    /// Evict every placement in every pool (round reset, §3.2).
+    pub fn evict_all(&mut self) {
+        for p in &mut self.pools {
+            p.cluster.evict_all();
+        }
+    }
+
+    /// Aggregate GPU utilization in [0, 1].
+    pub fn gpu_utilization(&self) -> f64 {
+        1.0 - self.free_gpus() as f64 / self.total_gpus() as f64
+    }
+
+    /// Aggregate CPU allocation fraction in [0, 1].
+    pub fn cpu_utilization(&self) -> f64 {
+        1.0 - self.free_cpus() / self.total_cpus()
+    }
+
+    /// Consistency check across every pool.
+    pub fn check_consistency(&self) -> Result<(), String> {
+        for p in &self.pools {
+            p.cluster
+                .check_consistency()
+                .map_err(|e| format!("{:?}: {e}", p.gen))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Placement, Share};
+
+    #[test]
+    fn two_tier_capacity() {
+        let f = Fleet::two_tier(2);
+        assert_eq!(f.pools.len(), 2);
+        assert_eq!(f.total_gpus(), 32);
+        assert_eq!(f.total_cpus(), 96.0);
+        assert_eq!(f.free_gpus(), 32);
+        assert_eq!(f.max_pool_gpus(), 16);
+        assert!(!f.is_single_type());
+        assert!(f.check_consistency().is_ok());
+    }
+
+    #[test]
+    fn homogeneous_is_one_v100_pool() {
+        let f = Fleet::homogeneous(ServerSpec::default(), 4);
+        assert!(f.is_single_type());
+        assert_eq!(f.gens(), vec![GpuGen::V100]);
+        assert_eq!(f.total_gpus(), 32);
+        assert_eq!(f.max_pool_gpus(), 32);
+        assert_eq!(f.pools[0].cluster.gen, GpuGen::V100);
+        for s in &f.pools[0].cluster.servers {
+            assert_eq!(s.gen, GpuGen::V100);
+        }
+    }
+
+    #[test]
+    fn pools_are_independent() {
+        let mut f = Fleet::two_tier(1);
+        let share = Share { gpus: 4, cpus: 12.0, mem_gb: 250.0 };
+        f.pool_mut(GpuGen::V100)
+            .unwrap()
+            .cluster
+            .place(JobId(1), Placement::single(0, share));
+        assert_eq!(f.host_gen(JobId(1)), Some(GpuGen::V100));
+        assert_eq!(f.pool(GpuGen::P100).unwrap().cluster.free_gpus(), 8);
+        assert_eq!(f.free_gpus(), 12);
+        f.evict_all();
+        assert_eq!(f.free_gpus(), 16);
+        assert_eq!(f.host_gen(JobId(1)), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate machine type")]
+    fn duplicate_types_panic() {
+        let spec = ServerSpec::default();
+        Fleet::new(&[
+            TypeSpec { gen: GpuGen::V100, spec, machines: 1 },
+            TypeSpec { gen: GpuGen::V100, spec, machines: 1 },
+        ]);
+    }
+
+    #[test]
+    fn utilization_tracks_placements() {
+        let mut f = Fleet::two_tier(1);
+        assert_eq!(f.gpu_utilization(), 0.0);
+        f.pool_mut(GpuGen::P100).unwrap().cluster.place(
+            JobId(2),
+            Placement::single(0, Share { gpus: 8, cpus: 24.0, mem_gb: 500.0 }),
+        );
+        assert_eq!(f.gpu_utilization(), 0.5);
+    }
+
+    #[test]
+    fn sparse_ids_build_a_single_v100_pool() {
+        let f = Fleet::with_server_ids(ServerSpec::default(), &[0, 2, 5]);
+        assert!(f.is_single_type());
+        assert_eq!(f.total_gpus(), 24);
+        assert_eq!(f.pools[0].cluster.server(5).free_gpus, 8);
+    }
+}

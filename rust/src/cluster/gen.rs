@@ -1,17 +1,20 @@
 //! GPU generations and their compute scaling.
 //!
-//! The paper's heterogeneous extension treats each GPU generation as a
-//! machine *type* (A.2.1: "K: the set of different types of machines").
-//! Only the GPU stage of the input pipeline changes across generations —
-//! host-side pre-processing (CPU) and storage fetch are unchanged — so a
-//! generation is characterized by a multiplicative factor on the model's
-//! single-GPU compute throughput.
+//! Machine *type* is first-class data in the cluster model (paper A.2.1:
+//! "K: the set of different types of machines"): every server carries a
+//! [`GpuGen`], and a mixed-generation fleet is just a cluster whose
+//! pools differ in it. Only the GPU stage of the input pipeline changes
+//! across generations — host-side pre-processing (CPU) and storage fetch
+//! are unchanged — so a generation is characterized by a multiplicative
+//! factor on the model's single-GPU compute throughput.
 //!
 //! The factors are calibrated from the public cross-generation speedups
 //! used by heterogeneity-aware schedulers (Gavel [44], Gandiva-Fair
 //! [12]): roughly K80 : P100 : V100 : A100 ≈ 0.25 : 0.55 : 1 : 2, with
 //! language models (dense matmul, tensor-core friendly) gaining more
-//! from newer generations than input-bound vision models.
+//! from newer generations than input-bound vision models. V100 is the
+//! calibration basis (scale 1) — the paper's homogeneous testbed is the
+//! one-type special case of this representation.
 
 use crate::job::Task;
 
@@ -27,6 +30,13 @@ pub enum GpuGen {
 /// All generations, slowest first.
 pub const ALL_GENS: [GpuGen; 4] =
     [GpuGen::K80, GpuGen::P100, GpuGen::V100, GpuGen::A100];
+
+impl Default for GpuGen {
+    /// The calibration basis (the paper's 8×V100 testbed, §5.1).
+    fn default() -> Self {
+        GpuGen::V100
+    }
+}
 
 impl GpuGen {
     pub fn name(&self) -> &'static str {
@@ -65,7 +75,20 @@ impl GpuGen {
         }
     }
 
-    /// Slowest-generation helper for the fairness oracle.
+    /// Per-generation salt for the profiler's measurement-noise stream:
+    /// distinct types observe independent noise for the same job. V100
+    /// salts to 0 so a one-type V100 fleet reproduces the pre-unification
+    /// homogeneous profiler's noise stream bit-for-bit.
+    pub fn seed_salt(&self) -> u64 {
+        match self {
+            GpuGen::V100 => 0,
+            GpuGen::K80 => 0x4B80,
+            GpuGen::P100 => 0xB100,
+            GpuGen::A100 => 0xA100,
+        }
+    }
+
+    /// Slowest-generation helper for the fairness oracle (A.2.2).
     pub fn slowest(gens: &[GpuGen]) -> GpuGen {
         *gens
             .iter()
@@ -105,6 +128,18 @@ mod tests {
     fn v100_is_the_calibration_basis() {
         for task in [Task::Image, Task::Language, Task::Speech] {
             assert_eq!(GpuGen::V100.compute_scale(task), 1.0);
+        }
+        assert_eq!(GpuGen::default(), GpuGen::V100);
+        assert_eq!(GpuGen::V100.seed_salt(), 0);
+    }
+
+    #[test]
+    fn seed_salts_are_distinct() {
+        let salts: Vec<u64> = ALL_GENS.iter().map(|g| g.seed_salt()).collect();
+        for (i, a) in salts.iter().enumerate() {
+            for b in &salts[i + 1..] {
+                assert_ne!(a, b);
+            }
         }
     }
 

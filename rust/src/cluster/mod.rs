@@ -1,12 +1,25 @@
-//! Cluster and server abstractions: multi-dimensional resource bookkeeping.
+//! Cluster and server abstractions: multi-dimensional, type-aware
+//! resource bookkeeping.
 //!
-//! A [`Cluster`] is a homogeneous set of [`Server`]s (paper §2.3), each
-//! with integral GPUs, integral CPU cores, and memory in GB. Allocation and
-//! release maintain the invariant `0 <= free <= capacity` in every
-//! dimension; violations are bugs and panic in debug builds.
+//! The canonical cluster representation is the [`Fleet`] (paper A.2.1):
+//! disjoint pools of identical servers, one pool per GPU generation
+//! ([`GpuGen`]) present. Every [`Server`] carries its generation; the
+//! paper's homogeneous testbed (§2.3) is the one-pool special case
+//! ([`Fleet::homogeneous`]), not a separate code path.
+//!
+//! A [`Cluster`] is one such pool — a homogeneous set of [`Server`]s,
+//! each with integral GPUs, integral CPU cores, and memory in GB. It is
+//! the per-type free-capacity index the mechanisms scan (best-fit stays
+//! O(servers-of-type), §4.2). Allocation and release maintain the
+//! invariant `0 <= free <= capacity` in every dimension; violations are
+//! bugs and panic in debug builds.
 
+mod fleet;
+mod gen;
 mod server;
 
+pub use fleet::{Fleet, TypePool, TypeSpec};
+pub use gen::{GpuGen, ALL_GENS};
 pub use server::{Server, ServerSpec};
 
 use crate::job::JobId;
@@ -65,20 +78,30 @@ impl Placement {
     }
 }
 
-/// Homogeneous cluster state: servers plus the placement of running jobs.
+/// One homogeneous pool: servers of a single generation plus the
+/// placement of running jobs.
 #[derive(Debug, Clone)]
 pub struct Cluster {
+    /// GPU generation of every server in this pool.
+    pub gen: GpuGen,
     pub spec: ServerSpec,
     pub servers: Vec<Server>,
     placements: BTreeMap<JobId, Placement>,
 }
 
 impl Cluster {
-    /// Build a homogeneous cluster of `n` servers.
+    /// Build a homogeneous cluster of `n` V100 servers (the calibration
+    /// basis — the paper's testbed shape).
     pub fn homogeneous(spec: ServerSpec, n: usize) -> Cluster {
+        Cluster::homogeneous_of(GpuGen::default(), spec, n)
+    }
+
+    /// Build a homogeneous pool of `n` servers of generation `gen`.
+    pub fn homogeneous_of(gen: GpuGen, spec: ServerSpec, n: usize) -> Cluster {
         Cluster {
+            gen,
             spec,
-            servers: (0..n).map(|id| Server::new(id, spec)).collect(),
+            servers: (0..n).map(|id| Server::of(gen, id, spec)).collect(),
             placements: BTreeMap::new(),
         }
     }
@@ -88,9 +111,11 @@ impl Cluster {
     /// placements keep addressing workers by their stable id across
     /// failures).
     pub fn with_server_ids(spec: ServerSpec, ids: &[usize]) -> Cluster {
+        let gen = GpuGen::default();
         Cluster {
+            gen,
             spec,
-            servers: ids.iter().map(|&id| Server::new(id, spec)).collect(),
+            servers: ids.iter().map(|&id| Server::of(gen, id, spec)).collect(),
             placements: BTreeMap::new(),
         }
     }

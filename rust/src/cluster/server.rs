@@ -1,5 +1,6 @@
-//! A single server: fixed capacity plus free-resource counters.
+//! A single server: generation, fixed capacity, free-resource counters.
 
+use super::gen::GpuGen;
 use super::Share;
 
 /// Hardware shape of one server (homogeneous across the cluster, §2.3).
@@ -30,10 +31,13 @@ impl ServerSpec {
     }
 }
 
-/// Mutable per-server free-resource state.
+/// Mutable per-server free-resource state. Every server carries its GPU
+/// generation — heterogeneity is data on the server, not a separate
+/// cluster type.
 #[derive(Debug, Clone)]
 pub struct Server {
     pub id: usize,
+    pub gen: GpuGen,
     pub spec: ServerSpec,
     pub free_gpus: u32,
     pub free_cpus: f64,
@@ -41,9 +45,16 @@ pub struct Server {
 }
 
 impl Server {
+    /// A V100 server (the calibration basis).
     pub fn new(id: usize, spec: ServerSpec) -> Server {
+        Server::of(GpuGen::default(), id, spec)
+    }
+
+    /// A server of an explicit generation.
+    pub fn of(gen: GpuGen, id: usize, spec: ServerSpec) -> Server {
         Server {
             id,
+            gen,
             spec,
             free_gpus: spec.gpus,
             free_cpus: spec.cpus as f64,

@@ -8,10 +8,14 @@
 //! generator runs (`n_jobs`/`split`/`seed`/...); with `"trace":
 //! "path.csv"` plus `"format": "philly" | "alibaba"` the file readers
 //! from [`crate::workload`] are used, and `"tenants": "a:2,b:1"` turns
-//! on weighted-quota admission either way. [`ExperimentConfig::to_json`]
-//! round-trips everything [`ExperimentConfig::from_json`] reads.
+//! on weighted-quota admission either way. A `"hetero"` section —
+//! `[{"gen": "p100", "machines": 8}, ...]` — describes a mixed-
+//! generation fleet (paper A.2) sharing the global server shape; with
+//! it absent the run is the homogeneous one-type special case.
+//! [`ExperimentConfig::to_json`] round-trips everything
+//! [`ExperimentConfig::from_json`] reads.
 
-use crate::cluster::ServerSpec;
+use crate::cluster::{GpuGen, ServerSpec, TypeSpec};
 use crate::job::Job;
 use crate::trace::{Split, TraceConfig};
 use crate::util::json::Json;
@@ -39,6 +43,17 @@ pub struct ExperimentConfig {
     /// Tenant weights (`tenants` JSON key, `name:weight,...` syntax);
     /// `None` = single-tenant, no quota admission.
     pub tenants: Option<TenantSpec>,
+    /// Mixed-fleet description (`hetero` JSON key): machine types +
+    /// counts per type, all sharing `spec`'s server shape. Empty =
+    /// homogeneous (`n_servers` V100 machines).
+    pub hetero: Vec<HeteroType>,
+}
+
+/// One machine type of a config-described mixed fleet.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HeteroType {
+    pub gen: GpuGen,
+    pub machines: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -55,6 +70,7 @@ impl Default for ExperimentConfig {
             trace_path: None,
             trace_format: "philly".into(),
             tenants: None,
+            hetero: Vec::new(),
         }
     }
 }
@@ -91,7 +107,41 @@ impl ExperimentConfig {
                 self.trace_format
             ));
         }
+        for (i, t) in self.hetero.iter().enumerate() {
+            if t.machines == 0 {
+                return Err(format!(
+                    "hetero[{i}]: machines must be positive"
+                ));
+            }
+            for u in &self.hetero[i + 1..] {
+                if t.gen == u.gen {
+                    return Err(format!(
+                        "hetero: duplicate machine type '{}'",
+                        t.gen.name()
+                    ));
+                }
+            }
+        }
         Ok(())
+    }
+
+    /// The fleet description this config drives: `Some` per-type specs
+    /// when a `hetero` section is present, `None` for the homogeneous
+    /// `n_servers × spec` special case.
+    pub fn types(&self) -> Option<Vec<TypeSpec>> {
+        if self.hetero.is_empty() {
+            return None;
+        }
+        Some(
+            self.hetero
+                .iter()
+                .map(|t| TypeSpec {
+                    gen: t.gen,
+                    spec: self.spec,
+                    machines: t.machines,
+                })
+                .collect(),
+        )
     }
 
     /// Parse from a JSON document (missing keys take defaults).
@@ -161,6 +211,24 @@ impl ExperimentConfig {
             cfg.tenants =
                 Some(TenantSpec::parse(s).map_err(|e| format!("tenants: {e}"))?);
         }
+        if let Some(arr) = doc.get("hetero").as_arr() {
+            let mut types = Vec::with_capacity(arr.len());
+            for (i, entry) in arr.iter().enumerate() {
+                let gen_name = entry
+                    .get("gen")
+                    .as_str()
+                    .ok_or_else(|| format!("hetero[{i}]: missing 'gen'"))?;
+                let gen = GpuGen::by_name(gen_name).ok_or_else(|| {
+                    format!("hetero[{i}]: unknown generation '{gen_name}'")
+                })?;
+                let machines = entry
+                    .get("machines")
+                    .as_usize()
+                    .ok_or_else(|| format!("hetero[{i}]: missing 'machines'"))?;
+                types.push(HeteroType { gen, machines });
+            }
+            cfg.hetero = types;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -203,6 +271,22 @@ impl ExperimentConfig {
         }
         if let Some(spec) = &self.tenants {
             pairs.push(("tenants", Json::str(spec.canonical())));
+        }
+        if !self.hetero.is_empty() {
+            pairs.push((
+                "hetero",
+                Json::arr(
+                    self.hetero
+                        .iter()
+                        .map(|t| {
+                            Json::obj(vec![
+                                ("gen", Json::str(t.gen.name())),
+                                ("machines", Json::num(t.machines as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
         }
         Json::obj(pairs)
     }
@@ -344,6 +428,55 @@ mod tests {
         assert!(ExperimentConfig::from_json(&doc).is_err());
         let doc = Json::parse(r#"{"tenants": "a:-3"}"#).unwrap();
         assert!(ExperimentConfig::from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn hetero_section_parses_and_maps_to_types() {
+        let doc = Json::parse(
+            r#"{"hetero": [{"gen": "p100", "machines": 4},
+                           {"gen": "v100", "machines": 2}],
+                "n_servers": 99}"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&doc).unwrap();
+        assert_eq!(cfg.hetero.len(), 2);
+        let types = cfg.types().expect("mixed fleet");
+        assert_eq!(types[0].gen, GpuGen::P100);
+        assert_eq!(types[0].machines, 4);
+        assert_eq!(types[1].gen, GpuGen::V100);
+        assert_eq!(types[1].spec, cfg.spec);
+        // Homogeneous configs have no fleet override.
+        assert!(ExperimentConfig::default().types().is_none());
+    }
+
+    #[test]
+    fn bad_hetero_sections_rejected() {
+        for doc in [
+            r#"{"hetero": [{"gen": "h100", "machines": 4}]}"#,
+            r#"{"hetero": [{"gen": "v100", "machines": 0}]}"#,
+            r#"{"hetero": [{"gen": "v100", "machines": 1},
+                           {"gen": "v100", "machines": 2}]}"#,
+            r#"{"hetero": [{"machines": 2}]}"#,
+        ] {
+            let doc = Json::parse(doc).unwrap();
+            assert!(ExperimentConfig::from_json(&doc).is_err(), "{doc:?}");
+        }
+    }
+
+    #[test]
+    fn hetero_roundtrips_through_json() {
+        let cfg = ExperimentConfig {
+            hetero: vec![
+                HeteroType { gen: GpuGen::K80, machines: 2 },
+                HeteroType { gen: GpuGen::V100, machines: 6 },
+            ],
+            ..ExperimentConfig::default()
+        };
+        let encoded = cfg.to_json().encode();
+        let back =
+            ExperimentConfig::from_json(&Json::parse(&encoded).unwrap())
+                .unwrap();
+        assert_eq!(back, cfg);
     }
 
     #[test]

@@ -1,61 +1,40 @@
 //! The round planner: glue between policy, profiler output, and mechanism
-//! (paper §3.2 "Scheduling mechanism").
+//! (paper §3.2 "Scheduling mechanism"), type-generic.
 //!
 //! Every round the coordinator:
-//! 1. builds policy views for all queued+running jobs,
+//! 1. builds policy views for all queued+running jobs over the fleet,
 //! 2. orders them with the scheduling policy,
-//! 3. admits the top jobs whose aggregate GPU demand fits the cluster
+//! 3. admits the top jobs whose aggregate GPU demand fits the fleet
 //!    ("runnable set", §4.2 — admission ignores fungible resources);
 //!    with tenant quotas configured ([`RoundPlanner::with_quotas`]) the
 //!    admission walks the ordered queue under per-tenant GPU caps with a
 //!    work-conserving spill pass (see [`crate::workload::admission`]),
-//! 4. hands the runnable set to the mechanism for allocation + placement.
+//! 4. hands the runnable set to the mechanism for type assignment,
+//!    allocation and placement.
 //!
 //! Both the simulator ([`crate::sim`]) and the live deploy mode
-//! ([`crate::deploy`]) drive the same pipeline, so scheduling behaviour
-//! is identical in the two (Table 5's fidelity comparison): the deploy
-//! leader calls [`RoundPlanner::plan`] directly, while the simulation
-//! core ([`crate::sim::run_events`]) composes the same shared pieces —
-//! [`policy_view`] for step 1, the policy's `order` for step 2, and
-//! [`crate::workload::admission::admit`] for step 3 — around its
-//! topology-generic [`crate::sim::ClusterModel`].
+//! ([`crate::deploy`]) drive the same pipeline over the same
+//! [`crate::cluster::Fleet`] representation, so scheduling behaviour is
+//! identical in the two (Table 5's fidelity comparison): the deploy
+//! leader calls [`RoundPlanner::plan`] on a one-type fleet of its
+//! workers, while the simulation core ([`crate::sim::run_events`])
+//! composes the same shared pieces — [`policy_view`] for step 1, the
+//! policy's `order` for step 2, and
+//! [`crate::workload::admission::admit`] for step 3 — around the
+//! fleet-generic [`crate::sim::ClusterModel`].
 
-use crate::cluster::Cluster;
-use crate::job::{DemandVector, Job, JobId};
+use crate::cluster::Fleet;
+use crate::job::{Job, JobId};
 use crate::mechanism::{Grant, JobRequest, Mechanism};
 use crate::policy::{PolicyJobView, SchedulingPolicy};
-use crate::profiler::SensitivityMatrix;
+use crate::profiler::Sensitivity;
 use crate::workload::{admission, AdmissionJob, TenantQuotas};
 use std::collections::BTreeMap;
-
-/// Per-job scheduling context kept by the coordinator across rounds.
-#[derive(Debug, Clone)]
-pub struct JobContext {
-    pub matrix: SensitivityMatrix,
-    /// Best-case demand (cached from the matrix).
-    pub best: DemandVector,
-    pub prop: DemandVector,
-    /// Throughput at the proportional allocation (for SRTF estimates).
-    pub prop_tput: f64,
-}
-
-impl JobContext {
-    pub fn new(matrix: SensitivityMatrix, cluster: &Cluster) -> JobContext {
-        let best = matrix.best_demand();
-        let prop = DemandVector::proportional(
-            matrix.gpus,
-            cluster.spec.cpus as f64 / cluster.spec.gpus as f64,
-            cluster.spec.mem_gb / cluster.spec.gpus as f64,
-        );
-        let prop_tput = matrix.proportional_throughput();
-        JobContext { matrix, best, prop, prop_tput }
-    }
-}
 
 /// The plan for one round.
 #[derive(Debug)]
 pub struct RoundPlan {
-    /// Grants (placement + fungible demand) per placed job.
+    /// Grants (type + placement + fungible demand) per placed job.
     pub grants: BTreeMap<JobId, Grant>,
     /// Jobs admitted to the runnable set but left unplaced by the
     /// mechanism (GREEDY skips; TUNE only on true GPU shortage).
@@ -88,21 +67,25 @@ impl RoundPlanner {
         RoundPlanner { policy, mechanism, quotas }
     }
 
-    /// Plan one round. `cluster` must have no placements (the round reset
+    /// Plan one round. `fleet` must have no placements (the round reset
     /// evicts everything first); `jobs` are all arrived unfinished jobs
-    /// with their contexts.
+    /// with their sensitivities (the per-job scheduling context — the
+    /// same [`Sensitivity`] the simulation engine keeps per job).
     pub fn plan(
         &self,
-        cluster: &mut Cluster,
-        jobs: &[(&Job, &JobContext)],
+        fleet: &mut Fleet,
+        jobs: &[(&Job, &Sensitivity)],
         now: f64,
     ) -> RoundPlan {
-        assert!(cluster.placements().is_empty(), "round must start empty");
+        assert!(
+            fleet.pools.iter().all(|p| p.cluster.placements().is_empty()),
+            "round must start empty"
+        );
 
         // 1-2: policy views, ordered.
         let mut views: Vec<PolicyJobView> = jobs
             .iter()
-            .map(|(job, ctx)| policy_view(cluster, job, ctx))
+            .map(|(job, sens)| policy_view(fleet, job, sens))
             .collect();
         self.policy.order(&mut views, now);
 
@@ -110,8 +93,8 @@ impl RoundPlanner {
         // ignored). With quotas, per-tenant GPU caps apply first and
         // stranded capacity spills work-conservingly; without quotas this
         // is the standard gang-scheduling backfill at GPU granularity.
-        let total_gpus = cluster.total_gpus();
-        let by_id: BTreeMap<JobId, (&Job, &JobContext)> =
+        let total_gpus = fleet.total_gpus();
+        let by_id: BTreeMap<JobId, (&Job, &Sensitivity)> =
             jobs.iter().map(|(j, c)| (j.id, (*j, *c))).collect();
         let ordered: Vec<AdmissionJob> = views
             .iter()
@@ -128,17 +111,11 @@ impl RoundPlanner {
         let requests: Vec<JobRequest> = runnable
             .iter()
             .map(|id| {
-                let (job, ctx) = by_id[id];
-                JobRequest {
-                    id: job.id,
-                    gpus: job.gpus,
-                    best: ctx.best,
-                    prop: ctx.prop,
-                    matrix: &ctx.matrix,
-                }
+                let (job, sens) = by_id[id];
+                JobRequest { id: job.id, gpus: job.gpus, sens }
             })
             .collect();
-        let grants = self.mechanism.allocate(cluster, &requests);
+        let grants = self.mechanism.allocate(fleet, &requests);
         let unplaced = runnable
             .into_iter()
             .filter(|id| !grants.contains_key(id))
@@ -148,33 +125,43 @@ impl RoundPlanner {
 
 }
 
-/// Build the policy view of one job over the current cluster state.
-/// Shared by the round planner (deploy leader path) and the homogeneous
-/// [`crate::sim::ClusterModel`], so both rank jobs identically.
+/// Build the policy view of one job over the current fleet state.
+/// Shared by the round planner (deploy leader path) and the simulation
+/// core's [`crate::sim::ClusterModel`], so both rank jobs identically —
+/// there is one definition of every policy key for every fleet shape.
+///
+/// - SRTF's remaining-time estimate uses the oracle `W_j^Fair` (on a
+///   one-type fleet: the homogeneous proportional throughput, exactly
+///   the pre-unification key).
+/// - DRF's dominant share and Tetris's alignment use the best-case
+///   demand on the *slowest* type (the conservative demand the fairness
+///   oracle is defined against; on one type, the job's only demand).
 pub fn policy_view(
-    cluster: &Cluster,
+    fleet: &Fleet,
     job: &Job,
-    ctx: &JobContext,
+    sens: &Sensitivity,
 ) -> PolicyJobView {
-    let remaining_est_s = if ctx.prop_tput > 0.0 {
-        job.remaining_samples() / ctx.prop_tput
+    let fair = sens.fair_throughput();
+    let remaining_est_s = if fair > 0.0 {
+        job.remaining_samples() / fair
     } else {
         f64::INFINITY
     };
-    // DRF dominant share over cluster totals.
-    let dominant_share = (job.gpus as f64 / cluster.total_gpus() as f64)
-        .max(ctx.best.cpus / cluster.total_cpus())
-        .max(ctx.best.mem_gb / cluster.total_mem_gb());
+    let best = sens.floor_matrix().best_demand();
+    // DRF dominant share over fleet totals.
+    let dominant_share = (job.gpus as f64 / fleet.total_gpus() as f64)
+        .max(best.cpus / fleet.total_cpus())
+        .max(best.mem_gb / fleet.total_mem_gb());
     // Tetris alignment: demand · free, normalized.
     let free = (
-        cluster.free_gpus() as f64,
-        cluster.free_cpus(),
-        cluster.free_mem_gb(),
+        fleet.free_gpus() as f64,
+        fleet.free_cpus(),
+        fleet.free_mem_gb(),
     );
     let alignment = (job.gpus as f64 * free.0
-        + ctx.best.cpus * free.1
-        + ctx.best.mem_gb * free.2)
-        / (cluster.total_gpus() as f64 * cluster.total_cpus()).max(1.0);
+        + best.cpus * free.1
+        + best.mem_gb * free.2)
+        / (fleet.total_gpus() as f64 * fleet.total_cpus()).max(1.0);
     PolicyJobView {
         id: job.id,
         arrival_s: job.arrival_s,
@@ -196,10 +183,10 @@ mod tests {
     use crate::policy::Fifo;
     use crate::profiler::OptimisticProfiler;
 
-    fn setup(n_servers: usize) -> (Cluster, OptimisticProfiler) {
+    fn setup(n_servers: usize) -> (Fleet, OptimisticProfiler) {
         let spec = ServerSpec::default();
         (
-            Cluster::homogeneous(spec, n_servers),
+            Fleet::homogeneous(spec, n_servers),
             OptimisticProfiler::noiseless(spec),
         )
     }
@@ -212,19 +199,19 @@ mod tests {
 
     #[test]
     fn admission_respects_gpu_capacity() {
-        let (mut cluster, profiler) = setup(1); // 8 GPUs
+        let (mut fleet, profiler) = setup(1); // 8 GPUs
         let jobs: Vec<Job> = (0..4)
             .map(|i| make_job(i, ModelKind::Gnmt, 4, i as f64))
             .collect();
-        let ctxs: Vec<JobContext> = jobs
+        let ctxs: Vec<Sensitivity> = jobs
             .iter()
-            .map(|j| JobContext::new(profiler.profile(j).matrix, &cluster))
+            .map(|j| profiler.profile(j))
             .collect();
-        let refs: Vec<(&Job, &JobContext)> =
+        let refs: Vec<(&Job, &Sensitivity)> =
             jobs.iter().zip(ctxs.iter()).collect();
         let planner =
             RoundPlanner::new(Box::new(Fifo), Box::new(Tune::default()));
-        let plan = planner.plan(&mut cluster, &refs, 100.0);
+        let plan = planner.plan(&mut fleet, &refs, 100.0);
         // Only the first two 4-GPU jobs fit 8 GPUs.
         assert_eq!(plan.grants.len(), 2);
         assert!(plan.grants.contains_key(&JobId(0)));
@@ -234,7 +221,7 @@ mod tests {
 
     #[test]
     fn backfill_admits_smaller_later_jobs() {
-        let (mut cluster, profiler) = setup(1);
+        let (mut fleet, profiler) = setup(1);
         // 6-GPU job, then an 8-GPU job (doesn't fit), then a 2-GPU job
         // (backfills).
         let jobs = vec![
@@ -242,14 +229,14 @@ mod tests {
             make_job(1, ModelKind::Lstm, 8, 1.0),
             make_job(2, ModelKind::Lstm, 2, 2.0),
         ];
-        let ctxs: Vec<JobContext> = jobs
+        let ctxs: Vec<Sensitivity> = jobs
             .iter()
-            .map(|j| JobContext::new(profiler.profile(j).matrix, &cluster))
+            .map(|j| profiler.profile(j))
             .collect();
-        let refs: Vec<(&Job, &JobContext)> =
+        let refs: Vec<(&Job, &Sensitivity)> =
             jobs.iter().zip(ctxs.iter()).collect();
         let planner = RoundPlanner::new(Box::new(Fifo), Box::new(Tune::default()));
-        let plan = planner.plan(&mut cluster, &refs, 10.0);
+        let plan = planner.plan(&mut fleet, &refs, 10.0);
         assert!(plan.grants.contains_key(&JobId(0)));
         assert!(!plan.grants.contains_key(&JobId(1)));
         assert!(plan.grants.contains_key(&JobId(2)));
@@ -258,7 +245,7 @@ mod tests {
     #[test]
     fn quota_admission_caps_contended_tenant() {
         use crate::job::TenantId;
-        let (mut cluster, profiler) = setup(1); // 8 GPUs
+        let (mut fleet, profiler) = setup(1); // 8 GPUs
         // Tenant 0 floods the queue first (8 jobs); tenant 1 arrives
         // later with 4 jobs, but its 1:1 quota guarantees it half the
         // cluster — FIFO alone would hand all 8 GPUs to tenant 0.
@@ -268,11 +255,11 @@ mod tests {
         for j in jobs.iter_mut().skip(8) {
             j.tenant = TenantId(1);
         }
-        let ctxs: Vec<JobContext> = jobs
+        let ctxs: Vec<Sensitivity> = jobs
             .iter()
-            .map(|j| JobContext::new(profiler.profile(j).matrix, &cluster))
+            .map(|j| profiler.profile(j))
             .collect();
-        let refs: Vec<(&Job, &JobContext)> =
+        let refs: Vec<(&Job, &Sensitivity)> =
             jobs.iter().zip(ctxs.iter()).collect();
         let quotas = TenantQuotas::new()
             .with(TenantId(0), 1.0)
@@ -282,7 +269,7 @@ mod tests {
             Box::new(Tune::default()),
             Some(quotas),
         );
-        let plan = planner.plan(&mut cluster, &refs, 100.0);
+        let plan = planner.plan(&mut fleet, &refs, 100.0);
         // 4 GPUs per tenant despite FIFO favouring tenant 0's backlog...
         let granted_t1 = (8..12)
             .filter(|&i| plan.grants.contains_key(&JobId(i)))
@@ -294,19 +281,46 @@ mod tests {
 
     #[test]
     fn planner_consistent_cluster_state() {
-        let (mut cluster, profiler) = setup(2);
+        let (mut fleet, profiler) = setup(2);
         let jobs: Vec<Job> = (0..10)
             .map(|i| make_job(i, ModelKind::ResNet18, 1, i as f64))
             .collect();
-        let ctxs: Vec<JobContext> = jobs
+        let ctxs: Vec<Sensitivity> = jobs
             .iter()
-            .map(|j| JobContext::new(profiler.profile(j).matrix, &cluster))
+            .map(|j| profiler.profile(j))
             .collect();
-        let refs: Vec<(&Job, &JobContext)> =
+        let refs: Vec<(&Job, &Sensitivity)> =
             jobs.iter().zip(ctxs.iter()).collect();
         let planner = RoundPlanner::new(Box::new(Fifo), Box::new(Tune::default()));
-        let plan = planner.plan(&mut cluster, &refs, 0.0);
+        let plan = planner.plan(&mut fleet, &refs, 0.0);
         assert_eq!(plan.grants.len(), 10);
-        assert!(cluster.check_consistency().is_ok());
+        assert!(fleet.check_consistency().is_ok());
+    }
+
+    #[test]
+    fn planner_routes_by_type_on_mixed_fleet() {
+        // The same planner, handed a two-type fleet, produces typed
+        // grants — no second coordinator needed.
+        let fleet_spec = Fleet::two_tier(1);
+        let profiler = OptimisticProfiler::noiseless_fleet(&fleet_spec);
+        let mut fleet = fleet_spec;
+        let jobs = vec![
+            make_job(0, ModelKind::Gnmt, 8, 0.0),
+            make_job(1, ModelKind::ShuffleNetV2, 8, 1.0),
+        ];
+        let ctxs: Vec<Sensitivity> = jobs
+            .iter()
+            .map(|j| profiler.profile(j))
+            .collect();
+        let refs: Vec<(&Job, &Sensitivity)> =
+            jobs.iter().zip(ctxs.iter()).collect();
+        let planner =
+            RoundPlanner::new(Box::new(Fifo), Box::new(Tune::default()));
+        let plan = planner.plan(&mut fleet, &refs, 0.0);
+        assert_eq!(plan.grants.len(), 2);
+        use crate::cluster::GpuGen;
+        assert_eq!(plan.grants[&JobId(0)].gen, GpuGen::V100);
+        assert_eq!(plan.grants[&JobId(1)].gen, GpuGen::P100);
+        assert!(fleet.check_consistency().is_ok());
     }
 }

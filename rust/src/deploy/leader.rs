@@ -1,20 +1,21 @@
 //! Leader: the live scheduler process (paper §4.3).
 //!
 //! Runs the exact same [`RoundPlanner`] as the simulator over a mirror
-//! [`Cluster`] built from worker registrations, and drives workers with
-//! lease grant/renew/terminate messages each round. Simulated time runs
-//! at `time_scale` × real time so a multi-hour trace deploys in minutes
-//! (Table 5 compares deploy vs simulate on the same trace).
+//! one-type [`Fleet`] built from worker registrations, and drives
+//! workers with lease grant/renew/terminate messages each round.
+//! Simulated time runs at `time_scale` × real time so a multi-hour
+//! trace deploys in minutes (Table 5 compares deploy vs simulate on the
+//! same trace).
 
 use super::proto::{Conn, Message};
-use crate::cluster::{Cluster, ServerSpec};
-use crate::coordinator::{JobContext, RoundPlanner};
+use crate::cluster::{Fleet, ServerSpec};
+use crate::coordinator::RoundPlanner;
 use crate::job::{Job, JobId, JobState, TenantId};
 use crate::mechanism::by_name as mechanism_by_name;
 use crate::metrics::{per_tenant_stats, JctStats};
 use crate::perf::PerfModel;
 use crate::policy::by_name as policy_by_name;
-use crate::profiler::OptimisticProfiler;
+use crate::profiler::{OptimisticProfiler, Sensitivity};
 use crate::workload::{ReplaySource, TenantQuotas, WorkloadSource};
 use anyhow::{anyhow, Result};
 use std::collections::{BTreeMap, HashMap};
@@ -190,8 +191,10 @@ impl Leader {
 
         // --- scheduling state ------------------------------------------
         // Full-capacity mirror (admission + proportional shares); each
-        // round replans over only the workers still alive.
-        let cluster = Cluster::homogeneous(spec, self.cfg.n_workers);
+        // round replans over only the workers still alive. Workers are a
+        // one-type V100 fleet (heterogeneous workers register identical
+        // specs today; the planner itself is fleet-generic).
+        let fleet = Fleet::homogeneous(spec, self.cfg.n_workers);
         let mut alive = vec![true; self.cfg.n_workers];
         let world = PerfModel::new(spec);
         let profiler = OptimisticProfiler::noiseless(spec);
@@ -203,13 +206,13 @@ impl Leader {
             self.cfg.quotas.clone(),
         );
 
-        let total_gpus = cluster.total_gpus();
+        let total_gpus = fleet.total_gpus();
         // The streaming head: the next not-yet-arrived job, pulled from
         // the source only when simulated time reaches it.
         let mut next_job: Option<Job> =
             pull_feasible(source.as_mut(), total_gpus);
         let mut active: BTreeMap<JobId, Job> = BTreeMap::new();
-        let mut contexts: BTreeMap<JobId, JobContext> = BTreeMap::new();
+        let mut contexts: BTreeMap<JobId, Sensitivity> = BTreeMap::new();
         let mut tenant_of: BTreeMap<u64, TenantId> = BTreeMap::new();
         // job -> worker currently hosting it.
         let mut hosted_on: HashMap<u64, usize> = HashMap::new();
@@ -272,11 +275,11 @@ impl Leader {
                 .is_some_and(|j| j.arrival_s <= now_sim)
             {
                 let mut job = next_job.take().unwrap();
-                let ctx =
-                    JobContext::new(profiler.profile(&job).matrix, &cluster);
-                job.total_samples = job.duration_prop_s * ctx.prop_tput;
+                let sens = profiler.profile(&job);
+                job.total_samples =
+                    job.duration_prop_s * sens.fair_throughput();
                 tenant_of.insert(job.id.0, job.tenant);
-                contexts.insert(job.id, ctx);
+                contexts.insert(job.id, sens);
                 active.insert(job.id, job);
                 next_job = pull_feasible(source.as_mut(), total_gpus);
             }
@@ -288,11 +291,10 @@ impl Leader {
             if alive_ids.is_empty() {
                 return Err(anyhow!("all workers died"));
             }
-            let mut round_cluster =
-                Cluster::with_server_ids(spec, &alive_ids);
-            let refs: Vec<(&Job, &JobContext)> =
+            let mut round_fleet = Fleet::with_server_ids(spec, &alive_ids);
+            let refs: Vec<(&Job, &Sensitivity)> =
                 active.values().map(|j| (j, &contexts[&j.id])).collect();
-            let plan = planner.plan(&mut round_cluster, &refs, now_sim);
+            let plan = planner.plan(&mut round_fleet, &refs, now_sim);
 
             // Reconcile leases with workers.
             let mut newly_hosted: HashMap<u64, usize> = HashMap::new();

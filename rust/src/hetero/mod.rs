@@ -1,54 +1,284 @@
-//! Heterogeneous GPU clusters (paper Appendix A.2).
+//! Heterogeneous front-end (paper Appendix A.2) — a *configuration* of
+//! the one type-generic stack, not a second implementation.
 //!
-//! The paper's main system targets homogeneous clusters (§2.3) but the
-//! appendix extends the formulation to clusters with several *types*
-//! (generations) of GPU machines: the sensitivity matrix gains a type
-//! dimension (`W_ij[c, m]` — progress of job `j` on machine type `i`),
-//! the LP selects one `(c, m, i)` configuration per job, and a job is
-//! never split across two types in a round (A.2.2).
+//! Since the one-resource-model unification, everything this module used
+//! to implement lives in the canonical layers, with heterogeneity as
+//! data rather than a code fork:
 //!
-//! This module implements that extension end-to-end:
+//! - machine types: [`crate::cluster::GpuGen`] on every server, pooled
+//!   by [`crate::cluster::Fleet`] (was `hetero::{gen, cluster}`);
+//! - ground truth: [`crate::perf::PerfModel::with_gen`] (was
+//!   `HeteroPerfModel`);
+//! - profiling: [`crate::profiler::OptimisticProfiler::for_fleet`]
+//!   produces the 3-D `W_j[k][c, m]` [`crate::profiler::Sensitivity`]
+//!   (was `HeteroProfiler`/`HeteroSensitivity`);
+//! - mechanisms: [`crate::mechanism`]'s `Proportional`/`Tune`/`Opt` do
+//!   A.2.2 type assignment natively, a no-op pass-through on one type
+//!   (was `HetProportional`/`HetTune`/`HetOpt` + `HetMechanism`);
+//! - simulation: [`crate::sim::FleetModel`] behind the shared event core
+//!   (was `HeteroModel`).
 //!
-//! - [`GpuGen`] — GPU generations with per-task compute scaling
-//!   ([`gen`]);
-//! - [`HeteroCluster`] — a set of homogeneous type-groups, each reusing
-//!   the [`crate::cluster::Cluster`] bookkeeping ([`cluster`]);
-//! - [`HeteroPerfModel`] — ground truth: the homogeneous pipeline model
-//!   with the GPU stage scaled by generation ([`perf`]);
-//! - [`HeteroProfiler`] — optimistic profiling along the extra type
-//!   dimension, producing one [`crate::profiler::SensitivityMatrix`] per
-//!   type at `|K|×` the profiling cost (A.2: "at an additional profiling
-//!   cost") ([`profiler`]);
-//! - [`HetTune`] / [`HetOpt`] / [`HetProportional`] — the scheduling
-//!   mechanisms: a TUNE-style heuristic that assigns each job a type and
-//!   reuses homogeneous Synergy-TUNE within the type group; the A.2.3
-//!   ILP upper bound; and a type-blind GPU-proportional baseline
-//!   ([`mechanism`]);
-//! - [`HeteroSimulator`] — a round-based trace simulator over the
-//!   heterogeneous cluster ([`sim`]).
-//!
-//! **Fairness oracle.** A.2.2 assumes the per-job fair throughput
-//! `W_j^Fair` is supplied by an oracle (a heterogeneity-aware fair
-//! scheduler such as Gavel [44]). We implement the conservative oracle:
-//! the GPU-proportional throughput on the *slowest* generation present.
-//! Because throughput is monotone in the GPU stage rate at fixed (c, m),
-//! a proportional allocation on any type dominates this floor, so every
-//! mechanism here satisfies the constraint structurally (tested in
-//! [`mechanism`]).
+//! What remains here is the heterogeneous *front-end*: a config type
+//! whose default is the two-generation evaluation fleet, a simulator
+//! wrapper that forwards to [`Simulator`] with
+//! [`crate::sim::SimConfig::types`] set, and name re-exports for
+//! pre-unification callers. A single-type V100 `HeteroSimConfig`
+//! reproduces the homogeneous schedule bit-for-bit
+//! (`tests/scenarios.rs`).
 
-pub mod cluster;
-pub mod gen;
-pub mod mechanism;
-pub mod perf;
-pub mod profiler;
-pub mod sim;
+pub use crate::cluster::{Fleet as HeteroCluster, GpuGen, TypePool, TypeSpec};
+pub use crate::mechanism::{Grant as HetGrant, JobRequest as HetJobRequest};
+pub use crate::profiler::Sensitivity as HeteroSensitivity;
+pub use crate::sim::FleetModel as HeteroModel;
 
-pub use cluster::{HeteroCluster, TypeGroup, TypeSpec};
-pub use gen::GpuGen;
-pub use mechanism::{
-    het_by_name, HetGrant, HetJobRequest, HetMechanism, HetOpt,
-    HetOptAllocation, HetProportional, HetTune, ALL_HET_MECHANISMS,
-};
-pub use perf::HeteroPerfModel;
-pub use profiler::{HeteroProfiler, HeteroSensitivity};
-pub use sim::{HeteroModel, HeteroSimConfig, HeteroSimResult, HeteroSimulator};
+use crate::cluster::ServerSpec;
+use crate::job::{Job, JobId, TenantId};
+use crate::metrics::{per_tenant_stats, JctStats, UtilizationLog};
+use crate::sim::{FinishedJob, SimConfig, SimResult, Simulator};
+use crate::workload::TenantQuotas;
+use std::collections::BTreeMap;
+
+/// Heterogeneous simulator configuration: the fleet description plus the
+/// shared engine knobs.
+pub struct HeteroSimConfig {
+    pub types: Vec<TypeSpec>,
+    pub round_s: f64,
+    pub policy: String,
+    pub mechanism: String,
+    pub profile_noise: f64,
+    pub max_sim_s: f64,
+}
+
+impl Default for HeteroSimConfig {
+    fn default() -> Self {
+        let spec = ServerSpec::default();
+        HeteroSimConfig {
+            types: vec![
+                TypeSpec { gen: GpuGen::P100, spec, machines: 8 },
+                TypeSpec { gen: GpuGen::V100, spec, machines: 8 },
+            ],
+            round_s: 300.0,
+            policy: "srtf".into(),
+            mechanism: "het-tune".into(),
+            profile_noise: 0.0,
+            max_sim_s: 400.0 * 24.0 * 3600.0,
+        }
+    }
+}
+
+/// Simulation output (the pre-unification shape, derived from the shared
+/// core's [`SimResult`]).
+#[derive(Debug)]
+pub struct HeteroSimResult {
+    /// (job id, jct seconds) in completion order.
+    pub jcts: Vec<(JobId, f64)>,
+    pub makespan_s: f64,
+    pub rounds: usize,
+    pub profiling_minutes: f64,
+    /// Full per-job records (tenant-tagged), from the shared core.
+    pub finished: Vec<FinishedJob>,
+    /// Per-round utilization samples (shared-core accounting).
+    pub utilization: UtilizationLog,
+}
+
+impl HeteroSimResult {
+    fn from_result(r: SimResult) -> HeteroSimResult {
+        HeteroSimResult {
+            jcts: r.finished.iter().map(|f| (f.id, f.jct_s)).collect(),
+            makespan_s: r.makespan_s,
+            rounds: r.rounds,
+            profiling_minutes: r.profiling_minutes,
+            finished: r.finished,
+            utilization: r.utilization,
+        }
+    }
+
+    pub fn jct_stats(&self) -> JctStats {
+        let v: Vec<f64> = self.jcts.iter().map(|&(_, j)| j).collect();
+        JctStats::from_jcts(&v)
+    }
+
+    /// Per-tenant JCT summaries (multi-tenant workloads).
+    pub fn tenant_stats(&self) -> BTreeMap<TenantId, JctStats> {
+        let pairs: Vec<(TenantId, f64)> =
+            self.finished.iter().map(|f| (f.tenant, f.jct_s)).collect();
+        per_tenant_stats(&pairs)
+    }
+}
+
+/// The heterogeneous simulator: [`Simulator`] with the fleet description
+/// set. One engine, two front-ends.
+pub struct HeteroSimulator {
+    cfg: HeteroSimConfig,
+    quotas: Option<TenantQuotas>,
+}
+
+impl HeteroSimulator {
+    pub fn new(cfg: HeteroSimConfig) -> HeteroSimulator {
+        HeteroSimulator { cfg, quotas: None }
+    }
+
+    /// A heterogeneous simulator whose admission enforces tenant GPU
+    /// quotas (the same weighted-quota + work-conserving-spill admission
+    /// as the homogeneous front-end, via the shared core).
+    pub fn with_quotas(
+        cfg: HeteroSimConfig,
+        quotas: Option<TenantQuotas>,
+    ) -> HeteroSimulator {
+        let mut sim = HeteroSimulator::new(cfg);
+        sim.quotas = quotas;
+        sim
+    }
+
+    /// Run a trace to completion (or `max_sim_s`) through the shared
+    /// event-driven core.
+    pub fn run(&self, jobs: Vec<Job>) -> HeteroSimResult {
+        let sim = Simulator::with_quotas(
+            SimConfig {
+                types: Some(self.cfg.types.clone()),
+                round_s: self.cfg.round_s,
+                policy: self.cfg.policy.clone(),
+                mechanism: self.cfg.mechanism.clone(),
+                profile_noise: self.cfg.profile_noise,
+                max_sim_s: self.cfg.max_sim_s,
+                ..SimConfig::default()
+            },
+            self.quotas.clone(),
+        );
+        HeteroSimResult::from_result(sim.run(jobs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{generate, Split, TraceConfig};
+
+    fn trace(n: usize, seed: u64) -> Vec<Job> {
+        generate(&TraceConfig {
+            n_jobs: n,
+            split: Split::new(40, 40, 20),
+            multi_gpu: false,
+            jobs_per_hour: None,
+            seed,
+        })
+    }
+
+    fn run(mechanism: &str, jobs: Vec<Job>) -> HeteroSimResult {
+        let sim = HeteroSimulator::new(HeteroSimConfig {
+            mechanism: mechanism.into(),
+            policy: "fifo".into(),
+            ..Default::default()
+        });
+        sim.run(jobs)
+    }
+
+    #[test]
+    fn all_jobs_finish() {
+        let r = run("het-tune", trace(40, 7));
+        assert_eq!(r.jcts.len(), 40);
+        assert!(r.rounds > 0);
+        assert!(r.jcts.iter().all(|&(_, j)| j > 0.0 && j.is_finite()));
+    }
+
+    #[test]
+    fn het_tune_beats_type_blind_proportional() {
+        let jobs = trace(60, 21);
+        let tune = run("het-tune", jobs.clone());
+        let prop = run("het-proportional", jobs);
+        assert_eq!(tune.jcts.len(), prop.jcts.len());
+        let a = tune.jct_stats().avg_s;
+        let b = prop.jct_stats().avg_s;
+        assert!(
+            a < b,
+            "het-tune avg JCT {a} must beat type-blind {b}"
+        );
+    }
+
+    #[test]
+    fn profiling_cost_scales_with_types() {
+        let jobs = trace(10, 3);
+        let het = run("het-tune", jobs.clone());
+        // Homogeneous equivalent for the same jobs profiles one type.
+        let hom = Simulator::new(SimConfig {
+            n_servers: 16,
+            policy: "fifo".into(),
+            mechanism: "tune".into(),
+            ..Default::default()
+        })
+        .run(jobs);
+        assert!(
+            het.profiling_minutes > hom.profiling_minutes,
+            "het profiling {} must exceed homogeneous {}",
+            het.profiling_minutes,
+            hom.profiling_minutes
+        );
+    }
+
+    #[test]
+    fn quotas_cap_flooding_tenant_on_hetero_cluster() {
+        use crate::job::ModelKind;
+        use crate::metrics::jains_index;
+        // 1×P100 + 2×V100 machines = 24 GPUs. Tenant 0 floods the queue
+        // with 24 identical one-GPU jobs (exactly the cluster capacity);
+        // tenant 1 queues 24 more behind them. FIFO alone hands round 0
+        // entirely to tenant 0; a 1:1 quota must cap each tenant at 12
+        // GPUs per round, so half of tenant 1's backlog starts immediately
+        // instead of waiting out tenant 0's. Identical durations make the
+        // comparison deterministic (no heavy-tail sampling luck).
+        let mk_jobs = || -> Vec<Job> {
+            (0..48u64)
+                .map(|i| {
+                    Job::new(JobId(i), ModelKind::Lstm, 1, 0.0, 3600.0)
+                        .with_tenant(TenantId(if i < 24 { 0 } else { 1 }))
+                })
+                .collect()
+        };
+        let cfg = || HeteroSimConfig {
+            types: vec![
+                TypeSpec {
+                    gen: GpuGen::P100,
+                    spec: ServerSpec::default(),
+                    machines: 1,
+                },
+                TypeSpec {
+                    gen: GpuGen::V100,
+                    spec: ServerSpec::default(),
+                    machines: 2,
+                },
+            ],
+            policy: "fifo".into(),
+            mechanism: "het-tune".into(),
+            ..Default::default()
+        };
+        let quotas = TenantQuotas::new()
+            .with(TenantId(0), 1.0)
+            .with(TenantId(1), 1.0);
+        let plain = HeteroSimulator::new(cfg()).run(mk_jobs());
+        let fair =
+            HeteroSimulator::with_quotas(cfg(), Some(quotas)).run(mk_jobs());
+        assert_eq!(plain.jcts.len(), 48);
+        assert_eq!(fair.jcts.len(), 48);
+        let p = plain.tenant_stats();
+        let f = fair.tenant_stats();
+        let (p0, p1) = (p[&TenantId(0)].avg_s, p[&TenantId(1)].avg_s);
+        let (f0, f1) = (f[&TenantId(0)].avg_s, f[&TenantId(1)].avg_s);
+        // Without quotas FIFO starves tenant 1 behind tenant 0's backlog.
+        assert!(
+            p1 > p0 * 1.2,
+            "fifo baseline should favour the flooding tenant: {p0} vs {p1}"
+        );
+        // Quotas must strictly help the starved tenant (half its jobs now
+        // start in round 0 instead of waiting out tenant 0's backlog)...
+        assert!(
+            f1 < p1 - 1.0,
+            "quotas must speed up the starved tenant: {f1} vs {p1}"
+        );
+        // ...and improve Jain fairness over per-tenant average JCTs.
+        assert!(
+            jains_index(&[f0, f1]) > jains_index(&[p0, p1]),
+            "quotas must improve fairness: fair ({f0}, {f1}) vs plain \
+             ({p0}, {p1})"
+        );
+    }
+}

@@ -20,16 +20,24 @@
 //!
 //! Module map (see DESIGN.md for the paper-section cross-reference):
 //!
+//! The resource model is *type-generic* end to end (one-resource-model
+//! unification): machine generation is data on every server, a cluster
+//! is a [`cluster::Fleet`] of per-type pools, and the homogeneous paper
+//! setting is the one-type special case of the same profiler, mechanism
+//! and simulator code that handles mixed fleets (paper Appendix A.2).
+//! [`hetero`] is only a front-end over that stack.
+//!
 //! | module | role |
 //! |---|---|
-//! | [`cluster`] | servers, multi-dimensional resource bookkeeping |
+//! | [`cluster`] | generations, servers, fleets: type-aware resource bookkeeping |
 //! | [`job`] | jobs, demand vectors, the 10-model zoo (paper Table 4) |
-//! | [`perf`] | ground-truth throughput model (MinIO cache, CPU prep, GPU step) |
-//! | [`profiler`] | optimistic profiling (paper §3.1) |
+//! | [`perf`] | ground-truth throughput model per machine type (MinIO cache, CPU prep, scaled GPU step) |
+//! | [`profiler`] | optimistic profiling, one sensitivity matrix per type (paper §3.1, A.2.1) |
 //! | [`policy`] | scheduling policies (paper §2.2, §5.7) |
-//! | [`mechanism`] | allocation mechanisms (paper §3.3, §4) |
+//! | [`mechanism`] | type-generic allocation mechanisms (paper §3.3, §4, A.2.2–A.2.3) |
 //! | [`lp`] | simplex + branch-and-bound ILP (Synergy-OPT substrate) |
-//! | [`sim`] | event-driven cluster simulator (paper §4.3) |
+//! | [`sim`] | event-driven fleet simulator (paper §4.3) |
+//! | [`hetero`] | heterogeneous front-end over the one engine (paper A.2) |
 //! | [`trace`] | Philly-derived synthetic workload generation (paper §5.1) |
 //! | [`workload`] | pluggable trace ingestion: `WorkloadSource` trait, Philly CSV + Alibaba readers, tenants & quota admission, streaming replay |
 //! | [`metrics`] | JCT/makespan/utilization accounting, per-tenant fairness |

@@ -230,6 +230,7 @@ fn sim_config(args: &Args, mechanism: &str, policy: &str) -> SimConfig {
         span_factor: args.usize("span-factor", 1),
         network_penalty: args.f64("network-penalty", 0.0),
         reference_spec: None,
+        types: None,
     }
 }
 
@@ -311,27 +312,28 @@ fn cmd_profile(args: &Args) {
     let profiler = OptimisticProfiler::new(spec);
     let job = Job::new(JobId(0), model, gpus, 0.0, 3600.0);
     let out = profiler.profile(&job);
-    let d = out.matrix.best_demand();
     println!(
         "model={} gpus={gpus} empirical_points={} cost={:.0}min",
         model.name(),
         out.empirical_points,
         out.cost_minutes
     );
+    let matrix = out.primary();
+    let d = matrix.best_demand();
     println!(
         "best_demand: cpus={} mem={}GB  (proportional: cpus={} mem={}GB)",
-        d.cpus, d.mem_gb, out.matrix.prop_cpus, out.matrix.prop_mem_gb
+        d.cpus, d.mem_gb, matrix.prop_cpus, matrix.prop_mem_gb
     );
     println!(
         "throughput: best={:.0} prop={:.0} samples/s",
-        out.matrix.max_throughput(),
-        out.matrix.proportional_throughput()
+        matrix.max_throughput(),
+        matrix.proportional_throughput()
     );
     // CPU sensitivity curve at full memory (the Fig-2 row).
-    let full_mem = *out.matrix.mem_points.last().unwrap();
+    let full_mem = *matrix.mem_points.last().unwrap();
     print!("cpu curve @ full mem:");
-    for &c in &out.matrix.cpu_points {
-        print!(" {:.0}", out.matrix.throughput_at(c, full_mem));
+    for &c in &matrix.cpu_points {
+        print!(" {:.0}", matrix.throughput_at(c, full_mem));
     }
     println!();
 }
@@ -361,12 +363,15 @@ fn cmd_models() {
 ///
 /// `synergy hetero --mechanism het-tune --policy srtf --machines 8 \
 ///     --jobs 500 --load 6 --split 30,50,20 [--multi-gpu]
+///     [--types k80:4,p100:8,v100:8]
 ///     [--trace x.csv --format philly|alibaba] [--tenants a:2,b:1]`
 ///
-/// Builds a two-generation cluster (`--machines` P100 servers +
-/// `--machines` V100 servers) and runs the workload through the shared
-/// event-driven core. Trace files and tenant quotas work exactly as in
-/// `synergy sim` — both engines are configurations of one loop.
+/// Builds a mixed-generation fleet — `--types gen:count,...` for an
+/// arbitrary mix, or the default two-generation split (`--machines`
+/// P100 servers + `--machines` V100 servers) — and runs the workload
+/// through the one engine behind `synergy sim`: `hetero` is a fleet
+/// description, not a second code path. Trace files and tenant quotas
+/// work exactly as in `synergy sim`.
 fn cmd_hetero(args: &Args) {
     use synergy::hetero::{GpuGen, HeteroSimConfig, HeteroSimulator, TypeSpec};
     let spec = ServerSpec {
@@ -375,15 +380,41 @@ fn cmd_hetero(args: &Args) {
         mem_gb: args.f64("mem-per-server", 500.0),
     };
     let machines = args.usize("machines", 8);
+    let types: Vec<TypeSpec> = match args.get("types") {
+        Some(s) => s
+            .split(',')
+            .map(|part| {
+                let (name, count) = part
+                    .split_once(':')
+                    .unwrap_or_else(|| panic!("--types: '{part}' is not gen:count"));
+                let machines: usize = count
+                    .trim()
+                    .parse()
+                    .unwrap_or_else(|_| panic!("--types: bad count '{count}'"));
+                assert!(
+                    machines > 0,
+                    "--types: machine count must be positive in '{part}'"
+                );
+                TypeSpec {
+                    gen: GpuGen::by_name(name.trim()).unwrap_or_else(|| {
+                        panic!("--types: unknown generation '{name}'")
+                    }),
+                    spec,
+                    machines,
+                }
+            })
+            .collect(),
+        None => vec![
+            TypeSpec { gen: GpuGen::P100, spec, machines },
+            TypeSpec { gen: GpuGen::V100, spec, machines },
+        ],
+    };
     let mechanism = args.get_or("mechanism", "het-tune").to_string();
     let policy = args.get_or("policy", "srtf").to_string();
     let workload = workload_from_args(args);
     let sim = HeteroSimulator::with_quotas(
         HeteroSimConfig {
-            types: vec![
-                TypeSpec { gen: GpuGen::P100, spec, machines },
-                TypeSpec { gen: GpuGen::V100, spec, machines },
-            ],
+            types,
             round_s: args.f64("round", 300.0),
             policy,
             mechanism: mechanism.clone(),
@@ -520,6 +551,7 @@ fn cmd_config(args: &Args) {
     // `trace`/`format` select a file source, `tenants` turns on quotas.
     let (jobs, quotas, tenant_names) =
         cfg.workload().expect("bad workload in config");
+    // A `hetero` section turns the same engine into a mixed fleet.
     let sim = Simulator::with_quotas(
         SimConfig {
             spec: cfg.spec,
@@ -532,6 +564,7 @@ fn cmd_config(args: &Args) {
             span_factor: 1,
             network_penalty: 0.0,
             reference_spec: None,
+            types: cfg.types(),
         },
         quotas.clone(),
     );

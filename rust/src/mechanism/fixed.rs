@@ -5,7 +5,8 @@
 //! against them, Synergy's profiler supplies the best-case demand as that
 //! static request, and the mechanism packs first-fit without any tuning —
 //! which, as §5.7 observes, "performs similar to greedy techniques,
-//! resulting in GPU fragmentation."
+//! resulting in GPU fragmentation." Type assignment is the same blind
+//! round-robin as [`super::Proportional`].
 //!
 //! The difference from [`super::Greedy`] is semantic, not mechanical: the
 //! demand is *immutable* for the job's lifetime (re-used verbatim every
@@ -13,13 +14,37 @@
 //! extended with tuning. Here both reduce to first-fit; `Fixed` exists so
 //! the §5.7 benches name the baseline they model.
 
-use super::{first_fit, Grant, JobRequest, Mechanism};
-use crate::cluster::Cluster;
+use super::{
+    assign_capacity_round_robin, delegate_pools, first_fit, Grant, JobRequest,
+    Mechanism, PoolGrant, PoolRequest,
+};
+use crate::cluster::{Cluster, Fleet};
 use crate::job::JobId;
 use std::collections::BTreeMap;
 
 /// Static best-case demands + first-fit (DRF/Tetris allocation model).
 pub struct Fixed;
+
+impl Fixed {
+    /// The §5.7 static-demand algorithm inside one pool.
+    pub fn allocate_pool(
+        &self,
+        cluster: &mut Cluster,
+        jobs: &[PoolRequest<'_>],
+    ) -> BTreeMap<JobId, PoolGrant> {
+        let mut grants = BTreeMap::new();
+        for job in jobs {
+            if let Some(p) = first_fit(cluster, &job.best) {
+                cluster.place(job.id, p.clone());
+                grants.insert(
+                    job.id,
+                    PoolGrant { placement: p, demand: job.best },
+                );
+            }
+        }
+        grants
+    }
+}
 
 impl Mechanism for Fixed {
     fn name(&self) -> &'static str {
@@ -28,17 +53,13 @@ impl Mechanism for Fixed {
 
     fn allocate(
         &self,
-        cluster: &mut Cluster,
+        fleet: &mut Fleet,
         jobs: &[JobRequest<'_>],
     ) -> BTreeMap<JobId, Grant> {
-        let mut grants = BTreeMap::new();
-        for job in jobs {
-            if let Some(p) = first_fit(cluster, &job.best) {
-                cluster.place(job.id, p.clone());
-                grants.insert(job.id, Grant { placement: p, demand: job.best });
-            }
-        }
-        grants
+        let assigned = assign_capacity_round_robin(fleet, jobs);
+        delegate_pools(fleet, jobs, &assigned, |cluster, reqs| {
+            self.allocate_pool(cluster, reqs)
+        })
     }
 }
 
@@ -46,27 +67,20 @@ impl Mechanism for Fixed {
 mod tests {
     use super::*;
     use crate::cluster::ServerSpec;
-    use crate::job::{DemandVector, Job, JobId, ModelKind};
+    use crate::job::{Job, JobId, ModelKind};
     use crate::profiler::OptimisticProfiler;
 
     #[test]
     fn fixed_is_first_fit_on_best_demands() {
-        let m = OptimisticProfiler::noiseless(ServerSpec::default())
-            .profile(&Job::new(JobId(0), ModelKind::ShuffleNetV2, 1, 0.0, 60.0))
-            .matrix;
-        let mut cluster = Cluster::homogeneous(ServerSpec::default(), 1);
+        let s = OptimisticProfiler::noiseless(ServerSpec::default())
+            .profile(&Job::new(JobId(0), ModelKind::ShuffleNetV2, 1, 0.0, 60.0));
+        let mut fleet = Fleet::homogeneous(ServerSpec::default(), 1);
         let reqs: Vec<JobRequest> = (0..4)
-            .map(|i| JobRequest {
-                id: JobId(i),
-                gpus: 1,
-                best: m.best_demand(),
-                prop: DemandVector::proportional(1, 3.0, 62.5),
-                matrix: &m,
-            })
+            .map(|i| JobRequest { id: JobId(i), gpus: 1, sens: &s })
             .collect();
-        let grants = Fixed.allocate(&mut cluster, &reqs);
+        let grants = Fixed.allocate(&mut fleet, &reqs);
         // ShuffleNet wants ~16 cores: only one fits in 24 cores.
         assert!(grants.len() < 4);
-        assert!(cluster.free_gpus() > 0, "fragmentation expected");
+        assert!(fleet.free_gpus() > 0, "fragmentation expected");
     }
 }

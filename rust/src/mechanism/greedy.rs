@@ -1,5 +1,5 @@
 //! Synergy-GREEDY (paper §3.3): naive first-fit multi-dimensional packing
-//! with best-case demands.
+//! with best-case demands, type-blind across a mixed fleet.
 //!
 //! The strawman the paper builds Synergy-TUNE against. Two pathologies,
 //! both reproduced by the §5.4 benches:
@@ -9,13 +9,38 @@
 //! 2. jobs whose demands don't fit are *skipped*, breaking the policy's
 //!    fairness order.
 
-use super::{first_fit, Grant, JobRequest, Mechanism};
-use crate::cluster::Cluster;
+use super::{
+    assign_capacity_round_robin, delegate_pools, first_fit, Grant, JobRequest,
+    Mechanism, PoolGrant, PoolRequest,
+};
+use crate::cluster::{Cluster, Fleet};
 use crate::job::JobId;
 use std::collections::BTreeMap;
 
 /// Synergy-GREEDY: first-fit with unmodified best-case demands.
 pub struct Greedy;
+
+impl Greedy {
+    /// The §3.3 homogeneous algorithm inside one pool.
+    pub fn allocate_pool(
+        &self,
+        cluster: &mut Cluster,
+        jobs: &[PoolRequest<'_>],
+    ) -> BTreeMap<JobId, PoolGrant> {
+        let mut grants = BTreeMap::new();
+        for job in jobs {
+            if let Some(p) = first_fit(cluster, &job.best) {
+                cluster.place(job.id, p.clone());
+                grants.insert(
+                    job.id,
+                    PoolGrant { placement: p, demand: job.best },
+                );
+            }
+            // else: skipped this round (the fairness bug, §3.3).
+        }
+        grants
+    }
+}
 
 impl Mechanism for Greedy {
     fn name(&self) -> &'static str {
@@ -24,18 +49,13 @@ impl Mechanism for Greedy {
 
     fn allocate(
         &self,
-        cluster: &mut Cluster,
+        fleet: &mut Fleet,
         jobs: &[JobRequest<'_>],
     ) -> BTreeMap<JobId, Grant> {
-        let mut grants = BTreeMap::new();
-        for job in jobs {
-            if let Some(p) = first_fit(cluster, &job.best) {
-                cluster.place(job.id, p.clone());
-                grants.insert(job.id, Grant { placement: p, demand: job.best });
-            }
-            // else: skipped this round (the fairness bug, §3.3).
-        }
-        grants
+        let assigned = assign_capacity_round_robin(fleet, jobs);
+        delegate_pools(fleet, jobs, &assigned, |cluster, reqs| {
+            self.allocate_pool(cluster, reqs)
+        })
     }
 }
 
@@ -43,27 +63,20 @@ impl Mechanism for Greedy {
 mod tests {
     use super::*;
     use crate::cluster::ServerSpec;
-    use crate::job::{DemandVector, Job, JobId, ModelKind};
-    use crate::profiler::{OptimisticProfiler, SensitivityMatrix};
+    use crate::job::{Job, JobId, ModelKind};
+    use crate::profiler::{OptimisticProfiler, Sensitivity};
 
-    fn matrix(model: ModelKind, gpus: u32) -> SensitivityMatrix {
+    fn profile(model: ModelKind, gpus: u32) -> Sensitivity {
         OptimisticProfiler::noiseless(ServerSpec::default())
             .profile(&Job::new(JobId(0), model, gpus, 0.0, 60.0))
-            .matrix
     }
 
     #[test]
     fn greedy_grants_best_case_demands() {
-        let m = matrix(ModelKind::AlexNet, 1);
-        let mut cluster = Cluster::homogeneous(ServerSpec::default(), 1);
-        let req = JobRequest {
-            id: JobId(0),
-            gpus: 1,
-            best: m.best_demand(),
-            prop: DemandVector::proportional(1, 3.0, 62.5),
-            matrix: &m,
-        };
-        let grants = Greedy.allocate(&mut cluster, &[req]);
+        let s = profile(ModelKind::AlexNet, 1);
+        let mut fleet = Fleet::homogeneous(ServerSpec::default(), 1);
+        let req = JobRequest { id: JobId(0), gpus: 1, sens: &s };
+        let grants = Greedy.allocate(&mut fleet, &[req]);
         // AlexNet's knee is ~9.3 cores: the greedy grant exceeds prop.
         assert!(grants[&JobId(0)].demand.cpus > 3.0);
     }
@@ -73,32 +86,26 @@ mod tests {
         // Five CPU-hungry 1-GPU jobs on one 24-core server: best-case
         // demands (~10+ cores each) exhaust CPU after 2 jobs, leaving
         // 6 GPUs stranded — the §3.3 pathology.
-        let m = matrix(ModelKind::M5, 1); // knee 10 cores, mem-hungry
-        let mut cluster = Cluster::homogeneous(ServerSpec::default(), 1);
+        let s = profile(ModelKind::M5, 1); // knee 10 cores, mem-hungry
+        let mut fleet = Fleet::homogeneous(ServerSpec::default(), 1);
         let reqs: Vec<JobRequest> = (0..5)
-            .map(|i| JobRequest {
-                id: JobId(i),
-                gpus: 1,
-                best: m.best_demand(),
-                prop: DemandVector::proportional(1, 3.0, 62.5),
-                matrix: &m,
-            })
+            .map(|i| JobRequest { id: JobId(i), gpus: 1, sens: &s })
             .collect();
-        let grants = Greedy.allocate(&mut cluster, &reqs);
+        let grants = Greedy.allocate(&mut fleet, &reqs);
         assert!(grants.len() < 5, "greedy should fail to place all");
-        assert!(cluster.free_gpus() > 0, "GPUs stranded");
-        assert!(cluster.check_consistency().is_ok());
+        assert!(fleet.free_gpus() > 0, "GPUs stranded");
+        assert!(fleet.check_consistency().is_ok());
     }
 
     #[test]
     fn greedy_skips_but_later_jobs_may_fit() {
         // A big job that doesn't fit is skipped; a small one after it fits
         // (the order-breaking behaviour).
-        let m_big = matrix(ModelKind::M5, 1);
-        let m_small = matrix(ModelKind::Lstm, 1);
-        let mut cluster = Cluster::homogeneous(ServerSpec::default(), 1);
+        let s_big = profile(ModelKind::M5, 1);
+        let s_small = profile(ModelKind::Lstm, 1);
+        let mut fleet = Fleet::homogeneous(ServerSpec::default(), 1);
         // Soak memory so M5's best-case (huge mem) cannot fit.
-        cluster.place(
+        fleet.pools[0].cluster.place(
             JobId(99),
             crate::cluster::Placement::single(
                 0,
@@ -106,22 +113,10 @@ mod tests {
             ),
         );
         let reqs = vec![
-            JobRequest {
-                id: JobId(0),
-                gpus: 1,
-                best: m_big.best_demand(),
-                prop: DemandVector::proportional(1, 3.0, 62.5),
-                matrix: &m_big,
-            },
-            JobRequest {
-                id: JobId(1),
-                gpus: 1,
-                best: m_small.best_demand(),
-                prop: DemandVector::proportional(1, 3.0, 62.5),
-                matrix: &m_small,
-            },
+            JobRequest { id: JobId(0), gpus: 1, sens: &s_big },
+            JobRequest { id: JobId(1), gpus: 1, sens: &s_small },
         ];
-        let grants = Greedy.allocate(&mut cluster, &reqs);
+        let grants = Greedy.allocate(&mut fleet, &reqs);
         assert!(!grants.contains_key(&JobId(0)), "hungry job skipped");
         assert!(grants.contains_key(&JobId(1)), "small job jumped the queue");
     }

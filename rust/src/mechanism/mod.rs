@@ -1,20 +1,48 @@
-//! Allocation mechanisms (paper §3.3 & §4): given the round's runnable
-//! jobs (already priority-ordered by the policy) and their sensitivity
-//! matrices, decide each job's fungible CPU/memory grant and its placement
-//! onto servers.
+//! Allocation mechanisms (paper §3.3, §4 & A.2.2–A.2.3): given the
+//! round's runnable jobs (already priority-ordered by the policy) and
+//! their per-type sensitivities, decide each job's machine type, its
+//! fungible CPU/memory grant, and its placement onto servers.
 //!
-//! - [`proportional::Proportional`] — the baseline: CPU/mem strictly
+//! There is exactly one mechanism stack, and it is type-generic: every
+//! [`Mechanism`] allocates over a [`Fleet`] in two phases —
+//!
+//! 1. **Type assignment** (A.2.2): each job is pinned to one machine
+//!    type for the round (jobs never span types). On a one-type fleet
+//!    this phase is a no-op pass-through, which makes the homogeneous
+//!    paper setting (§3.3, §4) the `|K| = 1` configuration of the same
+//!    code, bit-for-bit.
+//! 2. **Per-pool allocation**: inside each type pool the homogeneous
+//!    §3.3/§4.2 algorithms run against that type's sensitivity matrix.
+//!
+//! The mechanisms:
+//!
+//! - [`proportional::Proportional`] — the baseline: type-blind
+//!   (capacity-weighted round-robin) assignment, CPU/mem strictly
 //!   proportional to GPUs.
-//! - [`greedy::Greedy`] — Synergy-GREEDY: first-fit with best-case
-//!   demands; skips jobs that don't fit (fragments GPUs, §3.3).
-//! - [`tune::Tune`] — Synergy-TUNE: best-fit packing with demand
-//!   downgrade and victim reclamation (§4.2). Never skips a job whose GPU
-//!   demand fits; never leaves a job below its proportional throughput.
-//! - [`opt::Opt`] — Synergy-OPT: the two-LP upper bound (§4.1) solved
-//!   with the in-crate simplex/ILP.
+//! - [`greedy::Greedy`] — Synergy-GREEDY: type-blind assignment,
+//!   first-fit with best-case demands; skips jobs that don't fit
+//!   (fragments GPUs, §3.3).
+//! - [`tune::Tune`] — Synergy-TUNE: type-affine assignment (each job
+//!   goes to the type that maximizes its normalized best-case
+//!   throughput), then best-fit packing with demand downgrade and victim
+//!   reclamation (§4.2). Never skips a job whose GPU demand fits; never
+//!   leaves a job below the fairness floor `W_j^Fair`.
+//! - [`opt::Opt`] — Synergy-OPT: the ILP upper bound. The A.2.3 program
+//!   picks one `(c, m, type)` configuration per job; on a one-type fleet
+//!   it degenerates to the paper's §4.1 LP1 over the idealized
+//!   super-machine.
 //! - [`fixed::Fixed`] — static best-case demands with first-fit, modeling
-//!   DRF/Tetris-style big-data allocation (§5.7: "static allocations
-//!   perform similar to greedy techniques").
+//!   DRF/Tetris-style big-data allocation (§5.7).
+//!
+//! **Fairness oracle.** A.2.2 assumes the per-job fair throughput
+//! `W_j^Fair` is supplied by an oracle (a heterogeneity-aware fair
+//! scheduler such as Gavel [44]). We implement the conservative oracle:
+//! the GPU-proportional throughput on the *slowest* generation present
+//! ([`Sensitivity::fair_throughput`]). Because throughput is monotone in
+//! the GPU stage rate at fixed (c, m), a proportional allocation on any
+//! type dominates this floor, so TUNE satisfies the constraint
+//! structurally; on a one-type fleet the oracle coincides with the
+//! homogeneous proportional floor `W_j[C_g, M_g]` (§4.1 constraint 5).
 
 pub mod fixed;
 pub mod greedy;
@@ -24,55 +52,78 @@ pub mod tune;
 
 pub use fixed::Fixed;
 pub use greedy::Greedy;
-pub use opt::Opt;
+pub use opt::{Opt, OptAllocation};
 pub use proportional::Proportional;
 pub use tune::{PlacementStrategy, Tune, VictimStrategy};
 
-use crate::cluster::{Cluster, Placement, Share};
+use crate::cluster::{Cluster, Fleet, GpuGen, Placement, Share};
 use crate::job::{DemandVector, JobId};
-use crate::profiler::SensitivityMatrix;
+use crate::profiler::{Sensitivity, SensitivityMatrix};
 use std::collections::BTreeMap;
 
-/// One runnable job as the mechanism sees it.
+/// One runnable job as the mechanisms see it: gang size plus the full
+/// per-type sensitivity (`W_j[k][c, m]`).
 #[derive(Debug, Clone)]
 pub struct JobRequest<'a> {
     pub id: JobId,
     pub gpus: u32,
-    /// Best-case demand from the sensitivity matrix (§3.2).
-    pub best: DemandVector,
-    /// GPU-proportional demand (the fairness floor).
-    pub prop: DemandVector,
-    pub matrix: &'a SensitivityMatrix,
+    pub sens: &'a Sensitivity,
 }
 
-/// The outcome for one job: a placement and the demand it was granted.
+/// The outcome for one job: the machine type, a placement inside that
+/// type's pool, and the fungible demand it was granted.
 #[derive(Debug, Clone)]
 pub struct Grant {
+    pub gen: GpuGen,
     pub placement: Placement,
     pub demand: DemandVector,
 }
 
-/// Allocation mechanism interface.
+/// Allocation mechanism interface — the only one in the crate.
 pub trait Mechanism: Send + Sync {
     fn name(&self) -> &'static str;
 
-    /// Place as many of `jobs` as the cluster allows; `jobs` arrive in
-    /// policy priority order. The cluster must start the round empty of
+    /// Place as many of `jobs` as the fleet allows; `jobs` arrive in
+    /// policy priority order. The fleet must start the round empty of
     /// placements for these jobs. Returns the per-job grants.
     fn allocate(
         &self,
-        cluster: &mut Cluster,
+        fleet: &mut Fleet,
         jobs: &[JobRequest<'_>],
     ) -> BTreeMap<JobId, Grant>;
 }
 
+/// One job as a *pool-level* algorithm sees it: demands against a single
+/// type's sensitivity matrix. This is the §3.3/§4.2 homogeneous request
+/// shape; [`delegate_pools`] builds it per assigned type.
+#[derive(Debug, Clone)]
+pub struct PoolRequest<'a> {
+    pub id: JobId,
+    pub gpus: u32,
+    /// Best-case demand from this type's sensitivity matrix (§3.2).
+    pub best: DemandVector,
+    /// GPU-proportional demand on this type (the fairness floor).
+    pub prop: DemandVector,
+    pub matrix: &'a SensitivityMatrix,
+}
+
+/// A pool-level grant: placement + demand inside one type pool.
+#[derive(Debug, Clone)]
+pub struct PoolGrant {
+    pub placement: Placement,
+    pub demand: DemandVector,
+}
+
 /// Look up a mechanism by CLI name. The `tune-*` variants expose the
-/// design-choice knobs benchmarked by `ablation_design_choices`.
+/// design-choice knobs benchmarked by `ablation_design_choices`; the
+/// `het-*` aliases are kept for pre-unification front-ends and configs.
 pub fn by_name(name: &str) -> Option<Box<dyn Mechanism>> {
     match name {
-        "proportional" | "prop" => Some(Box::new(Proportional)),
+        "proportional" | "prop" | "het-proportional" | "het-prop" => {
+            Some(Box::new(Proportional))
+        }
         "greedy" => Some(Box::new(Greedy)),
-        "tune" => Some(Box::new(Tune::default())),
+        "tune" | "het-tune" => Some(Box::new(Tune::default())),
         "tune-first-fit" => Some(Box::new(Tune {
             placement: PlacementStrategy::FirstFit,
             ..Tune::default()
@@ -81,7 +132,7 @@ pub fn by_name(name: &str) -> Option<Box<dyn Mechanism>> {
             victim: VictimStrategy::FirstFound,
             ..Tune::default()
         })),
-        "opt" => Some(Box::new(Opt::default())),
+        "opt" | "het-opt" => Some(Box::new(Opt::default())),
         "fixed" => Some(Box::new(Fixed)),
         _ => None,
     }
@@ -98,7 +149,122 @@ pub const ALL_MECHANISMS: [&str; 7] = [
 ];
 
 // ---------------------------------------------------------------------------
-// Shared placement helpers
+// Type assignment + per-pool delegation
+// ---------------------------------------------------------------------------
+
+/// The shared assignment skeleton: walk jobs in priority order, ranking
+/// the candidate types of each with `rank` (higher wins; only types
+/// whose remaining free GPU budget covers the job are candidates) and
+/// decrementing the winner's budget. `rank` sees the job, the candidate
+/// generation, and its remaining free GPUs, and is evaluated once per
+/// (job, candidate).
+///
+/// On a one-type fleet the assignment is a no-op pass-through: every job
+/// maps to the single type, unfiltered, so the per-pool algorithm sees
+/// exactly the request list a homogeneous mechanism would have.
+fn assign_types_by(
+    fleet: &Fleet,
+    jobs: &[JobRequest<'_>],
+    rank: impl Fn(&JobRequest<'_>, GpuGen, u32) -> (f64, i64),
+) -> BTreeMap<JobId, GpuGen> {
+    if let [pool] = &fleet.pools[..] {
+        return jobs.iter().map(|j| (j.id, pool.gen)).collect();
+    }
+    let mut free: BTreeMap<GpuGen, u32> = fleet
+        .pools
+        .iter()
+        .map(|p| (p.gen, p.cluster.free_gpus()))
+        .collect();
+    let mut assigned = BTreeMap::new();
+    for j in jobs {
+        let best = free
+            .iter()
+            .filter(|(_, &f)| f >= j.gpus)
+            .map(|(&g, &f)| (rank(j, g, f), g))
+            .max_by(|(ra, _), (rb, _)| ra.partial_cmp(rb).unwrap())
+            .map(|(_, g)| g);
+        if let Some(gen) = best {
+            *free.get_mut(&gen).unwrap() -= j.gpus;
+            assigned.insert(j.id, gen);
+        }
+        // Jobs with no feasible type this round stay queued (GPU
+        // shortage — same as the homogeneous runnable-set cut).
+    }
+    assigned
+}
+
+/// Sensitivity-aware assignment: `score` ranks the candidate types for
+/// one job (higher wins, faster generation on ties).
+pub(crate) fn assign_types(
+    fleet: &Fleet,
+    jobs: &[JobRequest<'_>],
+    score: impl Fn(&JobRequest<'_>, GpuGen) -> f64,
+) -> BTreeMap<JobId, GpuGen> {
+    assign_types_by(fleet, jobs, |j, g, _free| (score(j, g), g as i64))
+}
+
+/// Type-blind assignment: jobs take types in capacity-weighted
+/// round-robin order (whichever type has the most free GPUs, slowest
+/// generation on ties), ignoring sensitivity — what a
+/// heterogeneity-unaware scheduler does. Pass-through on one type.
+pub(crate) fn assign_capacity_round_robin(
+    fleet: &Fleet,
+    jobs: &[JobRequest<'_>],
+) -> BTreeMap<JobId, GpuGen> {
+    assign_types_by(fleet, jobs, |_j, g, free| (free as f64, -(g as i64)))
+}
+
+/// Run a pool-level allocation algorithm inside each type pool over the
+/// jobs assigned to it, wrapping the grants with their type.
+pub(crate) fn delegate_pools(
+    fleet: &mut Fleet,
+    jobs: &[JobRequest<'_>],
+    assigned: &BTreeMap<JobId, GpuGen>,
+    alloc: impl Fn(
+        &mut Cluster,
+        &[PoolRequest<'_>],
+    ) -> BTreeMap<JobId, PoolGrant>,
+) -> BTreeMap<JobId, Grant> {
+    let mut out = BTreeMap::new();
+    for pool in &mut fleet.pools {
+        let spec = pool.cluster.spec;
+        let requests: Vec<PoolRequest<'_>> = jobs
+            .iter()
+            .filter(|j| assigned.get(&j.id) == Some(&pool.gen))
+            .map(|j| {
+                let matrix = j
+                    .sens
+                    .matrix(pool.gen)
+                    .expect("job profiled on every type");
+                PoolRequest {
+                    id: j.id,
+                    gpus: j.gpus,
+                    best: matrix.best_demand(),
+                    prop: DemandVector::proportional(
+                        j.gpus,
+                        spec.cpus as f64 / spec.gpus as f64,
+                        spec.mem_gb / spec.gpus as f64,
+                    ),
+                    matrix,
+                }
+            })
+            .collect();
+        for (id, g) in alloc(&mut pool.cluster, &requests) {
+            out.insert(
+                id,
+                Grant {
+                    gen: pool.gen,
+                    placement: g.placement,
+                    demand: g.demand,
+                },
+            );
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Shared placement helpers (pool-level)
 // ---------------------------------------------------------------------------
 
 /// Split a demand proportionally over per-server GPU counts (paper §4.2:
@@ -124,7 +290,7 @@ pub fn proportional_split(demand: &DemandVector, gpus_per_server: &[(usize, u32)
     p
 }
 
-/// Best-fit placement of `demand`:
+/// Best-fit placement of `demand` inside one pool:
 ///
 /// - if the job fits on a single server, pick the feasible server with the
 ///   least free resources (tight packing, §4.2);
@@ -307,9 +473,37 @@ mod tests {
     }
 
     #[test]
-    fn by_name_covers_all() {
+    fn by_name_covers_all_plus_het_aliases() {
         for n in ALL_MECHANISMS {
             assert!(by_name(n).is_some(), "{n}");
         }
+        // Pre-unification front-end names resolve to the unified stack.
+        assert_eq!(by_name("het-tune").unwrap().name(), "tune");
+        assert_eq!(by_name("het-proportional").unwrap().name(), "proportional");
+        assert_eq!(by_name("het-opt").unwrap().name(), "opt");
+        assert!(by_name("warp-drive").is_none());
+    }
+
+    #[test]
+    fn single_type_assignment_is_passthrough() {
+        use crate::job::{Job, JobId, ModelKind};
+        use crate::profiler::OptimisticProfiler;
+        let fleet = Fleet::homogeneous(ServerSpec::default(), 1);
+        let p = OptimisticProfiler::noiseless(ServerSpec::default());
+        // More GPUs requested than exist: pass-through must *not* budget-
+        // filter on a single type (the pool algorithm handles shortage).
+        let jobs: Vec<Job> = (0..3)
+            .map(|i| Job::new(JobId(i), ModelKind::Lstm, 8, 0.0, 60.0))
+            .collect();
+        let sens: Vec<_> = jobs.iter().map(|j| p.profile(j)).collect();
+        let reqs: Vec<JobRequest> = jobs
+            .iter()
+            .zip(&sens)
+            .map(|(j, s)| JobRequest { id: j.id, gpus: j.gpus, sens: s })
+            .collect();
+        let assigned = assign_types(&fleet, &reqs, |_, _| 0.0);
+        assert_eq!(assigned.len(), 3, "pass-through keeps every job");
+        let rr = assign_capacity_round_robin(&fleet, &reqs);
+        assert_eq!(rr.len(), 3);
     }
 }

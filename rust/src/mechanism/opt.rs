@@ -1,26 +1,33 @@
-//! Synergy-OPT (paper §4.1 + Appendix A): the LP/ILP upper bound.
+//! Synergy-OPT (paper §4.1, Appendix A & A.2.3): the LP/ILP upper bound,
+//! type-generic.
 //!
-//! Two programs, solved with the in-crate simplex ([`crate::lp`]):
+//! **Allocation program** — boolean `y_{c,m,i,j}` selects one (CPU,
+//! memory, machine type) configuration per job to maximize
+//! Σ `W_ij[c,m]`·y subject to per-type GPU/CPU/memory capacity
+//! (A.2.3 constraints 23–24 plus the per-type GPU row that disjoint
+//! pools require), one configuration per job (25), and the oracle
+//! fairness floor `W_j^Fair` (26), enforced structurally: options per
+//! (job, type) are Pareto-pruned to those meeting the floor, so every
+//! feasible selection is fair by construction. On a one-type fleet the
+//! type index collapses and this is the paper's §4.1 LP1 over the
+//! idealized super-machine (the oracle floor coincides with the
+//! homogeneous proportional floor, §4.1 constraint 5).
 //!
-//! **LP1 (idealized super-machine)** — boolean `y_{c,m,j}` selects one
-//! (CPU, memory) option per job to maximize Σ W_j[c,m]·y subject to
-//! aggregate CPU and memory capacity. The paper's fairness constraint (5)
-//! is enforced structurally: options are Pareto-pruned to those with
-//! throughput ≥ W_j[C_g, M_g] (the proportional option itself is always
-//! present), so every feasible selection honours the floor.
+//! **Placement program (LP2, §4.1.2)** — given (g_j, c*_j, m*_j) inside
+//! one pool, assign fractions x_{i,j} of each job to machines,
+//! minimizing Σ x_{i,j} (each fragmented job contributes ≥ 2, so this
+//! minimizes fragmentation; Theorem A.2 bounds fragmented jobs by 3s).
 //!
-//! **LP2 (placement)** — given (g_j, c*_j, m*_j), assign fractions x_{i,j}
-//! of each job to machines, minimizing Σ x_{i,j} (each fragmented job
-//! contributes ≥ 2, so this minimizes fragmentation; Theorem A.2 bounds
-//! fragmented jobs by 3s).
-//!
-//! As in the paper (§4.1.3), OPT is a *simulation-only* upper bound: LP2's
-//! fractional GPU assignments are not deployable; the simulator uses LP1's
-//! allocations with a relaxed placement, and benches report LP1's
-//! objective as the aspirational line.
+//! As in the paper (§4.1.3), OPT is a *simulation-only* upper bound:
+//! LP2's fractional GPU assignments are not deployable; the simulator
+//! uses the allocation program's choices with a relaxed placement, and
+//! benches report the objective as the aspirational line.
 
-use super::{best_fit, Grant, JobRequest, Mechanism};
-use crate::cluster::{Cluster, Placement};
+use super::{
+    assign_capacity_round_robin, best_fit, delegate_pools, Grant, JobRequest,
+    Mechanism, Proportional,
+};
+use crate::cluster::{Cluster, Fleet, GpuGen};
 use crate::job::{DemandVector, JobId};
 use crate::lp::{solve, solve_ilp, IlpOptions, Lp, Op};
 use std::collections::BTreeMap;
@@ -33,22 +40,24 @@ pub struct Opt {
     pub relax_only: bool,
 }
 
-/// The LP1 solution for one round.
+/// The allocation-program solution for one round.
 #[derive(Debug, Clone)]
 pub struct OptAllocation {
-    /// Chosen (cpus, mem_gb, throughput) per job.
-    pub chosen: BTreeMap<JobId, (f64, f64, f64)>,
-    /// LP objective — aggregate throughput upper bound.
+    /// Chosen (type, cpus, mem_gb, throughput) per job.
+    pub chosen: BTreeMap<JobId, (GpuGen, f64, f64, f64)>,
+    /// Objective — aggregate throughput upper bound.
     pub objective: f64,
-    /// Number of structural LP variables (for the §5.6 scaling bench).
+    /// Number of structural variables (for the §5.6 scaling bench).
     pub n_vars: usize,
 }
 
 impl Opt {
-    /// Solve LP1 over the idealized super-machine (paper §4.1.1).
+    /// Solve the allocation program over the fleet (paper §4.1.1 /
+    /// A.2.3). Options per (job, type) are Pareto-pruned and floored
+    /// against the oracle `W_j^Fair`.
     pub fn solve_allocation(
         &self,
-        cluster: &Cluster,
+        fleet: &Fleet,
         jobs: &[JobRequest<'_>],
     ) -> Option<OptAllocation> {
         if jobs.is_empty() {
@@ -58,38 +67,76 @@ impl Opt {
                 n_vars: 0,
             });
         }
-        // Collect per-job option lists (Pareto-pruned, floor-filtered).
-        let mut options: Vec<(JobId, Vec<(f64, f64, f64)>)> = Vec::new();
-        for j in jobs {
-            let mut opts = j.matrix.pareto_options();
-            if opts.is_empty() {
-                opts.push(j.matrix.proportional_option());
-            }
-            options.push((j.id, opts));
+        // (job, gen, options) — options only on types that could ever
+        // host the job's gang (GPU capacity of the whole pool).
+        struct Block {
+            id: JobId,
+            gpus: u32,
+            gen: GpuGen,
+            opts: Vec<(f64, f64, f64)>,
         }
-        let n_vars: usize = options.iter().map(|(_, o)| o.len()).sum();
-        let mut lp = Lp::new(n_vars);
+        let mut blocks: Vec<Block> = Vec::new();
+        for j in jobs {
+            let fair = j.sens.fair_throughput();
+            for pool in &fleet.pools {
+                if pool.cluster.total_gpus() < j.gpus {
+                    continue;
+                }
+                let m = j.sens.matrix(pool.gen).expect("profiled");
+                let mut opts = m.pareto_options_with_floor(fair);
+                if opts.is_empty() && m.proportional_throughput() >= fair {
+                    opts.push(m.proportional_option());
+                }
+                if !opts.is_empty() {
+                    blocks.push(Block {
+                        id: j.id,
+                        gpus: j.gpus,
+                        gen: pool.gen,
+                        opts,
+                    });
+                }
+            }
+        }
 
-        // Objective (1): maximize Σ W·y. Capacity (2)(3); choice (4).
-        let mut cpu_row: Vec<(usize, f64)> = Vec::with_capacity(n_vars);
-        let mut mem_row: Vec<(usize, f64)> = Vec::with_capacity(n_vars);
+        let n_vars: usize = blocks.iter().map(|b| b.opts.len()).sum();
+        let mut lp = Lp::new(n_vars);
         let mut var = 0usize;
-        let mut var_ranges: Vec<(JobId, usize, usize)> = Vec::new();
-        for (id, opts) in &options {
-            let start = var;
-            for &(c, m, w) in opts {
+        // Per-type capacity rows (constraints 23, 24 + the per-type GPU
+        // capacity needed once types are disjoint pools).
+        let mut cpu_rows: BTreeMap<GpuGen, Vec<(usize, f64)>> =
+            BTreeMap::new();
+        let mut mem_rows: BTreeMap<GpuGen, Vec<(usize, f64)>> =
+            BTreeMap::new();
+        let mut gpu_rows: BTreeMap<GpuGen, Vec<(usize, f64)>> =
+            BTreeMap::new();
+        // Per-job choice rows (constraint 25).
+        let mut job_vars: BTreeMap<JobId, Vec<usize>> = BTreeMap::new();
+        let mut var_map: Vec<(usize, usize)> = Vec::new(); // var -> (block, opt)
+        for (bi, b) in blocks.iter().enumerate() {
+            for (oi, &(c, m, w)) in b.opts.iter().enumerate() {
                 lp.set_objective(var, w);
-                cpu_row.push((var, c));
-                mem_row.push((var, m));
+                cpu_rows.entry(b.gen).or_default().push((var, c));
+                mem_rows.entry(b.gen).or_default().push((var, m));
+                gpu_rows.entry(b.gen).or_default().push((var, b.gpus as f64));
+                job_vars.entry(b.id).or_default().push(var);
+                var_map.push((bi, oi));
                 var += 1;
             }
-            var_ranges.push((*id, start, var));
         }
-        lp.add(cpu_row, Op::Le, cluster.total_cpus());
-        lp.add(mem_row, Op::Le, cluster.total_mem_gb());
-        for &(_, start, end) in &var_ranges {
+        for pool in &fleet.pools {
+            if let Some(row) = cpu_rows.remove(&pool.gen) {
+                lp.add(row, Op::Le, pool.cluster.total_cpus());
+            }
+            if let Some(row) = mem_rows.remove(&pool.gen) {
+                lp.add(row, Op::Le, pool.cluster.total_mem_gb());
+            }
+            if let Some(row) = gpu_rows.remove(&pool.gen) {
+                lp.add(row, Op::Le, pool.cluster.total_gpus() as f64);
+            }
+        }
+        for vars in job_vars.values() {
             let row: Vec<(usize, f64)> =
-                (start..end).map(|v| (v, 1.0)).collect();
+                vars.iter().map(|&v| (v, 1.0)).collect();
             lp.add(row, Op::Eq, 1.0);
         }
 
@@ -100,32 +147,35 @@ impl Opt {
             solve_ilp(&lp, &int_vars, IlpOptions::default()).ok()?
         };
 
-        // Extract the chosen option per job (argmax y within the range).
+        // Extract the chosen option per job (argmax y within the job's
+        // variables — exact for the ILP, rounding for the relaxation).
         let mut chosen = BTreeMap::new();
-        for &(id, start, end) in &var_ranges {
-            let (_, opts) = options
+        for (id, vars) in &job_vars {
+            let &best = vars
                 .iter()
-                .find(|(oid, _)| *oid == id)
-                .expect("job options");
-            let best = (start..end)
-                .max_by(|&a, &b| sol.x[a].partial_cmp(&sol.x[b]).unwrap())
-                .unwrap();
-            chosen.insert(id, opts[best - start]);
+                .max_by(|&&a, &&b| sol.x[a].partial_cmp(&sol.x[b]).unwrap())
+                .expect("every job row has a variable");
+            let (bi, oi) = var_map[best];
+            let b = &blocks[bi];
+            let (c, m, w) = b.opts[oi];
+            chosen.insert(*id, (b.gen, c, m, w));
         }
         Some(OptAllocation { chosen, objective: sol.objective, n_vars })
     }
 
-    /// Solve LP2 (paper §4.1.2): fractional placement of the LP1 demands
-    /// onto machines, minimizing Σ x_{i,j}. Returns x[i][j] by (server,
-    /// job index) plus the fragmented-job count.
+    /// Solve LP2 (paper §4.1.2) inside one pool: fractional placement of
+    /// the chosen demands onto that pool's machines, minimizing
+    /// Σ x_{i,j}. `gangs` lists (job, gpus) and `demands` the chosen
+    /// (cpus, mem_gb) per job. Returns x[i][j] by (server index, gang
+    /// index) plus the fragmented-job count.
     pub fn solve_placement(
         &self,
-        cluster: &Cluster,
-        jobs: &[JobRequest<'_>],
-        alloc: &OptAllocation,
+        pool: &Cluster,
+        gangs: &[(JobId, u32)],
+        demands: &BTreeMap<JobId, (f64, f64)>,
     ) -> Option<(Vec<Vec<f64>>, usize)> {
-        let s = cluster.num_servers();
-        let n = jobs.len();
+        let s = pool.num_servers();
+        let n = gangs.len();
         if n == 0 {
             return Some((vec![vec![]; s], 0));
         }
@@ -138,17 +188,17 @@ impl Opt {
         // Capacity per machine (15)-(17).
         for i in 0..s {
             let gpu_row: Vec<(usize, f64)> = (0..n)
-                .map(|j| (idx(i, j), jobs[j].gpus as f64))
+                .map(|j| (idx(i, j), gangs[j].1 as f64))
                 .collect();
-            lp.add(gpu_row, Op::Le, cluster.spec.gpus as f64);
+            lp.add(gpu_row, Op::Le, pool.spec.gpus as f64);
             let cpu_row: Vec<(usize, f64)> = (0..n)
-                .map(|j| (idx(i, j), alloc.chosen[&jobs[j].id].0))
+                .map(|j| (idx(i, j), demands[&gangs[j].0].0))
                 .collect();
-            lp.add(cpu_row, Op::Le, cluster.spec.cpus as f64);
+            lp.add(cpu_row, Op::Le, pool.spec.cpus as f64);
             let mem_row: Vec<(usize, f64)> = (0..n)
-                .map(|j| (idx(i, j), alloc.chosen[&jobs[j].id].1))
+                .map(|j| (idx(i, j), demands[&gangs[j].0].1))
                 .collect();
-            lp.add(mem_row, Op::Le, cluster.spec.mem_gb);
+            lp.add(mem_row, Op::Le, pool.spec.mem_gb);
         }
         // Full assignment (18).
         for j in 0..n {
@@ -180,40 +230,73 @@ impl Mechanism for Opt {
         "opt"
     }
 
-    /// Simulation-mode OPT: LP1 chooses (c*, m*); jobs are then placed
-    /// best-fit with those demands, falling back to the proportional
-    /// demand if the ideal allocation can't be materialized (§4.1.3 —
-    /// the gap between the idealized bound and deployable placements).
+    /// Simulation-mode OPT: materialize the allocation program — place
+    /// each job on its chosen type with the chosen demand via best-fit,
+    /// falling back to the proportional demand on that type if packing
+    /// fails (§4.1.3 — the gap between the idealized bound and
+    /// deployable placements; the program ignores server boundaries).
     fn allocate(
         &self,
-        cluster: &mut Cluster,
+        fleet: &mut Fleet,
         jobs: &[JobRequest<'_>],
     ) -> BTreeMap<JobId, Grant> {
-        let mut grants = BTreeMap::new();
-        let Some(alloc) = self.solve_allocation(cluster, jobs) else {
-            return grants;
+        let Some(alloc) = self.solve_allocation(fleet, jobs) else {
+            // The per-job equality rows (25) can be unsatisfiable on a
+            // multi-type fleet: admission caps aggregate GPUs, but the
+            // admitted gangs may admit no per-type partition (e.g. three
+            // 5-GPU jobs over two 8-GPU pools). Rather than idling the
+            // whole round, degrade to type-blind proportional packing —
+            // every job that fits still runs at its fairness floor.
+            let assigned = assign_capacity_round_robin(fleet, jobs);
+            return delegate_pools(fleet, jobs, &assigned, |cluster, reqs| {
+                Proportional.allocate_pool(cluster, reqs)
+            });
         };
-        // Place big jobs first, like TUNE.
+        let mut out = BTreeMap::new();
+        // Place big jobs first, like TUNE — ordered by the best-case
+        // demand on the chosen type, which on a one-type fleet is
+        // exactly the pre-unification homogeneous OPT placement order.
         let mut ordered: Vec<&JobRequest> = jobs.iter().collect();
-        ordered.sort_by(|a, b| b.best.sort_key().cmp(&a.best.sort_key()));
-        for job in ordered {
-            let (c, m, _) = alloc.chosen[&job.id];
-            let ideal = DemandVector::new(job.gpus, c, m);
-            let placement: Option<Placement> = best_fit(cluster, &ideal)
-                .or_else(|| best_fit(cluster, &job.prop));
-            let demand = if placement.is_some()
-                && best_fit(cluster, &ideal).is_some()
-            {
-                ideal
-            } else {
-                job.prop
+        ordered.sort_by(|a, b| {
+            let key = |j: &JobRequest| {
+                alloc
+                    .chosen
+                    .get(&j.id)
+                    .map(|&(gen, ..)| {
+                        j.sens
+                            .matrix(gen)
+                            .expect("profiled")
+                            .best_demand()
+                            .sort_key()
+                    })
+                    .unwrap_or((j.gpus, 0, 0))
             };
-            if let Some(p) = placement {
-                cluster.place(job.id, p.clone());
-                grants.insert(job.id, Grant { placement: p, demand });
+            key(b).cmp(&key(a))
+        });
+        for j in ordered {
+            let Some(&(gen, c, m, _)) = alloc.chosen.get(&j.id) else {
+                continue;
+            };
+            let pool = fleet.pool_mut(gen).expect("chosen pool");
+            let demand = DemandVector::new(j.gpus, c, m);
+            let spec = pool.cluster.spec;
+            let prop = DemandVector::proportional(
+                j.gpus,
+                spec.cpus as f64 / spec.gpus as f64,
+                spec.mem_gb / spec.gpus as f64,
+            );
+            for d in [demand, prop] {
+                if let Some(p) = best_fit(&pool.cluster, &d) {
+                    pool.cluster.place(j.id, p.clone());
+                    out.insert(
+                        j.id,
+                        Grant { gen, placement: p, demand: d },
+                    );
+                    break;
+                }
             }
         }
-        grants
+        out
     }
 }
 
@@ -222,45 +305,42 @@ mod tests {
     use super::*;
     use crate::cluster::ServerSpec;
     use crate::job::{Job, JobId, ModelKind};
-    use crate::profiler::{OptimisticProfiler, SensitivityMatrix};
+    use crate::mechanism::Tune;
+    use crate::profiler::{OptimisticProfiler, Sensitivity};
 
-    fn matrix(model: ModelKind, gpus: u32) -> SensitivityMatrix {
+    fn sens(model: ModelKind, gpus: u32) -> Sensitivity {
         OptimisticProfiler::noiseless(ServerSpec::default())
             .profile(&Job::new(JobId(0), model, gpus, 0.0, 60.0))
-            .matrix
     }
 
-    fn request<'a>(id: u64, gpus: u32, m: &'a SensitivityMatrix) -> JobRequest<'a> {
-        JobRequest {
-            id: JobId(id),
-            gpus,
-            best: m.best_demand(),
-            prop: DemandVector::proportional(gpus, 3.0, 62.5),
-            matrix: m,
-        }
+    fn request<'a>(id: u64, gpus: u32, s: &'a Sensitivity) -> JobRequest<'a> {
+        JobRequest { id: JobId(id), gpus, sens: s }
     }
 
     #[test]
     fn opt_objective_upper_bounds_tune() {
-        // Mixed workload on one server: OPT's LP objective must be >= the
+        // Mixed workload on one server: OPT's objective must be >= the
         // aggregate throughput TUNE achieves.
-        let img = matrix(ModelKind::AlexNet, 1);
-        let lang = matrix(ModelKind::Gnmt, 1);
+        let img = sens(ModelKind::AlexNet, 1);
+        let lang = sens(ModelKind::Gnmt, 1);
         let reqs: Vec<JobRequest> = (0..4)
             .map(|i| request(i, 1, &img))
             .chain((4..8).map(|i| request(i, 1, &lang)))
             .collect();
 
-        let mut c1 = Cluster::homogeneous(ServerSpec::default(), 1);
+        let mut fleet = Fleet::homogeneous(ServerSpec::default(), 1);
         let opt = Opt::default();
-        let alloc = opt.solve_allocation(&c1, &reqs).unwrap();
+        let alloc = opt.solve_allocation(&fleet, &reqs).unwrap();
 
-        let grants = super::super::Tune::default().allocate(&mut c1, &reqs);
+        let grants = Tune::default().allocate(&mut fleet, &reqs);
         let tune_total: f64 = reqs
             .iter()
             .map(|r| {
                 let g = &grants[&r.id];
-                r.matrix.throughput_at(g.demand.cpus, g.demand.mem_gb)
+                r.sens
+                    .matrix(g.gen)
+                    .unwrap()
+                    .throughput_at(g.demand.cpus, g.demand.mem_gb)
             })
             .sum();
         assert!(
@@ -280,18 +360,18 @@ mod tests {
 
     #[test]
     fn opt_respects_fairness_floor() {
-        let img = matrix(ModelKind::ShuffleNetV2, 1);
-        let speech = matrix(ModelKind::M5, 1);
+        let img = sens(ModelKind::ShuffleNetV2, 1);
+        let speech = sens(ModelKind::M5, 1);
         let reqs: Vec<JobRequest> = (0..4)
             .map(|i| request(i, 1, &img))
             .chain((4..8).map(|i| request(i, 1, &speech)))
             .collect();
-        let cluster = Cluster::homogeneous(ServerSpec::default(), 1);
-        let alloc = Opt::default().solve_allocation(&cluster, &reqs).unwrap();
+        let fleet = Fleet::homogeneous(ServerSpec::default(), 1);
+        let alloc = Opt::default().solve_allocation(&fleet, &reqs).unwrap();
         for r in &reqs {
-            let (_, _, w) = alloc.chosen[&r.id];
+            let (_, _, _, w) = alloc.chosen[&r.id];
             assert!(
-                w + 1e-9 >= r.matrix.proportional_throughput(),
+                w + 1e-9 >= r.sens.fair_throughput(),
                 "{:?} below floor",
                 r.id
             );
@@ -300,63 +380,136 @@ mod tests {
 
     #[test]
     fn opt_capacity_respected() {
-        let m = matrix(ModelKind::DeepSpeech, 1);
+        let s = sens(ModelKind::DeepSpeech, 1);
         let reqs: Vec<JobRequest> =
-            (0..8).map(|i| request(i, 1, &m)).collect();
-        let cluster = Cluster::homogeneous(ServerSpec::default(), 1);
-        let alloc = Opt::default().solve_allocation(&cluster, &reqs).unwrap();
-        let cpus: f64 = alloc.chosen.values().map(|o| o.0).sum();
-        let mem: f64 = alloc.chosen.values().map(|o| o.1).sum();
-        assert!(cpus <= cluster.total_cpus() + 1e-6, "cpus={cpus}");
-        assert!(mem <= cluster.total_mem_gb() + 1e-6, "mem={mem}");
+            (0..8).map(|i| request(i, 1, &s)).collect();
+        let fleet = Fleet::homogeneous(ServerSpec::default(), 1);
+        let alloc = Opt::default().solve_allocation(&fleet, &reqs).unwrap();
+        let cpus: f64 = alloc.chosen.values().map(|o| o.1).sum();
+        let mem: f64 = alloc.chosen.values().map(|o| o.2).sum();
+        assert!(cpus <= fleet.total_cpus() + 1e-6, "cpus={cpus}");
+        assert!(mem <= fleet.total_mem_gb() + 1e-6, "mem={mem}");
     }
 
     #[test]
     fn lp2_placement_bounds_fragmentation() {
-        let m = matrix(ModelKind::ResNet18, 2);
+        let s = sens(ModelKind::ResNet18, 2);
         let reqs: Vec<JobRequest> =
-            (0..6).map(|i| request(i, 2, &m)).collect();
-        let cluster = Cluster::homogeneous(ServerSpec::default(), 2);
+            (0..6).map(|i| request(i, 2, &s)).collect();
+        let fleet = Fleet::homogeneous(ServerSpec::default(), 2);
         let opt = Opt::default();
-        let alloc = opt.solve_allocation(&cluster, &reqs).unwrap();
+        let alloc = opt.solve_allocation(&fleet, &reqs).unwrap();
+        let gangs: Vec<(JobId, u32)> =
+            reqs.iter().map(|r| (r.id, r.gpus)).collect();
+        let demands: BTreeMap<JobId, (f64, f64)> = alloc
+            .chosen
+            .iter()
+            .map(|(id, &(_, c, m, _))| (*id, (c, m)))
+            .collect();
+        let pool = &fleet.pools[0].cluster;
         let (x, fragmented) =
-            opt.solve_placement(&cluster, &reqs, &alloc).unwrap();
+            opt.solve_placement(pool, &gangs, &demands).unwrap();
         // Theorem A.2: fragmented <= 3s.
-        assert!(fragmented <= 3 * cluster.num_servers());
+        assert!(fragmented <= 3 * pool.num_servers());
         // Every job fully assigned.
-        for j in 0..reqs.len() {
-            let total: f64 = (0..cluster.num_servers()).map(|i| x[i][j]).sum();
+        for j in 0..gangs.len() {
+            let total: f64 = (0..pool.num_servers()).map(|i| x[i][j]).sum();
             assert!(total >= 1.0 - 1e-6, "job {j} assignment {total}");
         }
     }
 
     #[test]
     fn relaxation_at_least_ilp() {
-        let img = matrix(ModelKind::AlexNet, 1);
+        let img = sens(ModelKind::AlexNet, 1);
         let reqs: Vec<JobRequest> =
             (0..6).map(|i| request(i, 1, &img)).collect();
-        let cluster = Cluster::homogeneous(ServerSpec::default(), 1);
+        let fleet = Fleet::homogeneous(ServerSpec::default(), 1);
         let ilp = Opt { relax_only: false }
-            .solve_allocation(&cluster, &reqs)
+            .solve_allocation(&fleet, &reqs)
             .unwrap();
         let lp = Opt { relax_only: true }
-            .solve_allocation(&cluster, &reqs)
+            .solve_allocation(&fleet, &reqs)
             .unwrap();
         assert!(lp.objective + 1e-6 >= ilp.objective);
     }
 
     #[test]
     fn opt_mechanism_places_jobs() {
-        let img = matrix(ModelKind::AlexNet, 1);
-        let lang = matrix(ModelKind::Lstm, 1);
+        let img = sens(ModelKind::AlexNet, 1);
+        let lang = sens(ModelKind::Lstm, 1);
         let reqs: Vec<JobRequest> = (0..4)
             .map(|i| request(i, 1, &img))
             .chain((4..8).map(|i| request(i, 1, &lang)))
             .collect();
-        let mut cluster = Cluster::homogeneous(ServerSpec::default(), 1);
-        let grants = Opt::default().allocate(&mut cluster, &reqs);
+        let mut fleet = Fleet::homogeneous(ServerSpec::default(), 1);
+        let grants = Opt::default().allocate(&mut fleet, &reqs);
         assert_eq!(grants.len(), 8);
-        assert_eq!(cluster.free_gpus(), 0);
-        assert!(cluster.check_consistency().is_ok());
+        assert_eq!(fleet.free_gpus(), 0);
+        assert!(fleet.check_consistency().is_ok());
+    }
+
+    #[test]
+    fn opt_degrades_gracefully_when_no_type_partition_exists() {
+        // Three 5-GPU gangs over two 8-GPU pools: aggregate admission
+        // passes (15 <= 16) but no per-type partition satisfies the
+        // equality rows, so the ILP is infeasible. The mechanism must
+        // still place the feasible subset instead of idling the round.
+        let mut fleet = Fleet::two_tier(1);
+        let p = OptimisticProfiler::noiseless_fleet(&fleet);
+        let jobs: Vec<Job> = (0..3)
+            .map(|i| Job::new(JobId(i), ModelKind::ResNet18, 5, 0.0, 3600.0))
+            .collect();
+        let sens: Vec<Sensitivity> =
+            jobs.iter().map(|j| p.profile(j)).collect();
+        let reqs: Vec<JobRequest> = jobs
+            .iter()
+            .zip(&sens)
+            .map(|(j, s)| JobRequest { id: j.id, gpus: j.gpus, sens: s })
+            .collect();
+        let grants = Opt::default().allocate(&mut fleet, &reqs);
+        assert_eq!(grants.len(), 2, "two of three gangs fit the pools");
+        assert!(fleet.check_consistency().is_ok());
+    }
+
+    #[test]
+    fn opt_upper_bounds_tune_on_mixed_fleet() {
+        // The A.2.3 program must dominate het-TUNE's realized throughput.
+        let mut fleet = Fleet::two_tier(1);
+        let p = OptimisticProfiler::noiseless_fleet(&fleet);
+        let jobs: Vec<Job> = [
+            (0u64, ModelKind::ResNet18, 4u32),
+            (1, ModelKind::Gnmt, 4),
+            (2, ModelKind::AlexNet, 4),
+            (3, ModelKind::Lstm, 4),
+        ]
+        .iter()
+        .map(|&(id, m, g)| Job::new(JobId(id), m, g, 0.0, 3600.0))
+        .collect();
+        let sens: Vec<Sensitivity> =
+            jobs.iter().map(|j| p.profile(j)).collect();
+        let reqs: Vec<JobRequest> = jobs
+            .iter()
+            .zip(&sens)
+            .map(|(j, s)| JobRequest { id: j.id, gpus: j.gpus, sens: s })
+            .collect();
+        let opt = Opt::default().solve_allocation(&fleet, &reqs).expect("ilp");
+        let grants = Tune::default().allocate(&mut fleet, &reqs);
+        let tune_tput: f64 = jobs
+            .iter()
+            .zip(&sens)
+            .filter_map(|(j, s)| {
+                grants.get(&j.id).map(|g| {
+                    s.matrix(g.gen)
+                        .unwrap()
+                        .throughput_at(g.demand.cpus, g.demand.mem_gb)
+                })
+            })
+            .sum();
+        assert!(
+            opt.objective + 1e-6 >= tune_tput,
+            "OPT {} must dominate TUNE {}",
+            opt.objective,
+            tune_tput
+        );
     }
 }

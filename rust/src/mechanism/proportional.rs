@@ -1,24 +1,28 @@
 //! GPU-proportional allocation — the baseline every DNN scheduler uses
-//! (paper §2): CPU and memory strictly proportional to the GPU grant.
+//! (paper §2): CPU and memory strictly proportional to the GPU grant,
+//! type-blind across a mixed fleet (jobs take types in
+//! capacity-weighted round-robin order, mirroring what a
+//! heterogeneity-unaware cluster does).
 
-use super::{best_fit, Grant, JobRequest, Mechanism};
-use crate::cluster::Cluster;
+use super::{
+    assign_capacity_round_robin, best_fit, delegate_pools, Grant, JobRequest,
+    Mechanism, PoolGrant, PoolRequest,
+};
+use crate::cluster::{Cluster, Fleet};
 use crate::job::JobId;
 use std::collections::BTreeMap;
 
 /// The GPU-proportional baseline mechanism.
 pub struct Proportional;
 
-impl Mechanism for Proportional {
-    fn name(&self) -> &'static str {
-        "proportional"
-    }
-
-    fn allocate(
+impl Proportional {
+    /// The homogeneous §2 baseline inside one pool: every job gets the
+    /// GPU-proportional demand, best-fit packed.
+    pub fn allocate_pool(
         &self,
         cluster: &mut Cluster,
-        jobs: &[JobRequest<'_>],
-    ) -> BTreeMap<JobId, Grant> {
+        jobs: &[PoolRequest<'_>],
+    ) -> BTreeMap<JobId, PoolGrant> {
         let mut grants = BTreeMap::new();
         for job in jobs {
             // With proportional demands, any server with enough free GPUs
@@ -27,67 +31,90 @@ impl Mechanism for Proportional {
             // fragmentation across servers.
             if let Some(p) = best_fit(cluster, &job.prop) {
                 cluster.place(job.id, p.clone());
-                grants.insert(job.id, Grant { placement: p, demand: job.prop });
+                grants.insert(
+                    job.id,
+                    PoolGrant { placement: p, demand: job.prop },
+                );
             }
         }
         grants
     }
 }
 
+impl Mechanism for Proportional {
+    fn name(&self) -> &'static str {
+        "proportional"
+    }
+
+    fn allocate(
+        &self,
+        fleet: &mut Fleet,
+        jobs: &[JobRequest<'_>],
+    ) -> BTreeMap<JobId, Grant> {
+        let assigned = assign_capacity_round_robin(fleet, jobs);
+        delegate_pools(fleet, jobs, &assigned, |cluster, reqs| {
+            self.allocate_pool(cluster, reqs)
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::ServerSpec;
-    use crate::job::{DemandVector, Job, JobId, ModelKind};
-    use crate::profiler::OptimisticProfiler;
+    use crate::cluster::{GpuGen, ServerSpec};
+    use crate::job::{Job, JobId, ModelKind};
+    use crate::profiler::{OptimisticProfiler, Sensitivity};
 
-    fn request(
-        id: u64,
+    fn profile(model: ModelKind, gpus: u32, fleet: &Fleet) -> Sensitivity {
+        OptimisticProfiler::noiseless_fleet(fleet)
+            .profile(&Job::new(JobId(0), model, gpus, 0.0, 60.0))
+    }
+
+    fn requests<'a>(
+        ids: std::ops::Range<u64>,
         gpus: u32,
-        matrix: &crate::profiler::SensitivityMatrix,
-    ) -> JobRequest<'_> {
-        JobRequest {
-            id: JobId(id),
-            gpus,
-            best: matrix.best_demand(),
-            prop: DemandVector::proportional(gpus, 3.0, 62.5),
-            matrix,
-        }
+        s: &'a Sensitivity,
+    ) -> Vec<JobRequest<'a>> {
+        ids.map(|i| JobRequest { id: JobId(i), gpus, sens: s }).collect()
     }
 
     #[test]
     fn proportional_fills_gpus_exactly() {
-        let spec = ServerSpec::default();
-        let profiler = OptimisticProfiler::noiseless(spec);
-        let m = profiler
-            .profile(&Job::new(JobId(0), ModelKind::ResNet18, 4, 0.0, 60.0))
-            .matrix;
-        let mut cluster = Cluster::homogeneous(spec, 2);
-        let reqs: Vec<JobRequest> =
-            (0..4).map(|i| request(i, 4, &m)).collect();
-        let grants = Proportional.allocate(&mut cluster, &reqs);
+        let mut fleet = Fleet::homogeneous(ServerSpec::default(), 2);
+        let s = profile(ModelKind::ResNet18, 4, &fleet);
+        let reqs = requests(0..4, 4, &s);
+        let grants = Proportional.allocate(&mut fleet, &reqs);
         assert_eq!(grants.len(), 4);
-        assert_eq!(cluster.free_gpus(), 0);
-        // CPU/mem exactly proportional.
+        assert_eq!(fleet.free_gpus(), 0);
+        // CPU/mem exactly proportional; type = the single pool's.
         for g in grants.values() {
+            assert_eq!(g.gen, GpuGen::V100);
             assert!((g.demand.cpus - 12.0).abs() < 1e-9);
             assert!((g.demand.mem_gb - 250.0).abs() < 1e-9);
         }
-        assert!(cluster.check_consistency().is_ok());
+        assert!(fleet.check_consistency().is_ok());
     }
 
     #[test]
     fn leftover_jobs_not_granted() {
-        let spec = ServerSpec::default();
-        let profiler = OptimisticProfiler::noiseless(spec);
-        let m = profiler
-            .profile(&Job::new(JobId(0), ModelKind::Gnmt, 8, 0.0, 60.0))
-            .matrix;
-        let mut cluster = Cluster::homogeneous(spec, 1);
-        let reqs: Vec<JobRequest> =
-            (0..3).map(|i| request(i, 8, &m)).collect();
-        let grants = Proportional.allocate(&mut cluster, &reqs);
+        let mut fleet = Fleet::homogeneous(ServerSpec::default(), 1);
+        let s = profile(ModelKind::Gnmt, 8, &fleet);
+        let reqs = requests(0..3, 8, &s);
+        let grants = Proportional.allocate(&mut fleet, &reqs);
         assert_eq!(grants.len(), 1);
-        assert_eq!(cluster.free_gpus(), 0);
+        assert_eq!(fleet.free_gpus(), 0);
+    }
+
+    #[test]
+    fn type_blind_round_robin_uses_both_pools() {
+        // Two identical jobs, two identical-capacity types: both types
+        // get used regardless of sensitivity.
+        let mut fleet = Fleet::two_tier(1);
+        let s = profile(ModelKind::Gnmt, 8, &fleet);
+        let reqs = requests(0..2, 8, &s);
+        let grants = Proportional.allocate(&mut fleet, &reqs);
+        assert_eq!(grants.len(), 2);
+        let gens: Vec<GpuGen> = grants.values().map(|g| g.gen).collect();
+        assert_ne!(gens[0], gens[1]);
     }
 }

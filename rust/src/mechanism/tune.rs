@@ -1,16 +1,16 @@
-//! Synergy-TUNE (paper §4.2): the practical near-optimal mechanism.
+//! Synergy-TUNE (paper §4.2 + A.2.2): the practical near-optimal
+//! mechanism, type-generic.
 //!
-//! Properties (verified by unit + property tests):
+//! Phase 1 — type assignment (A.2.2): each job is pinned to the machine
+//! type that maximizes its best-case throughput *normalized by the
+//! type's compute scale*, among types with free GPUs, so
+//! compute-insensitive jobs defer fast GPUs to jobs that can exploit
+//! them; jobs never span types in a round. On a one-type fleet this is a
+//! no-op pass-through and the mechanism is exactly homogeneous
+//! Synergy-TUNE.
 //!
-//! - **No GPU under-utilization at load**: a runnable job is only left
-//!   unplaced if its GPU demand cannot be met anywhere — fungible demands
-//!   never cause a skip (unlike GREEDY).
-//! - **Fairness floor**: every placed job ends the round with at least its
-//!   GPU-proportional throughput — either it got its (≥ floor) best-case
-//!   demand, or it (and/or victims) were downgraded *to* the proportional
-//!   share, never below.
-//!
-//! Algorithm (§4.2 verbatim):
+//! Phase 2 — per-pool §4.2 (verbatim), against the job's sensitivity
+//! matrix *for its assigned type*:
 //! 1. Sort runnable jobs by GPU, then CPU, then memory demand, descending.
 //! 2. For each job, best-fit pack the best-case demand (single server if
 //!    possible; otherwise minimal multi-server split with proportional
@@ -21,9 +21,23 @@
 //!    downgrade resident jobs holding more than their proportional share
 //!    until the job's proportional demand fits; by construction the
 //!    reclaimed resources suffice.
+//!
+//! Properties (verified by unit + property tests):
+//!
+//! - **No GPU under-utilization at load**: a runnable job is only left
+//!   unplaced if its GPU demand cannot be met anywhere — fungible demands
+//!   never cause a skip (unlike GREEDY).
+//! - **Fairness floor**: every placed job ends the round with at least
+//!   its assigned type's GPU-proportional throughput, which dominates
+//!   the oracle `W_j^Fair` (slowest-type proportional, A.2.2) — either
+//!   it got its (≥ floor) best-case demand, or it (and/or victims) were
+//!   downgraded *to* the proportional share, never below.
 
-use super::{best_fit, first_fit, Grant, JobRequest, Mechanism};
-use crate::cluster::{Cluster, Placement, Share};
+use super::{
+    assign_types, best_fit, delegate_pools, first_fit, Grant, JobRequest,
+    Mechanism, PoolGrant, PoolRequest,
+};
+use crate::cluster::{Cluster, Fleet, Placement, Share};
 use crate::job::{DemandVector, JobId};
 use std::collections::BTreeMap;
 
@@ -65,25 +79,22 @@ impl Tune {
             PlacementStrategy::FirstFit => first_fit(cluster, demand),
         }
     }
-}
 
-impl Mechanism for Tune {
-    fn name(&self) -> &'static str {
-        "tune"
-    }
-
-    fn allocate(
+    /// The homogeneous §4.2 algorithm inside one pool. Public so the
+    /// single-type pass-through property ("a one-type fleet reproduces
+    /// the homogeneous grants bit-for-bit") is directly testable.
+    pub fn allocate_pool(
         &self,
         cluster: &mut Cluster,
-        jobs: &[JobRequest<'_>],
-    ) -> BTreeMap<JobId, Grant> {
-        let mut grants: BTreeMap<JobId, Grant> = BTreeMap::new();
+        jobs: &[PoolRequest<'_>],
+    ) -> BTreeMap<JobId, PoolGrant> {
+        let mut grants: BTreeMap<JobId, PoolGrant> = BTreeMap::new();
         // Proportional demands of this round's jobs (for downgrades).
         let props: BTreeMap<JobId, DemandVector> =
             jobs.iter().map(|j| (j.id, j.prop)).collect();
 
         // Step 1: sort by demand, descending (big rocks first).
-        let mut ordered: Vec<&JobRequest> = jobs.iter().collect();
+        let mut ordered: Vec<&PoolRequest> = jobs.iter().collect();
         ordered.sort_by(|a, b| b.best.sort_key().cmp(&a.best.sort_key()));
 
         for job in ordered {
@@ -92,7 +103,7 @@ impl Mechanism for Tune {
                 cluster.place(job.id, p.clone());
                 grants.insert(
                     job.id,
-                    Grant { placement: p, demand: job.best },
+                    PoolGrant { placement: p, demand: job.best },
                 );
                 continue;
             }
@@ -102,7 +113,7 @@ impl Mechanism for Tune {
                     cluster.place(job.id, p.clone());
                     grants.insert(
                         job.id,
-                        Grant { placement: p, demand: job.prop },
+                        PoolGrant { placement: p, demand: job.prop },
                     );
                     continue;
                 }
@@ -133,7 +144,7 @@ impl Mechanism for Tune {
                     cluster.place(job.id, p.clone());
                     grants.insert(
                         job.id,
-                        Grant { placement: p, demand: floor },
+                        PoolGrant { placement: p, demand: floor },
                     );
                 }
                 None => {
@@ -152,14 +163,39 @@ impl Mechanism for Tune {
     }
 }
 
+impl Mechanism for Tune {
+    fn name(&self) -> &'static str {
+        "tune"
+    }
+
+    fn allocate(
+        &self,
+        fleet: &mut Fleet,
+        jobs: &[JobRequest<'_>],
+    ) -> BTreeMap<JobId, Grant> {
+        // Affinity score: the job's best-case throughput on this type,
+        // normalized by the type's compute scale so compute-insensitive
+        // jobs defer fast GPUs to jobs that can exploit them.
+        let assigned = assign_types(fleet, jobs, |j, gen| {
+            let m = j.sens.matrix(gen).expect("profiled");
+            let peak = m.max_throughput();
+            let scale = gen.compute_scale(m.model.task());
+            peak / scale
+        });
+        delegate_pools(fleet, jobs, &assigned, |cluster, reqs| {
+            self.allocate_pool(cluster, reqs)
+        })
+    }
+}
+
 /// Grow granted demands toward their best-case values using whatever free
 /// CPU/memory remains on the jobs' servers. Multi-server jobs grow
 /// proportionally across their shares (per §4.2's proportional-split
 /// rule). Jobs with the largest gap to best-case are served first.
 fn redistribute_spare(
     cluster: &mut Cluster,
-    grants: &mut BTreeMap<JobId, Grant>,
-    jobs: &[JobRequest<'_>],
+    grants: &mut BTreeMap<JobId, PoolGrant>,
+    jobs: &[PoolRequest<'_>],
 ) {
     let best: BTreeMap<JobId, DemandVector> =
         jobs.iter().map(|j| (j.id, j.best)).collect();
@@ -217,7 +253,7 @@ fn redistribute_spare(
             );
         }
         cluster.place(id, new_p.clone());
-        grants.insert(id, Grant { placement: new_p, demand: new_demand });
+        grants.insert(id, PoolGrant { placement: new_p, demand: new_demand });
     }
 }
 
@@ -226,9 +262,9 @@ fn redistribute_spare(
 /// Returns false if no such victim exists.
 fn downgrade_one_victim(
     cluster: &mut Cluster,
-    grants: &mut BTreeMap<JobId, Grant>,
+    grants: &mut BTreeMap<JobId, PoolGrant>,
     props: &BTreeMap<JobId, DemandVector>,
-    job: &JobRequest<'_>,
+    job: &PoolRequest<'_>,
     strategy: VictimStrategy,
 ) -> bool {
     // Candidate servers: those with any free GPUs (they could contribute
@@ -293,48 +329,37 @@ fn downgrade_one_victim(
         );
     }
     cluster.place(vid, new_p.clone());
-    grants.insert(vid, Grant { placement: new_p, demand: prop });
+    grants.insert(vid, PoolGrant { placement: new_p, demand: prop });
     true
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::ServerSpec;
+    use crate::cluster::{GpuGen, ServerSpec};
     use crate::job::{Job, JobId, ModelKind};
-    use crate::profiler::{OptimisticProfiler, SensitivityMatrix};
+    use crate::profiler::{OptimisticProfiler, Sensitivity};
 
-    fn matrix(model: ModelKind, gpus: u32) -> SensitivityMatrix {
+    fn sens(model: ModelKind, gpus: u32) -> Sensitivity {
         OptimisticProfiler::noiseless(ServerSpec::default())
             .profile(&Job::new(JobId(0), model, gpus, 0.0, 60.0))
-            .matrix
     }
 
-    fn request<'a>(
-        id: u64,
-        gpus: u32,
-        m: &'a SensitivityMatrix,
-    ) -> JobRequest<'a> {
-        JobRequest {
-            id: JobId(id),
-            gpus,
-            best: m.best_demand(),
-            prop: DemandVector::proportional(gpus, 3.0, 62.5),
-            matrix: m,
-        }
+    fn request<'a>(id: u64, gpus: u32, s: &'a Sensitivity) -> JobRequest<'a> {
+        JobRequest { id: JobId(id), gpus, sens: s }
     }
 
     #[test]
     fn tune_never_strands_gpus() {
         // The GREEDY pathology case: 8 CPU-hungry 1-GPU jobs, one server.
-        let m = matrix(ModelKind::M5, 1);
-        let mut cluster = Cluster::homogeneous(ServerSpec::default(), 1);
+        let s = sens(ModelKind::M5, 1);
+        let mut fleet = Fleet::homogeneous(ServerSpec::default(), 1);
         let reqs: Vec<JobRequest> =
-            (0..8).map(|i| request(i, 1, &m)).collect();
-        let grants = Tune::default().allocate(&mut cluster, &reqs);
+            (0..8).map(|i| request(i, 1, &s)).collect();
+        let grants = Tune::default().allocate(&mut fleet, &reqs);
         assert_eq!(grants.len(), 8, "all jobs must be placed");
-        assert_eq!(cluster.free_gpus(), 0, "no stranded GPUs");
-        assert!(cluster.check_consistency().is_ok());
+        assert_eq!(fleet.free_gpus(), 0, "no stranded GPUs");
+        assert!(fleet.check_consistency().is_ok());
     }
 
     #[test]
@@ -349,20 +374,21 @@ mod tests {
             ModelKind::Lstm,
             ModelKind::MobileNetV2,
         ];
-        let matrices: Vec<SensitivityMatrix> =
-            models.iter().map(|&k| matrix(k, 1)).collect();
-        let mut cluster = Cluster::homogeneous(ServerSpec::default(), 1);
-        let reqs: Vec<JobRequest> = matrices
+        let sensitivities: Vec<Sensitivity> =
+            models.iter().map(|&k| sens(k, 1)).collect();
+        let mut fleet = Fleet::homogeneous(ServerSpec::default(), 1);
+        let reqs: Vec<JobRequest> = sensitivities
             .iter()
             .enumerate()
-            .map(|(i, m)| request(i as u64, 1, m))
+            .map(|(i, s)| request(i as u64, 1, s))
             .collect();
-        let grants = Tune::default().allocate(&mut cluster, &reqs);
+        let grants = Tune::default().allocate(&mut fleet, &reqs);
         assert_eq!(grants.len(), 8);
-        for (req, m) in reqs.iter().zip(&matrices) {
+        for (req, s) in reqs.iter().zip(&sensitivities) {
             let g = &grants[&req.id];
+            let m = s.matrix(g.gen).unwrap();
             let got = m.throughput_at(g.demand.cpus, g.demand.mem_gb);
-            let floor = m.proportional_throughput();
+            let floor = s.fair_throughput();
             assert!(
                 got + 1e-9 >= floor,
                 "{:?}: got {} < floor {}",
@@ -375,12 +401,12 @@ mod tests {
     fn tune_gives_spare_resources_to_sensitive_jobs() {
         // 1 hungry image job + 7 language jobs: the image job should walk
         // away with more than proportional CPU.
-        let img = matrix(ModelKind::AlexNet, 1);
-        let lang = matrix(ModelKind::Gnmt, 1);
-        let mut cluster = Cluster::homogeneous(ServerSpec::default(), 1);
+        let img = sens(ModelKind::AlexNet, 1);
+        let lang = sens(ModelKind::Gnmt, 1);
+        let mut fleet = Fleet::homogeneous(ServerSpec::default(), 1);
         let mut reqs = vec![request(0, 1, &img)];
         reqs.extend((1..8).map(|i| request(i, 1, &lang)));
-        let grants = Tune::default().allocate(&mut cluster, &reqs);
+        let grants = Tune::default().allocate(&mut fleet, &reqs);
         assert_eq!(grants.len(), 8);
         let g = &grants[&JobId(0)];
         assert!(
@@ -394,24 +420,24 @@ mod tests {
     fn tune_downgrades_victims_when_needed() {
         // Two hungry jobs land first (taking > proportional), then six
         // more hungry jobs force downgrades; everyone must still fit.
-        let m = matrix(ModelKind::DeepSpeech, 1);
-        let mut cluster = Cluster::homogeneous(ServerSpec::default(), 1);
+        let s = sens(ModelKind::DeepSpeech, 1);
+        let mut fleet = Fleet::homogeneous(ServerSpec::default(), 1);
         let reqs: Vec<JobRequest> =
-            (0..8).map(|i| request(i, 1, &m)).collect();
-        let grants = Tune::default().allocate(&mut cluster, &reqs);
+            (0..8).map(|i| request(i, 1, &s)).collect();
+        let grants = Tune::default().allocate(&mut fleet, &reqs);
         assert_eq!(grants.len(), 8);
         // Total CPU within capacity.
         let total_cpu: f64 = grants.values().map(|g| g.demand.cpus).sum();
         assert!(total_cpu <= 24.0 + 1e-6, "cpu oversubscribed: {total_cpu}");
-        assert!(cluster.check_consistency().is_ok());
+        assert!(fleet.check_consistency().is_ok());
     }
 
     #[test]
     fn tune_multi_gpu_split_is_proportional_per_server() {
-        let m = matrix(ModelKind::ResNet18, 16);
-        let mut cluster = Cluster::homogeneous(ServerSpec::default(), 2);
-        let reqs = vec![request(0, 16, &m)];
-        let grants = Tune::default().allocate(&mut cluster, &reqs);
+        let s = sens(ModelKind::ResNet18, 16);
+        let mut fleet = Fleet::homogeneous(ServerSpec::default(), 2);
+        let reqs = vec![request(0, 16, &s)];
+        let grants = Tune::default().allocate(&mut fleet, &reqs);
         let g = &grants[&JobId(0)];
         assert_eq!(g.placement.span(), 2);
         for share in g.placement.shares.values() {
@@ -426,9 +452,9 @@ mod tests {
         // All-sensitive split (paper Fig 11c): with every job hungry,
         // TUNE must still place everyone (at ~proportional), matching
         // the "never worse than GPU-proportional" guarantee.
-        let m5 = matrix(ModelKind::M5, 1);
-        let shuffle = matrix(ModelKind::ShuffleNetV2, 1);
-        let mut cluster = Cluster::homogeneous(ServerSpec::default(), 2);
+        let m5 = sens(ModelKind::M5, 1);
+        let shuffle = sens(ModelKind::ShuffleNetV2, 1);
+        let mut fleet = Fleet::homogeneous(ServerSpec::default(), 2);
         let mut reqs = Vec::new();
         for i in 0..8 {
             reqs.push(request(i, 1, &m5));
@@ -436,9 +462,33 @@ mod tests {
         for i in 8..16 {
             reqs.push(request(i, 1, &shuffle));
         }
-        let grants = Tune::default().allocate(&mut cluster, &reqs);
+        let grants = Tune::default().allocate(&mut fleet, &reqs);
         assert_eq!(grants.len(), 16);
-        assert_eq!(cluster.free_gpus(), 0);
-        assert!(cluster.check_consistency().is_ok());
+        assert_eq!(fleet.free_gpus(), 0);
+        assert!(fleet.check_consistency().is_ok());
+    }
+
+    #[test]
+    fn tune_sends_compute_bound_jobs_to_fast_type() {
+        // One compute-bound language job + one input-bound image job on a
+        // two-type fleet: the language job should land on the V100 pool.
+        let mut fleet = Fleet::two_tier(1);
+        let p = OptimisticProfiler::noiseless_fleet(&fleet);
+        let jobs: Vec<Job> = [
+            (0u64, ModelKind::Gnmt, 8u32),
+            (1, ModelKind::ShuffleNetV2, 8),
+        ]
+        .iter()
+        .map(|&(id, m, g)| Job::new(JobId(id), m, g, 0.0, 3600.0))
+        .collect();
+        let sens: Vec<Sensitivity> = jobs.iter().map(|j| p.profile(j)).collect();
+        let reqs: Vec<JobRequest> = jobs
+            .iter()
+            .zip(&sens)
+            .map(|(j, s)| JobRequest { id: j.id, gpus: j.gpus, sens: s })
+            .collect();
+        let grants = Tune::default().allocate(&mut fleet, &reqs);
+        assert_eq!(grants[&JobId(0)].gen, GpuGen::V100, "gnmt on fast type");
+        assert_eq!(grants[&JobId(1)].gen, GpuGen::P100);
     }
 }

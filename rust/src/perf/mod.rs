@@ -22,12 +22,21 @@
 //! accesses per epoch miss and must be fetched at the per-GPU storage
 //! bandwidth (MinIO guarantees exactly this hit rate; paper §3.1).
 //!
+//! There is exactly one ground-truth model for every machine type: a
+//! [`PerfModel`] carries the server shape *and* the GPU generation
+//! ([`crate::cluster::GpuGen`], paper A.2.1), and only the GPU stage is
+//! scaled by the generation factor — CPU pre-processing and storage
+//! fetch are host-side and do not change with GPU generation. The V100
+//! basis scales by exactly 1, so [`PerfModel::new`] reproduces the
+//! paper's homogeneous testbed bit-for-bit; a mixed fleet simply holds
+//! one `PerfModel` per generation present (`W_ij`, A.2.1).
+//!
 //! The calibration tests at the bottom pin the module to the published
 //! Fig-2 facts (knees, speedups) — see `job/zoo.rs`.
 
 pub mod cache;
 
-use crate::cluster::ServerSpec;
+use crate::cluster::{GpuGen, ServerSpec};
 use crate::job::{ModelKind, PerfCoeffs};
 use cache::MinIoCache;
 
@@ -36,19 +45,31 @@ use cache::MinIoCache;
 /// data-stall studies [41, 62] operate.
 pub const STORAGE_BW_MB_PER_GPU: f64 = 25.0;
 
-/// The ground-truth world model handed to simulators and the profiler.
+/// The ground-truth world model handed to simulators and the profiler:
+/// one per machine type (server shape × GPU generation).
 #[derive(Debug, Clone, Copy)]
 pub struct PerfModel {
     pub spec: ServerSpec,
+    /// GPU generation of this machine type; scales the GPU stage only.
+    pub gen: GpuGen,
 }
 
 impl PerfModel {
+    /// Ground truth for the V100 calibration basis (scale exactly 1 —
+    /// the paper's homogeneous testbed).
     pub fn new(spec: ServerSpec) -> PerfModel {
-        PerfModel { spec }
+        PerfModel { spec, gen: GpuGen::default() }
+    }
+
+    /// Ground truth for an explicit machine type (`W_ij`, paper A.2.1).
+    pub fn with_gen(spec: ServerSpec, gen: GpuGen) -> PerfModel {
+        PerfModel { spec, gen }
     }
 
     /// Steady-state training throughput in samples/second for `model`
-    /// running on `gpus` GPUs with `cpus` cores and `mem_gb` GB of cache.
+    /// running on `gpus` GPUs of this generation with `cpus` cores and
+    /// `mem_gb` GB of cache:
+    /// `min(scale_i · g · gpu_tput, c · prep_rate, fetch_rate)`.
     ///
     /// Memory below the model's working-set floor pins throughput to ~0
     /// (the job thrashes); the scheduler never allocates below the floor
@@ -64,7 +85,8 @@ impl PerfModel {
         if mem_gb < co.min_mem_gb {
             return 0.0;
         }
-        let gpu_rate = gpus as f64 * co.gpu_tput;
+        let scale = self.gen.compute_scale(model.task());
+        let gpu_rate = gpus as f64 * co.gpu_tput * scale;
         let cpu_rate = cpus * co.cpu_prep_rate;
         let fetch_rate = self.fetch_rate(&co, gpus, mem_gb);
         gpu_rate.min(cpu_rate).min(fetch_rate)
@@ -213,6 +235,61 @@ mod tests {
         let t = w.throughput(ResNet50, 1, 3.0, 62.5);
         let e = w.epoch_time_s(ResNet50, 1, 3.0, 62.5, t * 60.0);
         assert!((e - 60.0).abs() < 1e-9);
+    }
+
+    fn model_on(gen: GpuGen) -> PerfModel {
+        PerfModel::with_gen(ServerSpec::default(), gen)
+    }
+
+    #[test]
+    fn v100_scale_is_exactly_the_homogeneous_ground_truth() {
+        // The one-type special case must be bit-for-bit the calibration
+        // basis: with_gen(V100) and new() agree everywhere.
+        let het = model_on(GpuGen::V100);
+        let hom = world();
+        for m in crate::job::ALL_MODELS {
+            for (c, mem) in [(3.0, 62.5), (12.0, 500.0), (1.0, 30.0)] {
+                assert_eq!(
+                    het.throughput(m, 1, c, mem),
+                    hom.throughput(m, 1, c, mem),
+                    "{m:?} at ({c}, {mem})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn faster_generation_never_slower() {
+        for m in crate::job::ALL_MODELS {
+            for (c, mem) in [(3.0, 62.5), (24.0, 500.0)] {
+                let k80 = model_on(GpuGen::K80).throughput(m, 1, c, mem);
+                let v100 = model_on(GpuGen::V100).throughput(m, 1, c, mem);
+                let a100 = model_on(GpuGen::A100).throughput(m, 1, c, mem);
+                assert!(k80 <= v100 && v100 <= a100, "{m:?} ({c},{mem})");
+            }
+        }
+    }
+
+    #[test]
+    fn input_bound_jobs_gain_little_from_faster_gpus() {
+        // ShuffleNet at 3 CPUs is CPU-bound: generation barely matters.
+        let lo = model_on(GpuGen::K80).throughput(ShuffleNetV2, 1, 3.0, 500.0);
+        let hi = model_on(GpuGen::A100).throughput(ShuffleNetV2, 1, 3.0, 500.0);
+        assert!(
+            hi / lo < 1.05,
+            "input-bound job should not scale with GPU gen: {lo} -> {hi}"
+        );
+        // ...while a compute-bound language model scales with generation.
+        let lo = model_on(GpuGen::K80).throughput(Gnmt, 1, 3.0, 62.5);
+        let hi = model_on(GpuGen::A100).throughput(Gnmt, 1, 3.0, 62.5);
+        assert!(hi / lo > 5.0, "compute-bound job must scale: {lo} -> {hi}");
+    }
+
+    #[test]
+    fn below_working_set_is_zero_on_all_gens() {
+        for gen in crate::cluster::ALL_GENS {
+            assert_eq!(model_on(gen).throughput(Gnmt, 1, 3.0, 10.0), 0.0);
+        }
     }
 
     #[test]

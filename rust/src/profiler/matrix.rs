@@ -18,6 +18,9 @@ pub struct SensitivityMatrix {
     /// GPU-proportional allocation (C_g, M_g).
     pub prop_cpus: f64,
     pub prop_mem_gb: f64,
+    /// Cached best-case demand (98%-of-peak knee) — queried every round
+    /// by the mechanisms and policy views, so computed once here.
+    best: DemandVector,
 }
 
 impl SensitivityMatrix {
@@ -32,7 +35,7 @@ impl SensitivityMatrix {
     ) -> SensitivityMatrix {
         assert_eq!(tput.len(), cpu_points.len());
         assert!(tput.iter().all(|r| r.len() == mem_points.len()));
-        SensitivityMatrix {
+        let mut m = SensitivityMatrix {
             model,
             gpus,
             cpu_points,
@@ -40,7 +43,10 @@ impl SensitivityMatrix {
             tput,
             prop_cpus,
             prop_mem_gb,
-        }
+            best: DemandVector::new(gpus, 1.0, 1.0), // placeholder
+        };
+        m.best = m.demand_at_saturation(0.98);
+        m
     }
 
     /// Throughput at an arbitrary (c, m): the grid cell at-or-below the
@@ -113,9 +119,10 @@ impl SensitivityMatrix {
         )
     }
 
-    /// Default best-case demand (98% of peak — the knee of the curve).
+    /// Default best-case demand (98% of peak — the knee of the curve),
+    /// cached at construction.
     pub fn best_demand(&self) -> DemandVector {
-        self.demand_at_saturation(0.98)
+        self.best
     }
 
     /// Pareto-pruned allocation options for the OPT ILP: grid points whose
@@ -185,7 +192,7 @@ mod tests {
 
     fn matrix(model: ModelKind, gpus: u32) -> SensitivityMatrix {
         let p = OptimisticProfiler::noiseless(ServerSpec::default());
-        p.profile(&Job::new(JobId(1), model, gpus, 0.0, 60.0)).matrix
+        p.profile(&Job::new(JobId(1), model, gpus, 0.0, 60.0)).into_primary()
     }
 
     #[test]

@@ -1,10 +1,20 @@
-//! Optimistic profiling (paper §3.1, Figures 4 & 5).
+//! Optimistic profiling (paper §3.1, Figures 4 & 5; type dimension per
+//! A.2.1).
 //!
-//! On job arrival, Synergy builds a *resource sensitivity matrix*
-//! `W_j[c, m]` — job throughput at every discrete (CPU, memory)
-//! allocation. Profiling every cell empirically would take hours
-//! (24 CPUs × 10 memory levels × 1 min ≈ 4 h); optimistic profiling
-//! reduces this two ways:
+//! On job arrival, Synergy builds the job's *resource sensitivity*: its
+//! throughput at every discrete (CPU, memory) allocation, for every
+//! machine type present in the fleet — the 3-D structure `W_j[k][c, m]`
+//! of the heterogeneous formulation, stored as one
+//! [`SensitivityMatrix`] per [`GpuGen`] ([`Sensitivity`]). A one-type
+//! fleet degenerates to the paper's homogeneous `W_j[c, m]` with exactly
+//! the homogeneous profiling cost; each extra type adds one more sweep,
+//! so cost scales with `|K|` (A.2: "profiling CPU and memory
+//! requirements along an additional dimension — GPU type, at an
+//! additional profiling cost").
+//!
+//! Profiling every cell empirically would take hours (24 CPUs × 10
+//! memory levels × 1 min ≈ 4 h per type); optimistic profiling reduces
+//! this two ways:
 //!
 //! 1. **Memory axis is analytic**: with MinIO, the miss rate at memory
 //!    `m` is exactly `1 - m/dataset`, and the storage bandwidth is known,
@@ -16,15 +26,18 @@
 //!    of 24).
 //!
 //! The profiler only sees *noisy point measurements* of the ground-truth
-//! [`PerfModel`] — exactly the information a real profiling run yields —
+//! [`PerfModel`]s — exactly the information a real profiling run yields —
 //! so the Fig-5 validation benches compare estimate vs truth honestly.
+//! Each (job, type) pair draws an independent deterministic noise
+//! stream; the V100 stream is salt-0, so a one-type V100 fleet
+//! reproduces the pre-unification homogeneous profiler bit-for-bit.
 
 mod matrix;
 
 pub use matrix::SensitivityMatrix;
 
-use crate::cluster::ServerSpec;
-use crate::job::Job;
+use crate::cluster::{Fleet, GpuGen, ServerSpec};
+use crate::job::{Job, Task};
 use crate::perf::{PerfModel, STORAGE_BW_MB_PER_GPU};
 use crate::util::rng::Pcg64;
 
@@ -35,20 +48,96 @@ pub const MEM_UNIT_GB: f64 = 12.5;
 /// Profiling cost model: one empirical point ≈ one minute (paper §3.1).
 pub const MINUTES_PER_POINT: f64 = 1.0;
 
-/// Result of profiling one job.
+/// One job's full resource sensitivity: the 3-D `W_j[k][c, m]` — one
+/// matrix per machine type profiled (A.2.1). For a one-type fleet this
+/// is the paper's homogeneous `W_j[c, m]` plus its profiling-cost
+/// accounting.
 #[derive(Debug, Clone)]
-pub struct ProfileOutcome {
-    pub matrix: SensitivityMatrix,
-    /// Number of empirical (CPU) points measured.
+pub struct Sensitivity {
+    /// `(generation, matrix)` pairs, one per machine type profiled, in
+    /// fleet pool order.
+    pub per_type: Vec<(GpuGen, SensitivityMatrix)>,
+    /// Total empirical (CPU) points measured across all types.
     pub empirical_points: usize,
     /// Estimated profiling wall-clock cost, minutes.
     pub cost_minutes: f64,
+    /// Index of the slowest generation in `per_type` (the fairness
+    /// oracle's basis), cached at construction — policy views query it
+    /// every round for every job.
+    floor_idx: usize,
+    /// Cached oracle `W_j^Fair`.
+    fair: f64,
 }
 
-/// The optimistic profiler.
+impl Sensitivity {
+    /// Build from per-type matrices, caching the fairness oracle.
+    pub fn new(
+        per_type: Vec<(GpuGen, SensitivityMatrix)>,
+        empirical_points: usize,
+    ) -> Sensitivity {
+        assert!(!per_type.is_empty(), "profiled on at least one type");
+        let floor_idx = (0..per_type.len())
+            .min_by(|&a, &b| {
+                per_type[a]
+                    .0
+                    .compute_scale(Task::Image)
+                    .partial_cmp(&per_type[b].0.compute_scale(Task::Image))
+                    .unwrap()
+            })
+            .unwrap();
+        let fair = per_type[floor_idx].1.proportional_throughput();
+        Sensitivity {
+            per_type,
+            empirical_points,
+            cost_minutes: empirical_points as f64 * MINUTES_PER_POINT,
+            floor_idx,
+            fair,
+        }
+    }
+
+    pub fn matrix(&self, gen: GpuGen) -> Option<&SensitivityMatrix> {
+        self.per_type.iter().find(|(g, _)| *g == gen).map(|(_, m)| m)
+    }
+
+    /// Generations this job was profiled on.
+    pub fn gens(&self) -> Vec<GpuGen> {
+        self.per_type.iter().map(|(g, _)| *g).collect()
+    }
+
+    /// The first (for a one-type fleet: the only) matrix.
+    pub fn primary(&self) -> &SensitivityMatrix {
+        &self.per_type[0].1
+    }
+
+    /// Consume into the first matrix (single-type convenience).
+    pub fn into_primary(self) -> SensitivityMatrix {
+        self.per_type
+            .into_iter()
+            .next()
+            .expect("profiled on at least one type")
+            .1
+    }
+
+    /// The slowest-generation matrix — the basis of the fairness oracle.
+    pub fn floor_matrix(&self) -> &SensitivityMatrix {
+        &self.per_type[self.floor_idx].1
+    }
+
+    /// The conservative fairness oracle `W_j^Fair` (A.2.2): the
+    /// GPU-proportional throughput on the slowest generation profiled.
+    /// On a one-type fleet this is exactly the homogeneous proportional
+    /// floor `W_j[C_g, M_g]` (§4.1). Cached at construction.
+    pub fn fair_throughput(&self) -> f64 {
+        self.fair
+    }
+}
+
+/// The optimistic profiler: one instance profiles a job on every machine
+/// type of its fleet (one [`PerfModel`] ground truth per type).
 #[derive(Debug, Clone)]
 pub struct OptimisticProfiler {
-    pub world: PerfModel,
+    /// Ground truth per machine type, in fleet pool order.
+    pub worlds: Vec<PerfModel>,
     /// Multiplicative measurement noise (std dev), e.g. 0.03.
     pub noise_sd: f64,
     /// Flatness threshold for adaptive CPU sampling (paper uses 10%).
@@ -63,81 +152,109 @@ pub struct OptimisticProfiler {
 }
 
 impl OptimisticProfiler {
+    /// Profiler for a one-type V100 fleet of `spec` servers.
     pub fn new(spec: ServerSpec) -> OptimisticProfiler {
         OptimisticProfiler {
-            world: PerfModel::new(spec),
+            worlds: vec![PerfModel::new(spec)],
             noise_sd: 0.03,
             threshold: 0.10,
             span_factor: 1,
         }
     }
 
-    /// Noise-free variant (for exactness-sensitive tests).
+    /// Noise-free single-type variant (for exactness-sensitive tests).
     pub fn noiseless(spec: ServerSpec) -> OptimisticProfiler {
         OptimisticProfiler { noise_sd: 0.0, ..OptimisticProfiler::new(spec) }
     }
 
-    /// One "empirical" measurement: run a few training iterations at
-    /// (cpus, full memory) and read the throughput. Modeled as the ground
-    /// truth perturbed by multiplicative Gaussian noise.
-    fn measure(&self, job: &Job, cpus: f64, rng: &mut Pcg64) -> f64 {
-        let mut span =
-            (job.gpus as f64 / self.world.spec.gpus as f64).ceil().max(1.0);
-        if job.gpus > 1 {
-            span *= self.span_factor.max(1) as f64;
-        }
-        let full_mem = self.world.spec.mem_gb * span;
-        let t = self.world.throughput(job.model, job.gpus, cpus, full_mem);
-        if self.noise_sd == 0.0 {
-            t
-        } else {
-            (t * (1.0 + self.noise_sd * rng.normal())).max(0.0)
+    /// Profiler covering every type pool in `fleet` (A.2's `W_ij` at
+    /// `|K|×` the cost).
+    pub fn for_fleet(fleet: &Fleet) -> OptimisticProfiler {
+        OptimisticProfiler {
+            worlds: fleet
+                .pools
+                .iter()
+                .map(|p| PerfModel::with_gen(p.cluster.spec, p.gen))
+                .collect(),
+            noise_sd: 0.03,
+            threshold: 0.10,
+            span_factor: 1,
         }
     }
 
-    /// Profile a job: adaptive CPU sweep at full memory + analytic memory
-    /// fill. Deterministic given the job's RNG stream.
-    pub fn profile(&self, job: &Job) -> ProfileOutcome {
-        let spec = self.world.spec;
-        let mut span = ((job.gpus + spec.gpus - 1) / spec.gpus).max(1) as usize;
-        if job.gpus > 1 {
-            // Single-GPU jobs cannot split across servers (§4.2), so the
-            // widened grid only applies to multi-GPU jobs.
-            span *= self.span_factor.max(1);
+    /// Noise-free fleet variant.
+    pub fn noiseless_fleet(fleet: &Fleet) -> OptimisticProfiler {
+        OptimisticProfiler { noise_sd: 0.0, ..OptimisticProfiler::for_fleet(fleet) }
+    }
+
+    /// Profile a job on every machine type: adaptive CPU sweep at full
+    /// memory + analytic memory fill, once per type. Deterministic given
+    /// the job's RNG stream (each (job, type) pair draws an independent
+    /// noise stream; V100 is salt-0 for homogeneous bit-compatibility).
+    pub fn profile(&self, job: &Job) -> Sensitivity {
+        let mut per_type = Vec::with_capacity(self.worlds.len());
+        let mut points = 0usize;
+        for world in &self.worlds {
+            let spec = world.spec;
+            let mut span =
+                ((job.gpus + spec.gpus - 1) / spec.gpus).max(1) as usize;
+            if job.gpus > 1 {
+                // Single-GPU jobs cannot split across servers (§4.2), so
+                // the widened grid only applies to multi-GPU jobs.
+                span *= self.span_factor.max(1);
+            }
+            let max_cpus = spec.cpus as usize * span;
+            let max_mem = spec.mem_gb * span as f64;
+
+            let mut rng = Pcg64::new(
+                0x5EED_0F11 ^ job.rng_stream,
+                job.rng_stream ^ world.gen.seed_salt(),
+            );
+
+            // --- adaptive empirical CPU sweep at full memory -------------
+            let (pts, n_points) =
+                adaptive_cpu_sweep(max_cpus, self.threshold, |c| {
+                    let t = world.throughput(
+                        job.model,
+                        job.gpus,
+                        c as f64,
+                        max_mem,
+                    );
+                    if self.noise_sd == 0.0 {
+                        t
+                    } else {
+                        (t * (1.0 + self.noise_sd * rng.normal())).max(0.0)
+                    }
+                });
+            points += n_points;
+
+            // Monotone piecewise-linear interpolation over measured points.
+            let cpu_curve: Vec<f64> =
+                (0..=max_cpus).map(|c| interp(&pts, c as f64)).collect();
+
+            // --- analytic memory fill ------------------------------------
+            let mem_points = mem_grid(max_mem);
+            let cpu_points: Vec<f64> =
+                (1..=max_cpus).map(|c| c as f64).collect();
+            let tput = analytic_memory_fill(
+                job.model,
+                job.gpus,
+                &cpu_curve,
+                &mem_points,
+            );
+
+            let prop_c =
+                spec.cpus as f64 / spec.gpus as f64 * job.gpus as f64;
+            let prop_m = spec.mem_gb / spec.gpus as f64 * job.gpus as f64;
+            per_type.push((
+                world.gen,
+                SensitivityMatrix::new(
+                    job.model, job.gpus, cpu_points, mem_points, tput,
+                    prop_c, prop_m,
+                ),
+            ));
         }
-        let max_cpus = spec.cpus as usize * span;
-        let max_mem = spec.mem_gb * span as f64;
-
-        let mut rng = Pcg64::new(0x5EED_0F11 ^ job.rng_stream, job.rng_stream);
-
-        // --- adaptive empirical CPU sweep at full memory -----------------
-        let (pts, n_points) =
-            adaptive_cpu_sweep(max_cpus, self.threshold, |c| {
-                self.measure(job, c as f64, &mut rng)
-            });
-
-        // Monotone piecewise-linear interpolation over measured points.
-        let cpu_curve: Vec<f64> =
-            (0..=max_cpus).map(|c| interp(&pts, c as f64)).collect();
-
-        // --- analytic memory fill ----------------------------------------
-        let mem_points = mem_grid(max_mem);
-        let cpu_points: Vec<f64> = (1..=max_cpus).map(|c| c as f64).collect();
-        let tput =
-            analytic_memory_fill(job.model, job.gpus, &cpu_curve, &mem_points);
-
-        let prop_c = self.world.spec.cpus as f64 / self.world.spec.gpus as f64
-            * job.gpus as f64;
-        let prop_m = self.world.spec.mem_gb / self.world.spec.gpus as f64
-            * job.gpus as f64;
-        let matrix = SensitivityMatrix::new(
-            job.model, job.gpus, cpu_points, mem_points, tput, prop_c, prop_m,
-        );
-        ProfileOutcome {
-            matrix,
-            empirical_points: n_points,
-            cost_minutes: n_points as f64 * MINUTES_PER_POINT,
-        }
+        Sensitivity::new(per_type, points)
     }
 }
 
@@ -159,8 +276,8 @@ pub fn mem_grid(max_mem: f64) -> Vec<f64> {
 /// (relative). Returns the measured `(cpus, tput)` points, ascending, and
 /// the number of empirical measurements taken.
 ///
-/// Shared by the homogeneous profiler and the heterogeneous profiler
-/// (paper A.2: the same sweep runs once per machine type).
+/// One sweep per machine type (paper A.2: the same sweep runs once per
+/// type, at `|K|×` the cost).
 pub fn adaptive_cpu_sweep(
     max_cpus: usize,
     threshold: f64,
@@ -203,7 +320,8 @@ pub fn adaptive_cpu_sweep(
 
 /// Analytic completion of the memory axis (paper §3.1): with MinIO, the
 /// throughput at `(c, m)` is the empirical CPU-bound rate capped by the
-/// fetch rate the cache's fixed miss fraction allows.
+/// fetch rate the cache's fixed miss fraction allows. The fetch path is
+/// host-side, so this fill is identical for every GPU generation.
 pub fn analytic_memory_fill(
     model: crate::job::ModelKind,
     gpus: u32,
@@ -278,13 +396,13 @@ mod tests {
         // every grid point.
         let p = profiler();
         let j = job(ModelKind::ResNet18, 1);
-        let out = p.profile(&j);
+        let out = p.profile(&j).into_primary();
         let world = PerfModel::new(ServerSpec::default());
         let mut worst: f64 = 0.0;
-        for (ci, &c) in out.matrix.cpu_points.iter().enumerate() {
-            for (mi, &m) in out.matrix.mem_points.iter().enumerate() {
+        for (ci, &c) in out.cpu_points.iter().enumerate() {
+            for (mi, &m) in out.mem_points.iter().enumerate() {
                 let truth = world.throughput(ModelKind::ResNet18, 1, c, m);
-                let est = out.matrix.tput[ci][mi];
+                let est = out.tput[ci][mi];
                 if truth > 0.0 {
                     worst = worst.max((est - truth).abs() / truth);
                 }
@@ -318,16 +436,16 @@ mod tests {
     fn matrix_dimensions_cover_grid() {
         let p = profiler();
         let out = p.profile(&job(ModelKind::AlexNet, 1));
-        assert_eq!(out.matrix.cpu_points.len(), 24);
-        assert_eq!(out.matrix.mem_points.len(), 40); // 500 / 12.5
+        assert_eq!(out.primary().cpu_points.len(), 24);
+        assert_eq!(out.primary().mem_points.len(), 40); // 500 / 12.5
     }
 
     #[test]
     fn multi_gpu_job_spans_more_resources() {
         let p = profiler();
-        let out = p.profile(&job(ModelKind::ResNet18, 16));
-        assert_eq!(out.matrix.cpu_points.len(), 48); // 2 servers
-        assert!((out.matrix.mem_points.last().unwrap() - 1000.0).abs() < 1e-9);
+        let out = p.profile(&job(ModelKind::ResNet18, 16)).into_primary();
+        assert_eq!(out.cpu_points.len(), 48); // 2 servers
+        assert!((out.mem_points.last().unwrap() - 1000.0).abs() < 1e-9);
     }
 
     #[test]
@@ -337,7 +455,7 @@ mod tests {
         let a = p.profile(&j);
         let b = p.profile(&j);
         assert_eq!(a.empirical_points, b.empirical_points);
-        assert_eq!(a.matrix.tput, b.matrix.tput);
+        assert_eq!(a.primary().tput, b.primary().tput);
     }
 
     #[test]
@@ -346,5 +464,82 @@ mod tests {
         assert_eq!(interp(&pts, 0.0), 10.0);
         assert_eq!(interp(&pts, 3.0), 30.0);
         assert_eq!(interp(&pts, 9.0), 50.0);
+    }
+
+    // --- per-type (A.2) behaviour -------------------------------------
+
+    fn fleet() -> Fleet {
+        Fleet::two_tier(2)
+    }
+
+    #[test]
+    fn profiles_every_type_in_the_fleet() {
+        let p = OptimisticProfiler::noiseless_fleet(&fleet());
+        let s = p.profile(&job(ModelKind::ResNet18, 1));
+        assert_eq!(s.per_type.len(), 2);
+        assert!(s.matrix(GpuGen::P100).is_some());
+        assert!(s.matrix(GpuGen::V100).is_some());
+        assert!(s.matrix(GpuGen::A100).is_none());
+    }
+
+    #[test]
+    fn per_type_matrices_reflect_generation_speed() {
+        let p = OptimisticProfiler::noiseless_fleet(&fleet());
+        let s = p.profile(&job(ModelKind::Gnmt, 1)); // compute-bound
+        let slow = s.matrix(GpuGen::P100).unwrap().max_throughput();
+        let fast = s.matrix(GpuGen::V100).unwrap().max_throughput();
+        assert!(
+            fast / slow > 1.5,
+            "compute-bound job must be faster on V100: {slow} vs {fast}"
+        );
+    }
+
+    #[test]
+    fn cost_scales_with_type_count() {
+        let two = OptimisticProfiler::noiseless_fleet(&fleet());
+        let j = job(ModelKind::AlexNet, 1);
+        let s2 = two.profile(&j);
+        let one = OptimisticProfiler {
+            worlds: two.worlds[..1].to_vec(),
+            ..two.clone()
+        };
+        let s1 = one.profile(&j);
+        assert!(
+            s2.cost_minutes > s1.cost_minutes,
+            "profiling 2 types must cost more than 1"
+        );
+    }
+
+    #[test]
+    fn one_type_fleet_reproduces_single_type_profile_exactly() {
+        // The issue's parity clause: a one-type cluster reproduces the
+        // homogeneous cost and matrices exactly — including noise, since
+        // V100's seed salt is 0.
+        let spec = ServerSpec::default();
+        let single = OptimisticProfiler::new(spec);
+        let fleet1 = Fleet::homogeneous(spec, 2);
+        let via_fleet = OptimisticProfiler {
+            noise_sd: single.noise_sd,
+            ..OptimisticProfiler::for_fleet(&fleet1)
+        };
+        let j = job(ModelKind::ResNet50, 1);
+        let a = single.profile(&j);
+        let b = via_fleet.profile(&j);
+        assert_eq!(a.empirical_points, b.empirical_points);
+        assert_eq!(a.cost_minutes, b.cost_minutes);
+        assert_eq!(a.primary().tput, b.primary().tput);
+    }
+
+    #[test]
+    fn fair_oracle_is_slowest_type_proportional() {
+        let p = OptimisticProfiler::noiseless_fleet(&fleet());
+        let s = p.profile(&job(ModelKind::Gnmt, 1));
+        let fair = s.fair_throughput();
+        let p100 = s.matrix(GpuGen::P100).unwrap().proportional_throughput();
+        assert_eq!(fair, p100);
+        // Any type's proportional throughput dominates the oracle.
+        for (_, m) in &s.per_type {
+            assert!(m.proportional_throughput() + 1e-9 >= fair);
+        }
     }
 }

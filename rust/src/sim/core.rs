@@ -1,9 +1,6 @@
 //! The shared event-driven simulation core.
 //!
-//! Both the homogeneous simulator ([`crate::sim::Simulator`]) and the
-//! heterogeneous one ([`crate::hetero::HeteroSimulator`]) used to carry
-//! their own copies of the same scheduling loop; this module is the one
-//! copy both now configure. The split of responsibilities:
+//! The split of responsibilities:
 //!
 //! - **The core** ([`run_events`]) owns the event queue and everything
 //!   workload- and tenant-related: arrival admission + profiling hooks,
@@ -13,17 +10,19 @@
 //! - **The [`ClusterModel`]** owns everything topology-related: how a
 //!   job is profiled, how the policy view is derived from its context,
 //!   and how the runnable set is allocated and what throughput each
-//!   grant yields. The homogeneous model delegates to
-//!   [`crate::mechanism`]; the heterogeneous one to
-//!   [`crate::hetero::mechanism`].
+//!   grant yields. Since the one-resource-model unification there is a
+//!   single implementation — [`crate::sim::FleetModel`] — parameterized
+//!   by the fleet description (one type pool = the paper's homogeneous
+//!   setting; several = the A.2 heterogeneous one), delegating to the
+//!   type-generic [`crate::mechanism`] stack.
 //!
 //! Because policy ordering, quota admission, progress arithmetic, and
-//! metric accounting are literally the same code on both paths, a
-//! scenario (trace × quotas × policy) behaves identically modulo the
-//! hardware model — same seed + same scenario ⇒ identical schedule from
-//! either entry point (golden-tested in `tests/scenarios.rs`, which also
-//! pins a single-type V100 heterogeneous cluster to the homogeneous
-//! engine bit-for-bit).
+//! metric accounting live here, a scenario (trace × quotas × policy)
+//! behaves identically modulo the fleet description — same seed + same
+//! scenario ⇒ identical schedule from either front-end (golden-tested
+//! in `tests/scenarios.rs`, which also pins a single-type V100 fleet
+//! driven through the hetero front-end to the homogeneous front-end
+//! bit-for-bit).
 //!
 //! ## Events
 //!

@@ -1,24 +1,26 @@
-//! The homogeneous simulator: a thin configuration of the shared
-//! event-driven core ([`crate::sim::core`]).
+//! The one simulation engine: a [`FleetModel`] — the single
+//! [`ClusterModel`] implementation — parameterized by a fleet
+//! description, driven by the shared event core ([`crate::sim::core`]).
 //!
-//! [`Simulator`] wires the homogeneous pieces — [`Cluster`] bookkeeping,
-//! the optimistic profiler, the ground-truth [`PerfModel`], and a
-//! [`Mechanism`] — into a [`HomoModel`] and hands the loop itself to
-//! [`run_events`]. Policy ordering, tenant-quota admission, progress,
-//! and metrics all live in the core, shared byte-for-byte with the
-//! heterogeneous engine.
+//! [`Simulator`] wires a [`Fleet`] (one V100 pool by default; any mix of
+//! generations via [`SimConfig::types`]), the optimistic profiler, one
+//! ground-truth [`PerfModel`] per generation, and a [`Mechanism`] into a
+//! [`FleetModel`] and hands the loop itself to [`run_events`]. Policy
+//! ordering, tenant-quota admission, progress, and metrics all live in
+//! the core. The heterogeneous front-end ([`crate::hetero`]) is nothing
+//! but a `SimConfig` with `types` set — there is no second engine.
 
 use super::core::{
     run_events, utilization_sample, ClusterModel, CoreConfig, SimResult,
 };
-use crate::cluster::{Cluster, ServerSpec};
-use crate::coordinator::{policy_view, JobContext};
+use crate::cluster::{Fleet, GpuGen, ServerSpec, TypeSpec};
+use crate::coordinator::policy_view;
 use crate::job::{Job, JobId};
 use crate::mechanism::{by_name as mechanism_by_name, JobRequest, Mechanism};
 use crate::metrics::UtilSample;
 use crate::perf::PerfModel;
 use crate::policy::{by_name as policy_by_name, PolicyJobView};
-use crate::profiler::OptimisticProfiler;
+use crate::profiler::{OptimisticProfiler, Sensitivity};
 use crate::workload::TenantQuotas;
 use std::collections::BTreeMap;
 
@@ -43,10 +45,15 @@ pub struct SimConfig {
     pub network_penalty: f64,
     /// Server shape that job *durations* are defined against (paper §5.1:
     /// trace durations assume GPU-proportional allocation on the study's
-    /// ratio-3 servers). Defaults to `spec`; the Fig-12 CPU:GPU-ratio
-    /// sweep pins it to ratio 3 so richer servers genuinely speed the
-    /// baseline up instead of re-normalizing the work away.
+    /// ratio-3 servers). Defaults to the fleet's fairness oracle; the
+    /// Fig-12 CPU:GPU-ratio sweep pins it to ratio 3 so richer servers
+    /// genuinely speed the baseline up instead of re-normalizing the
+    /// work away.
     pub reference_spec: Option<ServerSpec>,
+    /// Mixed-fleet description (paper A.2): one entry per machine type.
+    /// `None` = the homogeneous special case, `n_servers` V100 machines
+    /// of `spec` (when set, `spec`/`n_servers` are ignored).
+    pub types: Option<Vec<TypeSpec>>,
 }
 
 impl Default for SimConfig {
@@ -62,80 +69,103 @@ impl Default for SimConfig {
             span_factor: 1,
             network_penalty: 0.0,
             reference_spec: None,
+            types: None,
         }
     }
 }
 
-/// The homogeneous topology behind the shared core: one [`Cluster`], one
-/// ground-truth [`PerfModel`], per-job [`JobContext`]s from the
-/// optimistic profiler, and a homogeneous allocation [`Mechanism`].
-pub struct HomoModel {
-    cluster: Cluster,
-    world: PerfModel,
+/// The topology behind the shared core — the only [`ClusterModel`]: one
+/// [`Fleet`], one ground-truth [`PerfModel`] per generation present,
+/// per-job [`Sensitivity`] contexts from the one optimistic profiler,
+/// and one allocation [`Mechanism`]. A one-pool fleet *is* the paper's
+/// homogeneous simulator; more pools *is* the A.2 heterogeneous one.
+pub struct FleetModel {
+    fleet: Fleet,
+    worlds: BTreeMap<GpuGen, PerfModel>,
     profiler: OptimisticProfiler,
     mechanism: Box<dyn Mechanism>,
-    contexts: BTreeMap<JobId, JobContext>,
+    sens: BTreeMap<JobId, Sensitivity>,
     reference_spec: Option<ServerSpec>,
     network_penalty: f64,
+    /// Largest single pool, GPUs — the gang-fit bound (A.2.2: no
+    /// cross-type spans).
+    max_pool_gpus: u32,
 }
 
-impl HomoModel {
+impl FleetModel {
     /// Build the model a [`SimConfig`] describes.
-    pub fn from_config(cfg: &SimConfig) -> HomoModel {
-        HomoModel {
-            cluster: Cluster::homogeneous(cfg.spec, cfg.n_servers),
-            world: PerfModel::new(cfg.spec),
-            profiler: OptimisticProfiler {
-                noise_sd: cfg.profile_noise,
-                span_factor: cfg.span_factor,
-                ..OptimisticProfiler::new(cfg.spec)
-            },
-            mechanism: mechanism_by_name(&cfg.mechanism).unwrap_or_else(|| {
-                panic!("unknown mechanism {}", cfg.mechanism)
-            }),
-            contexts: BTreeMap::new(),
+    pub fn from_config(cfg: &SimConfig) -> FleetModel {
+        let fleet = match &cfg.types {
+            Some(types) => Fleet::new(types),
+            None => Fleet::homogeneous(cfg.spec, cfg.n_servers),
+        };
+        let worlds: BTreeMap<GpuGen, PerfModel> = fleet
+            .pools
+            .iter()
+            .map(|p| (p.gen, PerfModel::with_gen(p.cluster.spec, p.gen)))
+            .collect();
+        let profiler = OptimisticProfiler {
+            noise_sd: cfg.profile_noise,
+            span_factor: cfg.span_factor,
+            ..OptimisticProfiler::for_fleet(&fleet)
+        };
+        let mechanism = mechanism_by_name(&cfg.mechanism).unwrap_or_else(|| {
+            panic!("unknown mechanism {}", cfg.mechanism)
+        });
+        let max_pool_gpus = fleet.max_pool_gpus();
+        FleetModel {
+            fleet,
+            worlds,
+            profiler,
+            mechanism,
+            sens: BTreeMap::new(),
             reference_spec: cfg.reference_spec,
             network_penalty: cfg.network_penalty,
+            max_pool_gpus,
         }
     }
 }
 
-impl ClusterModel for HomoModel {
+impl ClusterModel for FleetModel {
     fn fits(&self, job: &Job) -> bool {
-        job.gpus <= self.cluster.total_gpus()
+        job.gpus <= self.max_pool_gpus
     }
 
     fn total_gpus(&self) -> u32 {
-        self.cluster.total_gpus()
+        self.fleet.total_gpus()
     }
 
     fn profile_arrival(&mut self, job: &mut Job) -> f64 {
-        let outcome = self.profiler.profile(job);
-        let ctx = JobContext::new(outcome.matrix, &self.cluster);
+        // Profiled on every machine type present (A.2's `W_ij`; one
+        // sweep on a one-type fleet).
+        let s = self.profiler.profile(job);
         // Total work from the baseline duration (paper §5.1), against
-        // the reference server shape.
+        // the reference server shape or the fleet's fairness oracle
+        // (slowest-type proportional; on one type, the homogeneous
+        // proportional throughput).
         let ref_tput = match self.reference_spec {
             Some(rs) => PerfModel::new(rs)
                 .proportional_throughput(job.model, job.gpus),
-            None => ctx.prop_tput,
+            None => s.fair_throughput(),
         };
         job.total_samples = job.duration_prop_s * ref_tput;
-        self.contexts.insert(job.id, ctx);
-        outcome.cost_minutes
+        let cost = s.cost_minutes;
+        self.sens.insert(job.id, s);
+        cost
     }
 
     fn forget(&mut self, id: JobId) {
-        self.contexts.remove(&id);
+        self.sens.remove(&id);
     }
 
     fn begin_round(&mut self) {
-        self.cluster.evict_all();
+        self.fleet.evict_all();
     }
 
     fn policy_views(&self, active: &BTreeMap<JobId, Job>) -> Vec<PolicyJobView> {
         active
             .values()
-            .map(|j| policy_view(&self.cluster, j, &self.contexts[&j.id]))
+            .map(|j| policy_view(&self.fleet, j, &self.sens[&j.id]))
             .collect()
     }
 
@@ -146,28 +176,23 @@ impl ClusterModel for HomoModel {
     ) -> BTreeMap<JobId, f64> {
         let requests: Vec<JobRequest<'_>> = runnable
             .iter()
-            .map(|id| {
-                let job = &active[id];
-                let ctx = &self.contexts[id];
-                JobRequest {
-                    id: *id,
-                    gpus: job.gpus,
-                    best: ctx.best,
-                    prop: ctx.prop,
-                    matrix: &ctx.matrix,
-                }
+            .map(|id| JobRequest {
+                id: *id,
+                gpus: active[id].gpus,
+                sens: &self.sens[id],
             })
             .collect();
-        let grants = self.mechanism.allocate(&mut self.cluster, &requests);
+        let grants = self.mechanism.allocate(&mut self.fleet, &requests);
+        debug_assert!(self.fleet.check_consistency().is_ok());
         // Deploy: fix each granted job's progress rate for the round from
-        // the ground-truth model at its granted (c, m). Fragmented
-        // placements pay the data-parallel sync cost (§6 consolidation
-        // tradeoff; 0 in the paper's main body).
+        // its assigned type's ground truth at the granted (c, m).
+        // Fragmented placements pay the data-parallel sync cost (§6
+        // consolidation tradeoff; 0 in the paper's main body).
         grants
             .iter()
             .map(|(id, grant)| {
                 let job = &active[id];
-                let rate = self.world.throughput(
+                let rate = self.worlds[&grant.gen].throughput(
                     job.model,
                     job.gpus,
                     grant.demand.cpus,
@@ -183,13 +208,17 @@ impl ClusterModel for HomoModel {
         utilization_sample(
             now,
             active,
-            self.cluster.gpu_utilization(),
-            self.cluster.cpu_utilization(),
-            1.0 - self.cluster.free_mem_gb() / self.cluster.total_mem_gb(),
-            self.cluster.total_cpus(),
+            self.fleet.gpu_utilization(),
+            self.fleet.cpu_utilization(),
+            1.0 - self.fleet.free_mem_gb() / self.fleet.total_mem_gb(),
+            self.fleet.total_cpus(),
         )
     }
 }
+
+/// Pre-unification name for the engine model, kept as an alias: the
+/// "homogeneous model" is the same [`FleetModel`] with one pool.
+pub type HomoModel = FleetModel;
 
 /// The simulator.
 pub struct Simulator {
@@ -217,7 +246,7 @@ impl Simulator {
     pub fn run(&self, jobs: Vec<Job>) -> SimResult {
         let policy = policy_by_name(&self.cfg.policy)
             .unwrap_or_else(|| panic!("unknown policy {}", self.cfg.policy));
-        let mut model = HomoModel::from_config(&self.cfg);
+        let mut model = FleetModel::from_config(&self.cfg);
         run_events(
             &mut model,
             policy.as_ref(),
@@ -360,13 +389,13 @@ mod tests {
     #[test]
     fn simulator_and_bare_core_agree() {
         // The Simulator entry point is nothing but configuration: driving
-        // the core directly with an equivalent HomoModel must reproduce
+        // the core directly with an equivalent FleetModel must reproduce
         // the schedule bit-for-bit.
         let trace = small_trace(24, 9);
         let cfg = small_cfg("srtf", "tune");
         let via_sim = Simulator::new(cfg).run(trace.clone());
         let cfg = small_cfg("srtf", "tune");
-        let mut model = HomoModel::from_config(&cfg);
+        let mut model = FleetModel::from_config(&cfg);
         let via_core = run_events(
             &mut model,
             policy_by_name("srtf").unwrap().as_ref(),
@@ -419,5 +448,32 @@ mod tests {
         let r = Simulator::new(small_cfg("fifo", "tune")).run(vec![j]);
         let jct = r.finished[0].jct_s;
         assert!(jct < 7200.0 * 0.45, "JCT {jct} should be ~2400");
+    }
+
+    #[test]
+    fn mixed_fleet_runs_through_the_same_simulator() {
+        // `types` turns the same Simulator into the A.2 heterogeneous
+        // engine — no separate code path.
+        let types = vec![
+            TypeSpec {
+                gen: GpuGen::P100,
+                spec: ServerSpec::default(),
+                machines: 1,
+            },
+            TypeSpec {
+                gen: GpuGen::V100,
+                spec: ServerSpec::default(),
+                machines: 1,
+            },
+        ];
+        let sim = Simulator::new(SimConfig {
+            types: Some(types),
+            policy: "fifo".into(),
+            mechanism: "tune".into(),
+            ..Default::default()
+        });
+        let r = sim.run(small_trace(20, 5));
+        assert_eq!(r.finished.len(), 20);
+        assert!(r.jcts().iter().all(|&j| j > 0.0 && j.is_finite()));
     }
 }

@@ -1,19 +1,23 @@
 //! Event-driven cluster simulation (paper §4.3).
 //!
-//! Since the core unification, `sim` hosts the *shared* event-driven
-//! scheduling loop ([`core`]) plus its homogeneous configuration
-//! ([`engine`]). A global event queue carries job arrivals and round
+//! `sim` hosts the *shared* event-driven scheduling loop ([`core`]) plus
+//! the one topology behind it ([`engine::FleetModel`] — the single
+//! [`ClusterModel`] implementation, parameterized by a fleet
+//! description). A global event queue carries job arrivals and round
 //! lease expiries; each planning pass runs the scheduling policy, the
 //! tenant-quota admission ([`crate::workload::admission`]), and the
-//! topology's allocation mechanism over the runnable jobs, then jobs
-//! progress at the throughput their (c, m) grant yields under the ground
-//! truth. A job finishing releases its lease at the next round boundary
-//! (round-based scheduling), but its JCT is recorded at the exact finish
-//! instant.
+//! allocation mechanism over the runnable jobs, then jobs progress at
+//! the throughput their (type, c, m) grant yields under that type's
+//! ground truth. A job finishing releases its lease at the next round
+//! boundary (round-based scheduling), but its JCT is recorded at the
+//! exact finish instant.
 //!
-//! The heterogeneous simulator ([`crate::hetero::sim`]) is the other
-//! configuration of the same core — same loop, same admission, same
-//! accounting, different [`ClusterModel`].
+//! There is one engine with two front-ends: [`Simulator`] (homogeneous
+//! defaults: `n_servers` V100 machines) and the heterogeneous
+//! [`crate::hetero::HeteroSimulator`] (a `SimConfig` with
+//! [`SimConfig::types`] set). A one-pool fleet reproduces the
+//! pre-unification homogeneous schedule bit-for-bit (golden-tested in
+//! `tests/scenarios.rs`).
 //!
 //! Performance: rounds with an unchanged runnable set and an empty queue
 //! fast-forward to the next arrival/finish event (the schedule would be
@@ -27,4 +31,4 @@ pub use self::core::{
     run_events, utilization_sample, ClusterModel, CoreConfig, FinishedJob,
     SimEvent, SimResult,
 };
-pub use engine::{HomoModel, SimConfig, Simulator};
+pub use engine::{FleetModel, HomoModel, SimConfig, Simulator};

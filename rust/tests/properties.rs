@@ -1,10 +1,11 @@
 //! Property-based tests over the coordinator invariants (DESIGN.md §6),
-//! using the in-crate property harness (`util::prop`).
+//! using the in-crate property harness (`util::prop`), all expressed
+//! against the one type-generic allocation stack.
 //!
 //! The invariants:
-//! 1. No overallocation: cluster bookkeeping consistent after any round.
-//! 2. Fairness floor: TUNE never grants a job throughput below its
-//!    GPU-proportional throughput.
+//! 1. No overallocation: fleet bookkeeping consistent after any round.
+//! 2. Fairness floor: TUNE never grants a job throughput below the
+//!    oracle `W_j^Fair` (on one type: its GPU-proportional throughput).
 //! 3. No stranded GPUs: under TUNE, a runnable job is unplaced only if
 //!    its GPU demand cannot be met.
 //! 4. Placement shape: multi-server placements split CPU/mem
@@ -12,20 +13,25 @@
 //! 5. Simulator: JCT >= baseline-duration is not required (jobs can beat
 //!    baseline), but JCT > 0 and all jobs finish on an idle-enough
 //!    cluster; runs are deterministic.
+//! 6. Unification: on a one-type fleet the type-assignment phase is a
+//!    pass-through — the fleet-level mechanisms reproduce the pool-level
+//!    (pre-unification homogeneous) grants bit-for-bit.
 
-use synergy::cluster::{Cluster, ServerSpec};
-use synergy::job::{DemandVector, Job, JobId, ModelKind, ALL_MODELS};
-use synergy::mechanism::{by_name, JobRequest, Mechanism};
-use synergy::profiler::{OptimisticProfiler, SensitivityMatrix};
+use synergy::cluster::{Cluster, Fleet, ServerSpec};
+use synergy::job::{DemandVector, Job, JobId, ALL_MODELS};
+use synergy::mechanism::{
+    by_name, JobRequest, Mechanism, PoolRequest, Tune,
+};
+use synergy::profiler::{OptimisticProfiler, Sensitivity};
 use synergy::prop_assert;
 use synergy::sim::{SimConfig, Simulator};
 use synergy::trace::{generate, Split, TraceConfig};
 use synergy::util::prop::{check, Gen};
 
-fn random_requests(
+fn random_jobs(
     g: &mut Gen,
     profiler: &OptimisticProfiler,
-) -> (Vec<Job>, Vec<SensitivityMatrix>) {
+) -> (Vec<Job>, Vec<Sensitivity>) {
     let n = g.int(1, 24);
     let jobs: Vec<Job> = (0..n)
         .map(|i| {
@@ -34,23 +40,17 @@ fn random_requests(
             Job::new(JobId(i as u64), model, gpus, 0.0, 3600.0)
         })
         .collect();
-    let matrices = jobs.iter().map(|j| profiler.profile(j).matrix).collect();
-    (jobs, matrices)
+    let sens = jobs.iter().map(|j| profiler.profile(j)).collect();
+    (jobs, sens)
 }
 
 fn to_requests<'a>(
     jobs: &'a [Job],
-    matrices: &'a [SensitivityMatrix],
+    sens: &'a [Sensitivity],
 ) -> Vec<JobRequest<'a>> {
     jobs.iter()
-        .zip(matrices)
-        .map(|(j, m)| JobRequest {
-            id: j.id,
-            gpus: j.gpus,
-            best: m.best_demand(),
-            prop: DemandVector::proportional(j.gpus, 3.0, 62.5),
-            matrix: m,
-        })
+        .zip(sens)
+        .map(|(j, s)| JobRequest { id: j.id, gpus: j.gpus, sens: s })
         .collect()
 }
 
@@ -59,13 +59,13 @@ fn prop_cluster_consistent_after_any_allocation() {
     let spec = ServerSpec::default();
     let profiler = OptimisticProfiler::noiseless(spec);
     check("cluster consistency", 25, |g| {
-        let (jobs, matrices) = random_requests(g, &profiler);
-        let requests = to_requests(&jobs, &matrices);
+        let (jobs, sens) = random_jobs(g, &profiler);
+        let requests = to_requests(&jobs, &sens);
         let mech_name = g.choose(&["proportional", "greedy", "tune", "fixed"]);
         let mech = by_name(&mech_name).unwrap();
-        let mut cluster = Cluster::homogeneous(spec, g.int(1, 9));
-        let grants = mech.allocate(&mut cluster, &requests);
-        cluster.check_consistency().map_err(|e| format!("{mech_name}: {e}"))?;
+        let mut fleet = Fleet::homogeneous(spec, g.int(1, 9));
+        let grants = mech.allocate(&mut fleet, &requests);
+        fleet.check_consistency().map_err(|e| format!("{mech_name}: {e}"))?;
         // Grants must not exceed any server capacity (checked by
         // consistency) and granted GPUs must match the job demand.
         for (id, grant) in &grants {
@@ -87,22 +87,22 @@ fn prop_tune_fairness_floor() {
     let profiler = OptimisticProfiler::noiseless(spec);
     let tune = by_name("tune").unwrap();
     check("tune fairness floor", 25, |g| {
-        let (jobs, matrices) = random_requests(g, &profiler);
-        let requests = to_requests(&jobs, &matrices);
-        let mut cluster = Cluster::homogeneous(spec, g.int(1, 9));
-        let grants = tune.allocate(&mut cluster, &requests);
+        let (jobs, sens) = random_jobs(g, &profiler);
+        let requests = to_requests(&jobs, &sens);
+        let mut fleet = Fleet::homogeneous(spec, g.int(1, 9));
+        let grants = tune.allocate(&mut fleet, &requests);
         for req in &requests {
             if let Some(grant) = grants.get(&req.id) {
-                let got = req
-                    .matrix
-                    .throughput_at(grant.demand.cpus, grant.demand.mem_gb);
-                let floor = req.matrix.proportional_throughput();
+                let m = req.sens.matrix(grant.gen).unwrap();
+                let got =
+                    m.throughput_at(grant.demand.cpus, grant.demand.mem_gb);
+                let floor = req.sens.fair_throughput();
                 prop_assert!(
                     got + 1e-6 >= floor,
                     "job {:?} ({:?}): got {got} < floor {floor} \
                      (granted {:?})",
                     req.id,
-                    req.matrix.model,
+                    m.model,
                     grant.demand
                 );
             }
@@ -132,21 +132,21 @@ fn prop_tune_no_stranded_gpus() {
                 )
             })
             .collect();
-        let matrices: Vec<SensitivityMatrix> =
-            jobs.iter().map(|j| profiler.profile(j).matrix).collect();
-        let requests = to_requests(&jobs, &matrices);
-        let mut cluster = Cluster::homogeneous(spec, n_servers);
-        let grants = tune.allocate(&mut cluster, &requests);
+        let sens: Vec<Sensitivity> =
+            jobs.iter().map(|j| profiler.profile(j)).collect();
+        let requests = to_requests(&jobs, &sens);
+        let mut fleet = Fleet::homogeneous(spec, n_servers);
+        let grants = tune.allocate(&mut fleet, &requests);
         prop_assert!(
             grants.len() == n,
             "only {} of {n} jobs placed; {} GPUs stranded",
             grants.len(),
-            cluster.free_gpus()
+            fleet.free_gpus()
         );
         prop_assert!(
-            cluster.free_gpus() == 0,
+            fleet.free_gpus() == 0,
             "{} GPUs free at full load",
-            cluster.free_gpus()
+            fleet.free_gpus()
         );
         Ok(())
     });
@@ -161,12 +161,12 @@ fn prop_multi_server_splits_proportional() {
         let gpus = g.choose(&[16u32, 24, 32]);
         let model = g.choose(&ALL_MODELS);
         let job = Job::new(JobId(0), model, gpus, 0.0, 3600.0);
-        let matrix = profiler.profile(&job).matrix;
+        let sens = profiler.profile(&job);
         let jobs = vec![job];
-        let matrices = vec![matrix];
-        let requests = to_requests(&jobs, &matrices);
-        let mut cluster = Cluster::homogeneous(spec, 8);
-        let grants = tune.allocate(&mut cluster, &requests);
+        let sens = vec![sens];
+        let requests = to_requests(&jobs, &sens);
+        let mut fleet = Fleet::homogeneous(spec, 8);
+        let grants = tune.allocate(&mut fleet, &requests);
         let grant = grants
             .get(&JobId(0))
             .ok_or("big job unplaced on empty cluster")?;
@@ -178,6 +178,73 @@ fn prop_multi_server_splits_proportional() {
                 (share.cpus - expect_cpu).abs() < 1e-6
                     && (share.mem_gb - expect_mem).abs() < 1e-6,
                 "share {share:?} not proportional to {total:?}"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Unification property (a): on a one-type fleet the fleet-level TUNE is
+/// exactly the pool-level §4.2 algorithm — same grants, same demands,
+/// same placements, bit for bit. `Tune::allocate_pool` *is* the
+/// pre-refactor homogeneous mechanism body, so this pins "a single-type
+/// fleet reproduces the pre-refactor homogeneous grants".
+#[test]
+fn prop_single_type_fleet_matches_pool_level_tune_bitwise() {
+    let spec = ServerSpec::default();
+    let profiler = OptimisticProfiler::noiseless(spec);
+    check("one-type pass-through bit-parity", 20, |g| {
+        let (jobs, sens) = random_jobs(g, &profiler);
+        let requests = to_requests(&jobs, &sens);
+        let n_servers = g.int(1, 9);
+
+        // Fleet-level path (type assignment + delegation).
+        let mut fleet = Fleet::homogeneous(spec, n_servers);
+        let fleet_grants = Tune::default().allocate(&mut fleet, &requests);
+
+        // Pool-level path (the homogeneous algorithm, driven directly).
+        let mut cluster = Cluster::homogeneous(spec, n_servers);
+        let pool_requests: Vec<PoolRequest> = requests
+            .iter()
+            .map(|r| {
+                let m = r.sens.primary();
+                PoolRequest {
+                    id: r.id,
+                    gpus: r.gpus,
+                    best: m.best_demand(),
+                    prop: DemandVector::proportional(
+                        r.gpus,
+                        spec.cpus as f64 / spec.gpus as f64,
+                        spec.mem_gb / spec.gpus as f64,
+                    ),
+                    matrix: m,
+                }
+            })
+            .collect();
+        let pool_grants =
+            Tune::default().allocate_pool(&mut cluster, &pool_requests);
+
+        prop_assert!(
+            fleet_grants.len() == pool_grants.len(),
+            "grant sets differ: fleet {} vs pool {}",
+            fleet_grants.len(),
+            pool_grants.len()
+        );
+        for (id, fg) in &fleet_grants {
+            let pg = pool_grants
+                .get(id)
+                .ok_or(format!("{id:?} granted by fleet only"))?;
+            prop_assert!(
+                fg.placement == pg.placement,
+                "{id:?}: placements diverge"
+            );
+            prop_assert!(
+                fg.demand.cpus.to_bits() == pg.demand.cpus.to_bits()
+                    && fg.demand.mem_gb.to_bits() == pg.demand.mem_gb.to_bits()
+                    && fg.demand.gpus == pg.demand.gpus,
+                "{id:?}: demands diverge: {:?} vs {:?}",
+                fg.demand,
+                pg.demand
             );
         }
         Ok(())
@@ -232,24 +299,27 @@ fn prop_opt_bounds_tune_throughput() {
                 Job::new(JobId(i as u64), g.choose(&ALL_MODELS), 1, 0.0, 60.0)
             })
             .collect();
-        let matrices: Vec<SensitivityMatrix> =
-            jobs.iter().map(|j| profiler.profile(j).matrix).collect();
-        let requests = to_requests(&jobs, &matrices);
+        let sens: Vec<Sensitivity> =
+            jobs.iter().map(|j| profiler.profile(j)).collect();
+        let requests = to_requests(&jobs, &sens);
 
         let opt = synergy::mechanism::Opt::default();
-        let cluster = Cluster::homogeneous(spec, n_servers);
+        let fleet = Fleet::homogeneous(spec, n_servers);
         let alloc = opt
-            .solve_allocation(&cluster, &requests)
+            .solve_allocation(&fleet, &requests)
             .ok_or("opt failed")?;
 
         let tune = by_name("tune").unwrap();
-        let mut cluster2 = Cluster::homogeneous(spec, n_servers);
-        let grants = tune.allocate(&mut cluster2, &requests);
+        let mut fleet2 = Fleet::homogeneous(spec, n_servers);
+        let grants = tune.allocate(&mut fleet2, &requests);
         let tune_total: f64 = requests
             .iter()
             .filter_map(|r| grants.get(&r.id).map(|grant| (r, grant)))
             .map(|(r, grant)| {
-                r.matrix.throughput_at(grant.demand.cpus, grant.demand.mem_gb)
+                r.sens
+                    .matrix(grant.gen)
+                    .unwrap()
+                    .throughput_at(grant.demand.cpus, grant.demand.mem_gb)
             })
             .sum();
         prop_assert!(
@@ -295,32 +365,29 @@ fn prop_lp_solutions_feasible() {
 }
 
 // ---------------------------------------------------------------------------
-// Heterogeneous extension (paper A.2) invariants
+// Mixed-fleet (paper A.2) invariants — same stack, more pools
 // ---------------------------------------------------------------------------
 
-mod hetero_props {
+mod fleet_props {
     use super::*;
-    use synergy::hetero::{
-        het_by_name, GpuGen, HetJobRequest, HeteroCluster, HeteroProfiler,
-        HeteroSensitivity, TypeSpec, ALL_HET_MECHANISMS,
-    };
+    use synergy::cluster::{GpuGen, TypeSpec};
 
-    fn random_het_cluster(g: &mut Gen) -> HeteroCluster {
+    fn random_fleet(g: &mut Gen) -> Fleet {
         let spec = ServerSpec::default();
         let gens = [GpuGen::K80, GpuGen::P100, GpuGen::V100, GpuGen::A100];
-        let n_types = g.int(2, 3);
+        let n_types = g.int(2, 4);
         let types: Vec<TypeSpec> = gens[..n_types]
             .iter()
             .map(|&gen| TypeSpec { gen, spec, machines: g.int(1, 4) })
             .collect();
-        HeteroCluster::new(&types)
+        Fleet::new(&types)
     }
 
-    fn random_het_jobs(
+    fn random_fleet_jobs(
         g: &mut Gen,
-        cluster: &HeteroCluster,
-    ) -> (Vec<Job>, Vec<HeteroSensitivity>) {
-        let profiler = HeteroProfiler::noiseless(cluster);
+        fleet: &Fleet,
+    ) -> (Vec<Job>, Vec<Sensitivity>) {
+        let profiler = OptimisticProfiler::noiseless_fleet(fleet);
         let n = g.int(1, 16);
         let jobs: Vec<Job> = (0..n)
             .map(|i| {
@@ -334,35 +401,27 @@ mod hetero_props {
     }
 
     #[test]
-    fn prop_het_cluster_consistent_and_single_type() {
-        check("hetero consistency + no cross-type spans", 20, |g| {
-            let mut cluster = random_het_cluster(g);
-            let (jobs, sens) = random_het_jobs(g, &cluster);
-            let reqs: Vec<HetJobRequest> = jobs
-                .iter()
-                .zip(&sens)
-                .map(|(j, s)| HetJobRequest {
-                    id: j.id,
-                    gpus: j.gpus,
-                    sens: s,
-                })
-                .collect();
-            let name = g.choose(&ALL_HET_MECHANISMS);
-            let mech = het_by_name(name).unwrap();
-            let grants = mech.allocate(&mut cluster, &reqs);
-            cluster
+    fn prop_fleet_consistent_and_single_type() {
+        check("fleet consistency + no cross-type spans", 20, |g| {
+            let mut fleet = random_fleet(g);
+            let (jobs, sens) = random_fleet_jobs(g, &fleet);
+            let reqs = to_requests(&jobs, &sens);
+            let name = g.choose(&["proportional", "tune", "opt"]);
+            let mech = by_name(name).unwrap();
+            let grants = mech.allocate(&mut fleet, &reqs);
+            fleet
                 .check_consistency()
                 .map_err(|e| format!("{name}: {e}"))?;
             for (id, grant) in &grants {
                 // A.2.2: a job never spans two machine types in a round —
-                // its whole placement lives in the chosen group.
+                // its whole placement lives in the chosen pool.
                 prop_assert!(
-                    cluster.host_gen(*id) == Some(grant.gen),
+                    fleet.host_gen(*id) == Some(grant.gen),
                     "{name}: job {id:?} not hosted on its granted type"
                 );
                 let job = jobs.iter().find(|j| j.id == *id).unwrap();
                 prop_assert!(
-                    grant.grant.placement.total().gpus == job.gpus,
+                    grant.placement.total().gpus == job.gpus,
                     "{name}: wrong GPU count for {id:?}"
                 );
             }
@@ -370,29 +429,24 @@ mod hetero_props {
         });
     }
 
+    /// Unification property (b): no placed job ever lands below its
+    /// fairness floor `W_j^Fair` under unified TUNE (or OPT), on any
+    /// fleet shape.
     #[test]
-    fn prop_het_fairness_floor() {
-        check("hetero fairness floor (W_fair oracle)", 20, |g| {
-            let mut cluster = random_het_cluster(g);
-            let (jobs, sens) = random_het_jobs(g, &cluster);
-            let reqs: Vec<HetJobRequest> = jobs
-                .iter()
-                .zip(&sens)
-                .map(|(j, s)| HetJobRequest {
-                    id: j.id,
-                    gpus: j.gpus,
-                    sens: s,
-                })
-                .collect();
-            let name = g.choose(&["het-tune", "het-opt"]);
-            let mech = het_by_name(name).unwrap();
-            let grants = mech.allocate(&mut cluster, &reqs);
+    fn prop_fairness_floor_w_fair_oracle() {
+        check("fairness floor (W_fair oracle)", 20, |g| {
+            let mut fleet = random_fleet(g);
+            let (jobs, sens) = random_fleet_jobs(g, &fleet);
+            let reqs = to_requests(&jobs, &sens);
+            let name = g.choose(&["tune", "opt"]);
+            let mech = by_name(name).unwrap();
+            let grants = mech.allocate(&mut fleet, &reqs);
             for (j, s) in jobs.iter().zip(&sens) {
                 let Some(grant) = grants.get(&j.id) else { continue };
                 let m = s.matrix(grant.gen).expect("profiled type");
                 let got = m.throughput_at(
-                    grant.grant.demand.cpus,
-                    grant.grant.demand.mem_gb,
+                    grant.demand.cpus,
+                    grant.demand.mem_gb,
                 );
                 prop_assert!(
                     got + 1e-9 >= s.fair_throughput(),
@@ -407,8 +461,8 @@ mod hetero_props {
     }
 
     #[test]
-    fn prop_het_sim_deterministic_and_complete() {
-        check("hetero sim determinism", 6, |g| {
+    fn prop_fleet_sim_deterministic_and_complete() {
+        check("fleet sim determinism", 6, |g| {
             use synergy::hetero::{HeteroSimConfig, HeteroSimulator};
             let seed = g.int(0, 10_000) as u64;
             let jobs = generate(&TraceConfig {
@@ -431,7 +485,7 @@ mod hetero_props {
             prop_assert!(a.jcts.len() == jobs.len(), "all jobs finish");
             prop_assert!(
                 a.jcts == b.jcts,
-                "hetero sim must be bit-deterministic"
+                "fleet sim must be bit-deterministic"
             );
             Ok(())
         });

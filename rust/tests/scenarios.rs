@@ -1,13 +1,16 @@
 //! Deterministic scenario/property harness over the unified simulation
-//! core (ISSUE 2 acceptance):
+//! core (ISSUE 2 acceptance, extended by ISSUE 3's one-resource-model
+//! unification):
 //!
 //! - a fixed-seed scenario matrix — {synthetic, philly_small.csv,
-//!   alibaba_small.csv} × {quotas off, on} × {homogeneous,
-//!   heterogeneous} — asserting repeated runs produce *identical*
-//!   metrics JSON, checked against golden files under `tests/golden/`;
-//! - cross-entry-point determinism: a single-type V100 heterogeneous
-//!   cluster reproduces the homogeneous engine's schedule bit-for-bit
-//!   (both are configurations of `sim::run_events`).
+//!   alibaba_small.csv} × {quotas off, on} × {homogeneous, two-type
+//!   P100+V100, tri-type V100+P100+K80} — asserting repeated runs
+//!   produce *identical* metrics JSON, checked against golden files
+//!   under `tests/golden/`;
+//! - cross-entry-point determinism: a single-type V100 fleet driven
+//!   through the hetero front-end reproduces the homogeneous front-end's
+//!   schedule bit-for-bit (both are fleet descriptions handed to the
+//!   same engine).
 //!
 //! Golden files bootstrap themselves: a missing golden is written on
 //! first run (and should be committed); set `UPDATE_GOLDENS=1` to
@@ -31,12 +34,23 @@ fn fixture(name: &str) -> String {
     format!("{}/tests/fixtures/{name}", env!("CARGO_MANIFEST_DIR"))
 }
 
+/// Fleet shape of one scenario cell.
+#[derive(Clone, Copy)]
+enum FleetShape {
+    /// 4 V100 servers through the homogeneous front-end.
+    Homo,
+    /// 2 P100 + 2 V100 servers (the A.2 evaluation split).
+    TwoTier,
+    /// 2 V100 + 1 P100 + 1 K80 servers (mixed-generation fleet cell).
+    TriType,
+}
+
 /// One cell of the scenario matrix.
 struct Scenario {
     name: &'static str,
     jobs: Vec<Job>,
     quotas: Option<TenantQuotas>,
-    hetero: bool,
+    fleet: FleetShape,
 }
 
 /// The workload third of the matrix: (tag, jobs, quotas-when-on).
@@ -79,32 +93,60 @@ fn workloads() -> Vec<(&'static str, Vec<Job>, TenantQuotas)> {
     vec![synthetic, philly, alibaba]
 }
 
-/// The full 3 × 2 × 2 matrix.
+/// The full 3 × 2 × 3 matrix.
 fn matrix() -> Vec<Scenario> {
-    // Static names so goldens stay stable: <workload>_<quotas>_<engine>.
-    const NAMES: [[[&str; 2]; 2]; 3] = [
+    // Static names so goldens stay stable: <workload>_<quotas>_<fleet>.
+    // ("hetero" keeps its pre-unification name for golden continuity;
+    // "tritype" cells pin the mixed V100+P100+K80 fleet.)
+    const NAMES: [[[&str; 3]; 2]; 3] = [
         [
-            ["synthetic_plain_homo", "synthetic_plain_hetero"],
-            ["synthetic_quotas_homo", "synthetic_quotas_hetero"],
+            [
+                "synthetic_plain_homo",
+                "synthetic_plain_hetero",
+                "synthetic_plain_tritype",
+            ],
+            [
+                "synthetic_quotas_homo",
+                "synthetic_quotas_hetero",
+                "synthetic_quotas_tritype",
+            ],
         ],
         [
-            ["philly_small_plain_homo", "philly_small_plain_hetero"],
-            ["philly_small_quotas_homo", "philly_small_quotas_hetero"],
+            [
+                "philly_small_plain_homo",
+                "philly_small_plain_hetero",
+                "philly_small_plain_tritype",
+            ],
+            [
+                "philly_small_quotas_homo",
+                "philly_small_quotas_hetero",
+                "philly_small_quotas_tritype",
+            ],
         ],
         [
-            ["alibaba_small_plain_homo", "alibaba_small_plain_hetero"],
-            ["alibaba_small_quotas_homo", "alibaba_small_quotas_hetero"],
+            [
+                "alibaba_small_plain_homo",
+                "alibaba_small_plain_hetero",
+                "alibaba_small_plain_tritype",
+            ],
+            [
+                "alibaba_small_quotas_homo",
+                "alibaba_small_quotas_hetero",
+                "alibaba_small_quotas_tritype",
+            ],
         ],
     ];
+    const SHAPES: [FleetShape; 3] =
+        [FleetShape::Homo, FleetShape::TwoTier, FleetShape::TriType];
     let mut out = Vec::new();
     for (wi, (_, jobs, quotas)) in workloads().into_iter().enumerate() {
         for (qi, q) in [None, Some(quotas)].into_iter().enumerate() {
-            for (hi, hetero) in [false, true].into_iter().enumerate() {
+            for (fi, fleet) in SHAPES.into_iter().enumerate() {
                 out.push(Scenario {
-                    name: NAMES[wi][qi][hi],
+                    name: NAMES[wi][qi][fi],
                     jobs: jobs.clone(),
                     quotas: q.clone(),
-                    hetero,
+                    fleet,
                 });
             }
         }
@@ -113,21 +155,10 @@ fn matrix() -> Vec<Scenario> {
 }
 
 fn run_scenario(s: &Scenario) -> String {
-    let result_json = if s.hetero {
+    let mixed = |types: Vec<TypeSpec>| {
         let sim = HeteroSimulator::with_quotas(
             HeteroSimConfig {
-                types: vec![
-                    TypeSpec {
-                        gen: GpuGen::P100,
-                        spec: Default::default(),
-                        machines: 2,
-                    },
-                    TypeSpec {
-                        gen: GpuGen::V100,
-                        spec: Default::default(),
-                        machines: 2,
-                    },
-                ],
+                types,
                 policy: "srtf".into(),
                 mechanism: "het-tune".into(),
                 ..Default::default()
@@ -136,20 +167,56 @@ fn run_scenario(s: &Scenario) -> String {
         );
         let r = sim.run(s.jobs.clone());
         metrics_json(r.jct_stats(), r.tenant_stats(), r.makespan_s, r.rounds)
-    } else {
-        let sim = Simulator::with_quotas(
-            SimConfig {
-                n_servers: 4,
-                policy: "srtf".into(),
-                mechanism: "tune".into(),
-                ..Default::default()
-            },
-            s.quotas.clone(),
-        );
-        let r = sim.run(s.jobs.clone());
-        metrics_json(r.jct_stats(), r.tenant_stats(), r.makespan_s, r.rounds)
     };
-    result_json
+    match s.fleet {
+        FleetShape::Homo => {
+            let sim = Simulator::with_quotas(
+                SimConfig {
+                    n_servers: 4,
+                    policy: "srtf".into(),
+                    mechanism: "tune".into(),
+                    ..Default::default()
+                },
+                s.quotas.clone(),
+            );
+            let r = sim.run(s.jobs.clone());
+            metrics_json(
+                r.jct_stats(),
+                r.tenant_stats(),
+                r.makespan_s,
+                r.rounds,
+            )
+        }
+        FleetShape::TwoTier => mixed(vec![
+            TypeSpec {
+                gen: GpuGen::P100,
+                spec: Default::default(),
+                machines: 2,
+            },
+            TypeSpec {
+                gen: GpuGen::V100,
+                spec: Default::default(),
+                machines: 2,
+            },
+        ]),
+        FleetShape::TriType => mixed(vec![
+            TypeSpec {
+                gen: GpuGen::K80,
+                spec: Default::default(),
+                machines: 1,
+            },
+            TypeSpec {
+                gen: GpuGen::P100,
+                spec: Default::default(),
+                machines: 1,
+            },
+            TypeSpec {
+                gen: GpuGen::V100,
+                spec: Default::default(),
+                machines: 2,
+            },
+        ]),
+    }
 }
 
 /// Canonical metrics document: JCT summary + Jain fairness over the
