@@ -53,6 +53,7 @@ pub fn run_sim_ref(
         network_penalty: 0.0,
         reference_spec,
         types: None,
+        force_replan: false,
     });
     sim.run(jobs)
 }

@@ -1,0 +1,168 @@
+//! Cluster-scale simulator throughput (ISSUE 4 perf deliverable): the
+//! paper's evaluation scale — 512 GPUs, Philly-derived multi-GPU trace
+//! of 8000 jobs (§5.1) — end to end through the memoized event core,
+//! plus a mixed-generation (tri-type) fleet cell.
+//!
+//! ```bash
+//! cargo bench --bench sim_scale
+//! ```
+//!
+//! Writes `BENCH_sim.json` at the repo root: wall time, rounds/sec, and
+//! the planned-vs-memoized round split per cell — the perf trajectory
+//! later PRs track. Also asserts the memoization invariant: under FIFO
+//! (time-stable keys) the mechanism plans at most once per set change,
+//! so `planned_rounds <= arrivals + completions + 1`.
+
+use std::time::Duration;
+use synergy::cluster::{GpuGen, ServerSpec, TypeSpec};
+use synergy::sim::{SimConfig, SimResult, Simulator};
+use synergy::trace::{generate, TraceConfig, SPLIT_DEFAULT};
+use synergy::util::bench::{section, Bench};
+use synergy::util::json::Json;
+
+/// 64 × 8-GPU servers = the paper's 512-GPU cluster.
+const N_SERVERS: usize = 64;
+const N_JOBS: usize = 8_000;
+/// Jobs/hour that keeps 512 GPUs saturated (fig6 uses the same).
+const LOAD: f64 = 36.0;
+
+struct Cell {
+    name: &'static str,
+    median_s: f64,
+    result: SimResult,
+}
+
+fn run_cell(
+    bench: &Bench,
+    name: &'static str,
+    n_jobs: usize,
+    policy: &str,
+    types: Option<Vec<TypeSpec>>,
+    seed: u64,
+) -> Cell {
+    let trace = generate(&TraceConfig {
+        n_jobs,
+        split: SPLIT_DEFAULT,
+        multi_gpu: true,
+        jobs_per_hour: Some(LOAD),
+        seed,
+    });
+    let mk_sim = || {
+        Simulator::new(SimConfig {
+            n_servers: N_SERVERS,
+            policy: policy.into(),
+            mechanism: "tune".into(),
+            types: types.clone(),
+            ..Default::default()
+        })
+    };
+    // Keep the last timed run's result (runs are deterministic, and one
+    // 512-GPU × 8k-job simulation is too expensive to repeat just for
+    // the stats).
+    let mut last: Option<SimResult> = None;
+    let t = bench.iter(name, || last = Some(mk_sim().run(trace.clone())));
+    let result = last.expect("bench ran at least once");
+    assert_eq!(result.finished.len(), n_jobs, "{name}: all jobs finish");
+    Cell { name, median_s: t.median.as_secs_f64(), result }
+}
+
+fn cell_json(c: &Cell) -> Json {
+    let r = &c.result;
+    Json::obj(vec![
+        ("cell", Json::str(c.name)),
+        ("jobs", Json::num(r.finished.len() as f64)),
+        ("wall_s", Json::num(c.median_s)),
+        ("rounds", Json::num(r.rounds as f64)),
+        ("planned_rounds", Json::num(r.planned_rounds as f64)),
+        (
+            "memoized_rounds",
+            Json::num((r.rounds - r.planned_rounds) as f64),
+        ),
+        ("rounds_per_s", Json::num(r.rounds as f64 / c.median_s)),
+        (
+            "planned_rounds_per_s",
+            Json::num(r.planned_rounds as f64 / c.median_s),
+        ),
+        ("makespan_days", Json::num(r.makespan_s / 86_400.0)),
+    ])
+}
+
+fn main() {
+    let bench = Bench {
+        warmup_iters: 1,
+        min_iters: 3,
+        max_iters: 10,
+        budget: Duration::from_secs(60),
+    };
+
+    section("sim_scale: 512 GPUs × 8000 Philly-derived jobs");
+    // FIFO cell: time-stable policy keys — the planned-round bound is a
+    // hard invariant of the memoization (arrivals + completions + 1).
+    let fifo = run_cell(&bench, "sim/512gpu_8k_fifo_tune", N_JOBS, "fifo", None, 512);
+    assert!(
+        fifo.result.planned_rounds <= 2 * N_JOBS + 1,
+        "memoization must engage: {} planned rounds > arrivals + \
+         completions + 1 = {}",
+        fifo.result.planned_rounds,
+        2 * N_JOBS + 1
+    );
+    // SRTF cell: time-varying keys — memoization engages only when the
+    // runnable sequence genuinely repeats; reported, not bounded.
+    let srtf =
+        run_cell(&bench, "sim/512gpu_8k_srtf_tune", N_JOBS, "srtf", None, 512);
+
+    section("sim_scale: tri-type 512-GPU fleet (K80 + P100 + V100)");
+    let spec = ServerSpec::default();
+    let tri = vec![
+        TypeSpec { gen: GpuGen::K80, spec, machines: 22 },
+        TypeSpec { gen: GpuGen::P100, spec, machines: 21 },
+        TypeSpec { gen: GpuGen::V100, spec, machines: 21 },
+    ];
+    let tri_cell = run_cell(
+        &bench,
+        "sim/512gpu_tritype_4k_fifo_tune",
+        N_JOBS / 2,
+        "fifo",
+        Some(tri),
+        513,
+    );
+    assert!(
+        tri_cell.result.planned_rounds <= 2 * (N_JOBS / 2) + 1,
+        "tri-type memoization must engage: {} planned rounds",
+        tri_cell.result.planned_rounds
+    );
+
+    for c in [&fifo, &srtf, &tri_cell] {
+        let r = &c.result;
+        println!(
+            "{}: {:.2}s wall, {} rounds ({} planned / {} memoized), \
+             {:.0} rounds/s",
+            c.name,
+            c.median_s,
+            r.rounds,
+            r.planned_rounds,
+            r.rounds - r.planned_rounds,
+            r.rounds as f64 / c.median_s,
+        );
+    }
+
+    // Persist the perf trajectory for later PRs.
+    let doc = Json::obj(vec![
+        ("bench", Json::str("sim_scale")),
+        ("gpus", Json::num((N_SERVERS * 8) as f64)),
+        (
+            "cells",
+            Json::arr(vec![
+                cell_json(&fifo),
+                cell_json(&srtf),
+                cell_json(&tri_cell),
+            ]),
+        ),
+    ])
+    .encode();
+    let out_path = format!("{}/../BENCH_sim.json", env!("CARGO_MANIFEST_DIR"));
+    match std::fs::write(&out_path, format!("{doc}\n")) {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
+    }
+}

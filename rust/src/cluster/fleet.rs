@@ -121,6 +121,9 @@ impl Fleet {
         self.pools.iter().map(|p| p.cluster.total_gpus()).sum()
     }
 
+    /// Free GPUs across all pools — O(|K|): each pool answers from its
+    /// free-capacity index's exact integer aggregate, not a server scan
+    /// (type assignment queries this once per pool per round).
     pub fn free_gpus(&self) -> u32 {
         self.pools.iter().map(|p| p.cluster.free_gpus()).sum()
     }

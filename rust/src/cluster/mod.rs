@@ -8,11 +8,17 @@
 //! ([`Fleet::homogeneous`]), not a separate code path.
 //!
 //! A [`Cluster`] is one such pool — a homogeneous set of [`Server`]s,
-//! each with integral GPUs, integral CPU cores, and memory in GB. It is
-//! the per-type free-capacity index the mechanisms scan (best-fit stays
-//! O(servers-of-type), §4.2). Allocation and release maintain the
-//! invariant `0 <= free <= capacity` in every dimension; violations are
-//! bugs and panic in debug builds.
+//! each with integral GPUs, integral CPU cores, and memory in GB. It
+//! carries a *free-capacity index* — servers bucketed by free GPUs, each
+//! bucket ordered both by packing score and by scan position — that
+//! [`crate::mechanism::best_fit`] / [`crate::mechanism::first_fit`] and
+//! TUNE's victim search walk instead of scanning every server per fit
+//! attempt. The index is maintained incrementally through
+//! [`Cluster::place`] / [`Cluster::evict`], reproduces the pre-index
+//! linear-scan tie-breaks exactly (golden-pinned), and is re-verified
+//! against a fresh scan by [`Cluster::check_consistency`]. Allocation
+//! and release maintain the invariant `0 <= free <= capacity` in every
+//! dimension; violations are bugs and panic in debug builds.
 
 mod fleet;
 mod gen;
@@ -23,7 +29,7 @@ pub use gen::{GpuGen, ALL_GENS};
 pub use server::{Server, ServerSpec};
 
 use crate::job::JobId;
-use std::collections::BTreeMap;
+use std::collections::{btree_set, BTreeMap, BTreeSet};
 
 /// A single job's resource grant on one server.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -34,7 +40,7 @@ pub struct Share {
 }
 
 impl Share {
-    pub fn zero() -> Share {
+    pub const fn zero() -> Share {
         Share { gpus: 0, cpus: 0.0, mem_gb: 0.0 }
     }
 
@@ -47,16 +53,176 @@ impl Share {
     }
 }
 
+/// Inline capacity of [`Shares`]. Gang spans are almost always tiny (a
+/// 16-GPU job on 8-GPU servers spans 2; the paper's consolidation-strict
+/// default keeps most jobs on one server), so placements up to this span
+/// live entirely inline; wider spans spill to a heap vector.
+const SHARES_INLINE: usize = 4;
+
+/// A placement's per-server share map: a small-vector of
+/// `(server id, Share)` entries kept sorted by server id — the same
+/// deterministic iteration order as the `BTreeMap` it replaced, without
+/// per-node heap allocation on the per-round placement hot path.
+#[derive(Debug, Clone)]
+pub struct Shares {
+    len: usize,
+    buf: [(usize, Share); SHARES_INLINE],
+    /// Holds *all* entries once `len > SHARES_INLINE` (never shrinks
+    /// back inline; placements are built, not edited down).
+    spill: Vec<(usize, Share)>,
+}
+
+impl Shares {
+    pub fn new() -> Shares {
+        Shares {
+            len: 0,
+            buf: [(0, Share::zero()); SHARES_INLINE],
+            spill: Vec::new(),
+        }
+    }
+
+    fn spilled(&self) -> bool {
+        !self.spill.is_empty()
+    }
+
+    /// The entries as a sorted-by-server-id slice.
+    pub fn as_slice(&self) -> &[(usize, Share)] {
+        if self.spilled() {
+            &self.spill
+        } else {
+            &self.buf[..self.len]
+        }
+    }
+
+    /// Insert or replace the share for `sid`, keeping id order.
+    pub fn insert(&mut self, sid: usize, share: Share) {
+        match self.as_slice().binary_search_by(|e| e.0.cmp(&sid)) {
+            Ok(i) => {
+                if self.spilled() {
+                    self.spill[i].1 = share;
+                } else {
+                    self.buf[i].1 = share;
+                }
+            }
+            Err(i) => {
+                if !self.spilled() && self.len < SHARES_INLINE {
+                    let mut k = self.len;
+                    while k > i {
+                        self.buf[k] = self.buf[k - 1];
+                        k -= 1;
+                    }
+                    self.buf[i] = (sid, share);
+                } else {
+                    if !self.spilled() {
+                        self.spill.extend_from_slice(&self.buf[..self.len]);
+                    }
+                    self.spill.insert(i, (sid, share));
+                }
+                self.len += 1;
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn get(&self, sid: &usize) -> Option<&Share> {
+        self.as_slice()
+            .binary_search_by(|e| e.0.cmp(sid))
+            .ok()
+            .map(|i| &self.as_slice()[i].1)
+    }
+
+    pub fn contains_key(&self, sid: &usize) -> bool {
+        self.get(sid).is_some()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&usize, &Share)> {
+        self.as_slice().iter().map(|e| (&e.0, &e.1))
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &usize> {
+        self.as_slice().iter().map(|e| &e.0)
+    }
+
+    pub fn values(&self) -> impl Iterator<Item = &Share> {
+        self.as_slice().iter().map(|e| &e.1)
+    }
+}
+
+impl Default for Shares {
+    fn default() -> Shares {
+        Shares::new()
+    }
+}
+
+impl PartialEq for Shares {
+    fn eq(&self, other: &Shares) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl std::ops::Index<&usize> for Shares {
+    type Output = Share;
+    fn index(&self, sid: &usize) -> &Share {
+        self.get(sid)
+            .unwrap_or_else(|| panic!("no share on server {sid}"))
+    }
+}
+
+fn share_entry_refs(e: &(usize, Share)) -> (&usize, &Share) {
+    (&e.0, &e.1)
+}
+
+impl<'a> IntoIterator for &'a Shares {
+    type Item = (&'a usize, &'a Share);
+    type IntoIter = std::iter::Map<
+        std::slice::Iter<'a, (usize, Share)>,
+        fn(&'a (usize, Share)) -> (&'a usize, &'a Share),
+    >;
+    fn into_iter(self) -> Self::IntoIter {
+        self.as_slice().iter().map(share_entry_refs)
+    }
+}
+
+/// Owning iterator over `(server id, Share)` entries in id order.
+pub struct SharesIntoIter {
+    shares: Shares,
+    next: usize,
+}
+
+impl Iterator for SharesIntoIter {
+    type Item = (usize, Share);
+    fn next(&mut self) -> Option<(usize, Share)> {
+        let e = self.shares.as_slice().get(self.next)?;
+        self.next += 1;
+        Some(*e)
+    }
+}
+
+impl IntoIterator for Shares {
+    type Item = (usize, Share);
+    type IntoIter = SharesIntoIter;
+    fn into_iter(self) -> SharesIntoIter {
+        SharesIntoIter { shares: self, next: 0 }
+    }
+}
+
 /// A job's placement: per-server shares. Multi-GPU jobs may span servers,
 /// in which case CPU/mem are proportional to GPUs on each (paper §4.2).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Placement {
-    pub shares: BTreeMap<usize, Share>,
+    pub shares: Shares,
 }
 
 impl Placement {
     pub fn single(server: usize, share: Share) -> Placement {
-        let mut shares = BTreeMap::new();
+        let mut shares = Shares::new();
         shares.insert(server, share);
         Placement { shares }
     }
@@ -78,6 +244,126 @@ impl Placement {
     }
 }
 
+/// The free-capacity index of one pool: servers bucketed by their
+/// current free-GPU count, each bucket held in two orders —
+///
+/// - `(free_score bits, scan position)` ascending, which is exactly the
+///   order the pre-index linear best-fit scan selected servers in
+///   (minimal score, earliest position on ties — the strict `<` kept
+///   the first minimum);
+/// - scan position ascending, the first-fit order.
+///
+/// `free_score() >= 0` always (free counters are clamped to
+/// `[0, capacity]`), so `f64::to_bits` is an order-preserving key.
+/// Positions are indices into `Cluster::servers`, which never changes
+/// after construction.
+#[derive(Debug, Clone, Default, PartialEq)]
+struct FreeIndex {
+    by_score: Vec<BTreeSet<(u64, u32)>>,
+    by_pos: Vec<BTreeSet<u32>>,
+    /// Aggregate free GPUs (exact integer bookkeeping, so
+    /// [`Cluster::free_gpus`] is O(1) instead of a server scan).
+    free_gpus: u32,
+}
+
+impl FreeIndex {
+    fn build(servers: &[Server], max_gpus: u32) -> FreeIndex {
+        let buckets = max_gpus as usize + 1;
+        let mut idx = FreeIndex {
+            by_score: vec![BTreeSet::new(); buckets],
+            by_pos: vec![BTreeSet::new(); buckets],
+            free_gpus: 0,
+        };
+        for (pos, s) in servers.iter().enumerate() {
+            idx.attach(s, pos as u32);
+        }
+        idx
+    }
+
+    fn attach(&mut self, s: &Server, pos: u32) {
+        let g = s.free_gpus as usize;
+        self.by_score[g].insert((s.free_score_key(), pos));
+        self.by_pos[g].insert(pos);
+        self.free_gpus += s.free_gpus;
+    }
+
+    /// Reset to the all-pristine state (every server fully free).
+    fn reset(&mut self, servers: &[Server]) {
+        for b in &mut self.by_score {
+            b.clear();
+        }
+        for b in &mut self.by_pos {
+            b.clear();
+        }
+        self.free_gpus = 0;
+        for (pos, s) in servers.iter().enumerate() {
+            self.attach(s, pos as u32);
+        }
+    }
+
+    /// Remove a server's entry. Must be called *before* mutating the
+    /// server's free counters (the stored key is recomputed from them).
+    fn detach(&mut self, s: &Server, pos: u32) {
+        let g = s.free_gpus as usize;
+        let in_score = self.by_score[g].remove(&(s.free_score_key(), pos));
+        let in_pos = self.by_pos[g].remove(&pos);
+        debug_assert!(
+            in_score && in_pos,
+            "server {pos} missing from free index"
+        );
+        self.free_gpus -= s.free_gpus;
+    }
+}
+
+/// Ascending-key merge over the per-free-GPU bucket sets of a
+/// [`FreeIndex`]: yields servers in global key order across the selected
+/// buckets. With at most `spec.gpus + 1` buckets the per-step head scan
+/// is a handful of comparisons, so a fit probe that matches early costs
+/// O(matches · buckets) instead of a full O(servers) scan.
+struct MergedBuckets<'a, K, F> {
+    servers: &'a [Server],
+    heads: Vec<(btree_set::Iter<'a, K>, Option<K>)>,
+    pos_of: F,
+}
+
+impl<'a, K: Ord + Copy, F: Fn(&K) -> u32> MergedBuckets<'a, K, F> {
+    fn new(
+        servers: &'a [Server],
+        buckets: Vec<&'a BTreeSet<K>>,
+        pos_of: F,
+    ) -> MergedBuckets<'a, K, F> {
+        let heads = buckets
+            .into_iter()
+            .filter(|b| !b.is_empty())
+            .map(|b| {
+                let mut it = b.iter();
+                let head = it.next().copied();
+                (it, head)
+            })
+            .collect();
+        MergedBuckets { servers, heads, pos_of }
+    }
+}
+
+impl<'a, K: Ord + Copy, F: Fn(&K) -> u32> Iterator for MergedBuckets<'a, K, F> {
+    type Item = &'a Server;
+
+    fn next(&mut self) -> Option<&'a Server> {
+        let mut best: Option<(K, usize)> = None;
+        for (i, (_, head)) in self.heads.iter().enumerate() {
+            if let Some(k) = *head {
+                if best.map(|(bk, _)| k < bk).unwrap_or(true) {
+                    best = Some((k, i));
+                }
+            }
+        }
+        let (k, i) = best?;
+        let (it, head) = &mut self.heads[i];
+        *head = it.next().copied();
+        Some(&self.servers[(self.pos_of)(&k) as usize])
+    }
+}
+
 /// One homogeneous pool: servers of a single generation plus the
 /// placement of running jobs.
 #[derive(Debug, Clone)]
@@ -87,6 +373,11 @@ pub struct Cluster {
     pub spec: ServerSpec,
     pub servers: Vec<Server>,
     placements: BTreeMap<JobId, Placement>,
+    index: FreeIndex,
+    /// `max(server id) + 1` — sizing bound for id-keyed scratch bitsets
+    /// (TUNE's victim search); ids are sparse under
+    /// [`Cluster::with_server_ids`].
+    id_bound: usize,
 }
 
 impl Cluster {
@@ -98,12 +389,11 @@ impl Cluster {
 
     /// Build a homogeneous pool of `n` servers of generation `gen`.
     pub fn homogeneous_of(gen: GpuGen, spec: ServerSpec, n: usize) -> Cluster {
-        Cluster {
+        Cluster::from_servers(
             gen,
             spec,
-            servers: (0..n).map(|id| Server::of(gen, id, spec)).collect(),
-            placements: BTreeMap::new(),
-        }
+            (0..n).map(|id| Server::of(gen, id, spec)).collect(),
+        )
     }
 
     /// Build a cluster over an explicit set of server ids (the deploy
@@ -112,12 +402,18 @@ impl Cluster {
     /// failures).
     pub fn with_server_ids(spec: ServerSpec, ids: &[usize]) -> Cluster {
         let gen = GpuGen::default();
-        Cluster {
+        Cluster::from_servers(
             gen,
             spec,
-            servers: ids.iter().map(|&id| Server::of(gen, id, spec)).collect(),
-            placements: BTreeMap::new(),
-        }
+            ids.iter().map(|&id| Server::of(gen, id, spec)).collect(),
+        )
+    }
+
+    fn from_servers(gen: GpuGen, spec: ServerSpec, servers: Vec<Server>) -> Cluster {
+        let index = FreeIndex::build(&servers, spec.gpus);
+        let id_bound =
+            servers.iter().map(|s| s.id + 1).max().unwrap_or(0);
+        Cluster { gen, spec, servers, placements: BTreeMap::new(), index, id_bound }
     }
 
     pub fn num_servers(&self) -> usize {
@@ -136,8 +432,10 @@ impl Cluster {
         self.spec.mem_gb * self.servers.len() as f64
     }
 
+    /// Free GPUs across the pool — O(1) from the index's exact integer
+    /// aggregate (type assignment queries this every round per pool).
     pub fn free_gpus(&self) -> u32 {
-        self.servers.iter().map(|s| s.free_gpus).sum()
+        self.index.free_gpus
     }
 
     pub fn free_cpus(&self) -> f64 {
@@ -180,6 +478,7 @@ impl Cluster {
 
     /// Commit a placement for `job`. Panics if any server lacks capacity or
     /// the job already has a placement (allocation bugs must be loud).
+    /// Maintains the free-capacity index incrementally.
     pub fn place(&mut self, job: JobId, placement: Placement) {
         assert!(
             !self.placements.contains_key(&job),
@@ -187,17 +486,22 @@ impl Cluster {
         );
         for (&sid, share) in &placement.shares {
             let idx = self.server_index(sid);
+            self.index.detach(&self.servers[idx], idx as u32);
             self.servers[idx].allocate(share);
+            self.index.attach(&self.servers[idx], idx as u32);
         }
         self.placements.insert(job, placement);
     }
 
     /// Release a job's resources. No-op if the job has no placement.
+    /// Maintains the free-capacity index incrementally.
     pub fn evict(&mut self, job: JobId) -> Option<Placement> {
         let placement = self.placements.remove(&job)?;
         for (&sid, share) in &placement.shares {
             let idx = self.server_index(sid);
+            self.index.detach(&self.servers[idx], idx as u32);
             self.servers[idx].release(share);
+            self.index.attach(&self.servers[idx], idx as u32);
         }
         Some(placement)
     }
@@ -212,11 +516,58 @@ impl Cluster {
 
     /// Evict every job (used at the start of each scheduling round: the
     /// paper recomputes placements every round, §3.2).
+    ///
+    /// This is a *hard reset*: free counters are restored from the spec
+    /// rather than released share by share, so the round-start state is
+    /// bit-identical every round regardless of the placement history.
+    /// The round-plan memoization depends on that invariant — a replan
+    /// from round-start state must reproduce the cached plan exactly,
+    /// and float subtract-then-add round trips are not exact.
     pub fn evict_all(&mut self) {
-        let jobs: Vec<JobId> = self.placements.keys().copied().collect();
-        for j in jobs {
-            self.evict(j);
+        self.placements.clear();
+        for s in &mut self.servers {
+            s.reset_free();
         }
+        self.index.reset(&self.servers);
+    }
+
+    /// Upper bound on server ids (`max id + 1`) for id-keyed scratch
+    /// bitsets; ids are sparse under [`Cluster::with_server_ids`].
+    pub fn server_id_bound(&self) -> usize {
+        self.id_bound
+    }
+
+    /// Servers with at least `min_gpus` free GPUs, in best-fit order:
+    /// ascending `(free_score, scan position)`. The first server in this
+    /// order that fits a demand is *exactly* the server the pre-index
+    /// linear scan selected (minimal score, earliest position on ties),
+    /// so packing decisions are golden-pinned byte-identical.
+    pub fn servers_by_fullness(
+        &self,
+        min_gpus: u32,
+    ) -> impl Iterator<Item = &Server> {
+        MergedBuckets::new(
+            &self.servers,
+            self.index.by_score[(min_gpus as usize).min(self.index.by_score.len())..]
+                .iter()
+                .collect(),
+            |&(_, pos)| pos,
+        )
+    }
+
+    /// Servers with at least `min_gpus` free GPUs, in scan-position
+    /// (first-fit) order — byte-identical to the pre-index linear scan.
+    pub fn servers_by_position(
+        &self,
+        min_gpus: u32,
+    ) -> impl Iterator<Item = &Server> {
+        MergedBuckets::new(
+            &self.servers,
+            self.index.by_pos[(min_gpus as usize).min(self.index.by_pos.len())..]
+                .iter()
+                .collect(),
+            |&pos| pos,
+        )
     }
 
     /// GPU utilization in [0, 1].
@@ -229,9 +580,44 @@ impl Cluster {
         1.0 - self.free_cpus() / self.total_cpus()
     }
 
-    /// Check every server's bookkeeping against the placement map;
-    /// returns an error description on the first inconsistency.
+    /// Check the incrementally-maintained free-capacity index against a
+    /// fresh rebuild from the servers' current free counters. On
+    /// divergence, names the first differing bucket and its contents —
+    /// the likeliest failure class is a server stranded in a stale
+    /// bucket or holding a stale score key while the integer aggregate
+    /// still matches.
+    pub fn check_index(&self) -> Result<(), String> {
+        let fresh = FreeIndex::build(&self.servers, self.spec.gpus);
+        if fresh == self.index {
+            return Ok(());
+        }
+        for g in 0..fresh.by_score.len() {
+            if self.index.by_score[g] != fresh.by_score[g] {
+                return Err(format!(
+                    "free index by_score[{g}] diverged: index has \
+                     {:?}, fresh scan has {:?}",
+                    self.index.by_score[g], fresh.by_score[g]
+                ));
+            }
+            if self.index.by_pos[g] != fresh.by_pos[g] {
+                return Err(format!(
+                    "free index by_pos[{g}] diverged: index has {:?}, \
+                     fresh scan has {:?}",
+                    self.index.by_pos[g], fresh.by_pos[g]
+                ));
+            }
+        }
+        Err(format!(
+            "free index aggregate diverged: index free_gpus={}, scan={}",
+            self.index.free_gpus, fresh.free_gpus
+        ))
+    }
+
+    /// Check every server's bookkeeping against the placement map (and
+    /// the free-capacity index against the servers); returns an error
+    /// description on the first inconsistency.
     pub fn check_consistency(&self) -> Result<(), String> {
+        self.check_index()?;
         let mut used: BTreeMap<usize, Share> = BTreeMap::new();
         for p in self.placements.values() {
             for (&sid, share) in &p.shares {
@@ -389,6 +775,93 @@ mod tests {
         assert_eq!(c.free_gpus(), 16);
         assert_eq!(c.free_cpus(), 48.0);
         assert!(c.placements().is_empty());
+    }
+
+    #[test]
+    fn round_reset_is_bitwise_pristine() {
+        // The memoization soundness invariant: evict_all restores the
+        // exact spec counters no matter what fractional shares passed
+        // through (arithmetic release round trips would drift by ulps).
+        let mut c = Cluster::homogeneous(spec(), 2);
+        for i in 0..3u64 {
+            c.place(
+                JobId(i),
+                Placement::single(
+                    (i % 2) as usize,
+                    Share { gpus: 1, cpus: 9.3 - i as f64 * 0.7, mem_gb: 13.7 },
+                ),
+            );
+        }
+        c.evict_all();
+        for s in &c.servers {
+            assert_eq!(s.free_gpus, spec().gpus);
+            assert_eq!(s.free_cpus.to_bits(), (spec().cpus as f64).to_bits());
+            assert_eq!(s.free_mem_gb.to_bits(), spec().mem_gb.to_bits());
+        }
+        assert!(c.placements().is_empty());
+        assert!(c.check_consistency().is_ok());
+    }
+
+    #[test]
+    fn shares_small_vec_stays_sorted_and_spills() {
+        let mut sh = Shares::new();
+        let mk = |g| Share { gpus: g, cpus: 1.0, mem_gb: 1.0 };
+        for sid in [5usize, 1, 3, 0, 7, 2] {
+            sh.insert(sid, mk(sid as u32));
+        }
+        assert_eq!(sh.len(), 6, "spilled past inline capacity");
+        let ids: Vec<usize> = sh.keys().copied().collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 5, 7], "id order preserved");
+        assert_eq!(sh[&5].gpus, 5);
+        // Replacement keeps length and order.
+        sh.insert(3, mk(99));
+        assert_eq!(sh.len(), 6);
+        assert_eq!(sh.get(&3).unwrap().gpus, 99);
+        assert!(!sh.contains_key(&4));
+        // Owning iteration matches borrowed iteration.
+        let owned: Vec<usize> = sh.clone().into_iter().map(|(s, _)| s).collect();
+        assert_eq!(owned, ids);
+    }
+
+    #[test]
+    fn index_orders_servers_like_the_scan() {
+        let mut c = Cluster::homogeneous(spec(), 3);
+        // Server 1 fullest, then 2, then 0 (untouched).
+        c.place(
+            JobId(1),
+            Placement::single(1, Share { gpus: 6, cpus: 18.0, mem_gb: 400.0 }),
+        );
+        c.place(
+            JobId(2),
+            Placement::single(2, Share { gpus: 4, cpus: 12.0, mem_gb: 250.0 }),
+        );
+        let by_fullness: Vec<usize> =
+            c.servers_by_fullness(1).map(|s| s.id).collect();
+        assert_eq!(by_fullness, vec![1, 2, 0], "ascending free score");
+        let by_pos: Vec<usize> =
+            c.servers_by_position(1).map(|s| s.id).collect();
+        assert_eq!(by_pos, vec![0, 1, 2], "scan order");
+        // GPU filter excludes the fuller servers.
+        let roomy: Vec<usize> = c.servers_by_fullness(5).map(|s| s.id).collect();
+        assert_eq!(roomy, vec![0]);
+        assert_eq!(c.free_gpus(), 14);
+        assert!(c.check_index().is_ok());
+        c.evict(JobId(1));
+        assert_eq!(c.free_gpus(), 20);
+        assert!(c.check_consistency().is_ok());
+    }
+
+    #[test]
+    fn index_ties_break_by_scan_position() {
+        // Identical loads on servers 2 and 0: equal free scores must
+        // yield the earlier scan position first (the pre-index strict-<
+        // kept the first minimum).
+        let mut c = Cluster::homogeneous(spec(), 3);
+        let share = Share { gpus: 2, cpus: 6.0, mem_gb: 100.0 };
+        c.place(JobId(1), Placement::single(2, share));
+        c.place(JobId(2), Placement::single(0, share));
+        let order: Vec<usize> = c.servers_by_fullness(1).map(|s| s.id).collect();
+        assert_eq!(order, vec![0, 2, 1]);
     }
 
     #[test]

@@ -62,6 +62,18 @@ impl Server {
         }
     }
 
+    /// Restore the pristine free counters (round reset). Assigning from
+    /// the spec — rather than releasing share by share — guarantees the
+    /// round-start state is bit-identical every round; the round-plan
+    /// memoization's replay equivalence (a replan from round-start state
+    /// reproduces the cached plan exactly) depends on this, and float
+    /// subtract-then-add round trips are not exact.
+    pub fn reset_free(&mut self) {
+        self.free_gpus = self.spec.gpus;
+        self.free_cpus = self.spec.cpus as f64;
+        self.free_mem_gb = self.spec.mem_gb;
+    }
+
     /// Whether a share fits in the remaining capacity (with a small epsilon
     /// on the fractional dimensions to absorb float drift).
     pub fn fits(&self, share: &Share) -> bool {
@@ -111,6 +123,15 @@ impl Server {
         self.free_gpus as f64 / self.spec.gpus as f64
             + self.free_cpus / self.spec.cpus as f64
             + self.free_mem_gb / self.spec.mem_gb
+    }
+
+    /// [`Server::free_score`] as an order-preserving integer key for the
+    /// free-capacity index. Free counters are clamped to `[0, capacity]`,
+    /// so the score is a non-negative finite float and `to_bits` keeps
+    /// `a < b ⇔ key(a) < key(b)` — the index's `BTreeSet` ordering is
+    /// exactly the float ordering the linear best-fit scan used.
+    pub fn free_score_key(&self) -> u64 {
+        self.free_score().to_bits()
     }
 }
 

@@ -82,10 +82,12 @@ impl RoundPlanner {
             "round must start empty"
         );
 
-        // 1-2: policy views, ordered.
+        // 1-2: policy views, ordered (one round-start free tuple for the
+        // whole pass).
+        let free = round_start_free(fleet);
         let mut views: Vec<PolicyJobView> = jobs
             .iter()
-            .map(|(job, sens)| policy_view(fleet, job, sens))
+            .map(|(job, sens)| policy_view_with_free(fleet, free, job, sens))
             .collect();
         self.policy.order(&mut views, now);
 
@@ -141,6 +143,43 @@ pub fn policy_view(
     job: &Job,
     sens: &Sensitivity,
 ) -> PolicyJobView {
+    policy_view_with_free(fleet, round_start_free(fleet), job, sens)
+}
+
+/// The free-resource tuple of a *round-start* (reset) fleet — what the
+/// Tetris alignment in [`policy_view`] dots demands against. Both view
+/// callers evaluate against the round's reset state (the planner
+/// asserts the fleet holds no placements; the simulation core defines
+/// views against the about-to-be-reset fleet), so free equals capacity
+/// in every dimension and this never has to read per-server counters.
+/// GPU and CPU totals are integer-valued and exact either way; the
+/// memory total deliberately replicates the per-server *summation
+/// order* of the old free scan (a single `spec × n` multiply differs by
+/// ulps for non-dyadic per-server memory, and alignment tie-breaks pin
+/// schedules). Compute once per round and feed [`policy_view_with_free`]
+/// to make each view O(1).
+pub fn round_start_free(fleet: &Fleet) -> (f64, f64, f64) {
+    let mem: f64 = fleet
+        .pools
+        .iter()
+        .map(|p| {
+            (0..p.cluster.num_servers())
+                .map(|_| p.cluster.spec.mem_gb)
+                .sum::<f64>()
+        })
+        .sum();
+    (fleet.total_gpus() as f64, fleet.total_cpus(), mem)
+}
+
+/// [`policy_view`] with the round-start free tuple precomputed
+/// ([`round_start_free`]) — the per-round hot path builds all views off
+/// one tuple instead of rescanning the fleet per job.
+pub fn policy_view_with_free(
+    fleet: &Fleet,
+    free: (f64, f64, f64),
+    job: &Job,
+    sens: &Sensitivity,
+) -> PolicyJobView {
     let fair = sens.fair_throughput();
     let remaining_est_s = if fair > 0.0 {
         job.remaining_samples() / fair
@@ -152,12 +191,6 @@ pub fn policy_view(
     let dominant_share = (job.gpus as f64 / fleet.total_gpus() as f64)
         .max(best.cpus / fleet.total_cpus())
         .max(best.mem_gb / fleet.total_mem_gb());
-    // Tetris alignment: demand · free, normalized.
-    let free = (
-        fleet.free_gpus() as f64,
-        fleet.free_cpus(),
-        fleet.free_mem_gb(),
-    );
     let alignment = (job.gpus as f64 * free.0
         + best.cpus * free.1
         + best.mem_gb * free.2)

@@ -74,6 +74,9 @@ pub struct HeteroSimResult {
     pub jcts: Vec<(JobId, f64)>,
     pub makespan_s: f64,
     pub rounds: usize,
+    /// Rounds that actually ran the allocation mechanism (the rest were
+    /// memoized/fast-forwarded; shared-core accounting).
+    pub planned_rounds: usize,
     pub profiling_minutes: f64,
     /// Full per-job records (tenant-tagged), from the shared core.
     pub finished: Vec<FinishedJob>,
@@ -87,6 +90,7 @@ impl HeteroSimResult {
             jcts: r.finished.iter().map(|f| (f.id, f.jct_s)).collect(),
             makespan_s: r.makespan_s,
             rounds: r.rounds,
+            planned_rounds: r.planned_rounds,
             profiling_minutes: r.profiling_minutes,
             finished: r.finished,
             utilization: r.utilization,

@@ -113,9 +113,142 @@ impl Job {
     }
 }
 
+/// Dense job arena for the simulation hot path: the trace's jobs stored
+/// once (arrival order = arena index), with the *active* set — arrived,
+/// unfinished jobs — as a list of arena indices kept sorted by
+/// [`JobId`]. This replaces the per-round `BTreeMap<JobId, Job>` (and
+/// its per-arrival `Job` clone): state mutates in place, active
+/// iteration is a contiguous index walk in the exact order the map
+/// iterated (id ascending, which completion recording pins), and id
+/// lookups are a binary search over a flat table.
+#[derive(Debug)]
+pub struct JobArena {
+    jobs: Vec<Job>,
+    /// Arena indices of active jobs, sorted by `JobId`.
+    active: Vec<u32>,
+    /// `(id, arena index)` for every job, sorted by id.
+    by_id: Vec<(JobId, u32)>,
+}
+
+impl JobArena {
+    /// Build over a trace (callers sort it however the simulation wants
+    /// arena indices assigned — the core uses arrival order). Ids must
+    /// be unique.
+    pub fn new(jobs: Vec<Job>) -> JobArena {
+        let mut by_id: Vec<(JobId, u32)> = jobs
+            .iter()
+            .enumerate()
+            .map(|(i, j)| (j.id, i as u32))
+            .collect();
+        by_id.sort_unstable_by_key(|e| e.0);
+        for w in by_id.windows(2) {
+            assert!(w[0].0 != w[1].0, "duplicate job id {:?}", w[0].0);
+        }
+        JobArena { jobs, active: Vec::new(), by_id }
+    }
+
+    /// Total jobs in the arena (active or not).
+    pub fn n_jobs(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// All jobs, in arena order.
+    pub fn jobs(&self) -> &[Job] {
+        &self.jobs
+    }
+
+    pub fn job(&self, idx: usize) -> &Job {
+        &self.jobs[idx]
+    }
+
+    pub fn job_mut(&mut self, idx: usize) -> &mut Job {
+        &mut self.jobs[idx]
+    }
+
+    /// Arena index of a job id (panics on unknown ids).
+    pub fn index_of(&self, id: JobId) -> usize {
+        let i = self
+            .by_id
+            .binary_search_by_key(&id, |e| e.0)
+            .unwrap_or_else(|_| panic!("unknown job id {id:?}"));
+        self.by_id[i].1 as usize
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Arena indices of active jobs, id-ascending.
+    pub fn active_indices(&self) -> &[u32] {
+        &self.active
+    }
+
+    /// Active jobs in id order (the old map's iteration order).
+    pub fn active_jobs(&self) -> impl Iterator<Item = &Job> {
+        self.active.iter().map(move |&i| &self.jobs[i as usize])
+    }
+
+    /// Active `(arena index, job)` pairs in id order.
+    pub fn active_with_indices(&self) -> impl Iterator<Item = (usize, &Job)> {
+        self.active
+            .iter()
+            .map(move |&i| (i as usize, &self.jobs[i as usize]))
+    }
+
+    /// Mark an arrived job active (inserted in id order).
+    pub fn activate(&mut self, idx: usize) {
+        let id = self.jobs[idx].id;
+        let pos = self
+            .active
+            .binary_search_by(|&i| self.jobs[i as usize].id.cmp(&id))
+            .expect_err("job already active");
+        self.active.insert(pos, idx as u32);
+    }
+
+    /// Remove a finished job from the active set (state stays in place).
+    pub fn deactivate(&mut self, idx: usize) {
+        let id = self.jobs[idx].id;
+        let pos = self
+            .active
+            .binary_search_by(|&i| self.jobs[i as usize].id.cmp(&id))
+            .expect("job not active");
+        self.active.remove(pos);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn arena_active_set_stays_in_id_order() {
+        let jobs: Vec<Job> = [3u64, 1, 2, 0]
+            .iter()
+            .map(|&i| Job::new(JobId(i), ModelKind::Lstm, 1, i as f64, 60.0))
+            .collect();
+        let mut a = JobArena::new(jobs);
+        assert_eq!(a.n_jobs(), 4);
+        assert_eq!(a.n_active(), 0);
+        a.activate(0); // id 3
+        a.activate(1); // id 1
+        a.activate(3); // id 0
+        let ids: Vec<u64> = a.active_jobs().map(|j| j.id.0).collect();
+        assert_eq!(ids, vec![0, 1, 3], "id order regardless of activation");
+        a.deactivate(1);
+        let ids: Vec<u64> = a.active_jobs().map(|j| j.id.0).collect();
+        assert_eq!(ids, vec![0, 3]);
+        assert_eq!(a.index_of(JobId(2)), 2);
+        assert_eq!(a.index_of(JobId(3)), 0);
+        a.job_mut(2).progress_samples = 7.0;
+        assert_eq!(a.job(2).progress_samples, 7.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate job id")]
+    fn arena_rejects_duplicate_ids() {
+        let j = Job::new(JobId(1), ModelKind::Lstm, 1, 0.0, 60.0);
+        JobArena::new(vec![j.clone(), j]);
+    }
 
     #[test]
     fn new_job_is_queued_with_zero_progress() {

@@ -231,6 +231,7 @@ fn sim_config(args: &Args, mechanism: &str, policy: &str) -> SimConfig {
         network_penalty: args.f64("network-penalty", 0.0),
         reference_spec: None,
         types: None,
+        force_replan: args.flag("force-replan"),
     }
 }
 
@@ -246,9 +247,11 @@ fn cmd_simulate(args: &Args) {
     let result = sim.run(workload.jobs);
     let stats = result.jct_stats();
     println!(
-        "policy={policy} mechanism={mechanism} jobs={} rounds={} wall={:?}",
+        "policy={policy} mechanism={mechanism} jobs={} rounds={} \
+         planned={} wall={:?}",
         stats.n,
         result.rounds,
+        result.planned_rounds,
         t0.elapsed()
     );
     println!(
@@ -565,6 +568,7 @@ fn cmd_config(args: &Args) {
             network_penalty: 0.0,
             reference_spec: None,
             types: cfg.types(),
+            force_replan: false,
         },
         quotas.clone(),
     );

@@ -298,8 +298,38 @@ pub fn proportional_split(demand: &DemandVector, gpus_per_server: &[(usize, u32)
 ///   splitting CPU/mem proportionally.
 ///
 /// Does not mutate the cluster; returns the placement to commit.
+///
+/// Server selection walks the pool's free-capacity index in ascending
+/// `(free_score, scan position)` order, so the first CPU/mem-feasible
+/// server *is* the linear scan's minimum — identical tie-breaks (the
+/// scan's strict `<` kept the earliest minimal server), verified against
+/// [`best_fit_scan`] by the index-equivalence property tests — without
+/// touching the servers the GPU filter already excludes.
 pub fn best_fit(cluster: &Cluster, demand: &DemandVector) -> Option<Placement> {
     // Single-server attempt (consolidation preferred, §6).
+    let share = Share {
+        gpus: demand.gpus,
+        cpus: demand.cpus,
+        mem_gb: demand.mem_gb,
+    };
+    for s in cluster.servers_by_fullness(demand.gpus) {
+        if s.fits(&share) {
+            return Some(Placement::single(s.id, share));
+        }
+    }
+
+    // Multi-server split: greedily take GPUs from the fullest feasible
+    // servers (minimizing the number of fragments).
+    multi_server_fit(cluster, demand, |_s| true)
+}
+
+/// Reference implementation of [`best_fit`]'s single-server selection by
+/// full linear scan — the pre-index hot path, kept as the ground truth
+/// the index-equivalence property tests compare against.
+pub fn best_fit_scan(
+    cluster: &Cluster,
+    demand: &DemandVector,
+) -> Option<Placement> {
     let share = Share {
         gpus: demand.gpus,
         cpus: demand.cpus,
@@ -317,14 +347,15 @@ pub fn best_fit(cluster: &Cluster, demand: &DemandVector) -> Option<Placement> {
     if let Some((_, sid)) = best {
         return Some(Placement::single(sid, share));
     }
-
-    // Multi-server split: greedily take GPUs from the fullest feasible
-    // servers (minimizing the number of fragments).
     multi_server_fit(cluster, demand, |_s| true)
 }
 
 /// Multi-server placement honoring per-server proportional CPU/mem; the
 /// `admit` filter restricts candidate servers (used by GPU-only search).
+/// Candidates come from the free-capacity index (servers holding any
+/// free GPU — at load a small fraction of the pool) and are then sorted
+/// by the exact pre-index comparator, a total order, so the result is
+/// byte-identical to the full-scan collection.
 pub fn multi_server_fit(
     cluster: &Cluster,
     demand: &DemandVector,
@@ -335,9 +366,8 @@ pub fn multi_server_fit(
     // Order candidate servers by free GPUs descending (fewest fragments),
     // then by fullness.
     let mut candidates: Vec<&crate::cluster::Server> = cluster
-        .servers
-        .iter()
-        .filter(|s| s.free_gpus > 0 && admit(s))
+        .servers_by_position(1)
+        .filter(|s| admit(s))
         .collect();
     candidates.sort_by(|a, b| {
         b.free_gpus
@@ -376,9 +406,31 @@ pub fn multi_server_fit(
 }
 
 /// First-fit placement (Synergy-GREEDY / big-data style): the first
-/// server, in id order, that satisfies the demand; multi-server split if
-/// no single server fits.
+/// server, in scan order, that satisfies the demand; multi-server split
+/// if no single server fits. Walks the free-capacity index in scan
+/// order, skipping servers the GPU filter already excludes — the first
+/// feasible hit is identical to the linear scan's ([`first_fit_scan`],
+/// pinned by the index-equivalence property tests).
 pub fn first_fit(cluster: &Cluster, demand: &DemandVector) -> Option<Placement> {
+    let share = Share {
+        gpus: demand.gpus,
+        cpus: demand.cpus,
+        mem_gb: demand.mem_gb,
+    };
+    for s in cluster.servers_by_position(demand.gpus) {
+        if s.fits(&share) {
+            return Some(Placement::single(s.id, share));
+        }
+    }
+    multi_server_fit(cluster, demand, |_| true)
+}
+
+/// Reference implementation of [`first_fit`] by full linear scan (the
+/// pre-index hot path; ground truth for the equivalence property tests).
+pub fn first_fit_scan(
+    cluster: &Cluster,
+    demand: &DemandVector,
+) -> Option<Placement> {
     let share = Share {
         gpus: demand.gpus,
         cpus: demand.cpus,

@@ -212,18 +212,21 @@ fn redistribute_spare(
     });
 
     for id in order {
-        let grant = grants[&id].clone();
         let bd = best[&id];
-        let want_cpu = (bd.cpus - grant.demand.cpus).max(0.0);
-        let want_mem = (bd.mem_gb - grant.demand.mem_gb).max(0.0);
+        // Early-out on the Copy demand alone — most jobs already hold
+        // their best case, so don't touch the placement (let alone clone
+        // the grant, as this loop once did) until a gap is established.
+        let granted = grants[&id].demand;
+        let want_cpu = (bd.cpus - granted.cpus).max(0.0);
+        let want_mem = (bd.mem_gb - granted.mem_gb).max(0.0);
         if want_cpu <= 1e-9 && want_mem <= 1e-9 {
             continue;
         }
-        let total_gpus = grant.demand.gpus as f64;
+        let total_gpus = granted.gpus as f64;
         // Per-GPU headroom limited by the tightest server in the span.
         let mut cpu_per_gpu = f64::INFINITY;
         let mut mem_per_gpu = f64::INFINITY;
-        for (&sid, share) in &grant.placement.shares {
+        for (&sid, share) in &grants[&id].placement.shares {
             let s = cluster.server(sid);
             cpu_per_gpu = cpu_per_gpu.min(s.free_cpus / share.gpus as f64);
             mem_per_gpu = mem_per_gpu.min(s.free_mem_gb / share.gpus as f64);
@@ -234,9 +237,9 @@ fn redistribute_spare(
             continue;
         }
         let new_demand = DemandVector::new(
-            grant.demand.gpus,
-            grant.demand.cpus + add_cpu,
-            grant.demand.mem_gb + add_mem,
+            granted.gpus,
+            granted.cpus + add_cpu,
+            granted.mem_gb + add_mem,
         );
         // Rebuild the placement on the same servers, proportional split.
         let old = cluster.evict(id).expect("granted job must be placed");
@@ -268,14 +271,17 @@ fn downgrade_one_victim(
     strategy: VictimStrategy,
 ) -> bool {
     // Candidate servers: those with any free GPUs (they could contribute
-    // to the job's placement but lack CPU/mem).
-    let candidate_servers: Vec<usize> = cluster
-        .servers
-        .iter()
-        .filter(|s| s.free_gpus > 0)
-        .map(|s| s.id)
-        .collect();
-    if candidate_servers.is_empty() {
+    // to the job's placement but lack CPU/mem). One boolean vec over
+    // server ids, filled from the free-capacity index — the victim loop
+    // below then probes it in O(span) per victim instead of the old
+    // O(victims × candidate servers) `contains` scans.
+    let mut candidate = vec![false; cluster.server_id_bound()];
+    let mut any_candidate = false;
+    for s in cluster.servers_by_position(1) {
+        candidate[s.id] = true;
+        any_candidate = true;
+    }
+    if !any_candidate {
         return false;
     }
 
@@ -289,11 +295,8 @@ fn downgrade_one_victim(
         if !grant.demand.exceeds(prop) {
             continue;
         }
-        let touches = grant
-            .placement
-            .shares
-            .keys()
-            .any(|sid| candidate_servers.contains(sid));
+        let touches =
+            grant.placement.shares.keys().any(|sid| candidate[*sid]);
         if !touches {
             continue;
         }
@@ -312,8 +315,7 @@ fn downgrade_one_victim(
     // Downgrade: shrink each per-server share to the element-wise min of
     // the current and proportional demand for the GPUs it holds there
     // (same servers — no migration; never grows a dimension).
-    let grant_now = grants[&vid].clone();
-    let prop = grant_now.demand.clamp_to(&props[&vid]);
+    let prop = grants[&vid].demand.clamp_to(&props[&vid]);
     let per_gpu_cpu = prop.cpus / prop.gpus as f64;
     let per_gpu_mem = prop.mem_gb / prop.gpus as f64;
     let old = cluster.evict(vid).expect("victim must be placed");

@@ -11,11 +11,12 @@
 //! but a `SimConfig` with `types` set — there is no second engine.
 
 use super::core::{
-    run_events, utilization_sample, ClusterModel, CoreConfig, SimResult,
+    run_events, utilization_sample, ClusterModel, CoreConfig, RoundRates,
+    SimResult,
 };
 use crate::cluster::{Fleet, GpuGen, ServerSpec, TypeSpec};
-use crate::coordinator::policy_view;
-use crate::job::{Job, JobId};
+use crate::coordinator::{policy_view_with_free, round_start_free};
+use crate::job::{Job, JobArena};
 use crate::mechanism::{by_name as mechanism_by_name, JobRequest, Mechanism};
 use crate::metrics::UtilSample;
 use crate::perf::PerfModel;
@@ -54,6 +55,11 @@ pub struct SimConfig {
     /// `None` = the homogeneous special case, `n_servers` V100 machines
     /// of `spec` (when set, `spec`/`n_servers` are ignored).
     pub types: Option<Vec<TypeSpec>>,
+    /// Disable round-plan memoization (rerun the mechanism on every
+    /// non-fast-forwardable round — the pre-memoization hot path).
+    /// Schedules are bit-identical either way; exists for the
+    /// memo-parity harness and A/B perf measurement.
+    pub force_replan: bool,
 }
 
 impl Default for SimConfig {
@@ -70,6 +76,7 @@ impl Default for SimConfig {
             network_penalty: 0.0,
             reference_spec: None,
             types: None,
+            force_replan: false,
         }
     }
 }
@@ -84,7 +91,9 @@ pub struct FleetModel {
     worlds: BTreeMap<GpuGen, PerfModel>,
     profiler: OptimisticProfiler,
     mechanism: Box<dyn Mechanism>,
-    sens: BTreeMap<JobId, Sensitivity>,
+    /// Per-job scheduling context, arena-indexed (dense slab — the
+    /// per-round `BTreeMap` lookups were a hot-path cost at scale).
+    sens: Vec<Option<Sensitivity>>,
     reference_spec: Option<ServerSpec>,
     network_penalty: f64,
     /// Largest single pool, GPUs — the gang-fit bound (A.2.2: no
@@ -118,11 +127,15 @@ impl FleetModel {
             worlds,
             profiler,
             mechanism,
-            sens: BTreeMap::new(),
+            sens: Vec::new(),
             reference_spec: cfg.reference_spec,
             network_penalty: cfg.network_penalty,
             max_pool_gpus,
         }
+    }
+
+    fn sens(&self, idx: usize) -> &Sensitivity {
+        self.sens[idx].as_ref().expect("job profiled on arrival")
     }
 }
 
@@ -135,7 +148,7 @@ impl ClusterModel for FleetModel {
         self.fleet.total_gpus()
     }
 
-    fn profile_arrival(&mut self, job: &mut Job) -> f64 {
+    fn profile_arrival(&mut self, idx: usize, job: &mut Job) -> f64 {
         // Profiled on every machine type present (A.2's `W_ij`; one
         // sweep on a one-type fleet).
         let s = self.profiler.profile(job);
@@ -150,36 +163,47 @@ impl ClusterModel for FleetModel {
         };
         job.total_samples = job.duration_prop_s * ref_tput;
         let cost = s.cost_minutes;
-        self.sens.insert(job.id, s);
+        if self.sens.len() <= idx {
+            self.sens.resize_with(idx + 1, || None);
+        }
+        self.sens[idx] = Some(s);
         cost
     }
 
-    fn forget(&mut self, id: JobId) {
-        self.sens.remove(&id);
+    fn forget(&mut self, idx: usize) {
+        self.sens[idx] = None;
     }
 
     fn begin_round(&mut self) {
         self.fleet.evict_all();
     }
 
-    fn policy_views(&self, active: &BTreeMap<JobId, Job>) -> Vec<PolicyJobView> {
-        active
-            .values()
-            .map(|j| policy_view(&self.fleet, j, &self.sens[&j.id]))
-            .collect()
+    fn policy_views(&self, arena: &JobArena, out: &mut Vec<PolicyJobView>) {
+        // One round-start free tuple for the whole pass: each view is
+        // O(1) instead of rescanning the fleet per job.
+        let free = round_start_free(&self.fleet);
+        out.extend(arena.active_with_indices().map(|(idx, j)| {
+            policy_view_with_free(&self.fleet, free, j, self.sens(idx))
+        }));
     }
 
     fn place_round(
         &mut self,
-        runnable: &[JobId],
-        active: &BTreeMap<JobId, Job>,
-    ) -> BTreeMap<JobId, f64> {
+        runnable: &[u32],
+        arena: &JobArena,
+        rates: &mut RoundRates,
+    ) {
         let requests: Vec<JobRequest<'_>> = runnable
             .iter()
-            .map(|id| JobRequest {
-                id: *id,
-                gpus: active[id].gpus,
-                sens: &self.sens[id],
+            .map(|&idx| {
+                let j = arena.job(idx as usize);
+                JobRequest {
+                    id: j.id,
+                    gpus: j.gpus,
+                    sens: self.sens[idx as usize]
+                        .as_ref()
+                        .expect("job profiled on arrival"),
+                }
             })
             .collect();
         let grants = self.mechanism.allocate(&mut self.fleet, &requests);
@@ -188,10 +212,9 @@ impl ClusterModel for FleetModel {
         // its assigned type's ground truth at the granted (c, m).
         // Fragmented placements pay the data-parallel sync cost (§6
         // consolidation tradeoff; 0 in the paper's main body).
-        grants
-            .iter()
-            .map(|(id, grant)| {
-                let job = &active[id];
+        for &idx in runnable {
+            let job = arena.job(idx as usize);
+            if let Some(grant) = grants.get(&job.id) {
                 let rate = self.worlds[&grant.gen].throughput(
                     job.model,
                     job.gpus,
@@ -199,15 +222,18 @@ impl ClusterModel for FleetModel {
                     grant.demand.mem_gb,
                 );
                 let span = grant.placement.span().max(1) as f64;
-                (*id, rate / (1.0 + self.network_penalty * (span - 1.0)))
-            })
-            .collect()
+                rates.set(
+                    idx as usize,
+                    rate / (1.0 + self.network_penalty * (span - 1.0)),
+                );
+            }
+        }
     }
 
-    fn utilization(&self, now: f64, active: &BTreeMap<JobId, Job>) -> UtilSample {
+    fn utilization(&self, now: f64, arena: &JobArena) -> UtilSample {
         utilization_sample(
             now,
-            active,
+            arena,
             self.fleet.gpu_utilization(),
             self.fleet.cpu_utilization(),
             1.0 - self.fleet.free_mem_gb() / self.fleet.total_mem_gb(),
@@ -254,6 +280,7 @@ impl Simulator {
             &CoreConfig {
                 round_s: self.cfg.round_s,
                 max_sim_s: self.cfg.max_sim_s,
+                force_replan: self.cfg.force_replan,
             },
             jobs,
         )
@@ -263,7 +290,7 @@ impl Simulator {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::job::ModelKind;
+    use crate::job::{JobId, ModelKind};
     use crate::trace::{generate, Split, TraceConfig};
 
     fn small_cfg(policy: &str, mechanism: &str) -> SimConfig {
@@ -378,6 +405,35 @@ mod tests {
     }
 
     #[test]
+    fn memoization_preserves_schedule_and_bounds_planning() {
+        // The memoized path must reproduce the forced-replan schedule
+        // bit-for-bit, while planning at most once per set change under
+        // a time-stable policy (FIFO keys never move between events).
+        let trace = small_trace(30, 17);
+        let memo = Simulator::new(small_cfg("fifo", "tune")).run(trace.clone());
+        let forced = Simulator::new(SimConfig {
+            force_replan: true,
+            ..small_cfg("fifo", "tune")
+        })
+        .run(trace);
+        let bits = |r: &SimResult| -> Vec<(u64, u64)> {
+            r.finished.iter().map(|f| (f.id.0, f.jct_s.to_bits())).collect()
+        };
+        assert_eq!(bits(&memo), bits(&forced));
+        assert_eq!(memo.rounds, forced.rounds);
+        assert!(
+            memo.planned_rounds <= forced.planned_rounds,
+            "memoization may only remove mechanism runs"
+        );
+        assert!(
+            memo.planned_rounds <= 2 * 30 + 1,
+            "fifo planned rounds {} exceed arrivals+completions+1",
+            memo.planned_rounds
+        );
+        assert!(memo.planned_rounds <= memo.rounds);
+    }
+
+    #[test]
     fn deterministic_runs() {
         let trace = small_trace(20, 11);
         let a = Simulator::new(small_cfg("srtf", "tune")).run(trace.clone());
@@ -400,7 +456,11 @@ mod tests {
             &mut model,
             policy_by_name("srtf").unwrap().as_ref(),
             None,
-            &CoreConfig { round_s: cfg.round_s, max_sim_s: cfg.max_sim_s },
+            &CoreConfig {
+                round_s: cfg.round_s,
+                max_sim_s: cfg.max_sim_s,
+                ..CoreConfig::default()
+            },
             trace,
         );
         assert_eq!(via_sim.rounds, via_core.rounds);

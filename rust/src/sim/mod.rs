@@ -19,16 +19,19 @@
 //! pre-unification homogeneous schedule bit-for-bit (golden-tested in
 //! `tests/scenarios.rs`).
 //!
-//! Performance: rounds with an unchanged runnable set and an empty queue
-//! fast-forward to the next arrival/finish event (the schedule would be
-//! recomputed identically), which is what makes 512-GPU × 8000-job traces
-//! tractable (see EXPERIMENTS.md §Perf).
+//! Performance: the core memoizes the round plan — the mechanism reruns
+//! only when the policy-ordered, admission-cut runnable sequence
+//! actually changed (see [`core`]'s module docs for the invariant), jobs
+//! live in a dense [`crate::job::JobArena`] instead of per-round
+//! `BTreeMap`s, and packing walks the clusters' free-capacity indices.
+//! That combination is what makes 512-GPU × 8000-job traces tractable
+//! (`benches/sim_scale.rs` → `BENCH_sim.json`).
 
 mod core;
 mod engine;
 
 pub use self::core::{
     run_events, utilization_sample, ClusterModel, CoreConfig, FinishedJob,
-    SimEvent, SimResult,
+    RoundRates, SimEvent, SimResult,
 };
 pub use engine::{FleetModel, HomoModel, SimConfig, Simulator};

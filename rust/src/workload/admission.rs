@@ -113,6 +113,11 @@ pub struct AdmissionOutcome {
     /// Admitted job ids: quota-pass admits in policy order, then spill
     /// admits in policy order (spilled jobs rank below in-quota jobs).
     pub admitted: Vec<JobId>,
+    /// For each entry of `admitted`, its position in the input `ordered`
+    /// slice. Lets callers that keep per-job data parallel to the queue
+    /// (the simulation core's arena indices) map the admitted set back
+    /// without a lookup per job.
+    pub positions: Vec<usize>,
     /// GPUs admitted per tenant (for fairness accounting).
     pub gpus_by_tenant: BTreeMap<TenantId, u32>,
     /// Jobs admitted only by the work-conserving spill pass.
@@ -135,10 +140,11 @@ pub fn admit(
 
     // Fast path: the scheduler hot loop runs single-tenant by default.
     let Some(quotas) = quotas else {
-        for job in ordered {
+        for (pos, job) in ordered.iter().enumerate() {
             if used + job.gpus <= total_gpus {
                 used += job.gpus;
                 out.admitted.push(job.id);
+                out.positions.push(pos);
             }
         }
         return out;
@@ -153,8 +159,8 @@ pub fn admit(
     };
 
     // Pass 1: within-quota.
-    let mut deferred: Vec<AdmissionJob> = Vec::new();
-    for job in ordered {
+    let mut deferred: Vec<(usize, AdmissionJob)> = Vec::new();
+    for (pos, job) in ordered.iter().enumerate() {
         if used + job.gpus > total_gpus {
             continue; // passed over; smaller later jobs may backfill
         }
@@ -162,22 +168,24 @@ pub fn admit(
         let t_used =
             out.gpus_by_tenant.get(&job.tenant).copied().unwrap_or(0);
         if t_used + job.gpus > cap {
-            deferred.push(*job);
+            deferred.push((pos, *job));
             continue;
         }
         used += job.gpus;
         *out.gpus_by_tenant.entry(job.tenant).or_insert(0) += job.gpus;
         out.admitted.push(job.id);
+        out.positions.push(pos);
     }
 
     // Pass 2: work-conserving spill of capacity quotas left stranded.
-    for job in &deferred {
+    for &(pos, ref job) in &deferred {
         if used + job.gpus > total_gpus {
             continue;
         }
         used += job.gpus;
         *out.gpus_by_tenant.entry(job.tenant).or_insert(0) += job.gpus;
         out.admitted.push(job.id);
+        out.positions.push(pos);
         out.spilled.push(job.id);
     }
     out
@@ -198,6 +206,23 @@ mod tests {
         let out = admit(&q, 8, None);
         assert_eq!(out.admitted, vec![JobId(0), JobId(2)]);
         assert!(out.spilled.is_empty());
+    }
+
+    #[test]
+    fn positions_track_input_slots() {
+        // Fast path: positions mirror the admitted subsequence.
+        let q = [job(0, 0, 6), job(1, 0, 8), job(2, 0, 2)];
+        let out = admit(&q, 8, None);
+        assert_eq!(out.positions, vec![0, 2]);
+        // Quota + spill path: positions follow the admitted order, which
+        // interleaves pass-1 and pass-2 admits.
+        let q = [job(0, 1, 8), job(1, 0, 4), job(2, 0, 4)];
+        let quotas = TenantQuotas::new()
+            .with(TenantId(0), 1.0)
+            .with(TenantId(1), 1.0);
+        let out = admit(&q, 8, Some(&quotas));
+        assert_eq!(out.admitted, vec![JobId(1), JobId(2)]);
+        assert_eq!(out.positions, vec![1, 2]);
     }
 
     #[test]

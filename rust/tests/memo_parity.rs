@@ -1,0 +1,141 @@
+//! Forced-replan vs memoized-run equivalence (ISSUE 4 tentpole proof).
+//!
+//! The simulation core memoizes the round plan: the allocation mechanism
+//! reruns only when the policy-ordered, admission-cut runnable sequence
+//! changed since the last planned round (`sim/core.rs` module docs state
+//! the invariant). Because the plan is a pure function of that sequence,
+//! disabling memoization (`SimConfig::force_replan`, which reruns the
+//! mechanism on every non-fast-forwardable round — the pre-memoization
+//! behaviour) must yield the *bit-identical* schedule: same finish
+//! times, same round count, same utilization trace, same metrics JSON.
+//!
+//! The matrix below mirrors the golden scenario matrix's axes (workload
+//! shape × quotas × fleet shape) across time-stable (FIFO) and
+//! time-varying (SRTF/LAS) policies — the latter exercise rounds where
+//! the cheap pass runs but the runnable sequence shifts mid-stream.
+
+use synergy::cluster::{GpuGen, ServerSpec, TypeSpec};
+use synergy::job::Job;
+use synergy::sim::{SimConfig, SimResult, Simulator};
+use synergy::trace::{Split, TraceConfig};
+use synergy::workload::{SyntheticSource, TenantSpec, WorkloadSource};
+
+/// A loaded multi-tenant synthetic trace: a non-empty queue through most
+/// of the run, so memoized steady-state rounds actually occur.
+fn loaded_trace(n: usize, seed: u64) -> (Vec<Job>, TenantSpec) {
+    let spec = TenantSpec::parse("a:2,b:1").unwrap();
+    let jobs = SyntheticSource::new(TraceConfig {
+        n_jobs: n,
+        split: Split::new(30, 50, 20),
+        multi_gpu: false,
+        jobs_per_hour: Some(10.0),
+        seed,
+    })
+    .with_tenants(spec.clone())
+    .drain_jobs();
+    (jobs, spec)
+}
+
+fn tritype() -> Vec<TypeSpec> {
+    vec![
+        TypeSpec { gen: GpuGen::K80, spec: ServerSpec::default(), machines: 1 },
+        TypeSpec { gen: GpuGen::P100, spec: ServerSpec::default(), machines: 1 },
+        TypeSpec { gen: GpuGen::V100, spec: ServerSpec::default(), machines: 1 },
+    ]
+}
+
+/// The full schedule as comparable bits: exact finish times per job,
+/// round counts, and the per-round utilization trace (bit-patterns, so
+/// "close" is not "equal").
+fn schedule_bits(r: &SimResult) -> (Vec<(u64, u64)>, usize, u64, Vec<u64>) {
+    let finished: Vec<(u64, u64)> =
+        r.finished.iter().map(|f| (f.id.0, f.jct_s.to_bits())).collect();
+    let util: Vec<u64> = r
+        .utilization
+        .samples
+        .iter()
+        .flat_map(|s| {
+            [
+                s.gpu_util.to_bits(),
+                s.cpu_util.to_bits(),
+                s.cpu_used.to_bits(),
+                s.mem_util.to_bits(),
+                s.queued_jobs as u64,
+                s.running_jobs as u64,
+            ]
+        })
+        .collect();
+    (finished, r.rounds, r.makespan_s.to_bits(), util)
+}
+
+#[test]
+fn memoized_and_forced_replan_schedules_are_bit_identical() {
+    let (jobs, spec) = loaded_trace(28, 41);
+    for policy in ["fifo", "srtf", "las"] {
+        for with_quotas in [false, true] {
+            for types in [None, Some(tritype())] {
+                let fleet_tag = if types.is_some() { "tritype" } else { "homo" };
+                let cfg = |force: bool| SimConfig {
+                    n_servers: 2,
+                    policy: policy.into(),
+                    mechanism: "tune".into(),
+                    types: types.clone(),
+                    force_replan: force,
+                    ..Default::default()
+                };
+                let quotas = with_quotas.then(|| spec.quotas());
+                let memo = Simulator::with_quotas(cfg(false), quotas.clone())
+                    .run(jobs.clone());
+                let forced = Simulator::with_quotas(cfg(true), quotas)
+                    .run(jobs.clone());
+                assert_eq!(
+                    schedule_bits(&memo),
+                    schedule_bits(&forced),
+                    "{policy}/quotas={with_quotas}/{fleet_tag}: memoized \
+                     schedule must be bit-identical to forced replans"
+                );
+                assert!(
+                    memo.planned_rounds <= forced.planned_rounds,
+                    "{policy}/quotas={with_quotas}/{fleet_tag}: memoization \
+                     may only remove mechanism runs ({} > {})",
+                    memo.planned_rounds,
+                    forced.planned_rounds
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn memoization_engages_under_steady_load() {
+    // A contended FIFO run holds a non-empty queue across many rounds
+    // with an unchanged runnable sequence: exactly the rounds the
+    // memoization exists for. It must (a) skip a strictly positive
+    // number of mechanism runs relative to forced replanning and
+    // (b) stay within the arrivals + completions + 1 planning bound
+    // (FIFO keys are static, so the sequence only changes on events).
+    let (jobs, _) = loaded_trace(32, 7);
+    let n = jobs.len();
+    let cfg = |force: bool| SimConfig {
+        n_servers: 1,
+        policy: "fifo".into(),
+        mechanism: "tune".into(),
+        force_replan: force,
+        ..Default::default()
+    };
+    let memo = Simulator::new(cfg(false)).run(jobs.clone());
+    let forced = Simulator::new(cfg(true)).run(jobs);
+    assert_eq!(memo.finished.len(), n);
+    assert!(
+        memo.planned_rounds < forced.planned_rounds,
+        "steady-state rounds should be memoized: planned {} vs forced {}",
+        memo.planned_rounds,
+        forced.planned_rounds
+    );
+    assert!(
+        memo.planned_rounds <= 2 * n + 1,
+        "fifo planning bound violated: {} > {}",
+        memo.planned_rounds,
+        2 * n + 1
+    );
+}

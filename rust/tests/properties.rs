@@ -20,7 +20,8 @@
 use synergy::cluster::{Cluster, Fleet, ServerSpec};
 use synergy::job::{DemandVector, Job, JobId, ALL_MODELS};
 use synergy::mechanism::{
-    by_name, JobRequest, Mechanism, PoolRequest, Tune,
+    best_fit, best_fit_scan, by_name, first_fit, first_fit_scan, JobRequest,
+    Mechanism, PoolRequest, Tune,
 };
 use synergy::profiler::{OptimisticProfiler, Sensitivity};
 use synergy::prop_assert;
@@ -490,4 +491,98 @@ mod fleet_props {
             Ok(())
         });
     }
+}
+
+// ---------------------------------------------------------------------------
+// Free-capacity-index invariants (ISSUE 4): the incrementally-maintained
+// index must agree with a fresh scan after arbitrary place/evict
+// sequences, and index-driven packing must select the identical servers
+// the pre-index linear scans did.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_free_index_consistent_and_fit_equivalent() {
+    check("free index ≡ scan", 30, |g| {
+        let spec = ServerSpec {
+            gpus: g.choose(&[4u32, 8]),
+            cpus: 24,
+            mem_gb: 500.0,
+        };
+        let n = g.int(1, 13);
+        let mut cluster = Cluster::homogeneous(spec, n);
+        let mut resident: Vec<JobId> = Vec::new();
+        let mut next_id = 0u64;
+        let ops = g.int(5, 80);
+        for _ in 0..ops {
+            let place = resident.is_empty() || g.bool();
+            if place {
+                // A random (often infeasible) demand: both the index
+                // path and the scan path must agree on the outcome,
+                // including "no fit".
+                let demand = DemandVector::new(
+                    g.int(1, 2 * spec.gpus as usize + 1) as u32,
+                    g.f64(0.5, spec.cpus as f64 * 1.3),
+                    g.f64(1.0, spec.mem_gb * 1.3),
+                );
+                let via_index = best_fit(&cluster, &demand);
+                let via_scan = best_fit_scan(&cluster, &demand);
+                prop_assert!(
+                    via_index == via_scan,
+                    "best_fit diverged for {demand:?}: index {via_index:?} \
+                     vs scan {via_scan:?}"
+                );
+                let ff_index = first_fit(&cluster, &demand);
+                let ff_scan = first_fit_scan(&cluster, &demand);
+                prop_assert!(
+                    ff_index == ff_scan,
+                    "first_fit diverged for {demand:?}"
+                );
+                if let Some(p) = via_index {
+                    let id = JobId(next_id);
+                    next_id += 1;
+                    cluster.place(id, p);
+                    resident.push(id);
+                }
+            } else {
+                let i = g.int(0, resident.len());
+                let id = resident.swap_remove(i);
+                cluster.evict(id);
+            }
+            // check_consistency includes the index-vs-fresh-scan check.
+            cluster
+                .check_consistency()
+                .map_err(|e| format!("after op: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_index_survives_round_reset_cycles() {
+    // The simulator's per-round evict_all must return the index to the
+    // pristine state bit-for-bit (a replanned round then re-packs from
+    // scratch; any drift would desync memoized rounds from replans).
+    let spec = ServerSpec::default();
+    let profiler = OptimisticProfiler::noiseless(spec);
+    check("index across round resets", 10, |g| {
+        let (jobs, sens) = random_jobs(g, &profiler);
+        let requests = to_requests(&jobs, &sens);
+        let mech = by_name(&g.choose(&["tune", "greedy", "proportional"]))
+            .unwrap();
+        let mut fleet = Fleet::homogeneous(spec, g.int(1, 5));
+        for _round in 0..3 {
+            fleet.evict_all();
+            let _ = mech.allocate(&mut fleet, &requests);
+            fleet.check_consistency()?;
+        }
+        fleet.evict_all();
+        fleet.check_consistency()?;
+        for pool in &fleet.pools {
+            prop_assert!(
+                pool.cluster.free_gpus() == pool.cluster.total_gpus(),
+                "reset pool must be fully free"
+            );
+        }
+        Ok(())
+    });
 }
