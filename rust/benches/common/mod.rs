@@ -54,6 +54,7 @@ pub fn run_sim_ref(
         reference_spec,
         types: None,
         force_replan: false,
+        no_resume: false,
     });
     sim.run(jobs)
 }

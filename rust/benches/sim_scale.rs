@@ -8,10 +8,22 @@
 //! ```
 //!
 //! Writes `BENCH_sim.json` at the repo root: wall time, rounds/sec, and
-//! the planned-vs-memoized round split per cell — the perf trajectory
-//! later PRs track. Also asserts the memoization invariant: under FIFO
-//! (time-stable keys) the mechanism plans at most once per set change,
-//! so `planned_rounds <= arrivals + completions + 1`.
+//! the full-replan / prefix-resumed / memoized round split plus the mean
+//! reused-prefix fraction per cell — the perf trajectory later PRs
+//! track. Also asserts two invariants: under FIFO (time-stable keys) the
+//! mechanism plans at most once per set change, so
+//! `planned_rounds <= arrivals + completions + 1`; and under SRTF
+//! (time-varying keys, where exact-match memoization almost never hits)
+//! the prefix-resume tier engages at least once.
+//!
+//! Snapshot-design note (ISSUE 5): resume uses an **O(changes) undo
+//! log** (per-pool journal of pre-mutation server counters + placement
+//! deltas) rather than stride checkpoints. At this scale a stride
+//! snapshot would copy 64 servers × counters per checkpoint per round
+//! regardless of how little changed, while the journal's cost is
+//! proportional to the steps actually rolled back — and the common SRTF
+//! divergence is near the tail of the demand-sorted order, so rollbacks
+//! are short. The `mean_reused_prefix` field quantifies exactly that.
 
 use std::time::Duration;
 use synergy::cluster::{GpuGen, ServerSpec, TypeSpec};
@@ -68,16 +80,32 @@ fn run_cell(
 
 fn cell_json(c: &Cell) -> Json {
     let r = &c.result;
+    // Mean reused-prefix fraction across planned rounds: the share of
+    // per-job planning steps served from checkpoints instead of
+    // replayed (0 when nothing planned).
+    let reused_frac = if r.plan_steps_total > 0 {
+        r.plan_steps_reused as f64 / r.plan_steps_total as f64
+    } else {
+        0.0
+    };
     Json::obj(vec![
         ("cell", Json::str(c.name)),
         ("jobs", Json::num(r.finished.len() as f64)),
         ("wall_s", Json::num(c.median_s)),
         ("rounds", Json::num(r.rounds as f64)),
         ("planned_rounds", Json::num(r.planned_rounds as f64)),
+        ("resumed_rounds", Json::num(r.resumed_rounds as f64)),
+        (
+            "full_replan_rounds",
+            Json::num((r.planned_rounds - r.resumed_rounds) as f64),
+        ),
         (
             "memoized_rounds",
             Json::num((r.rounds - r.planned_rounds) as f64),
         ),
+        ("reused_steps", Json::num(r.plan_steps_reused as f64)),
+        ("total_steps", Json::num(r.plan_steps_total as f64)),
+        ("mean_reused_prefix", Json::num(reused_frac)),
         ("rounds_per_s", Json::num(r.rounds as f64 / c.median_s)),
         (
             "planned_rounds_per_s",
@@ -106,10 +134,19 @@ fn main() {
         fifo.result.planned_rounds,
         2 * N_JOBS + 1
     );
-    // SRTF cell: time-varying keys — memoization engages only when the
-    // runnable sequence genuinely repeats; reported, not bounded.
+    // SRTF cell: time-varying keys — exact-match memoization engages
+    // only when the runnable sequence genuinely repeats, so this is the
+    // cell the prefix-resume tier exists for. It must engage: remaining-
+    // time reorders shift the sequence without changing the demand-
+    // sorted pool order, so checkpointed prefixes get reused.
     let srtf =
         run_cell(&bench, "sim/512gpu_8k_srtf_tune", N_JOBS, "srtf", None, 512);
+    assert!(
+        srtf.result.resumed_rounds >= 1,
+        "prefix resume must engage on the SRTF cell: {} planned rounds, \
+         0 resumed",
+        srtf.result.planned_rounds
+    );
 
     section("sim_scale: tri-type 512-GPU fleet (K80 + P100 + V100)");
     let spec = ServerSpec::default();
@@ -135,13 +172,19 @@ fn main() {
     for c in [&fifo, &srtf, &tri_cell] {
         let r = &c.result;
         println!(
-            "{}: {:.2}s wall, {} rounds ({} planned / {} memoized), \
-             {:.0} rounds/s",
+            "{}: {:.2}s wall, {} rounds ({} full replans / {} resumed / \
+             {} memoized), reused prefix {:.0}%, {:.0} rounds/s",
             c.name,
             c.median_s,
             r.rounds,
-            r.planned_rounds,
+            r.planned_rounds - r.resumed_rounds,
+            r.resumed_rounds,
             r.rounds - r.planned_rounds,
+            if r.plan_steps_total > 0 {
+                100.0 * r.plan_steps_reused as f64 / r.plan_steps_total as f64
+            } else {
+                0.0
+            },
             r.rounds as f64 / c.median_s,
         );
     }

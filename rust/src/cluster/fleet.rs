@@ -169,6 +169,20 @@ impl Fleet {
         }
     }
 
+    /// Turn on every pool's undo journal (prefix-resumable planning; see
+    /// [`Cluster::enable_journal`]).
+    pub fn enable_journal(&mut self) {
+        for p in &mut self.pools {
+            p.cluster.enable_journal();
+        }
+    }
+
+    /// Whether the pools journal their mutations (all-or-nothing: the
+    /// fleet enables journaling fleet-wide or not at all).
+    pub fn journal_enabled(&self) -> bool {
+        self.pools.iter().all(|p| p.cluster.journal_enabled())
+    }
+
     /// Aggregate GPU utilization in [0, 1].
     pub fn gpu_utilization(&self) -> f64 {
         1.0 - self.free_gpus() as f64 / self.total_gpus() as f64

@@ -19,6 +19,21 @@
 //! against a fresh scan by [`Cluster::check_consistency`]. Allocation
 //! and release maintain the invariant `0 <= free <= capacity` in every
 //! dimension; violations are bugs and panic in debug builds.
+//! `check_consistency` itself is a test/debug facility: production hot
+//! paths only ever invoke it behind `debug_assertions`.
+//!
+//! For prefix-resumable round planning the cluster additionally carries
+//! an optional **undo journal** ([`Cluster::enable_journal`]): every
+//! `place`/`evict` records the touched servers' *pre-mutation* free
+//! counters plus the placement-map delta, and
+//! [`Cluster::rollback_journal_to`] rewinds to any earlier
+//! [`Cluster::journal_mark`] in O(changes). Restoring by assignment —
+//! not by arithmetic inverses — is what makes rollback *bitwise* exact:
+//! a `free - c + c` float round trip is not the identity, a stored
+//! `free` is. The journal's base (mark 0) is the round-reset state
+//! ([`Cluster::evict_all`] clears the journal), so rolling back to a
+//! mid-plan mark reproduces exactly the state a fresh replan would
+//! reach after the same step prefix.
 
 mod fleet;
 mod gen;
@@ -364,6 +379,35 @@ impl<'a, K: Ord + Copy, F: Fn(&K) -> u32> Iterator for MergedBuckets<'a, K, F> {
     }
 }
 
+/// One inverse operation of the undo journal. `Server` entries store the
+/// *pre-mutation* free counters (restore is assignment, hence bitwise
+/// exact); placement-map deltas carry the removed placement so an undone
+/// evict can reinsert it verbatim.
+#[derive(Debug, Clone)]
+enum UndoOp {
+    /// Free counters of the server at scan position `pos` before a
+    /// `place`/`evict` touched it.
+    Server {
+        pos: u32,
+        free_gpus: u32,
+        free_cpus: f64,
+        free_mem_gb: f64,
+    },
+    /// `place` inserted this job; undo removes the placement.
+    Placed(JobId),
+    /// `evict` removed this job's placement; undo reinserts it.
+    Evicted(JobId, Placement),
+}
+
+/// Undo journal for prefix-resumable round planning: a linear history of
+/// inverse ops since the last hard reset ([`Cluster::evict_all`]).
+/// Positions into it ([`Cluster::journal_mark`]) are the checkpoints the
+/// planning driver rolls back to.
+#[derive(Debug, Clone, Default)]
+pub struct Journal {
+    ops: Vec<UndoOp>,
+}
+
 /// One homogeneous pool: servers of a single generation plus the
 /// placement of running jobs.
 #[derive(Debug, Clone)]
@@ -378,6 +422,9 @@ pub struct Cluster {
     /// (TUNE's victim search); ids are sparse under
     /// [`Cluster::with_server_ids`].
     id_bound: usize,
+    /// Undo journal (`None` = journaling off, the default — zero cost on
+    /// the batch-allocation paths that never resume).
+    journal: Option<Journal>,
 }
 
 impl Cluster {
@@ -413,7 +460,15 @@ impl Cluster {
         let index = FreeIndex::build(&servers, spec.gpus);
         let id_bound =
             servers.iter().map(|s| s.id + 1).max().unwrap_or(0);
-        Cluster { gen, spec, servers, placements: BTreeMap::new(), index, id_bound }
+        Cluster {
+            gen,
+            spec,
+            servers,
+            placements: BTreeMap::new(),
+            index,
+            id_bound,
+            journal: None,
+        }
     }
 
     pub fn num_servers(&self) -> usize {
@@ -486,9 +541,21 @@ impl Cluster {
         );
         for (&sid, share) in &placement.shares {
             let idx = self.server_index(sid);
+            if let Some(j) = &mut self.journal {
+                let s = &self.servers[idx];
+                j.ops.push(UndoOp::Server {
+                    pos: idx as u32,
+                    free_gpus: s.free_gpus,
+                    free_cpus: s.free_cpus,
+                    free_mem_gb: s.free_mem_gb,
+                });
+            }
             self.index.detach(&self.servers[idx], idx as u32);
             self.servers[idx].allocate(share);
             self.index.attach(&self.servers[idx], idx as u32);
+        }
+        if let Some(j) = &mut self.journal {
+            j.ops.push(UndoOp::Placed(job));
         }
         self.placements.insert(job, placement);
     }
@@ -499,9 +566,21 @@ impl Cluster {
         let placement = self.placements.remove(&job)?;
         for (&sid, share) in &placement.shares {
             let idx = self.server_index(sid);
+            if let Some(j) = &mut self.journal {
+                let s = &self.servers[idx];
+                j.ops.push(UndoOp::Server {
+                    pos: idx as u32,
+                    free_gpus: s.free_gpus,
+                    free_cpus: s.free_cpus,
+                    free_mem_gb: s.free_mem_gb,
+                });
+            }
             self.index.detach(&self.servers[idx], idx as u32);
             self.servers[idx].release(share);
             self.index.attach(&self.servers[idx], idx as u32);
+        }
+        if let Some(j) = &mut self.journal {
+            j.ops.push(UndoOp::Evicted(job, placement.clone()));
         }
         Some(placement)
     }
@@ -529,6 +608,66 @@ impl Cluster {
             s.reset_free();
         }
         self.index.reset(&self.servers);
+        // A hard reset invalidates (and re-bases) the undo history: the
+        // journal's mark 0 *is* this pristine state.
+        if let Some(j) = &mut self.journal {
+            j.ops.clear();
+        }
+    }
+
+    /// Turn on the undo journal (prefix-resumable planning). The current
+    /// state becomes the journal base; callers normally enable it once,
+    /// right after construction, and let [`Cluster::evict_all`] re-base
+    /// it every round.
+    pub fn enable_journal(&mut self) {
+        if self.journal.is_none() {
+            self.journal = Some(Journal::default());
+        }
+    }
+
+    pub fn journal_enabled(&self) -> bool {
+        self.journal.is_some()
+    }
+
+    /// Current journal position — a checkpoint [`Cluster::rollback_journal_to`]
+    /// can rewind to. 0 when journaling is off.
+    pub fn journal_mark(&self) -> usize {
+        self.journal.as_ref().map(|j| j.ops.len()).unwrap_or(0)
+    }
+
+    /// Rewind state to an earlier [`Cluster::journal_mark`], undoing every
+    /// recorded op in reverse: placement deltas are reverted and server
+    /// counters are *assigned* their recorded pre-mutation values (bitwise
+    /// exact — no arithmetic inverses), with the free-capacity index
+    /// re-keyed incrementally. O(ops since the mark). Panics if journaling
+    /// is off or the mark is in the future.
+    pub fn rollback_journal_to(&mut self, mark: usize) {
+        let mut journal =
+            self.journal.take().expect("rollback without a journal");
+        assert!(
+            mark <= journal.ops.len(),
+            "journal mark {mark} is ahead of the log ({})",
+            journal.ops.len()
+        );
+        while journal.ops.len() > mark {
+            match journal.ops.pop().expect("len checked") {
+                UndoOp::Server { pos, free_gpus, free_cpus, free_mem_gb } => {
+                    let p = pos as usize;
+                    self.index.detach(&self.servers[p], pos);
+                    self.servers[p].free_gpus = free_gpus;
+                    self.servers[p].free_cpus = free_cpus;
+                    self.servers[p].free_mem_gb = free_mem_gb;
+                    self.index.attach(&self.servers[p], pos);
+                }
+                UndoOp::Placed(id) => {
+                    self.placements.remove(&id);
+                }
+                UndoOp::Evicted(id, p) => {
+                    self.placements.insert(id, p);
+                }
+            }
+        }
+        self.journal = Some(journal);
     }
 
     /// Upper bound on server ids (`max id + 1`) for id-keyed scratch
@@ -587,6 +726,17 @@ impl Cluster {
     /// bucket or holding a stale score key while the integer aggregate
     /// still matches.
     pub fn check_index(&self) -> Result<(), String> {
+        // Guard the rebuild: a counter inflated past capacity would land
+        // outside the bucket range and panic inside `FreeIndex::build`
+        // instead of producing a diagnostic.
+        for s in &self.servers {
+            if s.free_gpus > self.spec.gpus {
+                return Err(format!(
+                    "server {}: free_gpus={} exceeds capacity {}",
+                    s.id, s.free_gpus, self.spec.gpus
+                ));
+            }
+        }
         let fresh = FreeIndex::build(&self.servers, self.spec.gpus);
         if fresh == self.index {
             return Ok(());
@@ -862,6 +1012,94 @@ mod tests {
         c.place(JobId(2), Placement::single(0, share));
         let order: Vec<usize> = c.servers_by_fullness(1).map(|s| s.id).collect();
         assert_eq!(order, vec![0, 2, 1]);
+    }
+
+    /// Bitwise snapshot of a cluster's mutable state (free counters as
+    /// bit patterns + placements), for exact-rollback assertions.
+    fn state_bits(c: &Cluster) -> (Vec<(u32, u64, u64)>, Vec<JobId>, u32) {
+        (
+            c.servers
+                .iter()
+                .map(|s| {
+                    (s.free_gpus, s.free_cpus.to_bits(), s.free_mem_gb.to_bits())
+                })
+                .collect(),
+            c.placements().keys().copied().collect(),
+            c.free_gpus(),
+        )
+    }
+
+    #[test]
+    fn journal_rollback_is_bitwise_exact() {
+        let mut c = Cluster::homogeneous(spec(), 3);
+        c.enable_journal();
+        // Non-dyadic shares: arithmetic release would drift by ulps; the
+        // journal must restore by assignment.
+        let odd = Share { gpus: 1, cpus: 9.3, mem_gb: 13.7 };
+        c.place(JobId(1), Placement::single(0, odd));
+        let mark = c.journal_mark();
+        let snapshot = state_bits(&c);
+        c.place(JobId(2), Placement::single(1, odd));
+        c.place(JobId(3), Placement::single(0, odd));
+        c.evict(JobId(1)).unwrap();
+        assert_ne!(state_bits(&c), snapshot);
+        c.rollback_journal_to(mark);
+        assert_eq!(state_bits(&c), snapshot, "rollback must be bit-exact");
+        assert!(c.check_consistency().is_ok());
+        // The prefix survives and the journal can keep extending.
+        assert!(c.placement(JobId(1)).is_some());
+        c.place(JobId(4), Placement::single(2, odd));
+        assert!(c.check_consistency().is_ok());
+    }
+
+    #[test]
+    fn journal_rollback_to_base_is_the_round_reset() {
+        let mut c = Cluster::homogeneous(spec(), 2);
+        c.enable_journal();
+        let base = state_bits(&c);
+        for i in 0..3 {
+            c.place(
+                JobId(i),
+                Placement::single(
+                    (i % 2) as usize,
+                    Share { gpus: 2, cpus: 5.1, mem_gb: 77.7 },
+                ),
+            );
+        }
+        c.rollback_journal_to(0);
+        assert_eq!(state_bits(&c), base);
+        assert!(c.placements().is_empty());
+        // evict_all re-bases the journal: mark 0 is pristine again.
+        c.place(JobId(9), Placement::single(0, Share { gpus: 1, cpus: 1.0, mem_gb: 1.0 }));
+        c.evict_all();
+        assert_eq!(c.journal_mark(), 0);
+        assert_eq!(state_bits(&c), base);
+    }
+
+    #[test]
+    fn check_consistency_catches_a_corrupted_index() {
+        // The release build never runs check_consistency on the hot path,
+        // so the test suite must prove it still detects corruption when
+        // tests do run it: desync a server's counters behind the index's
+        // back (free_cpus feeds the score key; free_gpus the bucket).
+        let mut c = Cluster::homogeneous(spec(), 2);
+        c.place(
+            JobId(1),
+            Placement::single(0, Share { gpus: 2, cpus: 6.0, mem_gb: 100.0 }),
+        );
+        assert!(c.check_consistency().is_ok());
+        let mut corrupted = c.clone();
+        corrupted.servers[0].free_cpus -= 1.0; // stale score key
+        assert!(corrupted.check_consistency().is_err());
+        let mut corrupted = c.clone();
+        corrupted.servers[1].free_gpus = 3; // stale bucket + aggregate
+        assert!(corrupted.check_consistency().is_err());
+        // Upward corruption (counter past capacity) must yield an error,
+        // not an out-of-bucket panic while rebuilding the fresh index.
+        let mut corrupted = c.clone();
+        corrupted.servers[1].free_gpus = spec().gpus + 1;
+        let err = corrupted.check_consistency().unwrap_err();
+        assert!(err.contains("exceeds capacity"), "{err}");
     }
 
     #[test]

@@ -10,7 +10,12 @@
 //!    admission walks the ordered queue under per-tenant GPU caps with a
 //!    work-conserving spill pass (see [`crate::workload::admission`]),
 //! 4. hands the runnable set to the mechanism for type assignment,
-//!    allocation and placement.
+//!    allocation and placement — via the batch
+//!    [`crate::mechanism::Mechanism::allocate`] driver, which itself
+//!    folds the sequence through the resumable `begin`/`step`/`finish`
+//!    session API (the simulation core additionally exploits that API's
+//!    checkpoints for prefix-resumed replanning; the wall-clock deploy
+//!    round is long enough that the leader just replans).
 //!
 //! Both the simulator ([`crate::sim`]) and the live deploy mode
 //! ([`crate::deploy`]) drive the same pipeline over the same

@@ -77,6 +77,9 @@ pub struct HeteroSimResult {
     /// Rounds that actually ran the allocation mechanism (the rest were
     /// memoized/fast-forwarded; shared-core accounting).
     pub planned_rounds: usize,
+    /// Planned rounds that resumed from the previous plan's checkpoint
+    /// (prefix-resume tier; shared-core accounting).
+    pub resumed_rounds: usize,
     pub profiling_minutes: f64,
     /// Full per-job records (tenant-tagged), from the shared core.
     pub finished: Vec<FinishedJob>,
@@ -91,6 +94,7 @@ impl HeteroSimResult {
             makespan_s: r.makespan_s,
             rounds: r.rounds,
             planned_rounds: r.planned_rounds,
+            resumed_rounds: r.resumed_rounds,
             profiling_minutes: r.profiling_minutes,
             finished: r.finished,
             utilization: r.utilization,

@@ -9,6 +9,9 @@
 //! synergy sim       --trace trace.csv --format philly|alibaba \
 //!                   [--load-scale 2 --duration-min 60 --duration-max 1e5]
 //!                   [--gpu-cap 16 --max-jobs 500 --keep-failed]
+//! synergy sweep     --policies fifo,srtf --mechanisms proportional,tune \
+//!                   --threads 8 [--out report.txt] [--plan-stats]
+//!                   # deterministic parallel grid; byte-identical to --threads 1
 //! synergy compare   --policies fifo,srtf --mechanisms proportional,tune ...
 //! synergy profile   --model resnet18 --gpus 1
 //! synergy models    # print the model zoo + CPU knees (Fig 2 data)
@@ -41,6 +44,7 @@ fn main() {
     let args = Args::from_env();
     match args.command.as_deref() {
         Some("sim") | Some("simulate") => cmd_simulate(&args),
+        Some("sweep") => cmd_sweep(&args),
         Some("compare") => cmd_compare(&args),
         Some("profile") => cmd_profile(&args),
         Some("models") => cmd_models(),
@@ -51,7 +55,7 @@ fn main() {
         Some("hetero") => cmd_hetero(&args),
         Some("version") => println!("synergy {}", synergy::VERSION),
         _ => {
-            eprintln!("usage: synergy <sim|compare|profile|models|trace|leader|worker|config|hetero> [--flags]");
+            eprintln!("usage: synergy <sim|sweep|compare|profile|models|trace|leader|worker|config|hetero> [--flags]");
             eprintln!("see README.md for the full flag reference");
             std::process::exit(2);
         }
@@ -232,6 +236,7 @@ fn sim_config(args: &Args, mechanism: &str, policy: &str) -> SimConfig {
         reference_spec: None,
         types: None,
         force_replan: args.flag("force-replan"),
+        no_resume: args.flag("no-resume"),
     }
 }
 
@@ -245,13 +250,20 @@ fn cmd_simulate(args: &Args) {
     );
     let t0 = std::time::Instant::now();
     let result = sim.run(workload.jobs);
+    if args.flag("json") {
+        // Canonical metrics document; plan stats are opt-in so the
+        // default payload matches the golden scenario shape exactly.
+        println!("{}", result.metrics_json(args.flag("plan-stats")));
+        return;
+    }
     let stats = result.jct_stats();
     println!(
         "policy={policy} mechanism={mechanism} jobs={} rounds={} \
-         planned={} wall={:?}",
+         planned={} resumed={} wall={:?}",
         stats.n,
         result.rounds,
         result.planned_rounds,
+        result.resumed_rounds,
         t0.elapsed()
     );
     println!(
@@ -270,6 +282,107 @@ fn cmd_simulate(args: &Args) {
     );
     if workload.tenant_names.len() > 1 || workload.quotas.is_some() {
         print_tenant_stats(&result.tenant_stats(), &workload.tenant_names);
+    }
+}
+
+/// `synergy sweep` — deterministic parallel scenario-grid driver.
+///
+/// Runs the {policies} × {mechanisms} grid over one shared workload
+/// (synthetic flags or `--trace`/`--format`, with optional `--tenants`
+/// quotas), one independent `Simulator` per cell, fanned out over
+/// `--threads` OS threads (`std::thread::scope`, no work queue beyond an
+/// atomic cell counter). Each cell is a deterministic simulation and the
+/// report is assembled in fixed grid order after every worker joins, so
+/// the output is **byte-identical for any thread count** — `--threads 1`
+/// is the serial reference CI diffs the parallel run against. Timing is
+/// deliberately excluded from the report (it would break byte parity);
+/// `--plan-stats` appends the planning split per cell.
+fn cmd_sweep(args: &Args) {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+
+    let policies: Vec<String> = args
+        .get_or("policies", "fifo,srtf")
+        .split(',')
+        .map(str::to_string)
+        .collect();
+    let mechanisms: Vec<String> = args
+        .get_or("mechanisms", "proportional,tune")
+        .split(',')
+        .map(str::to_string)
+        .collect();
+    let workload = workload_from_args(args);
+    let plan_stats = args.flag("plan-stats");
+
+    struct CellSpec {
+        policy: String,
+        mechanism: String,
+    }
+    let cells: Vec<CellSpec> = policies
+        .iter()
+        .flat_map(|p| {
+            mechanisms.iter().map(move |m| CellSpec {
+                policy: p.clone(),
+                mechanism: m.clone(),
+            })
+        })
+        .collect();
+    let default_threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let threads = args.usize("threads", default_threads).max(1).min(cells.len().max(1));
+
+    let t0 = std::time::Instant::now();
+    let next = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<String>>> =
+        cells.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= cells.len() {
+                    break;
+                }
+                let cell = &cells[i];
+                let sim = Simulator::with_quotas(
+                    sim_config(args, &cell.mechanism, &cell.policy),
+                    workload.quotas.clone(),
+                );
+                let r = sim.run(workload.jobs.clone());
+                *results[i].lock().unwrap() = Some(r.metrics_json(plan_stats));
+            });
+        }
+    });
+
+    // Fixed grid order, no timing inside the report: byte-identical to a
+    // serial run regardless of completion order. All workers have
+    // joined, so the slots unwrap without locking.
+    let mut report = String::new();
+    report.push_str(&format!("sweep cells={}\n", cells.len()));
+    for (cell, slot) in cells.iter().zip(results) {
+        let metrics = slot
+            .into_inner()
+            .unwrap()
+            .expect("every sweep cell produces a result");
+        report.push_str(&format!(
+            "cell policy={} mechanism={} {metrics}\n",
+            cell.policy, cell.mechanism
+        ));
+    }
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &report).expect("write sweep report");
+            eprintln!(
+                "wrote {} cells to {path} ({} threads, {:?})",
+                cells.len(),
+                threads,
+                t0.elapsed()
+            );
+        }
+        None => {
+            print!("{report}");
+            eprintln!("({} threads, {:?})", threads, t0.elapsed());
+        }
     }
 }
 
@@ -569,6 +682,7 @@ fn cmd_config(args: &Args) {
             reference_spec: None,
             types: cfg.types(),
             force_replan: false,
+            no_resume: false,
         },
         quotas.clone(),
     );

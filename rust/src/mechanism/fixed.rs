@@ -14,9 +14,10 @@
 //! extended with tuning. Here both reduce to first-fit; `Fixed` exists so
 //! the §5.7 benches name the baseline they model.
 
+use super::greedy::FirstFitBestAlg;
 use super::{
-    assign_capacity_round_robin, delegate_pools, first_fit, Grant, JobRequest,
-    Mechanism, PoolGrant, PoolRequest,
+    delegate_pools, plan_resumable, run_pool, Grant, JobRequest, Mechanism,
+    PlanOutcome, PlanSession, PlanTrace, PoolGrant, PoolRequest,
 };
 use crate::cluster::{Cluster, Fleet};
 use crate::job::JobId;
@@ -26,23 +27,14 @@ use std::collections::BTreeMap;
 pub struct Fixed;
 
 impl Fixed {
-    /// The §5.7 static-demand algorithm inside one pool.
+    /// The §5.7 static-demand algorithm inside one pool (mechanically
+    /// the GREEDY fold — see the module docs for why that is the point).
     pub fn allocate_pool(
         &self,
         cluster: &mut Cluster,
         jobs: &[PoolRequest<'_>],
     ) -> BTreeMap<JobId, PoolGrant> {
-        let mut grants = BTreeMap::new();
-        for job in jobs {
-            if let Some(p) = first_fit(cluster, &job.best) {
-                cluster.place(job.id, p.clone());
-                grants.insert(
-                    job.id,
-                    PoolGrant { placement: p, demand: job.best },
-                );
-            }
-        }
-        grants
+        run_pool(&FirstFitBestAlg, cluster, jobs)
     }
 }
 
@@ -51,15 +43,30 @@ impl Mechanism for Fixed {
         "fixed"
     }
 
-    fn allocate(
+    fn resumable(&self) -> bool {
+        true
+    }
+
+    // step: default type-blind capacity round robin.
+
+    fn finish(
+        &self,
+        session: PlanSession<'_>,
+        fleet: &mut Fleet,
+    ) -> BTreeMap<JobId, Grant> {
+        let (jobs, assigned) = session.into_parts();
+        delegate_pools(fleet, &jobs, &assigned, |cluster, reqs| {
+            run_pool(&FirstFitBestAlg, cluster, reqs)
+        })
+    }
+
+    fn plan(
         &self,
         fleet: &mut Fleet,
         jobs: &[JobRequest<'_>],
-    ) -> BTreeMap<JobId, Grant> {
-        let assigned = assign_capacity_round_robin(fleet, jobs);
-        delegate_pools(fleet, jobs, &assigned, |cluster, reqs| {
-            self.allocate_pool(cluster, reqs)
-        })
+        prev: Option<PlanTrace>,
+    ) -> PlanOutcome {
+        plan_resumable(self, &FirstFitBestAlg, fleet, jobs, prev)
     }
 }
 

@@ -10,8 +10,9 @@
 //!    fairness order.
 
 use super::{
-    assign_capacity_round_robin, delegate_pools, first_fit, Grant, JobRequest,
-    Mechanism, PoolGrant, PoolRequest,
+    delegate_pools, first_fit, plan_resumable, run_pool, Grant, JobRequest,
+    Mechanism, PlanOutcome, PlanSession, PlanTrace, PoolAlg, PoolGrant,
+    PoolPlan, PoolRequest,
 };
 use crate::cluster::{Cluster, Fleet};
 use crate::job::JobId;
@@ -20,6 +21,28 @@ use std::collections::BTreeMap;
 /// Synergy-GREEDY: first-fit with unmodified best-case demands.
 pub struct Greedy;
 
+/// Pool-level fold shared by GREEDY and [`super::Fixed`]: sequence
+/// order, unmodified best-case demand, first-fit; jobs that don't fit
+/// are skipped (the §3.3 fairness bug both baselines model).
+pub(crate) struct FirstFitBestAlg;
+
+impl PoolAlg for FirstFitBestAlg {
+    fn place_step(
+        &self,
+        cluster: &mut Cluster,
+        plan: &mut PoolPlan,
+        reqs: &[PoolRequest<'_>],
+        idx: usize,
+    ) {
+        let job = &reqs[idx];
+        if let Some(p) = first_fit(cluster, &job.best) {
+            cluster.place(job.id, p.clone());
+            plan.insert(job.id, PoolGrant { placement: p, demand: job.best });
+        }
+        // else: skipped this round (the fairness bug, §3.3).
+    }
+}
+
 impl Greedy {
     /// The §3.3 homogeneous algorithm inside one pool.
     pub fn allocate_pool(
@@ -27,18 +50,7 @@ impl Greedy {
         cluster: &mut Cluster,
         jobs: &[PoolRequest<'_>],
     ) -> BTreeMap<JobId, PoolGrant> {
-        let mut grants = BTreeMap::new();
-        for job in jobs {
-            if let Some(p) = first_fit(cluster, &job.best) {
-                cluster.place(job.id, p.clone());
-                grants.insert(
-                    job.id,
-                    PoolGrant { placement: p, demand: job.best },
-                );
-            }
-            // else: skipped this round (the fairness bug, §3.3).
-        }
-        grants
+        run_pool(&FirstFitBestAlg, cluster, jobs)
     }
 }
 
@@ -47,15 +59,30 @@ impl Mechanism for Greedy {
         "greedy"
     }
 
-    fn allocate(
+    fn resumable(&self) -> bool {
+        true
+    }
+
+    // step: default type-blind capacity round robin.
+
+    fn finish(
+        &self,
+        session: PlanSession<'_>,
+        fleet: &mut Fleet,
+    ) -> BTreeMap<JobId, Grant> {
+        let (jobs, assigned) = session.into_parts();
+        delegate_pools(fleet, &jobs, &assigned, |cluster, reqs| {
+            run_pool(&FirstFitBestAlg, cluster, reqs)
+        })
+    }
+
+    fn plan(
         &self,
         fleet: &mut Fleet,
         jobs: &[JobRequest<'_>],
-    ) -> BTreeMap<JobId, Grant> {
-        let assigned = assign_capacity_round_robin(fleet, jobs);
-        delegate_pools(fleet, jobs, &assigned, |cluster, reqs| {
-            self.allocate_pool(cluster, reqs)
-        })
+        prev: Option<PlanTrace>,
+    ) -> PlanOutcome {
+        plan_resumable(self, &FirstFitBestAlg, fleet, jobs, prev)
     }
 }
 

@@ -14,6 +14,14 @@
 //! 2. **Per-pool allocation**: inside each type pool the homogeneous
 //!    §3.3/§4.2 algorithms run against that type's sensitivity matrix.
 //!
+//! Both phases are expressed as *resumable folds*: the [`Mechanism`]
+//! trait is a per-job stepping API (`begin`/`step`/`finish`, with the
+//! batch [`Mechanism::allocate`] as the driver loop), and the pool
+//! algorithms implement the checkpointable fold shape in [`resume`] so
+//! the simulation core can resume a changed round from the longest
+//! common prefix of the previous plan instead of replanning from
+//! scratch — bit-identically, by construction.
+//!
 //! The mechanisms:
 //!
 //! - [`proportional::Proportional`] — the baseline: type-blind
@@ -48,15 +56,19 @@ pub mod fixed;
 pub mod greedy;
 pub mod opt;
 pub mod proportional;
+pub mod resume;
 pub mod tune;
 
 pub use fixed::Fixed;
 pub use greedy::Greedy;
 pub use opt::{Opt, OptAllocation};
 pub use proportional::Proportional;
+pub use resume::{PlanOutcome, PlanSession, PlanTrace, PoolPlan};
 pub use tune::{PlacementStrategy, Tune, VictimStrategy};
 
-use crate::cluster::{Cluster, Fleet, GpuGen, Placement, Share};
+pub(crate) use resume::{plan_resumable, run_pool, PoolAlg};
+
+use crate::cluster::{Cluster, Fleet, GpuGen, Placement, ServerSpec, Share};
 use crate::job::{DemandVector, JobId};
 use crate::profiler::{Sensitivity, SensitivityMatrix};
 use std::collections::BTreeMap;
@@ -80,17 +92,88 @@ pub struct Grant {
 }
 
 /// Allocation mechanism interface — the only one in the crate.
+///
+/// Planning is a resumable per-job stepping API: [`Mechanism::begin`]
+/// opens a session, [`Mechanism::step`] folds the runnable sequence in
+/// job-by-job (the A.2.2 type-assignment fold — intermediate state after
+/// any prefix is a pure function of that prefix), and
+/// [`Mechanism::finish`] runs the per-pool allocation plus any deferred
+/// global passes. [`Mechanism::allocate`] is the batch driver loop over
+/// exactly that API, and [`Mechanism::plan`] is the checkpointing entry
+/// point the simulation core uses for longest-common-prefix resume (see
+/// [`resume`]).
 pub trait Mechanism: Send + Sync {
     fn name(&self) -> &'static str;
 
+    /// Whether [`Mechanism::plan`] can return (and consume) checkpoints.
+    /// Drivers use this to skip journaling entirely for mechanisms whose
+    /// plans are global programs (OPT) — journaled ops would only ever
+    /// be discarded.
+    fn resumable(&self) -> bool {
+        false
+    }
+
+    /// Open a planning session over the fleet's current free state.
+    fn begin<'a>(&self, fleet: &Fleet) -> PlanSession<'a> {
+        PlanSession::from_fleet(fleet)
+    }
+
+    /// Fold the next job of the policy-ordered runnable sequence into
+    /// the session (type assignment, A.2.2). Default: type-blind
+    /// capacity-weighted round robin — what a heterogeneity-unaware
+    /// mechanism does; a no-op pass-through on one-type fleets.
+    fn step<'a>(&self, session: &mut PlanSession<'a>, job: JobRequest<'a>) {
+        session.assign_capacity_rr(job);
+    }
+
+    /// Complete the session: run the per-pool allocation algorithms (and
+    /// any global passes) and return the grants. The fleet must be at
+    /// the state `begin` observed.
+    fn finish(
+        &self,
+        session: PlanSession<'_>,
+        fleet: &mut Fleet,
+    ) -> BTreeMap<JobId, Grant>;
+
     /// Place as many of `jobs` as the fleet allows; `jobs` arrive in
     /// policy priority order. The fleet must start the round empty of
-    /// placements for these jobs. Returns the per-job grants.
+    /// placements for these jobs. Returns the per-job grants. This is
+    /// the driver loop over `begin`/`step`/`finish`.
     fn allocate(
         &self,
         fleet: &mut Fleet,
         jobs: &[JobRequest<'_>],
-    ) -> BTreeMap<JobId, Grant>;
+    ) -> BTreeMap<JobId, Grant> {
+        let mut session = self.begin(fleet);
+        for j in jobs {
+            self.step(&mut session, j.clone());
+        }
+        self.finish(session, fleet)
+    }
+
+    /// Checkpointed planning with longest-common-prefix resume: plan
+    /// `jobs` given the checkpoint of this mechanism's previous plan
+    /// over the same (untouched-since) fleet. The default is the sound
+    /// non-resumable fallback — hard-reset the fleet and replan from
+    /// scratch (mechanisms whose program is global, like OPT's ILP,
+    /// cannot reuse a prefix). Pool-decomposable mechanisms override via
+    /// [`resume::plan_resumable`]. Bit-identical to `allocate` from a
+    /// reset fleet in either case.
+    fn plan(
+        &self,
+        fleet: &mut Fleet,
+        jobs: &[JobRequest<'_>],
+        prev: Option<PlanTrace>,
+    ) -> PlanOutcome {
+        let _ = prev;
+        fleet.evict_all();
+        PlanOutcome {
+            grants: self.allocate(fleet, jobs),
+            trace: None,
+            steps_total: 0,
+            steps_reused: 0,
+        }
+    }
 }
 
 /// One job as a *pool-level* algorithm sees it: demands against a single
@@ -152,55 +235,22 @@ pub const ALL_MECHANISMS: [&str; 7] = [
 // Type assignment + per-pool delegation
 // ---------------------------------------------------------------------------
 
-/// The shared assignment skeleton: walk jobs in priority order, ranking
-/// the candidate types of each with `rank` (higher wins; only types
-/// whose remaining free GPU budget covers the job are candidates) and
-/// decrementing the winner's budget. `rank` sees the job, the candidate
-/// generation, and its remaining free GPUs, and is evaluated once per
-/// (job, candidate).
-///
-/// On a one-type fleet the assignment is a no-op pass-through: every job
-/// maps to the single type, unfiltered, so the per-pool algorithm sees
-/// exactly the request list a homogeneous mechanism would have.
-fn assign_types_by(
-    fleet: &Fleet,
-    jobs: &[JobRequest<'_>],
-    rank: impl Fn(&JobRequest<'_>, GpuGen, u32) -> (f64, i64),
-) -> BTreeMap<JobId, GpuGen> {
-    if let [pool] = &fleet.pools[..] {
-        return jobs.iter().map(|j| (j.id, pool.gen)).collect();
-    }
-    let mut free: BTreeMap<GpuGen, u32> = fleet
-        .pools
-        .iter()
-        .map(|p| (p.gen, p.cluster.free_gpus()))
-        .collect();
-    let mut assigned = BTreeMap::new();
-    for j in jobs {
-        let best = free
-            .iter()
-            .filter(|(_, &f)| f >= j.gpus)
-            .map(|(&g, &f)| (rank(j, g, f), g))
-            .max_by(|(ra, _), (rb, _)| ra.partial_cmp(rb).unwrap())
-            .map(|(_, g)| g);
-        if let Some(gen) = best {
-            *free.get_mut(&gen).unwrap() -= j.gpus;
-            assigned.insert(j.id, gen);
-        }
-        // Jobs with no feasible type this round stay queued (GPU
-        // shortage — same as the homogeneous runnable-set cut).
-    }
-    assigned
-}
-
 /// Sensitivity-aware assignment: `score` ranks the candidate types for
-/// one job (higher wins, faster generation on ties).
+/// one job (higher wins, faster generation on ties). A batch driver over
+/// [`PlanSession::assign_by`] — the per-job fold is the canonical code.
+/// Production callers fold through `Mechanism::step` directly; this
+/// batch form remains for the pass-through unit tests.
+#[cfg(test)]
 pub(crate) fn assign_types(
     fleet: &Fleet,
     jobs: &[JobRequest<'_>],
     score: impl Fn(&JobRequest<'_>, GpuGen) -> f64,
 ) -> BTreeMap<JobId, GpuGen> {
-    assign_types_by(fleet, jobs, |j, g, _free| (score(j, g), g as i64))
+    let mut session = PlanSession::from_fleet(fleet);
+    for j in jobs {
+        session.assign_by(j.clone(), |j, g, _free| (score(j, g), g as i64));
+    }
+    session.into_parts().1
 }
 
 /// Type-blind assignment: jobs take types in capacity-weighted
@@ -211,7 +261,43 @@ pub(crate) fn assign_capacity_round_robin(
     fleet: &Fleet,
     jobs: &[JobRequest<'_>],
 ) -> BTreeMap<JobId, GpuGen> {
-    assign_types_by(fleet, jobs, |_j, g, free| (free as f64, -(g as i64)))
+    let mut session = PlanSession::from_fleet(fleet);
+    for j in jobs {
+        session.assign_capacity_rr(j.clone());
+    }
+    session.into_parts().1
+}
+
+/// Build one pool's request list: the jobs assigned to `gen`, in
+/// sequence order, with their demands derived against the pool's server
+/// shape (best-case from the type's sensitivity matrix, proportional
+/// floor from the spec ratios).
+pub(crate) fn pool_requests<'a>(
+    gen: GpuGen,
+    spec: ServerSpec,
+    jobs: &[JobRequest<'a>],
+    assigned: &BTreeMap<JobId, GpuGen>,
+) -> Vec<PoolRequest<'a>> {
+    jobs.iter()
+        .filter(|j| assigned.get(&j.id) == Some(&gen))
+        .map(|j| {
+            let matrix = j
+                .sens
+                .matrix(gen)
+                .expect("job profiled on every type");
+            PoolRequest {
+                id: j.id,
+                gpus: j.gpus,
+                best: matrix.best_demand(),
+                prop: DemandVector::proportional(
+                    j.gpus,
+                    spec.cpus as f64 / spec.gpus as f64,
+                    spec.mem_gb / spec.gpus as f64,
+                ),
+                matrix,
+            }
+        })
+        .collect()
 }
 
 /// Run a pool-level allocation algorithm inside each type pool over the
@@ -227,28 +313,8 @@ pub(crate) fn delegate_pools(
 ) -> BTreeMap<JobId, Grant> {
     let mut out = BTreeMap::new();
     for pool in &mut fleet.pools {
-        let spec = pool.cluster.spec;
-        let requests: Vec<PoolRequest<'_>> = jobs
-            .iter()
-            .filter(|j| assigned.get(&j.id) == Some(&pool.gen))
-            .map(|j| {
-                let matrix = j
-                    .sens
-                    .matrix(pool.gen)
-                    .expect("job profiled on every type");
-                PoolRequest {
-                    id: j.id,
-                    gpus: j.gpus,
-                    best: matrix.best_demand(),
-                    prop: DemandVector::proportional(
-                        j.gpus,
-                        spec.cpus as f64 / spec.gpus as f64,
-                        spec.mem_gb / spec.gpus as f64,
-                    ),
-                    matrix,
-                }
-            })
-            .collect();
+        let requests =
+            pool_requests(pool.gen, pool.cluster.spec, jobs, assigned);
         for (id, g) in alloc(&mut pool.cluster, &requests) {
             out.insert(
                 id,

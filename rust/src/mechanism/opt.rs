@@ -25,7 +25,7 @@
 
 use super::{
     assign_capacity_round_robin, best_fit, delegate_pools, Grant, JobRequest,
-    Mechanism, Proportional,
+    Mechanism, PlanSession, Proportional,
 };
 use crate::cluster::{Cluster, Fleet, GpuGen};
 use crate::job::{DemandVector, JobId};
@@ -230,12 +230,31 @@ impl Mechanism for Opt {
         "opt"
     }
 
+    /// OPT's program is global (one ILP over every job and pool), so the
+    /// stepping fold only records the sequence; everything happens in
+    /// `finish`. Consequently OPT keeps the default non-resumable
+    /// [`Mechanism::plan`]: a changed sequence always replans in full.
+    fn step<'a>(&self, session: &mut PlanSession<'a>, job: JobRequest<'a>) {
+        session.push_unassigned(job);
+    }
+
+    fn finish(
+        &self,
+        session: PlanSession<'_>,
+        fleet: &mut Fleet,
+    ) -> BTreeMap<JobId, Grant> {
+        let (jobs, _) = session.into_parts();
+        self.materialize(fleet, &jobs)
+    }
+}
+
+impl Opt {
     /// Simulation-mode OPT: materialize the allocation program — place
     /// each job on its chosen type with the chosen demand via best-fit,
     /// falling back to the proportional demand on that type if packing
     /// fails (§4.1.3 — the gap between the idealized bound and
     /// deployable placements; the program ignores server boundaries).
-    fn allocate(
+    fn materialize(
         &self,
         fleet: &mut Fleet,
         jobs: &[JobRequest<'_>],

@@ -5,8 +5,9 @@
 //! heterogeneity-unaware cluster does).
 
 use super::{
-    assign_capacity_round_robin, best_fit, delegate_pools, Grant, JobRequest,
-    Mechanism, PoolGrant, PoolRequest,
+    best_fit, delegate_pools, plan_resumable, run_pool, Grant, JobRequest,
+    Mechanism, PlanOutcome, PlanSession, PlanTrace, PoolAlg, PoolGrant,
+    PoolPlan, PoolRequest,
 };
 use crate::cluster::{Cluster, Fleet};
 use crate::job::JobId;
@@ -14,6 +15,28 @@ use std::collections::BTreeMap;
 
 /// The GPU-proportional baseline mechanism.
 pub struct Proportional;
+
+/// Pool-level fold: sequence order, GPU-proportional demand, best-fit.
+/// With proportional demands, any server with enough free GPUs also has
+/// the proportional CPU/mem free (invariant of proportional packing), so
+/// best_fit only fails on GPU fragmentation across servers.
+pub(crate) struct ProportionalAlg;
+
+impl PoolAlg for ProportionalAlg {
+    fn place_step(
+        &self,
+        cluster: &mut Cluster,
+        plan: &mut PoolPlan,
+        reqs: &[PoolRequest<'_>],
+        idx: usize,
+    ) {
+        let job = &reqs[idx];
+        if let Some(p) = best_fit(cluster, &job.prop) {
+            cluster.place(job.id, p.clone());
+            plan.insert(job.id, PoolGrant { placement: p, demand: job.prop });
+        }
+    }
+}
 
 impl Proportional {
     /// The homogeneous §2 baseline inside one pool: every job gets the
@@ -23,21 +46,7 @@ impl Proportional {
         cluster: &mut Cluster,
         jobs: &[PoolRequest<'_>],
     ) -> BTreeMap<JobId, PoolGrant> {
-        let mut grants = BTreeMap::new();
-        for job in jobs {
-            // With proportional demands, any server with enough free GPUs
-            // also has the proportional CPU/mem free (invariant of
-            // proportional packing), so best_fit only fails on GPU
-            // fragmentation across servers.
-            if let Some(p) = best_fit(cluster, &job.prop) {
-                cluster.place(job.id, p.clone());
-                grants.insert(
-                    job.id,
-                    PoolGrant { placement: p, demand: job.prop },
-                );
-            }
-        }
-        grants
+        run_pool(&ProportionalAlg, cluster, jobs)
     }
 }
 
@@ -46,15 +55,30 @@ impl Mechanism for Proportional {
         "proportional"
     }
 
-    fn allocate(
+    fn resumable(&self) -> bool {
+        true
+    }
+
+    // step: default type-blind capacity round robin.
+
+    fn finish(
+        &self,
+        session: PlanSession<'_>,
+        fleet: &mut Fleet,
+    ) -> BTreeMap<JobId, Grant> {
+        let (jobs, assigned) = session.into_parts();
+        delegate_pools(fleet, &jobs, &assigned, |cluster, reqs| {
+            run_pool(&ProportionalAlg, cluster, reqs)
+        })
+    }
+
+    fn plan(
         &self,
         fleet: &mut Fleet,
         jobs: &[JobRequest<'_>],
-    ) -> BTreeMap<JobId, Grant> {
-        let assigned = assign_capacity_round_robin(fleet, jobs);
-        delegate_pools(fleet, jobs, &assigned, |cluster, reqs| {
-            self.allocate_pool(cluster, reqs)
-        })
+        prev: Option<PlanTrace>,
+    ) -> PlanOutcome {
+        plan_resumable(self, &ProportionalAlg, fleet, jobs, prev)
     }
 }
 

@@ -1,0 +1,403 @@
+//! Prefix-resumable round planning (ISSUE 5 tentpole).
+//!
+//! Every pool-decomposable mechanism plans a round as the same shape:
+//!
+//! 1. an **assignment fold** over the policy-ordered runnable sequence
+//!    (A.2.2 type assignment — [`PlanSession`], driven job-by-job by
+//!    [`super::Mechanism::step`]), then
+//! 2. per pool, a **placement fold** over that pool's requests in a
+//!    deterministic processing order ([`PoolAlg::order`] — sequence
+//!    order for first-fit/proportional mechanisms, the §4.2 demand sort
+//!    for TUNE), each step mutating only (pool cluster, pool grants),
+//!    then
+//! 3. an optional per-pool **finish pass** over the fold state (TUNE's
+//!    §5.3.2 spare redistribution).
+//!
+//! Because the fleet starts every plan from the same round-reset state
+//! and per-job context is fixed between arrival and completion, *the
+//! fold state after any step prefix is a pure function of that prefix*.
+//! That is the resume invariant: when the next round's processing order
+//! shares a prefix with the cached plan's, [`plan_resumable`] rolls the
+//! pool back to the end of the common prefix (cluster undo journal +
+//! grant undo log, both O(changes)) and replays only the divergent
+//! suffix — bit-identical to a full replan by construction, because
+//! rollback restores recorded state by assignment (never arithmetic
+//! inverses) and replay runs the exact same fold code.
+//!
+//! Step keys are [`JobId`]s: a job's gang size, sensitivity and per-pool
+//! demands never change while it is active, so identical id sequences
+//! imply identical step behaviour. A pool whose processing order is
+//! *entirely* unchanged skips even its finish pass and reuses the
+//! committed state and grants verbatim — the common case under SRTF/LAS,
+//! where jobs reorder by remaining-time/service without changing the
+//! demand-sorted pool order, which is exactly the workload the
+//! exact-sequence memoizer of `sim/core.rs` almost never catches.
+//!
+//! Mechanisms with global programs (OPT's ILP spans all pools and jobs)
+//! keep the default non-resumable [`super::Mechanism::plan`]: a full
+//! replan from the round reset, still bit-identical, never resumed.
+
+use super::{Grant, JobRequest, Mechanism, PoolGrant, PoolRequest};
+use crate::cluster::{Cluster, Fleet, GpuGen};
+use crate::job::JobId;
+use std::collections::BTreeMap;
+
+/// The assignment fold: per-type free-GPU budgets consumed job-by-job in
+/// sequence order, exactly as the batch A.2.2 assignment did. On a
+/// one-pool fleet the fold is the no-op pass-through (every job maps to
+/// the single type, unfiltered).
+pub struct PlanSession<'a> {
+    single: Option<GpuGen>,
+    free: BTreeMap<GpuGen, u32>,
+    jobs: Vec<(JobRequest<'a>, Option<GpuGen>)>,
+}
+
+impl<'a> PlanSession<'a> {
+    /// A session over the fleet's *current* free capacity (the batch
+    /// [`Mechanism::allocate`] contract: callers hand over the fleet in
+    /// whatever state the round should plan against).
+    pub fn from_fleet(fleet: &Fleet) -> PlanSession<'a> {
+        let free = fleet
+            .pools
+            .iter()
+            .map(|p| (p.gen, p.cluster.free_gpus()))
+            .collect();
+        PlanSession::with_budget(fleet, free)
+    }
+
+    /// A session over the fleet's *round-start* capacity (what the round
+    /// reset restores). Used by the resume path, where the fleet still
+    /// holds the previous plan's placements: a fresh replan would see
+    /// the post-`evict_all` budgets, so the fold must too.
+    pub fn at_round_start(fleet: &Fleet) -> PlanSession<'a> {
+        let free = fleet
+            .pools
+            .iter()
+            .map(|p| (p.gen, p.cluster.total_gpus()))
+            .collect();
+        PlanSession::with_budget(fleet, free)
+    }
+
+    fn with_budget(
+        fleet: &Fleet,
+        free: BTreeMap<GpuGen, u32>,
+    ) -> PlanSession<'a> {
+        let single = match &fleet.pools[..] {
+            [pool] => Some(pool.gen),
+            _ => None,
+        };
+        PlanSession { single, free, jobs: Vec::new() }
+    }
+
+    /// Fold the next job of the sequence with an explicit rank function
+    /// (higher wins; only types whose remaining budget covers the gang
+    /// are candidates; evaluated once per (job, candidate)). Identical
+    /// tie-breaks to the pre-refactor batch assignment: candidates
+    /// iterate in `GpuGen` order and `max_by` keeps the *last* maximum.
+    pub fn assign_by(
+        &mut self,
+        job: JobRequest<'a>,
+        rank: impl Fn(&JobRequest<'_>, GpuGen, u32) -> (f64, i64),
+    ) {
+        let gen = if let Some(g) = self.single {
+            // One-type pass-through: never budget-filtered (the pool
+            // algorithm handles GPU shortage, like the homogeneous cut).
+            Some(g)
+        } else {
+            let best = self
+                .free
+                .iter()
+                .filter(|(_, &f)| f >= job.gpus)
+                .map(|(&g, &f)| (rank(&job, g, f), g))
+                .max_by(|(ra, _), (rb, _)| ra.partial_cmp(rb).unwrap())
+                .map(|(_, g)| g);
+            if let Some(g) = best {
+                *self.free.get_mut(&g).unwrap() -= job.gpus;
+            }
+            best
+        };
+        self.jobs.push((job, gen));
+    }
+
+    /// Type-blind capacity-weighted round robin (most free GPUs first,
+    /// slowest generation on ties) — the default fold, what a
+    /// heterogeneity-unaware scheduler does.
+    pub fn assign_capacity_rr(&mut self, job: JobRequest<'a>) {
+        self.assign_by(job, |_j, g, free| (free as f64, -(g as i64)));
+    }
+
+    /// Record the job without assigning a type (mechanisms whose global
+    /// program makes its own type choice — OPT).
+    pub fn push_unassigned(&mut self, job: JobRequest<'a>) {
+        self.jobs.push((job, None));
+    }
+
+    /// Decompose into (sequence-ordered requests, assignment map).
+    pub fn into_parts(
+        self,
+    ) -> (Vec<JobRequest<'a>>, BTreeMap<JobId, GpuGen>) {
+        let mut assigned = BTreeMap::new();
+        let mut jobs = Vec::with_capacity(self.jobs.len());
+        for (j, g) in self.jobs {
+            if let Some(g) = g {
+                assigned.insert(j.id, g);
+            }
+            jobs.push(j);
+        }
+        (jobs, assigned)
+    }
+}
+
+/// Undo entry for the per-pool grant map (parallel to the cluster's
+/// journal): a fresh insert undoes to a removal, an overwrite undoes to
+/// the stored previous grant.
+#[derive(Debug)]
+enum GrantUndo {
+    Inserted(JobId),
+    Replaced(JobId, PoolGrant),
+}
+
+/// One pool's journaled fold state: the grants plus their undo log. The
+/// grant map is private so every mutation goes through
+/// [`PoolPlan::insert`] — the undo log the resume rollback depends on
+/// cannot be bypassed; pool algorithms read via [`PoolPlan::grants`].
+#[derive(Debug, Default)]
+pub struct PoolPlan {
+    grants: BTreeMap<JobId, PoolGrant>,
+    log: Vec<GrantUndo>,
+}
+
+impl PoolPlan {
+    /// Insert or overwrite a grant, recording the inverse op.
+    pub fn insert(&mut self, id: JobId, grant: PoolGrant) {
+        match self.grants.insert(id, grant) {
+            None => self.log.push(GrantUndo::Inserted(id)),
+            Some(old) => self.log.push(GrantUndo::Replaced(id, old)),
+        }
+    }
+
+    /// Read-only view of the granted jobs.
+    pub fn grants(&self) -> &BTreeMap<JobId, PoolGrant> {
+        &self.grants
+    }
+
+    /// Consume the plan, yielding the final grant map (batch path).
+    pub fn into_grants(self) -> BTreeMap<JobId, PoolGrant> {
+        self.grants
+    }
+
+    fn mark(&self) -> usize {
+        self.log.len()
+    }
+
+    fn rollback_to(&mut self, mark: usize) {
+        while self.log.len() > mark {
+            match self.log.pop().expect("len checked") {
+                GrantUndo::Inserted(id) => {
+                    self.grants.remove(&id);
+                }
+                GrantUndo::Replaced(id, old) => {
+                    self.grants.insert(id, old);
+                }
+            }
+        }
+    }
+}
+
+/// One mechanism's pool-level algorithm, expressed in the shape the
+/// resume driver checkpoints: a deterministic processing order, a
+/// per-job fold step, and an optional deferred global pass.
+pub(crate) trait PoolAlg {
+    /// Processing order as indices into `reqs`. Defaults to sequence
+    /// (priority) order; TUNE overrides with the §4.2 demand sort.
+    fn order(&self, reqs: &[PoolRequest<'_>]) -> Vec<usize> {
+        (0..reqs.len()).collect()
+    }
+
+    /// Fold `reqs[idx]` into the pool state. May read/mutate earlier
+    /// grants (TUNE's victim downgrades) — the fold state after a prefix
+    /// stays a pure function of the prefix either way.
+    fn place_step(
+        &self,
+        cluster: &mut Cluster,
+        plan: &mut PoolPlan,
+        reqs: &[PoolRequest<'_>],
+        idx: usize,
+    );
+
+    /// Deferred global pass over the completed fold state (not part of
+    /// any checkpoint; reruns whenever the pool replays).
+    fn finish_pool(
+        &self,
+        cluster: &mut Cluster,
+        plan: &mut PoolPlan,
+        reqs: &[PoolRequest<'_>],
+    ) {
+        let _ = (cluster, plan, reqs);
+    }
+}
+
+/// Run a pool algorithm to completion over one pool (the batch path —
+/// no checkpointing; the grant log is simply discarded).
+pub(crate) fn run_pool(
+    alg: &dyn PoolAlg,
+    cluster: &mut Cluster,
+    reqs: &[PoolRequest<'_>],
+) -> BTreeMap<JobId, PoolGrant> {
+    let mut plan = PoolPlan::default();
+    for idx in alg.order(reqs) {
+        alg.place_step(cluster, &mut plan, reqs, idx);
+    }
+    alg.finish_pool(cluster, &mut plan, reqs);
+    plan.into_grants()
+}
+
+/// Per-pool checkpoint: the processing-order step keys, the (cluster
+/// journal, grant log) mark after each step, and the live fold state.
+/// `marks[i]` is the state after `i` steps; `marks[0]` the pool's
+/// round-reset base. Ops recorded past the last mark belong to the
+/// finish pass and are undone first on any rollback.
+struct PoolTrace {
+    steps: Vec<JobId>,
+    marks: Vec<(usize, usize)>,
+    plan: PoolPlan,
+}
+
+/// Checkpointed state of one round plan, aligned with `fleet.pools`.
+/// Returned by [`super::Mechanism::plan`] and handed back on the next
+/// planning round; valid only while the fleet is untouched in between
+/// (the simulation core guarantees that — memoized rounds do not mutate
+/// the fleet).
+pub struct PlanTrace {
+    pools: Vec<PoolTrace>,
+}
+
+/// The outcome of one planning round.
+pub struct PlanOutcome {
+    pub grants: BTreeMap<JobId, Grant>,
+    /// Checkpoint for the next round (`None` from non-resumable
+    /// mechanisms or when journaling is off).
+    pub trace: Option<PlanTrace>,
+    /// Per-job planning steps this plan comprised (all pools).
+    pub steps_total: usize,
+    /// Steps served from the checkpointed prefix instead of replayed.
+    pub steps_reused: usize,
+}
+
+fn common_prefix(a: &[JobId], b: &[JobId]) -> usize {
+    a.iter().zip(b).take_while(|(x, y)| x == y).count()
+}
+
+/// Plan one round with longest-common-prefix resume against `prev`.
+///
+/// The assignment fold always recomputes in full (O(jobs × |K|) — the
+/// cheap phase, and its budgets are the round-start constants either
+/// way); the per-pool placement folds resume. Falls back to the batch
+/// path when the fleet does not journal (deploy/test lifecycles that
+/// never resume pay nothing).
+pub(crate) fn plan_resumable<M: Mechanism + ?Sized>(
+    mech: &M,
+    alg: &dyn PoolAlg,
+    fleet: &mut Fleet,
+    jobs: &[JobRequest<'_>],
+    prev: Option<PlanTrace>,
+) -> PlanOutcome {
+    if !fleet.journal_enabled() {
+        fleet.evict_all();
+        return PlanOutcome {
+            grants: mech.allocate(fleet, jobs),
+            trace: None,
+            steps_total: 0,
+            steps_reused: 0,
+        };
+    }
+
+    // Phase 1: the assignment fold, from round-start budgets (identical
+    // to what a fresh replan sees right after `evict_all`).
+    let mut session = PlanSession::at_round_start(fleet);
+    for j in jobs {
+        mech.step(&mut session, j.clone());
+    }
+    let (sjobs, assigned) = session.into_parts();
+
+    // No valid checkpoint: hard-reset every pool and plan from scratch
+    // (journals re-base at the reset).
+    let n_pools = fleet.pools.len();
+    let prev_pools: Vec<Option<PoolTrace>> = match prev {
+        Some(t) if t.pools.len() == n_pools => {
+            t.pools.into_iter().map(Some).collect()
+        }
+        _ => {
+            fleet.evict_all();
+            (0..n_pools).map(|_| None).collect()
+        }
+    };
+
+    // Phase 2+3: per-pool placement folds, resumed where prefixes match.
+    let mut pools_out: Vec<PoolTrace> = Vec::with_capacity(n_pools);
+    let mut steps_total = 0usize;
+    let mut steps_reused = 0usize;
+    for (pool, prev_pool) in fleet.pools.iter_mut().zip(prev_pools) {
+        let gen = pool.gen;
+        let spec = pool.cluster.spec;
+        let reqs = super::pool_requests(gen, spec, &sjobs, &assigned);
+        let order = alg.order(&reqs);
+        let new_steps: Vec<JobId> =
+            order.iter().map(|&i| reqs[i].id).collect();
+        steps_total += new_steps.len();
+
+        let cluster = &mut pool.cluster;
+        let (mut plan, mut marks, lcp) = match prev_pool {
+            Some(t) if t.steps == new_steps => {
+                // Unchanged pool plan: committed state, grants and finish
+                // pass all reused verbatim (deterministic finish over an
+                // identical fold state reproduces itself).
+                steps_reused += t.steps.len();
+                pools_out.push(t);
+                continue;
+            }
+            Some(mut t) => {
+                let lcp = common_prefix(&t.steps, &new_steps);
+                let (cluster_mark, grant_mark) = t.marks[lcp];
+                cluster.rollback_journal_to(cluster_mark);
+                t.plan.rollback_to(grant_mark);
+                t.marks.truncate(lcp + 1);
+                steps_reused += lcp;
+                (t.plan, t.marks, lcp)
+            }
+            None => (
+                PoolPlan::default(),
+                vec![(cluster.journal_mark(), 0)],
+                0,
+            ),
+        };
+        // Replay the divergent suffix, checkpointing after each step.
+        for &idx in &order[lcp..] {
+            alg.place_step(cluster, &mut plan, &reqs, idx);
+            marks.push((cluster.journal_mark(), plan.mark()));
+        }
+        alg.finish_pool(cluster, &mut plan, &reqs);
+        pools_out.push(PoolTrace { steps: new_steps, marks, plan });
+    }
+
+    // Assemble the fleet-level grants from the per-pool fold states.
+    let mut grants = BTreeMap::new();
+    for (pool, t) in fleet.pools.iter().zip(&pools_out) {
+        for (id, g) in &t.plan.grants {
+            grants.insert(
+                *id,
+                Grant {
+                    gen: pool.gen,
+                    placement: g.placement.clone(),
+                    demand: g.demand,
+                },
+            );
+        }
+    }
+    PlanOutcome {
+        grants,
+        trace: Some(PlanTrace { pools: pools_out }),
+        steps_total,
+        steps_reused,
+    }
+}

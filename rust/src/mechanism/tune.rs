@@ -34,8 +34,9 @@
 //!   downgraded *to* the proportional share, never below.
 
 use super::{
-    assign_types, best_fit, delegate_pools, first_fit, Grant, JobRequest,
-    Mechanism, PoolGrant, PoolRequest,
+    best_fit, delegate_pools, first_fit, plan_resumable, run_pool, Grant,
+    JobRequest, Mechanism, PlanOutcome, PlanSession, PlanTrace, PoolAlg,
+    PoolGrant, PoolPlan, PoolRequest,
 };
 use crate::cluster::{Cluster, Fleet, Placement, Share};
 use crate::job::{DemandVector, JobId};
@@ -88,78 +89,92 @@ impl Tune {
         cluster: &mut Cluster,
         jobs: &[PoolRequest<'_>],
     ) -> BTreeMap<JobId, PoolGrant> {
-        let mut grants: BTreeMap<JobId, PoolGrant> = BTreeMap::new();
-        // Proportional demands of this round's jobs (for downgrades).
-        let props: BTreeMap<JobId, DemandVector> =
-            jobs.iter().map(|j| (j.id, j.prop)).collect();
+        run_pool(&TuneAlg(self), cluster, jobs)
+    }
+}
 
-        // Step 1: sort by demand, descending (big rocks first).
-        let mut ordered: Vec<&PoolRequest> = jobs.iter().collect();
-        ordered.sort_by(|a, b| b.best.sort_key().cmp(&a.best.sort_key()));
+/// The §4.2 pool algorithm in resumable-fold shape: demand-sorted
+/// processing order, a per-job step that may downgrade earlier victims,
+/// and the §5.3.2 spare redistribution as the deferred finish pass.
+/// Mutating earlier grants inside a step is fine for resume soundness —
+/// the fold state after a step prefix is still a pure function of that
+/// prefix.
+struct TuneAlg<'m>(&'m Tune);
 
-        for job in ordered {
-            // Step 2: best-case demand.
-            if let Some(p) = self.fit(cluster, &job.best) {
+impl PoolAlg for TuneAlg<'_> {
+    /// Step 1: sort by demand, descending (big rocks first). Stable, so
+    /// demand ties keep the policy's sequence order.
+    fn order(&self, reqs: &[PoolRequest<'_>]) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..reqs.len()).collect();
+        order.sort_by(|&a, &b| {
+            reqs[b].best.sort_key().cmp(&reqs[a].best.sort_key())
+        });
+        order
+    }
+
+    fn place_step(
+        &self,
+        cluster: &mut Cluster,
+        plan: &mut PoolPlan,
+        reqs: &[PoolRequest<'_>],
+        idx: usize,
+    ) {
+        let job = &reqs[idx];
+        // Step 2: best-case demand.
+        if let Some(p) = self.0.fit(cluster, &job.best) {
+            cluster.place(job.id, p.clone());
+            plan.insert(job.id, PoolGrant { placement: p, demand: job.best });
+            return;
+        }
+        // Step 3: revert own demand to proportional.
+        if job.best.exceeds(&job.prop) {
+            if let Some(p) = self.0.fit(cluster, &job.prop) {
                 cluster.place(job.id, p.clone());
-                grants.insert(
+                plan.insert(
                     job.id,
-                    PoolGrant { placement: p, demand: job.best },
+                    PoolGrant { placement: p, demand: job.prop },
                 );
-                continue;
-            }
-            // Step 3: revert own demand to proportional.
-            if job.best.exceeds(&job.prop) {
-                if let Some(p) = self.fit(cluster, &job.prop) {
-                    cluster.place(job.id, p.clone());
-                    grants.insert(
-                        job.id,
-                        PoolGrant { placement: p, demand: job.prop },
-                    );
-                    continue;
-                }
-            }
-            // Step 4: reclaim from victims until the (floor) demand fits.
-            // The floor is the element-wise min of best-case and
-            // proportional: a job asking below proportional keeps its
-            // small ask. Each iteration downgrades the most-over-allocated
-            // victim on a GPU-feasible server; terminates because the
-            // victim set is finite.
-            let floor = job.best.clamp_to(&job.prop);
-            let placed = loop {
-                if let Some(p) = self.fit(cluster, &floor) {
-                    break Some(p);
-                }
-                if !downgrade_one_victim(
-                    cluster,
-                    &mut grants,
-                    &props,
-                    job,
-                    self.victim,
-                ) {
-                    break None;
-                }
-            };
-            match placed {
-                Some(p) => {
-                    cluster.place(job.id, p.clone());
-                    grants.insert(
-                        job.id,
-                        PoolGrant { placement: p, demand: floor },
-                    );
-                }
-                None => {
-                    // GPU demand itself cannot be met (only possible when
-                    // the coordinator over-admitted); leave unplaced.
-                }
+                return;
             }
         }
+        // Step 4: reclaim from victims until the (floor) demand fits.
+        // The floor is the element-wise min of best-case and
+        // proportional: a job asking below proportional keeps its
+        // small ask. Each iteration downgrades the most-over-allocated
+        // victim on a GPU-feasible server; terminates because the
+        // victim set is finite.
+        let floor = job.best.clamp_to(&job.prop);
+        let placed = loop {
+            if let Some(p) = self.0.fit(cluster, &floor) {
+                break Some(p);
+            }
+            if !downgrade_one_victim(cluster, plan, job, self.0.victim) {
+                break None;
+            }
+        };
+        match placed {
+            Some(p) => {
+                cluster.place(job.id, p.clone());
+                plan.insert(job.id, PoolGrant { placement: p, demand: floor });
+            }
+            None => {
+                // GPU demand itself cannot be met (only possible when
+                // the coordinator over-admitted); leave unplaced.
+            }
+        }
+    }
 
-        // Final pass: redistribute spare CPU/memory to placed jobs that
-        // still benefit (§5.3.2: "at low load ... the unallocated CPU and
-        // memory is assigned to the jobs that benefit from additional
-        // auxiliary resources").
-        redistribute_spare(cluster, &mut grants, jobs);
-        grants
+    /// Final pass: redistribute spare CPU/memory to placed jobs that
+    /// still benefit (§5.3.2: "at low load ... the unallocated CPU and
+    /// memory is assigned to the jobs that benefit from additional
+    /// auxiliary resources").
+    fn finish_pool(
+        &self,
+        cluster: &mut Cluster,
+        plan: &mut PoolPlan,
+        reqs: &[PoolRequest<'_>],
+    ) {
+        redistribute_spare(cluster, plan, reqs);
     }
 }
 
@@ -168,23 +183,41 @@ impl Mechanism for Tune {
         "tune"
     }
 
-    fn allocate(
-        &self,
-        fleet: &mut Fleet,
-        jobs: &[JobRequest<'_>],
-    ) -> BTreeMap<JobId, Grant> {
-        // Affinity score: the job's best-case throughput on this type,
-        // normalized by the type's compute scale so compute-insensitive
-        // jobs defer fast GPUs to jobs that can exploit them.
-        let assigned = assign_types(fleet, jobs, |j, gen| {
+    fn resumable(&self) -> bool {
+        true
+    }
+
+    /// Affinity fold: the job's best-case throughput on the candidate
+    /// type, normalized by the type's compute scale so
+    /// compute-insensitive jobs defer fast GPUs to jobs that can exploit
+    /// them.
+    fn step<'a>(&self, session: &mut PlanSession<'a>, job: JobRequest<'a>) {
+        session.assign_by(job, |j, gen, _free| {
             let m = j.sens.matrix(gen).expect("profiled");
             let peak = m.max_throughput();
             let scale = gen.compute_scale(m.model.task());
-            peak / scale
+            (peak / scale, gen as i64)
         });
-        delegate_pools(fleet, jobs, &assigned, |cluster, reqs| {
-            self.allocate_pool(cluster, reqs)
+    }
+
+    fn finish(
+        &self,
+        session: PlanSession<'_>,
+        fleet: &mut Fleet,
+    ) -> BTreeMap<JobId, Grant> {
+        let (jobs, assigned) = session.into_parts();
+        delegate_pools(fleet, &jobs, &assigned, |cluster, reqs| {
+            run_pool(&TuneAlg(self), cluster, reqs)
         })
+    }
+
+    fn plan(
+        &self,
+        fleet: &mut Fleet,
+        jobs: &[JobRequest<'_>],
+        prev: Option<PlanTrace>,
+    ) -> PlanOutcome {
+        plan_resumable(self, &TuneAlg(self), fleet, jobs, prev)
     }
 }
 
@@ -194,16 +227,16 @@ impl Mechanism for Tune {
 /// rule). Jobs with the largest gap to best-case are served first.
 fn redistribute_spare(
     cluster: &mut Cluster,
-    grants: &mut BTreeMap<JobId, PoolGrant>,
+    plan: &mut PoolPlan,
     jobs: &[PoolRequest<'_>],
 ) {
     let best: BTreeMap<JobId, DemandVector> =
         jobs.iter().map(|j| (j.id, j.best)).collect();
     // Largest relative gap first.
-    let mut order: Vec<JobId> = grants.keys().copied().collect();
+    let mut order: Vec<JobId> = plan.grants().keys().copied().collect();
     order.sort_by(|a, b| {
         let gap = |id: &JobId| {
-            let g = &grants[id];
+            let g = &plan.grants()[id];
             let bd = &best[id];
             (bd.cpus - g.demand.cpus).max(0.0)
                 + (bd.mem_gb - g.demand.mem_gb).max(0.0) / 12.5
@@ -216,7 +249,7 @@ fn redistribute_spare(
         // Early-out on the Copy demand alone — most jobs already hold
         // their best case, so don't touch the placement (let alone clone
         // the grant, as this loop once did) until a gap is established.
-        let granted = grants[&id].demand;
+        let granted = plan.grants()[&id].demand;
         let want_cpu = (bd.cpus - granted.cpus).max(0.0);
         let want_mem = (bd.mem_gb - granted.mem_gb).max(0.0);
         if want_cpu <= 1e-9 && want_mem <= 1e-9 {
@@ -226,7 +259,7 @@ fn redistribute_spare(
         // Per-GPU headroom limited by the tightest server in the span.
         let mut cpu_per_gpu = f64::INFINITY;
         let mut mem_per_gpu = f64::INFINITY;
-        for (&sid, share) in &grants[&id].placement.shares {
+        for (&sid, share) in &plan.grants()[&id].placement.shares {
             let s = cluster.server(sid);
             cpu_per_gpu = cpu_per_gpu.min(s.free_cpus / share.gpus as f64);
             mem_per_gpu = mem_per_gpu.min(s.free_mem_gb / share.gpus as f64);
@@ -256,17 +289,21 @@ fn redistribute_spare(
             );
         }
         cluster.place(id, new_p.clone());
-        grants.insert(id, PoolGrant { placement: new_p, demand: new_demand });
+        plan.insert(id, PoolGrant { placement: new_p, demand: new_demand });
     }
 }
 
 /// Downgrade the single best victim: a granted job holding more than its
 /// proportional share on a server that could host (part of) `job`'s GPUs.
 /// Returns false if no such victim exists.
+///
+/// A victim's proportional floor is recomputed from its granted gang
+/// size and the pool's spec ratios — bit-identical to the request-list
+/// values (same inputs, same expression), without carrying a side map
+/// through the resumable fold.
 fn downgrade_one_victim(
     cluster: &mut Cluster,
-    grants: &mut BTreeMap<JobId, PoolGrant>,
-    props: &BTreeMap<JobId, DemandVector>,
+    plan: &mut PoolPlan,
     job: &PoolRequest<'_>,
     strategy: VictimStrategy,
 ) -> bool {
@@ -284,15 +321,23 @@ fn downgrade_one_victim(
     if !any_candidate {
         return false;
     }
+    let spec = cluster.spec;
+    let prop_of = |gpus: u32| {
+        DemandVector::proportional(
+            gpus,
+            spec.cpus as f64 / spec.gpus as f64,
+            spec.mem_gb / spec.gpus as f64,
+        )
+    };
 
     // Find the victim with the largest reclaimable excess on a candidate.
     let mut best: Option<(JobId, f64)> = None;
-    for (&vid, grant) in grants.iter() {
+    for (&vid, grant) in plan.grants().iter() {
         if vid == job.id {
             continue;
         }
-        let Some(prop) = props.get(&vid) else { continue };
-        if !grant.demand.exceeds(prop) {
+        let prop = prop_of(grant.demand.gpus);
+        if !grant.demand.exceeds(&prop) {
             continue;
         }
         let touches =
@@ -315,7 +360,8 @@ fn downgrade_one_victim(
     // Downgrade: shrink each per-server share to the element-wise min of
     // the current and proportional demand for the GPUs it holds there
     // (same servers — no migration; never grows a dimension).
-    let prop = grants[&vid].demand.clamp_to(&props[&vid]);
+    let victim_demand = plan.grants()[&vid].demand;
+    let prop = victim_demand.clamp_to(&prop_of(victim_demand.gpus));
     let per_gpu_cpu = prop.cpus / prop.gpus as f64;
     let per_gpu_mem = prop.mem_gb / prop.gpus as f64;
     let old = cluster.evict(vid).expect("victim must be placed");
@@ -331,7 +377,7 @@ fn downgrade_one_victim(
         );
     }
     cluster.place(vid, new_p.clone());
-    grants.insert(vid, PoolGrant { placement: new_p, demand: prop });
+    plan.insert(vid, PoolGrant { placement: new_p, demand: prop });
     true
 }
 

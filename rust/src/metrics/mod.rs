@@ -118,6 +118,66 @@ impl UtilizationLog {
     }
 }
 
+/// Round-planning split (memoization + prefix-resume accounting), for
+/// the optional plan-stats section of [`metrics_json`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PlanSummary {
+    pub planned_rounds: usize,
+    pub resumed_rounds: usize,
+    /// Planning steps served from checkpointed prefixes.
+    pub reused_steps: usize,
+    /// All planning steps across planned rounds.
+    pub total_steps: usize,
+}
+
+/// The canonical metrics document: JCT summary + Jain fairness over the
+/// per-tenant average JCTs (+ the per-tenant table). This is the exact
+/// payload the golden scenario matrix pins (`tests/scenarios.rs`), so
+/// its default shape must stay byte-stable; `plan` (default `None`
+/// everywhere golden-relevant) appends the round-planning split as
+/// *additional* keys without touching the existing ones. Values are
+/// rounded to 1 ms so goldens survive libm ulp differences across hosts
+/// while still pinning the schedule.
+pub fn metrics_json(
+    stats: &JctStats,
+    by_tenant: &BTreeMap<TenantId, JctStats>,
+    makespan_s: f64,
+    rounds: usize,
+    plan: Option<&PlanSummary>,
+) -> String {
+    use crate::util::json::Json;
+    let r3 = |x: f64| (x * 1000.0).round() / 1000.0;
+    let tenant_avgs: Vec<f64> = by_tenant.values().map(|s| s.avg_s).collect();
+    let tenants: Vec<Json> = by_tenant
+        .iter()
+        .map(|(t, s)| {
+            Json::obj(vec![
+                ("tenant", Json::num(t.0 as f64)),
+                ("jobs", Json::num(s.n as f64)),
+                ("avg_jct_s", Json::num(r3(s.avg_s))),
+                ("p99_jct_s", Json::num(r3(s.p99_s))),
+            ])
+        })
+        .collect();
+    let mut fields = vec![
+        ("jobs", Json::num(stats.n as f64)),
+        ("avg_jct_s", Json::num(r3(stats.avg_s))),
+        ("p50_jct_s", Json::num(r3(stats.p50_s))),
+        ("p99_jct_s", Json::num(r3(stats.p99_s))),
+        ("makespan_s", Json::num(r3(makespan_s))),
+        ("rounds", Json::num(rounds as f64)),
+        ("jain_fairness", Json::num(r3(jains_index(&tenant_avgs)))),
+        ("per_tenant", Json::arr(tenants)),
+    ];
+    if let Some(p) = plan {
+        fields.push(("planned_rounds", Json::num(p.planned_rounds as f64)));
+        fields.push(("resumed_rounds", Json::num(p.resumed_rounds as f64)));
+        fields.push(("reused_steps", Json::num(p.reused_steps as f64)));
+        fields.push(("total_steps", Json::num(p.total_steps as f64)));
+    }
+    Json::obj(fields).encode()
+}
+
 /// Per-tenant JCT summaries from `(tenant, jct)` pairs.
 pub fn per_tenant_stats(
     jcts: &[(TenantId, f64)],

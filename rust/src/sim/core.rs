@@ -63,11 +63,25 @@
 //!   (asserted by the `sim_scale` bench); time-varying keys (SRTF/LAS)
 //!   replan exactly when their order genuinely shifts the runnable set.
 //!
+//! - **Prefix-resumed round** (the third tier, below the exact-match
+//!   memoizer): when the sequence *did* change, the model's
+//!   [`ClusterModel::place_round`] may resume the mechanism from a
+//!   checkpoint of the previous plan instead of replanning from scratch
+//!   — the per-pool fold state after a step prefix is a pure function
+//!   of that prefix (see [`crate::mechanism::resume`]), so only the
+//!   divergent suffix replays. Time-varying policies (SRTF/LAS), whose
+//!   sequences shift almost every round and so defeat the exact-match
+//!   tier, land here: reorders that leave the demand-sorted pool order
+//!   intact reuse the whole plan, and arrivals/completions reuse the
+//!   undisturbed prefix. [`SimResult::resumed_rounds`] and the
+//!   reused-step totals report the split.
+//!
 //! [`CoreConfig::force_replan`] disables the memoized tier (every
 //! non-fast-forward round replans — the pre-memoization hot path);
-//! `tests/memo_parity.rs` pins both paths to bit-identical schedules.
-//! This plus arena-backed job state is what keeps 512-GPU × 8000-job
-//! traces tractable (`benches/sim_scale.rs` → `BENCH_sim.json`).
+//! `tests/memo_parity.rs` pins all planning tiers to bit-identical
+//! schedules (forced vs memoized vs prefix-resumed). This plus
+//! arena-backed job state is what keeps 512-GPU × 8000-job traces
+//! tractable (`benches/sim_scale.rs` → `BENCH_sim.json`).
 
 use crate::job::{Job, JobArena, JobId, JobState, TenantId};
 use crate::metrics::{per_tenant_stats, JctStats, UtilSample, UtilizationLog};
@@ -130,6 +144,20 @@ impl RoundRates {
     }
 }
 
+/// Statistics of one planning round, as reported by
+/// [`ClusterModel::place_round`] and aggregated into [`SimResult`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PlanStats {
+    /// Whether any planning step was served from the previous plan's
+    /// checkpoint instead of replayed (prefix resume engaged).
+    pub resumed: bool,
+    /// Per-job planning steps this plan comprised (0 when the mechanism
+    /// does not report step accounting — non-resumable paths).
+    pub steps_total: usize,
+    /// Steps reused from the checkpointed prefix.
+    pub steps_reused: usize,
+}
+
 /// What a topology must provide to the core loop. Implementations keep
 /// per-job scheduling context (sensitivity matrices) internally, keyed
 /// by the dense arena index the core hands them.
@@ -148,28 +176,28 @@ pub trait ClusterModel {
     /// Drop the context of a departed job.
     fn forget(&mut self, idx: usize);
 
-    /// Reset placements for a new round (§3.2: placements are recomputed
-    /// from scratch every round). Called only when the round actually
-    /// replans — memoized rounds keep the committed placements, which
-    /// are identical to what a replan would recommit.
-    fn begin_round(&mut self);
-
     /// Append policy views for the active set (id order) to `out`; the
     /// core orders them with the scheduling policy. Views are defined
     /// against the round-start (reset) fleet regardless of when they are
     /// evaluated.
     fn policy_views(&self, arena: &JobArena, out: &mut Vec<PolicyJobView>);
 
-    /// Allocate + place the admitted runnable set (policy order, arena
-    /// indices) and record each placed job's progress rate (samples/s)
+    /// Plan the round: restore the fleet to its round-start state (§3.2:
+    /// placements are recomputed from scratch every round — either a
+    /// hard reset or a checkpoint rollback to the reused prefix),
+    /// allocate + place the admitted runnable set (policy order, arena
+    /// indices), and record each placed job's progress rate (samples/s)
     /// for the round into `rates` (cleared by the core beforehand). Jobs
-    /// left unset stay queued.
+    /// left unset stay queued. Called only when the round actually
+    /// replans — memoized rounds keep the committed placements, which
+    /// are identical to what a replan would recommit. Returns the plan's
+    /// resume statistics.
     fn place_round(
         &mut self,
         runnable: &[u32],
         arena: &JobArena,
         rates: &mut RoundRates,
-    );
+    ) -> PlanStats;
 
     /// One utilization sample of the deployed round.
     fn utilization(&self, now: f64, arena: &JobArena) -> UtilSample;
@@ -335,6 +363,19 @@ pub struct SimResult {
     /// time-stable policies this is bounded by
     /// `arrivals + completions + 1`.
     pub planned_rounds: usize,
+    /// Planned rounds that resumed from the previous plan's checkpoint
+    /// (some planning steps reused instead of replayed) — the third
+    /// planning tier, below the exact-sequence memoizer. Always
+    /// `<= planned_rounds`; 0 under `force_replan`/`no_resume` or
+    /// non-resumable mechanisms.
+    pub resumed_rounds: usize,
+    /// Total per-job planning steps across all planned rounds (resume
+    /// accounting; 0 when the mechanism does not report steps).
+    pub plan_steps_total: usize,
+    /// Of [`SimResult::plan_steps_total`], the steps served from
+    /// checkpointed prefixes. `reused / total` is the mean reused-prefix
+    /// fraction the `sim_scale` bench reports.
+    pub plan_steps_reused: usize,
     pub utilization: UtilizationLog,
     /// Total profiling cost across all jobs, minutes (§3.1 accounting).
     pub profiling_minutes: f64,
@@ -376,6 +417,30 @@ impl SimResult {
             .map(|f| f.jct_s)
             .collect()
     }
+
+    /// Round-planning summary (memoized/resumed tier accounting).
+    pub fn plan_summary(&self) -> crate::metrics::PlanSummary {
+        crate::metrics::PlanSummary {
+            planned_rounds: self.planned_rounds,
+            resumed_rounds: self.resumed_rounds,
+            reused_steps: self.plan_steps_reused,
+            total_steps: self.plan_steps_total,
+        }
+    }
+
+    /// The canonical metrics document ([`crate::metrics::metrics_json`]).
+    /// `plan_stats` (default **off** — golden files must not change)
+    /// appends the round-planning split.
+    pub fn metrics_json(&self, plan_stats: bool) -> String {
+        let summary = self.plan_summary();
+        crate::metrics::metrics_json(
+            &self.jct_stats(),
+            &self.tenant_stats(),
+            self.makespan_s,
+            self.rounds,
+            plan_stats.then_some(&summary),
+        )
+    }
 }
 
 /// Run a trace to completion (or `cfg.max_sim_s`) over `model`.
@@ -411,6 +476,9 @@ pub fn run_events<M: ClusterModel + ?Sized>(
     let mut now = 0.0f64;
     let mut rounds = 0usize;
     let mut planned_rounds = 0usize;
+    let mut resumed_rounds = 0usize;
+    let mut plan_steps_total = 0usize;
+    let mut plan_steps_reused = 0usize;
     let mut last_set_changed = true;
 
     // Round-scoped buffers, reused across rounds (the per-round
@@ -469,12 +537,16 @@ pub fn run_events<M: ClusterModel + ?Sized>(
 
             if cfg.force_replan || !have_plan || runnable != planned_runnable
             {
-                model.begin_round();
                 rates.clear();
-                model.place_round(&runnable, &arena, &mut rates);
+                let stats = model.place_round(&runnable, &arena, &mut rates);
                 std::mem::swap(&mut planned_runnable, &mut runnable);
                 have_plan = true;
                 planned_rounds += 1;
+                if stats.resumed {
+                    resumed_rounds += 1;
+                }
+                plan_steps_total += stats.steps_total;
+                plan_steps_reused += stats.steps_reused;
             }
             // Deploy the (possibly memoized) plan. Idempotent: memoized
             // rounds re-apply the identical rates.
@@ -578,6 +650,9 @@ pub fn run_events<M: ClusterModel + ?Sized>(
         makespan_s,
         rounds,
         planned_rounds,
+        resumed_rounds,
+        plan_steps_total,
+        plan_steps_reused,
         utilization: util,
         profiling_minutes,
     }

@@ -11,13 +11,15 @@
 //! but a `SimConfig` with `types` set — there is no second engine.
 
 use super::core::{
-    run_events, utilization_sample, ClusterModel, CoreConfig, RoundRates,
-    SimResult,
+    run_events, utilization_sample, ClusterModel, CoreConfig, PlanStats,
+    RoundRates, SimResult,
 };
 use crate::cluster::{Fleet, GpuGen, ServerSpec, TypeSpec};
 use crate::coordinator::{policy_view_with_free, round_start_free};
 use crate::job::{Job, JobArena};
-use crate::mechanism::{by_name as mechanism_by_name, JobRequest, Mechanism};
+use crate::mechanism::{
+    by_name as mechanism_by_name, JobRequest, Mechanism, PlanTrace,
+};
 use crate::metrics::UtilSample;
 use crate::perf::PerfModel;
 use crate::policy::{by_name as policy_by_name, PolicyJobView};
@@ -58,8 +60,14 @@ pub struct SimConfig {
     /// Disable round-plan memoization (rerun the mechanism on every
     /// non-fast-forwardable round — the pre-memoization hot path).
     /// Schedules are bit-identical either way; exists for the
-    /// memo-parity harness and A/B perf measurement.
+    /// memo-parity harness and A/B perf measurement. Implies
+    /// `no_resume`.
     pub force_replan: bool,
+    /// Disable the prefix-resume planning tier only (exact-sequence
+    /// memoization stays on): every replan runs the mechanism from a
+    /// hard fleet reset. Schedules are bit-identical either way; exists
+    /// for the three-arm parity harness and `synergy sim --no-resume`.
+    pub no_resume: bool,
 }
 
 impl Default for SimConfig {
@@ -77,6 +85,7 @@ impl Default for SimConfig {
             reference_spec: None,
             types: None,
             force_replan: false,
+            no_resume: false,
         }
     }
 }
@@ -99,15 +108,32 @@ pub struct FleetModel {
     /// Largest single pool, GPUs — the gang-fit bound (A.2.2: no
     /// cross-type spans).
     max_pool_gpus: u32,
+    /// Prefix-resume enabled: the fleet journals its mutations and the
+    /// previous plan's checkpoint is retained between planning rounds.
+    resume: bool,
+    /// Checkpoint of the previous plan (valid while the fleet is
+    /// untouched, which the core guarantees between plans).
+    trace: Option<PlanTrace>,
 }
 
 impl FleetModel {
     /// Build the model a [`SimConfig`] describes.
     pub fn from_config(cfg: &SimConfig) -> FleetModel {
-        let fleet = match &cfg.types {
+        let mut fleet = match &cfg.types {
             Some(types) => Fleet::new(types),
             None => Fleet::homogeneous(cfg.spec, cfg.n_servers),
         };
+        let mechanism = mechanism_by_name(&cfg.mechanism).unwrap_or_else(|| {
+            panic!("unknown mechanism {}", cfg.mechanism)
+        });
+        // Journal (and retain checkpoints) only when the mechanism can
+        // actually resume — OPT's global program would journal ops every
+        // round just to discard them.
+        let resume =
+            !cfg.force_replan && !cfg.no_resume && mechanism.resumable();
+        if resume {
+            fleet.enable_journal();
+        }
         let worlds: BTreeMap<GpuGen, PerfModel> = fleet
             .pools
             .iter()
@@ -118,9 +144,6 @@ impl FleetModel {
             span_factor: cfg.span_factor,
             ..OptimisticProfiler::for_fleet(&fleet)
         };
-        let mechanism = mechanism_by_name(&cfg.mechanism).unwrap_or_else(|| {
-            panic!("unknown mechanism {}", cfg.mechanism)
-        });
         let max_pool_gpus = fleet.max_pool_gpus();
         FleetModel {
             fleet,
@@ -131,6 +154,8 @@ impl FleetModel {
             reference_spec: cfg.reference_spec,
             network_penalty: cfg.network_penalty,
             max_pool_gpus,
+            resume,
+            trace: None,
         }
     }
 
@@ -174,10 +199,6 @@ impl ClusterModel for FleetModel {
         self.sens[idx] = None;
     }
 
-    fn begin_round(&mut self) {
-        self.fleet.evict_all();
-    }
-
     fn policy_views(&self, arena: &JobArena, out: &mut Vec<PolicyJobView>) {
         // One round-start free tuple for the whole pass: each view is
         // O(1) instead of rescanning the fleet per job.
@@ -192,7 +213,7 @@ impl ClusterModel for FleetModel {
         runnable: &[u32],
         arena: &JobArena,
         rates: &mut RoundRates,
-    ) {
+    ) -> PlanStats {
         let requests: Vec<JobRequest<'_>> = runnable
             .iter()
             .map(|&idx| {
@@ -206,8 +227,18 @@ impl ClusterModel for FleetModel {
                 }
             })
             .collect();
-        let grants = self.mechanism.allocate(&mut self.fleet, &requests);
+        // Plan with prefix resume when enabled: hand the mechanism the
+        // previous plan's checkpoint (the fleet is untouched since —
+        // memoized rounds never mutate it). Mechanisms reset or roll
+        // back the fleet themselves; disabled paths take the hard-reset
+        // batch route inside `plan`'s default.
+        let prev = if self.resume { self.trace.take() } else { None };
+        let outcome = self.mechanism.plan(&mut self.fleet, &requests, prev);
         debug_assert!(self.fleet.check_consistency().is_ok());
+        if self.resume {
+            self.trace = outcome.trace;
+        }
+        let grants = outcome.grants;
         // Deploy: fix each granted job's progress rate for the round from
         // its assigned type's ground truth at the granted (c, m).
         // Fragmented placements pay the data-parallel sync cost (§6
@@ -227,6 +258,11 @@ impl ClusterModel for FleetModel {
                     rate / (1.0 + self.network_penalty * (span - 1.0)),
                 );
             }
+        }
+        PlanStats {
+            resumed: outcome.steps_reused > 0,
+            steps_total: outcome.steps_total,
+            steps_reused: outcome.steps_reused,
         }
     }
 

@@ -21,10 +21,13 @@
 //!
 //! Performance: the core memoizes the round plan — the mechanism reruns
 //! only when the policy-ordered, admission-cut runnable sequence
-//! actually changed (see [`core`]'s module docs for the invariant), jobs
-//! live in a dense [`crate::job::JobArena`] instead of per-round
-//! `BTreeMap`s, and packing walks the clusters' free-capacity indices.
-//! That combination is what makes 512-GPU × 8000-job traces tractable
+//! actually changed (see [`core`]'s module docs for the invariant) —
+//! and when it does rerun, pool-decomposable mechanisms *resume* from a
+//! checkpoint of the previous plan, replaying only the steps past the
+//! longest common prefix ([`crate::mechanism::resume`]); jobs live in a
+//! dense [`crate::job::JobArena`] instead of per-round `BTreeMap`s, and
+//! packing walks the clusters' free-capacity indices. That combination
+//! is what makes 512-GPU × 8000-job traces tractable
 //! (`benches/sim_scale.rs` → `BENCH_sim.json`).
 
 mod core;
@@ -32,6 +35,6 @@ mod engine;
 
 pub use self::core::{
     run_events, utilization_sample, ClusterModel, CoreConfig, FinishedJob,
-    RoundRates, SimEvent, SimResult,
+    PlanStats, RoundRates, SimEvent, SimResult,
 };
 pub use engine::{FleetModel, HomoModel, SimConfig, Simulator};

@@ -1,18 +1,31 @@
-//! Forced-replan vs memoized-run equivalence (ISSUE 4 tentpole proof).
+//! Planning-tier equivalence (ISSUE 4 tentpole proof, extended by
+//! ISSUE 5's prefix resume): forced-replan ≡ memoized ≡ prefix-resumed,
+//! bit for bit.
 //!
-//! The simulation core memoizes the round plan: the allocation mechanism
-//! reruns only when the policy-ordered, admission-cut runnable sequence
-//! changed since the last planned round (`sim/core.rs` module docs state
-//! the invariant). Because the plan is a pure function of that sequence,
-//! disabling memoization (`SimConfig::force_replan`, which reruns the
-//! mechanism on every non-fast-forwardable round — the pre-memoization
-//! behaviour) must yield the *bit-identical* schedule: same finish
-//! times, same round count, same utilization trace, same metrics JSON.
+//! The simulation core plans a round through three tiers:
 //!
-//! The matrix below mirrors the golden scenario matrix's axes (workload
-//! shape × quotas × fleet shape) across time-stable (FIFO) and
-//! time-varying (SRTF/LAS) policies — the latter exercise rounds where
-//! the cheap pass runs but the runnable sequence shifts mid-stream.
+//! 1. **forced replan** (`SimConfig::force_replan`) — the mechanism runs
+//!    on every non-fast-forwardable round from a hard fleet reset (the
+//!    pre-memoization behaviour);
+//! 2. **memoized** (`SimConfig::no_resume`) — the mechanism reruns only
+//!    when the policy-ordered, admission-cut runnable sequence changed,
+//!    always from a hard reset;
+//! 3. **prefix-resumed** (the default) — a changed sequence additionally
+//!    resumes the mechanism from the previous plan's checkpoint,
+//!    rolling the per-pool fold back to the longest common prefix of
+//!    the processing order and replaying only the divergent suffix
+//!    (`mechanism/resume.rs`).
+//!
+//! Because the round plan is a pure function of the ordered runnable
+//! sequence — and the per-pool fold state after a step prefix is a pure
+//! function of that prefix — all three tiers must yield the
+//! *bit-identical* schedule: same finish times, same round counts, same
+//! utilization trace. The matrix below mirrors the golden scenario
+//! matrix's axes (workload shape × quotas × fleet shape) across
+//! time-stable (FIFO) and time-varying (SRTF/LAS) policies — the latter
+//! shift the runnable sequence almost every round, which the
+//! exact-match memoizer almost never catches but the resume tier does
+//! (asserted: nonzero resumed rounds).
 
 use synergy::cluster::{GpuGen, ServerSpec, TypeSpec};
 use synergy::job::Job;
@@ -68,39 +81,89 @@ fn schedule_bits(r: &SimResult) -> (Vec<(u64, u64)>, usize, u64, Vec<u64>) {
     (finished, r.rounds, r.makespan_s.to_bits(), util)
 }
 
+/// The three planning tiers of one scenario cell.
+enum Tier {
+    Forced,
+    Memoized,
+    Resumed,
+}
+
 #[test]
-fn memoized_and_forced_replan_schedules_are_bit_identical() {
+fn all_three_planning_tiers_are_bit_identical() {
     let (jobs, spec) = loaded_trace(28, 41);
     for policy in ["fifo", "srtf", "las"] {
         for with_quotas in [false, true] {
             for types in [None, Some(tritype())] {
                 let fleet_tag = if types.is_some() { "tritype" } else { "homo" };
-                let cfg = |force: bool| SimConfig {
+                let cfg = |tier: &Tier| SimConfig {
                     n_servers: 2,
                     policy: policy.into(),
                     mechanism: "tune".into(),
                     types: types.clone(),
-                    force_replan: force,
+                    force_replan: matches!(tier, Tier::Forced),
+                    no_resume: matches!(tier, Tier::Memoized),
                     ..Default::default()
                 };
-                let quotas = with_quotas.then(|| spec.quotas());
-                let memo = Simulator::with_quotas(cfg(false), quotas.clone())
-                    .run(jobs.clone());
-                let forced = Simulator::with_quotas(cfg(true), quotas)
-                    .run(jobs.clone());
+                let run = |tier: Tier| {
+                    Simulator::with_quotas(
+                        cfg(&tier),
+                        with_quotas.then(|| spec.quotas()),
+                    )
+                    .run(jobs.clone())
+                };
+                let forced = run(Tier::Forced);
+                let memo = run(Tier::Memoized);
+                let resumed = run(Tier::Resumed);
+                let tag = format!("{policy}/quotas={with_quotas}/{fleet_tag}");
                 assert_eq!(
                     schedule_bits(&memo),
                     schedule_bits(&forced),
-                    "{policy}/quotas={with_quotas}/{fleet_tag}: memoized \
-                     schedule must be bit-identical to forced replans"
+                    "{tag}: memoized schedule must be bit-identical to \
+                     forced replans"
+                );
+                assert_eq!(
+                    schedule_bits(&resumed),
+                    schedule_bits(&forced),
+                    "{tag}: prefix-resumed schedule must be bit-identical \
+                     to forced replans"
                 );
                 assert!(
                     memo.planned_rounds <= forced.planned_rounds,
-                    "{policy}/quotas={with_quotas}/{fleet_tag}: memoization \
-                     may only remove mechanism runs ({} > {})",
+                    "{tag}: memoization may only remove mechanism runs \
+                     ({} > {})",
                     memo.planned_rounds,
                     forced.planned_rounds
                 );
+                // The resume tier changes *how* a replan runs, never
+                // *whether* it runs: identical planned-round counts, and
+                // only the resumed arm reports resumed rounds.
+                assert_eq!(
+                    resumed.planned_rounds, memo.planned_rounds,
+                    "{tag}: resume must not change the replan set"
+                );
+                assert_eq!(forced.resumed_rounds, 0, "{tag}");
+                assert_eq!(memo.resumed_rounds, 0, "{tag}");
+                assert!(
+                    resumed.resumed_rounds <= resumed.planned_rounds,
+                    "{tag}"
+                );
+                assert!(
+                    resumed.plan_steps_reused <= resumed.plan_steps_total,
+                    "{tag}"
+                );
+                if policy != "fifo" {
+                    // Time-varying policies shift the sequence without
+                    // arrival/completion events — exactly the rounds the
+                    // exact-match memoizer misses and resume catches.
+                    assert!(
+                        resumed.resumed_rounds > 0,
+                        "{tag}: SRTF/LAS cells must resume at least once \
+                         (planned {} rounds, reused {}/{} steps)",
+                        resumed.planned_rounds,
+                        resumed.plan_steps_reused,
+                        resumed.plan_steps_total,
+                    );
+                }
             }
         }
     }
@@ -138,4 +201,43 @@ fn memoization_engages_under_steady_load() {
         memo.planned_rounds,
         2 * n + 1
     );
+}
+
+#[test]
+fn resume_works_across_mechanisms_and_reports_reuse() {
+    // Every pool-decomposable mechanism must satisfy the three-tier
+    // parity (OPT keeps the non-resumable default: still bit-identical,
+    // never resumed). SRTF keeps the sequence shifting so checkpoints
+    // actually get consulted.
+    let (jobs, _) = loaded_trace(20, 23);
+    for mechanism in ["proportional", "greedy", "fixed", "tune", "opt"] {
+        let cfg = |force: bool, no_resume: bool| SimConfig {
+            n_servers: 2,
+            policy: "srtf".into(),
+            mechanism: mechanism.into(),
+            force_replan: force,
+            no_resume,
+            ..Default::default()
+        };
+        let forced = Simulator::new(cfg(true, false)).run(jobs.clone());
+        let resumed = Simulator::new(cfg(false, false)).run(jobs.clone());
+        assert_eq!(
+            schedule_bits(&resumed),
+            schedule_bits(&forced),
+            "{mechanism}: resumed tier must match forced replans"
+        );
+        if mechanism == "opt" {
+            assert_eq!(
+                resumed.resumed_rounds, 0,
+                "opt is non-resumable by design"
+            );
+        } else {
+            assert!(
+                resumed.resumed_rounds > 0,
+                "{mechanism}: SRTF churn must hit the resume tier \
+                 ({} planned rounds)",
+                resumed.planned_rounds
+            );
+        }
+    }
 }

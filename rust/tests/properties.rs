@@ -586,3 +586,104 @@ fn prop_index_survives_round_reset_cycles() {
         Ok(())
     });
 }
+
+// ---------------------------------------------------------------------------
+// Prefix-resumable planning (ISSUE 5) — resumed plans are bit-identical
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_prefix_resumed_plan_matches_fresh_plan_bitwise() {
+    // Drive the checkpointing entry point (`Mechanism::plan`) directly
+    // through the resumable lifecycle — plan a sequence, then plan an
+    // arbitrarily edited sequence against the checkpoint — and compare
+    // against the batch path on a pristine fleet: grants *and* the
+    // post-plan fleet state must match bit for bit (the fold state after
+    // any prefix is a pure function of the prefix; rollback restores
+    // recorded bits by assignment).
+    use std::collections::BTreeMap;
+    use synergy::job::JobId as PJobId;
+    use synergy::mechanism::Grant;
+
+    type GrantBits =
+        Vec<(u64, String, u32, u64, u64, Vec<(usize, u32, u64, u64)>)>;
+    fn grants_bits(grants: &BTreeMap<PJobId, Grant>) -> GrantBits {
+        grants
+            .iter()
+            .map(|(id, g)| {
+                (
+                    id.0,
+                    format!("{:?}", g.gen),
+                    g.demand.gpus,
+                    g.demand.cpus.to_bits(),
+                    g.demand.mem_gb.to_bits(),
+                    g.placement
+                        .shares
+                        .iter()
+                        .map(|(&sid, s)| {
+                            (sid, s.gpus, s.cpus.to_bits(), s.mem_gb.to_bits())
+                        })
+                        .collect(),
+                )
+            })
+            .collect()
+    }
+    fn fleet_bits(fleet: &Fleet) -> Vec<(u32, u64, u64)> {
+        fleet
+            .pools
+            .iter()
+            .flat_map(|p| {
+                p.cluster.servers.iter().map(|s| {
+                    (s.free_gpus, s.free_cpus.to_bits(), s.free_mem_gb.to_bits())
+                })
+            })
+            .collect()
+    }
+
+    let spec = ServerSpec::default();
+    let profiler = OptimisticProfiler::noiseless(spec);
+    check("prefix-resumed plan == fresh plan", 25, |g| {
+        let (jobs, sens) = random_jobs(g, &profiler);
+        let reqs = to_requests(&jobs, &sens);
+        let name = g.choose(&["proportional", "greedy", "fixed", "tune"]);
+        let mech = by_name(&name).unwrap();
+        let n_servers = g.int(1, 6);
+
+        let mut fleet = Fleet::homogeneous(spec, n_servers);
+        fleet.enable_journal();
+
+        // Round 1: a random subsequence establishes the checkpoint.
+        let seq1: Vec<JobRequest> =
+            reqs.iter().filter(|_| g.bool()).cloned().collect();
+        let out1 = mech.plan(&mut fleet, &seq1, None);
+
+        // Round 2: an arbitrary edit — random subset plus a rotation of
+        // some tail (drops, insertions and reorders all in one).
+        let mut seq2: Vec<JobRequest> =
+            reqs.iter().filter(|_| g.int(0, 4) > 0).cloned().collect();
+        if seq2.len() > 1 {
+            let cut = g.int(0, seq2.len());
+            seq2[cut..].rotate_left(1);
+        }
+        let out2 = mech.plan(&mut fleet, &seq2, out1.trace);
+        fleet.check_consistency().map_err(|e| format!("{name}: {e}"))?;
+        prop_assert!(
+            out2.steps_reused <= out2.steps_total,
+            "{name}: reused {} of {} steps",
+            out2.steps_reused,
+            out2.steps_total
+        );
+
+        // Fresh reference: the batch driver on a pristine fleet.
+        let mut fresh_fleet = Fleet::homogeneous(spec, n_servers);
+        let fresh = mech.allocate(&mut fresh_fleet, &seq2);
+        prop_assert!(
+            grants_bits(&out2.grants) == grants_bits(&fresh),
+            "{name}: resumed grants diverge from fresh plan"
+        );
+        prop_assert!(
+            fleet_bits(&fleet) == fleet_bits(&fresh_fleet),
+            "{name}: post-plan fleet state diverges from fresh plan"
+        );
+        Ok(())
+    });
+}

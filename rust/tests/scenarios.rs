@@ -17,13 +17,11 @@
 //! regenerate after an intentional behaviour change. See
 //! `tests/golden/README.md` for how to add a scenario.
 
-use std::collections::BTreeMap;
 use synergy::hetero::{GpuGen, HeteroSimConfig, HeteroSimulator, TypeSpec};
 use synergy::job::{Job, TenantId};
-use synergy::metrics::{jains_index, JctStats};
+use synergy::metrics::metrics_json;
 use synergy::sim::{SimConfig, Simulator};
 use synergy::trace::{Split, TraceConfig};
-use synergy::util::json::Json;
 use synergy::workload::{
     AlibabaTraceConfig, AlibabaTraceSource, PhillyTraceConfig,
     PhillyTraceSource, SyntheticSource, TenantQuotas, TenantSpec,
@@ -166,7 +164,7 @@ fn run_scenario(s: &Scenario) -> String {
             s.quotas.clone(),
         );
         let r = sim.run(s.jobs.clone());
-        metrics_json(r.jct_stats(), r.tenant_stats(), r.makespan_s, r.rounds)
+        metrics_json(&r.jct_stats(), &r.tenant_stats(), r.makespan_s, r.rounds, None)
     };
     match s.fleet {
         FleetShape::Homo => {
@@ -180,12 +178,7 @@ fn run_scenario(s: &Scenario) -> String {
                 s.quotas.clone(),
             );
             let r = sim.run(s.jobs.clone());
-            metrics_json(
-                r.jct_stats(),
-                r.tenant_stats(),
-                r.makespan_s,
-                r.rounds,
-            )
+            r.metrics_json(false)
         }
         FleetShape::TwoTier => mixed(vec![
             TypeSpec {
@@ -219,41 +212,10 @@ fn run_scenario(s: &Scenario) -> String {
     }
 }
 
-/// Canonical metrics document: JCT summary + Jain fairness over the
-/// per-tenant average JCTs. Values are rounded to 1 ms so the goldens
-/// are robust to libm ulp differences across hosts while still pinning
-/// the schedule.
-fn metrics_json(
-    stats: JctStats,
-    by_tenant: BTreeMap<TenantId, JctStats>,
-    makespan_s: f64,
-    rounds: usize,
-) -> String {
-    let r3 = |x: f64| (x * 1000.0).round() / 1000.0;
-    let tenant_avgs: Vec<f64> = by_tenant.values().map(|s| s.avg_s).collect();
-    let tenants: Vec<Json> = by_tenant
-        .iter()
-        .map(|(t, s)| {
-            Json::obj(vec![
-                ("tenant", Json::num(t.0 as f64)),
-                ("jobs", Json::num(s.n as f64)),
-                ("avg_jct_s", Json::num(r3(s.avg_s))),
-                ("p99_jct_s", Json::num(r3(s.p99_s))),
-            ])
-        })
-        .collect();
-    Json::obj(vec![
-        ("jobs", Json::num(stats.n as f64)),
-        ("avg_jct_s", Json::num(r3(stats.avg_s))),
-        ("p50_jct_s", Json::num(r3(stats.p50_s))),
-        ("p99_jct_s", Json::num(r3(stats.p99_s))),
-        ("makespan_s", Json::num(r3(makespan_s))),
-        ("rounds", Json::num(rounds as f64)),
-        ("jain_fairness", Json::num(r3(jains_index(&tenant_avgs)))),
-        ("per_tenant", Json::arr(tenants)),
-    ])
-    .encode()
-}
+// The metrics document itself is the shared canonical serializer
+// (`synergy::metrics::metrics_json`, plan stats off): one definition of
+// the golden payload for every front-end, and the plan-stats flag is
+// proven off here — goldens pin the default shape byte-for-byte.
 
 /// Compare `payload` against the checked-in golden, bootstrapping the
 /// file when absent (first toolchain run) or when `UPDATE_GOLDENS` is
