@@ -42,6 +42,8 @@ fn main() {
         variant,
         max_real_s: args.f64("max-real", 300.0),
         quotas: None,
+        telemetry: args.get("telemetry").map(str::to_string),
+        telemetry_timing: false,
     }));
     let l2 = Arc::clone(&leader);
     let trace_for_deploy = jobs.clone();

@@ -14,7 +14,10 @@
 //! mechanism plans at most once per set change, so
 //! `planned_rounds <= arrivals + completions + 1`; and under SRTF
 //! (time-varying keys, where exact-match memoization almost never hits)
-//! the prefix-resume tier engages at least once.
+//! the prefix-resume tier engages at least once. A fourth cell reruns
+//! the FIFO configuration with the ISSUE 6 telemetry recorder attached
+//! and asserts the observer costs < 5% wall time and changes zero
+//! scheduled bytes (`telemetry_overhead` in the JSON).
 //!
 //! Snapshot-design note (ISSUE 5): resume uses an **O(changes) undo
 //! log** (per-pool journal of pre-mutation server counters + placement
@@ -28,6 +31,7 @@
 use std::time::Duration;
 use synergy::cluster::{GpuGen, ServerSpec, TypeSpec};
 use synergy::sim::{SimConfig, SimResult, Simulator};
+use synergy::telemetry::{TelemetryConfig, TelemetryRecorder};
 use synergy::trace::{generate, TraceConfig, SPLIT_DEFAULT};
 use synergy::util::bench::{section, Bench};
 use synergy::util::json::Json;
@@ -169,7 +173,59 @@ fn main() {
         tri_cell.result.planned_rounds
     );
 
-    for c in [&fifo, &srtf, &tri_cell] {
+    section("sim_scale: telemetry overhead (recorder on, FIFO cell rerun)");
+    // Same trace + config as the FIFO cell, with the ISSUE 6 recorder
+    // attached: the delta now is exactly the telemetry hot-path cost
+    // (O(pools + tenants) sampling per round + delta encoding).
+    let telem_trace = generate(&TraceConfig {
+        n_jobs: N_JOBS,
+        split: SPLIT_DEFAULT,
+        multi_gpu: true,
+        jobs_per_hour: Some(LOAD),
+        seed: 512,
+    });
+    let mut telem_last: Option<(SimResult, usize, usize)> = None;
+    let telem_t = bench.iter("sim/512gpu_8k_fifo_tune_telemetry", || {
+        let mut rec = TelemetryRecorder::new(TelemetryConfig::default());
+        let r = Simulator::new(SimConfig {
+            n_servers: N_SERVERS,
+            policy: "fifo".into(),
+            mechanism: "tune".into(),
+            ..Default::default()
+        })
+        .run_with_telemetry(telem_trace.clone(), Some(&mut rec));
+        telem_last = Some((r, rec.n_rounds(), rec.encoded_bytes()));
+    });
+    let (telem_result, telem_rounds, telem_bytes) =
+        telem_last.expect("bench ran at least once");
+    // Zero-scheduled-bytes rule, asserted at evaluation scale too.
+    assert_eq!(
+        telem_result.metrics_json(true),
+        fifo.result.metrics_json(true),
+        "telemetry changed the scheduled bytes at 512 GPUs × 8k jobs"
+    );
+    assert_eq!(telem_rounds, telem_result.rounds);
+    let telem_cell = Cell {
+        name: "sim/512gpu_8k_fifo_tune_telemetry",
+        median_s: telem_t.median.as_secs_f64(),
+        result: telem_result,
+    };
+    let overhead_pct =
+        (telem_cell.median_s / fifo.median_s - 1.0) * 100.0;
+    println!(
+        "telemetry overhead: {:.2}s -> {:.2}s ({overhead_pct:+.2}%), \
+         {telem_bytes} encoded bytes ({:.1} B/round)",
+        fifo.median_s,
+        telem_cell.median_s,
+        telem_bytes as f64 / telem_cell.result.rounds.max(1) as f64,
+    );
+    assert!(
+        overhead_pct < 5.0,
+        "telemetry must stay under 5% rounds/sec overhead, measured \
+         {overhead_pct:.2}%"
+    );
+
+    for c in [&fifo, &srtf, &tri_cell, &telem_cell] {
         let r = &c.result;
         println!(
             "{}: {:.2}s wall, {} rounds ({} full replans / {} resumed / \
@@ -199,6 +255,24 @@ fn main() {
                 cell_json(&fifo),
                 cell_json(&srtf),
                 cell_json(&tri_cell),
+                cell_json(&telem_cell),
+            ]),
+        ),
+        (
+            "telemetry_overhead",
+            Json::obj(vec![
+                ("baseline_cell", Json::str("sim/512gpu_8k_fifo_tune")),
+                ("wall_s_off", Json::num(fifo.median_s)),
+                ("wall_s_on", Json::num(telem_cell.median_s)),
+                ("overhead_pct", Json::num(overhead_pct)),
+                ("encoded_bytes", Json::num(telem_bytes as f64)),
+                (
+                    "bytes_per_round",
+                    Json::num(
+                        telem_bytes as f64
+                            / telem_cell.result.rounds.max(1) as f64,
+                    ),
+                ),
             ]),
         ),
     ])

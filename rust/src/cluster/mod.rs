@@ -272,13 +272,34 @@ impl Placement {
 /// `[0, capacity]`), so `f64::to_bits` is an order-preserving key.
 /// Positions are indices into `Cluster::servers`, which never changes
 /// after construction.
-#[derive(Debug, Clone, Default, PartialEq)]
+#[derive(Debug, Clone, Default)]
 struct FreeIndex {
     by_score: Vec<BTreeSet<(u64, u32)>>,
     by_pos: Vec<BTreeSet<u32>>,
     /// Aggregate free GPUs (exact integer bookkeeping, so
     /// [`Cluster::free_gpus`] is O(1) instead of a server scan).
     free_gpus: u32,
+    /// Aggregate free CPUs — a *telemetry gauge*, maintained by float
+    /// add/subtract and therefore possibly a few ulps off a fresh
+    /// summation. Scheduling never reads it (the scan-based
+    /// [`Cluster::free_cpus`] stays the schedule-visible truth);
+    /// equality checks exclude it.
+    free_cpus: f64,
+    /// Aggregate free memory — telemetry gauge, same caveats as
+    /// `free_cpus`.
+    free_mem_gb: f64,
+}
+
+/// Structural equality only: the float gauge aggregates are maintained
+/// incrementally and may differ in low bits from a freshly built index,
+/// which must not fail [`Cluster::check_index`]'s set comparison (the
+/// gauges get their own tolerance check there).
+impl PartialEq for FreeIndex {
+    fn eq(&self, other: &FreeIndex) -> bool {
+        self.by_score == other.by_score
+            && self.by_pos == other.by_pos
+            && self.free_gpus == other.free_gpus
+    }
 }
 
 impl FreeIndex {
@@ -288,6 +309,8 @@ impl FreeIndex {
             by_score: vec![BTreeSet::new(); buckets],
             by_pos: vec![BTreeSet::new(); buckets],
             free_gpus: 0,
+            free_cpus: 0.0,
+            free_mem_gb: 0.0,
         };
         for (pos, s) in servers.iter().enumerate() {
             idx.attach(s, pos as u32);
@@ -300,6 +323,8 @@ impl FreeIndex {
         self.by_score[g].insert((s.free_score_key(), pos));
         self.by_pos[g].insert(pos);
         self.free_gpus += s.free_gpus;
+        self.free_cpus += s.free_cpus;
+        self.free_mem_gb += s.free_mem_gb;
     }
 
     /// Reset to the all-pristine state (every server fully free).
@@ -311,6 +336,8 @@ impl FreeIndex {
             b.clear();
         }
         self.free_gpus = 0;
+        self.free_cpus = 0.0;
+        self.free_mem_gb = 0.0;
         for (pos, s) in servers.iter().enumerate() {
             self.attach(s, pos as u32);
         }
@@ -327,6 +354,8 @@ impl FreeIndex {
             "server {pos} missing from free index"
         );
         self.free_gpus -= s.free_gpus;
+        self.free_cpus -= s.free_cpus;
+        self.free_mem_gb -= s.free_mem_gb;
     }
 }
 
@@ -425,6 +454,11 @@ pub struct Cluster {
     /// Undo journal (`None` = journaling off, the default — zero cost on
     /// the batch-allocation paths that never resume).
     journal: Option<Journal>,
+    /// Telemetry counter: candidate servers examined by the fit helpers'
+    /// free-capacity-index walks since the last
+    /// [`Cluster::take_fit_walk`]. A `Cell` because the fit helpers take
+    /// `&Cluster`; never read by scheduling.
+    fit_walk: std::cell::Cell<u64>,
 }
 
 impl Cluster {
@@ -468,6 +502,7 @@ impl Cluster {
             index,
             id_bound,
             journal: None,
+            fit_walk: std::cell::Cell::new(0),
         }
     }
 
@@ -499,6 +534,33 @@ impl Cluster {
 
     pub fn free_mem_gb(&self) -> f64 {
         self.servers.iter().map(|s| s.free_mem_gb).sum()
+    }
+
+    /// O(1) free-CPU *telemetry gauge* off the index aggregate. May
+    /// differ from [`Cluster::free_cpus`] by float ulps (incremental
+    /// add/subtract vs fresh summation) — never use it on a scheduling
+    /// path; the per-round utilization samples that goldens pin keep
+    /// reading the scan.
+    pub fn free_cpus_gauge(&self) -> f64 {
+        self.index.free_cpus
+    }
+
+    /// O(1) free-memory telemetry gauge (same caveats as
+    /// [`Cluster::free_cpus_gauge`]).
+    pub fn free_mem_gb_gauge(&self) -> f64 {
+        self.index.free_mem_gb
+    }
+
+    /// Telemetry: count one candidate server examined by a
+    /// free-capacity-index walk.
+    pub(crate) fn note_fit_probe(&self) {
+        self.fit_walk.set(self.fit_walk.get() + 1);
+    }
+
+    /// Telemetry: drain the fit-walk probe counter (candidates examined
+    /// since the last call).
+    pub fn take_fit_walk(&self) -> u64 {
+        self.fit_walk.replace(0)
     }
 
     /// GPU-proportional CPU share for `gpus` GPUs (paper §2: C_g).
@@ -738,6 +800,23 @@ impl Cluster {
             }
         }
         let fresh = FreeIndex::build(&self.servers, self.spec.gpus);
+        // The float gauge aggregates are outside FreeIndex equality
+        // (incremental maintenance drifts by ulps); hold them to a
+        // capacity-scaled tolerance instead.
+        let cpu_tol = 1e-6 * (1.0 + self.total_cpus());
+        let mem_tol = 1e-6 * (1.0 + self.total_mem_gb());
+        if (self.index.free_cpus - fresh.free_cpus).abs() > cpu_tol
+            || (self.index.free_mem_gb - fresh.free_mem_gb).abs() > mem_tol
+        {
+            return Err(format!(
+                "free index gauges diverged: cpus {} vs scan {}, \
+                 mem {} vs scan {}",
+                self.index.free_cpus,
+                fresh.free_cpus,
+                self.index.free_mem_gb,
+                fresh.free_mem_gb
+            ));
+        }
         if fresh == self.index {
             return Ok(());
         }
@@ -1100,6 +1179,43 @@ mod tests {
         corrupted.servers[1].free_gpus = spec().gpus + 1;
         let err = corrupted.check_consistency().unwrap_err();
         assert!(err.contains("exceeds capacity"), "{err}");
+    }
+
+    #[test]
+    fn telemetry_gauges_track_the_scans() {
+        let mut c = Cluster::homogeneous(spec(), 3);
+        assert_eq!(c.free_cpus_gauge(), c.free_cpus());
+        assert_eq!(c.free_mem_gb_gauge(), c.free_mem_gb());
+        // Non-dyadic shares through place/evict: gauges stay within
+        // tolerance of the scans (and check_consistency verifies it).
+        let odd = Share { gpus: 1, cpus: 9.3, mem_gb: 13.7 };
+        for i in 0..3 {
+            c.place(JobId(i), Placement::single(i as usize, odd));
+        }
+        c.evict(JobId(1)).unwrap();
+        assert!((c.free_cpus_gauge() - c.free_cpus()).abs() < 1e-6);
+        assert!((c.free_mem_gb_gauge() - c.free_mem_gb()).abs() < 1e-6);
+        assert!(c.check_consistency().is_ok());
+        // The hard round reset restores the gauges exactly.
+        c.evict_all();
+        assert_eq!(c.free_cpus_gauge(), c.total_cpus());
+        assert_eq!(c.free_mem_gb_gauge(), c.total_mem_gb());
+        // A corrupted gauge is caught even though index equality
+        // excludes it.
+        let mut corrupted = c.clone();
+        corrupted.index.free_cpus += 5.0;
+        let err = corrupted.check_consistency().unwrap_err();
+        assert!(err.contains("gauges diverged"), "{err}");
+    }
+
+    #[test]
+    fn fit_walk_counter_drains() {
+        let c = Cluster::homogeneous(spec(), 2);
+        assert_eq!(c.take_fit_walk(), 0);
+        c.note_fit_probe();
+        c.note_fit_probe();
+        assert_eq!(c.take_fit_walk(), 2, "probes accumulate");
+        assert_eq!(c.take_fit_walk(), 0, "take drains");
     }
 
     #[test]

@@ -39,6 +39,15 @@ pub struct LeaderConfig {
     pub max_real_s: f64,
     /// Tenant GPU quotas for the round planner (None = single tenant).
     pub quotas: Option<TenantQuotas>,
+    /// Write a telemetry run profile (JSONL/CSV by extension) here —
+    /// the same per-round/per-tenant series + plan-stage trace the
+    /// simulator records, off the live round loop. `None` = no recorder
+    /// (zero overhead, unchanged behaviour).
+    pub telemetry: Option<String>,
+    /// Record wall-clock milliseconds per round into the profile.
+    /// Off by default: counter-only profiles stay deterministic in the
+    /// round structure (sim-time stamps are nominal round multiples).
+    pub telemetry_timing: bool,
 }
 
 impl Default for LeaderConfig {
@@ -53,6 +62,8 @@ impl Default for LeaderConfig {
             variant: "tiny".into(),
             max_real_s: 600.0,
             quotas: None,
+            telemetry: None,
+            telemetry_timing: false,
         }
     }
 }
@@ -222,6 +233,14 @@ impl Leader {
 
         let start = Instant::now();
         let mut rounds = 0usize;
+        // Same recorder as the simulator, fed by the live round loop.
+        let mut recorder = self.cfg.telemetry.as_ref().map(|_| {
+            crate::telemetry::TelemetryRecorder::new(
+                crate::telemetry::TelemetryConfig {
+                    timing: self.cfg.telemetry_timing,
+                },
+            )
+        });
         while (next_job.is_some() || !active.is_empty())
             && start.elapsed().as_secs_f64() < self.cfg.max_real_s
         {
@@ -294,6 +313,7 @@ impl Leader {
             let mut round_fleet = Fleet::with_server_ids(spec, &alive_ids);
             let refs: Vec<(&Job, &Sensitivity)> =
                 active.values().map(|j| (j, &contexts[&j.id])).collect();
+            let planned_jobs = refs.len();
             let plan = planner.plan(&mut round_fleet, &refs, now_sim);
 
             // Reconcile leases with workers.
@@ -369,6 +389,91 @@ impl Leader {
                 };
             }
 
+            if let Some(rec) = recorder.as_mut() {
+                use crate::telemetry as tm;
+                // Counters only by default. Time stamps are *nominal*
+                // (round index × round length × time_scale), not wall
+                // clock, so the recorded round structure is a pure
+                // function of the schedule; wall time goes into
+                // `wall_ms` only under `telemetry_timing`.
+                let nominal_s = rounds as f64
+                    * self.cfg.round_real_s
+                    * self.cfg.time_scale;
+                let mut pools: Vec<tm::PoolCounters> = Vec::new();
+                let mut fit_walk = 0u64;
+                for p in &round_fleet.pools {
+                    pools.push(tm::PoolCounters {
+                        gen: p.gen,
+                        free_gpus: p.cluster.free_gpus(),
+                        total_gpus: p.cluster.total_gpus(),
+                        free_cpus: p.cluster.free_cpus_gauge(),
+                        total_cpus: p.cluster.total_cpus(),
+                        free_mem_gb: p.cluster.free_mem_gb_gauge(),
+                        total_mem_gb: p.cluster.total_mem_gb(),
+                    });
+                    fit_walk += p.cluster.take_fit_walk();
+                }
+                let mut tenants: BTreeMap<TenantId, tm::TenantCounters> =
+                    BTreeMap::new();
+                for job in active.values() {
+                    let e = tenants.entry(job.tenant).or_insert(
+                        tm::TenantCounters {
+                            tenant: job.tenant,
+                            running: 0,
+                            pending: 0,
+                            admitted_gpus: 0,
+                            spilled_gpus: 0,
+                        },
+                    );
+                    if job.state == JobState::Running {
+                        e.running += 1;
+                        e.admitted_gpus += job.gpus;
+                    } else {
+                        e.pending += 1;
+                    }
+                }
+                let running =
+                    tenants.values().map(|t| t.running).sum::<u32>();
+                let queued =
+                    tenants.values().map(|t| t.pending).sum::<u32>();
+                let admitted_gpus =
+                    tenants.values().map(|t| t.admitted_gpus).sum::<u32>();
+                rec.record_round(&tm::RoundSample {
+                    round: rounds as u64,
+                    time_ms: tm::milli(nominal_s),
+                    queued,
+                    running,
+                    admitted_gpus,
+                    spilled_gpus: 0,
+                    free_gpus: pools.iter().map(|p| p.free_gpus).sum(),
+                    total_gpus: pools.iter().map(|p| p.total_gpus).sum(),
+                    free_cpus: pools.iter().map(|p| p.free_cpus).sum(),
+                    total_cpus: pools.iter().map(|p| p.total_cpus).sum(),
+                    free_mem_gb: pools
+                        .iter()
+                        .map(|p| p.free_mem_gb)
+                        .sum(),
+                    total_mem_gb: pools
+                        .iter()
+                        .map(|p| p.total_mem_gb)
+                        .sum(),
+                    wall_ms: start.elapsed().as_millis() as i64,
+                    pools,
+                    tenants: tenants.values().copied().collect(),
+                });
+                // The live planner replans from scratch every round:
+                // always a full-tier plan over the active set.
+                rec.record_plan(&tm::PlanEvent {
+                    round: rounds as u64,
+                    tier: tm::PlanTier::Full,
+                    steps_total: planned_jobs as u64,
+                    steps_reused: 0,
+                    rollback_depth: 0,
+                    fit_walk,
+                    pools: Vec::new(),
+                });
+            }
+
             if std::env::var_os("SYNERGY_DEPLOY_DEBUG").is_some() {
                 eprintln!(
                     "[leader] round={} now_sim={:.0} active={} grants={} \
@@ -388,6 +493,13 @@ impl Leader {
         // Shutdown.
         for s in &mut senders {
             let _ = s.send(&Message::Shutdown);
+        }
+        if let (Some(path), Some(rec)) = (&self.cfg.telemetry, &recorder) {
+            crate::util::fsx::write_creating(
+                std::path::Path::new(path),
+                rec.render_for_path(path).as_bytes(),
+            )
+            .map_err(|e| anyhow!("telemetry: {e}"))?;
         }
         let makespan_sim_s =
             start.elapsed().as_secs_f64() * self.cfg.time_scale;

@@ -80,6 +80,12 @@ pub struct HeteroSimResult {
     /// Planned rounds that resumed from the previous plan's checkpoint
     /// (prefix-resume tier; shared-core accounting).
     pub resumed_rounds: usize,
+    /// Total per-job planning steps across all planned rounds
+    /// (shared-core accounting).
+    pub plan_steps_total: usize,
+    /// Of `plan_steps_total`, the steps served from checkpointed
+    /// prefixes.
+    pub plan_steps_reused: usize,
     pub profiling_minutes: f64,
     /// Full per-job records (tenant-tagged), from the shared core.
     pub finished: Vec<FinishedJob>,
@@ -95,6 +101,8 @@ impl HeteroSimResult {
             rounds: r.rounds,
             planned_rounds: r.planned_rounds,
             resumed_rounds: r.resumed_rounds,
+            plan_steps_total: r.plan_steps_total,
+            plan_steps_reused: r.plan_steps_reused,
             profiling_minutes: r.profiling_minutes,
             finished: r.finished,
             utilization: r.utilization,
@@ -111,6 +119,32 @@ impl HeteroSimResult {
         let pairs: Vec<(TenantId, f64)> =
             self.finished.iter().map(|f| (f.tenant, f.jct_s)).collect();
         per_tenant_stats(&pairs)
+    }
+
+    /// Round-planning summary — same accounting as
+    /// [`SimResult::plan_summary`].
+    pub fn plan_summary(&self) -> crate::metrics::PlanSummary {
+        crate::metrics::PlanSummary {
+            planned_rounds: self.planned_rounds,
+            resumed_rounds: self.resumed_rounds,
+            reused_steps: self.plan_steps_reused,
+            total_steps: self.plan_steps_total,
+        }
+    }
+
+    /// The canonical metrics document — byte-compatible with
+    /// [`SimResult::metrics_json`], so `synergy hetero --json` and
+    /// `synergy sim --json` emit the same payload shape. `plan_stats`
+    /// (default off) appends the round-planning split.
+    pub fn metrics_json(&self, plan_stats: bool) -> String {
+        let summary = self.plan_summary();
+        crate::metrics::metrics_json(
+            &self.jct_stats(),
+            &self.tenant_stats(),
+            self.makespan_s,
+            self.rounds,
+            plan_stats.then_some(&summary),
+        )
     }
 }
 

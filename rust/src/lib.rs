@@ -41,6 +41,7 @@
 //! | [`trace`] | Philly-derived synthetic workload generation (paper §5.1) |
 //! | [`workload`] | pluggable trace ingestion: `WorkloadSource` trait, Philly CSV + Alibaba readers, tenants & quota admission, streaming replay |
 //! | [`metrics`] | JCT/makespan/utilization accounting, per-tenant fairness |
+//! | [`telemetry`] | deterministic run profiles: delta-compressed per-round/per-pool/per-tenant series + plan-stage trace (default off) |
 //! | [`coordinator`] | the round loop tying everything together |
 //! | [`runtime`] | PJRT client: load HLO-text artifacts, run train steps |
 //! | [`deploy`] | leader/worker cluster over TCP running real jobs |
@@ -61,6 +62,7 @@ pub mod policy;
 pub mod profiler;
 pub mod runtime;
 pub mod sim;
+pub mod telemetry;
 pub mod trace;
 pub mod util;
 pub mod workload;

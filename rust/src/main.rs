@@ -6,11 +6,15 @@
 //! synergy sim       --policy srtf --mechanism tune --servers 16 \
 //!                   --jobs 1000 --load 8 --split 20,70,10 [--multi-gpu]
 //!                   [--tenants a:2,b:1]
+//!                   [--telemetry run.jsonl|run.csv] [--telemetry-timing]
+//!                   # per-round/per-pool/per-tenant series + plan trace;
+//!                   # counters only unless --telemetry-timing
 //! synergy sim       --trace trace.csv --format philly|alibaba \
 //!                   [--load-scale 2 --duration-min 60 --duration-max 1e5]
 //!                   [--gpu-cap 16 --max-jobs 500 --keep-failed]
 //! synergy sweep     --policies fifo,srtf --mechanisms proportional,tune \
 //!                   --threads 8 [--out report.txt] [--plan-stats]
+//!                   [--telemetry-dir telem/]  # one <policy>_<mechanism>.jsonl per cell
 //!                   # deterministic parallel grid; byte-identical to --threads 1
 //! synergy compare   --policies fifo,srtf --mechanisms proportional,tune ...
 //! synergy profile   --model resnet18 --gpus 1
@@ -32,8 +36,10 @@ use synergy::metrics::jains_index;
 use synergy::perf::PerfModel;
 use synergy::profiler::OptimisticProfiler;
 use synergy::sim::{SimConfig, Simulator};
+use synergy::telemetry::{TelemetryConfig, TelemetryRecorder};
 use synergy::trace::{generate, Split, TraceConfig};
 use synergy::util::cli::Args;
+use synergy::util::fsx;
 use synergy::workload::{
     AlibabaTraceConfig, AlibabaTraceSource, PhillyTraceConfig,
     PhillyTraceSource, SyntheticSource, TenantQuotas, TenantSpec,
@@ -248,8 +254,24 @@ fn cmd_simulate(args: &Args) {
         sim_config(args, &mechanism, &policy),
         workload.quotas.clone(),
     );
+    // Telemetry is strictly opt-in: without --telemetry no recorder
+    // exists and the run is byte-for-byte the pre-telemetry one.
+    let telemetry_path = args.get("telemetry").map(str::to_string);
+    let mut recorder = telemetry_path.as_ref().map(|_| {
+        TelemetryRecorder::new(TelemetryConfig {
+            timing: args.flag("telemetry-timing"),
+        })
+    });
     let t0 = std::time::Instant::now();
-    let result = sim.run(workload.jobs);
+    let result = sim.run_with_telemetry(workload.jobs, recorder.as_mut());
+    if let (Some(path), Some(rec)) = (&telemetry_path, &recorder) {
+        fsx::write_or_exit(path, &rec.render_for_path(path), "telemetry");
+        eprintln!(
+            "telemetry: {} rounds, {} plan events -> {path}",
+            rec.n_rounds(),
+            rec.n_plan_events()
+        );
+    }
     if args.flag("json") {
         // Canonical metrics document; plan stats are opt-in so the
         // default payload matches the golden scenario shape exactly.
@@ -313,6 +335,12 @@ fn cmd_sweep(args: &Args) {
         .collect();
     let workload = workload_from_args(args);
     let plan_stats = args.flag("plan-stats");
+    // Per-cell telemetry profiles: each cell records independently, so
+    // the files — like the report — are byte-identical for any thread
+    // count (counters only; --telemetry-timing adds wall-clock, which
+    // CI never diffs).
+    let telemetry_dir = args.get("telemetry-dir").map(str::to_string);
+    let telemetry_timing = args.flag("telemetry-timing");
 
     struct CellSpec {
         policy: String,
@@ -334,7 +362,8 @@ fn cmd_sweep(args: &Args) {
 
     let t0 = std::time::Instant::now();
     let next = AtomicUsize::new(0);
-    let results: Vec<Mutex<Option<String>>> =
+    // Per cell: (metrics line, rendered telemetry profile if requested).
+    let results: Vec<Mutex<Option<(String, Option<String>)>>> =
         cells.iter().map(|_| Mutex::new(None)).collect();
     std::thread::scope(|scope| {
         for _ in 0..threads {
@@ -348,8 +377,19 @@ fn cmd_sweep(args: &Args) {
                     sim_config(args, &cell.mechanism, &cell.policy),
                     workload.quotas.clone(),
                 );
-                let r = sim.run(workload.jobs.clone());
-                *results[i].lock().unwrap() = Some(r.metrics_json(plan_stats));
+                let mut recorder = telemetry_dir.as_ref().map(|_| {
+                    TelemetryRecorder::new(TelemetryConfig {
+                        timing: telemetry_timing,
+                    })
+                });
+                let r = sim.run_with_telemetry(
+                    workload.jobs.clone(),
+                    recorder.as_mut(),
+                );
+                *results[i].lock().unwrap() = Some((
+                    r.metrics_json(plan_stats),
+                    recorder.map(|rec| rec.to_jsonl()),
+                ));
             });
         }
     });
@@ -360,7 +400,7 @@ fn cmd_sweep(args: &Args) {
     let mut report = String::new();
     report.push_str(&format!("sweep cells={}\n", cells.len()));
     for (cell, slot) in cells.iter().zip(results) {
-        let metrics = slot
+        let (metrics, telemetry) = slot
             .into_inner()
             .unwrap()
             .expect("every sweep cell produces a result");
@@ -368,10 +408,17 @@ fn cmd_sweep(args: &Args) {
             "cell policy={} mechanism={} {metrics}\n",
             cell.policy, cell.mechanism
         ));
+        if let (Some(dir), Some(profile)) = (&telemetry_dir, telemetry) {
+            // Fixed cell order + deterministic recorder contents: the
+            // per-cell files are diffable across thread counts.
+            let path =
+                format!("{dir}/{}_{}.jsonl", cell.policy, cell.mechanism);
+            fsx::write_or_exit(&path, &profile, "sweep telemetry");
+        }
     }
     match args.get("out") {
         Some(path) => {
-            std::fs::write(path, &report).expect("write sweep report");
+            fsx::write_or_exit(path, &report, "sweep report");
             eprintln!(
                 "wrote {} cells to {path} ({} threads, {:?})",
                 cells.len(),
@@ -480,7 +527,8 @@ fn cmd_models() {
 /// `synergy hetero --mechanism het-tune --policy srtf --machines 8 \
 ///     --jobs 500 --load 6 --split 30,50,20 [--multi-gpu]
 ///     [--types k80:4,p100:8,v100:8]
-///     [--trace x.csv --format philly|alibaba] [--tenants a:2,b:1]`
+///     [--trace x.csv --format philly|alibaba] [--tenants a:2,b:1]
+///     [--json [--plan-stats]]`
 ///
 /// Builds a mixed-generation fleet — `--types gen:count,...` for an
 /// arbitrary mix, or the default two-generation split (`--machines`
@@ -541,6 +589,12 @@ fn cmd_hetero(args: &Args) {
     );
     let t0 = std::time::Instant::now();
     let r = sim.run(workload.jobs);
+    if args.flag("json") {
+        // Same canonical payload as `synergy sim --json` (plan stats
+        // opt-in via --plan-stats, exactly like the homogeneous path).
+        println!("{}", r.metrics_json(args.flag("plan-stats")));
+        return;
+    }
     let s = r.jct_stats();
     println!(
         "{mechanism}: jobs={} avg_jct={:.2}h p99={:.2}h makespan={:.2}h \
@@ -580,7 +634,7 @@ fn cmd_trace(args: &Args) {
     let doc = Json::arr(arr).encode();
     match args.get("out") {
         Some(path) => {
-            std::fs::write(path, doc).expect("write trace");
+            fsx::write_or_exit(path, &doc, "trace");
             println!("wrote {} jobs to {path}", workload.jobs.len());
         }
         None => println!("{doc}"),
@@ -602,6 +656,8 @@ fn cmd_leader(args: &Args) {
         variant: args.get_or("variant", "tiny").into(),
         max_real_s: args.f64("max-real", 600.0),
         quotas,
+        telemetry: args.get("telemetry").map(str::to_string),
+        telemetry_timing: args.flag("telemetry-timing"),
     };
     let leader = Leader::new(cfg);
     match leader.run_stream(source) {

@@ -63,7 +63,9 @@ pub use fixed::Fixed;
 pub use greedy::Greedy;
 pub use opt::{Opt, OptAllocation};
 pub use proportional::Proportional;
-pub use resume::{PlanOutcome, PlanSession, PlanTrace, PoolPlan};
+pub use resume::{
+    PlanOutcome, PlanSession, PlanTrace, PoolPlan, PoolPlanStats,
+};
 pub use tune::{PlacementStrategy, Tune, VictimStrategy};
 
 pub(crate) use resume::{plan_resumable, run_pool, PoolAlg};
@@ -172,6 +174,8 @@ pub trait Mechanism: Send + Sync {
             trace: None,
             steps_total: 0,
             steps_reused: 0,
+            rollback_depth: 0,
+            pool_stats: Vec::new(),
         }
     }
 }
@@ -379,6 +383,7 @@ pub fn best_fit(cluster: &Cluster, demand: &DemandVector) -> Option<Placement> {
         mem_gb: demand.mem_gb,
     };
     for s in cluster.servers_by_fullness(demand.gpus) {
+        cluster.note_fit_probe();
         if s.fits(&share) {
             return Some(Placement::single(s.id, share));
         }
@@ -448,6 +453,7 @@ pub fn multi_server_fit(
         if remaining == 0 {
             break;
         }
+        cluster.note_fit_probe();
         // How many GPUs can this server host given proportional CPU/mem?
         let by_cpu = if per_gpu_cpu > 0.0 {
             (s.free_cpus / per_gpu_cpu + 1e-9).floor() as u32
@@ -484,6 +490,7 @@ pub fn first_fit(cluster: &Cluster, demand: &DemandVector) -> Option<Placement> 
         mem_gb: demand.mem_gb,
     };
     for s in cluster.servers_by_position(demand.gpus) {
+        cluster.note_fit_probe();
         if s.fits(&share) {
             return Some(Placement::single(s.id, share));
         }

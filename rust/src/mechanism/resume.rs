@@ -272,6 +272,17 @@ pub struct PlanTrace {
     pools: Vec<PoolTrace>,
 }
 
+/// Per-pool resume accounting for one plan (telemetry: how much of each
+/// pool's placement fold was served from the checkpoint vs replayed).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolPlanStats {
+    /// Steps reused from the checkpointed prefix (the whole fold for an
+    /// entirely unchanged pool).
+    pub reused: usize,
+    /// Steps replayed past the common prefix.
+    pub replayed: usize,
+}
+
 /// The outcome of one planning round.
 pub struct PlanOutcome {
     pub grants: BTreeMap<JobId, Grant>,
@@ -282,6 +293,12 @@ pub struct PlanOutcome {
     pub steps_total: usize,
     /// Steps served from the checkpointed prefix instead of replayed.
     pub steps_reused: usize,
+    /// Cluster undo-journal entries rolled back across pools to reach
+    /// the common prefixes (0 on full replans and batch fallbacks).
+    pub rollback_depth: usize,
+    /// Per-pool reuse/replay split, aligned with `fleet.pools` (empty
+    /// from non-resumable mechanisms and batch fallbacks).
+    pub pool_stats: Vec<PoolPlanStats>,
 }
 
 fn common_prefix(a: &[JobId], b: &[JobId]) -> usize {
@@ -309,6 +326,8 @@ pub(crate) fn plan_resumable<M: Mechanism + ?Sized>(
             trace: None,
             steps_total: 0,
             steps_reused: 0,
+            rollback_depth: 0,
+            pool_stats: Vec::new(),
         };
     }
 
@@ -335,8 +354,10 @@ pub(crate) fn plan_resumable<M: Mechanism + ?Sized>(
 
     // Phase 2+3: per-pool placement folds, resumed where prefixes match.
     let mut pools_out: Vec<PoolTrace> = Vec::with_capacity(n_pools);
+    let mut pool_stats: Vec<PoolPlanStats> = Vec::with_capacity(n_pools);
     let mut steps_total = 0usize;
     let mut steps_reused = 0usize;
+    let mut rollback_depth = 0usize;
     for (pool, prev_pool) in fleet.pools.iter_mut().zip(prev_pools) {
         let gen = pool.gen;
         let spec = pool.cluster.spec;
@@ -353,12 +374,17 @@ pub(crate) fn plan_resumable<M: Mechanism + ?Sized>(
                 // pass all reused verbatim (deterministic finish over an
                 // identical fold state reproduces itself).
                 steps_reused += t.steps.len();
+                pool_stats.push(PoolPlanStats {
+                    reused: t.steps.len(),
+                    replayed: 0,
+                });
                 pools_out.push(t);
                 continue;
             }
             Some(mut t) => {
                 let lcp = common_prefix(&t.steps, &new_steps);
                 let (cluster_mark, grant_mark) = t.marks[lcp];
+                rollback_depth += cluster.journal_mark() - cluster_mark;
                 cluster.rollback_journal_to(cluster_mark);
                 t.plan.rollback_to(grant_mark);
                 t.marks.truncate(lcp + 1);
@@ -377,6 +403,10 @@ pub(crate) fn plan_resumable<M: Mechanism + ?Sized>(
             marks.push((cluster.journal_mark(), plan.mark()));
         }
         alg.finish_pool(cluster, &mut plan, &reqs);
+        pool_stats.push(PoolPlanStats {
+            reused: lcp,
+            replayed: new_steps.len() - lcp,
+        });
         pools_out.push(PoolTrace { steps: new_steps, marks, plan });
     }
 
@@ -399,5 +429,7 @@ pub(crate) fn plan_resumable<M: Mechanism + ?Sized>(
         trace: Some(PlanTrace { pools: pools_out }),
         steps_total,
         steps_reused,
+        rollback_depth,
+        pool_stats,
     }
 }

@@ -86,6 +86,10 @@
 use crate::job::{Job, JobArena, JobId, JobState, TenantId};
 use crate::metrics::{per_tenant_stats, JctStats, UtilSample, UtilizationLog};
 use crate::policy::{PolicyJobView, SchedulingPolicy};
+use crate::telemetry::{
+    milli, PlanEvent, PlanTier, PoolCounters, RoundSample,
+    TelemetryRecorder, TenantCounters,
+};
 use crate::workload::{admission, AdmissionJob, TenantQuotas};
 use std::collections::{BTreeMap, BinaryHeap};
 
@@ -145,8 +149,10 @@ impl RoundRates {
 }
 
 /// Statistics of one planning round, as reported by
-/// [`ClusterModel::place_round`] and aggregated into [`SimResult`].
-#[derive(Debug, Clone, Copy, Default)]
+/// [`ClusterModel::place_round`] and aggregated into [`SimResult`]
+/// (and, when a [`crate::telemetry::TelemetryRecorder`] is attached,
+/// into one plan-stage trace event per round).
+#[derive(Debug, Clone, Default)]
 pub struct PlanStats {
     /// Whether any planning step was served from the previous plan's
     /// checkpoint instead of replayed (prefix resume engaged).
@@ -156,6 +162,17 @@ pub struct PlanStats {
     pub steps_total: usize,
     /// Steps reused from the checkpointed prefix.
     pub steps_reused: usize,
+    /// Cluster undo-journal entries rolled back to reach the reused
+    /// prefixes (0 on full replans, batch fallbacks, and memoized
+    /// rounds).
+    pub rollback_depth: usize,
+    /// Fit-index probes the mechanism walked for this plan (drained
+    /// from the per-pool cluster counters; 0 when the topology does not
+    /// track them).
+    pub fit_walk: usize,
+    /// Per-pool (reused, replayed) step split, pool order (empty from
+    /// non-resumable mechanisms and batch fallbacks).
+    pub pool_stats: Vec<crate::mechanism::PoolPlanStats>,
 }
 
 /// What a topology must provide to the core loop. Implementations keep
@@ -201,6 +218,14 @@ pub trait ClusterModel {
 
     /// One utilization sample of the deployed round.
     fn utilization(&self, now: f64, arena: &JobArena) -> UtilSample;
+
+    /// Append one O(1) counter snapshot per type pool to `out`
+    /// (telemetry only — must read incremental aggregates, never fresh
+    /// scans, and must never influence scheduling). The default reports
+    /// no pools; called only when a recorder is attached.
+    fn pool_counters(&self, out: &mut Vec<crate::telemetry::PoolCounters>) {
+        out.clear();
+    }
 }
 
 /// An event in the simulation queue.
@@ -455,7 +480,44 @@ pub fn run_events<M: ClusterModel + ?Sized>(
     policy: &dyn SchedulingPolicy,
     quotas: Option<&TenantQuotas>,
     cfg: &CoreConfig,
+    jobs: Vec<Job>,
+) -> SimResult {
+    run_events_recorded(model, policy, quotas, cfg, jobs, None)
+}
+
+/// One [`TenantCounters`] slot per tenant, keyed deterministically.
+fn tenant_entry(
+    map: &mut BTreeMap<TenantId, TenantCounters>,
+    t: TenantId,
+) -> &mut TenantCounters {
+    map.entry(t).or_insert(TenantCounters {
+        tenant: t,
+        running: 0,
+        pending: 0,
+        admitted_gpus: 0,
+        spilled_gpus: 0,
+    })
+}
+
+/// [`run_events`] with an optional [`TelemetryRecorder`] attached.
+///
+/// With `telemetry: None` this *is* `run_events`. With a recorder, every
+/// executed round appends one [`RoundSample`] (cluster-wide + per-pool +
+/// per-tenant counters) and one [`PlanEvent`] (which planning tier served
+/// the round, step/rollback/fit-walk accounting). Recording is strictly
+/// read-only on the schedule: it samples incremental aggregates after
+/// the round is deployed, so the returned [`SimResult`] is bit-identical
+/// with the recorder on or off (pinned by `tests/telemetry.rs`).
+/// Wall-clock time is sampled only when the recorder was built with
+/// [`crate::telemetry::TelemetryConfig::timing`] — deterministic runs
+/// carry counters and sim-time only.
+pub fn run_events_recorded<M: ClusterModel + ?Sized>(
+    model: &mut M,
+    policy: &dyn SchedulingPolicy,
+    quotas: Option<&TenantQuotas>,
+    cfg: &CoreConfig,
     mut jobs: Vec<Job>,
+    mut telemetry: Option<&mut TelemetryRecorder>,
 ) -> SimResult {
     jobs.sort_by(|a, b| {
         a.arrival_s.total_cmp(&b.arrival_s).then(a.id.cmp(&b.id))
@@ -493,7 +555,23 @@ pub fn run_events<M: ClusterModel + ?Sized>(
     let mut have_plan = false;
     let mut done: Vec<u32> = Vec::new();
 
+    // Telemetry state. Zero-cost when no recorder is attached: the
+    // buffers stay empty and every recording block is skipped.
+    let recording = telemetry.is_some();
+    let wall_start = telemetry
+        .as_ref()
+        .filter(|r| r.config().timing)
+        .map(|_| std::time::Instant::now());
+    let mut pools_buf: Vec<PoolCounters> = Vec::new();
+    let mut tenants_buf: BTreeMap<TenantId, TenantCounters> = BTreeMap::new();
+    // Admission counters carry across fast-forwarded rounds (no fresh
+    // admission pass ran, so the deployed split is the last computed one).
+    let mut last_admitted: BTreeMap<TenantId, u32> = BTreeMap::new();
+    let mut last_spilled: BTreeMap<TenantId, u32> = BTreeMap::new();
+    let mut last_plan_steps = 0usize;
+
     while finished.len() < n_total && now < cfg.max_sim_s {
+        let mut planned_this_round: Option<PlanStats> = None;
         // Fire arrival events due now (profiling happens on arrival).
         while let Some(idx) = queue.pop_arrival_due(now + 1e-9, rounds) {
             profiling_minutes +=
@@ -534,6 +612,22 @@ pub fn run_events<M: ClusterModel + ?Sized>(
             runnable.extend(
                 outcome.positions.iter().map(|&p| ordered_idx[p]),
             );
+            if recording {
+                // The quota-free fast path skips per-tenant bookkeeping;
+                // rebuild the admitted split here so the hot loop never
+                // pays for it when telemetry is off.
+                if quotas.is_some() {
+                    last_admitted.clone_from(&outcome.gpus_by_tenant);
+                } else {
+                    last_admitted.clear();
+                    for &p in &outcome.positions {
+                        *last_admitted
+                            .entry(ordered[p].tenant)
+                            .or_insert(0) += ordered[p].gpus;
+                    }
+                }
+                last_spilled.clone_from(&outcome.spilled_gpus_by_tenant);
+            }
 
             if cfg.force_replan || !have_plan || runnable != planned_runnable
             {
@@ -547,6 +641,8 @@ pub fn run_events<M: ClusterModel + ?Sized>(
                 }
                 plan_steps_total += stats.steps_total;
                 plan_steps_reused += stats.steps_reused;
+                last_plan_steps = stats.steps_total;
+                planned_this_round = Some(stats);
             }
             // Deploy the (possibly memoized) plan. Idempotent: memoized
             // rounds re-apply the identical rates.
@@ -626,7 +722,96 @@ pub fn run_events<M: ClusterModel + ?Sized>(
         }
 
         // Sample utilization once per executed round.
-        util.record(model.utilization(now, &arena));
+        let sample = model.utilization(now, &arena);
+        if let Some(rec) = telemetry.as_deref_mut() {
+            // Per-pool counters off the incremental aggregates (O(pools),
+            // no fresh scans); fleet-wide figures are their sums.
+            model.pool_counters(&mut pools_buf);
+            let mut free_gpus = 0u32;
+            let mut total_gpus = 0u32;
+            let mut free_cpus = 0.0f64;
+            let mut total_cpus = 0.0f64;
+            let mut free_mem_gb = 0.0f64;
+            let mut total_mem_gb = 0.0f64;
+            for p in &pools_buf {
+                free_gpus += p.free_gpus;
+                total_gpus += p.total_gpus;
+                free_cpus += p.free_cpus;
+                total_cpus += p.total_cpus;
+                free_mem_gb += p.free_mem_gb;
+                total_mem_gb += p.total_mem_gb;
+            }
+            tenants_buf.clear();
+            for j in arena.active_jobs() {
+                let e = tenant_entry(&mut tenants_buf, j.tenant);
+                if j.state == JobState::Running {
+                    e.running += 1;
+                } else {
+                    e.pending += 1;
+                }
+            }
+            for (&t, &g) in &last_admitted {
+                tenant_entry(&mut tenants_buf, t).admitted_gpus = g;
+            }
+            for (&t, &g) in &last_spilled {
+                tenant_entry(&mut tenants_buf, t).spilled_gpus = g;
+            }
+            let round_sample = RoundSample {
+                round: rounds as u64,
+                time_ms: milli(now),
+                queued: sample.queued_jobs as u32,
+                running: sample.running_jobs as u32,
+                admitted_gpus: last_admitted.values().sum(),
+                spilled_gpus: last_spilled.values().sum(),
+                free_gpus,
+                total_gpus,
+                free_cpus,
+                total_cpus,
+                free_mem_gb,
+                total_mem_gb,
+                wall_ms: wall_start
+                    .map_or(0, |s| s.elapsed().as_millis() as i64),
+                pools: std::mem::take(&mut pools_buf),
+                tenants: tenants_buf.values().copied().collect(),
+            };
+            rec.record_round(&round_sample);
+            pools_buf = round_sample.pools;
+
+            // One plan-stage event per round: which tier served it.
+            let ev = match planned_this_round.take() {
+                Some(stats) => PlanEvent {
+                    round: rounds as u64,
+                    tier: if stats.resumed {
+                        PlanTier::Resumed
+                    } else {
+                        PlanTier::Full
+                    },
+                    steps_total: stats.steps_total as u64,
+                    steps_reused: stats.steps_reused as u64,
+                    rollback_depth: stats.rollback_depth as u64,
+                    fit_walk: stats.fit_walk as u64,
+                    pools: stats
+                        .pool_stats
+                        .iter()
+                        .map(|p| (p.reused as u64, p.replayed as u64))
+                        .collect(),
+                },
+                // No mechanism run this round: served verbatim from the
+                // memoized plan (or fast-forwarded past planning) — the
+                // whole cached plan is the reused prefix.
+                None => PlanEvent {
+                    round: rounds as u64,
+                    tier: PlanTier::Memoized,
+                    steps_total: last_plan_steps as u64,
+                    steps_reused: last_plan_steps as u64,
+                    rollback_depth: 0,
+                    fit_walk: 0,
+                    pools: Vec::new(),
+                },
+            };
+            rec.record_plan(&ev);
+        }
+        util.record(sample);
 
         rounds += 1;
         // Jump straight to the next arrival event when idle. The round

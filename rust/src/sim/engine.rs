@@ -11,8 +11,8 @@
 //! but a `SimConfig` with `types` set — there is no second engine.
 
 use super::core::{
-    run_events, utilization_sample, ClusterModel, CoreConfig, PlanStats,
-    RoundRates, SimResult,
+    run_events_recorded, utilization_sample, ClusterModel, CoreConfig,
+    PlanStats, RoundRates, SimResult,
 };
 use crate::cluster::{Fleet, GpuGen, ServerSpec, TypeSpec};
 use crate::coordinator::{policy_view_with_free, round_start_free};
@@ -259,10 +259,22 @@ impl ClusterModel for FleetModel {
                 );
             }
         }
+        // Drain the per-pool fit-walk counters unconditionally so the
+        // cluster state is identical whether or not a telemetry recorder
+        // consumes the figure.
+        let fit_walk: u64 = self
+            .fleet
+            .pools
+            .iter()
+            .map(|p| p.cluster.take_fit_walk())
+            .sum();
         PlanStats {
             resumed: outcome.steps_reused > 0,
             steps_total: outcome.steps_total,
             steps_reused: outcome.steps_reused,
+            rollback_depth: outcome.rollback_depth,
+            fit_walk: fit_walk as usize,
+            pool_stats: outcome.pool_stats,
         }
     }
 
@@ -275,6 +287,28 @@ impl ClusterModel for FleetModel {
             1.0 - self.fleet.free_mem_gb() / self.fleet.total_mem_gb(),
             self.fleet.total_cpus(),
         )
+    }
+
+    fn pool_counters(
+        &self,
+        out: &mut Vec<crate::telemetry::PoolCounters>,
+    ) {
+        // O(pools): free figures come from the incrementally-maintained
+        // index (GPU count + CPU/mem gauges), totals from the spec
+        // arithmetic. No per-server scan — telemetry sampling must not
+        // change the hot path's complexity.
+        out.clear();
+        for p in &self.fleet.pools {
+            out.push(crate::telemetry::PoolCounters {
+                gen: p.gen,
+                free_gpus: p.cluster.free_gpus(),
+                total_gpus: p.cluster.total_gpus(),
+                free_cpus: p.cluster.free_cpus_gauge(),
+                total_cpus: p.cluster.total_cpus(),
+                free_mem_gb: p.cluster.free_mem_gb_gauge(),
+                total_mem_gb: p.cluster.total_mem_gb(),
+            });
+        }
     }
 }
 
@@ -306,10 +340,21 @@ impl Simulator {
     /// Run a trace to completion (or `max_sim_s`) through the shared
     /// event-driven core.
     pub fn run(&self, jobs: Vec<Job>) -> SimResult {
+        self.run_with_telemetry(jobs, None)
+    }
+
+    /// [`Simulator::run`] with an optional telemetry recorder attached
+    /// (per-round/per-pool/per-tenant series + plan-stage trace). The
+    /// schedule is bit-identical with the recorder on or off.
+    pub fn run_with_telemetry(
+        &self,
+        jobs: Vec<Job>,
+        telemetry: Option<&mut crate::telemetry::TelemetryRecorder>,
+    ) -> SimResult {
         let policy = policy_by_name(&self.cfg.policy)
             .unwrap_or_else(|| panic!("unknown policy {}", self.cfg.policy));
         let mut model = FleetModel::from_config(&self.cfg);
-        run_events(
+        run_events_recorded(
             &mut model,
             policy.as_ref(),
             self.quotas.as_ref(),
@@ -319,6 +364,7 @@ impl Simulator {
                 force_replan: self.cfg.force_replan,
             },
             jobs,
+            telemetry,
         )
     }
 }
@@ -327,6 +373,7 @@ impl Simulator {
 mod tests {
     use super::*;
     use crate::job::{JobId, ModelKind};
+    use crate::sim::core::run_events;
     use crate::trace::{generate, Split, TraceConfig};
 
     fn small_cfg(policy: &str, mechanism: &str) -> SimConfig {

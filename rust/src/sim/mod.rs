@@ -34,7 +34,7 @@ mod core;
 mod engine;
 
 pub use self::core::{
-    run_events, utilization_sample, ClusterModel, CoreConfig, FinishedJob,
-    PlanStats, RoundRates, SimEvent, SimResult,
+    run_events, run_events_recorded, utilization_sample, ClusterModel,
+    CoreConfig, FinishedJob, PlanStats, RoundRates, SimEvent, SimResult,
 };
 pub use engine::{FleetModel, HomoModel, SimConfig, Simulator};

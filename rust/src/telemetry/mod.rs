@@ -1,0 +1,899 @@
+//! Deterministic run telemetry: delta-compressed per-round /
+//! per-type-pool / per-tenant time series plus plan-stage trace events,
+//! exportable as JSONL or CSV (`synergy sim --telemetry <path>`,
+//! `synergy sweep --telemetry-dir <dir>`, leader `--telemetry`).
+//!
+//! Design rules (standing invariants — see ROADMAP):
+//!
+//! - **Default-off and schedule-inert.** Recording reads O(1) gauges the
+//!   free-capacity index already maintains and never feeds a value back
+//!   into planning, so enabling telemetry changes zero scheduled bytes
+//!   and zero golden payload bytes.
+//! - **Counters only in deterministic mode.** Emitted files carry sim
+//!   time and counters — no wall-clock — so `synergy sweep` telemetry is
+//!   byte-identical for any `--threads`. Wall time appears only behind
+//!   [`TelemetryConfig::timing`] (`--telemetry-timing`), which CI never
+//!   diffs.
+//! - **Arena-friendly storage.** Samples are flattened into one
+//!   delta-compressed byte arena per stream ([`DeltaLog`]: zigzag +
+//!   varint over a row-prefix delta) instead of a Vec-of-structs, so
+//!   long runs cost a few bytes per row: counters move slowly round to
+//!   round, and small deltas are 1-byte varints. Float gauges are
+//!   quantized to milli-units before encoding (exact integer
+//!   round-trip at 1e-3 resolution, matching the goldens' 1 ms
+//!   rounding).
+//!
+//! Row layouts (field-by-field; also documented in
+//! `tests/golden/README.md`):
+//!
+//! - **Round row** — delta-encoded prefix
+//!   `[round, time_ms, queued, running, admitted_gpus, spilled_gpus,
+//!     free_gpus, total_gpus, free_cpus_milli, total_cpus_milli,
+//!     free_mem_milli, total_mem_milli]`
+//!   (+ `wall_ms` when timing is on), then 6 fields per type pool
+//!   `[free_gpus, total_gpus, free_cpus_milli, total_cpus_milli,
+//!     free_mem_milli, total_mem_milli]`, then an absolute tail
+//!   `[n_tenants, (tenant_id, running, pending, admitted_gpus,
+//!     spilled_gpus)…]` (tenant sets change round to round, so the tail
+//!   is not delta-friendly).
+//! - **Plan event** — delta-encoded prefix
+//!   `[round, tier, steps_total, steps_reused, rollback_depth,
+//!     fit_walk]` (tier: 0 = full, 1 = memoized, 2 = resumed), then an
+//!   absolute tail `[n_pools, (reused, replayed)…]`.
+
+use crate::cluster::GpuGen;
+use crate::job::TenantId;
+use crate::util::json::Json;
+
+/// Fixed per-round core fields before the optional `wall_ms` and the
+/// per-pool blocks (see module docs for the layout).
+const ROUND_CORE: usize = 12;
+/// Fields per type pool in a round row.
+const POOL_FIELDS: usize = 6;
+/// Fields per tenant in a round row's absolute tail.
+const TENANT_FIELDS: usize = 5;
+/// Delta-encoded prefix of a plan event.
+const PLAN_PREFIX: usize = 6;
+/// Schema version stamped into the JSONL `meta` line.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Quantize a float gauge to milli-units for exact integer round-trips
+/// (1e-3 resolution — the same granularity the golden metrics use).
+pub fn milli(x: f64) -> i64 {
+    (x * 1000.0).round() as i64
+}
+
+/// Inverse of [`milli`].
+pub fn from_milli(v: i64) -> f64 {
+    v as f64 / 1000.0
+}
+
+fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+fn unzigzag(u: u64) -> i64 {
+    ((u >> 1) as i64) ^ -((u & 1) as i64)
+}
+
+fn write_varint(buf: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            buf.push(byte);
+            return;
+        }
+        buf.push(byte | 0x80);
+    }
+}
+
+fn read_varint(buf: &[u8], pos: &mut usize) -> u64 {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let byte = buf[*pos];
+        *pos += 1;
+        v |= u64::from(byte & 0x7f) << shift;
+        if byte & 0x80 == 0 {
+            return v;
+        }
+        shift += 7;
+    }
+}
+
+/// Append-only delta-compressed log of integer rows backed by one flat
+/// byte arena.
+///
+/// Each row is written as `varint(len)` followed by one zigzag varint
+/// per field; the first `prefix` fields are encoded as deltas against
+/// the previous row (absolute when there is no previous row or it was
+/// shorter), the rest absolute. [`DeltaLog::decode`] replays the same
+/// rule, so `decode(push(rows)) == rows` exactly for any rows.
+#[derive(Debug, Clone, Default)]
+pub struct DeltaLog {
+    prefix: usize,
+    buf: Vec<u8>,
+    prev: Vec<i64>,
+    rows: usize,
+}
+
+impl DeltaLog {
+    /// A log whose first `prefix` fields per row are delta-encoded.
+    pub fn new(prefix: usize) -> DeltaLog {
+        DeltaLog { prefix, ..DeltaLog::default() }
+    }
+
+    /// Append one row.
+    pub fn push(&mut self, fields: &[i64]) {
+        write_varint(&mut self.buf, fields.len() as u64);
+        for (i, &v) in fields.iter().enumerate() {
+            let enc = if i < self.prefix && i < self.prev.len() {
+                v.wrapping_sub(self.prev[i])
+            } else {
+                v
+            };
+            write_varint(&mut self.buf, zigzag(enc));
+        }
+        self.prev.clear();
+        self.prev.extend_from_slice(fields);
+        self.rows += 1;
+    }
+
+    /// Decode every row back out (exact inverse of the pushes).
+    pub fn decode(&self) -> Vec<Vec<i64>> {
+        let mut out = Vec::with_capacity(self.rows);
+        let mut prev: Vec<i64> = Vec::new();
+        let mut pos = 0usize;
+        while pos < self.buf.len() {
+            let n = read_varint(&self.buf, &mut pos) as usize;
+            let mut row = Vec::with_capacity(n);
+            for i in 0..n {
+                let raw = unzigzag(read_varint(&self.buf, &mut pos));
+                let v = if i < self.prefix && i < prev.len() {
+                    prev[i].wrapping_add(raw)
+                } else {
+                    raw
+                };
+                row.push(v);
+            }
+            prev.clear();
+            prev.extend_from_slice(&row);
+            out.push(row);
+        }
+        out
+    }
+
+    /// Number of rows pushed.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Encoded size in bytes (the compression evidence).
+    pub fn encoded_bytes(&self) -> usize {
+        self.buf.len()
+    }
+}
+
+/// Per-type-pool counter snapshot, read off the free-capacity index in
+/// O(1) — never a fresh server scan.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PoolCounters {
+    pub gen: GpuGen,
+    pub free_gpus: u32,
+    pub total_gpus: u32,
+    pub free_cpus: f64,
+    pub total_cpus: f64,
+    pub free_mem_gb: f64,
+    pub total_mem_gb: f64,
+}
+
+/// Per-tenant per-round counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TenantCounters {
+    pub tenant: TenantId,
+    /// Jobs of this tenant currently holding a placement.
+    pub running: u32,
+    /// Jobs of this tenant queued without a placement.
+    pub pending: u32,
+    /// GPUs admitted for this tenant at the last admission pass.
+    pub admitted_gpus: u32,
+    /// GPUs this tenant received only via the work-conserving spill
+    /// pass at the last admission (0 with quotas off).
+    pub spilled_gpus: u32,
+}
+
+/// One sampled scheduling round.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct RoundSample {
+    pub round: u64,
+    /// Deterministic sim time in ms (never wall clock).
+    pub time_ms: i64,
+    pub queued: u32,
+    pub running: u32,
+    /// Total GPUs admitted at the last admission pass.
+    pub admitted_gpus: u32,
+    /// Total GPUs admitted only via quota spill at the last admission.
+    pub spilled_gpus: u32,
+    pub free_gpus: u32,
+    pub total_gpus: u32,
+    pub free_cpus: f64,
+    pub total_cpus: f64,
+    pub free_mem_gb: f64,
+    pub total_mem_gb: f64,
+    /// Wall-clock ms — recorded/emitted only when timing is enabled.
+    pub wall_ms: i64,
+    pub pools: Vec<PoolCounters>,
+    pub tenants: Vec<TenantCounters>,
+}
+
+/// Which planning tier served a round (the three-tier stack:
+/// full replan / exact-sequence memoized / prefix-resumed).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanTier {
+    Full,
+    Memoized,
+    Resumed,
+}
+
+impl PlanTier {
+    fn code(self) -> i64 {
+        match self {
+            PlanTier::Full => 0,
+            PlanTier::Memoized => 1,
+            PlanTier::Resumed => 2,
+        }
+    }
+
+    fn from_code(c: i64) -> PlanTier {
+        match c {
+            0 => PlanTier::Full,
+            1 => PlanTier::Memoized,
+            _ => PlanTier::Resumed,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PlanTier::Full => "full",
+            PlanTier::Memoized => "memoized",
+            PlanTier::Resumed => "resumed",
+        }
+    }
+}
+
+/// One plan-stage trace event (one per round).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlanEvent {
+    pub round: u64,
+    pub tier: PlanTier,
+    /// Per-job planning steps executed or reused this round.
+    pub steps_total: u64,
+    /// Steps served from a checkpointed prefix instead of replayed.
+    pub steps_reused: u64,
+    /// Undo-journal entries rolled back across pools (prefix resume).
+    pub rollback_depth: u64,
+    /// Candidate servers examined by the free-capacity index walks.
+    pub fit_walk: u64,
+    /// Per-pool `(reused, replayed)` step counts (empty on memoized
+    /// rounds — no planner ran).
+    pub pools: Vec<(u64, u64)>,
+}
+
+/// Recorder knobs.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TelemetryConfig {
+    /// Emit wall-clock fields. Off = deterministic counters-only mode.
+    pub timing: bool,
+}
+
+/// The run recorder: two [`DeltaLog`] arenas (round samples, plan
+/// events) plus the fixed pool shape captured at the first sample.
+#[derive(Debug, Clone, Default)]
+pub struct TelemetryRecorder {
+    cfg: TelemetryConfig,
+    rounds: Option<DeltaLog>,
+    plans: DeltaLog,
+    pool_gens: Vec<GpuGen>,
+    scratch: Vec<i64>,
+}
+
+impl TelemetryRecorder {
+    pub fn new(cfg: TelemetryConfig) -> TelemetryRecorder {
+        TelemetryRecorder {
+            cfg,
+            rounds: None,
+            plans: DeltaLog::new(PLAN_PREFIX),
+            pool_gens: Vec::new(),
+            scratch: Vec::new(),
+        }
+    }
+
+    pub fn config(&self) -> TelemetryConfig {
+        self.cfg
+    }
+
+    /// Record one round sample. The pool set is fixed by the first
+    /// sample (fleets do not change shape mid-run).
+    pub fn record_round(&mut self, s: &RoundSample) {
+        if self.rounds.is_none() {
+            self.pool_gens = s.pools.iter().map(|p| p.gen).collect();
+            let prefix = ROUND_CORE
+                + usize::from(self.cfg.timing)
+                + POOL_FIELDS * s.pools.len();
+            self.rounds = Some(DeltaLog::new(prefix));
+        }
+        assert_eq!(
+            s.pools.len(),
+            self.pool_gens.len(),
+            "telemetry: pool count changed mid-run"
+        );
+        let mut row = std::mem::take(&mut self.scratch);
+        row.clear();
+        row.extend_from_slice(&[
+            s.round as i64,
+            s.time_ms,
+            i64::from(s.queued),
+            i64::from(s.running),
+            i64::from(s.admitted_gpus),
+            i64::from(s.spilled_gpus),
+            i64::from(s.free_gpus),
+            i64::from(s.total_gpus),
+            milli(s.free_cpus),
+            milli(s.total_cpus),
+            milli(s.free_mem_gb),
+            milli(s.total_mem_gb),
+        ]);
+        if self.cfg.timing {
+            row.push(s.wall_ms);
+        }
+        for p in &s.pools {
+            row.extend_from_slice(&[
+                i64::from(p.free_gpus),
+                i64::from(p.total_gpus),
+                milli(p.free_cpus),
+                milli(p.total_cpus),
+                milli(p.free_mem_gb),
+                milli(p.total_mem_gb),
+            ]);
+        }
+        row.push(s.tenants.len() as i64);
+        for t in &s.tenants {
+            row.extend_from_slice(&[
+                i64::from(t.tenant.0),
+                i64::from(t.running),
+                i64::from(t.pending),
+                i64::from(t.admitted_gpus),
+                i64::from(t.spilled_gpus),
+            ]);
+        }
+        self.rounds.as_mut().expect("initialized above").push(&row);
+        self.scratch = row;
+    }
+
+    /// Record one plan-stage trace event.
+    pub fn record_plan(&mut self, e: &PlanEvent) {
+        let mut row = std::mem::take(&mut self.scratch);
+        row.clear();
+        row.extend_from_slice(&[
+            e.round as i64,
+            e.tier.code(),
+            e.steps_total as i64,
+            e.steps_reused as i64,
+            e.rollback_depth as i64,
+            e.fit_walk as i64,
+        ]);
+        row.push(e.pools.len() as i64);
+        for &(reused, replayed) in &e.pools {
+            row.push(reused as i64);
+            row.push(replayed as i64);
+        }
+        self.plans.push(&row);
+        self.scratch = row;
+    }
+
+    pub fn n_rounds(&self) -> usize {
+        self.rounds.as_ref().map_or(0, DeltaLog::rows)
+    }
+
+    pub fn n_plan_events(&self) -> usize {
+        self.plans.rows()
+    }
+
+    /// Total encoded arena size in bytes.
+    pub fn encoded_bytes(&self) -> usize {
+        self.rounds.as_ref().map_or(0, DeltaLog::encoded_bytes)
+            + self.plans.encoded_bytes()
+    }
+
+    /// Decode all round samples back out (exact inverse of
+    /// [`TelemetryRecorder::record_round`] up to milli quantization of
+    /// the float gauges, which the recorder applies on entry).
+    pub fn rounds(&self) -> Vec<RoundSample> {
+        let Some(log) = &self.rounds else {
+            return Vec::new();
+        };
+        log.decode().iter().map(|row| self.decode_round(row)).collect()
+    }
+
+    fn decode_round(&self, row: &[i64]) -> RoundSample {
+        let mut i = ROUND_CORE;
+        let wall_ms = if self.cfg.timing {
+            let w = row[i];
+            i += 1;
+            w
+        } else {
+            0
+        };
+        let mut pools = Vec::with_capacity(self.pool_gens.len());
+        for &gen in &self.pool_gens {
+            pools.push(PoolCounters {
+                gen,
+                free_gpus: row[i] as u32,
+                total_gpus: row[i + 1] as u32,
+                free_cpus: from_milli(row[i + 2]),
+                total_cpus: from_milli(row[i + 3]),
+                free_mem_gb: from_milli(row[i + 4]),
+                total_mem_gb: from_milli(row[i + 5]),
+            });
+            i += POOL_FIELDS;
+        }
+        let n_tenants = row[i] as usize;
+        i += 1;
+        let mut tenants = Vec::with_capacity(n_tenants);
+        for _ in 0..n_tenants {
+            tenants.push(TenantCounters {
+                tenant: TenantId(row[i] as u32),
+                running: row[i + 1] as u32,
+                pending: row[i + 2] as u32,
+                admitted_gpus: row[i + 3] as u32,
+                spilled_gpus: row[i + 4] as u32,
+            });
+            i += TENANT_FIELDS;
+        }
+        RoundSample {
+            round: row[0] as u64,
+            time_ms: row[1],
+            queued: row[2] as u32,
+            running: row[3] as u32,
+            admitted_gpus: row[4] as u32,
+            spilled_gpus: row[5] as u32,
+            free_gpus: row[6] as u32,
+            total_gpus: row[7] as u32,
+            free_cpus: from_milli(row[8]),
+            total_cpus: from_milli(row[9]),
+            free_mem_gb: from_milli(row[10]),
+            total_mem_gb: from_milli(row[11]),
+            wall_ms,
+            pools,
+            tenants,
+        }
+    }
+
+    /// Decode all plan events back out.
+    pub fn plan_events(&self) -> Vec<PlanEvent> {
+        self.plans
+            .decode()
+            .iter()
+            .map(|row| {
+                let n_pools = row[PLAN_PREFIX] as usize;
+                let mut pools = Vec::with_capacity(n_pools);
+                for p in 0..n_pools {
+                    let base = PLAN_PREFIX + 1 + 2 * p;
+                    pools.push((row[base] as u64, row[base + 1] as u64));
+                }
+                PlanEvent {
+                    round: row[0] as u64,
+                    tier: PlanTier::from_code(row[1]),
+                    steps_total: row[2] as u64,
+                    steps_reused: row[3] as u64,
+                    rollback_depth: row[4] as u64,
+                    fit_walk: row[5] as u64,
+                    pools,
+                }
+            })
+            .collect()
+    }
+
+    fn pool_json(p: &PoolCounters) -> Json {
+        Json::obj(vec![
+            ("gen", Json::str(p.gen.name())),
+            ("free_gpus", Json::num(f64::from(p.free_gpus))),
+            ("total_gpus", Json::num(f64::from(p.total_gpus))),
+            ("free_cpus", Json::num(p.free_cpus)),
+            ("total_cpus", Json::num(p.total_cpus)),
+            ("free_mem_gb", Json::num(p.free_mem_gb)),
+            ("total_mem_gb", Json::num(p.total_mem_gb)),
+        ])
+    }
+
+    fn tenant_json(t: &TenantCounters) -> Json {
+        Json::obj(vec![
+            ("tenant", Json::num(f64::from(t.tenant.0))),
+            ("running", Json::num(f64::from(t.running))),
+            ("pending", Json::num(f64::from(t.pending))),
+            ("admitted_gpus", Json::num(f64::from(t.admitted_gpus))),
+            ("spilled_gpus", Json::num(f64::from(t.spilled_gpus))),
+        ])
+    }
+
+    fn round_json(&self, s: &RoundSample) -> Json {
+        let mut fields = vec![
+            ("kind", Json::str("round")),
+            ("round", Json::num(s.round as f64)),
+            ("time_ms", Json::num(s.time_ms as f64)),
+            ("queued", Json::num(f64::from(s.queued))),
+            ("running", Json::num(f64::from(s.running))),
+            ("admitted_gpus", Json::num(f64::from(s.admitted_gpus))),
+            ("spilled_gpus", Json::num(f64::from(s.spilled_gpus))),
+            ("free_gpus", Json::num(f64::from(s.free_gpus))),
+            ("total_gpus", Json::num(f64::from(s.total_gpus))),
+            ("free_cpus", Json::num(s.free_cpus)),
+            ("total_cpus", Json::num(s.total_cpus)),
+            ("free_mem_gb", Json::num(s.free_mem_gb)),
+            ("total_mem_gb", Json::num(s.total_mem_gb)),
+        ];
+        if self.cfg.timing {
+            fields.push(("wall_ms", Json::num(s.wall_ms as f64)));
+        }
+        fields.push((
+            "pools",
+            Json::arr(s.pools.iter().map(Self::pool_json).collect()),
+        ));
+        fields.push((
+            "tenants",
+            Json::arr(s.tenants.iter().map(Self::tenant_json).collect()),
+        ));
+        Json::obj(fields)
+    }
+
+    fn plan_json(e: &PlanEvent) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str("plan")),
+            ("round", Json::num(e.round as f64)),
+            ("tier", Json::str(e.tier.name())),
+            ("steps_total", Json::num(e.steps_total as f64)),
+            ("steps_reused", Json::num(e.steps_reused as f64)),
+            ("rollback_depth", Json::num(e.rollback_depth as f64)),
+            ("fit_walk", Json::num(e.fit_walk as f64)),
+            (
+                "pools",
+                Json::arr(
+                    e.pools
+                        .iter()
+                        .map(|&(reused, replayed)| {
+                            Json::obj(vec![
+                                ("reused", Json::num(reused as f64)),
+                                ("replayed", Json::num(replayed as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Full JSONL export: one `meta` line, then `round` lines, then
+    /// `plan` lines. Byte-deterministic in counters-only mode.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        let meta = Json::obj(vec![
+            ("kind", Json::str("meta")),
+            ("schema", Json::num(SCHEMA_VERSION as f64)),
+            ("counters_only", Json::Bool(!self.cfg.timing)),
+            (
+                "pools",
+                Json::arr(
+                    self.pool_gens
+                        .iter()
+                        .map(|g| Json::str(g.name()))
+                        .collect(),
+                ),
+            ),
+            ("rounds", Json::num(self.n_rounds() as f64)),
+            ("plan_events", Json::num(self.n_plan_events() as f64)),
+            ("encoded_bytes", Json::num(self.encoded_bytes() as f64)),
+        ]);
+        out.push_str(&meta.encode());
+        out.push('\n');
+        for s in self.rounds() {
+            out.push_str(&self.round_json(&s).encode());
+            out.push('\n');
+        }
+        for e in self.plan_events() {
+            out.push_str(&Self::plan_json(&e).encode());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// CSV export of the round series only (fixed columns: core prefix,
+    /// optional `wall_ms`, then 6 columns per pool). Per-tenant tails
+    /// and plan events are variable-shape and JSONL-only.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(
+            "round,time_ms,queued,running,admitted_gpus,spilled_gpus,\
+             free_gpus,total_gpus,free_cpus,total_cpus,free_mem_gb,\
+             total_mem_gb",
+        );
+        if self.cfg.timing {
+            out.push_str(",wall_ms");
+        }
+        for g in &self.pool_gens {
+            let n = g.name();
+            for col in [
+                "free_gpus",
+                "total_gpus",
+                "free_cpus",
+                "total_cpus",
+                "free_mem_gb",
+                "total_mem_gb",
+            ] {
+                out.push_str(&format!(",{n}_{col}"));
+            }
+        }
+        out.push('\n');
+        for s in self.rounds() {
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{},{},{},{},{},{}",
+                s.round,
+                s.time_ms,
+                s.queued,
+                s.running,
+                s.admitted_gpus,
+                s.spilled_gpus,
+                s.free_gpus,
+                s.total_gpus,
+                s.free_cpus,
+                s.total_cpus,
+                s.free_mem_gb,
+                s.total_mem_gb,
+            ));
+            if self.cfg.timing {
+                out.push_str(&format!(",{}", s.wall_ms));
+            }
+            for p in &s.pools {
+                out.push_str(&format!(
+                    ",{},{},{},{},{},{}",
+                    p.free_gpus,
+                    p.total_gpus,
+                    p.free_cpus,
+                    p.total_cpus,
+                    p.free_mem_gb,
+                    p.total_mem_gb,
+                ));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render for `path`: `.csv` extension selects CSV, anything else
+    /// JSONL.
+    pub fn render_for_path(&self, path: &str) -> String {
+        if path.ends_with(".csv") {
+            self.to_csv()
+        } else {
+            self.to_jsonl()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zigzag_varint_roundtrip() {
+        let cases = [
+            0i64,
+            1,
+            -1,
+            2,
+            -2,
+            63,
+            -64,
+            64,
+            127,
+            128,
+            -129,
+            1 << 20,
+            -(1 << 20),
+            i64::MAX,
+            i64::MIN,
+        ];
+        for &v in &cases {
+            assert_eq!(unzigzag(zigzag(v)), v, "zigzag({v})");
+            let mut buf = Vec::new();
+            write_varint(&mut buf, zigzag(v));
+            let mut pos = 0;
+            assert_eq!(unzigzag(read_varint(&buf, &mut pos)), v);
+            assert_eq!(pos, buf.len());
+        }
+    }
+
+    #[test]
+    fn small_deltas_encode_to_one_byte() {
+        // The compression claim: slowly-moving counters cost ~1 byte
+        // per field per row after the first.
+        let mut log = DeltaLog::new(3);
+        log.push(&[1_000_000, 500_000, 123_456]);
+        let first = log.encoded_bytes();
+        log.push(&[1_000_001, 500_000, 123_457]);
+        // 1 len byte + 3 single-byte deltas.
+        assert_eq!(log.encoded_bytes() - first, 4);
+    }
+
+    #[test]
+    fn deltalog_roundtrip_mixed_row_lengths() {
+        let rows: Vec<Vec<i64>> = vec![
+            vec![0, 10, -5, 7, 2, 0, 0],
+            vec![1, 12, -5, 7, 3, 1, 99, 4, -4],
+            vec![2, 9, 40],
+            vec![3, 9, 40, 0, 0, 0, 0, 0, 0, 0],
+            vec![],
+            vec![i64::MAX, i64::MIN, 0],
+        ];
+        for prefix in [0usize, 2, 5, 64] {
+            let mut log = DeltaLog::new(prefix);
+            for r in &rows {
+                log.push(r);
+            }
+            assert_eq!(log.decode(), rows, "prefix {prefix}");
+            assert_eq!(log.rows(), rows.len());
+        }
+    }
+
+    fn sample(round: u64, tenants: usize) -> RoundSample {
+        RoundSample {
+            round,
+            time_ms: 300_000 * round as i64,
+            queued: 5 + round as u32,
+            running: 3,
+            admitted_gpus: 8,
+            spilled_gpus: 2,
+            free_gpus: 1,
+            total_gpus: 16,
+            free_cpus: 10.5,
+            total_cpus: 48.0,
+            free_mem_gb: 171.25,
+            total_mem_gb: 1000.0,
+            wall_ms: 7 * round as i64,
+            pools: vec![
+                PoolCounters {
+                    gen: GpuGen::P100,
+                    free_gpus: 1,
+                    total_gpus: 8,
+                    free_cpus: 4.5,
+                    total_cpus: 24.0,
+                    free_mem_gb: 21.25,
+                    total_mem_gb: 500.0,
+                },
+                PoolCounters {
+                    gen: GpuGen::V100,
+                    free_gpus: 0,
+                    total_gpus: 8,
+                    free_cpus: 6.0,
+                    total_cpus: 24.0,
+                    free_mem_gb: 150.0,
+                    total_mem_gb: 500.0,
+                },
+            ],
+            tenants: (0..tenants)
+                .map(|t| TenantCounters {
+                    tenant: TenantId(t as u32),
+                    running: 1 + t as u32,
+                    pending: 2,
+                    admitted_gpus: 4,
+                    spilled_gpus: t as u32,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn recorder_roundtrips_samples_and_plans() {
+        let mut rec =
+            TelemetryRecorder::new(TelemetryConfig { timing: false });
+        let samples = vec![sample(0, 2), sample(1, 1), sample(2, 3)];
+        for s in &samples {
+            rec.record_round(s);
+        }
+        let plans = vec![
+            PlanEvent {
+                round: 0,
+                tier: PlanTier::Full,
+                steps_total: 12,
+                steps_reused: 0,
+                rollback_depth: 0,
+                fit_walk: 31,
+                pools: vec![(0, 7), (0, 5)],
+            },
+            PlanEvent {
+                round: 1,
+                tier: PlanTier::Resumed,
+                steps_total: 12,
+                steps_reused: 9,
+                rollback_depth: 3,
+                fit_walk: 6,
+                pools: vec![(7, 0), (2, 3)],
+            },
+            PlanEvent {
+                round: 2,
+                tier: PlanTier::Memoized,
+                steps_total: 0,
+                steps_reused: 0,
+                rollback_depth: 0,
+                fit_walk: 0,
+                pools: vec![],
+            },
+        ];
+        for e in &plans {
+            rec.record_plan(e);
+        }
+        // Counters-only mode drops wall_ms: decoded samples match the
+        // inputs with wall_ms zeroed.
+        let expect: Vec<RoundSample> = samples
+            .iter()
+            .map(|s| RoundSample { wall_ms: 0, ..s.clone() })
+            .collect();
+        assert_eq!(rec.rounds(), expect);
+        assert_eq!(rec.plan_events(), plans);
+        assert_eq!(rec.n_rounds(), 3);
+        assert_eq!(rec.n_plan_events(), 3);
+    }
+
+    #[test]
+    fn timing_mode_preserves_wall_ms() {
+        let mut rec =
+            TelemetryRecorder::new(TelemetryConfig { timing: true });
+        let samples = vec![sample(0, 1), sample(1, 1)];
+        for s in &samples {
+            rec.record_round(s);
+        }
+        assert_eq!(rec.rounds(), samples);
+        assert!(rec.to_jsonl().contains("\"wall_ms\""));
+        assert!(rec.to_csv().lines().next().unwrap().contains("wall_ms"));
+    }
+
+    #[test]
+    fn counters_only_export_has_no_wall_clock() {
+        let mut rec = TelemetryRecorder::new(TelemetryConfig::default());
+        rec.record_round(&sample(0, 1));
+        rec.record_plan(&PlanEvent {
+            round: 0,
+            tier: PlanTier::Full,
+            steps_total: 1,
+            steps_reused: 0,
+            rollback_depth: 0,
+            fit_walk: 2,
+            pools: vec![(0, 1)],
+        });
+        let jsonl = rec.to_jsonl();
+        assert!(!jsonl.contains("wall_ms"));
+        assert!(jsonl.contains("\"counters_only\":true"));
+        assert!(!rec.to_csv().contains("wall_ms"));
+        // Export is a pure function of recorded state.
+        assert_eq!(jsonl, rec.to_jsonl());
+    }
+
+    #[test]
+    fn render_for_path_picks_format_by_extension() {
+        let mut rec = TelemetryRecorder::new(TelemetryConfig::default());
+        rec.record_round(&sample(0, 0));
+        assert!(rec
+            .render_for_path("out/telemetry.csv")
+            .starts_with("round,time_ms"));
+        assert!(rec
+            .render_for_path("out/telemetry.jsonl")
+            .starts_with("{\"counters_only\""));
+    }
+
+    #[test]
+    fn milli_quantization_is_exact_at_1e_minus_3() {
+        for v in [0.0, 0.001, -0.001, 10.5, 171.25, 123456.789] {
+            assert_eq!(from_milli(milli(v)), v);
+        }
+    }
+}

@@ -11,9 +11,12 @@
 //! - [`cli`] — flag-style argument parser
 //! - [`prop`] — property-based testing harness (random cases + shrinking)
 //! - [`bench`] — wall-clock bench harness used by `cargo bench` targets
+//! - [`fsx`] — parent-creating file writes with path-naming errors (CLI
+//!   report/telemetry outputs)
 
 pub mod bench;
 pub mod cli;
+pub mod fsx;
 pub mod json;
 pub mod prop;
 pub mod rng;

@@ -122,6 +122,11 @@ pub struct AdmissionOutcome {
     pub gpus_by_tenant: BTreeMap<TenantId, u32>,
     /// Jobs admitted only by the work-conserving spill pass.
     pub spilled: Vec<JobId>,
+    /// Of [`AdmissionOutcome::gpus_by_tenant`], the GPUs a tenant won
+    /// through the spill pass — capacity another tenant's quota left
+    /// stranded (telemetry: per-tenant spill series). Empty on the
+    /// quota-free fast path, which never spills.
+    pub spilled_gpus_by_tenant: BTreeMap<TenantId, u32>,
 }
 
 /// Admit jobs from the policy-ordered queue into `total_gpus` of capacity.
@@ -184,6 +189,8 @@ pub fn admit(
         }
         used += job.gpus;
         *out.gpus_by_tenant.entry(job.tenant).or_insert(0) += job.gpus;
+        *out.spilled_gpus_by_tenant.entry(job.tenant).or_insert(0) +=
+            job.gpus;
         out.admitted.push(job.id);
         out.positions.push(pos);
         out.spilled.push(job.id);
@@ -281,6 +288,9 @@ mod tests {
         assert_eq!(out.admitted, vec![JobId(1), JobId(2)]);
         assert_eq!(out.spilled, vec![JobId(2)]);
         assert_eq!(out.gpus_by_tenant[&TenantId(0)], 8);
+        // The spill tally attributes exactly the pass-2 GPUs.
+        assert_eq!(out.spilled_gpus_by_tenant[&TenantId(0)], 4);
+        assert_eq!(out.spilled_gpus_by_tenant.len(), 1);
     }
 
     #[test]

@@ -93,6 +93,8 @@ fn deploy_protocol_roundtrip_without_compute() {
         variant: "tiny".into(),
         max_real_s: 60.0,
         quotas: None,
+        telemetry: None,
+        telemetry_timing: false,
     }));
     let l2 = Arc::clone(&leader);
     let t = std::thread::spawn(move || l2.run(jobs));
@@ -146,6 +148,8 @@ fn deploy_streams_arrivals_from_a_workload_source() {
         variant: "tiny".into(),
         max_real_s: 60.0,
         quotas: None,
+        telemetry: None,
+        telemetry_timing: false,
     }));
     let l2 = Arc::clone(&leader);
     let t = std::thread::spawn(move || l2.run_stream(Box::new(source)));
@@ -194,6 +198,8 @@ fn deploy_survives_worker_crash() {
         variant: "tiny".into(),
         max_real_s: 90.0,
         quotas: None,
+        telemetry: None,
+        telemetry_timing: false,
     }));
     let l2 = Arc::clone(&leader);
     let t = std::thread::spawn(move || l2.run(jobs));

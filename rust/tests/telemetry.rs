@@ -1,0 +1,373 @@
+//! Telemetry (ISSUE 6 tentpole) contracts, outside-in:
+//!
+//! 1. the delta codec round-trips arbitrary rows (property test over
+//!    extreme i64s, variable row lengths, and every prefix width);
+//! 2. attaching a recorder changes **zero scheduled bytes**: the
+//!    `SimResult` — finish-time bit patterns, round counts, utilization
+//!    trace, and the golden `metrics_json` payload — is identical with
+//!    telemetry on or off;
+//! 3. the recorded series reconcile with the run they observed
+//!    (one sample + one plan event per round, tier counts matching
+//!    `planned_rounds`/`resumed_rounds`, counters-only exports free of
+//!    wall-clock fields);
+//! 4. at the CLI, `sweep --telemetry-dir` per-cell profiles are
+//!    byte-identical across `--threads`, report/telemetry paths create
+//!    missing parents instead of panicking (and name the path on
+//!    failure), and `hetero --json --plan-stats` speaks the same
+//!    payload shape as `sim --json --plan-stats`.
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+use std::process::Command;
+
+use synergy::job::Job;
+use synergy::sim::{SimConfig, SimResult, Simulator};
+use synergy::telemetry::{
+    DeltaLog, PlanTier, TelemetryConfig, TelemetryRecorder,
+};
+use synergy::trace::{Split, TraceConfig};
+use synergy::util::json::Json;
+use synergy::util::prop;
+use synergy::workload::{SyntheticSource, TenantSpec, WorkloadSource};
+
+// ---------------------------------------------------------------- codec
+
+#[test]
+fn delta_log_round_trips_arbitrary_rows() {
+    prop::check("delta_log_round_trip", 300, |g| {
+        let prefix = g.int(0, 8);
+        let mut log = DeltaLog::new(prefix);
+        let rows: Vec<Vec<i64>> = g.vec(24, |g| {
+            g.vec(10, |g| match g.int(0, 5) {
+                0 => i64::MIN,
+                1 => i64::MAX,
+                2 => -(g.int(0, 1_000_000) as i64),
+                3 => 0,
+                _ => g.int(0, 1_000_000) as i64,
+            })
+        });
+        for row in &rows {
+            log.push(row);
+        }
+        let decoded = log.decode();
+        if decoded != rows {
+            return Err(format!(
+                "prefix={prefix}: decode mismatch\n in: {rows:?}\nout: {decoded:?}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------- zero-scheduled-bytes rule
+
+fn tenant_trace(n: usize, seed: u64) -> (Vec<Job>, TenantSpec) {
+    let spec = TenantSpec::parse("a:2,b:1").unwrap();
+    let jobs = SyntheticSource::new(TraceConfig {
+        n_jobs: n,
+        split: Split::new(30, 50, 20),
+        multi_gpu: true,
+        jobs_per_hour: Some(10.0),
+        seed,
+    })
+    .with_tenants(spec.clone())
+    .drain_jobs();
+    (jobs, spec)
+}
+
+/// The schedule as comparable bits (same shape as the memo-parity
+/// harness): exact finish times, round counters, utilization trace.
+fn schedule_bits(r: &SimResult) -> (Vec<(u64, u64)>, [usize; 3], Vec<u64>) {
+    let finished: Vec<(u64, u64)> =
+        r.finished.iter().map(|f| (f.id.0, f.jct_s.to_bits())).collect();
+    let util: Vec<u64> = r
+        .utilization
+        .samples
+        .iter()
+        .flat_map(|s| {
+            [
+                s.gpu_util.to_bits(),
+                s.cpu_util.to_bits(),
+                s.cpu_used.to_bits(),
+                s.mem_util.to_bits(),
+                s.queued_jobs as u64,
+                s.running_jobs as u64,
+            ]
+        })
+        .collect();
+    (finished, [r.rounds, r.planned_rounds, r.resumed_rounds], util)
+}
+
+#[test]
+fn recorder_changes_zero_scheduled_bytes() {
+    // SRTF reorders the runnable sequence almost every round, so all
+    // three planning tiers fire; quotas exercise the spill counters.
+    for (policy, mechanism) in
+        [("srtf", "tune"), ("fifo", "proportional"), ("las", "greedy")]
+    {
+        let (jobs, spec) = tenant_trace(120, 11);
+        let mk = || SimConfig {
+            n_servers: 2,
+            policy: policy.to_string(),
+            mechanism: mechanism.to_string(),
+            ..Default::default()
+        };
+        let plain = Simulator::with_quotas(mk(), Some(spec.quotas()))
+            .run(jobs.clone());
+        let mut rec = TelemetryRecorder::new(TelemetryConfig::default());
+        let recorded = Simulator::with_quotas(mk(), Some(spec.quotas()))
+            .run_with_telemetry(jobs, Some(&mut rec));
+        assert_eq!(
+            schedule_bits(&plain),
+            schedule_bits(&recorded),
+            "{policy}/{mechanism}: telemetry perturbed the schedule"
+        );
+        assert_eq!(
+            plain.metrics_json(true),
+            recorded.metrics_json(true),
+            "{policy}/{mechanism}: golden metrics payload changed"
+        );
+        assert!(rec.n_rounds() > 0, "{policy}/{mechanism}: empty recording");
+    }
+}
+
+#[test]
+fn recording_reconciles_with_the_run() {
+    let (jobs, spec) = tenant_trace(150, 7);
+    let cfg = SimConfig {
+        n_servers: 2,
+        policy: "srtf".into(),
+        mechanism: "tune".into(),
+        ..Default::default()
+    };
+    let mut rec = TelemetryRecorder::new(TelemetryConfig::default());
+    let r = Simulator::with_quotas(cfg, Some(spec.quotas()))
+        .run_with_telemetry(jobs, Some(&mut rec));
+
+    // One sample and one plan event per executed round.
+    assert_eq!(rec.n_rounds(), r.rounds);
+    assert_eq!(rec.n_plan_events(), r.rounds);
+
+    let rounds = rec.rounds();
+    for (i, s) in rounds.iter().enumerate() {
+        assert_eq!(s.round, i as u64, "round ids are dense");
+        assert_eq!(s.wall_ms, 0, "counters-only mode carries no wall time");
+        assert!(s.free_gpus <= s.total_gpus);
+        assert!(s.free_cpus <= s.total_cpus + 1e-6);
+        assert!(s.free_mem_gb <= s.total_mem_gb + 1e-6);
+        // Fleet figures are the pool sums.
+        let pg: u32 = s.pools.iter().map(|p| p.free_gpus).sum();
+        assert_eq!(pg, s.free_gpus);
+        // Tenant rows are sorted and running counts reconcile.
+        let running: u32 = s.tenants.iter().map(|t| t.running).sum();
+        assert_eq!(running, s.running);
+        for w in s.tenants.windows(2) {
+            assert!(w[0].tenant < w[1].tenant, "tenant rows sorted");
+        }
+    }
+    // Under quotas at least one round spills (the trace oversubscribes
+    // two servers) — the spill series must see it.
+    assert!(
+        rounds.iter().any(|s| s.spilled_gpus > 0),
+        "expected admission spill under quotas"
+    );
+
+    // Plan-tier attribution reconciles with the planner's own counters:
+    // Full + Resumed events = planned rounds, the rest served memoized.
+    let events = rec.plan_events();
+    let full =
+        events.iter().filter(|e| e.tier == PlanTier::Full).count();
+    let resumed =
+        events.iter().filter(|e| e.tier == PlanTier::Resumed).count();
+    let memoized =
+        events.iter().filter(|e| e.tier == PlanTier::Memoized).count();
+    assert_eq!(full + resumed, r.planned_rounds);
+    assert_eq!(resumed, r.resumed_rounds);
+    assert_eq!(memoized, r.rounds - r.planned_rounds);
+    assert!(resumed > 0, "SRTF under load must exercise prefix resume");
+    let reused: u64 = events.iter().map(|e| e.steps_reused).sum();
+    assert_eq!(
+        reused,
+        r.plan_steps_reused as u64
+            + events
+                .iter()
+                .filter(|e| e.tier == PlanTier::Memoized)
+                .map(|e| e.steps_reused)
+                .sum::<u64>(),
+        "per-event reuse sums to the run totals plus memoized replays"
+    );
+    // Full replans walk the fit index; the trace must capture that.
+    assert!(
+        events.iter().any(|e| e.fit_walk > 0),
+        "fit-index walk counter never fired"
+    );
+
+    // Counters-only exports: no wall-clock anywhere, meta line first.
+    let jsonl = rec.to_jsonl();
+    assert!(jsonl.starts_with("{\"counters_only\":true"));
+    assert!(!jsonl.contains("wall_ms"));
+    assert!(!rec.to_csv().contains("wall_ms"));
+}
+
+// ------------------------------------------------------------- CLI layer
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_synergy"))
+}
+
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("synergy-telemetry-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+const SMALL_WORKLOAD: [&str; 8] = [
+    "--jobs", "60", "--seed", "5", "--servers", "2", "--max-sim-days", "40",
+];
+
+#[test]
+fn sweep_telemetry_is_byte_identical_across_threads() {
+    let root = scratch("sweep");
+    let mut outs = Vec::new();
+    for threads in ["1", "4"] {
+        let dir = root.join(format!("t{threads}"));
+        let out = dir.join("report.txt");
+        let status = bin()
+            .args(["sweep", "--policies", "fifo,srtf", "--mechanisms", "tune"])
+            .args(SMALL_WORKLOAD)
+            .args(["--tenants", "a:2,b:1", "--plan-stats"])
+            .args(["--threads", threads])
+            .args(["--out", out.to_str().unwrap()])
+            .args(["--telemetry-dir", dir.to_str().unwrap()])
+            .status()
+            .expect("spawn synergy sweep");
+        assert!(status.success(), "sweep --threads {threads} failed");
+        outs.push(dir);
+    }
+    for cell in ["fifo_tune.jsonl", "srtf_tune.jsonl"] {
+        let a = std::fs::read(outs[0].join(cell)).unwrap();
+        let b = std::fs::read(outs[1].join(cell)).unwrap();
+        assert!(!a.is_empty(), "{cell}: empty telemetry profile");
+        assert_eq!(a, b, "{cell}: differs between --threads 1 and 4");
+    }
+    assert_eq!(
+        std::fs::read(outs[0].join("report.txt")).unwrap(),
+        std::fs::read(outs[1].join("report.txt")).unwrap(),
+        "sweep report differs between thread counts"
+    );
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn out_paths_create_parents_and_fail_with_named_paths() {
+    let root = scratch("fsx");
+    // Missing parents are created, not panicked on.
+    let nested = root.join("a/b/c/report.txt");
+    let status = bin()
+        .args(["sweep", "--policies", "fifo", "--mechanisms", "tune"])
+        .args(SMALL_WORKLOAD)
+        .args(["--out", nested.to_str().unwrap()])
+        .status()
+        .expect("spawn synergy sweep");
+    assert!(status.success());
+    assert!(nested.is_file(), "parent directories were not created");
+
+    // A file used as a directory component fails with the path named,
+    // exit code 2 — not a raw io::Error panic.
+    let blocker = root.join("plain");
+    std::fs::write(&blocker, b"x").unwrap();
+    let bad = blocker.join("sub/report.txt");
+    let output = bin()
+        .args(["sim", "--policy", "fifo"])
+        .args(SMALL_WORKLOAD)
+        .args(["--telemetry", bad.to_str().unwrap()])
+        .output()
+        .expect("spawn synergy sim");
+    assert_eq!(output.status.code(), Some(2), "expected clean exit(2)");
+    let err = String::from_utf8_lossy(&output.stderr);
+    assert!(
+        err.contains("cannot create directory") && err.contains("plain"),
+        "error does not name the offending path: {err}"
+    );
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn sim_telemetry_export_formats_and_timing_gate() {
+    let root = scratch("formats");
+    let jsonl = root.join("run.jsonl");
+    let csv = root.join("run.csv");
+    let timed = root.join("timed.jsonl");
+    for (path, extra) in [
+        (&jsonl, None),
+        (&csv, None),
+        (&timed, Some("--telemetry-timing")),
+    ] {
+        let mut cmd = bin();
+        cmd.args(["sim", "--policy", "srtf"])
+            .args(SMALL_WORKLOAD)
+            .args(["--telemetry", path.to_str().unwrap()]);
+        if let Some(flag) = extra {
+            cmd.arg(flag);
+        }
+        let status = cmd.status().expect("spawn synergy sim");
+        assert!(status.success());
+    }
+    let jsonl_text = std::fs::read_to_string(&jsonl).unwrap();
+    assert!(jsonl_text.starts_with("{\"counters_only\":true"));
+    assert!(!jsonl_text.contains("wall_ms"), "deterministic export leaked wall time");
+    let csv_text = std::fs::read_to_string(&csv).unwrap();
+    assert!(csv_text.starts_with("round,"), "CSV header missing: {}",
+        csv_text.lines().next().unwrap_or(""));
+    assert!(!csv_text.contains("wall_ms"));
+    let timed_text = std::fs::read_to_string(&timed).unwrap();
+    assert!(timed_text.starts_with("{\"counters_only\":false"));
+    assert!(timed_text.contains("\"wall_ms\""));
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn hetero_json_payload_matches_sim_shape() {
+    fn keys(v: &Json) -> BTreeSet<String> {
+        v.as_obj().expect("object payload").keys().cloned().collect()
+    }
+    let sim_out = bin()
+        .args(["sim", "--policy", "srtf", "--json", "--plan-stats"])
+        .args(SMALL_WORKLOAD)
+        .args(["--tenants", "a:2,b:1"])
+        .output()
+        .expect("spawn synergy sim");
+    assert!(sim_out.status.success());
+    let het_out = bin()
+        .args(["hetero", "--policy", "srtf", "--json", "--plan-stats"])
+        .args(["--jobs", "60", "--seed", "5", "--machines", "1"])
+        .args(["--max-sim-days", "40", "--tenants", "a:2,b:1"])
+        .output()
+        .expect("spawn synergy hetero");
+    assert!(het_out.status.success(), "hetero --json --plan-stats failed");
+
+    let sim_json =
+        Json::parse(&String::from_utf8_lossy(&sim_out.stdout)).unwrap();
+    let het_json =
+        Json::parse(&String::from_utf8_lossy(&het_out.stdout)).unwrap();
+    assert_eq!(
+        keys(&sim_json),
+        keys(&het_json),
+        "hetero --json top-level shape diverged from sim --json"
+    );
+    // --plan-stats appends the planning split as flat keys on both.
+    for payload in [&sim_json, &het_json] {
+        for key in
+            ["planned_rounds", "resumed_rounds", "reused_steps", "total_steps"]
+        {
+            assert!(
+                payload.get(key).as_f64().is_some(),
+                "missing plan-stats key {key}"
+            );
+        }
+        let tenants = payload.get("per_tenant").as_arr().unwrap();
+        assert_eq!(tenants.len(), 2, "two tenants in the payload");
+    }
+}
