@@ -17,6 +17,7 @@
 
 mod common;
 
+use synergy::cluster::TopologySpec;
 use synergy::sim::{SimConfig, Simulator};
 use synergy::trace::{generate, Split, TraceConfig};
 use synergy::util::bench::{row, section};
@@ -66,6 +67,55 @@ fn main() {
             avg[0],
             avg[1],
             avg[1] / avg[0]
+        );
+    }
+
+    // Locality ablation (ISSUE 7): the same gang-heavy trace on a
+    // 16-server fleet split into 2 racks, with the rack-rank
+    // consolidation score on vs off. Both arms charge the per-rack link
+    // cost; only the packing order differs, so the aware arm should
+    // place fewer cross-rack gangs and (when the link cost bites) win
+    // on JCT.
+    section("ISSUE 7 ablation: rack-aware vs rack-blind gang packing");
+    println!(
+        "{:<8} {:>14} {:>12} {:>18} {:>12}",
+        "arm", "avg JCT h", "gangs", "cross-rack gangs", "cross frac"
+    );
+    for (tag, aware) in [("aware", true), ("blind", false)] {
+        let sim = Simulator::new(SimConfig {
+            n_servers: 16,
+            policy: "srtf".into(),
+            mechanism: "tune".into(),
+            topology: TopologySpec {
+                placement_aware: aware,
+                ..TopologySpec::racks(2)
+            },
+            ..Default::default()
+        });
+        let r = sim.run(jobs.clone());
+        assert_eq!(r.finished.len(), jobs.len(), "all jobs must finish");
+        let s = r.jct_stats();
+        row(
+            "ablation/locality",
+            &format!("racks2/{tag}/jct"),
+            if aware { 1.0 } else { 0.0 },
+            s.avg_hrs(),
+            "avg h",
+        );
+        row(
+            "ablation/locality",
+            &format!("racks2/{tag}/cross_rack"),
+            if aware { 1.0 } else { 0.0 },
+            r.cross_rack_fraction(),
+            "frac",
+        );
+        println!(
+            "{:<8} {:>14.2} {:>12} {:>18} {:>11.3}",
+            tag,
+            s.avg_hrs(),
+            r.gangs_placed,
+            r.cross_rack_gangs,
+            r.cross_rack_fraction()
         );
     }
 }

@@ -1,6 +1,6 @@
 //! Shared helpers for the figure benches.
 
-use synergy::cluster::ServerSpec;
+use synergy::cluster::{ServerSpec, TopologySpec};
 use synergy::job::Job;
 use synergy::metrics::JctStats;
 use synergy::sim::{SimConfig, SimResult, Simulator};
@@ -55,6 +55,7 @@ pub fn run_sim_ref(
         types: None,
         force_replan: false,
         no_resume: false,
+        topology: TopologySpec::default(),
     });
     sim.run(jobs)
 }

@@ -17,7 +17,7 @@
 //! holds.
 
 use super::gen::GpuGen;
-use super::{Cluster, ServerSpec};
+use super::{Cluster, ServerSpec, TopologySpec};
 use crate::job::JobId;
 
 /// Specification of one machine type: generation + per-machine resources
@@ -169,6 +169,18 @@ impl Fleet {
         }
     }
 
+    /// Install a rack topology fleet-wide: each pool gets the spec
+    /// concretized for its own machine count (racks are per-pool — a
+    /// pool's scan order is the only server order that exists), so a
+    /// tri-type fleet under `racks:2` has 2 racks *per pool*. Call once
+    /// at construction, before planning.
+    pub fn set_topology(&mut self, spec: TopologySpec) {
+        for p in &mut self.pools {
+            let n = p.cluster.num_servers();
+            p.cluster.set_topology(spec.for_servers(n));
+        }
+    }
+
     /// Turn on every pool's undo journal (prefix-resumable planning; see
     /// [`Cluster::enable_journal`]).
     pub fn enable_journal(&mut self) {
@@ -269,6 +281,20 @@ mod tests {
             Placement::single(0, Share { gpus: 8, cpus: 24.0, mem_gb: 500.0 }),
         );
         assert_eq!(f.gpu_utilization(), 0.5);
+    }
+
+    #[test]
+    fn set_topology_concretizes_per_pool() {
+        let mut f = Fleet::two_tier(4);
+        f.set_topology(TopologySpec::racks(2));
+        for p in &f.pools {
+            let t = p.cluster.topology();
+            assert_eq!(t.racks, 2);
+            assert_eq!(t.servers_per_rack, 2, "ceil(4 machines / 2 racks)");
+        }
+        // Default (no call): every pool is flat.
+        let g = Fleet::two_tier(4);
+        assert!(g.pools.iter().all(|p| p.cluster.topology().is_flat()));
     }
 
     #[test]

@@ -38,10 +38,12 @@
 mod fleet;
 mod gen;
 mod server;
+mod topology;
 
 pub use fleet::{Fleet, TypePool, TypeSpec};
 pub use gen::{GpuGen, ALL_GENS};
 pub use server::{Server, ServerSpec};
+pub use topology::{Topology, TopologySpec, DEFAULT_LINK_COST};
 
 use crate::job::JobId;
 use std::collections::{btree_set, BTreeMap, BTreeSet};
@@ -459,6 +461,12 @@ pub struct Cluster {
     /// [`Cluster::take_fit_walk`]. A `Cell` because the fit helpers take
     /// `&Cluster`; never read by scheduling.
     fit_walk: std::cell::Cell<u64>,
+    /// Rack topology over this pool's scan order. Defaults to
+    /// [`Topology::flat`] (pre-topology behaviour, byte-identical by
+    /// construction) and is immutable during a planning pass — set once
+    /// at fleet construction ([`Fleet::set_topology`]), so prefix-purity
+    /// of the resumable planning folds is untouched.
+    topology: Topology,
 }
 
 impl Cluster {
@@ -503,7 +511,45 @@ impl Cluster {
             id_bound,
             journal: None,
             fit_walk: std::cell::Cell::new(0),
+            topology: Topology::flat(),
         }
+    }
+
+    /// Install a rack topology over this pool (normally via
+    /// [`Fleet::set_topology`], which derives `servers_per_rack` from the
+    /// pool size). Call before planning starts; the topology is read-only
+    /// configuration afterwards.
+    pub fn set_topology(&mut self, topology: Topology) {
+        self.topology = topology;
+    }
+
+    pub fn topology(&self) -> Topology {
+        self.topology
+    }
+
+    /// Rack of a server *id* (racks are defined over scan positions; this
+    /// resolves sparse ids to their position first).
+    pub fn rack_of(&self, server_id: usize) -> u32 {
+        if self.topology.is_flat() {
+            return 0;
+        }
+        self.topology.rack_of(self.server_index(server_id) as u32)
+    }
+
+    /// Number of distinct racks a placement's shares span (0 for an empty
+    /// placement, always 1 under the flat topology).
+    pub fn racks_spanned(&self, placement: &Placement) -> u32 {
+        if placement.shares.is_empty() {
+            return 0;
+        }
+        if self.topology.is_flat() {
+            return 1;
+        }
+        let mut racks = BTreeSet::new();
+        for sid in placement.shares.keys() {
+            racks.insert(self.rack_of(*sid));
+        }
+        racks.len() as u32
     }
 
     pub fn num_servers(&self) -> usize {
@@ -1227,5 +1273,40 @@ mod tests {
         );
         assert_eq!(c.gpu_utilization(), 0.5);
         assert_eq!(c.cpu_utilization(), 0.25);
+    }
+
+    #[test]
+    fn racks_span_counts_distinct_racks() {
+        let mut c = Cluster::homogeneous(spec(), 4);
+        c.set_topology(TopologySpec::racks(2).for_servers(4));
+        assert_eq!(c.rack_of(0), 0);
+        assert_eq!(c.rack_of(1), 0);
+        assert_eq!(c.rack_of(2), 1);
+        assert_eq!(c.rack_of(3), 1);
+        let share = Share { gpus: 2, cpus: 6.0, mem_gb: 100.0 };
+        let mut same_rack = Placement::default();
+        same_rack.shares.insert(0, share);
+        same_rack.shares.insert(1, share);
+        assert_eq!(c.racks_spanned(&same_rack), 1);
+        let mut cross = Placement::default();
+        cross.shares.insert(1, share);
+        cross.shares.insert(2, share);
+        assert_eq!(c.racks_spanned(&cross), 2);
+        assert_eq!(c.racks_spanned(&Placement::default()), 0);
+        // Flat (the default): everything is one rack.
+        let flat = Cluster::homogeneous(spec(), 4);
+        assert_eq!(flat.racks_spanned(&cross), 1);
+        assert_eq!(flat.rack_of(3), 0);
+    }
+
+    #[test]
+    fn rack_of_resolves_sparse_ids_by_position() {
+        // Racks are positional: ids 0,2,5 sit at positions 0,1,2, so with
+        // 2 racks over 3 servers (spr = 2) id 5 — position 2 — is rack 1.
+        let mut c = Cluster::with_server_ids(spec(), &[0, 2, 5]);
+        c.set_topology(TopologySpec::racks(2).for_servers(3));
+        assert_eq!(c.rack_of(0), 0);
+        assert_eq!(c.rack_of(2), 0);
+        assert_eq!(c.rack_of(5), 1);
     }
 }

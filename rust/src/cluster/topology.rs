@@ -1,0 +1,257 @@
+//! Rack topology (ISSUE 7): a deterministic, position-derived rack
+//! layout over one pool's scan order.
+//!
+//! Synergy's mechanism treats servers as interchangeable, but real
+//! multi-GPU gangs pay heavily for crossing racks (the Philly analysis,
+//! arXiv:1901.05758). The model here is deliberately minimal: a pool's
+//! servers are assigned to `racks` contiguous groups of
+//! `servers_per_rack` by *scan position* — no configuration file, no
+//! per-server labels — so the layout is a pure function of the pool
+//! shape and therefore bit-reproducible across runs, hosts and
+//! `--threads`.
+//!
+//! The flat topology (`racks == 1`, the default) is the pre-topology
+//! behaviour *by construction*: every server maps to rack 0, rack
+//! ranking degenerates to a single class (candidate orders are
+//! untouched), and [`Topology::link_penalty`] returns exactly `1.0`
+//! without performing a division — so flat runs are byte-identical to
+//! pre-topology schedules (golden-pinned).
+//!
+//! Two layers:
+//!
+//! - [`TopologySpec`] — the config/CLI-level description (`--topology
+//!   racks:R`, the `topology` section of `ExperimentConfig`): rack
+//!   count, per-rack-boundary link cost, and the `placement_aware`
+//!   switch the locality ablation flips off;
+//! - [`Topology`] — the concrete per-pool instance, with
+//!   `servers_per_rack` derived from the pool size
+//!   ([`TopologySpec::for_servers`]).
+
+/// Default per-rack-boundary throughput cost: a gang spanning `r` racks
+/// runs at `rate / (1 + link_cost × (r − 1))`. Calibrated loosely to the
+/// Philly analysis' observation that cross-rack data-parallel training
+/// loses a noticeable double-digit share of throughput to interconnect
+/// contention; sweeps override it.
+pub const DEFAULT_LINK_COST: f64 = 0.15;
+
+/// Config-level topology description (what `--topology racks:R` and the
+/// `topology` section of `ExperimentConfig` carry): how many racks to
+/// split each pool into, the cross-rack link cost, and whether placement
+/// actually *uses* locality (the ablation's locality-blind arm keeps the
+/// link cost charged but hides racks from the packing order).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TopologySpec {
+    /// Number of racks per pool. 1 = flat (the default, byte-identical
+    /// to the pre-topology scheduler).
+    pub racks: u32,
+    /// Per-rack-boundary throughput penalty factor (see
+    /// [`Topology::link_penalty`]).
+    pub link_cost: f64,
+    /// When false, candidate ordering ignores racks entirely while the
+    /// link cost still charges — the locality-blind ablation arm.
+    pub placement_aware: bool,
+}
+
+impl Default for TopologySpec {
+    fn default() -> Self {
+        TopologySpec {
+            racks: 1,
+            link_cost: DEFAULT_LINK_COST,
+            placement_aware: true,
+        }
+    }
+}
+
+impl TopologySpec {
+    /// The flat (pre-topology) layout.
+    pub fn flat() -> TopologySpec {
+        TopologySpec::default()
+    }
+
+    /// `racks` racks at the default link cost, locality-aware.
+    pub fn racks(racks: u32) -> TopologySpec {
+        TopologySpec { racks, ..TopologySpec::default() }
+    }
+
+    pub fn is_flat(&self) -> bool {
+        self.racks <= 1
+    }
+
+    /// Parse the CLI form: `flat` or `racks:R` (R ≥ 1).
+    pub fn parse(s: &str) -> Result<TopologySpec, String> {
+        if s == "flat" {
+            return Ok(TopologySpec::flat());
+        }
+        let rest = s.strip_prefix("racks:").ok_or_else(|| {
+            format!("topology '{s}': expected 'flat' or 'racks:R'")
+        })?;
+        let racks: u32 = rest.parse().map_err(|_| {
+            format!("topology '{s}': rack count must be a positive integer")
+        })?;
+        if racks == 0 {
+            return Err(format!("topology '{s}': need at least one rack"));
+        }
+        Ok(TopologySpec::racks(racks))
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.racks == 0 {
+            return Err("topology: need at least one rack".to_string());
+        }
+        if !(self.link_cost >= 0.0 && self.link_cost.is_finite()) {
+            return Err(format!(
+                "topology: link_cost must be finite and >= 0, got {}",
+                self.link_cost
+            ));
+        }
+        Ok(())
+    }
+
+    /// Concretize for a pool of `n_servers`: contiguous scan-position
+    /// groups of `ceil(n / racks)` servers (the last rack may be short —
+    /// `rack_of` clamps, so every server maps to a valid rack even when
+    /// `racks > n_servers`).
+    pub fn for_servers(&self, n_servers: usize) -> Topology {
+        let racks = self.racks.max(1);
+        let spr = (n_servers as u32).div_ceil(racks).max(1);
+        Topology {
+            racks,
+            servers_per_rack: spr,
+            link_cost: self.link_cost,
+            placement_aware: self.placement_aware,
+        }
+    }
+}
+
+/// The concrete topology of one pool: `racks` contiguous groups of
+/// `servers_per_rack` servers in scan-position order.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Topology {
+    pub racks: u32,
+    pub servers_per_rack: u32,
+    pub link_cost: f64,
+    /// See [`TopologySpec::placement_aware`].
+    pub placement_aware: bool,
+}
+
+impl Default for Topology {
+    fn default() -> Self {
+        Topology::flat()
+    }
+}
+
+impl Topology {
+    /// The flat single-rack layout (pre-topology behaviour).
+    pub fn flat() -> Topology {
+        Topology {
+            racks: 1,
+            // Never consulted when flat (`rack_of` short-circuits), but
+            // keep it saturating so arithmetic stays safe regardless.
+            servers_per_rack: u32::MAX,
+            link_cost: DEFAULT_LINK_COST,
+            placement_aware: true,
+        }
+    }
+
+    pub fn is_flat(&self) -> bool {
+        self.racks <= 1
+    }
+
+    /// Rack of the server at scan position `pos`. Positions past the
+    /// nominal grid clamp into the last rack, so sparse/short pools
+    /// still map totally.
+    pub fn rack_of(&self, pos: u32) -> u32 {
+        if self.is_flat() {
+            0
+        } else {
+            (pos / self.servers_per_rack).min(self.racks - 1)
+        }
+    }
+
+    /// Throughput divisor for a gang spanning `racks_spanned` racks:
+    /// `1 + link_cost × (racks_spanned − 1)`. Exactly `1.0` (no
+    /// division performed by callers' guard) for single-rack gangs — the
+    /// flat pass-through is bit-exact by construction.
+    pub fn link_penalty(&self, racks_spanned: u32) -> f64 {
+        if racks_spanned <= 1 {
+            1.0
+        } else {
+            1.0 + self.link_cost * (racks_spanned - 1) as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_flat_and_racks() {
+        assert_eq!(TopologySpec::parse("flat").unwrap(), TopologySpec::flat());
+        let t = TopologySpec::parse("racks:4").unwrap();
+        assert_eq!(t.racks, 4);
+        assert!(!t.is_flat());
+        assert!(t.placement_aware);
+        assert!(TopologySpec::parse("racks:0").is_err());
+        assert!(TopologySpec::parse("racks:x").is_err());
+        assert!(TopologySpec::parse("fat-tree").is_err());
+        assert!(TopologySpec::parse("racks:").is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_link_cost() {
+        assert!(TopologySpec::default().validate().is_ok());
+        let bad = TopologySpec { link_cost: -0.1, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let nan = TopologySpec { link_cost: f64::NAN, ..Default::default() };
+        assert!(nan.validate().is_err());
+    }
+
+    #[test]
+    fn for_servers_splits_contiguously_with_ceil() {
+        // 2 racks over 4 servers: positions 0,1 → rack 0; 2,3 → rack 1.
+        let t = TopologySpec::racks(2).for_servers(4);
+        assert_eq!(t.servers_per_rack, 2);
+        assert_eq!(
+            (0..4).map(|p| t.rack_of(p)).collect::<Vec<_>>(),
+            vec![0, 0, 1, 1]
+        );
+        // Odd split: 3 racks over 5 servers → spr = 2, last rack short.
+        let t = TopologySpec::racks(3).for_servers(5);
+        assert_eq!(
+            (0..5).map(|p| t.rack_of(p)).collect::<Vec<_>>(),
+            vec![0, 0, 1, 1, 2]
+        );
+        // More racks than servers: every server still maps, in range.
+        let t = TopologySpec::racks(8).for_servers(3);
+        for p in 0..3 {
+            assert!(t.rack_of(p) < 8);
+        }
+        // Clamp: positions past the nominal grid land in the last rack.
+        let t = TopologySpec::racks(2).for_servers(3);
+        assert_eq!(t.rack_of(10), 1);
+    }
+
+    #[test]
+    fn flat_maps_everything_to_rack_zero_and_unit_penalty() {
+        let t = Topology::flat();
+        assert!(t.is_flat());
+        for p in [0u32, 1, 7, 1000] {
+            assert_eq!(t.rack_of(p), 0);
+        }
+        // The pass-through invariant: the penalty for a one-rack gang is
+        // *exactly* 1.0 — callers can guard on it and skip the division,
+        // keeping flat schedules bit-identical to pre-topology ones.
+        assert_eq!(t.link_penalty(0), 1.0);
+        assert_eq!(t.link_penalty(1), 1.0);
+    }
+
+    #[test]
+    fn link_penalty_grows_per_rack_boundary() {
+        let t = TopologySpec { racks: 4, link_cost: 0.25, placement_aware: true }
+            .for_servers(8);
+        assert_eq!(t.link_penalty(1), 1.0);
+        assert!((t.link_penalty(2) - 1.25).abs() < 1e-12);
+        assert!((t.link_penalty(4) - 1.75).abs() < 1e-12);
+    }
+}

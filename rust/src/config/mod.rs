@@ -15,7 +15,7 @@
 //! [`ExperimentConfig::to_json`] round-trips everything
 //! [`ExperimentConfig::from_json`] reads.
 
-use crate::cluster::{GpuGen, ServerSpec, TypeSpec};
+use crate::cluster::{GpuGen, ServerSpec, TopologySpec, TypeSpec};
 use crate::job::Job;
 use crate::trace::{Split, TraceConfig};
 use crate::util::json::Json;
@@ -47,6 +47,11 @@ pub struct ExperimentConfig {
     /// counts per type, all sharing `spec`'s server shape. Empty =
     /// homogeneous (`n_servers` V100 machines).
     pub hetero: Vec<HeteroType>,
+    /// Rack topology (`topology` JSON key, either the CLI string form
+    /// `"racks:R"`/`"flat"` or an object `{"racks": R, "link_cost": c,
+    /// "placement_aware": b}`). The default flat spec reproduces
+    /// pre-topology schedules byte-identically.
+    pub topology: TopologySpec,
 }
 
 /// One machine type of a config-described mixed fleet.
@@ -71,6 +76,7 @@ impl Default for ExperimentConfig {
             trace_format: "philly".into(),
             tenants: None,
             hetero: Vec::new(),
+            topology: TopologySpec::default(),
         }
     }
 }
@@ -107,6 +113,7 @@ impl ExperimentConfig {
                 self.trace_format
             ));
         }
+        self.topology.validate().map_err(|e| format!("topology: {e}"))?;
         for (i, t) in self.hetero.iter().enumerate() {
             if t.machines == 0 {
                 return Err(format!(
@@ -229,6 +236,27 @@ impl ExperimentConfig {
             }
             cfg.hetero = types;
         }
+        match doc.get("topology") {
+            Json::Null => {}
+            v => {
+                if let Some(s) = v.as_str() {
+                    cfg.topology = TopologySpec::parse(s)
+                        .map_err(|e| format!("topology: {e}"))?;
+                } else {
+                    let mut spec = TopologySpec::default();
+                    if let Some(n) = v.get("racks").as_usize() {
+                        spec.racks = n as u32;
+                    }
+                    if let Some(n) = v.get("link_cost").as_f64() {
+                        spec.link_cost = n;
+                    }
+                    if let Some(b) = v.get("placement_aware").as_bool() {
+                        spec.placement_aware = b;
+                    }
+                    cfg.topology = spec;
+                }
+            }
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -286,6 +314,19 @@ impl ExperimentConfig {
                         })
                         .collect(),
                 ),
+            ));
+        }
+        if self.topology != TopologySpec::default() {
+            pairs.push((
+                "topology",
+                Json::obj(vec![
+                    ("racks", Json::num(self.topology.racks as f64)),
+                    ("link_cost", Json::num(self.topology.link_cost)),
+                    (
+                        "placement_aware",
+                        Json::Bool(self.topology.placement_aware),
+                    ),
+                ]),
             ));
         }
         Json::obj(pairs)
@@ -477,6 +518,47 @@ mod tests {
             ExperimentConfig::from_json(&Json::parse(&encoded).unwrap())
                 .unwrap();
         assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn topology_section_parses_in_both_forms_and_roundtrips() {
+        // CLI string form.
+        let doc = Json::parse(r#"{"topology": "racks:3"}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&doc).unwrap();
+        assert_eq!(cfg.topology.racks, 3);
+        assert!(cfg.topology.placement_aware);
+        // Object form with every knob.
+        let doc = Json::parse(
+            r#"{"topology": {"racks": 2, "link_cost": 0.5,
+                             "placement_aware": false}}"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&doc).unwrap();
+        assert_eq!(cfg.topology.racks, 2);
+        assert_eq!(cfg.topology.link_cost, 0.5);
+        assert!(!cfg.topology.placement_aware);
+        let encoded = cfg.to_json().encode();
+        let back =
+            ExperimentConfig::from_json(&Json::parse(&encoded).unwrap())
+                .unwrap();
+        assert_eq!(back, cfg);
+        // Default (flat) configs omit the key entirely, keeping existing
+        // config files byte-stable.
+        let plain = ExperimentConfig::default().to_json().encode();
+        assert!(!plain.contains("topology"), "{plain}");
+    }
+
+    #[test]
+    fn bad_topology_rejected() {
+        for doc in [
+            r#"{"topology": "racks:0"}"#,
+            r#"{"topology": "mesh"}"#,
+            r#"{"topology": {"racks": 0}}"#,
+            r#"{"topology": {"link_cost": -1}}"#,
+        ] {
+            let doc = Json::parse(doc).unwrap();
+            assert!(ExperimentConfig::from_json(&doc).is_err(), "{doc:?}");
+        }
     }
 
     #[test]

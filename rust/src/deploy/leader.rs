@@ -107,6 +107,33 @@ impl LeaderReport {
     }
 }
 
+/// Absolute-deadline round ticker. Round `k` ends at `k × period` from
+/// the run's start rather than `period` after the round's *work*
+/// finished — the old `sleep(period)`-after-planning accumulated every
+/// round's planning/reconcile cost into the wall grid, so N rounds took
+/// `N × period + Σ work` real seconds and drifted away from the nominal
+/// sim-time stamps telemetry records. Pure arithmetic so the policy is
+/// testable without a wall clock.
+struct RoundTicker {
+    period_s: f64,
+    next_tick_s: f64,
+}
+
+impl RoundTicker {
+    fn new(period_s: f64) -> RoundTicker {
+        RoundTicker { period_s, next_tick_s: period_s }
+    }
+
+    /// Seconds to sleep at `elapsed_s` (time since run start) to reach
+    /// the next round boundary, advancing the boundary one period. An
+    /// overrunning round returns 0 — the grid is held, not shifted.
+    fn sleep_s(&mut self, elapsed_s: f64) -> f64 {
+        let s = (self.next_tick_s - elapsed_s).max(0.0);
+        self.next_tick_s += self.period_s;
+        s
+    }
+}
+
 /// The leader process body.
 pub struct Leader {
     pub cfg: LeaderConfig,
@@ -233,6 +260,7 @@ impl Leader {
 
         let start = Instant::now();
         let mut rounds = 0usize;
+        let mut ticker = RoundTicker::new(self.cfg.round_real_s);
         // Same recorder as the simulator, fed by the live round loop.
         let mut recorder = self.cfg.telemetry.as_ref().map(|_| {
             crate::telemetry::TelemetryRecorder::new(
@@ -432,6 +460,21 @@ impl Leader {
                         e.pending += 1;
                     }
                 }
+                // Gang counters off the planned grants (the mirror fleet
+                // is flat today, so cross_rack stays 0 — the field keeps
+                // the row layout identical to the simulator's).
+                let mut gangs_placed = 0u32;
+                let mut cross_rack_gangs = 0u32;
+                for grant in plan.grants.values() {
+                    if grant.placement.span() > 1 {
+                        gangs_placed += 1;
+                        if round_fleet.pool(grant.gen).is_some_and(|p| {
+                            p.cluster.racks_spanned(&grant.placement) > 1
+                        }) {
+                            cross_rack_gangs += 1;
+                        }
+                    }
+                }
                 let running =
                     tenants.values().map(|t| t.running).sum::<u32>();
                 let queued =
@@ -457,6 +500,8 @@ impl Leader {
                         .iter()
                         .map(|p| p.total_mem_gb)
                         .sum(),
+                    gangs_placed,
+                    cross_rack_gangs,
                     wall_ms: start.elapsed().as_millis() as i64,
                     pools,
                     tenants: tenants.values().copied().collect(),
@@ -487,7 +532,10 @@ impl Leader {
                 );
             }
             rounds += 1;
-            std::thread::sleep(Duration::from_secs_f64(self.cfg.round_real_s));
+            let sleep_s = ticker.sleep_s(start.elapsed().as_secs_f64());
+            if sleep_s > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(sleep_s));
+            }
         }
 
         // Shutdown.
@@ -531,5 +579,47 @@ fn pull_feasible(
              {total_gpus}; dropped",
             spec.id.0, spec.gpus
         );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::RoundTicker;
+
+    #[test]
+    fn ticker_subtracts_work_time_from_each_sleep() {
+        let mut t = RoundTicker::new(2.0);
+        // Round 0's work took 0.5 s: sleep only the remaining 1.5 s so
+        // the boundary lands at exactly 2.0 s.
+        assert!((t.sleep_s(0.5) - 1.5).abs() < 1e-12);
+        // Round 1's work ran until 2.3 s: the 4.0 s boundary needs 1.7 s
+        // — the sleep does NOT reset to a full period.
+        assert!((t.sleep_s(2.3) - 1.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ticker_absorbs_overruns_without_shifting_the_grid() {
+        let mut t = RoundTicker::new(1.0);
+        // Round 0 overran its whole budget: no sleep...
+        assert_eq!(t.sleep_s(2.5), 0.0);
+        // ...and the next boundary is still the absolute 2.0 s mark
+        // (already passed), then 3.0 s — the grid never drifts.
+        assert_eq!(t.sleep_s(2.6), 0.0);
+        assert!((t.sleep_s(2.7) - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ticker_boundaries_are_absolute_multiples_of_the_period() {
+        let mut t = RoundTicker::new(0.25);
+        let mut elapsed = 0.0;
+        for k in 1..=20 {
+            // Each round does 0.01 s of "work" past the last boundary.
+            elapsed += 0.01;
+            elapsed += t.sleep_s(elapsed);
+            assert!(
+                (elapsed - 0.25 * k as f64).abs() < 1e-9,
+                "round {k} must end on the absolute grid, not drift"
+            );
+        }
     }
 }

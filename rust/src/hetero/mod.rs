@@ -31,7 +31,7 @@ pub use crate::mechanism::{Grant as HetGrant, JobRequest as HetJobRequest};
 pub use crate::profiler::Sensitivity as HeteroSensitivity;
 pub use crate::sim::FleetModel as HeteroModel;
 
-use crate::cluster::ServerSpec;
+use crate::cluster::{ServerSpec, TopologySpec};
 use crate::job::{Job, JobId, TenantId};
 use crate::metrics::{per_tenant_stats, JctStats, UtilizationLog};
 use crate::sim::{FinishedJob, SimConfig, SimResult, Simulator};
@@ -47,6 +47,9 @@ pub struct HeteroSimConfig {
     pub mechanism: String,
     pub profile_noise: f64,
     pub max_sim_s: f64,
+    /// Rack topology, concretized per pool (`--topology racks:R`); the
+    /// default flat spec is the pre-topology behaviour.
+    pub topology: TopologySpec,
 }
 
 impl Default for HeteroSimConfig {
@@ -62,6 +65,7 @@ impl Default for HeteroSimConfig {
             mechanism: "het-tune".into(),
             profile_noise: 0.0,
             max_sim_s: 400.0 * 24.0 * 3600.0,
+            topology: TopologySpec::default(),
         }
     }
 }
@@ -183,6 +187,7 @@ impl HeteroSimulator {
                 mechanism: self.cfg.mechanism.clone(),
                 profile_noise: self.cfg.profile_noise,
                 max_sim_s: self.cfg.max_sim_s,
+                topology: self.cfg.topology,
                 ..SimConfig::default()
             },
             self.quotas.clone(),

@@ -6,6 +6,9 @@
 //! synergy sim       --policy srtf --mechanism tune --servers 16 \
 //!                   --jobs 1000 --load 8 --split 20,70,10 [--multi-gpu]
 //!                   [--tenants a:2,b:1]
+//!                   [--topology racks:2]  # rack-aware gang placement +
+//!                   # per-rack link cost; default flat = pre-topology
+//!                   # schedules, byte-identical
 //!                   [--telemetry run.jsonl|run.csv] [--telemetry-timing]
 //!                   # per-round/per-pool/per-tenant series + plan trace;
 //!                   # counters only unless --telemetry-timing
@@ -28,7 +31,7 @@
 //! (`simulate` is an alias of `sim`.) See the [`synergy::workload`] docs
 //! for trace formats and the `--tenants name:weight,...` spec syntax.
 
-use synergy::cluster::ServerSpec;
+use synergy::cluster::{ServerSpec, TopologySpec};
 use synergy::config::ExperimentConfig;
 use synergy::deploy::{Leader, LeaderConfig, Worker, WorkerConfig};
 use synergy::job::{Job, JobId, ModelKind, ALL_MODELS};
@@ -89,6 +92,16 @@ fn trace_from_args(args: &Args) -> TraceConfig {
             Some(load)
         },
         seed: args.u64("seed", 1),
+    }
+}
+
+/// `--topology flat|racks:R` (shared by `sim`, `sweep`, `compare`,
+/// `hetero`); absent = flat, the byte-identical pre-topology behaviour.
+fn topology_from_args(args: &Args) -> TopologySpec {
+    match args.get("topology") {
+        Some(s) => TopologySpec::parse(s)
+            .unwrap_or_else(|e| panic!("--topology: {e}")),
+        None => TopologySpec::default(),
     }
 }
 
@@ -243,6 +256,7 @@ fn sim_config(args: &Args, mechanism: &str, policy: &str) -> SimConfig {
         types: None,
         force_replan: args.flag("force-replan"),
         no_resume: args.flag("no-resume"),
+        topology: topology_from_args(args),
     }
 }
 
@@ -526,7 +540,7 @@ fn cmd_models() {
 ///
 /// `synergy hetero --mechanism het-tune --policy srtf --machines 8 \
 ///     --jobs 500 --load 6 --split 30,50,20 [--multi-gpu]
-///     [--types k80:4,p100:8,v100:8]
+///     [--types k80:4,p100:8,v100:8] [--topology racks:2]
 ///     [--trace x.csv --format philly|alibaba] [--tenants a:2,b:1]
 ///     [--json [--plan-stats]]`
 ///
@@ -584,6 +598,7 @@ fn cmd_hetero(args: &Args) {
             mechanism: mechanism.clone(),
             profile_noise: args.f64("noise", 0.0),
             max_sim_s: args.f64("max-sim-days", 400.0) * 86_400.0,
+            topology: topology_from_args(args),
         },
         workload.quotas.clone(),
     );
@@ -739,6 +754,7 @@ fn cmd_config(args: &Args) {
             types: cfg.types(),
             force_replan: false,
             no_resume: false,
+            topology: cfg.topology,
         },
         quotas.clone(),
     );

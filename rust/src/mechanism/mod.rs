@@ -343,6 +343,14 @@ pub(crate) fn delegate_pools(
 pub fn proportional_split(demand: &DemandVector, gpus_per_server: &[(usize, u32)])
     -> Placement
 {
+    // An empty split would build an empty-share Placement — a "grant"
+    // holding no resources that still counts as placed. No caller may
+    // construct one (the zero-GPU guard in `multi_server_fit` returns
+    // `None` instead); keep that loud.
+    assert!(
+        !gpus_per_server.is_empty() && demand.gpus > 0,
+        "proportional_split of an empty pick set (zero-GPU demand?)"
+    );
     let total: u32 = gpus_per_server.iter().map(|&(_, g)| g).sum();
     assert_eq!(total, demand.gpus, "split must cover the GPU demand");
     let mut p = Placement::default();
@@ -421,17 +429,62 @@ pub fn best_fit_scan(
     multi_server_fit(cluster, demand, |_s| true)
 }
 
+/// Rack preference for a candidate set: racks ranked by total free GPUs
+/// among the candidates, descending (lower rack id on ties), so a gang
+/// concentrates in the rack(s) able to host most of it. Returns `None`
+/// on flat or locality-blind topologies — every server ranks equal and
+/// callers keep the exact pre-topology order.
+pub(crate) fn rack_ranks(
+    cluster: &Cluster,
+    candidates: &[&crate::cluster::Server],
+) -> Option<Vec<u32>> {
+    let topo = cluster.topology();
+    if topo.is_flat() || !topo.placement_aware {
+        return None;
+    }
+    let mut free_by_rack = vec![0u32; topo.racks as usize];
+    for s in candidates {
+        free_by_rack[cluster.rack_of(s.id) as usize] += s.free_gpus;
+    }
+    let mut order: Vec<u32> = (0..topo.racks).collect();
+    order.sort_by(|&a, &b| {
+        free_by_rack[b as usize]
+            .cmp(&free_by_rack[a as usize])
+            .then(a.cmp(&b))
+    });
+    let mut rank = vec![0u32; topo.racks as usize];
+    for (i, r) in order.iter().enumerate() {
+        rank[*r as usize] = i as u32;
+    }
+    Some(rank)
+}
+
 /// Multi-server placement honoring per-server proportional CPU/mem; the
 /// `admit` filter restricts candidate servers (used by GPU-only search).
 /// Candidates come from the free-capacity index (servers holding any
 /// free GPU — at load a small fraction of the pool) and are then sorted
 /// by the exact pre-index comparator, a total order, so the result is
 /// byte-identical to the full-scan collection.
+///
+/// Under a rack topology (racks ≥ 2, placement-aware) a rack-rank key is
+/// folded in *front* of the `(free_gpus desc, free_score, scan pos)`
+/// packing key: candidates in the rack with the most free capacity among
+/// the admitted set sort first, so a gang consolidates into as few racks
+/// as possible before the per-server tie-breaks apply. On the flat
+/// topology every server shares rank 0 and the order — and therefore
+/// every schedule — is byte-identical to the pre-topology code
+/// (golden-pinned).
 pub fn multi_server_fit(
     cluster: &Cluster,
     demand: &DemandVector,
     admit: impl Fn(&crate::cluster::Server) -> bool,
 ) -> Option<Placement> {
+    // A zero-GPU gang has no per-GPU proportional split (the divisions
+    // below would be NaN) and would otherwise fall through to an
+    // empty-picks "success"; it is not placeable by this helper.
+    if demand.gpus == 0 {
+        return None;
+    }
     let per_gpu_cpu = demand.cpus / demand.gpus as f64;
     let per_gpu_mem = demand.mem_gb / demand.gpus as f64;
     // Order candidate servers by free GPUs descending (fewest fragments),
@@ -440,12 +493,21 @@ pub fn multi_server_fit(
         .servers_by_position(1)
         .filter(|s| admit(s))
         .collect();
-    candidates.sort_by(|a, b| {
-        b.free_gpus
-            .cmp(&a.free_gpus)
-            .then(a.free_score().partial_cmp(&b.free_score()).unwrap())
-            .then(a.id.cmp(&b.id))
-    });
+    match rack_ranks(cluster, &candidates) {
+        None => candidates.sort_by(|a, b| {
+            b.free_gpus
+                .cmp(&a.free_gpus)
+                .then(a.free_score().total_cmp(&b.free_score()))
+                .then(a.id.cmp(&b.id))
+        }),
+        Some(rank) => candidates.sort_by(|a, b| {
+            rank[cluster.rack_of(a.id) as usize]
+                .cmp(&rank[cluster.rack_of(b.id) as usize])
+                .then(b.free_gpus.cmp(&a.free_gpus))
+                .then(a.free_score().total_cmp(&b.free_score()))
+                .then(a.id.cmp(&b.id))
+        }),
+    }
 
     let mut remaining = demand.gpus;
     let mut picks: Vec<(usize, u32)> = Vec::new();
@@ -587,6 +649,88 @@ mod tests {
         let p = multi_server_fit(&c, &d, |_| true).unwrap();
         assert_eq!(p.shares.len(), 1);
         assert!(p.shares.contains_key(&1));
+    }
+
+    #[test]
+    fn zero_gpu_demand_is_not_placeable() {
+        // Regression (ISSUE 7): a zero-GPU demand used to come back as
+        // Some(Placement) with *empty* shares (`remaining` started at 0,
+        // the pick loop never ran) after computing NaN per-GPU CPU/mem.
+        // DemandVector::new asserts gpus > 0, so build the degenerate
+        // value the way a buggy caller would: by struct literal.
+        let c = cluster(2);
+        let d = DemandVector { gpus: 0, cpus: 4.0, mem_gb: 100.0 };
+        assert!(multi_server_fit(&c, &d, |_| true).is_none());
+        let d = DemandVector { gpus: 0, cpus: 0.0, mem_gb: 0.0 };
+        assert!(multi_server_fit(&c, &d, |_| true).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "empty pick set")]
+    fn proportional_split_rejects_empty_picks() {
+        let d = DemandVector { gpus: 0, cpus: 4.0, mem_gb: 100.0 };
+        proportional_split(&d, &[]);
+    }
+
+    /// Load the 4-server cluster so rack 0 (servers 0,1) holds 8 free
+    /// GPUs split 7+1 and rack 1 (servers 2,3) holds 10 split 5+5.
+    fn two_rack_loaded(topology: Option<crate::cluster::TopologySpec>) -> Cluster {
+        let mut c = cluster(4);
+        if let Some(spec) = topology {
+            c.set_topology(spec.for_servers(4));
+        }
+        let mk = |g: u32| Share { gpus: g, cpus: g as f64, mem_gb: g as f64 * 10.0 };
+        c.place(JobId(90), Placement::single(0, mk(1)));
+        c.place(JobId(91), Placement::single(1, mk(7)));
+        c.place(JobId(92), Placement::single(2, mk(3)));
+        c.place(JobId(93), Placement::single(3, mk(3)));
+        c
+    }
+
+    #[test]
+    fn rack_aware_fit_consolidates_into_the_roomier_rack() {
+        use crate::cluster::TopologySpec;
+        let d = DemandVector::new(10, 10.0, 100.0);
+        // Flat order is free-GPUs-descending: server 0 (7 free) first,
+        // then server 2 — a placement straddling both racks.
+        let flat = two_rack_loaded(None);
+        let p = multi_server_fit(&flat, &d, |_| true).unwrap();
+        assert!(p.shares.contains_key(&0) && p.shares.contains_key(&2));
+        // Rack-aware: rack 1 has more aggregate free capacity (10 vs 8),
+        // so its servers sort first and the gang lands entirely inside it.
+        let aware = two_rack_loaded(Some(TopologySpec::racks(2)));
+        let p = multi_server_fit(&aware, &d, |_| true).unwrap();
+        let ids: Vec<usize> = p.shares.keys().copied().collect();
+        assert_eq!(ids, vec![2, 3], "consolidated into rack 1");
+        assert_eq!(aware.racks_spanned(&p), 1);
+        // Locality-blind ablation arm: racks exist but the packing order
+        // ignores them — byte-identical picks to the flat order.
+        let blind = two_rack_loaded(Some(TopologySpec {
+            placement_aware: false,
+            ..TopologySpec::racks(2)
+        }));
+        let pb = multi_server_fit(&blind, &d, |_| true).unwrap();
+        let pf = multi_server_fit(&flat, &d, |_| true).unwrap();
+        assert_eq!(pb, pf);
+        assert_eq!(blind.racks_spanned(&pb), 2);
+    }
+
+    #[test]
+    fn flat_topology_fit_is_identity() {
+        use crate::cluster::TopologySpec;
+        // An explicit racks:1 spec must not change a single pick relative
+        // to a cluster that never heard of topology.
+        let plain = two_rack_loaded(None);
+        let flat = two_rack_loaded(Some(TopologySpec::flat()));
+        for gpus in 1..=10u32 {
+            let d = DemandVector::new(gpus, gpus as f64, gpus as f64 * 10.0);
+            assert_eq!(
+                multi_server_fit(&plain, &d, |_| true),
+                multi_server_fit(&flat, &d, |_| true),
+                "{gpus} GPUs"
+            );
+            assert_eq!(best_fit(&plain, &d), best_fit(&flat, &d));
+        }
     }
 
     #[test]

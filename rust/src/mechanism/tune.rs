@@ -297,6 +297,14 @@ fn redistribute_spare(
 /// proportional share on a server that could host (part of) `job`'s GPUs.
 /// Returns false if no such victim exists.
 ///
+/// Under a rack topology (racks ≥ 2, placement-aware) victims are ranked
+/// first by the best rack rank among their touched candidate servers —
+/// the same rack-preference order `multi_server_fit` packs by — so
+/// reclaimed CPU/mem frees up in the rack the stuck gang would
+/// consolidate into, and only then by largest excess. On the flat
+/// topology every victim shares rank 0 and the selection reduces exactly
+/// to the pre-topology largest-excess rule (first maximum kept).
+///
 /// A victim's proportional floor is recomputed from its granted gang
 /// size and the pool's spec ratios — bit-identical to the request-list
 /// values (same inputs, same expression), without carrying a side map
@@ -313,14 +321,28 @@ fn downgrade_one_victim(
     // below then probes it in O(span) per victim instead of the old
     // O(victims × candidate servers) `contains` scans.
     let mut candidate = vec![false; cluster.server_id_bound()];
-    let mut any_candidate = false;
+    let mut candidates: Vec<&crate::cluster::Server> = Vec::new();
     for s in cluster.servers_by_position(1) {
         candidate[s.id] = true;
-        any_candidate = true;
+        candidates.push(s);
     }
-    if !any_candidate {
+    if candidates.is_empty() {
         return false;
     }
+    // Per-candidate-server rack rank (None when flat/locality-blind —
+    // all ranks 0 and the rack term vanishes from the victim key).
+    let rack_rank_of: Vec<u32> = match super::rack_ranks(cluster, &candidates)
+    {
+        Some(rank) => {
+            let mut by_id = vec![0u32; cluster.server_id_bound()];
+            for s in &candidates {
+                by_id[s.id] = rank[cluster.rack_of(s.id) as usize];
+            }
+            by_id
+        }
+        None => Vec::new(),
+    };
+    drop(candidates);
     let spec = cluster.spec;
     let prop_of = |gpus: u32| {
         DemandVector::proportional(
@@ -330,8 +352,9 @@ fn downgrade_one_victim(
         )
     };
 
-    // Find the victim with the largest reclaimable excess on a candidate.
-    let mut best: Option<(JobId, f64)> = None;
+    // Find the best victim: preferred rack first (rank 0 when flat),
+    // largest reclaimable excess within a rank.
+    let mut best: Option<(JobId, u32, f64)> = None;
     for (&vid, grant) in plan.grants().iter() {
         if vid == job.id {
             continue;
@@ -340,22 +363,37 @@ fn downgrade_one_victim(
         if !grant.demand.exceeds(&prop) {
             continue;
         }
-        let touches =
-            grant.placement.shares.keys().any(|sid| candidate[*sid]);
-        if !touches {
-            continue;
+        // Best (lowest) rack rank among the candidate servers this
+        // victim touches; u32::MAX if it touches none.
+        let mut vrank = u32::MAX;
+        for sid in grant.placement.shares.keys() {
+            if candidate[*sid] {
+                if rack_rank_of.is_empty() {
+                    vrank = 0;
+                    break;
+                }
+                vrank = vrank.min(rack_rank_of[*sid]);
+            }
+        }
+        if vrank == u32::MAX {
+            continue; // touches no candidate server
         }
         // Normalized excess (CPU cores + memory units above proportional).
         let excess = (grant.demand.cpus - prop.cpus).max(0.0)
             + (grant.demand.mem_gb - prop.mem_gb).max(0.0) / 12.5;
-        if best.map(|(_, e)| excess > e).unwrap_or(true) {
-            best = Some((vid, excess));
+        // Flat: ranks all equal, so this is exactly the pre-topology
+        // strict largest-excess rule (first maximum kept).
+        let better = best
+            .map(|(_, br, be)| vrank < br || (vrank == br && excess > be))
+            .unwrap_or(true);
+        if better {
+            best = Some((vid, vrank, excess));
         }
         if strategy == VictimStrategy::FirstFound && best.is_some() {
             break;
         }
     }
-    let Some((vid, _)) = best else { return false };
+    let Some((vid, _, _)) = best else { return false };
 
     // Downgrade: shrink each per-server share to the element-wise min of
     // the current and proportional demand for the GPUs it holds there

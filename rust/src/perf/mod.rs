@@ -45,6 +45,23 @@ use cache::MinIoCache;
 /// data-stall studies [41, 62] operate.
 pub const STORAGE_BW_MB_PER_GPU: f64 = 25.0;
 
+/// Charge the rack-topology link cost on a gang's round rate: a gang
+/// spanning `racks_spanned` racks runs at
+/// `rate / (1 + link_cost × (racks_spanned − 1))` — each rack boundary
+/// adds one `link_cost` of interconnect contention on top of the
+/// per-server network penalty the engine already charges (the Philly
+/// analysis' locality effect, arXiv:1901.05758).
+///
+/// Single-rack gangs return `rate` unchanged — an early return, not a
+/// division by 1.0 — so flat-topology schedules stay bit-identical to
+/// pre-topology ones (golden-pinned).
+pub fn link_adjusted_rate(rate: f64, racks_spanned: u32, link_cost: f64) -> f64 {
+    if racks_spanned <= 1 || link_cost == 0.0 {
+        return rate;
+    }
+    rate / (1.0 + link_cost * (racks_spanned - 1) as f64)
+}
+
 /// The ground-truth world model handed to simulators and the profiler:
 /// one per machine type (server shape × GPU generation).
 #[derive(Debug, Clone, Copy)]
@@ -290,6 +307,20 @@ mod tests {
         for gen in crate::cluster::ALL_GENS {
             assert_eq!(model_on(gen).throughput(Gnmt, 1, 3.0, 10.0), 0.0);
         }
+    }
+
+    #[test]
+    fn link_cost_charges_per_rack_boundary_and_is_identity_at_one() {
+        let rate = 123.456789;
+        // Bit-exact identity for single-rack gangs and zero link cost —
+        // the flat-topology byte-identity invariant rests on this.
+        assert_eq!(link_adjusted_rate(rate, 0, 0.15).to_bits(), rate.to_bits());
+        assert_eq!(link_adjusted_rate(rate, 1, 0.15).to_bits(), rate.to_bits());
+        assert_eq!(link_adjusted_rate(rate, 4, 0.0).to_bits(), rate.to_bits());
+        // Each additional rack adds one link_cost to the divisor.
+        assert!((link_adjusted_rate(100.0, 2, 0.25) - 80.0).abs() < 1e-9);
+        assert!((link_adjusted_rate(100.0, 3, 0.25) - 100.0 / 1.5).abs() < 1e-9);
+        assert!(link_adjusted_rate(100.0, 3, 0.25) < link_adjusted_rate(100.0, 2, 0.25));
     }
 
     #[test]

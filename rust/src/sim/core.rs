@@ -173,6 +173,13 @@ pub struct PlanStats {
     /// Per-pool (reused, replayed) step split, pool order (empty from
     /// non-resumable mechanisms and batch fallbacks).
     pub pool_stats: Vec<crate::mechanism::PoolPlanStats>,
+    /// Multi-server gangs this plan committed (placements spanning more
+    /// than one server).
+    pub gangs_placed: u32,
+    /// Of [`PlanStats::gangs_placed`], the gangs whose servers straddle
+    /// a rack boundary under the fleet's [`crate::cluster::Topology`].
+    /// Always 0 on a flat topology.
+    pub cross_rack_gangs: u32,
 }
 
 /// What a topology must provide to the core loop. Implementations keep
@@ -404,6 +411,16 @@ pub struct SimResult {
     pub utilization: UtilizationLog,
     /// Total profiling cost across all jobs, minutes (§3.1 accounting).
     pub profiling_minutes: f64,
+    /// Multi-server gangs deployed, summed over executed rounds (a gang
+    /// running N rounds counts N times — round-weighted exposure, the
+    /// denominator for [`SimResult::cross_rack_fraction`]). Memoized and
+    /// fast-forwarded rounds re-count the carried plan's gangs, since
+    /// those placements stay committed.
+    pub gangs_placed: u64,
+    /// Of [`SimResult::gangs_placed`], the round-weighted count whose
+    /// placements straddled a rack boundary. Always 0 on a flat
+    /// topology.
+    pub cross_rack_gangs: u64,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -441,6 +458,16 @@ impl SimResult {
             })
             .map(|f| f.jct_s)
             .collect()
+    }
+
+    /// Fraction of round-weighted gang exposure that ran cross-rack
+    /// (`cross_rack_gangs / gangs_placed`; 0.0 when no gangs ran). The
+    /// consolidation ablation's headline locality figure.
+    pub fn cross_rack_fraction(&self) -> f64 {
+        if self.gangs_placed == 0 {
+            return 0.0;
+        }
+        self.cross_rack_gangs as f64 / self.gangs_placed as f64
     }
 
     /// Round-planning summary (memoized/resumed tier accounting).
@@ -569,6 +596,13 @@ pub fn run_events_recorded<M: ClusterModel + ?Sized>(
     let mut last_admitted: BTreeMap<TenantId, u32> = BTreeMap::new();
     let mut last_spilled: BTreeMap<TenantId, u32> = BTreeMap::new();
     let mut last_plan_steps = 0usize;
+    // Gang counters carry like the admission split: memoized and
+    // fast-forwarded rounds keep the last plan's committed placements,
+    // so the deployed gang exposure is the last planned one.
+    let mut last_gangs = 0u32;
+    let mut last_cross_rack = 0u32;
+    let mut gangs_placed_total = 0u64;
+    let mut cross_rack_total = 0u64;
 
     while finished.len() < n_total && now < cfg.max_sim_s {
         let mut planned_this_round: Option<PlanStats> = None;
@@ -642,6 +676,8 @@ pub fn run_events_recorded<M: ClusterModel + ?Sized>(
                 plan_steps_total += stats.steps_total;
                 plan_steps_reused += stats.steps_reused;
                 last_plan_steps = stats.steps_total;
+                last_gangs = stats.gangs_placed;
+                last_cross_rack = stats.cross_rack_gangs;
                 planned_this_round = Some(stats);
             }
             // Deploy the (possibly memoized) plan. Idempotent: memoized
@@ -771,6 +807,8 @@ pub fn run_events_recorded<M: ClusterModel + ?Sized>(
                 total_mem_gb,
                 wall_ms: wall_start
                     .map_or(0, |s| s.elapsed().as_millis() as i64),
+                gangs_placed: last_gangs,
+                cross_rack_gangs: last_cross_rack,
                 pools: std::mem::take(&mut pools_buf),
                 tenants: tenants_buf.values().copied().collect(),
             };
@@ -813,6 +851,8 @@ pub fn run_events_recorded<M: ClusterModel + ?Sized>(
         }
         util.record(sample);
 
+        gangs_placed_total += last_gangs as u64;
+        cross_rack_total += last_cross_rack as u64;
         rounds += 1;
         // Jump straight to the next arrival event when idle. The round
         // counter just advanced, so this round's lease is already stale.
@@ -840,6 +880,8 @@ pub fn run_events_recorded<M: ClusterModel + ?Sized>(
         plan_steps_reused,
         utilization: util,
         profiling_minutes,
+        gangs_placed: gangs_placed_total,
+        cross_rack_gangs: cross_rack_total,
     }
 }
 

@@ -14,7 +14,7 @@ use super::core::{
     run_events_recorded, utilization_sample, ClusterModel, CoreConfig,
     PlanStats, RoundRates, SimResult,
 };
-use crate::cluster::{Fleet, GpuGen, ServerSpec, TypeSpec};
+use crate::cluster::{Fleet, GpuGen, ServerSpec, TopologySpec, TypeSpec};
 use crate::coordinator::{policy_view_with_free, round_start_free};
 use crate::job::{Job, JobArena};
 use crate::mechanism::{
@@ -68,6 +68,12 @@ pub struct SimConfig {
     /// hard fleet reset. Schedules are bit-identical either way; exists
     /// for the three-arm parity harness and `synergy sim --no-resume`.
     pub no_resume: bool,
+    /// Rack topology over each pool's scan order (`--topology racks:R`).
+    /// The default flat spec reproduces pre-topology schedules
+    /// byte-identically: one rack class means the consolidation-aware
+    /// candidate order degenerates to the plain packing key, and
+    /// single-rack gangs never enter the link-cost division.
+    pub topology: TopologySpec,
 }
 
 impl Default for SimConfig {
@@ -86,6 +92,7 @@ impl Default for SimConfig {
             types: None,
             force_replan: false,
             no_resume: false,
+            topology: TopologySpec::default(),
         }
     }
 }
@@ -123,6 +130,10 @@ impl FleetModel {
             Some(types) => Fleet::new(types),
             None => Fleet::homogeneous(cfg.spec, cfg.n_servers),
         };
+        cfg.topology
+            .validate()
+            .unwrap_or_else(|e| panic!("invalid topology: {e}"));
+        fleet.set_topology(cfg.topology);
         let mechanism = mechanism_by_name(&cfg.mechanism).unwrap_or_else(|| {
             panic!("unknown mechanism {}", cfg.mechanism)
         });
@@ -242,21 +253,41 @@ impl ClusterModel for FleetModel {
         // Deploy: fix each granted job's progress rate for the round from
         // its assigned type's ground truth at the granted (c, m).
         // Fragmented placements pay the data-parallel sync cost (§6
-        // consolidation tradeoff; 0 in the paper's main body).
+        // consolidation tradeoff; 0 in the paper's main body), and gangs
+        // straddling a rack boundary additionally pay the topology's
+        // per-level link cost. Flat topologies never enter that branch,
+        // so their rates stay bit-identical to pre-topology builds.
+        let mut gangs_placed = 0u32;
+        let mut cross_rack_gangs = 0u32;
         for &idx in runnable {
             let job = arena.job(idx as usize);
             if let Some(grant) = grants.get(&job.id) {
-                let rate = self.worlds[&grant.gen].throughput(
+                let base = self.worlds[&grant.gen].throughput(
                     job.model,
                     job.gpus,
                     grant.demand.cpus,
                     grant.demand.mem_gb,
                 );
                 let span = grant.placement.span().max(1) as f64;
-                rates.set(
-                    idx as usize,
-                    rate / (1.0 + self.network_penalty * (span - 1.0)),
-                );
+                let mut rate =
+                    base / (1.0 + self.network_penalty * (span - 1.0));
+                if grant.placement.span() > 1 {
+                    gangs_placed += 1;
+                    let pool = self
+                        .fleet
+                        .pool(grant.gen)
+                        .expect("grant references an existing pool");
+                    let racks = pool.cluster.racks_spanned(&grant.placement);
+                    if racks > 1 {
+                        cross_rack_gangs += 1;
+                        rate = crate::perf::link_adjusted_rate(
+                            rate,
+                            racks,
+                            pool.cluster.topology().link_cost,
+                        );
+                    }
+                }
+                rates.set(idx as usize, rate);
             }
         }
         // Drain the per-pool fit-walk counters unconditionally so the
@@ -275,6 +306,8 @@ impl ClusterModel for FleetModel {
             rollback_depth: outcome.rollback_depth,
             fit_walk: fit_walk as usize,
             pool_stats: outcome.pool_stats,
+            gangs_placed,
+            cross_rack_gangs,
         }
     }
 
@@ -618,5 +651,52 @@ mod tests {
         let r = sim.run(small_trace(20, 5));
         assert_eq!(r.finished.len(), 20);
         assert!(r.jcts().iter().all(|&j| j > 0.0 && j.is_finite()));
+    }
+
+    #[test]
+    fn explicit_flat_topology_is_bitwise_identity() {
+        // `--topology flat` must be indistinguishable from not passing
+        // the flag at all — the flat pass-through the goldens rest on.
+        let trace = small_trace(24, 21);
+        let base = Simulator::new(small_cfg("srtf", "tune")).run(trace.clone());
+        let flat = Simulator::new(SimConfig {
+            topology: TopologySpec::flat(),
+            ..small_cfg("srtf", "tune")
+        })
+        .run(trace);
+        let bits = |r: &SimResult| -> Vec<(u64, u64)> {
+            r.finished.iter().map(|f| (f.id.0, f.jct_s.to_bits())).collect()
+        };
+        assert_eq!(bits(&base), bits(&flat));
+        assert_eq!(base.rounds, flat.rounds);
+        assert_eq!(base.gangs_placed, flat.gangs_placed);
+        assert_eq!(base.cross_rack_gangs, 0, "flat never counts cross-rack");
+        assert_eq!(flat.cross_rack_gangs, 0);
+    }
+
+    #[test]
+    fn racked_topology_counts_gangs_and_still_finishes() {
+        // 2 servers × 8 GPUs under racks:2 (one server per rack): any
+        // multi-server gang is cross-rack by construction, so the two
+        // counters must agree, and the link cost only slows jobs down —
+        // everything still completes.
+        let trace = small_trace(30, 1);
+        let flat = Simulator::new(small_cfg("fifo", "tune")).run(trace.clone());
+        let racked = Simulator::new(SimConfig {
+            topology: TopologySpec::racks(2),
+            ..small_cfg("fifo", "tune")
+        })
+        .run(trace);
+        assert_eq!(racked.finished.len(), 30);
+        assert_eq!(
+            racked.gangs_placed, racked.cross_rack_gangs,
+            "one server per rack: every gang spans racks"
+        );
+        assert_eq!(flat.cross_rack_gangs, 0);
+        assert!(racked.cross_rack_fraction() <= 1.0);
+        if racked.cross_rack_gangs > 0 {
+            // The link cost can only delay completion.
+            assert!(racked.makespan_s >= flat.makespan_s - 1e-9);
+        }
     }
 }

@@ -29,7 +29,7 @@
 //! - **Round row** — delta-encoded prefix
 //!   `[round, time_ms, queued, running, admitted_gpus, spilled_gpus,
 //!     free_gpus, total_gpus, free_cpus_milli, total_cpus_milli,
-//!     free_mem_milli, total_mem_milli]`
+//!     free_mem_milli, total_mem_milli, gangs_placed, cross_rack_gangs]`
 //!   (+ `wall_ms` when timing is on), then 6 fields per type pool
 //!   `[free_gpus, total_gpus, free_cpus_milli, total_cpus_milli,
 //!     free_mem_milli, total_mem_milli]`, then an absolute tail
@@ -47,7 +47,7 @@ use crate::util::json::Json;
 
 /// Fixed per-round core fields before the optional `wall_ms` and the
 /// per-pool blocks (see module docs for the layout).
-const ROUND_CORE: usize = 12;
+const ROUND_CORE: usize = 14;
 /// Fields per type pool in a round row.
 const POOL_FIELDS: usize = 6;
 /// Fields per tenant in a round row's absolute tail.
@@ -221,6 +221,12 @@ pub struct RoundSample {
     pub total_cpus: f64,
     pub free_mem_gb: f64,
     pub total_mem_gb: f64,
+    /// Multi-server gangs deployed this round (the carried plan's count
+    /// on memoized/fast-forwarded rounds — placements stay committed).
+    pub gangs_placed: u32,
+    /// Of `gangs_placed`, the gangs straddling a rack boundary under
+    /// the fleet's topology. Always 0 on a flat topology.
+    pub cross_rack_gangs: u32,
     /// Wall-clock ms — recorded/emitted only when timing is enabled.
     pub wall_ms: i64,
     pub pools: Vec<PoolCounters>,
@@ -343,6 +349,8 @@ impl TelemetryRecorder {
             milli(s.total_cpus),
             milli(s.free_mem_gb),
             milli(s.total_mem_gb),
+            i64::from(s.gangs_placed),
+            i64::from(s.cross_rack_gangs),
         ]);
         if self.cfg.timing {
             row.push(s.wall_ms);
@@ -464,6 +472,8 @@ impl TelemetryRecorder {
             total_cpus: from_milli(row[9]),
             free_mem_gb: from_milli(row[10]),
             total_mem_gb: from_milli(row[11]),
+            gangs_placed: row[12] as u32,
+            cross_rack_gangs: row[13] as u32,
             wall_ms,
             pools,
             tenants,
@@ -532,6 +542,11 @@ impl TelemetryRecorder {
             ("total_cpus", Json::num(s.total_cpus)),
             ("free_mem_gb", Json::num(s.free_mem_gb)),
             ("total_mem_gb", Json::num(s.total_mem_gb)),
+            ("gangs_placed", Json::num(f64::from(s.gangs_placed))),
+            (
+                "cross_rack_gangs",
+                Json::num(f64::from(s.cross_rack_gangs)),
+            ),
         ];
         if self.cfg.timing {
             fields.push(("wall_ms", Json::num(s.wall_ms as f64)));
@@ -615,7 +630,7 @@ impl TelemetryRecorder {
         out.push_str(
             "round,time_ms,queued,running,admitted_gpus,spilled_gpus,\
              free_gpus,total_gpus,free_cpus,total_cpus,free_mem_gb,\
-             total_mem_gb",
+             total_mem_gb,gangs_placed,cross_rack_gangs",
         );
         if self.cfg.timing {
             out.push_str(",wall_ms");
@@ -636,7 +651,7 @@ impl TelemetryRecorder {
         out.push('\n');
         for s in self.rounds() {
             out.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
                 s.round,
                 s.time_ms,
                 s.queued,
@@ -649,6 +664,8 @@ impl TelemetryRecorder {
                 s.total_cpus,
                 s.free_mem_gb,
                 s.total_mem_gb,
+                s.gangs_placed,
+                s.cross_rack_gangs,
             ));
             if self.cfg.timing {
                 out.push_str(&format!(",{}", s.wall_ms));
@@ -759,6 +776,8 @@ mod tests {
             total_cpus: 48.0,
             free_mem_gb: 171.25,
             total_mem_gb: 1000.0,
+            gangs_placed: 3,
+            cross_rack_gangs: 1 + round as u32 % 2,
             wall_ms: 7 * round as i64,
             pools: vec![
                 PoolCounters {

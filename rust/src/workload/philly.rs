@@ -18,6 +18,12 @@
 //!   (ignored — ids are re-assigned densely in arrival order).
 //! - Blank lines and `#` comments are skipped. Cells must not contain
 //!   commas (the Philly projection never does).
+//! - Rows with `gpus == 0` (the public dump's CPU-only jobs) are
+//!   skipped and counted ([`PhillyTraceSource::skipped_zero_gpu`])
+//!   rather than hard-erroring the whole file; a non-positive
+//!   `duration_s` is still an error. The skip happens before tenant
+//!   interning and model sampling, so the kept rows' tenant ids and
+//!   RNG stream are identical to a trace without those rows.
 //!
 //! Load-scaling / time-warp knobs: [`load_scale`] divides every
 //! inter-arrival gap (λ rescale), [`duration_min_s`]/[`duration_max_s`]
@@ -79,6 +85,7 @@ impl Default for PhillyTraceConfig {
 pub struct PhillyTraceSource {
     specs: std::vec::IntoIter<JobSpec>,
     tenant_names: Vec<String>,
+    skipped_zero_gpu: usize,
 }
 
 impl PhillyTraceSource {
@@ -110,6 +117,7 @@ impl PhillyTraceSource {
 
         let mut rng = Pcg64::new(cfg.seed, 0x9B177);
         let mut interner = TenantInterner::new();
+        let mut skipped_zero_gpu = 0usize;
         // (submit, tenant, model, gpus, duration), file order.
         let mut rows: Vec<RawRow> = Vec::new();
 
@@ -129,9 +137,17 @@ impl PhillyTraceSource {
             let submit: f64 = row.parse(c_submit, "submit_time")?;
             let gpus_raw: u32 = row.parse(c_gpus, "gpus")?;
             let duration: f64 = row.parse(c_dur, "duration_s")?;
-            if gpus_raw == 0 || !duration.is_finite() || duration <= 0.0 {
+            if gpus_raw == 0 {
+                // CPU-only rows exist in the public dump; they cannot
+                // gang-schedule, so count-and-skip before interning or
+                // model sampling (keeps kept rows byte-identical to a
+                // pre-filtered trace).
+                skipped_zero_gpu += 1;
+                continue;
+            }
+            if !duration.is_finite() || duration <= 0.0 {
                 return Err(format!(
-                    "line {}: gpus and duration_s must be positive",
+                    "line {}: duration_s must be positive",
                     row.line_no
                 ));
             }
@@ -166,10 +182,27 @@ impl PhillyTraceSource {
             rows.push((submit, tenant, model, gpus, duration));
         }
 
+        if skipped_zero_gpu > 0 {
+            eprintln!(
+                "philly trace{}: skipped {skipped_zero_gpu} zero-GPU row(s)",
+                if cfg.path.is_empty() {
+                    String::new()
+                } else {
+                    format!(" {}", cfg.path)
+                }
+            );
+        }
         Ok(PhillyTraceSource {
             specs: finalize_rows(rows, cfg.load_scale).into_iter(),
             tenant_names: interner.into_names(),
+            skipped_zero_gpu,
         })
+    }
+
+    /// Rows dropped because their `gpus` column was 0 (CPU-only jobs in
+    /// the public Philly dump).
+    pub fn skipped_zero_gpu(&self) -> usize {
+        self.skipped_zero_gpu
     }
 }
 
@@ -292,6 +325,58 @@ j3,vc-b,90,1,60,lstm,Killed
             &PhillyTraceConfig::default()
         )
         .is_err());
+    }
+
+    #[test]
+    fn zero_gpu_rows_are_skipped_and_counted() {
+        // Two zero-GPU rows (one model-less) interleaved with kept rows;
+        // the kept model-less row must sample the same model as in a
+        // trace that never contained the zero-GPU rows.
+        const WITH_ZERO: &str = "\
+submit_time,vc,gpus,duration_s,model,status
+10,a,0,600,,Pass
+20,a,1,600,,Pass
+30,b,0,600,resnet18,Pass
+40,b,2,600,gnmt,Pass
+";
+        const PRE_FILTERED: &str = "\
+submit_time,vc,gpus,duration_s,model,status
+20,a,1,600,,Pass
+40,b,2,600,gnmt,Pass
+";
+        let cfg = PhillyTraceConfig::default();
+        let mut with = PhillyTraceSource::from_str(WITH_ZERO, &cfg).unwrap();
+        let mut pre =
+            PhillyTraceSource::from_str(PRE_FILTERED, &cfg).unwrap();
+        assert_eq!(with.skipped_zero_gpu(), 2);
+        assert_eq!(pre.skipped_zero_gpu(), 0);
+        // Skips precede tenant interning: tenant "a" is first interned
+        // at the kept t=20 row in both traces.
+        assert_eq!(with.tenant_names(), pre.tenant_names());
+        let a: Vec<JobSpec> = std::iter::from_fn(|| with.next_spec()).collect();
+        let b: Vec<JobSpec> = std::iter::from_fn(|| pre.next_spec()).collect();
+        assert_eq!(a.len(), 2);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.model, y.model);
+            assert_eq!(x.gpus, y.gpus);
+            assert_eq!(x.tenant, y.tenant);
+            assert_eq!(x.arrival_s, y.arrival_s);
+        }
+    }
+
+    #[test]
+    fn nonpositive_duration_still_hard_errors() {
+        for dur in ["0", "-5", "nan"] {
+            let bad =
+                format!("submit_time,gpus,duration_s\n10,1,{dur}\n");
+            let err = PhillyTraceSource::from_str(
+                &bad,
+                &PhillyTraceConfig::default(),
+            )
+            .unwrap_err();
+            assert!(err.contains("line 2"), "{err}");
+        }
     }
 
     #[test]

@@ -27,7 +27,7 @@
 //! exact-match memoizer almost never catches but the resume tier does
 //! (asserted: nonzero resumed rounds).
 
-use synergy::cluster::{GpuGen, ServerSpec, TypeSpec};
+use synergy::cluster::{GpuGen, ServerSpec, TopologySpec, TypeSpec};
 use synergy::job::Job;
 use synergy::sim::{SimConfig, SimResult, Simulator};
 use synergy::trace::{Split, TraceConfig};
@@ -166,6 +166,61 @@ fn all_three_planning_tiers_are_bit_identical() {
                 }
             }
         }
+    }
+}
+
+#[test]
+fn planning_tiers_stay_bit_identical_under_racked_topology() {
+    // ISSUE 7 cell: the rack-aware candidate order and per-gang link
+    // cost are pure functions of the (topology-carrying) fleet state, so
+    // the three planning tiers must stay bit-identical with racks >= 2 —
+    // including the gang counters, which memoized and fast-forwarded
+    // rounds carry from the last planned round.
+    let spec = TenantSpec::parse("a:2,b:1").unwrap();
+    let jobs = SyntheticSource::new(TraceConfig {
+        n_jobs: 30,
+        split: Split::new(30, 50, 20),
+        multi_gpu: true, // gangs, so racks can actually matter
+        jobs_per_hour: Some(8.0),
+        seed: 11,
+    })
+    .with_tenants(spec.clone())
+    .drain_jobs();
+    for policy in ["fifo", "srtf"] {
+        let cfg = |tier: &Tier| SimConfig {
+            n_servers: 4,
+            policy: policy.into(),
+            mechanism: "tune".into(),
+            topology: TopologySpec::racks(2),
+            force_replan: matches!(tier, Tier::Forced),
+            no_resume: matches!(tier, Tier::Memoized),
+            ..Default::default()
+        };
+        let run = |tier: Tier| {
+            Simulator::with_quotas(cfg(&tier), Some(spec.quotas()))
+                .run(jobs.clone())
+        };
+        let forced = run(Tier::Forced);
+        let memo = run(Tier::Memoized);
+        let resumed = run(Tier::Resumed);
+        assert_eq!(
+            schedule_bits(&memo),
+            schedule_bits(&forced),
+            "{policy}/racks2: memoized schedule diverges"
+        );
+        assert_eq!(
+            schedule_bits(&resumed),
+            schedule_bits(&forced),
+            "{policy}/racks2: resumed schedule diverges"
+        );
+        for (tag, r) in [("memo", &memo), ("resumed", &resumed)] {
+            assert_eq!(
+                (r.gangs_placed, r.cross_rack_gangs),
+                (forced.gangs_placed, forced.cross_rack_gangs),
+                "{policy}/racks2/{tag}: gang counters diverge from forced"
+            );
+        }
+        assert_eq!(forced.finished.len(), jobs.len(), "{policy}/racks2");
     }
 }
 

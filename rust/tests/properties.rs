@@ -17,11 +17,13 @@
 //!    pass-through — the fleet-level mechanisms reproduce the pool-level
 //!    (pre-unification homogeneous) grants bit-for-bit.
 
-use synergy::cluster::{Cluster, Fleet, ServerSpec};
+use synergy::cluster::{
+    Cluster, Fleet, Placement, ServerSpec, Share, TopologySpec,
+};
 use synergy::job::{DemandVector, Job, JobId, ALL_MODELS};
 use synergy::mechanism::{
-    best_fit, best_fit_scan, by_name, first_fit, first_fit_scan, JobRequest,
-    Mechanism, PoolRequest, Tune,
+    best_fit, best_fit_scan, by_name, first_fit, first_fit_scan,
+    multi_server_fit, JobRequest, Mechanism, PoolRequest, Tune,
 };
 use synergy::profiler::{OptimisticProfiler, Sensitivity};
 use synergy::prop_assert;
@@ -510,6 +512,12 @@ fn prop_free_index_consistent_and_fit_equivalent() {
         };
         let n = g.int(1, 13);
         let mut cluster = Cluster::homogeneous(spec, n);
+        if g.bool() {
+            // Racks must be invisible to single-server fits and to the
+            // free-capacity index: same picks, same consistency.
+            let topo = TopologySpec::racks(g.int(2, 5) as u32);
+            cluster.set_topology(topo.for_servers(n));
+        }
         let mut resident: Vec<JobId> = Vec::new();
         let mut next_id = 0u64;
         let ops = g.int(5, 80);
@@ -684,6 +692,134 @@ fn prop_prefix_resumed_plan_matches_fresh_plan_bitwise() {
             fleet_bits(&fleet) == fleet_bits(&fresh_fleet),
             "{name}: post-plan fleet state diverges from fresh plan"
         );
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Topology-aware gang placement (ISSUE 7): degenerate demands, rack
+// tie-breaks, and flat/blind byte-identity to the pre-topology stack
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_zero_gpu_demand_never_places() {
+    check("zero-GPU gang demand", 20, |g| {
+        let spec = ServerSpec::default();
+        let n = g.int(1, 6);
+        let mut cluster = Cluster::homogeneous(spec, n);
+        if g.bool() {
+            let topo = TopologySpec::racks(g.int(2, 4) as u32);
+            cluster.set_topology(topo.for_servers(n));
+        }
+        // `DemandVector::new` asserts positivity, so the degenerate
+        // demand is built field-by-field — exactly what a buggy caller
+        // would hand over.
+        let demand = DemandVector {
+            gpus: 0,
+            cpus: g.f64(0.0, spec.cpus as f64),
+            mem_gb: g.f64(0.0, spec.mem_gb),
+        };
+        prop_assert!(
+            multi_server_fit(&cluster, &demand, |_| true).is_none(),
+            "zero-GPU demand must report no fit, not a 0-GPU placement"
+        );
+        cluster.check_consistency()?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rack_tie_break_consolidates_into_emptiest_rack() {
+    // 2 racks × 2 servers; rack 0 carries a random nonzero load, rack 1
+    // is empty. Any gang that needs both of rack 1's servers but fits
+    // inside it must land there whole — the rack-rank sort orders the
+    // emptier rack's servers first, and `racks_spanned == 1` follows.
+    let spec = ServerSpec::default();
+    check("rack tie-break consolidation", 25, |g| {
+        let mut cluster = Cluster::homogeneous(spec, 4);
+        cluster.set_topology(TopologySpec::racks(2).for_servers(4));
+        for server in [0usize, 1] {
+            let gpus = g.int(1, spec.gpus as usize + 1) as u32;
+            cluster.place(
+                JobId(90 + server as u64),
+                Placement::single(
+                    server,
+                    Share { gpus, cpus: 1.0, mem_gb: 10.0 },
+                ),
+            );
+        }
+        let gang = g.int(spec.gpus as usize + 1, 2 * spec.gpus as usize + 1)
+            as u32;
+        let demand = DemandVector::proportional(gang, 1.0, 10.0);
+        let p = multi_server_fit(&cluster, &demand, |_| true)
+            .ok_or("gang must fit in the empty rack")?;
+        let ids: Vec<usize> = p.shares.iter().map(|(&id, _)| id).collect();
+        prop_assert!(
+            ids.iter().all(|&id| id >= 2),
+            "gang of {gang} leaked into the loaded rack: servers {ids:?}"
+        );
+        prop_assert!(
+            cluster.racks_spanned(&p) == 1,
+            "consolidated gang must span one rack"
+        );
+        cluster.check_consistency()?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_flat_and_blind_topologies_allocate_identically() {
+    // The two "topology exists but must not matter" arms — an explicit
+    // flat spec, and racks with `placement_aware = false` — must
+    // reproduce the default fleet's grants bit for bit for every
+    // mechanism (racks only reorder candidate servers when aware).
+    let spec = ServerSpec::default();
+    let profiler = OptimisticProfiler::noiseless(spec);
+    check("flat/blind topology ≡ default", 15, |g| {
+        let (jobs, sens) = random_jobs(g, &profiler);
+        let requests = to_requests(&jobs, &sens);
+        let n_servers = g.int(1, 6);
+        let name = g.choose(&["proportional", "greedy", "tune", "fixed"]);
+        let mech = by_name(&name).unwrap();
+
+        let mut base = Fleet::homogeneous(spec, n_servers);
+        let base_grants = mech.allocate(&mut base, &requests);
+
+        let variants = [
+            ("flat", TopologySpec::flat()),
+            (
+                "blind-racks",
+                TopologySpec {
+                    placement_aware: false,
+                    ..TopologySpec::racks(3)
+                },
+            ),
+        ];
+        for (tag, topo) in variants {
+            let mut fleet = Fleet::homogeneous(spec, n_servers);
+            fleet.set_topology(topo);
+            let grants = mech.allocate(&mut fleet, &requests);
+            prop_assert!(
+                grants.len() == base_grants.len(),
+                "{name}/{tag}: grant counts diverge"
+            );
+            for (id, bg) in &base_grants {
+                let tg = grants
+                    .get(id)
+                    .ok_or(format!("{name}/{tag}: {id:?} missing"))?;
+                prop_assert!(
+                    tg.placement == bg.placement,
+                    "{name}/{tag}: {id:?} placement diverges"
+                );
+                prop_assert!(
+                    tg.demand.gpus == bg.demand.gpus
+                        && tg.demand.cpus.to_bits() == bg.demand.cpus.to_bits()
+                        && tg.demand.mem_gb.to_bits()
+                            == bg.demand.mem_gb.to_bits(),
+                    "{name}/{tag}: {id:?} demand diverges"
+                );
+            }
+        }
         Ok(())
     });
 }

@@ -176,6 +176,73 @@ fn deploy_streams_arrivals_from_a_workload_source() {
 }
 
 #[test]
+fn deploy_round_cadence_follows_absolute_grid() {
+    // The leader schedules round boundaries on absolute multiples of
+    // `round_real_s` (RoundTicker), subtracting planning time from each
+    // sleep instead of sleeping the full period after planning. Smoke
+    // check with generous CI tolerance: R rounds must take at least
+    // (R-1) periods of wall time (rounds can never fire early) and not
+    // wildly more than R periods.
+    let jobs = generate(&TraceConfig {
+        n_jobs: 4,
+        split: Split::new(0, 100, 0),
+        multi_gpu: false,
+        jobs_per_hour: None,
+        seed: 5,
+    });
+    let n = jobs.len();
+    let period = 0.25;
+    let leader = Arc::new(Leader::new(LeaderConfig {
+        bind: "127.0.0.1:0".into(),
+        n_workers: 1,
+        round_real_s: period,
+        time_scale: 40_000.0,
+        policy: "fifo".into(),
+        mechanism: "tune".into(),
+        variant: "tiny".into(),
+        max_real_s: 60.0,
+        quotas: None,
+        telemetry: None,
+        telemetry_timing: false,
+    }));
+    let l2 = Arc::clone(&leader);
+    let t = std::thread::spawn(move || {
+        let t0 = std::time::Instant::now();
+        let report = l2.run(jobs);
+        (report, t0.elapsed().as_secs_f64())
+    });
+    let addr = loop {
+        if let Some(a) = *leader.addr.lock().unwrap() {
+            break a;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    };
+    let cfg = WorkerConfig {
+        leader_addr: addr.to_string(),
+        real_compute: false,
+        ..Default::default()
+    };
+    let w = std::thread::spawn(move || Worker::run(cfg));
+    let (report, elapsed) = t.join().unwrap();
+    let report = report.expect("leader run");
+    let _ = w.join();
+    assert_eq!(report.jcts.len(), n);
+    let rounds = report.rounds as f64;
+    assert!(
+        elapsed >= (rounds - 1.0) * period - 0.05,
+        "{} rounds finished in {elapsed:.2}s — rounds fired early \
+         (period {period}s)",
+        report.rounds
+    );
+    assert!(
+        elapsed <= rounds * period + 5.0,
+        "{} rounds took {elapsed:.2}s — cadence drifted far past the \
+         absolute grid (period {period}s)",
+        report.rounds
+    );
+}
+
+#[test]
 fn deploy_survives_worker_crash() {
     // Leader + 2 workers; one worker crashes mid-run (fault injection).
     // The leader must fail it over and drain the whole trace on the

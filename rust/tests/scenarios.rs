@@ -17,6 +17,7 @@
 //! regenerate after an intentional behaviour change. See
 //! `tests/golden/README.md` for how to add a scenario.
 
+use synergy::cluster::TopologySpec;
 use synergy::hetero::{GpuGen, HeteroSimConfig, HeteroSimulator, TypeSpec};
 use synergy::job::{Job, TenantId};
 use synergy::metrics::metrics_json;
@@ -247,6 +248,78 @@ fn scenario_matrix_is_deterministic_and_matches_goldens() {
         assert_eq!(a, b, "scenario '{}' not deterministic across runs", s.name);
         check_golden(s.name, &a);
     }
+}
+
+// ---------------------------------------------------------------------------
+// ISSUE 7 topology cells — NEW golden names; the 18 cells above are
+// untouched and must stay byte-identical (flat topology is the default).
+// ---------------------------------------------------------------------------
+
+/// A gang-heavy synthetic trace (multi-GPU demands) so racks can matter.
+fn gang_jobs() -> Vec<Job> {
+    SyntheticSource::new(TraceConfig {
+        n_jobs: 24,
+        split: Split::new(30, 50, 20),
+        multi_gpu: true,
+        jobs_per_hour: Some(6.0),
+        seed: 42,
+    })
+    .with_tenants(TenantSpec::parse("a:2,b:1").unwrap())
+    .drain_jobs()
+}
+
+fn run_topology_cell(topology: TopologySpec) -> String {
+    let sim = Simulator::new(SimConfig {
+        n_servers: 4,
+        policy: "srtf".into(),
+        mechanism: "tune".into(),
+        topology,
+        ..Default::default()
+    });
+    let r = sim.run(gang_jobs());
+    r.metrics_json(false)
+}
+
+#[test]
+fn topology_cells_are_deterministic_and_match_goldens() {
+    let cells = [
+        ("synthetic_gang_flat_homo", TopologySpec::flat()),
+        ("synthetic_gang_racks2_homo", TopologySpec::racks(2)),
+        (
+            "synthetic_gang_racks2_blind_homo",
+            TopologySpec {
+                placement_aware: false,
+                ..TopologySpec::racks(2)
+            },
+        ),
+    ];
+    for (name, topo) in cells {
+        let a = run_topology_cell(topo);
+        let b = run_topology_cell(topo);
+        assert_eq!(a, b, "topology cell '{name}' not deterministic");
+        check_golden(name, &a);
+    }
+}
+
+#[test]
+fn flat_topology_cell_matches_default_byte_for_byte() {
+    // `--topology flat` (and racks:1 generally) must be a pure no-op:
+    // the metrics JSON — the golden payload itself — is byte-identical
+    // to a config that never mentions topology.
+    let default_run = {
+        let sim = Simulator::new(SimConfig {
+            n_servers: 4,
+            policy: "srtf".into(),
+            mechanism: "tune".into(),
+            ..Default::default()
+        });
+        sim.run(gang_jobs()).metrics_json(false)
+    };
+    assert_eq!(
+        run_topology_cell(TopologySpec::flat()),
+        default_run,
+        "explicit flat topology must not perturb a single byte"
+    );
 }
 
 #[test]
