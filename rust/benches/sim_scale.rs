@@ -17,7 +17,12 @@
 //! the prefix-resume tier engages at least once. A fourth cell reruns
 //! the FIFO configuration with the ISSUE 6 telemetry recorder attached
 //! and asserts the observer costs < 5% wall time and changes zero
-//! scheduled bytes (`telemetry_overhead` in the JSON).
+//! scheduled bytes (`telemetry_overhead` in the JSON). A fifth cell
+//! (ISSUE 8) drives 8192 GPUs × one million Google-derived jobs through
+//! the streaming trace reader and the 4-way sharded planner, recording
+//! rounds/sec and peak RSS (`VmHWM`) and asserting the peak stays
+//! proportional to the trace (completed jobs retire their working
+//! state); shrink it locally with `SYNERGY_SCALE_JOBS=10000`.
 //!
 //! Snapshot-design note (ISSUE 5): resume uses an **O(changes) undo
 //! log** (per-pool journal of pre-mutation server counters + placement
@@ -35,6 +40,9 @@ use synergy::telemetry::{TelemetryConfig, TelemetryRecorder};
 use synergy::trace::{generate, TraceConfig, SPLIT_DEFAULT};
 use synergy::util::bench::{section, Bench};
 use synergy::util::json::Json;
+use synergy::workload::{
+    GoogleTraceConfig, GoogleTraceSource, WorkloadSource,
+};
 
 /// 64 × 8-GPU servers = the paper's 512-GPU cluster.
 const N_SERVERS: usize = 64;
@@ -117,6 +125,58 @@ fn cell_json(c: &Cell) -> Json {
         ),
         ("makespan_days", Json::num(r.makespan_s / 86_400.0)),
     ])
+}
+
+/// Peak resident set (`VmHWM`) in MB from `/proc/self/status`; 0.0 when
+/// unavailable (non-Linux), in which case the RSS assert is skipped.
+fn peak_rss_mb() -> f64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0.0;
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: f64 = rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse()
+                .unwrap_or(0.0);
+            return kb / 1024.0;
+        }
+    }
+    0.0
+}
+
+/// Deterministically synthesize a 2019-format instance-events document:
+/// one SUBMIT/SCHEDULE/FINISH triple per collection, arrivals at 1/s,
+/// 1–4 GPUs (normalized CPU × the default ×8 multiplier), 10–50 min
+/// durations — ~75% offered load on the 8192-GPU tri-gen fleet.
+fn synth_google_trace(n_jobs: usize) -> String {
+    use std::fmt::Write as _;
+    // splitmix64: a pure function of the index, so the document (and
+    // every schedule derived from it) is bit-stable across runs/hosts.
+    fn mix(mut x: u64) -> u64 {
+        x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        x ^ (x >> 31)
+    }
+    let mut out = String::with_capacity(n_jobs * 96 + 64);
+    out.push_str("time,type,collection_id,cpus,user\n");
+    for i in 0..n_jobs as u64 {
+        let h = mix(i + 1);
+        // Normalized CPU in [0.05, 0.45): ceil(×8) = 1–4 GPUs.
+        let cpus = 0.05 + (h % 4_000) as f64 / 10_000.0;
+        let dur_us = (600 + mix(h) % 2_400) * 1_000_000;
+        let submit_us = i * 1_000_000;
+        let schedule_us = submit_us + 1_000_000;
+        let finish_us = schedule_us + dur_us;
+        let user = h % 50;
+        let _ = writeln!(out, "{submit_us},0,{i},{cpus:.4},u{user}");
+        let _ = writeln!(out, "{schedule_us},3,{i},{cpus:.4},u{user}");
+        let _ = writeln!(out, "{finish_us},6,{i},{cpus:.4},u{user}");
+    }
+    out
 }
 
 fn main() {
@@ -225,7 +285,119 @@ fn main() {
          {overhead_pct:.2}%"
     );
 
-    for c in [&fifo, &srtf, &tri_cell, &telem_cell] {
+    section("sim_scale: 8192 GPUs × 1M Google-derived jobs (sharded planner)");
+    // ISSUE 8 scale cell: a million-collection 2019-format trace
+    // streamed through `GoogleTraceSource`, scheduled on a 1024-server
+    // tri-generation fleet with the planner fanned out over 4 shards.
+    // One iteration — the run is deterministic and dominates the bench
+    // budget. `SYNERGY_SCALE_JOBS` shrinks the trace for local smokes.
+    let scale_jobs: usize = std::env::var("SYNERGY_SCALE_JOBS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1_000_000);
+    let ingest_t0 = std::time::Instant::now();
+    let google_text = synth_google_trace(scale_jobs);
+    let mut src = GoogleTraceSource::from_str(
+        &google_text,
+        &GoogleTraceConfig {
+            path: "<synthetic>".into(),
+            ..GoogleTraceConfig::default()
+        },
+    )
+    .expect("synthetic google trace parses");
+    drop(google_text); // bench scaffolding, not resident simulator state
+    let scale_trace = src.drain_jobs();
+    let ingest_s = ingest_t0.elapsed().as_secs_f64();
+    assert_eq!(scale_trace.len(), scale_jobs, "every collection emits a job");
+    println!(
+        "google ingest: {scale_jobs} jobs in {ingest_s:.2}s \
+         ({:.0} jobs/s)",
+        scale_jobs as f64 / ingest_s
+    );
+    let scale_types = vec![
+        TypeSpec { gen: GpuGen::K80, spec, machines: 342 },
+        TypeSpec { gen: GpuGen::P100, spec, machines: 341 },
+        TypeSpec { gen: GpuGen::V100, spec, machines: 341 },
+    ];
+    let scale_bench = Bench {
+        warmup_iters: 0,
+        min_iters: 1,
+        max_iters: 1,
+        budget: Duration::ZERO,
+    };
+    // Move the trace in (one timed iteration) instead of cloning a
+    // million-job vector — peak RSS is part of what this cell reports.
+    let mut scale_input = Some(scale_trace);
+    let mut scale_last: Option<SimResult> = None;
+    let scale_t =
+        scale_bench.iter("sim/8192gpu_1m_google_fifo_tune_shards4", || {
+            scale_last = Some(
+                Simulator::new(SimConfig {
+                    n_servers: 1024,
+                    policy: "fifo".into(),
+                    mechanism: "tune".into(),
+                    types: Some(scale_types.clone()),
+                    shards: 4,
+                    ..Default::default()
+                })
+                .run(scale_input.take().expect("single iteration")),
+            );
+        });
+    let scale_result = scale_last.expect("bench ran once");
+    assert_eq!(
+        scale_result.finished.len(),
+        scale_jobs,
+        "scale cell must drain the trace"
+    );
+    let peak_mb = peak_rss_mb();
+    // Satellite (b) proportionality bound: completed jobs retire their
+    // working state (the Sensitivity box collapses to one word), so
+    // resident memory is the dense per-job trace slab (~a hundred bytes
+    // a job) plus O(running jobs) — a 1M-job run fits comfortably under
+    // ~0.5 GB of fixed overhead + ~1.2 KB/job. A leak of per-completion
+    // state blows through this long before the run ends.
+    let rss_bound_mb = 512.0 + scale_jobs as f64 * 1.2e-3;
+    println!(
+        "scale cell: peak RSS {peak_mb:.0} MB (bound {rss_bound_mb:.0} MB)"
+    );
+    if peak_mb > 0.0 {
+        assert!(
+            peak_mb < rss_bound_mb,
+            "peak RSS must stay proportional to the trace: {peak_mb:.0} MB \
+             >= {rss_bound_mb:.0} MB for {scale_jobs} jobs"
+        );
+    }
+    let scale_cell = Cell {
+        name: "sim/8192gpu_1m_google_fifo_tune_shards4",
+        median_s: scale_t.median.as_secs_f64(),
+        result: scale_result,
+    };
+    let scale_json = {
+        let r = &scale_cell.result;
+        Json::obj(vec![
+            ("cell", Json::str(scale_cell.name)),
+            ("jobs", Json::num(r.finished.len() as f64)),
+            ("gpus", Json::num(8192.0)),
+            ("shards", Json::num(4.0)),
+            ("wall_s", Json::num(scale_cell.median_s)),
+            ("ingest_s", Json::num(ingest_s)),
+            ("rounds", Json::num(r.rounds as f64)),
+            ("planned_rounds", Json::num(r.planned_rounds as f64)),
+            (
+                "memoized_rounds",
+                Json::num((r.rounds - r.planned_rounds) as f64),
+            ),
+            (
+                "rounds_per_s",
+                Json::num(r.rounds as f64 / scale_cell.median_s),
+            ),
+            ("makespan_days", Json::num(r.makespan_s / 86_400.0)),
+            ("peak_rss_mb", Json::num(peak_mb)),
+            ("rss_bound_mb", Json::num(rss_bound_mb)),
+        ])
+    };
+
+    for c in [&fifo, &srtf, &tri_cell, &telem_cell, &scale_cell] {
         let r = &c.result;
         println!(
             "{}: {:.2}s wall, {} rounds ({} full replans / {} resumed / \
@@ -256,6 +428,7 @@ fn main() {
                 cell_json(&srtf),
                 cell_json(&tri_cell),
                 cell_json(&telem_cell),
+                scale_json,
             ]),
         ),
         (

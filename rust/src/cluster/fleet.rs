@@ -40,6 +40,11 @@ pub struct TypePool {
 #[derive(Debug, Clone)]
 pub struct Fleet {
     pub pools: Vec<TypePool>,
+    /// Planning fan-out width (`--shards`): how many worker threads the
+    /// resumable planner may spread the per-pool placement folds over.
+    /// Schedule-invisible — per-pool results merge in fixed pool order,
+    /// so output is byte-identical for any value. 1 = serial (default).
+    shards: usize,
 }
 
 impl Fleet {
@@ -58,6 +63,7 @@ impl Fleet {
                     cluster: Cluster::homogeneous_of(t.gen, t.spec, t.machines),
                 })
                 .collect(),
+            shards: 1,
         }
     }
 
@@ -69,6 +75,7 @@ impl Fleet {
                 gen: GpuGen::default(),
                 cluster: Cluster::homogeneous(spec, n),
             }],
+            shards: 1,
         }
     }
 
@@ -81,6 +88,7 @@ impl Fleet {
                 gen: GpuGen::default(),
                 cluster: Cluster::with_server_ids(spec, ids),
             }],
+            shards: 1,
         }
     }
 
@@ -193,6 +201,17 @@ impl Fleet {
     /// fleet enables journaling fleet-wide or not at all).
     pub fn journal_enabled(&self) -> bool {
         self.pools.iter().all(|p| p.cluster.journal_enabled())
+    }
+
+    /// Set the planning fan-out width (`--shards`; clamped to ≥ 1).
+    /// Schedule-invisible: any value produces byte-identical plans.
+    pub fn set_shards(&mut self, n: usize) {
+        self.shards = n.max(1);
+    }
+
+    /// The planning fan-out width (1 = serial).
+    pub fn shards(&self) -> usize {
+        self.shards
     }
 
     /// Aggregate GPU utilization in [0, 1].

@@ -6,8 +6,9 @@
 //!
 //! Workload selection mirrors the CLI: with no `trace` key the synthetic
 //! generator runs (`n_jobs`/`split`/`seed`/...); with `"trace":
-//! "path.csv"` plus `"format": "philly" | "alibaba"` the file readers
-//! from [`crate::workload`] are used, and `"tenants": "a:2,b:1"` turns
+//! "path.csv"` plus `"format": "philly" | "alibaba" | "google"` the
+//! file readers from [`crate::workload`] are used (`google` also
+//! accepts a trace *directory*), and `"tenants": "a:2,b:1"` turns
 //! on weighted-quota admission either way. A `"hetero"` section —
 //! `[{"gen": "p100", "machines": 8}, ...]` — describes a mixed-
 //! generation fleet (paper A.2) sharing the global server shape; with
@@ -20,9 +21,9 @@ use crate::job::Job;
 use crate::trace::{Split, TraceConfig};
 use crate::util::json::Json;
 use crate::workload::{
-    AlibabaTraceConfig, AlibabaTraceSource, PhillyTraceConfig,
-    PhillyTraceSource, SyntheticSource, TenantQuotas, TenantSpec,
-    WorkloadSource,
+    AlibabaTraceConfig, AlibabaTraceSource, GoogleTraceConfig,
+    GoogleTraceSource, PhillyTraceConfig, PhillyTraceSource,
+    SyntheticSource, TenantQuotas, TenantSpec, WorkloadSource,
 };
 
 /// A full experiment description.
@@ -38,8 +39,14 @@ pub struct ExperimentConfig {
     pub profile_noise: f64,
     /// Path to a trace file (`trace` JSON key); `None` = synthetic.
     pub trace_path: Option<String>,
-    /// Trace file format (`format` JSON key): `philly` | `alibaba`.
+    /// Trace file format (`format` JSON key): `philly` | `alibaba` |
+    /// `google` (the last also accepts a trace directory).
     pub trace_format: String,
+    /// Planning fan-out width (`shards` JSON key): worker threads the
+    /// resumable planner spreads per-pool placement folds over.
+    /// Schedule-invisible — schedules are byte-identical for any value.
+    /// 1 = serial (default; the key is omitted from `to_json` then).
+    pub shards: usize,
     /// Tenant weights (`tenants` JSON key, `name:weight,...` syntax);
     /// `None` = single-tenant, no quota admission.
     pub tenants: Option<TenantSpec>,
@@ -74,6 +81,7 @@ impl Default for ExperimentConfig {
             profile_noise: 0.0,
             trace_path: None,
             trace_format: "philly".into(),
+            shards: 1,
             tenants: None,
             hetero: Vec::new(),
             topology: TopologySpec::default(),
@@ -107,11 +115,17 @@ impl ExperimentConfig {
         if !(0.0..0.5).contains(&self.profile_noise) {
             return Err("profile_noise must be in [0, 0.5)".into());
         }
-        if !matches!(self.trace_format.as_str(), "philly" | "alibaba") {
+        if !matches!(
+            self.trace_format.as_str(),
+            "philly" | "alibaba" | "google"
+        ) {
             return Err(format!(
-                "unknown trace format '{}' (expected philly|alibaba)",
+                "unknown trace format '{}' (expected philly|alibaba|google)",
                 self.trace_format
             ));
+        }
+        if self.shards == 0 {
+            return Err("shards must be positive".into());
         }
         self.topology.validate().map_err(|e| format!("topology: {e}"))?;
         for (i, t) in self.hetero.iter().enumerate() {
@@ -214,6 +228,9 @@ impl ExperimentConfig {
         if let Some(s) = doc.get("format").as_str() {
             cfg.trace_format = s.to_string();
         }
+        if let Some(n) = doc.get("shards").as_usize() {
+            cfg.shards = n;
+        }
         if let Some(s) = doc.get("tenants").as_str() {
             cfg.tenants =
                 Some(TenantSpec::parse(s).map_err(|e| format!("tenants: {e}"))?);
@@ -297,6 +314,9 @@ impl ExperimentConfig {
         if let Some(path) = &self.trace_path {
             pairs.push(("trace", Json::str(path.clone())));
         }
+        if self.shards != 1 {
+            pairs.push(("shards", Json::num(self.shards as f64)));
+        }
         if let Some(spec) = &self.tenants {
             pairs.push(("tenants", Json::str(spec.canonical())));
         }
@@ -366,6 +386,14 @@ impl ExperimentConfig {
                                 path: path.clone(),
                                 seed: self.trace.seed,
                                 ..AlibabaTraceConfig::default()
+                            },
+                        )?),
+                        "google" => Box::new(GoogleTraceSource::new(
+                            GoogleTraceConfig {
+                                path: path.clone(),
+                                split: self.trace.split,
+                                seed: self.trace.seed,
+                                ..GoogleTraceConfig::default()
                             },
                         )?),
                         other => {
@@ -469,6 +497,44 @@ mod tests {
         assert!(ExperimentConfig::from_json(&doc).is_err());
         let doc = Json::parse(r#"{"tenants": "a:-3"}"#).unwrap();
         assert!(ExperimentConfig::from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn google_format_accepted_and_shards_roundtrip() {
+        let doc = Json::parse(
+            r#"{"trace": "t/", "format": "google", "shards": 4}"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&doc).unwrap();
+        assert_eq!(cfg.trace_format, "google");
+        assert_eq!(cfg.shards, 4);
+        let encoded = cfg.to_json().encode();
+        let back =
+            ExperimentConfig::from_json(&Json::parse(&encoded).unwrap())
+                .unwrap();
+        assert_eq!(back, cfg);
+        // Serial configs omit the key, keeping existing files byte-stable.
+        let plain = ExperimentConfig::default().to_json().encode();
+        assert!(!plain.contains("shards"), "{plain}");
+        // shards = 0 is rejected up front.
+        let doc = Json::parse(r#"{"shards": 0}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn workload_reads_google_fixture_dir() {
+        let cfg = ExperimentConfig {
+            trace_path: Some(format!(
+                "{}/tests/fixtures/google_small",
+                env!("CARGO_MANIFEST_DIR")
+            )),
+            trace_format: "google".into(),
+            ..ExperimentConfig::default()
+        };
+        let (jobs, quotas, names) = cfg.workload().unwrap();
+        assert_eq!(jobs.len(), 8);
+        assert_eq!(names, vec!["c", "a", "b"]);
+        assert!(quotas.is_none());
     }
 
     #[test]

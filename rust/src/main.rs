@@ -12,9 +12,12 @@
 //!                   [--telemetry run.jsonl|run.csv] [--telemetry-timing]
 //!                   # per-round/per-pool/per-tenant series + plan trace;
 //!                   # counters only unless --telemetry-timing
-//! synergy sim       --trace trace.csv --format philly|alibaba \
+//! synergy sim       --trace trace.csv --format philly|alibaba|google \
 //!                   [--load-scale 2 --duration-min 60 --duration-max 1e5]
 //!                   [--gpu-cap 16 --max-jobs 500 --keep-failed]
+//!                   [--cpu-multiplier 8]  # google: normalized-CPU -> GPUs
+//!                   [--shards 4]  # fan per-pool planning over N threads;
+//!                   # schedule-invisible, byte-identical for any N
 //! synergy sweep     --policies fifo,srtf --mechanisms proportional,tune \
 //!                   --threads 8 [--out report.txt] [--plan-stats]
 //!                   [--telemetry-dir telem/]  # one <policy>_<mechanism>.jsonl per cell
@@ -44,9 +47,9 @@ use synergy::trace::{generate, Split, TraceConfig};
 use synergy::util::cli::Args;
 use synergy::util::fsx;
 use synergy::workload::{
-    AlibabaTraceConfig, AlibabaTraceSource, PhillyTraceConfig,
-    PhillyTraceSource, SyntheticSource, TenantQuotas, TenantSpec,
-    WorkloadSource,
+    AlibabaTraceConfig, AlibabaTraceSource, GoogleTraceConfig,
+    GoogleTraceSource, PhillyTraceConfig, PhillyTraceSource,
+    SyntheticSource, TenantQuotas, TenantSpec, WorkloadSource,
 };
 
 fn main() {
@@ -126,8 +129,9 @@ fn workload_from_args(args: &Args) -> WorkloadBundle {
 }
 
 /// Build the workload *source* from `--trace <path> --format
-/// philly|alibaba` (file traces) or the synthetic generator flags, with
-/// optional `--tenants name:weight,...` quotas (see
+/// philly|alibaba|google` (file traces; `google` takes a trace
+/// directory or an instance-events CSV) or the synthetic generator
+/// flags, with optional `--tenants name:weight,...` quotas (see
 /// [`synergy::workload`]). Streaming consumers (the deploy leader) take
 /// the source as-is; batch consumers use [`workload_from_args`].
 #[allow(clippy::type_complexity)]
@@ -171,8 +175,27 @@ fn workload_source_from_args(
                         })
                         .unwrap_or_else(|e| panic!("--trace {path}: {e}")),
                     ),
+                    "google" => Box::new(
+                        GoogleTraceSource::new(GoogleTraceConfig {
+                            path: path.to_string(),
+                            load_scale: args.f64("load-scale", 1.0),
+                            cpu_multiplier: args.f64("cpu-multiplier", 8.0),
+                            gpu_cap: args.usize("gpu-cap", 16) as u32,
+                            max_jobs,
+                            split: parse_split(
+                                args.get_or("split", "20,70,10"),
+                            ),
+                            seed: args.u64("seed", 1),
+                            keep_failed: args.flag("keep-failed"),
+                            duration_min_s: args.f64("duration-min", 1.0),
+                            duration_max_s: args
+                                .f64("duration-max", f64::INFINITY),
+                        })
+                        .unwrap_or_else(|e| panic!("--trace {path}: {e}")),
+                    ),
                     other => panic!(
-                        "unknown --format '{other}' (expected philly|alibaba)"
+                        "unknown --format '{other}' \
+                         (expected philly|alibaba|google)"
                     ),
                 };
             let tenant_names = source.tenant_names();
@@ -257,6 +280,7 @@ fn sim_config(args: &Args, mechanism: &str, policy: &str) -> SimConfig {
         force_replan: args.flag("force-replan"),
         no_resume: args.flag("no-resume"),
         topology: topology_from_args(args),
+        shards: args.usize("shards", 1).max(1),
     }
 }
 
@@ -755,6 +779,7 @@ fn cmd_config(args: &Args) {
             force_replan: false,
             no_resume: false,
             topology: cfg.topology,
+            shards: cfg.shards,
         },
         quotas.clone(),
     );

@@ -38,9 +38,11 @@
 //! replan from the round reset, still bit-identical, never resumed.
 
 use super::{Grant, JobRequest, Mechanism, PoolGrant, PoolRequest};
-use crate::cluster::{Cluster, Fleet, GpuGen};
+use crate::cluster::{Cluster, Fleet, GpuGen, TypePool};
 use crate::job::JobId;
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// The assignment fold: per-type free-GPU budgets consumed job-by-job in
 /// sequence order, exactly as the batch A.2.2 assignment did. On a
@@ -207,7 +209,11 @@ impl PoolPlan {
 /// One mechanism's pool-level algorithm, expressed in the shape the
 /// resume driver checkpoints: a deterministic processing order, a
 /// per-job fold step, and an optional deferred global pass.
-pub(crate) trait PoolAlg {
+///
+/// `Sync` because the sharded planner runs one pool's fold per worker
+/// thread against the same algorithm value; implementations are plain
+/// configuration data.
+pub(crate) trait PoolAlg: Sync {
     /// Processing order as indices into `reqs`. Defaults to sequence
     /// (priority) order; TUNE overrides with the §4.2 demand sort.
     fn order(&self, reqs: &[PoolRequest<'_>]) -> Vec<usize> {
@@ -305,6 +311,123 @@ fn common_prefix(a: &[JobId], b: &[JobId]) -> usize {
     a.iter().zip(b).take_while(|(x, y)| x == y).count()
 }
 
+/// One pool's contribution to a plan: the fresh checkpoint plus the
+/// resume accounting that folds into [`PlanOutcome`].
+struct PoolOutcome {
+    trace: PoolTrace,
+    stats: PoolPlanStats,
+    steps_total: usize,
+    steps_reused: usize,
+    rollback_depth: usize,
+}
+
+/// Run one pool's placement fold (phases 2+3 for a single pool),
+/// resuming from `prev_pool` where the processing-order prefix matches.
+/// This touches only `pool` and its checkpoint — pools are disjoint
+/// `Cluster`s, which is what lets the sharded driver run these
+/// concurrently with no cross-pool synchronization.
+fn plan_pool(
+    alg: &dyn PoolAlg,
+    pool: &mut TypePool,
+    prev_pool: Option<PoolTrace>,
+    sjobs: &[JobRequest<'_>],
+    assigned: &BTreeMap<JobId, GpuGen>,
+) -> PoolOutcome {
+    let gen = pool.gen;
+    let spec = pool.cluster.spec;
+    let reqs = super::pool_requests(gen, spec, sjobs, assigned);
+    let order = alg.order(&reqs);
+    let new_steps: Vec<JobId> = order.iter().map(|&i| reqs[i].id).collect();
+    let steps_total = new_steps.len();
+
+    let cluster = &mut pool.cluster;
+    let mut rollback_depth = 0usize;
+    let (mut plan, mut marks, lcp) = match prev_pool {
+        Some(t) if t.steps == new_steps => {
+            // Unchanged pool plan: committed state, grants and finish
+            // pass all reused verbatim (deterministic finish over an
+            // identical fold state reproduces itself).
+            return PoolOutcome {
+                stats: PoolPlanStats { reused: t.steps.len(), replayed: 0 },
+                steps_total,
+                steps_reused: t.steps.len(),
+                rollback_depth: 0,
+                trace: t,
+            };
+        }
+        Some(mut t) => {
+            let lcp = common_prefix(&t.steps, &new_steps);
+            let (cluster_mark, grant_mark) = t.marks[lcp];
+            rollback_depth = cluster.journal_mark() - cluster_mark;
+            cluster.rollback_journal_to(cluster_mark);
+            t.plan.rollback_to(grant_mark);
+            t.marks.truncate(lcp + 1);
+            (t.plan, t.marks, lcp)
+        }
+        None => {
+            (PoolPlan::default(), vec![(cluster.journal_mark(), 0)], 0)
+        }
+    };
+    // Replay the divergent suffix, checkpointing after each step.
+    for &idx in &order[lcp..] {
+        alg.place_step(cluster, &mut plan, &reqs, idx);
+        marks.push((cluster.journal_mark(), plan.mark()));
+    }
+    alg.finish_pool(cluster, &mut plan, &reqs);
+    PoolOutcome {
+        stats: PoolPlanStats { reused: lcp, replayed: steps_total - lcp },
+        steps_total,
+        steps_reused: lcp,
+        rollback_depth,
+        trace: PoolTrace { steps: new_steps, marks, plan },
+    }
+}
+
+/// Fan the per-pool placement folds out over `shards` worker threads
+/// (`std::thread::scope` — the sweep driver's no-new-deps pattern).
+/// Each worker claims pools off a shared atomic counter and plans them
+/// with its own checkpoint/journal; results land in per-pool slots and
+/// are consumed in fixed pool order, so the assembled plan is
+/// byte-identical to the serial loop for any shard count — scheduling
+/// work is per-pool-deterministic and pools share no state.
+fn plan_pools_sharded(
+    alg: &dyn PoolAlg,
+    fleet: &mut Fleet,
+    prev_pools: Vec<Option<PoolTrace>>,
+    sjobs: &[JobRequest<'_>],
+    assigned: &BTreeMap<JobId, GpuGen>,
+    shards: usize,
+) -> Vec<PoolOutcome> {
+    let work: Vec<Mutex<Option<(&mut TypePool, Option<PoolTrace>)>>> = fleet
+        .pools
+        .iter_mut()
+        .zip(prev_pools)
+        .map(|item| Mutex::new(Some(item)))
+        .collect();
+    let results: Vec<Mutex<Option<PoolOutcome>>> =
+        work.iter().map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    let workers = shards.min(work.len());
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= work.len() {
+                    break;
+                }
+                let (pool, prev) =
+                    work[i].lock().unwrap().take().expect("claimed once");
+                let out = plan_pool(alg, pool, prev, sjobs, assigned);
+                *results[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("every pool planned"))
+        .collect()
+}
+
 /// Plan one round with longest-common-prefix resume against `prev`.
 ///
 /// The assignment fold always recomputes in full (O(jobs × |K|) — the
@@ -353,61 +476,32 @@ pub(crate) fn plan_resumable<M: Mechanism + ?Sized>(
     };
 
     // Phase 2+3: per-pool placement folds, resumed where prefixes match.
+    // Pools are disjoint, so with `--shards N > 1` on a multi-pool fleet
+    // the folds fan out over worker threads; either way the outcomes are
+    // consumed in fixed pool order, keeping the plan byte-identical for
+    // any shard count.
+    let shards = fleet.shards();
+    let outcomes: Vec<PoolOutcome> = if shards <= 1 || n_pools <= 1 {
+        fleet
+            .pools
+            .iter_mut()
+            .zip(prev_pools)
+            .map(|(pool, prev)| plan_pool(alg, pool, prev, &sjobs, &assigned))
+            .collect()
+    } else {
+        plan_pools_sharded(alg, fleet, prev_pools, &sjobs, &assigned, shards)
+    };
     let mut pools_out: Vec<PoolTrace> = Vec::with_capacity(n_pools);
     let mut pool_stats: Vec<PoolPlanStats> = Vec::with_capacity(n_pools);
     let mut steps_total = 0usize;
     let mut steps_reused = 0usize;
     let mut rollback_depth = 0usize;
-    for (pool, prev_pool) in fleet.pools.iter_mut().zip(prev_pools) {
-        let gen = pool.gen;
-        let spec = pool.cluster.spec;
-        let reqs = super::pool_requests(gen, spec, &sjobs, &assigned);
-        let order = alg.order(&reqs);
-        let new_steps: Vec<JobId> =
-            order.iter().map(|&i| reqs[i].id).collect();
-        steps_total += new_steps.len();
-
-        let cluster = &mut pool.cluster;
-        let (mut plan, mut marks, lcp) = match prev_pool {
-            Some(t) if t.steps == new_steps => {
-                // Unchanged pool plan: committed state, grants and finish
-                // pass all reused verbatim (deterministic finish over an
-                // identical fold state reproduces itself).
-                steps_reused += t.steps.len();
-                pool_stats.push(PoolPlanStats {
-                    reused: t.steps.len(),
-                    replayed: 0,
-                });
-                pools_out.push(t);
-                continue;
-            }
-            Some(mut t) => {
-                let lcp = common_prefix(&t.steps, &new_steps);
-                let (cluster_mark, grant_mark) = t.marks[lcp];
-                rollback_depth += cluster.journal_mark() - cluster_mark;
-                cluster.rollback_journal_to(cluster_mark);
-                t.plan.rollback_to(grant_mark);
-                t.marks.truncate(lcp + 1);
-                steps_reused += lcp;
-                (t.plan, t.marks, lcp)
-            }
-            None => (
-                PoolPlan::default(),
-                vec![(cluster.journal_mark(), 0)],
-                0,
-            ),
-        };
-        // Replay the divergent suffix, checkpointing after each step.
-        for &idx in &order[lcp..] {
-            alg.place_step(cluster, &mut plan, &reqs, idx);
-            marks.push((cluster.journal_mark(), plan.mark()));
-        }
-        alg.finish_pool(cluster, &mut plan, &reqs);
-        pool_stats.push(PoolPlanStats {
-            reused: lcp,
-            replayed: new_steps.len() - lcp,
-        });
-        pools_out.push(PoolTrace { steps: new_steps, marks, plan });
+    for o in outcomes {
+        steps_total += o.steps_total;
+        steps_reused += o.steps_reused;
+        rollback_depth += o.rollback_depth;
+        pool_stats.push(o.stats);
+        pools_out.push(o.trace);
     }
 
     // Assemble the fleet-level grants from the per-pool fold states.

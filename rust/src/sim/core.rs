@@ -289,26 +289,61 @@ impl Ord for HeapEntry {
 }
 
 /// The simulation event queue.
+///
+/// Lease expiries are invalidated lazily (a new round supersedes the old
+/// round's expiry without removing it), so stale entries buried under
+/// far-future arrivals would otherwise accumulate without bound — one
+/// per round over a million-job trace. `drop_stale` therefore compacts
+/// the heap whenever it exceeds twice the live-event count, keeping the
+/// heap O(pending arrivals) while staying amortized O(1) per round.
 struct EventQueue {
     heap: BinaryHeap<HeapEntry>,
+    /// Queued (not yet popped) arrivals — the live-event lower bound the
+    /// compaction threshold is measured against.
+    arrivals: usize,
 }
 
 impl EventQueue {
     fn new() -> EventQueue {
-        EventQueue { heap: BinaryHeap::new() }
+        EventQueue { heap: BinaryHeap::new(), arrivals: 0 }
     }
 
     fn push(&mut self, e: SimEvent) {
+        if matches!(e, SimEvent::Arrival { .. }) {
+            self.arrivals += 1;
+        }
         self.heap.push(HeapEntry(e));
     }
 
-    /// Drop lease events from rounds other than `round` off the top.
+    /// Total queued entries, stale lease expiries included (the
+    /// compaction regression test bounds this).
+    #[cfg(test)]
+    fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Drop lease events from rounds other than `round` off the top,
+    /// then compact buried stale leases once they dominate the heap.
     fn drop_stale(&mut self, round: usize) {
         while matches!(
             self.heap.peek(),
             Some(HeapEntry(SimEvent::LeaseExpiry { round: r, .. })) if *r != round
         ) {
             self.heap.pop();
+        }
+        // Live events: every queued arrival plus at most one current
+        // lease expiry. Rebuilding preserves pop order exactly — it is a
+        // pure function of `order_key`'s total order, so dropping
+        // never-poppable stale entries is schedule-invisible.
+        let live = self.arrivals + 1;
+        if self.heap.len() > 2 * live {
+            self.heap = std::mem::take(&mut self.heap)
+                .into_iter()
+                .filter(|HeapEntry(e)| match e {
+                    SimEvent::Arrival { .. } => true,
+                    SimEvent::LeaseExpiry { round: r, .. } => *r == round,
+                })
+                .collect();
         }
     }
 
@@ -320,6 +355,7 @@ impl EventQueue {
             if *at <= deadline {
                 let idx = *idx;
                 self.heap.pop();
+                self.arrivals -= 1;
                 return Some(idx);
             }
         }
@@ -924,5 +960,37 @@ mod tests {
         q.push(SimEvent::Arrival { at: 4.0, idx: 1 });
         q.push(SimEvent::LeaseExpiry { at: 2.0, round: 0 });
         assert_eq!(q.next_arrival_at(1), Some(4.0));
+    }
+
+    #[test]
+    fn buried_stale_leases_are_compacted() {
+        // Each round's lease lands *after* every pending arrival, so it
+        // is buried below the heap top when the next round supersedes
+        // it — the shape lazy top-popping alone never reclaims, and the
+        // heap would grow by one dead entry per round for the whole run.
+        let n = 1_000;
+        let mut q = EventQueue::new();
+        for i in 0..n {
+            q.push(SimEvent::Arrival { at: i as f64, idx: i });
+        }
+        for round in 0..n {
+            q.push(SimEvent::LeaseExpiry {
+                at: 1e6 + round as f64,
+                round,
+            });
+            // Compaction is pop-order invisible: arrivals still pop in
+            // arrival order.
+            assert_eq!(q.pop_arrival_due(f64::INFINITY, round), Some(round));
+            assert!(
+                q.len() <= 2 * (n - round + 1),
+                "round {round}: stale leases accumulate, len = {}",
+                q.len()
+            );
+        }
+        // Drained of arrivals, the queue holds the live lease alone
+        // (plus at most one not-yet-compacted stale entry).
+        assert_eq!(q.next_at(n - 1), Some(1e6 + (n - 1) as f64));
+        assert!(q.len() <= 2, "len = {}", q.len());
+        assert_eq!(q.next_arrival_at(n), None);
     }
 }

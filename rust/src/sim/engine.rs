@@ -74,6 +74,12 @@ pub struct SimConfig {
     /// candidate order degenerates to the plain packing key, and
     /// single-rack gangs never enter the link-cost division.
     pub topology: TopologySpec,
+    /// Planning fan-out width (`--shards N`): the resumable planner
+    /// spreads the per-pool placement folds over up to N worker threads.
+    /// Schedule-invisible — results merge in fixed pool order, so every
+    /// `SimResult`, golden payload and telemetry profile is
+    /// byte-identical for any value. 1 (default) = serial.
+    pub shards: usize,
 }
 
 impl Default for SimConfig {
@@ -93,6 +99,7 @@ impl Default for SimConfig {
             force_replan: false,
             no_resume: false,
             topology: TopologySpec::default(),
+            shards: 1,
         }
     }
 }
@@ -109,7 +116,10 @@ pub struct FleetModel {
     mechanism: Box<dyn Mechanism>,
     /// Per-job scheduling context, arena-indexed (dense slab — the
     /// per-round `BTreeMap` lookups were a hot-path cost at scale).
-    sens: Vec<Option<Sensitivity>>,
+    /// Boxed so a retired job's slot collapses to one machine word after
+    /// [`ClusterModel::forget`]: resident memory tracks *running* jobs,
+    /// not total arrivals (the million-job-scale requirement).
+    sens: Vec<Option<Box<Sensitivity>>>,
     reference_spec: Option<ServerSpec>,
     network_penalty: f64,
     /// Largest single pool, GPUs — the gang-fit bound (A.2.2: no
@@ -134,6 +144,7 @@ impl FleetModel {
             .validate()
             .unwrap_or_else(|e| panic!("invalid topology: {e}"));
         fleet.set_topology(cfg.topology);
+        fleet.set_shards(cfg.shards.max(1));
         let mechanism = mechanism_by_name(&cfg.mechanism).unwrap_or_else(|| {
             panic!("unknown mechanism {}", cfg.mechanism)
         });
@@ -171,7 +182,7 @@ impl FleetModel {
     }
 
     fn sens(&self, idx: usize) -> &Sensitivity {
-        self.sens[idx].as_ref().expect("job profiled on arrival")
+        self.sens[idx].as_deref().expect("job profiled on arrival")
     }
 }
 
@@ -202,7 +213,7 @@ impl ClusterModel for FleetModel {
         if self.sens.len() <= idx {
             self.sens.resize_with(idx + 1, || None);
         }
-        self.sens[idx] = Some(s);
+        self.sens[idx] = Some(Box::new(s));
         cost
     }
 
@@ -233,7 +244,7 @@ impl ClusterModel for FleetModel {
                     id: j.id,
                     gpus: j.gpus,
                     sens: self.sens[idx as usize]
-                        .as_ref()
+                        .as_deref()
                         .expect("job profiled on arrival"),
                 }
             })

@@ -1,0 +1,768 @@
+//! Google cluster-data (2019, v3) trace reader — the million-job scale
+//! ingest path (ROADMAP "Million-job scale").
+//!
+//! The 2019 Google trace is event-sourced, not row-per-job: a
+//! *collection* (≈ job) appears as a sequence of instance events
+//! (SUBMIT → SCHEDULE → … → FINISH/KILL), machine capacity is a second
+//! event stream, and resource requests are *normalized* to the largest
+//! machine (so a separate multiplier record converts them to absolute
+//! units). This reader ingests a flat CSV projection of those three
+//! pieces:
+//!
+//! - `instance_events.csv` (required) — columns `time` (μs), `type`
+//!   (event code), `collection_id`, `cpus` (normalized request in
+//!   \[0,1\]); optional `user` (tenant) and `memory`. Event codes follow
+//!   the trace documentation: SUBMIT=0, SCHEDULE=3, EVICT=4, FAIL=5,
+//!   FINISH=6, KILL=7; every other code is ignored.
+//! - `machine_events.csv` (optional) — `time,machine_id,type` with
+//!   ADD=0/REMOVE=1; the net machine count is exposed as a fleet-size
+//!   hint ([`GoogleTraceSource::machines`]).
+//! - `resource_multipliers.csv` (optional) — one data row whose `cpus`
+//!   cell overrides [`cpu_multiplier`]: the normalized→GPU-demand
+//!   conversion (`gpus = ceil(cpus_norm × multiplier)`).
+//!
+//! `--trace` may point at the directory holding those files or directly
+//! at an instance-events CSV.
+//!
+//! **Streaming, bounded memory.** Event rows are consumed line-by-line
+//! off a [`BufRead`](std::io::BufRead) — the trace text never
+//! materializes. Resident state while parsing is the *open-collections*
+//! map (bounded by concurrently live collections, not total jobs) plus
+//! the compact emitted rows; a 1M-job trace parses in memory
+//! proportional to its concurrency, not its length.
+//!
+//! Collection lifecycle: SUBMIT opens (re-submits ignored), SCHEDULE
+//! stamps the start, EVICT/FAIL clear it (the collection will be
+//! re-scheduled; arrival stays at first submit), FINISH emits one job
+//! with `duration = finish − schedule`, KILL emits only under
+//! [`keep_failed`] (the Philly `status` filter's analogue). Collections
+//! that terminate without ever scheduling, or never terminate before
+//! EOF, are counted and skipped. Zero/negative-CPU collections are
+//! skipped-and-counted *before* tenant interning and model sampling,
+//! matching the Philly reader's bit-identity-with-a-pre-filtered-trace
+//! semantics. Malformed cells error with their 1-based line number.
+//!
+//! [`cpu_multiplier`]: GoogleTraceConfig::cpu_multiplier
+//! [`keep_failed`]: GoogleTraceConfig::keep_failed
+
+use super::{
+    finalize_rows, JobSpec, RawRow, TenantInterner, WorkloadSource,
+};
+use crate::trace::{Split, SPLIT_DEFAULT};
+use crate::util::rng::Pcg64;
+use std::collections::BTreeMap;
+use std::io::BufRead;
+
+/// Instance-event codes we act on (trace docs table 6); all others are
+/// ignored.
+const EV_SUBMIT: u32 = 0;
+const EV_SCHEDULE: u32 = 3;
+const EV_EVICT: u32 = 4;
+const EV_FAIL: u32 = 5;
+const EV_FINISH: u32 = 6;
+const EV_KILL: u32 = 7;
+
+/// Machine-event codes.
+const MACH_ADD: u32 = 0;
+const MACH_REMOVE: u32 = 1;
+
+/// Reader configuration (see module docs for knob semantics).
+#[derive(Debug, Clone)]
+pub struct GoogleTraceConfig {
+    /// Trace directory (`instance_events.csv` + optional
+    /// `machine_events.csv`/`resource_multipliers.csv`) or a single
+    /// instance-events CSV file.
+    pub path: String,
+    /// λ rescale: all inter-arrival gaps are divided by this. Must be
+    /// positive.
+    pub load_scale: f64,
+    /// Normalized-CPU → GPU-demand conversion
+    /// (`gpus = ceil(cpus_norm × multiplier)`); overridden by a
+    /// `resource_multipliers.csv` row when present. Must be positive.
+    pub cpu_multiplier: f64,
+    /// GPU-demand remap: demands above this are clamped down (0 disables).
+    pub gpu_cap: u32,
+    /// Keep only the first N emitted jobs (trace event order).
+    pub max_jobs: Option<usize>,
+    /// Model mix (the trace carries no model column; every job samples).
+    pub split: Split,
+    /// Seed for model sampling.
+    pub seed: u64,
+    /// Also emit KILLed collections (the `status != Pass` analogue).
+    pub keep_failed: bool,
+    /// Duration clamp, seconds.
+    pub duration_min_s: f64,
+    pub duration_max_s: f64,
+}
+
+impl Default for GoogleTraceConfig {
+    fn default() -> Self {
+        GoogleTraceConfig {
+            path: String::new(),
+            load_scale: 1.0,
+            cpu_multiplier: 8.0,
+            gpu_cap: 16,
+            max_jobs: None,
+            split: SPLIT_DEFAULT,
+            seed: 1,
+            keep_failed: false,
+            duration_min_s: 1.0,
+            duration_max_s: f64::INFINITY,
+        }
+    }
+}
+
+/// One open collection while streaming the event file.
+struct Pending {
+    submit_us: f64,
+    user: String,
+    cpus_norm: f64,
+    schedule_us: Option<f64>,
+}
+
+/// Header-indexed cells of one streamed CSV line (the streaming
+/// counterpart of [`super::CsvDoc`], which borrows the whole text).
+struct LineCols {
+    idx: BTreeMap<&'static str, usize>,
+}
+
+impl LineCols {
+    fn parse_header(
+        header: &str,
+        required: &[&'static str],
+        optional: &[&'static str],
+    ) -> Result<LineCols, String> {
+        let cols: Vec<&str> = header.split(',').map(str::trim).collect();
+        let mut idx = BTreeMap::new();
+        for &name in required.iter().chain(optional) {
+            if let Some(i) = cols.iter().position(|c| *c == name) {
+                idx.insert(name, i);
+            } else if required.contains(&name) {
+                return Err(format!("missing column '{name}'"));
+            }
+        }
+        Ok(LineCols { idx })
+    }
+
+    fn cell<'l>(
+        &self,
+        cells: &[&'l str],
+        name: &str,
+        line_no: usize,
+    ) -> Result<Option<&'l str>, String> {
+        match self.idx.get(name) {
+            None => Ok(None),
+            Some(&i) => cells.get(i).copied().map(Some).ok_or_else(|| {
+                format!("line {line_no}: too few columns")
+            }),
+        }
+    }
+
+    fn parse<T: std::str::FromStr>(
+        &self,
+        cells: &[&str],
+        name: &str,
+        line_no: usize,
+    ) -> Result<T, String> {
+        self.cell(cells, name, line_no)?
+            .ok_or_else(|| format!("line {line_no}: missing {name}"))?
+            .parse()
+            .map_err(|_| format!("line {line_no}: bad {name}"))
+    }
+}
+
+/// Yield `(1-based line number, trimmed content)` for data lines,
+/// skipping blanks and `#` comments. The first yielded line is the
+/// header.
+fn data_lines<I>(
+    lines: I,
+) -> impl Iterator<Item = Result<(usize, String), String>>
+where
+    I: Iterator<Item = std::io::Result<String>>,
+{
+    lines.enumerate().filter_map(|(i, l)| match l {
+        Err(e) => Some(Err(format!("line {}: read error: {e}", i + 1))),
+        Ok(l) => {
+            let t = l.trim();
+            if t.is_empty() || t.starts_with('#') {
+                None
+            } else {
+                Some(Ok((i + 1, t.to_string())))
+            }
+        }
+    })
+}
+
+/// A parsed Google-format trace, streamed in arrival order.
+pub struct GoogleTraceSource {
+    specs: std::vec::IntoIter<JobSpec>,
+    tenant_names: Vec<String>,
+    skipped_zero_gpu: usize,
+    skipped_unscheduled: usize,
+    skipped_incomplete: usize,
+    machines: Option<usize>,
+}
+
+impl GoogleTraceSource {
+    /// Read and parse `cfg.path` (directory or instance-events file).
+    /// Errors carry the offending file's line number.
+    pub fn new(cfg: GoogleTraceConfig) -> Result<GoogleTraceSource, String> {
+        validate(&cfg)?;
+        let is_dir = std::fs::metadata(&cfg.path)
+            .map(|m| m.is_dir())
+            .unwrap_or(false);
+        let instance_path = if is_dir {
+            format!("{}/instance_events.csv", cfg.path)
+        } else {
+            cfg.path.clone()
+        };
+
+        let mut multiplier = cfg.cpu_multiplier;
+        let mut machines = None;
+        if is_dir {
+            let mult_path = format!("{}/resource_multipliers.csv", cfg.path);
+            if let Ok(text) = std::fs::read_to_string(&mult_path) {
+                multiplier = parse_multipliers(&text)
+                    .map_err(|e| format!("{mult_path}: {e}"))?;
+            }
+            let mach_path = format!("{}/machine_events.csv", cfg.path);
+            if let Ok(f) = std::fs::File::open(&mach_path) {
+                let reader = std::io::BufReader::new(f);
+                machines = Some(
+                    parse_machines(reader.lines())
+                        .map_err(|e| format!("{mach_path}: {e}"))?,
+                );
+            }
+        }
+
+        let f = std::fs::File::open(&instance_path)
+            .map_err(|e| format!("read {instance_path}: {e}"))?;
+        let reader = std::io::BufReader::new(f);
+        let mut src = parse_instances(reader.lines(), multiplier, &cfg)
+            .map_err(|e| format!("{instance_path}: {e}"))?;
+        src.machines = machines;
+        src.report_skips(&cfg.path);
+        Ok(src)
+    }
+
+    /// Parse instance events from an in-memory document (tests/benches);
+    /// no multiplier/machine files are consulted.
+    pub fn from_str(
+        text: &str,
+        cfg: &GoogleTraceConfig,
+    ) -> Result<GoogleTraceSource, String> {
+        validate(cfg)?;
+        parse_instances(
+            text.lines().map(|l| Ok(l.to_string())),
+            cfg.cpu_multiplier,
+            cfg,
+        )
+    }
+
+    /// Parse all three in-memory documents (tests).
+    pub fn from_parts(
+        instance: &str,
+        machines: Option<&str>,
+        multipliers: Option<&str>,
+        cfg: &GoogleTraceConfig,
+    ) -> Result<GoogleTraceSource, String> {
+        validate(cfg)?;
+        let multiplier = match multipliers {
+            Some(text) => parse_multipliers(text)?,
+            None => cfg.cpu_multiplier,
+        };
+        let mach = match machines {
+            Some(text) => Some(parse_machines(
+                text.lines().map(|l| Ok(l.to_string())),
+            )?),
+            None => None,
+        };
+        let mut src = parse_instances(
+            instance.lines().map(|l| Ok(l.to_string())),
+            multiplier,
+            cfg,
+        )?;
+        src.machines = mach;
+        Ok(src)
+    }
+
+    /// Collections dropped because their normalized CPU request was ≤ 0
+    /// (nothing to gang-schedule).
+    pub fn skipped_zero_gpu(&self) -> usize {
+        self.skipped_zero_gpu
+    }
+
+    /// Collections that reached a terminal event without ever being
+    /// scheduled (no running interval to derive a duration from).
+    pub fn skipped_unscheduled(&self) -> usize {
+        self.skipped_unscheduled
+    }
+
+    /// Collections still open at end of trace (no terminal event).
+    pub fn skipped_incomplete(&self) -> usize {
+        self.skipped_incomplete
+    }
+
+    /// Net machine count from `machine_events.csv`, when present — a
+    /// fleet-size hint for the caller.
+    pub fn machines(&self) -> Option<usize> {
+        self.machines
+    }
+
+    fn report_skips(&self, path: &str) {
+        let total = self.skipped_zero_gpu
+            + self.skipped_unscheduled
+            + self.skipped_incomplete;
+        if total > 0 {
+            eprintln!(
+                "google trace {path}: skipped {} zero-GPU, {} unscheduled, \
+                 {} incomplete collection(s)",
+                self.skipped_zero_gpu,
+                self.skipped_unscheduled,
+                self.skipped_incomplete,
+            );
+        }
+    }
+}
+
+fn validate(cfg: &GoogleTraceConfig) -> Result<(), String> {
+    if !(cfg.load_scale > 0.0) {
+        return Err("load_scale must be positive".to_string());
+    }
+    if !(cfg.cpu_multiplier > 0.0) {
+        return Err("cpu_multiplier must be positive".to_string());
+    }
+    if !(cfg.duration_min_s <= cfg.duration_max_s) {
+        return Err("duration clamp: min > max".to_string());
+    }
+    Ok(())
+}
+
+/// The `resource_multipliers.csv` projection: a header with `cpus`
+/// (optionally `memory`) and one data row; the `cpus` value is the
+/// normalized→absolute conversion.
+fn parse_multipliers(text: &str) -> Result<f64, String> {
+    let mut lines = data_lines(text.lines().map(|l| Ok(l.to_string())));
+    let (_, header) = lines
+        .next()
+        .ok_or_else(|| "empty multipliers file".to_string())??;
+    let cols = LineCols::parse_header(&header, &["cpus"], &["memory"])?;
+    let (line_no, row) = lines
+        .next()
+        .ok_or_else(|| "multipliers file has no data row".to_string())??;
+    let cells: Vec<&str> = row.split(',').map(str::trim).collect();
+    let mult: f64 = cols.parse(&cells, "cpus", line_no)?;
+    if !(mult.is_finite() && mult > 0.0) {
+        return Err(format!("line {line_no}: cpus multiplier must be positive"));
+    }
+    Ok(mult)
+}
+
+/// Stream `machine_events.csv`: net machine count after ADD/REMOVE
+/// replay (other codes — e.g. UPDATE — are ignored).
+fn parse_machines<I>(lines: I) -> Result<usize, String>
+where
+    I: Iterator<Item = std::io::Result<String>>,
+{
+    let mut lines = data_lines(lines);
+    let (_, header) = lines
+        .next()
+        .ok_or_else(|| "empty machine events file".to_string())??;
+    let cols = LineCols::parse_header(
+        &header,
+        &["time", "machine_id", "type"],
+        &["cpus", "memory"],
+    )?;
+    let mut count = 0usize;
+    for line in lines {
+        let (line_no, row) = line?;
+        let cells: Vec<&str> = row.split(',').map(str::trim).collect();
+        let _time: f64 = cols.parse(&cells, "time", line_no)?;
+        let _id: u64 = cols.parse(&cells, "machine_id", line_no)?;
+        let ev: u32 = cols.parse(&cells, "type", line_no)?;
+        match ev {
+            MACH_ADD => count += 1,
+            MACH_REMOVE => count = count.saturating_sub(1),
+            _ => {}
+        }
+    }
+    Ok(count)
+}
+
+/// Stream the instance-event lines into emitted jobs. `multiplier` is
+/// the resolved normalized-CPU → GPU conversion.
+fn parse_instances<I>(
+    lines: I,
+    multiplier: f64,
+    cfg: &GoogleTraceConfig,
+) -> Result<GoogleTraceSource, String>
+where
+    I: Iterator<Item = std::io::Result<String>>,
+{
+    let mut lines = data_lines(lines);
+    let (_, header) = lines
+        .next()
+        .ok_or_else(|| "empty trace file".to_string())??;
+    let cols = LineCols::parse_header(
+        &header,
+        &["time", "type", "collection_id", "cpus"],
+        &["user", "memory"],
+    )?;
+
+    let mut rng = Pcg64::new(cfg.seed, 0x9B177);
+    let mut interner = TenantInterner::new();
+    // Open collections: bounded by *concurrent* collections, not trace
+    // length — the streaming-memory invariant.
+    let mut open: BTreeMap<u64, Pending> = BTreeMap::new();
+    let mut rows: Vec<RawRow> = Vec::new();
+    let mut skipped_zero_gpu = 0usize;
+    let mut skipped_unscheduled = 0usize;
+
+    'stream: for line in lines {
+        let (line_no, row) = line?;
+        let cells: Vec<&str> = row.split(',').map(str::trim).collect();
+        let time_us: f64 = cols.parse(&cells, "time", line_no)?;
+        let ev: u32 = cols.parse(&cells, "type", line_no)?;
+        let cid: u64 = cols.parse(&cells, "collection_id", line_no)?;
+        match ev {
+            EV_SUBMIT => {
+                let cpus_norm: f64 = cols.parse(&cells, "cpus", line_no)?;
+                let user = cols
+                    .cell(&cells, "user", line_no)?
+                    .filter(|u| !u.is_empty())
+                    .unwrap_or("default")
+                    .to_string();
+                // Re-submits after eviction keep the first arrival.
+                open.entry(cid).or_insert(Pending {
+                    submit_us: time_us,
+                    user,
+                    cpus_norm,
+                    schedule_us: None,
+                });
+            }
+            EV_SCHEDULE => {
+                if let Some(p) = open.get_mut(&cid) {
+                    if p.schedule_us.is_none() {
+                        p.schedule_us = Some(time_us);
+                    }
+                }
+            }
+            EV_EVICT | EV_FAIL => {
+                // Back to pending; arrival (first submit) is kept.
+                if let Some(p) = open.get_mut(&cid) {
+                    p.schedule_us = None;
+                }
+            }
+            EV_FINISH | EV_KILL => {
+                let Some(p) = open.remove(&cid) else { continue };
+                if ev == EV_KILL && !cfg.keep_failed {
+                    // The Philly `status != Pass` filter's analogue:
+                    // dropped silently, before any skip counting.
+                    continue;
+                }
+                let Some(sched_us) = p.schedule_us else {
+                    skipped_unscheduled += 1;
+                    continue;
+                };
+                if p.cpus_norm <= 0.0 || !p.cpus_norm.is_finite() {
+                    // Nothing to gang-schedule; count-and-skip before
+                    // interning or model sampling so kept rows are
+                    // byte-identical to a pre-filtered trace.
+                    skipped_zero_gpu += 1;
+                    continue;
+                }
+                let duration_s = (time_us - sched_us) / 1e6;
+                if duration_s < 0.0 {
+                    return Err(format!(
+                        "line {line_no}: collection {cid} finishes before \
+                         its schedule time"
+                    ));
+                }
+                let tenant = interner.intern(&p.user);
+                let model = cfg.split.sample_model(&mut rng);
+                let gpus_raw = (p.cpus_norm * multiplier).ceil() as u32;
+                let gpus_raw = gpus_raw.max(1);
+                let gpus = if cfg.gpu_cap > 0 {
+                    gpus_raw.min(cfg.gpu_cap)
+                } else {
+                    gpus_raw
+                };
+                let duration_s = duration_s
+                    .clamp(cfg.duration_min_s, cfg.duration_max_s);
+                rows.push((p.submit_us / 1e6, tenant, model, gpus, duration_s));
+                if let Some(max) = cfg.max_jobs {
+                    if rows.len() >= max {
+                        break 'stream;
+                    }
+                }
+            }
+            _ => {} // QUEUE/ENABLE/UPDATE/... — no lifecycle effect.
+        }
+    }
+
+    let skipped_incomplete = open.len();
+    Ok(GoogleTraceSource {
+        specs: finalize_rows(rows, cfg.load_scale).into_iter(),
+        tenant_names: interner.into_names(),
+        skipped_zero_gpu,
+        skipped_unscheduled,
+        skipped_incomplete,
+        machines: None,
+    })
+}
+
+impl WorkloadSource for GoogleTraceSource {
+    fn name(&self) -> &'static str {
+        "google-trace"
+    }
+
+    fn next_spec(&mut self) -> Option<JobSpec> {
+        self.specs.next()
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.specs.len())
+    }
+
+    fn tenant_names(&self) -> Vec<String> {
+        self.tenant_names.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::{JobId, TenantId};
+
+    // Two collections on two users; c=2 schedules twice (evicted once).
+    const SMALL: &str = "\
+# tiny instance-event projection
+time,type,collection_id,user,cpus
+1000000,0,1,alice,0.25
+2000000,0,2,bob,0.05
+3000000,3,1,alice,0.25
+4000000,3,2,bob,0.05
+5000000,4,2,bob,0.05
+6000000,6,1,alice,0.25
+7000000,0,2,bob,0.05
+8000000,3,2,bob,0.05
+10000000,6,2,bob,0.05
+";
+
+    #[test]
+    fn parses_lifecycle_and_sorts_by_arrival() {
+        let mut src =
+            GoogleTraceSource::from_str(SMALL, &GoogleTraceConfig::default())
+                .unwrap();
+        assert_eq!(src.tenant_names(), vec!["alice", "bob"]);
+        let specs: Vec<JobSpec> =
+            std::iter::from_fn(|| src.next_spec()).collect();
+        assert_eq!(specs.len(), 2);
+        // Arrivals re-based to the earliest submit (t=1s); c=2 keeps its
+        // first submit (t=2s) across the evict + re-submit.
+        assert_eq!(specs[0].arrival_s, 0.0);
+        assert_eq!(specs[0].id, JobId(0));
+        assert_eq!(specs[1].arrival_s, 1.0);
+        // Durations: schedule→finish. c=1: 6s−3s = 3s. c=2: the evict
+        // cleared the first schedule, so 10s−8s = 2s.
+        assert_eq!(specs[0].duration_s, 3.0);
+        assert_eq!(specs[1].duration_s, 2.0);
+        // gpus = ceil(cpus_norm × 8): 0.25→2, 0.05→1.
+        assert_eq!(specs[0].gpus, 2);
+        assert_eq!(specs[1].gpus, 1);
+        assert_eq!(specs[0].tenant, TenantId(0));
+        assert_eq!(specs[1].tenant, TenantId(1));
+    }
+
+    #[test]
+    fn multiplier_file_overrides_config() {
+        let mult = "cpus,memory\n64,256\n";
+        let mut src = GoogleTraceSource::from_parts(
+            SMALL,
+            None,
+            Some(mult),
+            &GoogleTraceConfig { gpu_cap: 0, ..GoogleTraceConfig::default() },
+        )
+        .unwrap();
+        let specs: Vec<JobSpec> =
+            std::iter::from_fn(|| src.next_spec()).collect();
+        // ceil(0.25 × 64) = 16, ceil(0.05 × 64) = 4.
+        assert_eq!(specs[0].gpus, 16);
+        assert_eq!(specs[1].gpus, 4);
+        // gpu_cap still applies on top of the multiplier.
+        let mut capped = GoogleTraceSource::from_parts(
+            SMALL,
+            None,
+            Some(mult),
+            &GoogleTraceConfig { gpu_cap: 8, ..GoogleTraceConfig::default() },
+        )
+        .unwrap();
+        assert_eq!(capped.next_spec().unwrap().gpus, 8);
+        // A malformed multiplier row errors rather than silently
+        // falling back.
+        assert!(GoogleTraceSource::from_parts(
+            SMALL,
+            None,
+            Some("cpus\n-3\n"),
+            &GoogleTraceConfig::default(),
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn machine_events_give_fleet_hint() {
+        let mach = "\
+time,machine_id,type
+0,100,0
+0,101,0
+0,102,0
+50,101,1
+";
+        let src = GoogleTraceSource::from_parts(
+            SMALL,
+            Some(mach),
+            None,
+            &GoogleTraceConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(src.machines(), Some(2));
+        assert!(GoogleTraceSource::from_parts(
+            SMALL,
+            Some("time,machine_id,type\n0,x,0\n"),
+            None,
+            &GoogleTraceConfig::default(),
+        )
+        .unwrap_err()
+        .contains("line 2"));
+    }
+
+    #[test]
+    fn malformed_rows_report_line_numbers() {
+        let cfg = GoogleTraceConfig::default();
+        for (bad, what) in [
+            ("time,type,collection_id,cpus\nx,0,1,0.5\n", "time"),
+            ("time,type,collection_id,cpus\n0,zero,1,0.5\n", "type"),
+            ("time,type,collection_id,cpus\n0,0,1\n", "cpus"),
+        ] {
+            let err = GoogleTraceSource::from_str(bad, &cfg).unwrap_err();
+            assert!(err.contains("line 2"), "{what}: {err}");
+        }
+        // Missing a required column names the column.
+        let err = GoogleTraceSource::from_str("time,type,cpus\n", &cfg)
+            .unwrap_err();
+        assert!(err.contains("collection_id"), "{err}");
+        // FINISH before SCHEDULE time is a hard error.
+        let bad = "\
+time,type,collection_id,cpus
+0,0,1,0.5
+9000000,3,1,0.5
+5000000,6,1,0.5
+";
+        let err = GoogleTraceSource::from_str(bad, &cfg).unwrap_err();
+        assert!(err.contains("line 4"), "{err}");
+    }
+
+    #[test]
+    fn zero_cpu_collections_skip_before_interning_and_rng() {
+        // Collection 9 (user zed, 0 cpus) completes first; the kept
+        // rows' tenant ids and sampled models must match a trace that
+        // never contained it.
+        const WITH_ZERO: &str = "\
+time,type,collection_id,user,cpus
+0,0,9,zed,0
+1000000,0,1,alice,0.5
+2000000,3,9,zed,0
+3000000,3,1,alice,0.5
+4000000,6,9,zed,0
+5000000,6,1,alice,0.5
+";
+        const PRE_FILTERED: &str = "\
+time,type,collection_id,user,cpus
+1000000,0,1,alice,0.5
+3000000,3,1,alice,0.5
+5000000,6,1,alice,0.5
+";
+        let cfg = GoogleTraceConfig::default();
+        let mut with =
+            GoogleTraceSource::from_str(WITH_ZERO, &cfg).unwrap();
+        let mut pre =
+            GoogleTraceSource::from_str(PRE_FILTERED, &cfg).unwrap();
+        assert_eq!(with.skipped_zero_gpu(), 1);
+        assert_eq!(pre.skipped_zero_gpu(), 0);
+        assert_eq!(with.tenant_names(), pre.tenant_names());
+        let a: Vec<JobSpec> =
+            std::iter::from_fn(|| with.next_spec()).collect();
+        let b: Vec<JobSpec> =
+            std::iter::from_fn(|| pre.next_spec()).collect();
+        assert_eq!(a.len(), 1);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.model, y.model);
+            assert_eq!(x.tenant, y.tenant);
+            assert_eq!(x.gpus, y.gpus);
+            assert_eq!(x.arrival_s, y.arrival_s);
+        }
+    }
+
+    #[test]
+    fn kills_drop_unless_keep_failed() {
+        let trace = "\
+time,type,collection_id,user,cpus
+0,0,1,a,0.5
+1000000,3,1,a,0.5
+2000000,7,1,a,0.5
+";
+        let cfg = GoogleTraceConfig::default();
+        let mut src = GoogleTraceSource::from_str(trace, &cfg).unwrap();
+        assert!(src.next_spec().is_none());
+        let mut kept = GoogleTraceSource::from_str(
+            trace,
+            &GoogleTraceConfig { keep_failed: true, ..cfg },
+        )
+        .unwrap();
+        let s = kept.next_spec().unwrap();
+        assert_eq!(s.duration_s, 1.0);
+    }
+
+    #[test]
+    fn unscheduled_and_incomplete_are_counted() {
+        // c=1 finishes without ever scheduling; c=2 never terminates.
+        let trace = "\
+time,type,collection_id,user,cpus
+0,0,1,a,0.5
+1000000,6,1,a,0.5
+2000000,0,2,b,0.5
+3000000,3,2,b,0.5
+";
+        let src = GoogleTraceSource::from_str(
+            trace,
+            &GoogleTraceConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(src.skipped_unscheduled(), 1);
+        assert_eq!(src.skipped_incomplete(), 1);
+        assert_eq!(src.len_hint(), Some(0));
+    }
+
+    #[test]
+    fn max_jobs_truncates_and_sampling_is_deterministic() {
+        let cfg = GoogleTraceConfig {
+            max_jobs: Some(1),
+            ..GoogleTraceConfig::default()
+        };
+        let mut src = GoogleTraceSource::from_str(SMALL, &cfg).unwrap();
+        assert_eq!(src.len_hint(), Some(1));
+        assert!(src.next_spec().is_some());
+        assert!(src.next_spec().is_none());
+        let take = |seed: u64| -> Vec<crate::job::ModelKind> {
+            let cfg = GoogleTraceConfig {
+                seed,
+                ..GoogleTraceConfig::default()
+            };
+            let mut src =
+                GoogleTraceSource::from_str(SMALL, &cfg).unwrap();
+            std::iter::from_fn(|| src.next_spec()).map(|s| s.model).collect()
+        };
+        assert_eq!(take(7), take(7));
+    }
+}

@@ -18,6 +18,10 @@
 //! - [`AlibabaTraceSource`] — an Alibaba-style machine-utilization
 //!   adapter mapping CPU/memory-heavy entries onto the big-data
 //!   `Fixed`/DRF job families of §5.7.
+//! - [`GoogleTraceSource`] — the 2019 Google cluster-data event format
+//!   (instance events + machine events + resource multipliers),
+//!   streamed line-by-line with memory bounded by *concurrent*
+//!   collections — the million-job-scale ingest path.
 //! - [`admission`] — weighted-quota tenant admission (GPU share per
 //!   tenant with work-conserving spill), used by the coordinator ahead of
 //!   the policy ordering.
@@ -33,11 +37,13 @@
 
 pub mod admission;
 mod alibaba;
+mod google;
 mod philly;
 mod synthetic;
 
 pub use admission::{admit, AdmissionJob, AdmissionOutcome, TenantQuotas};
 pub use alibaba::{AlibabaTraceConfig, AlibabaTraceSource};
+pub use google::{GoogleTraceConfig, GoogleTraceSource};
 pub use philly::{PhillyTraceConfig, PhillyTraceSource};
 pub use synthetic::SyntheticSource;
 

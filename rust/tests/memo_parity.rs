@@ -225,6 +225,73 @@ fn planning_tiers_stay_bit_identical_under_racked_topology() {
 }
 
 #[test]
+fn planning_tiers_stay_bit_identical_under_sharding() {
+    // ISSUE 8 tentpole proof: the sharded planner fans the per-pool
+    // placement folds out over worker threads, but each pool's fold is
+    // a pure function of (ordered sequence, pool state) and results
+    // merge in fixed pool order — so every tier × shard-count
+    // combination must reproduce the serial forced schedule bit for
+    // bit, with the memo/resume counters unchanged too.
+    let (jobs, spec) = loaded_trace(28, 41);
+    for policy in ["fifo", "srtf"] {
+        let cfg = |tier: &Tier, shards: usize| SimConfig {
+            n_servers: 2,
+            policy: policy.into(),
+            mechanism: "tune".into(),
+            types: Some(tritype()),
+            shards,
+            force_replan: matches!(tier, Tier::Forced),
+            no_resume: matches!(tier, Tier::Memoized),
+            ..Default::default()
+        };
+        let run = |tier: Tier, shards: usize| {
+            Simulator::with_quotas(cfg(&tier, shards), Some(spec.quotas()))
+                .run(jobs.clone())
+        };
+        let serial = run(Tier::Resumed, 1);
+        let serial_forced = run(Tier::Forced, 1);
+        assert_eq!(
+            schedule_bits(&serial),
+            schedule_bits(&serial_forced),
+            "{policy}: serial baseline tiers diverge"
+        );
+        for shards in [2, 4] {
+            for (tag, tier) in [
+                ("forced", Tier::Forced),
+                ("memoized", Tier::Memoized),
+                ("resumed", Tier::Resumed),
+            ] {
+                let sharded = run(tier, shards);
+                assert_eq!(
+                    schedule_bits(&sharded),
+                    schedule_bits(&serial_forced),
+                    "{policy}/shards={shards}/{tag}: sharded schedule \
+                     must be bit-identical to the serial forced baseline"
+                );
+                if tag == "resumed" {
+                    assert_eq!(
+                        (
+                            sharded.planned_rounds,
+                            sharded.resumed_rounds,
+                            sharded.plan_steps_total,
+                            sharded.plan_steps_reused,
+                        ),
+                        (
+                            serial.planned_rounds,
+                            serial.resumed_rounds,
+                            serial.plan_steps_total,
+                            serial.plan_steps_reused,
+                        ),
+                        "{policy}/shards={shards}: memo/resume counters \
+                         must not depend on the fan-out width"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn memoization_engages_under_steady_load() {
     // A contended FIFO run holds a non-empty queue across many rounds
     // with an unchanged runnable sequence: exactly the rounds the

@@ -24,9 +24,9 @@ use synergy::metrics::metrics_json;
 use synergy::sim::{SimConfig, Simulator};
 use synergy::trace::{Split, TraceConfig};
 use synergy::workload::{
-    AlibabaTraceConfig, AlibabaTraceSource, PhillyTraceConfig,
-    PhillyTraceSource, SyntheticSource, TenantQuotas, TenantSpec,
-    WorkloadSource,
+    AlibabaTraceConfig, AlibabaTraceSource, GoogleTraceConfig,
+    GoogleTraceSource, PhillyTraceConfig, PhillyTraceSource,
+    SyntheticSource, TenantQuotas, TenantSpec, WorkloadSource,
 };
 
 fn fixture(name: &str) -> String {
@@ -299,6 +299,38 @@ fn topology_cells_are_deterministic_and_match_goldens() {
         assert_eq!(a, b, "topology cell '{name}' not deterministic");
         check_golden(name, &a);
     }
+}
+
+// ---------------------------------------------------------------------------
+// ISSUE 8 Google-trace cell — NEW golden name; the matrix cells above
+// stay byte-identical (the google reader touches no shared RNG state).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn google_cell_is_deterministic_and_matches_golden() {
+    // Same recipe as the matrix's plain/homo cells (4 V100 servers,
+    // srtf/tune), fed from the `google_small` fixture directory through
+    // the streaming 2019 Google cluster-data reader.
+    let run = || {
+        let mut src = GoogleTraceSource::new(GoogleTraceConfig {
+            path: fixture("google_small"),
+            ..GoogleTraceConfig::default()
+        })
+        .unwrap();
+        let jobs = src.drain_jobs();
+        assert_eq!(jobs.len(), 8, "google_small emits 8 schedulable jobs");
+        let sim = Simulator::new(SimConfig {
+            n_servers: 4,
+            policy: "srtf".into(),
+            mechanism: "tune".into(),
+            ..Default::default()
+        });
+        sim.run(jobs).metrics_json(false)
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "google cell not deterministic across runs");
+    check_golden("google_plain_homo", &a);
 }
 
 #[test]

@@ -1,0 +1,142 @@
+//! Shard-determinism invariant (ISSUE 8 tentpole): serial planning and
+//! `--shards N` planning produce byte-identical results for any N.
+//!
+//! The sharded planner fans the resumable planner's per-pool placement
+//! folds out over `std::thread::scope` workers *after* the shared A.2.2
+//! type-assignment fold has partitioned jobs to pools. Each pool's fold
+//! is a pure function of (policy-ordered sequence, pool state), pools
+//! are disjoint, and per-pool outcomes merge in fixed pool order — so
+//! the fan-out width must be invisible everywhere an observer could
+//! look: `SimResult` schedule bits, the golden `metrics_json` payload,
+//! and the exported telemetry profile.
+
+use synergy::cluster::{GpuGen, ServerSpec, TypeSpec};
+use synergy::job::Job;
+use synergy::sim::{SimConfig, SimResult, Simulator};
+use synergy::telemetry::{TelemetryConfig, TelemetryRecorder};
+use synergy::trace::{Split, TraceConfig};
+use synergy::workload::{SyntheticSource, TenantSpec, WorkloadSource};
+
+fn loaded_trace(n: usize, seed: u64) -> (Vec<Job>, TenantSpec) {
+    let spec = TenantSpec::parse("a:2,b:1").unwrap();
+    let jobs = SyntheticSource::new(TraceConfig {
+        n_jobs: n,
+        split: Split::new(30, 50, 20),
+        multi_gpu: true, // gangs, so per-pool folds do nontrivial work
+        jobs_per_hour: Some(10.0),
+        seed,
+    })
+    .with_tenants(spec.clone())
+    .drain_jobs();
+    (jobs, spec)
+}
+
+fn tritype() -> Vec<TypeSpec> {
+    vec![
+        TypeSpec { gen: GpuGen::K80, spec: ServerSpec::default(), machines: 2 },
+        TypeSpec { gen: GpuGen::P100, spec: ServerSpec::default(), machines: 2 },
+        TypeSpec { gen: GpuGen::V100, spec: ServerSpec::default(), machines: 2 },
+    ]
+}
+
+/// Exact schedule bits: per-job finish times, round counts, makespan,
+/// utilization trace — bit patterns, so "close" is not "equal".
+fn schedule_bits(r: &SimResult) -> (Vec<(u64, u64)>, usize, u64, Vec<u64>) {
+    let finished: Vec<(u64, u64)> =
+        r.finished.iter().map(|f| (f.id.0, f.jct_s.to_bits())).collect();
+    let util: Vec<u64> = r
+        .utilization
+        .samples
+        .iter()
+        .flat_map(|s| {
+            [
+                s.gpu_util.to_bits(),
+                s.cpu_util.to_bits(),
+                s.cpu_used.to_bits(),
+                s.mem_util.to_bits(),
+                s.queued_jobs as u64,
+                s.running_jobs as u64,
+            ]
+        })
+        .collect();
+    (finished, r.rounds, r.makespan_s.to_bits(), util)
+}
+
+/// One recorded run at the given fan-out width: the result, the golden
+/// metrics payload string, and the exported telemetry profile.
+fn run_recorded(
+    jobs: &[Job],
+    spec: &TenantSpec,
+    policy: &str,
+    shards: usize,
+) -> (SimResult, String, String) {
+    let cfg = SimConfig {
+        n_servers: 2,
+        policy: policy.into(),
+        mechanism: "tune".into(),
+        types: Some(tritype()),
+        shards,
+        ..Default::default()
+    };
+    let mut rec = TelemetryRecorder::new(TelemetryConfig::default());
+    let r = Simulator::with_quotas(cfg, Some(spec.quotas()))
+        .run_with_telemetry(jobs.to_vec(), Some(&mut rec));
+    let metrics = r.metrics_json(true);
+    (r, metrics, rec.to_jsonl())
+}
+
+#[test]
+fn sharded_planning_is_byte_identical_to_serial() {
+    let (jobs, spec) = loaded_trace(30, 17);
+    for policy in ["fifo", "srtf"] {
+        let (serial, serial_metrics, serial_profile) =
+            run_recorded(&jobs, &spec, policy, 1);
+        assert_eq!(
+            serial.finished.len(),
+            jobs.len(),
+            "{policy}: baseline must drain the trace"
+        );
+        for shards in [2, 4] {
+            let (sharded, metrics, profile) =
+                run_recorded(&jobs, &spec, policy, shards);
+            assert_eq!(
+                schedule_bits(&sharded),
+                schedule_bits(&serial),
+                "{policy}/shards={shards}: schedule bits diverge"
+            );
+            assert_eq!(
+                metrics, serial_metrics,
+                "{policy}/shards={shards}: golden metrics payload diverges"
+            );
+            assert_eq!(
+                profile, serial_profile,
+                "{policy}/shards={shards}: telemetry profile diverges"
+            );
+        }
+    }
+}
+
+#[test]
+fn sharding_a_single_pool_fleet_is_a_no_op() {
+    // Homogeneous fleets have one pool: the sharded dispatch falls back
+    // to the serial path, and any shard count is accepted and harmless.
+    let (jobs, spec) = loaded_trace(20, 5);
+    let run = |shards: usize| {
+        let cfg = SimConfig {
+            n_servers: 2,
+            policy: "srtf".into(),
+            mechanism: "tune".into(),
+            shards,
+            ..Default::default()
+        };
+        Simulator::with_quotas(cfg, Some(spec.quotas())).run(jobs.clone())
+    };
+    let serial = run(1);
+    for shards in [2, 8] {
+        assert_eq!(
+            schedule_bits(&run(shards)),
+            schedule_bits(&serial),
+            "shards={shards}: homogeneous run must be unaffected"
+        );
+    }
+}
