@@ -56,6 +56,8 @@ pub fn run_sim_ref(
         force_replan: false,
         no_resume: false,
         topology: TopologySpec::default(),
+        shards: 1,
+        faults: None,
     });
     sim.run(jobs)
 }

@@ -260,8 +260,8 @@ fn main() {
         telem_last.expect("bench ran at least once");
     // Zero-scheduled-bytes rule, asserted at evaluation scale too.
     assert_eq!(
-        telem_result.metrics_json(true),
-        fifo.result.metrics_json(true),
+        telem_result.metrics_json(true, false),
+        fifo.result.metrics_json(true, false),
         "telemetry changed the scheduled bytes at 512 GPUs × 8k jobs"
     );
     assert_eq!(telem_rounds, telem_result.rounds);

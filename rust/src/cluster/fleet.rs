@@ -45,6 +45,10 @@ pub struct Fleet {
     /// Schedule-invisible — per-pool results merge in fixed pool order,
     /// so output is byte-identical for any value. 1 = serial (default).
     shards: usize,
+    /// The abstract topology spec ([`Fleet::set_topology`]), retained so
+    /// membership changes ([`Fleet::add_server`]) can re-derive the
+    /// concrete rack layout for the pool's new size.
+    topology_spec: TopologySpec,
 }
 
 impl Fleet {
@@ -64,6 +68,7 @@ impl Fleet {
                 })
                 .collect(),
             shards: 1,
+            topology_spec: TopologySpec::default(),
         }
     }
 
@@ -76,6 +81,7 @@ impl Fleet {
                 cluster: Cluster::homogeneous(spec, n),
             }],
             shards: 1,
+            topology_spec: TopologySpec::default(),
         }
     }
 
@@ -83,12 +89,24 @@ impl Fleet {
     /// deploy leader plans each round over only the workers currently
     /// alive, so placements keep addressing workers by stable id).
     pub fn with_server_ids(spec: ServerSpec, ids: &[usize]) -> Fleet {
+        Fleet::with_server_ids_of(GpuGen::default(), spec, ids)
+    }
+
+    /// [`Fleet::with_server_ids`] for an explicit generation — the
+    /// deploy leader mirrors whatever generation its workers registered
+    /// instead of assuming V100.
+    pub fn with_server_ids_of(
+        gen: GpuGen,
+        spec: ServerSpec,
+        ids: &[usize],
+    ) -> Fleet {
         Fleet {
             pools: vec![TypePool {
-                gen: GpuGen::default(),
-                cluster: Cluster::with_server_ids(spec, ids),
+                gen,
+                cluster: Cluster::with_server_ids_of(gen, spec, ids),
             }],
             shards: 1,
+            topology_spec: TopologySpec::default(),
         }
     }
 
@@ -183,10 +201,43 @@ impl Fleet {
     /// tri-type fleet under `racks:2` has 2 racks *per pool*. Call once
     /// at construction, before planning.
     pub fn set_topology(&mut self, spec: TopologySpec) {
+        self.topology_spec = spec;
         for p in &mut self.pools {
             let n = p.cluster.num_servers();
             p.cluster.set_topology(spec.for_servers(n));
         }
+    }
+
+    /// Host failure in pool `pool` (fault injection): takes the pool's
+    /// deterministic victim — its highest online scan position — offline
+    /// and returns the evicted job ids in id order. `None` when the pool
+    /// index is out of range or the pool is already fully offline (the
+    /// fault is a no-op; nothing preempted, no membership change).
+    pub fn fail_server(&mut self, pool: usize) -> Option<Vec<JobId>> {
+        let p = self.pools.get_mut(pool)?;
+        let pos = p.cluster.last_online_position()?;
+        Some(p.cluster.take_offline(pos))
+    }
+
+    /// Host restore/growth in pool `pool` (fault injection): revives the
+    /// lowest offline position if one exists, else grows the pool by a
+    /// fresh server and re-derives the rack layout for the new size from
+    /// the retained [`TopologySpec`]. Returns `false` when the pool
+    /// index is out of range.
+    pub fn add_server(&mut self, pool: usize) -> bool {
+        let spec = self.topology_spec;
+        let Some(p) = self.pools.get_mut(pool) else {
+            return false;
+        };
+        match p.cluster.first_offline_position() {
+            Some(pos) => p.cluster.bring_online(pos),
+            None => {
+                p.cluster.add_server();
+                let n = p.cluster.num_servers();
+                p.cluster.set_topology(spec.for_servers(n));
+            }
+        }
+        true
     }
 
     /// Turn on every pool's undo journal (prefix-resumable planning; see
@@ -214,14 +265,24 @@ impl Fleet {
         self.shards
     }
 
-    /// Aggregate GPU utilization in [0, 1].
+    /// Aggregate GPU utilization in [0, 1] (0.0 for a fully-offline
+    /// fleet rather than dividing by zero capacity).
     pub fn gpu_utilization(&self) -> f64 {
-        1.0 - self.free_gpus() as f64 / self.total_gpus() as f64
+        let total = self.total_gpus();
+        if total == 0 {
+            return 0.0;
+        }
+        1.0 - self.free_gpus() as f64 / total as f64
     }
 
-    /// Aggregate CPU allocation fraction in [0, 1].
+    /// Aggregate CPU allocation fraction in [0, 1] (0.0 for a
+    /// fully-offline fleet rather than dividing by zero capacity).
     pub fn cpu_utilization(&self) -> f64 {
-        1.0 - self.free_cpus() / self.total_cpus()
+        let total = self.total_cpus();
+        if total == 0.0 {
+            return 0.0;
+        }
+        1.0 - self.free_cpus() / total
     }
 
     /// Consistency check across every pool.
@@ -322,5 +383,52 @@ mod tests {
         assert!(f.is_single_type());
         assert_eq!(f.total_gpus(), 24);
         assert_eq!(f.pools[0].cluster.server(5).free_gpus, 8);
+    }
+
+    #[test]
+    fn fail_then_add_restores_the_same_position() {
+        let mut f = Fleet::two_tier(2);
+        let share = Share { gpus: 8, cpus: 24.0, mem_gb: 500.0 };
+        // Jobs on both P100 machines; failing pool 0 preempts only the
+        // one on the victim (highest position).
+        f.pools[0].cluster.place(JobId(1), Placement::single(0, share));
+        f.pools[0].cluster.place(JobId(2), Placement::single(1, share));
+        let victims = f.fail_server(0).unwrap();
+        assert_eq!(victims, vec![JobId(2)]);
+        assert_eq!(f.total_gpus(), 24);
+        assert_eq!(f.pools[0].cluster.online_servers(), 1);
+        assert!(f.check_consistency().is_ok());
+        // Restore revives the offline position (no growth).
+        assert!(f.add_server(0));
+        assert_eq!(f.total_gpus(), 32);
+        assert_eq!(f.pools[0].cluster.num_servers(), 2);
+        assert!(f.check_consistency().is_ok());
+    }
+
+    #[test]
+    fn add_with_nothing_offline_grows_and_reracks() {
+        let mut f = Fleet::homogeneous(ServerSpec::default(), 4);
+        f.set_topology(TopologySpec::racks(2));
+        assert!(f.add_server(0));
+        let c = &f.pools[0].cluster;
+        assert_eq!(c.num_servers(), 5);
+        assert_eq!(f.total_gpus(), 40);
+        // Rack layout re-derived for 5 machines: ceil(5/2) = 3 per rack.
+        assert_eq!(c.topology().servers_per_rack, 3);
+        assert!(f.check_consistency().is_ok());
+    }
+
+    #[test]
+    fn fault_edges_are_no_ops() {
+        let mut f = Fleet::homogeneous(ServerSpec::default(), 1);
+        assert!(f.fail_server(7).is_none(), "pool out of range");
+        assert!(!f.add_server(7));
+        assert_eq!(f.fail_server(0), Some(vec![]));
+        // Pool fully offline: further failures have no victim.
+        assert!(f.fail_server(0).is_none());
+        assert_eq!(f.total_gpus(), 0);
+        assert_eq!(f.gpu_utilization(), 0.0);
+        assert_eq!(f.cpu_utilization(), 0.0);
+        assert!(f.check_consistency().is_ok());
     }
 }

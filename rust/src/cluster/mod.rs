@@ -306,6 +306,17 @@ impl PartialEq for FreeIndex {
 
 impl FreeIndex {
     fn build(servers: &[Server], max_gpus: u32) -> FreeIndex {
+        Self::build_masked(servers, max_gpus, &[])
+    }
+
+    /// Build, skipping positions marked offline (an empty mask means
+    /// everything is online). Offline servers exist positionally but
+    /// must never appear in fit walks or aggregates.
+    fn build_masked(
+        servers: &[Server],
+        max_gpus: u32,
+        offline: &[bool],
+    ) -> FreeIndex {
         let buckets = max_gpus as usize + 1;
         let mut idx = FreeIndex {
             by_score: vec![BTreeSet::new(); buckets],
@@ -315,6 +326,9 @@ impl FreeIndex {
             free_mem_gb: 0.0,
         };
         for (pos, s) in servers.iter().enumerate() {
+            if offline.get(pos).copied().unwrap_or(false) {
+                continue;
+            }
             idx.attach(s, pos as u32);
         }
         idx
@@ -329,8 +343,9 @@ impl FreeIndex {
         self.free_mem_gb += s.free_mem_gb;
     }
 
-    /// Reset to the all-pristine state (every server fully free).
-    fn reset(&mut self, servers: &[Server]) {
+    /// Reset to the all-pristine state (every online server fully
+    /// free; offline positions stay detached).
+    fn reset(&mut self, servers: &[Server], offline: &[bool]) {
         for b in &mut self.by_score {
             b.clear();
         }
@@ -341,6 +356,9 @@ impl FreeIndex {
         self.free_cpus = 0.0;
         self.free_mem_gb = 0.0;
         for (pos, s) in servers.iter().enumerate() {
+            if offline.get(pos).copied().unwrap_or(false) {
+                continue;
+            }
             self.attach(s, pos as u32);
         }
     }
@@ -467,6 +485,14 @@ pub struct Cluster {
     /// at fleet construction ([`Fleet::set_topology`]), so prefix-purity
     /// of the resumable planning folds is untouched.
     topology: Topology,
+    /// Offline mask by scan position (host churn, ISSUE 9). An offline
+    /// server keeps its position — rack membership is positional and
+    /// must not shift under its neighbours — but is detached from the
+    /// free-capacity index with zeroed free counters, so fit walks,
+    /// totals, and admission budgets all exclude it.
+    offline: Vec<bool>,
+    /// Number of online servers (capacity totals are `spec × online`).
+    online: usize,
 }
 
 impl Cluster {
@@ -490,7 +516,16 @@ impl Cluster {
     /// placements keep addressing workers by their stable id across
     /// failures).
     pub fn with_server_ids(spec: ServerSpec, ids: &[usize]) -> Cluster {
-        let gen = GpuGen::default();
+        Cluster::with_server_ids_of(GpuGen::default(), spec, ids)
+    }
+
+    /// [`Cluster::with_server_ids`] for an explicit generation — the
+    /// deploy leader mirrors whatever generation its workers registered.
+    pub fn with_server_ids_of(
+        gen: GpuGen,
+        spec: ServerSpec,
+        ids: &[usize],
+    ) -> Cluster {
         Cluster::from_servers(
             gen,
             spec,
@@ -502,6 +537,7 @@ impl Cluster {
         let index = FreeIndex::build(&servers, spec.gpus);
         let id_bound =
             servers.iter().map(|s| s.id + 1).max().unwrap_or(0);
+        let n = servers.len();
         Cluster {
             gen,
             spec,
@@ -512,6 +548,8 @@ impl Cluster {
             journal: None,
             fit_walk: std::cell::Cell::new(0),
             topology: Topology::flat(),
+            offline: vec![false; n],
+            online: n,
         }
     }
 
@@ -552,20 +590,32 @@ impl Cluster {
         racks.len() as u32
     }
 
+    /// Server *positions* in this pool, offline ones included (rack
+    /// derivation is positional — see [`Fleet::set_topology`]).
     pub fn num_servers(&self) -> usize {
         self.servers.len()
     }
 
+    /// Servers currently online (capacity totals count only these).
+    pub fn online_servers(&self) -> usize {
+        self.online
+    }
+
+    /// Whether the server at scan position `pos` is offline.
+    pub fn is_offline(&self, pos: usize) -> bool {
+        self.offline[pos]
+    }
+
     pub fn total_gpus(&self) -> u32 {
-        self.spec.gpus * self.servers.len() as u32
+        self.spec.gpus * self.online as u32
     }
 
     pub fn total_cpus(&self) -> f64 {
-        self.spec.cpus as f64 * self.servers.len() as f64
+        self.spec.cpus as f64 * self.online as f64
     }
 
     pub fn total_mem_gb(&self) -> f64 {
-        self.spec.mem_gb * self.servers.len() as f64
+        self.spec.mem_gb * self.online as f64
     }
 
     /// Free GPUs across the pool — O(1) from the index's exact integer
@@ -712,10 +762,15 @@ impl Cluster {
     /// and float subtract-then-add round trips are not exact.
     pub fn evict_all(&mut self) {
         self.placements.clear();
-        for s in &mut self.servers {
+        for (pos, s) in self.servers.iter_mut().enumerate() {
+            // Offline servers stay zeroed — resurrecting a failed
+            // host's capacity on the round reset would un-fail it.
+            if self.offline[pos] {
+                continue;
+            }
             s.reset_free();
         }
-        self.index.reset(&self.servers);
+        self.index.reset(&self.servers, &self.offline);
         // A hard reset invalidates (and re-bases) the undo history: the
         // journal's mark 0 *is* this pristine state.
         if let Some(j) = &mut self.journal {
@@ -784,6 +839,109 @@ impl Cluster {
         self.id_bound
     }
 
+    /// The scan position a failure event takes next: the *highest*
+    /// online position (deterministic victim rule — newest capacity
+    /// fails first, and the paired restore rule below brings the same
+    /// position back on a lone fail/add cycle). `None` when the pool is
+    /// fully offline.
+    pub fn last_online_position(&self) -> Option<usize> {
+        (0..self.servers.len()).rev().find(|&p| !self.offline[p])
+    }
+
+    /// The scan position a restore event revives next: the *lowest*
+    /// offline position. `None` when nothing is offline (the add grows
+    /// the pool instead).
+    pub fn first_offline_position(&self) -> Option<usize> {
+        (0..self.servers.len()).find(|&p| self.offline[p])
+    }
+
+    /// Jobs whose placements touch the server at scan position `pos`,
+    /// in id order (the deterministic preemption order). Includes jobs
+    /// that already finished mid-round but whose leases have not
+    /// released yet — callers decide what counts as a preemption.
+    pub fn jobs_on_position(&self, pos: usize) -> Vec<JobId> {
+        let sid = self.servers[pos].id;
+        self.placements
+            .iter()
+            .filter(|(_, p)| p.shares.contains_key(&sid))
+            .map(|(&id, _)| id)
+            .collect()
+    }
+
+    /// Take the server at scan position `pos` offline (host failure):
+    /// every placement touching it is evicted (whole gangs — a
+    /// placement is indivisible), the server is detached from the
+    /// free-capacity index, and its free counters are zeroed so totals,
+    /// budgets, and fit walks exclude it. Returns the evicted job ids
+    /// in id order. Any resume checkpoints are invalid across a
+    /// membership change, so the journal is cleared (re-based) — the
+    /// planning driver must also drop its `PlanTrace`. Panics if the
+    /// position is already offline.
+    pub fn take_offline(&mut self, pos: usize) -> Vec<JobId> {
+        assert!(
+            !self.offline[pos],
+            "server at position {pos} is already offline"
+        );
+        let victims = self.jobs_on_position(pos);
+        for &id in &victims {
+            self.evict(id);
+        }
+        debug_assert_eq!(
+            self.servers[pos].free_gpus, self.spec.gpus,
+            "victim server still carries allocations after eviction"
+        );
+        self.index.detach(&self.servers[pos], pos as u32);
+        let s = &mut self.servers[pos];
+        s.free_gpus = 0;
+        s.free_cpus = 0.0;
+        s.free_mem_gb = 0.0;
+        self.offline[pos] = true;
+        self.online -= 1;
+        if let Some(j) = &mut self.journal {
+            j.ops.clear();
+        }
+        victims
+    }
+
+    /// Bring the offline server at scan position `pos` back online:
+    /// free counters reset from the spec (a returning host starts
+    /// empty) and the server re-attaches to the free-capacity index.
+    /// Clears (re-bases) the journal like [`Cluster::take_offline`].
+    /// Panics if the position is not offline.
+    pub fn bring_online(&mut self, pos: usize) {
+        assert!(
+            self.offline[pos],
+            "server at position {pos} is not offline"
+        );
+        self.servers[pos].reset_free();
+        self.index.attach(&self.servers[pos], pos as u32);
+        self.offline[pos] = false;
+        self.online += 1;
+        if let Some(j) = &mut self.journal {
+            j.ops.clear();
+        }
+    }
+
+    /// Grow the pool by one fresh server (id = the current id bound) at
+    /// the next scan position; returns the new id. The caller re-derives
+    /// the rack topology for the new pool size
+    /// ([`TopologySpec::for_servers`] via [`Fleet::set_topology`]).
+    /// Clears (re-bases) the journal like [`Cluster::take_offline`].
+    pub fn add_server(&mut self) -> usize {
+        let id = self.id_bound;
+        let s = Server::of(self.gen, id, self.spec);
+        let pos = self.servers.len();
+        self.index.attach(&s, pos as u32);
+        self.servers.push(s);
+        self.offline.push(false);
+        self.online += 1;
+        self.id_bound = id + 1;
+        if let Some(j) = &mut self.journal {
+            j.ops.clear();
+        }
+        id
+    }
+
     /// Servers with at least `min_gpus` free GPUs, in best-fit order:
     /// ascending `(free_score, scan position)`. The first server in this
     /// order that fits a demand is *exactly* the server the pre-index
@@ -817,14 +975,24 @@ impl Cluster {
         )
     }
 
-    /// GPU utilization in [0, 1].
+    /// GPU utilization in [0, 1]. A fully-offline pool reports 0.0
+    /// rather than dividing by zero capacity.
     pub fn gpu_utilization(&self) -> f64 {
-        1.0 - self.free_gpus() as f64 / self.total_gpus() as f64
+        let total = self.total_gpus();
+        if total == 0 {
+            return 0.0;
+        }
+        1.0 - self.free_gpus() as f64 / total as f64
     }
 
-    /// CPU allocation fraction in [0, 1].
+    /// CPU allocation fraction in [0, 1]. A fully-offline pool reports
+    /// 0.0 rather than dividing by zero capacity.
     pub fn cpu_utilization(&self) -> f64 {
-        1.0 - self.free_cpus() / self.total_cpus()
+        let total = self.total_cpus();
+        if total == 0.0 {
+            return 0.0;
+        }
+        1.0 - self.free_cpus() / total
     }
 
     /// Check the incrementally-maintained free-capacity index against a
@@ -845,7 +1013,8 @@ impl Cluster {
                 ));
             }
         }
-        let fresh = FreeIndex::build(&self.servers, self.spec.gpus);
+        let fresh =
+            FreeIndex::build_masked(&self.servers, self.spec.gpus, &self.offline);
         // The float gauge aggregates are outside FreeIndex equality
         // (incremental maintenance drifts by ulps); hold them to a
         // capacity-scaled tolerance instead.
@@ -900,8 +1069,33 @@ impl Cluster {
                 *e = e.add(share);
             }
         }
-        for server in &self.servers {
+        for (pos, server) in self.servers.iter().enumerate() {
             let u = used.get(&server.id).copied().unwrap_or_else(Share::zero);
+            if self.offline[pos] {
+                // An offline server must carry no placements and keep its
+                // free counters zeroed (it is invisible to fits/totals).
+                if u.gpus != 0 || u.cpus != 0.0 || u.mem_gb != 0.0 {
+                    return Err(format!(
+                        "offline server {}: still referenced by placements \
+                         ({} gpus)",
+                        server.id, u.gpus
+                    ));
+                }
+                if server.free_gpus != 0
+                    || server.free_cpus != 0.0
+                    || server.free_mem_gb != 0.0
+                {
+                    return Err(format!(
+                        "offline server {}: free counters not zeroed \
+                         (gpus={}, cpus={}, mem={})",
+                        server.id,
+                        server.free_gpus,
+                        server.free_cpus,
+                        server.free_mem_gb
+                    ));
+                }
+                continue;
+            }
             let exp_gpus = self.spec.gpus - u.gpus;
             if server.free_gpus != exp_gpus {
                 return Err(format!(
@@ -1308,5 +1502,97 @@ mod tests {
         assert_eq!(c.rack_of(0), 0);
         assert_eq!(c.rack_of(2), 0);
         assert_eq!(c.rack_of(5), 1);
+    }
+
+    #[test]
+    fn take_offline_evicts_victims_and_shrinks_totals() {
+        let mut c = Cluster::homogeneous(spec(), 3);
+        let share = Share { gpus: 4, cpus: 12.0, mem_gb: 250.0 };
+        c.place(JobId(1), Placement::single(0, share));
+        // Gang spanning the victim and a survivor: the whole gang goes.
+        let mut gang = Placement::default();
+        gang.shares.insert(1, share);
+        gang.shares.insert(2, share);
+        c.place(JobId(2), gang);
+        // Victim rule: highest online position (2) fails first.
+        assert_eq!(c.last_online_position(), Some(2));
+        let victims = c.take_offline(2);
+        assert_eq!(victims, vec![JobId(2)]);
+        assert!(c.is_offline(2));
+        assert_eq!(c.online_servers(), 2);
+        assert_eq!(c.num_servers(), 3, "positions are retained");
+        assert_eq!(c.total_gpus(), 16);
+        assert_eq!(c.total_cpus(), 48.0);
+        // Survivor's placement is intact; the gang freed its survivor half.
+        assert_eq!(c.free_gpus(), 12);
+        assert!(c.placements().contains_key(&JobId(1)));
+        assert!(c.check_consistency().is_ok());
+        // Offline server is invisible to fullness walks.
+        assert!(c.servers_by_fullness(1).all(|s| s.id != 2));
+    }
+
+    #[test]
+    fn bring_online_restores_exact_capacity() {
+        let mut c = Cluster::homogeneous(spec(), 2);
+        let share = Share { gpus: 3, cpus: 9.0, mem_gb: 100.0 };
+        c.place(JobId(1), Placement::single(1, share));
+        let victims = c.take_offline(1);
+        assert_eq!(victims, vec![JobId(1)]);
+        assert_eq!(c.first_offline_position(), Some(1));
+        c.bring_online(1);
+        assert_eq!(c.online_servers(), 2);
+        assert_eq!(c.total_gpus(), 16);
+        assert_eq!(c.free_gpus(), 16, "a returning host starts empty");
+        assert_eq!(c.first_offline_position(), None);
+        assert!(c.check_consistency().is_ok());
+        // Bit-pristine: counters identical to the round-reset state.
+        assert_eq!(c.servers[1].free_gpus, spec().gpus);
+        assert_eq!(
+            c.servers[1].free_cpus.to_bits(),
+            (spec().cpus as f64).to_bits()
+        );
+    }
+
+    #[test]
+    fn add_server_grows_pool_with_fresh_id() {
+        let mut c = Cluster::with_server_ids(spec(), &[0, 2, 5]);
+        let id = c.add_server();
+        assert_eq!(id, 6, "fresh id = old id bound");
+        assert_eq!(c.num_servers(), 4);
+        assert_eq!(c.online_servers(), 4);
+        assert_eq!(c.total_gpus(), 32);
+        assert_eq!(c.server_id_bound(), 7);
+        let share = Share { gpus: 1, cpus: 3.0, mem_gb: 10.0 };
+        c.place(JobId(9), Placement::single(6, share));
+        assert!(c.check_consistency().is_ok());
+    }
+
+    #[test]
+    fn evict_all_keeps_offline_servers_detached() {
+        let mut c = Cluster::homogeneous(spec(), 3);
+        c.enable_journal();
+        c.take_offline(0);
+        let share = Share { gpus: 2, cpus: 6.0, mem_gb: 100.0 };
+        c.place(JobId(1), Placement::single(1, share));
+        c.evict_all();
+        assert_eq!(c.free_gpus(), 16, "round reset excludes offline pos 0");
+        assert_eq!(c.servers[0].free_gpus, 0, "offline counters stay zeroed");
+        assert!(c.check_consistency().is_ok());
+        // Fully-offline pool: utilization is defined (0.0), not NaN.
+        c.take_offline(1);
+        c.take_offline(2);
+        assert_eq!(c.last_online_position(), None);
+        assert_eq!(c.total_gpus(), 0);
+        assert_eq!(c.gpu_utilization(), 0.0);
+        assert_eq!(c.cpu_utilization(), 0.0);
+        assert!(c.check_consistency().is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "already offline")]
+    fn double_take_offline_panics() {
+        let mut c = Cluster::homogeneous(spec(), 2);
+        c.take_offline(1);
+        c.take_offline(1);
     }
 }

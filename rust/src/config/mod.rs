@@ -59,6 +59,11 @@ pub struct ExperimentConfig {
     /// "placement_aware": b}`). The default flat spec reproduces
     /// pre-topology schedules byte-identically.
     pub topology: TopologySpec,
+    /// Deterministic host churn (`faults` JSON key): the raw spec
+    /// string — `mtbf:<hours>,mttr:<hours>[,seed:S]` or a path to a
+    /// scripted-schedule JSON file (the `--faults` CLI forms). `None`
+    /// (default; key omitted from `to_json`) = no churn.
+    pub faults: Option<String>,
 }
 
 /// One machine type of a config-described mixed fleet.
@@ -85,6 +90,7 @@ impl Default for ExperimentConfig {
             tenants: None,
             hetero: Vec::new(),
             topology: TopologySpec::default(),
+            faults: None,
         }
     }
 }
@@ -126,6 +132,12 @@ impl ExperimentConfig {
         }
         if self.shards == 0 {
             return Err("shards must be positive".into());
+        }
+        if let Some(s) = &self.faults {
+            // Parses the spec (and reads the script file, for the path
+            // form) so a bad schedule fails at config load, not mid-run.
+            crate::sim::FaultSpec::parse(s)
+                .map_err(|e| format!("faults: {e}"))?;
         }
         self.topology.validate().map_err(|e| format!("topology: {e}"))?;
         for (i, t) in self.hetero.iter().enumerate() {
@@ -231,6 +243,9 @@ impl ExperimentConfig {
         if let Some(n) = doc.get("shards").as_usize() {
             cfg.shards = n;
         }
+        if let Some(s) = doc.get("faults").as_str() {
+            cfg.faults = Some(s.to_string());
+        }
         if let Some(s) = doc.get("tenants").as_str() {
             cfg.tenants =
                 Some(TenantSpec::parse(s).map_err(|e| format!("tenants: {e}"))?);
@@ -316,6 +331,9 @@ impl ExperimentConfig {
         }
         if self.shards != 1 {
             pairs.push(("shards", Json::num(self.shards as f64)));
+        }
+        if let Some(s) = &self.faults {
+            pairs.push(("faults", Json::str(s.clone())));
         }
         if let Some(spec) = &self.tenants {
             pairs.push(("tenants", Json::str(spec.canonical())));
@@ -518,6 +536,28 @@ mod tests {
         assert!(!plain.contains("shards"), "{plain}");
         // shards = 0 is rejected up front.
         let doc = Json::parse(r#"{"shards": 0}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn faults_key_roundtrips_and_validates() {
+        let doc =
+            Json::parse(r#"{"faults": "mtbf:24,mttr:2,seed:7"}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&doc).unwrap();
+        assert_eq!(cfg.faults.as_deref(), Some("mtbf:24,mttr:2,seed:7"));
+        let encoded = cfg.to_json().encode();
+        let back =
+            ExperimentConfig::from_json(&Json::parse(&encoded).unwrap())
+                .unwrap();
+        assert_eq!(back, cfg);
+        // Default omits the key — existing config files stay byte-stable.
+        let plain = ExperimentConfig::default().to_json().encode();
+        assert!(!plain.contains("faults"), "{plain}");
+        // A malformed spec fails at config load.
+        let doc = Json::parse(r#"{"faults": "mtbf:0,mttr:1"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&doc).is_err());
+        // The script-path form must name a readable file.
+        let doc = Json::parse(r#"{"faults": "/no/such/file.json"}"#).unwrap();
         assert!(ExperimentConfig::from_json(&doc).is_err());
     }
 

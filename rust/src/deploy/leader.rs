@@ -8,7 +8,7 @@
 //! same trace).
 
 use super::proto::{Conn, Message};
-use crate::cluster::{Fleet, ServerSpec};
+use crate::cluster::{Fleet, GpuGen, ServerSpec, TypeSpec};
 use crate::coordinator::RoundPlanner;
 use crate::job::{Job, JobId, JobState, TenantId};
 use crate::mechanism::by_name as mechanism_by_name;
@@ -169,12 +169,16 @@ impl Leader {
         // --- accept workers -------------------------------------------
         let mut conns: Vec<Conn> = Vec::new();
         let mut spec: Option<ServerSpec> = None;
+        let mut fleet_gen: Option<GpuGen> = None;
         for server_id in 0..self.cfg.n_workers {
             let (stream, _) = listener.accept()?;
             let mut conn = Conn::new(stream)?;
             match conn.recv()? {
-                Some(Message::Register { gpus, cpus, mem_gb }) => {
+                Some(Message::Register { gpus, cpus, mem_gb, gen }) => {
                     let s = ServerSpec { gpus, cpus, mem_gb };
+                    let g = GpuGen::by_name(&gen).ok_or_else(|| {
+                        anyhow!("worker registered unknown gen {gen:?}")
+                    })?;
                     if let Some(prev) = spec {
                         if prev != s {
                             return Err(anyhow!(
@@ -182,7 +186,17 @@ impl Leader {
                             ));
                         }
                     }
+                    // Workers report their generation; the mirror fleet
+                    // is still one-type, so a mixed registration is
+                    // rejected up front rather than silently mis-modeled.
+                    if fleet_gen.is_some_and(|prev| prev != g) {
+                        return Err(anyhow!(
+                            "mixed-generation workers unsupported: \
+                             {gen:?} after {fleet_gen:?}"
+                        ));
+                    }
                     spec = Some(s);
+                    fleet_gen = Some(g);
                     conn.send(&Message::RegisterAck { server_id })?;
                 }
                 other => return Err(anyhow!("expected register, got {other:?}")),
@@ -190,6 +204,7 @@ impl Leader {
             conns.push(conn);
         }
         let spec = spec.ok_or_else(|| anyhow!("no workers"))?;
+        let gen = fleet_gen.ok_or_else(|| anyhow!("no workers"))?;
 
         // Reader threads funnel worker messages into one channel; `None`
         // signals the worker's connection is gone (crash/EOF) so the
@@ -230,12 +245,17 @@ impl Leader {
         // --- scheduling state ------------------------------------------
         // Full-capacity mirror (admission + proportional shares); each
         // round replans over only the workers still alive. Workers are a
-        // one-type V100 fleet (heterogeneous workers register identical
-        // specs today; the planner itself is fleet-generic).
-        let fleet = Fleet::homogeneous(spec, self.cfg.n_workers);
+        // one-type fleet of whatever generation they registered
+        // (heterogeneous workers register identical specs today; the
+        // planner itself is fleet-generic).
+        let fleet = Fleet::new(&[TypeSpec {
+            gen,
+            spec,
+            machines: self.cfg.n_workers,
+        }]);
         let mut alive = vec![true; self.cfg.n_workers];
-        let world = PerfModel::new(spec);
-        let profiler = OptimisticProfiler::noiseless(spec);
+        let world = PerfModel::with_gen(spec, gen);
+        let profiler = OptimisticProfiler::noiseless_fleet(&fleet);
         let planner = RoundPlanner::with_quotas(
             policy_by_name(&self.cfg.policy)
                 .ok_or_else(|| anyhow!("bad policy"))?,
@@ -338,7 +358,8 @@ impl Leader {
             if alive_ids.is_empty() {
                 return Err(anyhow!("all workers died"));
             }
-            let mut round_fleet = Fleet::with_server_ids(spec, &alive_ids);
+            let mut round_fleet =
+                Fleet::with_server_ids_of(gen, spec, &alive_ids);
             let refs: Vec<(&Job, &Sensitivity)> =
                 active.values().map(|j| (j, &contexts[&j.id])).collect();
             let planned_jobs = refs.len();
@@ -502,6 +523,12 @@ impl Leader {
                         .sum(),
                     gangs_placed,
                     cross_rack_gangs,
+                    // The live leader replans over survivors instead of
+                    // modelling churn events; the counters exist so the
+                    // row layout matches the simulator's.
+                    preemptions: 0,
+                    servers_failed: 0,
+                    servers_restored: 0,
                     wall_ms: start.elapsed().as_millis() as i64,
                     pools,
                     tenants: tenants.values().copied().collect(),

@@ -10,8 +10,10 @@ use std::net::TcpStream;
 /// Control-plane messages between leader and workers.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Message {
-    /// worker -> leader: join the cluster with this capacity.
-    Register { gpus: u32, cpus: u32, mem_gb: f64 },
+    /// worker -> leader: join the cluster with this capacity. `gen` is
+    /// the GPU generation name (mixed-generation fleets); senders that
+    /// predate the field are decoded as `"v100"`.
+    Register { gpus: u32, cpus: u32, mem_gb: f64, gen: String },
     /// leader -> worker: accepted; assigned server id.
     RegisterAck { server_id: usize },
     /// leader -> worker: start (or renew) a job lease for one round.
@@ -44,11 +46,12 @@ pub enum Message {
 impl Message {
     pub fn encode(&self) -> String {
         let j = match self {
-            Message::Register { gpus, cpus, mem_gb } => Json::obj(vec![
+            Message::Register { gpus, cpus, mem_gb, gen } => Json::obj(vec![
                 ("type", Json::str("register")),
                 ("gpus", Json::num(*gpus as f64)),
                 ("cpus", Json::num(*cpus as f64)),
                 ("mem_gb", Json::num(*mem_gb)),
+                ("gen", Json::str(gen.clone())),
             ]),
             Message::RegisterAck { server_id } => Json::obj(vec![
                 ("type", Json::str("register_ack")),
@@ -118,6 +121,10 @@ impl Message {
                 gpus: num("gpus")? as u32,
                 cpus: num("cpus")? as u32,
                 mem_gb: num("mem_gb")?,
+                // Pre-`gen` senders omit the field; default to the
+                // homogeneous fleet's generation so old workers still
+                // register.
+                gen: st("gen").unwrap_or_else(|_| "v100".into()),
             },
             "register_ack" => {
                 Message::RegisterAck { server_id: num("server_id")? as usize }
@@ -206,7 +213,12 @@ mod tests {
     #[test]
     fn all_messages_roundtrip() {
         let msgs = vec![
-            Message::Register { gpus: 8, cpus: 24, mem_gb: 500.0 },
+            Message::Register {
+                gpus: 8,
+                cpus: 24,
+                mem_gb: 500.0,
+                gen: "p100".into(),
+            },
             Message::RegisterAck { server_id: 3 },
             Message::Lease {
                 job_id: 7,
@@ -234,6 +246,23 @@ mod tests {
             let enc = m.encode();
             assert_eq!(Message::decode(&enc).unwrap(), m, "{enc}");
         }
+    }
+
+    #[test]
+    fn register_without_gen_defaults_to_v100() {
+        // A frame from a sender that predates the `gen` field must still
+        // parse — mixed-generation registration is backwards compatible.
+        let old =
+            r#"{"type": "register", "gpus": 4, "cpus": 12, "mem_gb": 250}"#;
+        assert_eq!(
+            Message::decode(old).unwrap(),
+            Message::Register {
+                gpus: 4,
+                cpus: 12,
+                mem_gb: 250.0,
+                gen: "v100".into(),
+            }
+        );
     }
 
     #[test]

@@ -28,6 +28,9 @@ pub struct WorkerConfig {
     pub gpus: u32,
     pub cpus: u32,
     pub mem_gb: f64,
+    /// GPU generation name reported at registration (mixed-generation
+    /// fleets; `--gen p100` etc.).
+    pub gen: String,
     /// If false, skip PJRT execution (progress-only worker, for protocol
     /// tests on machines without artifacts).
     pub real_compute: bool,
@@ -44,6 +47,7 @@ impl Default for WorkerConfig {
             gpus: 8,
             cpus: 24,
             mem_gb: 500.0,
+            gen: "v100".into(),
             real_compute: true,
             fail_after_s: None,
         }
@@ -70,12 +74,13 @@ pub struct Worker;
 impl Worker {
     /// Connect to the leader and serve until Shutdown. Blocks.
     pub fn run(cfg: WorkerConfig) -> Result<usize> {
-        let stream = TcpStream::connect(&cfg.leader_addr)?;
+        let stream = connect_with_backoff(&cfg.leader_addr)?;
         let mut conn = Conn::new(stream.try_clone()?)?;
         conn.send(&Message::Register {
             gpus: cfg.gpus,
             cpus: cfg.cpus,
             mem_gb: cfg.mem_gb,
+            gen: cfg.gen.clone(),
         })?;
         let server_id = match conn.recv()? {
             Some(Message::RegisterAck { server_id }) => server_id,
@@ -210,6 +215,55 @@ impl Worker {
     }
 }
 
+/// Connect to the leader with deterministic capped exponential backoff:
+/// one immediate attempt plus three retries after fixed, jitter-free
+/// 100/200/400 ms delays, each attempt bounded by a connect timeout.
+/// A worker started moments before its leader binds still joins, and the
+/// schedule stays reproducible (no randomized jitter).
+fn connect_with_backoff(addr: &str) -> Result<TcpStream> {
+    use std::net::ToSocketAddrs;
+    const RETRY_DELAYS_MS: [u64; 3] = [100, 200, 400];
+    const CONNECT_TIMEOUT: Duration = Duration::from_secs(2);
+    let mut attempt = 0usize;
+    loop {
+        let res = addr
+            .to_socket_addrs()
+            .map_err(anyhow::Error::from)
+            .and_then(|mut addrs| {
+                addrs
+                    .next()
+                    .ok_or_else(|| anyhow!("{addr}: no socket address"))
+            })
+            .and_then(|sa| {
+                TcpStream::connect_timeout(&sa, CONNECT_TIMEOUT)
+                    .map_err(anyhow::Error::from)
+            });
+        match res {
+            Ok(stream) => return Ok(stream),
+            Err(e) if attempt < RETRY_DELAYS_MS.len() => {
+                if std::env::var_os("SYNERGY_DEPLOY_DEBUG").is_some() {
+                    eprintln!(
+                        "[worker] connect attempt {} to {addr} failed \
+                         ({e}); retrying in {} ms",
+                        attempt + 1,
+                        RETRY_DELAYS_MS[attempt]
+                    );
+                }
+                std::thread::sleep(Duration::from_millis(
+                    RETRY_DELAYS_MS[attempt],
+                ));
+                attempt += 1;
+            }
+            Err(e) => {
+                return Err(anyhow!(
+                    "connect to {addr} failed after {} attempts: {e}",
+                    RETRY_DELAYS_MS.len() + 1
+                ))
+            }
+        }
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn spawn_runner(
     job_id: u64,
@@ -330,4 +384,51 @@ fn spawn_runner(
         }
         send(&Message::Progress { job_id, samples_done, loss, steps });
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    #[test]
+    fn connect_retries_until_briefly_late_leader_binds() {
+        // Reserve a port, then release it so the first connect attempt
+        // is refused; a leader binding it 250 ms later lands inside the
+        // 100+200 ms retry window, so the backoff connect must succeed
+        // on a retry instead of erroring out like the old one-shot did.
+        let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = probe.local_addr().unwrap();
+        drop(probe);
+        let leader = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(250));
+            let listener = TcpListener::bind(addr).unwrap();
+            let _ = listener.accept();
+        });
+        let started = Instant::now();
+        let stream = connect_with_backoff(&addr.to_string())
+            .expect("backoff connect must reach the late leader");
+        assert!(
+            started.elapsed() >= Duration::from_millis(100),
+            "success before the first retry delay means the leader was \
+             never late"
+        );
+        drop(stream);
+        leader.join().unwrap();
+    }
+
+    #[test]
+    fn connect_gives_up_after_the_full_deterministic_schedule() {
+        let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = probe.local_addr().unwrap();
+        drop(probe);
+        let started = Instant::now();
+        let err = connect_with_backoff(&addr.to_string());
+        assert!(err.is_err(), "no listener ever binds: connect must fail");
+        // Fixed schedule: 100 + 200 + 400 ms of inter-attempt sleeps.
+        assert!(
+            started.elapsed() >= Duration::from_millis(700),
+            "must exhaust the whole 100/200/400 ms backoff schedule"
+        );
+    }
 }

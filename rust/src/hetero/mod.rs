@@ -34,7 +34,7 @@ pub use crate::sim::FleetModel as HeteroModel;
 use crate::cluster::{ServerSpec, TopologySpec};
 use crate::job::{Job, JobId, TenantId};
 use crate::metrics::{per_tenant_stats, JctStats, UtilizationLog};
-use crate::sim::{FinishedJob, SimConfig, SimResult, Simulator};
+use crate::sim::{FaultSpec, FinishedJob, SimConfig, SimResult, Simulator};
 use crate::workload::TenantQuotas;
 use std::collections::BTreeMap;
 
@@ -50,6 +50,9 @@ pub struct HeteroSimConfig {
     /// Rack topology, concretized per pool (`--topology racks:R`); the
     /// default flat spec is the pre-topology behaviour.
     pub topology: TopologySpec,
+    /// Deterministic host-churn schedule (`--faults ...`); `None` (the
+    /// default) is byte-identical to pre-fault builds.
+    pub faults: Option<FaultSpec>,
 }
 
 impl Default for HeteroSimConfig {
@@ -66,6 +69,7 @@ impl Default for HeteroSimConfig {
             profile_noise: 0.0,
             max_sim_s: 400.0 * 24.0 * 3600.0,
             topology: TopologySpec::default(),
+            faults: None,
         }
     }
 }
@@ -91,6 +95,15 @@ pub struct HeteroSimResult {
     /// prefixes.
     pub plan_steps_reused: usize,
     pub profiling_minutes: f64,
+    /// Gang placements preempted back into the queue by host failures
+    /// (shared-core fault accounting; 0 without `--faults`).
+    pub preemptions: u64,
+    /// GPU-rounds of partial work lost to preemption.
+    pub preempted_gpu_rounds_lost: u64,
+    /// `ServerFailed` events applied.
+    pub servers_failed: u64,
+    /// `ServerAdded` events applied (restore or grow).
+    pub servers_restored: u64,
     /// Full per-job records (tenant-tagged), from the shared core.
     pub finished: Vec<FinishedJob>,
     /// Per-round utilization samples (shared-core accounting).
@@ -108,6 +121,10 @@ impl HeteroSimResult {
             plan_steps_total: r.plan_steps_total,
             plan_steps_reused: r.plan_steps_reused,
             profiling_minutes: r.profiling_minutes,
+            preemptions: r.preemptions,
+            preempted_gpu_rounds_lost: r.preempted_gpu_rounds_lost,
+            servers_failed: r.servers_failed,
+            servers_restored: r.servers_restored,
             finished: r.finished,
             utilization: r.utilization,
         }
@@ -136,18 +153,32 @@ impl HeteroSimResult {
         }
     }
 
+    /// Churn/preemption summary — same accounting as
+    /// [`SimResult::fault_summary`].
+    pub fn fault_summary(&self) -> crate::metrics::FaultSummary {
+        crate::metrics::FaultSummary {
+            preemptions: self.preemptions,
+            preempted_gpu_rounds_lost: self.preempted_gpu_rounds_lost,
+            servers_failed: self.servers_failed,
+            servers_restored: self.servers_restored,
+        }
+    }
+
     /// The canonical metrics document — byte-compatible with
     /// [`SimResult::metrics_json`], so `synergy hetero --json` and
     /// `synergy sim --json` emit the same payload shape. `plan_stats`
-    /// (default off) appends the round-planning split.
-    pub fn metrics_json(&self, plan_stats: bool) -> String {
+    /// (default off) appends the round-planning split; `fault_stats`
+    /// (default off) appends the churn/preemption counters.
+    pub fn metrics_json(&self, plan_stats: bool, fault_stats: bool) -> String {
         let summary = self.plan_summary();
+        let faults = self.fault_summary();
         crate::metrics::metrics_json(
             &self.jct_stats(),
             &self.tenant_stats(),
             self.makespan_s,
             self.rounds,
             plan_stats.then_some(&summary),
+            fault_stats.then_some(&faults),
         )
     }
 }
@@ -188,6 +219,7 @@ impl HeteroSimulator {
                 profile_noise: self.cfg.profile_noise,
                 max_sim_s: self.cfg.max_sim_s,
                 topology: self.cfg.topology,
+                faults: self.cfg.faults.clone(),
                 ..SimConfig::default()
             },
             self.quotas.clone(),

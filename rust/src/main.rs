@@ -12,6 +12,9 @@
 //!                   [--telemetry run.jsonl|run.csv] [--telemetry-timing]
 //!                   # per-round/per-pool/per-tenant series + plan trace;
 //!                   # counters only unless --telemetry-timing
+//!                   [--faults mtbf:24,mttr:2,seed:7 | --faults faults.json]
+//!                   # deterministic host churn (fail/restore events);
+//!                   # absent = byte-identical to pre-fault builds
 //! synergy sim       --trace trace.csv --format philly|alibaba|google \
 //!                   [--load-scale 2 --duration-min 60 --duration-max 1e5]
 //!                   [--gpu-cap 16 --max-jobs 500 --keep-failed]
@@ -41,7 +44,7 @@ use synergy::job::{Job, JobId, ModelKind, ALL_MODELS};
 use synergy::metrics::jains_index;
 use synergy::perf::PerfModel;
 use synergy::profiler::OptimisticProfiler;
-use synergy::sim::{SimConfig, Simulator};
+use synergy::sim::{FaultSpec, SimConfig, Simulator};
 use synergy::telemetry::{TelemetryConfig, TelemetryRecorder};
 use synergy::trace::{generate, Split, TraceConfig};
 use synergy::util::cli::Args;
@@ -106,6 +109,15 @@ fn topology_from_args(args: &Args) -> TopologySpec {
             .unwrap_or_else(|e| panic!("--topology: {e}")),
         None => TopologySpec::default(),
     }
+}
+
+/// `--faults mtbf:<h>,mttr:<h>[,seed:S]` or `--faults <file.json>`
+/// (shared by `sim`, `sweep`, `compare`, `hetero`, and config files);
+/// absent = no churn, the byte-identical pre-fault behaviour.
+fn faults_from_args(args: &Args) -> Option<FaultSpec> {
+    args.get("faults").map(|s| {
+        FaultSpec::parse(s).unwrap_or_else(|e| panic!("--faults: {e}"))
+    })
 }
 
 fn tenant_spec_from_args(args: &Args) -> Option<TenantSpec> {
@@ -281,6 +293,7 @@ fn sim_config(args: &Args, mechanism: &str, policy: &str) -> SimConfig {
         no_resume: args.flag("no-resume"),
         topology: topology_from_args(args),
         shards: args.usize("shards", 1).max(1),
+        faults: faults_from_args(args),
     }
 }
 
@@ -311,9 +324,16 @@ fn cmd_simulate(args: &Args) {
         );
     }
     if args.flag("json") {
-        // Canonical metrics document; plan stats are opt-in so the
-        // default payload matches the golden scenario shape exactly.
-        println!("{}", result.metrics_json(args.flag("plan-stats")));
+        // Canonical metrics document; plan stats are opt-in and fault
+        // stats appear exactly when --faults is given, so the default
+        // payload matches the golden scenario shape exactly.
+        println!(
+            "{}",
+            result.metrics_json(
+                args.flag("plan-stats"),
+                args.get("faults").is_some(),
+            )
+        );
         return;
     }
     let stats = result.jct_stats();
@@ -373,6 +393,7 @@ fn cmd_sweep(args: &Args) {
         .collect();
     let workload = workload_from_args(args);
     let plan_stats = args.flag("plan-stats");
+    let fault_stats = args.get("faults").is_some();
     // Per-cell telemetry profiles: each cell records independently, so
     // the files — like the report — are byte-identical for any thread
     // count (counters only; --telemetry-timing adds wall-clock, which
@@ -425,7 +446,7 @@ fn cmd_sweep(args: &Args) {
                     recorder.as_mut(),
                 );
                 *results[i].lock().unwrap() = Some((
-                    r.metrics_json(plan_stats),
+                    r.metrics_json(plan_stats, fault_stats),
                     recorder.map(|rec| rec.to_jsonl()),
                 ));
             });
@@ -623,6 +644,7 @@ fn cmd_hetero(args: &Args) {
             profile_noise: args.f64("noise", 0.0),
             max_sim_s: args.f64("max-sim-days", 400.0) * 86_400.0,
             topology: topology_from_args(args),
+            faults: faults_from_args(args),
         },
         workload.quotas.clone(),
     );
@@ -630,8 +652,15 @@ fn cmd_hetero(args: &Args) {
     let r = sim.run(workload.jobs);
     if args.flag("json") {
         // Same canonical payload as `synergy sim --json` (plan stats
-        // opt-in via --plan-stats, exactly like the homogeneous path).
-        println!("{}", r.metrics_json(args.flag("plan-stats")));
+        // opt-in via --plan-stats, fault stats on exactly when --faults
+        // is given — exactly like the homogeneous path).
+        println!(
+            "{}",
+            r.metrics_json(
+                args.flag("plan-stats"),
+                args.get("faults").is_some(),
+            )
+        );
         return;
     }
     let s = r.jct_stats();
@@ -739,6 +768,7 @@ fn cmd_worker(args: &Args) {
         gpus: args.usize("gpus", 8) as u32,
         cpus: args.usize("cpus", 24) as u32,
         mem_gb: args.f64("mem", 500.0),
+        gen: args.get_or("gen", "v100").into(),
         real_compute: !args.flag("no-compute"),
         fail_after_s: {
             let t = args.f64("fail-after", 0.0);
@@ -780,6 +810,9 @@ fn cmd_config(args: &Args) {
             no_resume: false,
             topology: cfg.topology,
             shards: cfg.shards,
+            faults: cfg.faults.as_deref().map(|f| {
+                FaultSpec::parse(f).expect("validated at config load")
+            }),
         },
         quotas.clone(),
     );

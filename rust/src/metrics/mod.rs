@@ -130,11 +130,25 @@ pub struct PlanSummary {
     pub total_steps: usize,
 }
 
+/// Fault-injection accounting (host churn under `--faults`), for the
+/// optional fault-stats section of [`metrics_json`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FaultSummary {
+    /// Running jobs preempted back into the queue by host failures.
+    pub preemptions: u64,
+    /// Lost partial-round work, in GPU·rounds: each preemption charges
+    /// the victim's GPU count (the round's progress was not yet
+    /// credited).
+    pub preempted_gpu_rounds_lost: u64,
+    pub servers_failed: u64,
+    pub servers_restored: u64,
+}
+
 /// The canonical metrics document: JCT summary + Jain fairness over the
 /// per-tenant average JCTs (+ the per-tenant table). This is the exact
 /// payload the golden scenario matrix pins (`tests/scenarios.rs`), so
-/// its default shape must stay byte-stable; `plan` (default `None`
-/// everywhere golden-relevant) appends the round-planning split as
+/// its default shape must stay byte-stable; `plan` and `faults` (both
+/// default `None` everywhere golden-relevant) append their sections as
 /// *additional* keys without touching the existing ones. Values are
 /// rounded to 1 ms so goldens survive libm ulp differences across hosts
 /// while still pinning the schedule.
@@ -144,6 +158,7 @@ pub fn metrics_json(
     makespan_s: f64,
     rounds: usize,
     plan: Option<&PlanSummary>,
+    faults: Option<&FaultSummary>,
 ) -> String {
     use crate::util::json::Json;
     let r3 = |x: f64| (x * 1000.0).round() / 1000.0;
@@ -174,6 +189,15 @@ pub fn metrics_json(
         fields.push(("resumed_rounds", Json::num(p.resumed_rounds as f64)));
         fields.push(("reused_steps", Json::num(p.reused_steps as f64)));
         fields.push(("total_steps", Json::num(p.total_steps as f64)));
+    }
+    if let Some(f) = faults {
+        fields.push(("preemptions", Json::num(f.preemptions as f64)));
+        fields.push((
+            "preempted_gpu_rounds_lost",
+            Json::num(f.preempted_gpu_rounds_lost as f64),
+        ));
+        fields.push(("servers_failed", Json::num(f.servers_failed as f64)));
+        fields.push(("servers_restored", Json::num(f.servers_restored as f64)));
     }
     Json::obj(fields).encode()
 }

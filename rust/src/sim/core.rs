@@ -26,8 +26,13 @@
 //!
 //! ## Events
 //!
-//! The queue carries two event kinds:
+//! The queue carries four event kinds:
 //!
+//! - [`SimEvent::ServerFailed`] / [`SimEvent::ServerAdded`] — host churn
+//!   from a deterministic [`crate::sim::faults::FaultSpec`] timeline:
+//!   one server leaves (running gangs preempted and requeued, work
+//!   preserved) or rejoins/grows the fleet. Ordered *before* arrivals
+//!   at equal times so replay is exact.
 //! - [`SimEvent::Arrival`] — a job arrives (profiled on arrival, §3.1).
 //! - [`SimEvent::LeaseExpiry`] — the current round's resource leases end
 //!   (round-based scheduling, §3.2). Lease events are lazily invalidated
@@ -86,6 +91,7 @@
 use crate::job::{Job, JobArena, JobId, JobState, TenantId};
 use crate::metrics::{per_tenant_stats, JctStats, UtilSample, UtilizationLog};
 use crate::policy::{PolicyJobView, SchedulingPolicy};
+use crate::sim::faults::{FaultEntry, FaultKind};
 use crate::telemetry::{
     milli, PlanEvent, PlanTier, PoolCounters, RoundSample,
     TelemetryRecorder, TenantCounters,
@@ -223,6 +229,29 @@ pub trait ClusterModel {
         rates: &mut RoundRates,
     ) -> PlanStats;
 
+    /// Apply one churn event to type pool `pool`: on
+    /// [`FaultKind::Fail`], take one server (deterministic
+    /// scan-position rule) offline, evict every placement touching it,
+    /// and append the arena indices of the preempted jobs to
+    /// `preempted`; on [`FaultKind::Add`], restore an offline server or
+    /// grow the pool by a fresh one. Returns whether a server actually
+    /// changed state (a `Fail` against an all-offline pool is a no-op).
+    /// The caller owns all replan/metrics bookkeeping — an applied
+    /// fault must force a replan (the fleet epoch) because committed
+    /// placements and plan checkpoints are unsound across a membership
+    /// change. The default ignores faults (models without churn
+    /// support).
+    fn apply_fault(
+        &mut self,
+        kind: FaultKind,
+        pool: usize,
+        arena: &JobArena,
+        preempted: &mut Vec<u32>,
+    ) -> bool {
+        let _ = (kind, pool, arena, preempted);
+        false
+    }
+
     /// One utilization sample of the deployed round.
     fn utilization(&self, now: f64, arena: &JobArena) -> UtilSample;
 
@@ -238,6 +267,12 @@ pub trait ClusterModel {
 /// An event in the simulation queue.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum SimEvent {
+    /// Churn: one server in the fault timeline's entry `seq` fails at
+    /// `at` (entry into the run's materialized
+    /// [`crate::sim::faults::FaultEntry`] slice).
+    ServerFailed { at: f64, seq: usize },
+    /// Churn: one server is restored/added per timeline entry `seq`.
+    ServerAdded { at: f64, seq: usize },
     /// Job `idx` (index into the arrival-sorted trace) arrives at `at`.
     Arrival { at: f64, idx: usize },
     /// Round `round`'s resource leases expire at `at`. Stale when the
@@ -248,16 +283,25 @@ pub enum SimEvent {
 impl SimEvent {
     fn at(&self) -> f64 {
         match *self {
-            SimEvent::Arrival { at, .. } | SimEvent::LeaseExpiry { at, .. } => at,
+            SimEvent::ServerFailed { at, .. }
+            | SimEvent::ServerAdded { at, .. }
+            | SimEvent::Arrival { at, .. }
+            | SimEvent::LeaseExpiry { at, .. } => at,
         }
     }
 
-    /// (time, kind, seq): arrivals before lease expiries at equal times,
-    /// then FIFO by index — a deterministic total order.
+    /// (time, kind, seq): failures before additions before arrivals
+    /// before lease expiries at equal times, then FIFO by index within
+    /// a kind — a deterministic total order, so faulted replay is
+    /// exact. The relative order of arrivals and lease expiries is
+    /// unchanged from the pre-fault core, which keeps fault-free runs
+    /// byte-identical.
     fn order_key(&self) -> (f64, u8, usize) {
         match *self {
-            SimEvent::Arrival { at, idx } => (at, 0, idx),
-            SimEvent::LeaseExpiry { at, round } => (at, 1, round),
+            SimEvent::ServerFailed { at, seq } => (at, 0, seq),
+            SimEvent::ServerAdded { at, seq } => (at, 1, seq),
+            SimEvent::Arrival { at, idx } => (at, 2, idx),
+            SimEvent::LeaseExpiry { at, round } => (at, 3, round),
         }
     }
 }
@@ -301,16 +345,23 @@ struct EventQueue {
     /// Queued (not yet popped) arrivals — the live-event lower bound the
     /// compaction threshold is measured against.
     arrivals: usize,
+    /// Queued (not yet popped) churn events — like arrivals, live until
+    /// popped, so compaction must keep them and count them live.
+    churn: usize,
 }
 
 impl EventQueue {
     fn new() -> EventQueue {
-        EventQueue { heap: BinaryHeap::new(), arrivals: 0 }
+        EventQueue { heap: BinaryHeap::new(), arrivals: 0, churn: 0 }
     }
 
     fn push(&mut self, e: SimEvent) {
-        if matches!(e, SimEvent::Arrival { .. }) {
-            self.arrivals += 1;
+        match e {
+            SimEvent::Arrival { .. } => self.arrivals += 1,
+            SimEvent::ServerFailed { .. } | SimEvent::ServerAdded { .. } => {
+                self.churn += 1
+            }
+            SimEvent::LeaseExpiry { .. } => {}
         }
         self.heap.push(HeapEntry(e));
     }
@@ -331,16 +382,19 @@ impl EventQueue {
         ) {
             self.heap.pop();
         }
-        // Live events: every queued arrival plus at most one current
-        // lease expiry. Rebuilding preserves pop order exactly — it is a
-        // pure function of `order_key`'s total order, so dropping
-        // never-poppable stale entries is schedule-invisible.
-        let live = self.arrivals + 1;
+        // Live events: every queued arrival and churn event plus at
+        // most one current lease expiry. Rebuilding preserves pop order
+        // exactly — it is a pure function of `order_key`'s total order,
+        // so dropping never-poppable stale entries is
+        // schedule-invisible.
+        let live = self.arrivals + self.churn + 1;
         if self.heap.len() > 2 * live {
             self.heap = std::mem::take(&mut self.heap)
                 .into_iter()
                 .filter(|HeapEntry(e)| match e {
-                    SimEvent::Arrival { .. } => true,
+                    SimEvent::Arrival { .. }
+                    | SimEvent::ServerFailed { .. }
+                    | SimEvent::ServerAdded { .. } => true,
                     SimEvent::LeaseExpiry { round: r, .. } => *r == round,
                 })
                 .collect();
@@ -362,22 +416,51 @@ impl EventQueue {
         None
     }
 
+    /// Pop the next churn event due at or before `deadline`, if it is
+    /// the earliest live event. Returns the fault-timeline entry index
+    /// and kind; failures pop before additions at equal times
+    /// (`order_key`).
+    fn pop_churn_due(
+        &mut self,
+        deadline: f64,
+        round: usize,
+    ) -> Option<(usize, FaultKind)> {
+        self.drop_stale(round);
+        let (seq, kind) = match self.heap.peek() {
+            Some(HeapEntry(SimEvent::ServerFailed { at, seq }))
+                if *at <= deadline =>
+            {
+                (*seq, FaultKind::Fail)
+            }
+            Some(HeapEntry(SimEvent::ServerAdded { at, seq }))
+                if *at <= deadline =>
+            {
+                (*seq, FaultKind::Add)
+            }
+            _ => return None,
+        };
+        self.heap.pop();
+        self.churn -= 1;
+        Some((seq, kind))
+    }
+
     /// Time of the earliest live event.
     fn next_at(&mut self, round: usize) -> Option<f64> {
         self.drop_stale(round);
         self.heap.peek().map(|e| e.0.at())
     }
 
-    /// Time of the earliest queued arrival (used for the idle
-    /// fast-forward jump). Called between rounds, when every lease event
-    /// still in the heap is stale — so after [`EventQueue::drop_stale`]
-    /// the top is the next arrival (or the queue is drained), keeping
-    /// this O(log n) rather than a heap scan.
-    fn next_arrival_at(&mut self, round: usize) -> Option<f64> {
+    /// Time of the earliest queued arrival or churn event (used for the
+    /// idle fast-forward jump). Called between rounds, when every lease
+    /// event still in the heap is stale — so after
+    /// [`EventQueue::drop_stale`] the top is the next wake event (or
+    /// the queue is drained), keeping this O(log n) rather than a heap
+    /// scan.
+    fn next_wake_at(&mut self, round: usize) -> Option<f64> {
         self.drop_stale(round);
         match self.heap.peek() {
-            Some(HeapEntry(SimEvent::Arrival { at, .. })) => Some(*at),
-            _ => None,
+            Some(HeapEntry(SimEvent::LeaseExpiry { .. })) | None => None,
+            Some(HeapEntry(e)) => Some(e.at()),
         }
     }
 }
@@ -395,12 +478,18 @@ pub fn utilization_sample(
     mem_util: f64,
     total_cpus: f64,
 ) -> UtilSample {
-    let cpu_used: f64 = arena
-        .active_jobs()
-        .filter(|j| j.state == JobState::Running)
-        .map(|j| j.progress_rate / j.model.coeffs().cpu_prep_rate)
-        .sum::<f64>()
-        / total_cpus;
+    // A fully-offline fleet has zero capacity; report 0.0 usage rather
+    // than 0/0 = NaN (nothing can be Running then anyway).
+    let cpu_used: f64 = if total_cpus == 0.0 {
+        0.0
+    } else {
+        arena
+            .active_jobs()
+            .filter(|j| j.state == JobState::Running)
+            .map(|j| j.progress_rate / j.model.coeffs().cpu_prep_rate)
+            .sum::<f64>()
+            / total_cpus
+    };
     UtilSample {
         time_s: now,
         gpu_util,
@@ -457,6 +546,19 @@ pub struct SimResult {
     /// placements straddled a rack boundary. Always 0 on a flat
     /// topology.
     pub cross_rack_gangs: u64,
+    /// Running jobs preempted by server failures and requeued (work
+    /// preserved). 0 without fault injection.
+    pub preemptions: u64,
+    /// GPU-rounds of in-flight lease lost to preemptions: each victim
+    /// charges its gang width once (round-quantized progress means the
+    /// *completed* rounds are preserved exactly; what a failure kills
+    /// is the round in flight).
+    pub preempted_gpu_rounds_lost: u64,
+    /// Servers taken offline by the fault timeline (no-op failures
+    /// against an empty pool excluded).
+    pub servers_failed: u64,
+    /// Servers restored or added by the fault timeline.
+    pub servers_restored: u64,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -516,17 +618,31 @@ impl SimResult {
         }
     }
 
+    /// Churn/preemption summary (fault-injection accounting).
+    pub fn fault_summary(&self) -> crate::metrics::FaultSummary {
+        crate::metrics::FaultSummary {
+            preemptions: self.preemptions,
+            preempted_gpu_rounds_lost: self.preempted_gpu_rounds_lost,
+            servers_failed: self.servers_failed,
+            servers_restored: self.servers_restored,
+        }
+    }
+
     /// The canonical metrics document ([`crate::metrics::metrics_json`]).
-    /// `plan_stats` (default **off** — golden files must not change)
-    /// appends the round-planning split.
-    pub fn metrics_json(&self, plan_stats: bool) -> String {
+    /// `plan_stats` and `fault_stats` (both default **off** — golden
+    /// files must not change) append the round-planning split and the
+    /// churn/preemption counters respectively (the CLI turns
+    /// `fault_stats` on exactly when `--faults` is given).
+    pub fn metrics_json(&self, plan_stats: bool, fault_stats: bool) -> String {
         let summary = self.plan_summary();
+        let faults = self.fault_summary();
         crate::metrics::metrics_json(
             &self.jct_stats(),
             &self.tenant_stats(),
             self.makespan_s,
             self.rounds,
             plan_stats.then_some(&summary),
+            fault_stats.then_some(&faults),
         )
     }
 }
@@ -545,7 +661,7 @@ pub fn run_events<M: ClusterModel + ?Sized>(
     cfg: &CoreConfig,
     jobs: Vec<Job>,
 ) -> SimResult {
-    run_events_recorded(model, policy, quotas, cfg, jobs, None)
+    run_events_with_faults(model, policy, quotas, cfg, jobs, None, &[])
 }
 
 /// One [`TenantCounters`] slot per tenant, keyed deterministically.
@@ -579,8 +695,33 @@ pub fn run_events_recorded<M: ClusterModel + ?Sized>(
     policy: &dyn SchedulingPolicy,
     quotas: Option<&TenantQuotas>,
     cfg: &CoreConfig,
+    jobs: Vec<Job>,
+    telemetry: Option<&mut TelemetryRecorder>,
+) -> SimResult {
+    run_events_with_faults(model, policy, quotas, cfg, jobs, telemetry, &[])
+}
+
+/// [`run_events_recorded`] plus a materialized fault timeline
+/// ([`crate::sim::faults::FaultSpec::schedule`]).
+///
+/// Churn events are enqueued up front and fire *before* arrivals at
+/// equal times (see [`SimEvent`]'s order key). On a failure the model
+/// preempts every gang touching the victim server: the jobs re-enter
+/// the runnable queue with their completed round-quantized work
+/// preserved, the in-flight lease is charged to
+/// [`SimResult::preempted_gpu_rounds_lost`], and the fleet epoch bumps
+/// so the next plan cannot be served from the memoized plan or a
+/// now-unsound resume checkpoint. With `faults` empty this *is*
+/// [`run_events_recorded`] — fault-free runs are byte-identical to the
+/// pre-fault core (golden-pinned).
+pub fn run_events_with_faults<M: ClusterModel + ?Sized>(
+    model: &mut M,
+    policy: &dyn SchedulingPolicy,
+    quotas: Option<&TenantQuotas>,
+    cfg: &CoreConfig,
     mut jobs: Vec<Job>,
     mut telemetry: Option<&mut TelemetryRecorder>,
+    faults: &[FaultEntry],
 ) -> SimResult {
     jobs.sort_by(|a, b| {
         a.arrival_s.total_cmp(&b.arrival_s).then(a.id.cmp(&b.id))
@@ -592,6 +733,14 @@ pub fn run_events_recorded<M: ClusterModel + ?Sized>(
     let mut queue = EventQueue::new();
     for (idx, j) in jobs.iter().enumerate() {
         queue.push(SimEvent::Arrival { at: j.arrival_s, idx });
+    }
+    // The whole churn timeline is known up front (it is a pure function
+    // of the fault spec) — enqueue it; `seq` indexes back into `faults`.
+    for (seq, f) in faults.iter().enumerate() {
+        queue.push(match f.kind {
+            FaultKind::Fail => SimEvent::ServerFailed { at: f.at, seq },
+            FaultKind::Add => SimEvent::ServerAdded { at: f.at, seq },
+        });
     }
     let mut arena = JobArena::new(jobs);
 
@@ -605,6 +754,17 @@ pub fn run_events_recorded<M: ClusterModel + ?Sized>(
     let mut plan_steps_total = 0usize;
     let mut plan_steps_reused = 0usize;
     let mut last_set_changed = true;
+    // Fleet-membership epoch: bumped by every applied fault. The memo
+    // key is (epoch, runnable sequence) — a plan computed against a
+    // different fleet must never be served, even if the sequence
+    // matches.
+    let mut fleet_epoch = 0u64;
+    let mut planned_epoch = 0u64;
+    let mut preemptions = 0u64;
+    let mut preempted_gpu_rounds_lost = 0u64;
+    let mut servers_failed = 0u64;
+    let mut servers_restored = 0u64;
+    let mut preempted_buf: Vec<u32> = Vec::new();
 
     // Round-scoped buffers, reused across rounds (the per-round
     // allocations were a measurable slice of the hot loop).
@@ -642,12 +802,61 @@ pub fn run_events_recorded<M: ClusterModel + ?Sized>(
 
     while finished.len() < n_total && now < cfg.max_sim_s {
         let mut planned_this_round: Option<PlanStats> = None;
-        // Fire arrival events due now (profiling happens on arrival).
-        while let Some(idx) = queue.pop_arrival_due(now + 1e-9, rounds) {
-            profiling_minutes +=
-                model.profile_arrival(idx, arena.job_mut(idx));
-            arena.activate(idx);
-            last_set_changed = true;
+        // Per-round churn telemetry tallies (events are instantaneous,
+        // so unlike the admission/gang gauges nothing carries across
+        // fast-forwarded rounds).
+        let mut round_preemptions = 0u32;
+        let mut round_failed = 0u32;
+        let mut round_restored = 0u32;
+        // Fire due events in exact heap order: churn before arrivals at
+        // equal times (each pop helper only fires when its kind tops
+        // the heap, so interleaved timelines drain in `order_key`
+        // order). Profiling happens on arrival.
+        loop {
+            if let Some((seq, kind)) = queue.pop_churn_due(now + 1e-9, rounds)
+            {
+                preempted_buf.clear();
+                if model.apply_fault(
+                    kind,
+                    faults[seq].pool,
+                    &arena,
+                    &mut preempted_buf,
+                ) {
+                    match kind {
+                        FaultKind::Fail => {
+                            servers_failed += 1;
+                            round_failed += 1;
+                        }
+                        FaultKind::Add => {
+                            servers_restored += 1;
+                            round_restored += 1;
+                        }
+                    }
+                    fleet_epoch += 1;
+                    last_set_changed = true;
+                }
+                for &idx in &preempted_buf {
+                    let job = arena.job_mut(idx as usize);
+                    // Requeue with completed work preserved: the
+                    // round-quantized `progress_samples` already
+                    // credited stays; what the failure kills is the
+                    // lease in flight, charged below.
+                    job.state = JobState::Queued;
+                    job.progress_rate = 0.0;
+                    preempted_gpu_rounds_lost += job.gpus as u64;
+                }
+                preemptions += preempted_buf.len() as u64;
+                round_preemptions += preempted_buf.len() as u32;
+                continue;
+            }
+            if let Some(idx) = queue.pop_arrival_due(now + 1e-9, rounds) {
+                profiling_minutes +=
+                    model.profile_arrival(idx, arena.job_mut(idx));
+                arena.activate(idx);
+                last_set_changed = true;
+                continue;
+            }
+            break;
         }
 
         // Fast-forward when nothing can change the schedule: set
@@ -699,12 +908,16 @@ pub fn run_events_recorded<M: ClusterModel + ?Sized>(
                 last_spilled.clone_from(&outcome.spilled_gpus_by_tenant);
             }
 
-            if cfg.force_replan || !have_plan || runnable != planned_runnable
+            if cfg.force_replan
+                || !have_plan
+                || planned_epoch != fleet_epoch
+                || runnable != planned_runnable
             {
                 rates.clear();
                 let stats = model.place_round(&runnable, &arena, &mut rates);
                 std::mem::swap(&mut planned_runnable, &mut runnable);
                 have_plan = true;
+                planned_epoch = fleet_epoch;
                 planned_rounds += 1;
                 if stats.resumed {
                     resumed_rounds += 1;
@@ -845,6 +1058,9 @@ pub fn run_events_recorded<M: ClusterModel + ?Sized>(
                     .map_or(0, |s| s.elapsed().as_millis() as i64),
                 gangs_placed: last_gangs,
                 cross_rack_gangs: last_cross_rack,
+                preemptions: round_preemptions,
+                servers_failed: round_failed,
+                servers_restored: round_restored,
                 pools: std::mem::take(&mut pools_buf),
                 tenants: tenants_buf.values().copied().collect(),
             };
@@ -890,10 +1106,11 @@ pub fn run_events_recorded<M: ClusterModel + ?Sized>(
         gangs_placed_total += last_gangs as u64;
         cross_rack_total += last_cross_rack as u64;
         rounds += 1;
-        // Jump straight to the next arrival event when idle. The round
-        // counter just advanced, so this round's lease is already stale.
+        // Jump straight to the next arrival or churn event when idle.
+        // The round counter just advanced, so this round's lease is
+        // already stale.
         if arena.n_active() == 0 {
-            match queue.next_arrival_at(rounds) {
+            match queue.next_wake_at(rounds) {
                 Some(at) => now = at,
                 None => now = horizon,
             }
@@ -918,6 +1135,10 @@ pub fn run_events_recorded<M: ClusterModel + ?Sized>(
         profiling_minutes,
         gangs_placed: gangs_placed_total,
         cross_rack_gangs: cross_rack_total,
+        preemptions,
+        preempted_gpu_rounds_lost,
+        servers_failed,
+        servers_restored,
     }
 }
 
@@ -951,15 +1172,45 @@ mod tests {
     }
 
     #[test]
-    fn next_arrival_skips_stale_lease_events() {
+    fn next_wake_skips_stale_lease_events() {
         let mut q = EventQueue::new();
         // A lease from round 0 is stale once the loop reaches round 1.
         q.push(SimEvent::LeaseExpiry { at: 1.0, round: 0 });
-        assert_eq!(q.next_arrival_at(1), None);
+        assert_eq!(q.next_wake_at(1), None);
         q.push(SimEvent::Arrival { at: 9.0, idx: 0 });
         q.push(SimEvent::Arrival { at: 4.0, idx: 1 });
         q.push(SimEvent::LeaseExpiry { at: 2.0, round: 0 });
-        assert_eq!(q.next_arrival_at(1), Some(4.0));
+        assert_eq!(q.next_wake_at(1), Some(4.0));
+        // An earlier churn event wakes the idle loop before the arrival.
+        q.push(SimEvent::ServerAdded { at: 3.0, seq: 0 });
+        assert_eq!(q.next_wake_at(1), Some(3.0));
+    }
+
+    #[test]
+    fn churn_orders_before_arrivals_and_leases_with_stable_seq() {
+        let mut q = EventQueue::new();
+        // Everything at t=10: the full tie-break is failure < addition
+        // < arrival < lease expiry, FIFO by seq within a kind.
+        q.push(SimEvent::LeaseExpiry { at: 10.0, round: 0 });
+        q.push(SimEvent::Arrival { at: 10.0, idx: 5 });
+        q.push(SimEvent::ServerAdded { at: 10.0, seq: 3 });
+        q.push(SimEvent::ServerFailed { at: 10.0, seq: 2 });
+        q.push(SimEvent::ServerFailed { at: 10.0, seq: 1 });
+        // An earlier failure still pops first regardless of kind rank.
+        q.push(SimEvent::Arrival { at: 4.0, idx: 9 });
+        assert_eq!(q.pop_churn_due(20.0, 0), None); // arrival at 4 tops
+        assert_eq!(q.pop_arrival_due(20.0, 0), Some(9));
+        assert_eq!(q.pop_churn_due(20.0, 0), Some((1, FaultKind::Fail)));
+        assert_eq!(q.pop_churn_due(20.0, 0), Some((2, FaultKind::Fail)));
+        assert_eq!(q.pop_churn_due(20.0, 0), Some((3, FaultKind::Add)));
+        // Churn drained: the arrival tops the heap, lease after it.
+        assert_eq!(q.pop_churn_due(20.0, 0), None);
+        assert_eq!(q.pop_arrival_due(20.0, 0), Some(5));
+        assert_eq!(q.next_at(0), Some(10.0));
+        // A due deadline gates churn pops like arrivals.
+        q.push(SimEvent::ServerFailed { at: 30.0, seq: 4 });
+        assert_eq!(q.pop_churn_due(20.0, 0), None);
+        assert_eq!(q.pop_churn_due(30.0, 0), Some((4, FaultKind::Fail)));
     }
 
     #[test]
@@ -991,6 +1242,35 @@ mod tests {
         // (plus at most one not-yet-compacted stale entry).
         assert_eq!(q.next_at(n - 1), Some(1e6 + (n - 1) as f64));
         assert!(q.len() <= 2, "len = {}", q.len());
-        assert_eq!(q.next_arrival_at(n), None);
+        assert_eq!(q.next_wake_at(n), None);
+    }
+
+    #[test]
+    fn compaction_preserves_buried_churn_events() {
+        // Same stale-lease-burying shape as above, with two far-future
+        // churn events pushed first: compaction rebuilds must keep them
+        // live (and count them toward the live bound) even while
+        // thousands of stale leases are reclaimed around them.
+        let n = 1_000;
+        let mut q = EventQueue::new();
+        q.push(SimEvent::ServerFailed { at: 2e6, seq: 0 });
+        q.push(SimEvent::ServerAdded { at: 3e6, seq: 1 });
+        for i in 0..n {
+            q.push(SimEvent::Arrival { at: i as f64, idx: i });
+        }
+        for round in 0..n {
+            q.push(SimEvent::LeaseExpiry { at: 1e6 + round as f64, round });
+            assert_eq!(q.pop_arrival_due(f64::INFINITY, round), Some(round));
+            assert!(
+                q.len() <= 2 * (n - round + 3),
+                "round {round}: stale leases accumulate, len = {}",
+                q.len()
+            );
+        }
+        // The churn events survived every compaction, in order.
+        assert_eq!(q.next_wake_at(n), Some(2e6));
+        assert_eq!(q.pop_churn_due(f64::INFINITY, n), Some((0, FaultKind::Fail)));
+        assert_eq!(q.pop_churn_due(f64::INFINITY, n), Some((1, FaultKind::Add)));
+        assert_eq!(q.pop_churn_due(f64::INFINITY, n), None);
     }
 }

@@ -5,15 +5,17 @@
 //! [`Simulator`] wires a [`Fleet`] (one V100 pool by default; any mix of
 //! generations via [`SimConfig::types`]), the optimistic profiler, one
 //! ground-truth [`PerfModel`] per generation, and a [`Mechanism`] into a
-//! [`FleetModel`] and hands the loop itself to [`run_events`]. Policy
+//! [`FleetModel`] and hands the loop itself to
+//! [`run_events_with_faults`]. Policy
 //! ordering, tenant-quota admission, progress, and metrics all live in
 //! the core. The heterogeneous front-end ([`crate::hetero`]) is nothing
 //! but a `SimConfig` with `types` set — there is no second engine.
 
 use super::core::{
-    run_events_recorded, utilization_sample, ClusterModel, CoreConfig,
+    run_events_with_faults, utilization_sample, ClusterModel, CoreConfig,
     PlanStats, RoundRates, SimResult,
 };
+use super::faults::{FaultKind, FaultSpec};
 use crate::cluster::{Fleet, GpuGen, ServerSpec, TopologySpec, TypeSpec};
 use crate::coordinator::{policy_view_with_free, round_start_free};
 use crate::job::{Job, JobArena};
@@ -80,6 +82,12 @@ pub struct SimConfig {
     /// `SimResult`, golden payload and telemetry profile is
     /// byte-identical for any value. 1 (default) = serial.
     pub shards: usize,
+    /// Deterministic host churn (`--faults`): a scripted or seeded
+    /// schedule of server failures/restores, materialized once per run
+    /// via [`FaultSpec::schedule`] and injected as `ServerFailed` /
+    /// `ServerAdded` events. `None` (default) = no churn, byte-identical
+    /// to pre-fault builds.
+    pub faults: Option<FaultSpec>,
 }
 
 impl Default for SimConfig {
@@ -100,6 +108,7 @@ impl Default for SimConfig {
             no_resume: false,
             topology: TopologySpec::default(),
             shards: 1,
+            faults: None,
         }
     }
 }
@@ -322,13 +331,60 @@ impl ClusterModel for FleetModel {
         }
     }
 
+    fn apply_fault(
+        &mut self,
+        kind: FaultKind,
+        pool: usize,
+        arena: &JobArena,
+        preempted: &mut Vec<u32>,
+    ) -> bool {
+        // Either direction changes fleet membership, so the previous
+        // plan's checkpoint is unsound: the journal was re-based by the
+        // cluster and the fold state references the old server set. Drop
+        // it — the next replan takes the hard-reset batch route.
+        match kind {
+            FaultKind::Fail => {
+                let Some(victims) = self.fleet.fail_server(pool) else {
+                    return false; // pool already fully offline: no-op
+                };
+                for id in victims {
+                    let idx = arena.index_of(id);
+                    // Placements of jobs that finished mid-round stay
+                    // committed until the next replan; losing the host
+                    // under them preempts nothing.
+                    if arena.job(idx).state == crate::job::JobState::Running {
+                        preempted.push(idx as u32);
+                    }
+                }
+            }
+            FaultKind::Add => {
+                if !self.fleet.add_server(pool) {
+                    return false;
+                }
+            }
+        }
+        // `max_pool_gpus` (the admission gate in `fits`) deliberately
+        // stays at its construction-time value: admissibility is decided
+        // once per job against the nominal fleet, so transient churn
+        // never flips a job between admitted and rejected — that would
+        // make "no job lost" depend on fault timing.
+        self.trace = None;
+        true
+    }
+
     fn utilization(&self, now: f64, arena: &JobArena) -> UtilSample {
+        let total_mem = self.fleet.total_mem_gb();
+        let mem_util = if total_mem == 0.0 {
+            0.0
+        } else {
+            1.0 - self.fleet.free_mem_gb() / total_mem
+        };
         utilization_sample(
             now,
             arena,
             self.fleet.gpu_utilization(),
             self.fleet.cpu_utilization(),
-            1.0 - self.fleet.free_mem_gb() / self.fleet.total_mem_gb(),
+            mem_util,
             self.fleet.total_cpus(),
         )
     }
@@ -398,7 +454,17 @@ impl Simulator {
         let policy = policy_by_name(&self.cfg.policy)
             .unwrap_or_else(|| panic!("unknown policy {}", self.cfg.policy));
         let mut model = FleetModel::from_config(&self.cfg);
-        run_events_recorded(
+        // Materialize the churn schedule once, against the *nominal*
+        // pool count — the same spec always yields the same event list,
+        // independent of shards, threads, or planning tier.
+        let n_pools = model.fleet.n_types();
+        let faults = self
+            .cfg
+            .faults
+            .as_ref()
+            .map(|s| s.schedule(self.cfg.max_sim_s, n_pools))
+            .unwrap_or_default();
+        run_events_with_faults(
             &mut model,
             policy.as_ref(),
             self.quotas.as_ref(),
@@ -409,6 +475,7 @@ impl Simulator {
             },
             jobs,
             telemetry,
+            &faults,
         )
     }
 }
@@ -683,6 +750,76 @@ mod tests {
         assert_eq!(base.gangs_placed, flat.gangs_placed);
         assert_eq!(base.cross_rack_gangs, 0, "flat never counts cross-rack");
         assert_eq!(flat.cross_rack_gangs, 0);
+    }
+
+    #[test]
+    fn no_faults_spec_is_absent_by_default_and_runs_are_identical() {
+        // `faults: None` must be byte-identical to a run from a build
+        // that never heard of faults — the no-fault identity invariant,
+        // checked here at the engine level (goldens pin it end-to-end).
+        let trace = small_trace(24, 31);
+        let base = Simulator::new(small_cfg("srtf", "tune")).run(trace.clone());
+        // An empty script is the degenerate fault spec: zero events.
+        let faulted = Simulator::new(SimConfig {
+            faults: Some(FaultSpec::Script(vec![])),
+            ..small_cfg("srtf", "tune")
+        })
+        .run(trace);
+        let bits = |r: &SimResult| -> Vec<(u64, u64)> {
+            r.finished.iter().map(|f| (f.id.0, f.jct_s.to_bits())).collect()
+        };
+        assert_eq!(bits(&base), bits(&faulted));
+        assert_eq!(base.preemptions, 0);
+        assert_eq!(faulted.servers_failed, 0);
+    }
+
+    #[test]
+    fn churn_preempts_and_every_job_still_finishes() {
+        // Aggressive churn on a 2-server pool: hosts fail and return
+        // every few simulated hours. Preempted jobs must re-enter the
+        // queue and complete — no job lost.
+        let trace = small_trace(20, 43);
+        let spec = FaultSpec::parse("mtbf:6,mttr:2,seed:5").unwrap();
+        let r = Simulator::new(SimConfig {
+            faults: Some(spec),
+            ..small_cfg("fifo", "tune")
+        })
+        .run(trace);
+        assert_eq!(r.finished.len(), 20, "every admitted job completes");
+        assert!(r.servers_failed > 0, "churn actually fired");
+        assert!(r.servers_restored > 0);
+        assert!(
+            r.preemptions == 0 || r.preempted_gpu_rounds_lost > 0,
+            "lost work is charged whenever jobs were preempted"
+        );
+        assert!(r.jcts().iter().all(|&j| j > 0.0 && j.is_finite()));
+    }
+
+    #[test]
+    fn faulted_runs_are_deterministic_and_tier_invariant() {
+        // Same spec, same trace: bitwise-equal results — including
+        // across the forced-replan tier (the fleet-epoch memo key must
+        // not desynchronize the tiers under churn).
+        let trace = small_trace(18, 51);
+        let cfg = || SimConfig {
+            faults: Some(FaultSpec::parse("mtbf:12,mttr:3").unwrap()),
+            ..small_cfg("srtf", "tune")
+        };
+        let a = Simulator::new(cfg()).run(trace.clone());
+        let b = Simulator::new(cfg()).run(trace.clone());
+        let forced = Simulator::new(SimConfig {
+            force_replan: true,
+            ..cfg()
+        })
+        .run(trace);
+        let bits = |r: &SimResult| -> Vec<(u64, u64)> {
+            r.finished.iter().map(|f| (f.id.0, f.jct_s.to_bits())).collect()
+        };
+        assert_eq!(bits(&a), bits(&b));
+        assert_eq!(bits(&a), bits(&forced));
+        assert_eq!(a.preemptions, b.preemptions);
+        assert_eq!(a.preemptions, forced.preemptions);
+        assert_eq!(a.servers_failed, forced.servers_failed);
     }
 
     #[test]

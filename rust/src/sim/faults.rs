@@ -1,0 +1,302 @@
+//! Deterministic fault injection (ISSUE 9): seeded host churn.
+//!
+//! A [`FaultSpec`] describes when servers leave and rejoin the fleet:
+//!
+//! - **scripted** — `--faults <file>`, a JSON array of
+//!   `{"at": seconds, "pool": i, "count": n, "action": "fail"|"add"}`
+//!   entries (`pool` defaults to 0, `count` to 1, `action` to `"fail"`);
+//! - **generated** — `--faults mtbf:<hours>,mttr:<hours>[,seed:S]`, a
+//!   seeded Poisson process: exponential inter-failure gaps with the
+//!   given mean-time-between-failures, each failure paired with a
+//!   restore `mttr` later, victim pool drawn uniformly.
+//!
+//! Both forms materialize, via [`FaultSpec::schedule`], into one flat
+//! sorted `Vec<FaultEntry>` that the event core enqueues up front — the
+//! whole churn timeline is a pure function of (spec, horizon, pool
+//! count), so replay is exact and byte-identical across runs, hosts,
+//! `--threads`, and `--shards`. Entries sort by `(at, kind, insertion
+//! order)` with failures before additions at equal times, matching the
+//! event queue's tie-break (failure < addition < arrival < lease).
+
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+
+/// What happens to a server: it fails (goes offline, running gangs
+/// preempted) or is added (an offline server restored, or the pool
+/// grown by a fresh machine).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum FaultKind {
+    /// Take one server offline (failures sort before additions).
+    Fail,
+    /// Bring one server back online (or grow the pool).
+    Add,
+}
+
+/// One materialized churn event: a single server in `pool` fails or is
+/// added at simulated time `at`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEntry {
+    pub at: f64,
+    pub pool: usize,
+    pub kind: FaultKind,
+}
+
+/// One line of a scripted fault file, before `count` expansion.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScriptFault {
+    pub at: f64,
+    pub pool: usize,
+    pub count: u32,
+    pub kind: FaultKind,
+}
+
+/// Safety cap on generator output: a pathological mtbf cannot flood the
+/// event heap (16k churn events is far past any realistic schedule).
+const MAX_GENERATED: usize = 16_384;
+
+/// A fault-injection description (see module docs for the two forms).
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultSpec {
+    /// Explicit scripted schedule from a JSON file.
+    Script(Vec<ScriptFault>),
+    /// Seeded MTBF/MTTR generator (times in seconds).
+    Generator { mtbf_s: f64, mttr_s: f64, seed: u64 },
+}
+
+impl FaultSpec {
+    /// Parse the CLI form: `mtbf:<hours>,mttr:<hours>[,seed:S]` for the
+    /// generator, anything else is a path to a scripted JSON file
+    /// (loaded eagerly so a bad file fails at config time, not mid-run).
+    pub fn parse(s: &str) -> Result<FaultSpec, String> {
+        if s.starts_with("mtbf:") {
+            Self::parse_generator(s)
+        } else {
+            let text = std::fs::read_to_string(s)
+                .map_err(|e| format!("faults '{s}': cannot read file: {e}"))?;
+            Self::script_from_json(&text)
+                .map_err(|e| format!("faults '{s}': {e}"))
+        }
+    }
+
+    fn parse_generator(s: &str) -> Result<FaultSpec, String> {
+        let mut mtbf_s = None;
+        let mut mttr_s = None;
+        let mut seed = 1u64;
+        for part in s.split(',') {
+            let (key, val) = part
+                .split_once(':')
+                .ok_or_else(|| format!("faults '{s}': expected key:value, got '{part}'"))?;
+            match key {
+                "mtbf" => {
+                    let h: f64 = val.parse().map_err(|_| {
+                        format!("faults '{s}': mtbf expects hours, got '{val}'")
+                    })?;
+                    mtbf_s = Some(h * 3600.0);
+                }
+                "mttr" => {
+                    let h: f64 = val.parse().map_err(|_| {
+                        format!("faults '{s}': mttr expects hours, got '{val}'")
+                    })?;
+                    mttr_s = Some(h * 3600.0);
+                }
+                "seed" => {
+                    seed = val.parse().map_err(|_| {
+                        format!("faults '{s}': seed expects an integer, got '{val}'")
+                    })?;
+                }
+                other => {
+                    return Err(format!("faults '{s}': unknown key '{other}'"));
+                }
+            }
+        }
+        let mtbf_s = mtbf_s.ok_or_else(|| format!("faults '{s}': missing mtbf"))?;
+        let mttr_s = mttr_s.ok_or_else(|| format!("faults '{s}': missing mttr"))?;
+        if !(mtbf_s > 0.0 && mtbf_s.is_finite()) {
+            return Err(format!("faults '{s}': mtbf must be finite and > 0"));
+        }
+        if !(mttr_s >= 0.0 && mttr_s.is_finite()) {
+            return Err(format!("faults '{s}': mttr must be finite and >= 0"));
+        }
+        Ok(FaultSpec::Generator { mtbf_s, mttr_s, seed })
+    }
+
+    /// Parse a scripted fault document (the contents of a `--faults`
+    /// file): a JSON array of `{at, pool, count, action}` objects.
+    pub fn script_from_json(text: &str) -> Result<FaultSpec, String> {
+        let doc = Json::parse(text).map_err(|e| format!("bad JSON: {e:?}"))?;
+        let arr = doc
+            .as_arr()
+            .ok_or_else(|| "expected a top-level JSON array".to_string())?;
+        let mut entries = Vec::with_capacity(arr.len());
+        for (i, e) in arr.iter().enumerate() {
+            let at = e
+                .get("at")
+                .as_f64()
+                .ok_or_else(|| format!("entry {i}: missing numeric 'at' (seconds)"))?;
+            if !(at >= 0.0 && at.is_finite()) {
+                return Err(format!("entry {i}: 'at' must be finite and >= 0"));
+            }
+            let pool = e.get("pool").as_f64().unwrap_or(0.0);
+            if pool < 0.0 || pool.fract() != 0.0 {
+                return Err(format!("entry {i}: 'pool' must be a non-negative integer"));
+            }
+            let count = e.get("count").as_f64().unwrap_or(1.0);
+            if !(count >= 1.0) || count.fract() != 0.0 {
+                return Err(format!("entry {i}: 'count' must be a positive integer"));
+            }
+            let kind = match e.get("action").as_str().unwrap_or("fail") {
+                "fail" | "remove" => FaultKind::Fail,
+                "add" => FaultKind::Add,
+                other => {
+                    return Err(format!(
+                        "entry {i}: action must be 'fail'|'remove'|'add', got '{other}'"
+                    ));
+                }
+            };
+            entries.push(ScriptFault { at, pool: pool as usize, count: count as u32, kind });
+        }
+        Ok(FaultSpec::Script(entries))
+    }
+
+    /// Materialize the churn timeline for one run: every single-server
+    /// event before `max_sim_s`, sorted by `(at, kind, insertion
+    /// order)`. Script pools past the fleet clamp to the last pool (the
+    /// mapping stays total and deterministic for any fleet shape);
+    /// generator pools are drawn uniformly from the seeded stream.
+    pub fn schedule(&self, max_sim_s: f64, n_pools: usize) -> Vec<FaultEntry> {
+        assert!(n_pools > 0, "fault schedule needs at least one pool");
+        let mut out = Vec::new();
+        match self {
+            FaultSpec::Script(entries) => {
+                for e in entries {
+                    if e.at >= max_sim_s {
+                        continue;
+                    }
+                    let pool = e.pool.min(n_pools - 1);
+                    for _ in 0..e.count {
+                        out.push(FaultEntry { at: e.at, pool, kind: e.kind });
+                    }
+                }
+            }
+            FaultSpec::Generator { mtbf_s, mttr_s, seed } => {
+                let mut rng = Pcg64::new(*seed, 0xFA117);
+                let lambda = 1.0 / mtbf_s;
+                let mut t = 0.0;
+                while out.len() + 2 <= MAX_GENERATED {
+                    t += rng.exponential(lambda);
+                    if t >= max_sim_s {
+                        break;
+                    }
+                    let pool = rng.below(n_pools as u64) as usize;
+                    out.push(FaultEntry { at: t, pool, kind: FaultKind::Fail });
+                    let back = t + mttr_s;
+                    if back < max_sim_s {
+                        out.push(FaultEntry { at: back, pool, kind: FaultKind::Add });
+                    }
+                }
+            }
+        }
+        // Stable sort: equal (at, kind) pairs keep insertion order, so
+        // the timeline is reproducible down to the last tie.
+        out.sort_by(|a, b| a.at.total_cmp(&b.at).then(a.kind.cmp(&b.kind)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generator_form_parses_and_rejects_garbage() {
+        let g = FaultSpec::parse("mtbf:12,mttr:0.5,seed:7").unwrap();
+        assert_eq!(
+            g,
+            FaultSpec::Generator { mtbf_s: 12.0 * 3600.0, mttr_s: 1800.0, seed: 7 }
+        );
+        // Seed defaults to 1.
+        let g = FaultSpec::parse("mtbf:1,mttr:1").unwrap();
+        assert!(matches!(g, FaultSpec::Generator { seed: 1, .. }));
+        assert!(FaultSpec::parse("mtbf:12").is_err()); // missing mttr
+        assert!(FaultSpec::parse("mtbf:x,mttr:1").is_err());
+        assert!(FaultSpec::parse("mtbf:0,mttr:1").is_err());
+        assert!(FaultSpec::parse("mtbf:1,mttr:-1").is_err());
+        assert!(FaultSpec::parse("mtbf:1,mttr:1,foo:2").is_err());
+        assert!(FaultSpec::parse("/no/such/fault/file.json").is_err());
+    }
+
+    #[test]
+    fn script_parses_defaults_and_rejects_bad_entries() {
+        let s = FaultSpec::script_from_json(
+            r#"[{"at": 600, "pool": 1, "count": 2, "action": "fail"},
+                {"at": 1200, "action": "add"},
+                {"at": 300}]"#,
+        )
+        .unwrap();
+        let FaultSpec::Script(entries) = &s else { panic!("expected script") };
+        assert_eq!(entries.len(), 3);
+        assert_eq!(
+            entries[0],
+            ScriptFault { at: 600.0, pool: 1, count: 2, kind: FaultKind::Fail }
+        );
+        // Defaults: pool 0, count 1, action fail.
+        assert_eq!(
+            entries[1],
+            ScriptFault { at: 1200.0, pool: 0, count: 1, kind: FaultKind::Add }
+        );
+        assert_eq!(entries[2].kind, FaultKind::Fail);
+        assert!(FaultSpec::script_from_json("{}").is_err());
+        assert!(FaultSpec::script_from_json(r#"[{"pool": 0}]"#).is_err());
+        assert!(FaultSpec::script_from_json(r#"[{"at": -1}]"#).is_err());
+        assert!(FaultSpec::script_from_json(r#"[{"at": 1, "count": 0}]"#).is_err());
+        assert!(FaultSpec::script_from_json(r#"[{"at": 1, "action": "explode"}]"#).is_err());
+    }
+
+    #[test]
+    fn script_schedule_expands_counts_clamps_pools_and_sorts() {
+        let s = FaultSpec::Script(vec![
+            ScriptFault { at: 900.0, pool: 9, count: 1, kind: FaultKind::Add },
+            ScriptFault { at: 900.0, pool: 0, count: 2, kind: FaultKind::Fail },
+            ScriptFault { at: 300.0, pool: 1, count: 1, kind: FaultKind::Fail },
+            ScriptFault { at: 1e12, pool: 0, count: 1, kind: FaultKind::Fail },
+        ]);
+        let plan = s.schedule(3600.0, 2);
+        // Past-horizon entry dropped; count expanded; fail before add
+        // at the shared t=900 instant; pool 9 clamps to the last pool.
+        assert_eq!(plan.len(), 4);
+        assert_eq!(plan[0], FaultEntry { at: 300.0, pool: 1, kind: FaultKind::Fail });
+        assert_eq!(plan[1].kind, FaultKind::Fail);
+        assert_eq!(plan[2].kind, FaultKind::Fail);
+        assert_eq!(plan[3], FaultEntry { at: 900.0, pool: 1, kind: FaultKind::Add });
+    }
+
+    #[test]
+    fn generator_schedule_is_deterministic_and_pairs_restores() {
+        let g = FaultSpec::Generator { mtbf_s: 4.0 * 3600.0, mttr_s: 1800.0, seed: 3 };
+        let a = g.schedule(86_400.0, 3);
+        let b = g.schedule(86_400.0, 3);
+        assert_eq!(a, b, "same spec must replay byte-identically");
+        assert!(!a.is_empty(), "a day at 4h MTBF should produce churn");
+        let fails = a.iter().filter(|e| e.kind == FaultKind::Fail).count();
+        let adds = a.iter().filter(|e| e.kind == FaultKind::Add).count();
+        // Every restore pairs with an earlier failure (some failures
+        // near the horizon may lose their restore past it).
+        assert!(adds <= fails);
+        assert!(a.iter().all(|e| e.pool < 3 && e.at < 86_400.0));
+        for w in a.windows(2) {
+            assert!(w[0].at <= w[1].at, "schedule must be time-sorted");
+        }
+        // A different seed moves the timeline.
+        let c = FaultSpec::Generator { mtbf_s: 4.0 * 3600.0, mttr_s: 1800.0, seed: 4 }
+            .schedule(86_400.0, 3);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn generator_output_is_capped() {
+        // An absurd mtbf (sub-second) hits the cap instead of flooding.
+        let g = FaultSpec::Generator { mtbf_s: 0.001, mttr_s: 0.0, seed: 1 };
+        let plan = g.schedule(1e9, 1);
+        assert!(plan.len() <= MAX_GENERATED);
+    }
+}

@@ -3,14 +3,17 @@
 //! `sim` hosts the *shared* event-driven scheduling loop ([`core`]) plus
 //! the one topology behind it ([`engine::FleetModel`] — the single
 //! [`ClusterModel`] implementation, parameterized by a fleet
-//! description). A global event queue carries job arrivals and round
-//! lease expiries; each planning pass runs the scheduling policy, the
-//! tenant-quota admission ([`crate::workload::admission`]), and the
-//! allocation mechanism over the runnable jobs, then jobs progress at
-//! the throughput their (type, c, m) grant yields under that type's
-//! ground truth. A job finishing releases its lease at the next round
-//! boundary (round-based scheduling), but its JCT is recorded at the
-//! exact finish instant.
+//! description). A global event queue carries job arrivals, round lease
+//! expiries, and — under a [`FaultSpec`] ([`faults`]) — deterministic
+//! host churn (`ServerFailed`/`ServerAdded`); each planning pass runs
+//! the scheduling policy, the tenant-quota admission
+//! ([`crate::workload::admission`]), and the allocation mechanism over
+//! the runnable jobs, then jobs progress at the throughput their
+//! (type, c, m) grant yields under that type's ground truth. A job
+//! finishing releases its lease at the next round boundary (round-based
+//! scheduling), but its JCT is recorded at the exact finish instant. A
+//! host failure preempts the gangs placed on it back into the queue
+//! with completed work preserved — no job is ever lost to churn.
 //!
 //! There is one engine with two front-ends: [`Simulator`] (homogeneous
 //! defaults: `n_servers` V100 machines) and the heterogeneous
@@ -32,9 +35,12 @@
 
 mod core;
 mod engine;
+mod faults;
 
 pub use self::core::{
-    run_events, run_events_recorded, utilization_sample, ClusterModel,
-    CoreConfig, FinishedJob, PlanStats, RoundRates, SimEvent, SimResult,
+    run_events, run_events_recorded, run_events_with_faults,
+    utilization_sample, ClusterModel, CoreConfig, FinishedJob, PlanStats,
+    RoundRates, SimEvent, SimResult,
 };
 pub use engine::{FleetModel, HomoModel, SimConfig, Simulator};
+pub use faults::{FaultEntry, FaultKind, FaultSpec, ScriptFault};

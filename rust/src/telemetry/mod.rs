@@ -29,7 +29,8 @@
 //! - **Round row** — delta-encoded prefix
 //!   `[round, time_ms, queued, running, admitted_gpus, spilled_gpus,
 //!     free_gpus, total_gpus, free_cpus_milli, total_cpus_milli,
-//!     free_mem_milli, total_mem_milli, gangs_placed, cross_rack_gangs]`
+//!     free_mem_milli, total_mem_milli, gangs_placed, cross_rack_gangs,
+//!     preemptions, servers_failed, servers_restored]`
 //!   (+ `wall_ms` when timing is on), then 6 fields per type pool
 //!   `[free_gpus, total_gpus, free_cpus_milli, total_cpus_milli,
 //!     free_mem_milli, total_mem_milli]`, then an absolute tail
@@ -47,7 +48,7 @@ use crate::util::json::Json;
 
 /// Fixed per-round core fields before the optional `wall_ms` and the
 /// per-pool blocks (see module docs for the layout).
-const ROUND_CORE: usize = 14;
+const ROUND_CORE: usize = 17;
 /// Fields per type pool in a round row.
 const POOL_FIELDS: usize = 6;
 /// Fields per tenant in a round row's absolute tail.
@@ -227,6 +228,14 @@ pub struct RoundSample {
     /// Of `gangs_placed`, the gangs straddling a rack boundary under
     /// the fleet's topology. Always 0 on a flat topology.
     pub cross_rack_gangs: u32,
+    /// Jobs preempted by host failures *this round* (instantaneous —
+    /// unlike the admission/gang gauges above, churn tallies are not
+    /// carried across fast-forwarded rounds; a quiet round reads 0).
+    pub preemptions: u32,
+    /// Servers taken offline by churn this round (instantaneous).
+    pub servers_failed: u32,
+    /// Servers restored or added by churn this round (instantaneous).
+    pub servers_restored: u32,
     /// Wall-clock ms — recorded/emitted only when timing is enabled.
     pub wall_ms: i64,
     pub pools: Vec<PoolCounters>,
@@ -351,6 +360,9 @@ impl TelemetryRecorder {
             milli(s.total_mem_gb),
             i64::from(s.gangs_placed),
             i64::from(s.cross_rack_gangs),
+            i64::from(s.preemptions),
+            i64::from(s.servers_failed),
+            i64::from(s.servers_restored),
         ]);
         if self.cfg.timing {
             row.push(s.wall_ms);
@@ -474,6 +486,9 @@ impl TelemetryRecorder {
             total_mem_gb: from_milli(row[11]),
             gangs_placed: row[12] as u32,
             cross_rack_gangs: row[13] as u32,
+            preemptions: row[14] as u32,
+            servers_failed: row[15] as u32,
+            servers_restored: row[16] as u32,
             wall_ms,
             pools,
             tenants,
@@ -546,6 +561,12 @@ impl TelemetryRecorder {
             (
                 "cross_rack_gangs",
                 Json::num(f64::from(s.cross_rack_gangs)),
+            ),
+            ("preemptions", Json::num(f64::from(s.preemptions))),
+            ("servers_failed", Json::num(f64::from(s.servers_failed))),
+            (
+                "servers_restored",
+                Json::num(f64::from(s.servers_restored)),
             ),
         ];
         if self.cfg.timing {
@@ -630,7 +651,8 @@ impl TelemetryRecorder {
         out.push_str(
             "round,time_ms,queued,running,admitted_gpus,spilled_gpus,\
              free_gpus,total_gpus,free_cpus,total_cpus,free_mem_gb,\
-             total_mem_gb,gangs_placed,cross_rack_gangs",
+             total_mem_gb,gangs_placed,cross_rack_gangs,preemptions,\
+             servers_failed,servers_restored",
         );
         if self.cfg.timing {
             out.push_str(",wall_ms");
@@ -651,7 +673,7 @@ impl TelemetryRecorder {
         out.push('\n');
         for s in self.rounds() {
             out.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
                 s.round,
                 s.time_ms,
                 s.queued,
@@ -666,6 +688,9 @@ impl TelemetryRecorder {
                 s.total_mem_gb,
                 s.gangs_placed,
                 s.cross_rack_gangs,
+                s.preemptions,
+                s.servers_failed,
+                s.servers_restored,
             ));
             if self.cfg.timing {
                 out.push_str(&format!(",{}", s.wall_ms));
@@ -778,6 +803,9 @@ mod tests {
             total_mem_gb: 1000.0,
             gangs_placed: 3,
             cross_rack_gangs: 1 + round as u32 % 2,
+            preemptions: round as u32 % 3,
+            servers_failed: u32::from(round % 4 == 1),
+            servers_restored: u32::from(round % 4 == 2),
             wall_ms: 7 * round as i64,
             pools: vec![
                 PoolCounters {

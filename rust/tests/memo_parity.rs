@@ -29,7 +29,7 @@
 
 use synergy::cluster::{GpuGen, ServerSpec, TopologySpec, TypeSpec};
 use synergy::job::Job;
-use synergy::sim::{SimConfig, SimResult, Simulator};
+use synergy::sim::{FaultSpec, SimConfig, SimResult, Simulator};
 use synergy::trace::{Split, TraceConfig};
 use synergy::workload::{SyntheticSource, TenantSpec, WorkloadSource};
 
@@ -286,6 +286,78 @@ fn planning_tiers_stay_bit_identical_under_sharding() {
                          must not depend on the fan-out width"
                     );
                 }
+            }
+        }
+    }
+}
+
+#[test]
+fn planning_tiers_stay_bit_identical_under_host_churn() {
+    // ISSUE 9 cell: a host failure preempts running jobs back into the
+    // queue, bumps the fleet epoch (invalidating the memo), and drops
+    // the resume checkpoint; a restore grows the fleet again. All of
+    // that happens *between* rounds, so each tier still sees the same
+    // runnable sequence over the same surviving fleet — the three tiers
+    // must stay bit-identical, churn counters included.
+    let (jobs, spec) = loaded_trace(28, 41);
+    for policy in ["fifo", "srtf"] {
+        for types in [None, Some(tritype())] {
+            let fleet_tag = if types.is_some() { "tritype" } else { "homo" };
+            let cfg = |tier: &Tier| SimConfig {
+                n_servers: 2,
+                policy: policy.into(),
+                mechanism: "tune".into(),
+                types: types.clone(),
+                faults: Some(
+                    FaultSpec::parse("mtbf:8,mttr:2,seed:13").unwrap(),
+                ),
+                force_replan: matches!(tier, Tier::Forced),
+                no_resume: matches!(tier, Tier::Memoized),
+                ..Default::default()
+            };
+            let run = |tier: Tier| {
+                Simulator::with_quotas(cfg(&tier), Some(spec.quotas()))
+                    .run(jobs.clone())
+            };
+            let forced = run(Tier::Forced);
+            let memo = run(Tier::Memoized);
+            let resumed = run(Tier::Resumed);
+            let tag = format!("{policy}/{fleet_tag}/churn");
+            assert_eq!(
+                forced.finished.len(),
+                jobs.len(),
+                "{tag}: no job may be lost to churn"
+            );
+            assert!(
+                forced.servers_failed > 0,
+                "{tag}: the fault generator must actually fire"
+            );
+            assert_eq!(
+                schedule_bits(&memo),
+                schedule_bits(&forced),
+                "{tag}: memoized schedule diverges under churn"
+            );
+            assert_eq!(
+                schedule_bits(&resumed),
+                schedule_bits(&forced),
+                "{tag}: resumed schedule diverges under churn"
+            );
+            for (arm, r) in [("memo", &memo), ("resumed", &resumed)] {
+                assert_eq!(
+                    (
+                        r.preemptions,
+                        r.preempted_gpu_rounds_lost,
+                        r.servers_failed,
+                        r.servers_restored,
+                    ),
+                    (
+                        forced.preemptions,
+                        forced.preempted_gpu_rounds_lost,
+                        forced.servers_failed,
+                        forced.servers_restored,
+                    ),
+                    "{tag}/{arm}: churn counters diverge from forced"
+                );
             }
         }
     }

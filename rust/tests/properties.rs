@@ -27,7 +27,7 @@ use synergy::mechanism::{
 };
 use synergy::profiler::{OptimisticProfiler, Sensitivity};
 use synergy::prop_assert;
-use synergy::sim::{SimConfig, Simulator};
+use synergy::sim::{FaultSpec, SimConfig, Simulator};
 use synergy::trace::{generate, Split, TraceConfig};
 use synergy::util::prop::{check, Gen};
 
@@ -819,6 +819,148 @@ fn prop_flat_and_blind_topologies_allocate_identically() {
                     "{name}/{tag}: {id:?} demand diverges"
                 );
             }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Fault-injection invariants (ISSUE 9): no job is ever lost to churn —
+// every admitted job finishes, with completed work preserved across
+// preempt-and-requeue — an empty fault schedule is bit-identical to a
+// config that never mentions faults, and fleet bookkeeping stays
+// consistent through arbitrary fail/restore sequences.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_no_job_lost_under_churn() {
+    check("no job lost under churn", 6, |g| {
+        use synergy::hetero::{
+            GpuGen, HeteroSimConfig, HeteroSimulator, TypeSpec,
+        };
+        let trace = generate(&TraceConfig {
+            n_jobs: g.int(10, 24),
+            split: Split::new(30, 50, 20),
+            multi_gpu: g.bool(),
+            jobs_per_hour: Some(g.f64(2.0, 8.0)),
+            seed: g.int(0, 10_000) as u64,
+        });
+        let spec = format!(
+            "mtbf:{},mttr:{},seed:{}",
+            g.int(4, 24),
+            g.int(1, 4),
+            g.int(0, 1000)
+        );
+        let faults = FaultSpec::parse(&spec)?;
+        let policy = g.choose(&["fifo", "srtf", "las"]);
+        let homo = Simulator::new(SimConfig {
+            n_servers: 2,
+            policy: policy.to_string(),
+            mechanism: "tune".into(),
+            faults: Some(faults.clone()),
+            ..Default::default()
+        })
+        .run(trace.clone());
+        prop_assert!(
+            homo.finished.len() == trace.len(),
+            "{policy}/homo/{spec}: {} of {} jobs finished",
+            homo.finished.len(),
+            trace.len()
+        );
+        let tri = HeteroSimulator::new(HeteroSimConfig {
+            types: vec![
+                TypeSpec {
+                    gen: GpuGen::K80,
+                    spec: Default::default(),
+                    machines: 1,
+                },
+                TypeSpec {
+                    gen: GpuGen::P100,
+                    spec: Default::default(),
+                    machines: 1,
+                },
+                TypeSpec {
+                    gen: GpuGen::V100,
+                    spec: Default::default(),
+                    machines: 2,
+                },
+            ],
+            policy: policy.to_string(),
+            mechanism: "het-tune".into(),
+            faults: Some(faults),
+            ..Default::default()
+        })
+        .run(trace.clone());
+        prop_assert!(
+            tri.jcts.len() == trace.len(),
+            "{policy}/tritype/{spec}: {} of {} jobs finished",
+            tri.jcts.len(),
+            trace.len()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_empty_fault_spec_is_bit_identical_to_none() {
+    check("empty fault spec ≡ none", 5, |g| {
+        let trace = generate(&TraceConfig {
+            n_jobs: g.int(5, 30),
+            split: Split::new(30, 50, 20),
+            multi_gpu: g.bool(),
+            jobs_per_hour: if g.bool() { Some(g.f64(2.0, 10.0)) } else { None },
+            seed: g.int(0, 10_000) as u64,
+        });
+        let policy = g.choose(&["fifo", "srtf"]);
+        let run = |faults: Option<FaultSpec>| {
+            Simulator::new(SimConfig {
+                n_servers: 2,
+                policy: policy.to_string(),
+                mechanism: "tune".into(),
+                faults,
+                ..Default::default()
+            })
+            .run(trace.clone())
+        };
+        let base = run(None);
+        let empty = run(Some(FaultSpec::Script(vec![])));
+        let bits = |r: &synergy::sim::SimResult| -> Vec<(u64, u64)> {
+            r.finished.iter().map(|f| (f.id.0, f.jct_s.to_bits())).collect()
+        };
+        prop_assert!(
+            bits(&base) == bits(&empty)
+                && base.rounds == empty.rounds
+                && base.planned_rounds == empty.planned_rounds
+                && empty.preemptions == 0
+                && empty.servers_failed == 0,
+            "an empty fault schedule must be bit-identical to no spec"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fleet_consistent_under_arbitrary_churn() {
+    let spec = ServerSpec::default();
+    let profiler = OptimisticProfiler::noiseless(spec);
+    check("fleet consistency under churn", 20, |g| {
+        let (jobs, sens) = random_jobs(g, &profiler);
+        let requests = to_requests(&jobs, &sens);
+        let mech =
+            by_name(&g.choose(&["proportional", "greedy", "tune"])).unwrap();
+        let mut fleet = Fleet::homogeneous(spec, g.int(2, 6));
+        let _ = mech.allocate(&mut fleet, &requests);
+        for _ in 0..g.int(1, 12) {
+            if g.bool() {
+                let _ = fleet.fail_server(0);
+            } else {
+                let _ = fleet.add_server(0);
+            }
+            fleet
+                .check_consistency()
+                .map_err(|e| format!("after churn: {e}"))?;
+            let u = fleet.gpu_utilization();
+            prop_assert!(u.is_finite(), "utilization must stay finite: {u}");
         }
         Ok(())
     });

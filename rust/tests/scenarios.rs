@@ -165,7 +165,7 @@ fn run_scenario(s: &Scenario) -> String {
             s.quotas.clone(),
         );
         let r = sim.run(s.jobs.clone());
-        metrics_json(&r.jct_stats(), &r.tenant_stats(), r.makespan_s, r.rounds, None)
+        metrics_json(&r.jct_stats(), &r.tenant_stats(), r.makespan_s, r.rounds, None, None)
     };
     match s.fleet {
         FleetShape::Homo => {
@@ -179,7 +179,7 @@ fn run_scenario(s: &Scenario) -> String {
                 s.quotas.clone(),
             );
             let r = sim.run(s.jobs.clone());
-            r.metrics_json(false)
+            r.metrics_json(false, false)
         }
         FleetShape::TwoTier => mixed(vec![
             TypeSpec {
@@ -277,7 +277,7 @@ fn run_topology_cell(topology: TopologySpec) -> String {
         ..Default::default()
     });
     let r = sim.run(gang_jobs());
-    r.metrics_json(false)
+    r.metrics_json(false, false)
 }
 
 #[test]
@@ -325,7 +325,7 @@ fn google_cell_is_deterministic_and_matches_golden() {
             mechanism: "tune".into(),
             ..Default::default()
         });
-        sim.run(jobs).metrics_json(false)
+        sim.run(jobs).metrics_json(false, false)
     };
     let a = run();
     let b = run();
@@ -345,13 +345,87 @@ fn flat_topology_cell_matches_default_byte_for_byte() {
             mechanism: "tune".into(),
             ..Default::default()
         });
-        sim.run(gang_jobs()).metrics_json(false)
+        sim.run(gang_jobs()).metrics_json(false, false)
     };
     assert_eq!(
         run_topology_cell(TopologySpec::flat()),
         default_run,
         "explicit flat topology must not perturb a single byte"
     );
+}
+
+// ---------------------------------------------------------------------------
+// ISSUE 9 fault-injection cells — NEW golden names; every cell above is
+// untouched: a `None` fault spec never enters the churn code path, so
+// fault-free runs stay byte-identical to pre-fault builds.
+// ---------------------------------------------------------------------------
+
+fn fault_spec(s: &str) -> synergy::sim::FaultSpec {
+    synergy::sim::FaultSpec::parse(s).unwrap()
+}
+
+/// Homogeneous gang cell under seeded churn; fault payloads pin the
+/// churn counters too (`fault_stats` on), so a regression in preemption
+/// accounting moves the golden even when the schedule itself survives.
+fn run_fault_cell_homo(topology: TopologySpec, spec: &str) -> String {
+    let sim = Simulator::new(SimConfig {
+        n_servers: 4,
+        policy: "srtf".into(),
+        mechanism: "tune".into(),
+        topology,
+        faults: Some(fault_spec(spec)),
+        ..Default::default()
+    });
+    let r = sim.run(gang_jobs());
+    assert_eq!(r.finished.len(), 24, "no job may be lost to churn");
+    r.metrics_json(false, true)
+}
+
+fn run_fault_cell_tritype(spec: &str) -> String {
+    let sim = HeteroSimulator::new(HeteroSimConfig {
+        types: vec![
+            TypeSpec {
+                gen: GpuGen::K80,
+                spec: Default::default(),
+                machines: 1,
+            },
+            TypeSpec {
+                gen: GpuGen::P100,
+                spec: Default::default(),
+                machines: 1,
+            },
+            TypeSpec {
+                gen: GpuGen::V100,
+                spec: Default::default(),
+                machines: 2,
+            },
+        ],
+        policy: "srtf".into(),
+        mechanism: "het-tune".into(),
+        faults: Some(fault_spec(spec)),
+        ..Default::default()
+    });
+    let r = sim.run(gang_jobs());
+    assert_eq!(r.finished.len(), 24, "no job may be lost to churn");
+    r.metrics_json(false, true)
+}
+
+#[test]
+fn fault_cells_are_deterministic_and_match_goldens() {
+    let homo_flat =
+        || run_fault_cell_homo(TopologySpec::flat(), "mtbf:12,mttr:2,seed:9");
+    let homo_racked = || {
+        run_fault_cell_homo(TopologySpec::racks(2), "mtbf:12,mttr:2,seed:9")
+    };
+    let tritype = || run_fault_cell_tritype("mtbf:8,mttr:3,seed:4");
+    for (name, a, b) in [
+        ("synthetic_faults_homo", homo_flat(), homo_flat()),
+        ("synthetic_faults_racks2_homo", homo_racked(), homo_racked()),
+        ("synthetic_faults_tritype", tritype(), tritype()),
+    ] {
+        assert_eq!(a, b, "fault cell '{name}' not deterministic");
+        check_golden(name, &a);
+    }
 }
 
 #[test]

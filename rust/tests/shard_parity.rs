@@ -12,7 +12,7 @@
 
 use synergy::cluster::{GpuGen, ServerSpec, TypeSpec};
 use synergy::job::Job;
-use synergy::sim::{SimConfig, SimResult, Simulator};
+use synergy::sim::{FaultSpec, SimConfig, SimResult, Simulator};
 use synergy::telemetry::{TelemetryConfig, TelemetryRecorder};
 use synergy::trace::{Split, TraceConfig};
 use synergy::workload::{SyntheticSource, TenantSpec, WorkloadSource};
@@ -81,7 +81,7 @@ fn run_recorded(
     let mut rec = TelemetryRecorder::new(TelemetryConfig::default());
     let r = Simulator::with_quotas(cfg, Some(spec.quotas()))
         .run_with_telemetry(jobs.to_vec(), Some(&mut rec));
-    let metrics = r.metrics_json(true);
+    let metrics = r.metrics_json(true, false);
     (r, metrics, rec.to_jsonl())
 }
 
@@ -113,6 +113,57 @@ fn sharded_planning_is_byte_identical_to_serial() {
                 "{policy}/shards={shards}: telemetry profile diverges"
             );
         }
+    }
+}
+
+#[test]
+fn faulted_runs_are_byte_identical_across_shard_widths() {
+    // ISSUE 9: churn events drain at round boundaries, before the plan
+    // runs, so the surviving-fleet snapshot a sharded plan fans out over
+    // is the same one the serial plan folds over. Fault counters ride
+    // the golden payload here via `metrics_json(_, true)`.
+    let (jobs, spec) = loaded_trace(30, 17);
+    let run = |shards: usize| {
+        let cfg = SimConfig {
+            n_servers: 2,
+            policy: "srtf".into(),
+            mechanism: "tune".into(),
+            types: Some(tritype()),
+            shards,
+            faults: Some(FaultSpec::parse("mtbf:10,mttr:2,seed:11").unwrap()),
+            ..Default::default()
+        };
+        let mut rec = TelemetryRecorder::new(TelemetryConfig::default());
+        let r = Simulator::with_quotas(cfg, Some(spec.quotas()))
+            .run_with_telemetry(jobs.to_vec(), Some(&mut rec));
+        let metrics = r.metrics_json(true, true);
+        (r, metrics, rec.to_jsonl())
+    };
+    let (serial, serial_metrics, serial_profile) = run(1);
+    assert_eq!(
+        serial.finished.len(),
+        jobs.len(),
+        "faulted baseline must still drain the trace (no job lost)"
+    );
+    assert!(
+        serial.servers_failed > 0,
+        "fault generator must actually exercise churn in this window"
+    );
+    for shards in [2, 4] {
+        let (sharded, metrics, profile) = run(shards);
+        assert_eq!(
+            schedule_bits(&sharded),
+            schedule_bits(&serial),
+            "shards={shards}: faulted schedule bits diverge"
+        );
+        assert_eq!(
+            metrics, serial_metrics,
+            "shards={shards}: faulted metrics payload (incl. churn counters) diverges"
+        );
+        assert_eq!(
+            profile, serial_profile,
+            "shards={shards}: faulted telemetry profile diverges"
+        );
     }
 }
 

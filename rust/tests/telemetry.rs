@@ -123,8 +123,8 @@ fn recorder_changes_zero_scheduled_bytes() {
             "{policy}/{mechanism}: telemetry perturbed the schedule"
         );
         assert_eq!(
-            plain.metrics_json(true),
-            recorded.metrics_json(true),
+            plain.metrics_json(true, false),
+            recorded.metrics_json(true, false),
             "{policy}/{mechanism}: golden metrics payload changed"
         );
         assert!(rec.n_rounds() > 0, "{policy}/{mechanism}: empty recording");
@@ -207,6 +207,45 @@ fn recording_reconciles_with_the_run() {
     assert!(jsonl.starts_with("{\"counters_only\":true"));
     assert!(!jsonl.contains("wall_ms"));
     assert!(!rec.to_csv().contains("wall_ms"));
+}
+
+#[test]
+fn fault_counters_ride_the_round_rows() {
+    // ISSUE 9: churn telemetry. The per-round `preemptions` /
+    // `servers_failed` / `servers_restored` tallies are instantaneous,
+    // and every churn event drains at the top of some executed round —
+    // so the row sums must reconcile exactly with the run totals.
+    let (jobs, _) = tenant_trace(60, 3);
+    let cfg = SimConfig {
+        n_servers: 2,
+        policy: "fifo".into(),
+        mechanism: "tune".into(),
+        faults: Some(
+            synergy::sim::FaultSpec::parse("mtbf:6,mttr:2,seed:5").unwrap(),
+        ),
+        ..Default::default()
+    };
+    let mut rec = TelemetryRecorder::new(TelemetryConfig::default());
+    let r = Simulator::new(cfg).run_with_telemetry(jobs, Some(&mut rec));
+    let rounds = rec.rounds();
+    let failed: u64 = rounds.iter().map(|s| u64::from(s.servers_failed)).sum();
+    let restored: u64 =
+        rounds.iter().map(|s| u64::from(s.servers_restored)).sum();
+    let preempted: u64 =
+        rounds.iter().map(|s| u64::from(s.preemptions)).sum();
+    assert_eq!(failed, r.servers_failed, "row sums must match run totals");
+    assert_eq!(restored, r.servers_restored);
+    assert_eq!(preempted, r.preemptions);
+    assert!(failed > 0, "a 6h MTBF over weeks of sim time must fire");
+
+    // Both exports carry the three new columns/keys.
+    let header = rec.to_csv().lines().next().unwrap_or("").to_string();
+    assert!(
+        header
+            .contains("cross_rack_gangs,preemptions,servers_failed,servers_restored"),
+        "CSV round header missing churn columns: {header}"
+    );
+    assert!(rec.to_jsonl().contains("\"servers_failed\""));
 }
 
 // ------------------------------------------------------------- CLI layer
