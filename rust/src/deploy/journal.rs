@@ -1,0 +1,597 @@
+//! Write-ahead journal for the live leader.
+//!
+//! Append-only JSONL records across fsync'd segment files
+//! (`wal-NNNNNN.jsonl`). The leader journals every admitted submission
+//! *before* acknowledging it, every worker-churn event before acting on
+//! it, a fold checkpoint at every round boundary, and every completion
+//! it folds into the report. A killed-and-restarted leader replays the
+//! journal through the same deterministic round loop and lands in a
+//! state byte-identical to the unkilled run.
+//!
+//! Durability contract: [`JournalWriter::append`] returns only after
+//! the record bytes are fsync'd (`util::fsx::append_durable`); the
+//! first append to a fresh segment also fsyncs the journal directory so
+//! the segment's directory entry survives a crash.
+//!
+//! Codec contract: every `f64` rides the wire as its IEEE-754 bit
+//! pattern in 16 lower-hex digits (`f64::to_bits`), so NaN payloads,
+//! signed zeros, and subnormals round-trip bitwise — the recovered
+//! leader folds *exactly* the numbers the original leader folded.
+//!
+//! Recovery contract: a truncated or corrupt tail record (the crash
+//! landed mid-`write`) is dropped whole, never half-applied, and
+//! nothing after it is read. [`decode_prefix`] is the single arbiter of
+//! "well-formed prefix" for both recovery and append-reopen (which
+//! physically truncates the torn tail before appending).
+
+use crate::util::fsx;
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Journal schema version; bumped on any incompatible record change.
+pub const JOURNAL_VERSION: u32 = 1;
+
+/// Records per segment before rotating to a fresh file.
+const RECORDS_PER_SEGMENT: usize = 256;
+
+/// One journal record. Field order in the encoding is alphabetical
+/// (BTreeMap-backed [`Json`]), so encodings are canonical.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Record {
+    /// First record of every journal: schema version plus a canonical
+    /// signature of the leader configuration. Recovery refuses a
+    /// journal whose signature differs from the restarted leader's —
+    /// replaying submissions under a different policy would silently
+    /// produce a different (valid-looking) schedule.
+    Meta { version: u32, sig: String },
+    /// An admitted submission, in admission order. `arrival_bits` /
+    /// `duration_bits` are `f64::to_bits` of sim-time seconds. `tname`
+    /// is the client-visible tenant name backing dense id `tenant`, so
+    /// recovery rebuilds the name→id map and post-recovery resubmits
+    /// stay idempotent.
+    Submit {
+        id: u64,
+        tenant: u32,
+        tname: String,
+        model: String,
+        gpus: u32,
+        arrival_bits: u64,
+        duration_bits: u64,
+    },
+    /// Worker churn the leader observed and injected (`fail` = lease
+    /// expiry or disconnect, `!fail` = rejoin). `slot` is the server
+    /// id; `at_bits` is the sim time of injection.
+    Churn { fail: bool, slot: usize, at_bits: u64 },
+    /// Round-boundary fold checkpoint: after round `round` the sim
+    /// clock was `at_bits`, `finished` jobs had completed, and the
+    /// FNV-1a hash of the completion log was `hash`. Replay validates
+    /// each checkpoint it crosses.
+    Ckpt { round: u64, at_bits: u64, finished: u64, hash: u64 },
+    /// A completion folded into the final report.
+    Done { id: u64, jct_bits: u64, finish_bits: u64 },
+}
+
+fn hex64(v: u64) -> Json {
+    Json::str(format!("{v:016x}"))
+}
+
+fn parse_hex64(j: &Json, key: &str) -> Result<u64, String> {
+    let s = j.get(key).as_str().ok_or_else(|| format!("missing {key}"))?;
+    if s.len() != 16 {
+        return Err(format!("{key}: want 16 hex digits, got {s:?}"));
+    }
+    u64::from_str_radix(s, 16).map_err(|e| format!("{key}: {e}"))
+}
+
+impl Record {
+    /// Canonical single-line JSON encoding (no trailing newline).
+    pub fn encode(&self) -> String {
+        let j = match self {
+            Record::Meta { version, sig } => Json::obj(vec![
+                ("t", Json::str("meta")),
+                ("v", Json::num(*version as f64)),
+                ("sig", Json::str(sig.clone())),
+            ]),
+            Record::Submit {
+                id,
+                tenant,
+                tname,
+                model,
+                gpus,
+                arrival_bits,
+                duration_bits,
+            } => Json::obj(vec![
+                ("t", Json::str("submit")),
+                ("id", Json::num(*id as f64)),
+                ("tenant", Json::num(*tenant as f64)),
+                ("tname", Json::str(tname.clone())),
+                ("model", Json::str(model.clone())),
+                ("gpus", Json::num(*gpus as f64)),
+                ("arrival", hex64(*arrival_bits)),
+                ("duration", hex64(*duration_bits)),
+            ]),
+            Record::Churn { fail, slot, at_bits } => Json::obj(vec![
+                ("t", Json::str("churn")),
+                ("fail", Json::Bool(*fail)),
+                ("slot", Json::num(*slot as f64)),
+                ("at", hex64(*at_bits)),
+            ]),
+            Record::Ckpt { round, at_bits, finished, hash } => Json::obj(vec![
+                ("t", Json::str("ckpt")),
+                ("round", Json::num(*round as f64)),
+                ("at", hex64(*at_bits)),
+                ("finished", Json::num(*finished as f64)),
+                ("hash", hex64(*hash)),
+            ]),
+            Record::Done { id, jct_bits, finish_bits } => Json::obj(vec![
+                ("t", Json::str("done")),
+                ("id", Json::num(*id as f64)),
+                ("jct", hex64(*jct_bits)),
+                ("finish", hex64(*finish_bits)),
+            ]),
+        };
+        j.encode()
+    }
+
+    pub fn decode(line: &str) -> Result<Record, String> {
+        let j = Json::parse(line).map_err(|e| e.to_string())?;
+        let ty = j.get("t").as_str().ok_or("missing t")?;
+        let num =
+            |k: &str| j.get(k).as_f64().ok_or_else(|| format!("missing {k}"));
+        Ok(match ty {
+            "meta" => Record::Meta {
+                version: num("v")? as u32,
+                sig: j
+                    .get("sig")
+                    .as_str()
+                    .ok_or("missing sig")?
+                    .to_string(),
+            },
+            "submit" => Record::Submit {
+                id: num("id")? as u64,
+                tenant: num("tenant")? as u32,
+                tname: j
+                    .get("tname")
+                    .as_str()
+                    .ok_or("missing tname")?
+                    .to_string(),
+                model: j
+                    .get("model")
+                    .as_str()
+                    .ok_or("missing model")?
+                    .to_string(),
+                gpus: num("gpus")? as u32,
+                arrival_bits: parse_hex64(&j, "arrival")?,
+                duration_bits: parse_hex64(&j, "duration")?,
+            },
+            "churn" => Record::Churn {
+                fail: j.get("fail").as_bool().ok_or("missing fail")?,
+                slot: num("slot")? as usize,
+                at_bits: parse_hex64(&j, "at")?,
+            },
+            "ckpt" => Record::Ckpt {
+                round: num("round")? as u64,
+                at_bits: parse_hex64(&j, "at")?,
+                finished: num("finished")? as u64,
+                hash: parse_hex64(&j, "hash")?,
+            },
+            "done" => Record::Done {
+                id: num("id")? as u64,
+                jct_bits: parse_hex64(&j, "jct")?,
+                finish_bits: parse_hex64(&j, "finish")?,
+            },
+            other => return Err(format!("unknown record type {other:?}")),
+        })
+    }
+}
+
+/// FNV-1a 64-bit — checkpoint hash over the completion log.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Decode the longest well-formed prefix of `bytes`: complete,
+/// newline-terminated, decodable records. Returns the records and the
+/// byte length of that prefix. The first truncated (no trailing '\n')
+/// or undecodable record ends the prefix — it is dropped whole, never
+/// half-applied, and nothing after it is read.
+pub fn decode_prefix(bytes: &[u8]) -> (Vec<Record>, usize) {
+    let mut records = Vec::new();
+    let mut consumed = 0usize;
+    let mut pos = 0usize;
+    while pos < bytes.len() {
+        let Some(nl) = bytes[pos..].iter().position(|&b| b == b'\n') else {
+            break; // torn tail: crash landed mid-write
+        };
+        let line = &bytes[pos..pos + nl];
+        let Ok(text) = std::str::from_utf8(line) else { break };
+        let Ok(rec) = Record::decode(text) else { break };
+        records.push(rec);
+        pos += nl + 1;
+        consumed = pos;
+    }
+    (records, consumed)
+}
+
+fn segment_name(index: usize) -> String {
+    format!("wal-{index:06}.jsonl")
+}
+
+fn segment_paths(dir: &Path) -> Result<Vec<PathBuf>, String> {
+    let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)
+        .map_err(|e| format!("cannot read {}: {}", dir.display(), e))?
+        .filter_map(|ent| ent.ok().map(|e| e.path()))
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .map(|n| n.starts_with("wal-") && n.ends_with(".jsonl"))
+                .unwrap_or(false)
+        })
+        .collect();
+    paths.sort(); // zero-padded indices sort lexicographically
+    Ok(paths)
+}
+
+/// Read every well-formed record in `dir`, in write order. Stops at the
+/// first torn or corrupt record (and ignores any later segment — writes
+/// are sequential, so nothing after a torn record was acknowledged).
+pub fn read_journal(dir: &Path) -> Result<Vec<Record>, String> {
+    let mut records = Vec::new();
+    for path in segment_paths(dir)? {
+        let bytes = std::fs::read(&path)
+            .map_err(|e| format!("cannot read {}: {}", path.display(), e))?;
+        let (mut recs, consumed) = decode_prefix(&bytes);
+        let torn = consumed < bytes.len();
+        records.append(&mut recs);
+        if torn {
+            break;
+        }
+    }
+    Ok(records)
+}
+
+/// Appending side of the journal. One live segment at a time; rotation
+/// after [`RECORDS_PER_SEGMENT`] records.
+pub struct JournalWriter {
+    dir: PathBuf,
+    seg: usize,
+    in_seg: usize,
+    per_seg: usize,
+}
+
+impl JournalWriter {
+    /// Start a fresh journal in `dir`, removing any stale segments from
+    /// an earlier run (a fresh `--journal` run must not interleave with
+    /// a dead one's records — recovery uses `recover`).
+    pub fn create(dir: &Path) -> Result<JournalWriter, String> {
+        fsx::ensure_dir(dir)?;
+        for old in segment_paths(dir)? {
+            std::fs::remove_file(&old).map_err(|e| {
+                format!("cannot remove {}: {}", old.display(), e)
+            })?;
+        }
+        fsx::sync_dir(dir)?;
+        Ok(JournalWriter {
+            dir: dir.to_path_buf(),
+            seg: 0,
+            in_seg: 0,
+            per_seg: RECORDS_PER_SEGMENT,
+        })
+    }
+
+    /// Reopen `dir` for appending after a crash: read the well-formed
+    /// record prefix, physically truncate the torn tail (so new records
+    /// never follow a partial line), and position the writer at the
+    /// end. Returns the writer plus the recovered records.
+    pub fn recover(
+        dir: &Path,
+    ) -> Result<(JournalWriter, Vec<Record>), String> {
+        let paths = segment_paths(dir)?;
+        if paths.is_empty() {
+            return Err(format!(
+                "no journal segments in {} (nothing to recover)",
+                dir.display()
+            ));
+        }
+        let mut records = Vec::new();
+        let mut seg = 0usize;
+        let mut in_seg = 0usize;
+        for (i, path) in paths.iter().enumerate() {
+            let bytes = std::fs::read(path).map_err(|e| {
+                format!("cannot read {}: {}", path.display(), e)
+            })?;
+            let (mut recs, consumed) = decode_prefix(&bytes);
+            let torn = consumed < bytes.len();
+            if torn {
+                let f = std::fs::OpenOptions::new()
+                    .write(true)
+                    .open(path)
+                    .map_err(|e| {
+                        format!("cannot open {}: {}", path.display(), e)
+                    })?;
+                f.set_len(consumed as u64).map_err(|e| {
+                    format!("cannot truncate {}: {}", path.display(), e)
+                })?;
+                f.sync_data().map_err(|e| {
+                    format!("cannot fsync {}: {}", path.display(), e)
+                })?;
+            }
+            seg = i;
+            in_seg = recs.len();
+            records.append(&mut recs);
+            if torn {
+                // Later segments (if any) follow unacknowledged bytes;
+                // remove them so appends continue here.
+                for later in &paths[i + 1..] {
+                    std::fs::remove_file(later).map_err(|e| {
+                        format!("cannot remove {}: {}", later.display(), e)
+                    })?;
+                }
+                break;
+            }
+        }
+        fsx::sync_dir(dir)?;
+        let mut w = JournalWriter {
+            dir: dir.to_path_buf(),
+            seg,
+            in_seg,
+            per_seg: RECORDS_PER_SEGMENT,
+        };
+        if w.in_seg >= w.per_seg {
+            w.seg += 1;
+            w.in_seg = 0;
+        }
+        Ok((w, records))
+    }
+
+    #[cfg(test)]
+    fn with_segment_len(mut self, per_seg: usize) -> JournalWriter {
+        self.per_seg = per_seg.max(1);
+        self
+    }
+
+    /// Durably append one record: bytes are fsync'd before returning,
+    /// and the first record of a fresh segment also fsyncs the
+    /// directory. Once this returns `Ok`, the record survives a crash.
+    pub fn append(&mut self, rec: &Record) -> Result<(), String> {
+        let mut line = rec.encode();
+        line.push('\n');
+        let path = self.dir.join(segment_name(self.seg));
+        let fresh_segment = self.in_seg == 0;
+        fsx::append_durable(&path, line.as_bytes())?;
+        if fresh_segment {
+            fsx::sync_dir(&self.dir)?;
+        }
+        self.in_seg += 1;
+        if self.in_seg >= self.per_seg {
+            self.seg += 1;
+            self.in_seg = 0;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn scratch(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "synergy-journal-{}-{}",
+            std::process::id(),
+            name
+        ))
+    }
+
+    fn sample_records() -> Vec<Record> {
+        vec![
+            Record::Meta { version: JOURNAL_VERSION, sig: "srtf/tune".into() },
+            Record::Submit {
+                id: 7,
+                tenant: 1,
+                tname: "team-a".into(),
+                model: "resnet18".into(),
+                gpus: 4,
+                arrival_bits: 0.0f64.to_bits(),
+                duration_bits: 3600.5f64.to_bits(),
+            },
+            Record::Churn { fail: true, slot: 1, at_bits: 120.25f64.to_bits() },
+            Record::Churn { fail: false, slot: 1, at_bits: 300.0f64.to_bits() },
+            Record::Ckpt {
+                round: 3,
+                at_bits: 900.0f64.to_bits(),
+                finished: 2,
+                hash: fnv1a(b"log"),
+            },
+            Record::Done {
+                id: 7,
+                jct_bits: 1234.5f64.to_bits(),
+                finish_bits: 1234.5f64.to_bits(),
+            },
+        ]
+    }
+
+    #[test]
+    fn records_roundtrip_bitwise() {
+        for rec in sample_records() {
+            let enc = rec.encode();
+            assert_eq!(Record::decode(&enc).unwrap(), rec, "{enc}");
+        }
+        // Bit patterns JSON numbers cannot carry must survive: NaN
+        // payloads, infinities, negative zero.
+        for weird in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -0.0, 5e-324]
+        {
+            let rec = Record::Done {
+                id: 1,
+                jct_bits: weird.to_bits(),
+                finish_bits: (-weird).to_bits(),
+            };
+            let back = Record::decode(&rec.encode()).unwrap();
+            assert_eq!(back, rec, "f64 bits must round-trip for {weird}");
+        }
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(Record::decode("{}").is_err());
+        assert!(Record::decode("not json").is_err());
+        assert!(Record::decode(r#"{"t": "warp"}"#).is_err());
+        assert!(Record::decode(r#"{"t": "submit"}"#).is_err());
+        // Hex fields must be exactly 16 lower-hex digits.
+        assert!(Record::decode(
+            r#"{"t": "done", "id": 1, "jct": "zz", "finish": "00"}"#
+        )
+        .is_err());
+    }
+
+    fn random_record(rng: &mut Pcg64) -> Record {
+        match rng.below(4) {
+            0 => Record::Submit {
+                id: rng.next_u64() >> 20,
+                tenant: rng.below(8) as u32,
+                tname: format!("vc{}", rng.below(8)),
+                model: "lstm".into(),
+                gpus: 1 + rng.below(8) as u32,
+                arrival_bits: rng.next_u64(),
+                duration_bits: rng.next_u64(),
+            },
+            1 => Record::Churn {
+                fail: rng.chance(0.5),
+                slot: rng.below(16) as usize,
+                at_bits: rng.next_u64(),
+            },
+            2 => Record::Ckpt {
+                round: rng.below(1 << 20),
+                at_bits: rng.next_u64(),
+                finished: rng.below(1 << 20),
+                hash: rng.next_u64(),
+            },
+            _ => Record::Done {
+                id: rng.next_u64() >> 20,
+                jct_bits: rng.next_u64(),
+                finish_bits: rng.next_u64(),
+            },
+        }
+    }
+
+    #[test]
+    fn random_records_roundtrip_bitwise() {
+        let mut rng = Pcg64::seeded(0x10aded);
+        for _ in 0..500 {
+            let rec = random_record(&mut rng);
+            let enc = rec.encode();
+            assert_eq!(Record::decode(&enc).unwrap(), rec, "{enc}");
+        }
+    }
+
+    #[test]
+    fn recovery_from_every_prefix_is_well_defined() {
+        // Property: for EVERY byte-prefix of a valid journal,
+        // decode_prefix yields an exact record-prefix — the torn tail
+        // record is dropped whole, never half-applied.
+        let mut rng = Pcg64::seeded(0xf00d);
+        let records: Vec<Record> =
+            (0..40).map(|_| random_record(&mut rng)).collect();
+        let mut bytes = Vec::new();
+        let mut ends = Vec::new(); // byte offset after each record
+        for rec in &records {
+            bytes.extend_from_slice(rec.encode().as_bytes());
+            bytes.push(b'\n');
+            ends.push(bytes.len());
+        }
+        for cut in 0..=bytes.len() {
+            let (recs, consumed) = decode_prefix(&bytes[..cut]);
+            // How many whole records fit in `cut` bytes?
+            let want = ends.iter().filter(|&&e| e <= cut).count();
+            assert_eq!(recs.len(), want, "prefix of {cut} bytes");
+            assert_eq!(consumed, if want == 0 { 0 } else { ends[want - 1] });
+            assert_eq!(&recs[..], &records[..want], "prefix of {cut} bytes");
+        }
+    }
+
+    #[test]
+    fn corrupt_middle_record_ends_the_prefix() {
+        let recs = sample_records();
+        let mut bytes = Vec::new();
+        for rec in &recs[..2] {
+            bytes.extend_from_slice(rec.encode().as_bytes());
+            bytes.push(b'\n');
+        }
+        let good_len = bytes.len();
+        bytes.extend_from_slice(b"{\"t\": \"warp\"}\n");
+        for rec in &recs[2..] {
+            bytes.extend_from_slice(rec.encode().as_bytes());
+            bytes.push(b'\n');
+        }
+        let (out, consumed) = decode_prefix(&bytes);
+        assert_eq!(&out[..], &recs[..2]);
+        assert_eq!(consumed, good_len);
+    }
+
+    #[test]
+    fn writer_rotates_segments_and_reader_reassembles() {
+        let dir = scratch("rotate");
+        let records: Vec<Record> = {
+            let mut rng = Pcg64::seeded(7);
+            (0..11).map(|_| random_record(&mut rng)).collect()
+        };
+        let mut w =
+            JournalWriter::create(&dir).unwrap().with_segment_len(4);
+        for rec in &records {
+            w.append(rec).unwrap();
+        }
+        // 11 records at 4/segment -> 3 segments.
+        assert_eq!(segment_paths(&dir).unwrap().len(), 3);
+        assert_eq!(read_journal(&dir).unwrap(), records);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn recover_truncates_torn_tail_and_appends_cleanly() {
+        let dir = scratch("recover");
+        let records: Vec<Record> = {
+            let mut rng = Pcg64::seeded(9);
+            (0..6).map(|_| random_record(&mut rng)).collect()
+        };
+        let mut w = JournalWriter::create(&dir).unwrap();
+        for rec in &records {
+            w.append(rec).unwrap();
+        }
+        drop(w);
+        // Simulate a crash mid-write: chop bytes off the tail record.
+        let path = dir.join(segment_name(0));
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 7]).unwrap();
+        let (mut w, recovered) = JournalWriter::recover(&dir).unwrap();
+        assert_eq!(&recovered[..], &records[..5], "torn tail dropped whole");
+        // Appends continue from the truncated point, well-formed.
+        let extra = Record::Done {
+            id: 99,
+            jct_bits: 1.0f64.to_bits(),
+            finish_bits: 2.0f64.to_bits(),
+        };
+        w.append(&extra).unwrap();
+        let mut want = records[..5].to_vec();
+        want.push(extra);
+        assert_eq!(read_journal(&dir).unwrap(), want);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn create_wipes_stale_segments() {
+        let dir = scratch("fresh");
+        let mut w = JournalWriter::create(&dir).unwrap();
+        w.append(&sample_records()[0]).unwrap();
+        drop(w);
+        let w2 = JournalWriter::create(&dir).unwrap();
+        drop(w2);
+        assert!(read_journal(&dir).unwrap().is_empty());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,26 +1,58 @@
-//! Leader: the live scheduler process (paper §4.3).
+//! Leader: the live scheduler service (paper §4.3), crash-recoverable.
 //!
-//! Runs the exact same [`RoundPlanner`] as the simulator over a mirror
-//! one-type [`Fleet`] built from worker registrations, and drives
-//! workers with lease grant/renew/terminate messages each round.
-//! Simulated time runs at `time_scale` × real time so a multi-hour
-//! trace deploys in minutes (Table 5 compares deploy vs simulate on the
-//! same trace).
+//! The round loop is the simulator's own event-driven core
+//! ([`run_events_driven`]): the leader is a [`RoundDriver`] over the
+//! same [`crate::sim::FleetModel`] the simulator plans with, so deploy
+//! and simulation share one planning/admission/accounting code path.
+//! Simulated time runs at `time_scale` × real time — the driver's
+//! `advance` hook sleeps each round out on an absolute wall grid — so a
+//! multi-hour trace deploys in minutes (Table 5 compares deploy vs
+//! simulate on the same trace).
+//!
+//! ## Crash recovery
+//!
+//! With `journal_dir` set, the leader write-ahead-journals (see
+//! [`super::journal`]) every admitted submission *before* acknowledging
+//! it, every worker-churn event before injecting it, a fold checkpoint
+//! at every round boundary, and every completion it folds. A killed
+//! leader restarted with `recover` replays the journal through the
+//! very same deterministic round loop — instantly, validating each
+//! checkpoint it crosses — and flips to live pacing where the journal
+//! ends. Because the loop is a pure function of (submissions, churn),
+//! the recovered run's schedule, completion log, and final report are
+//! **byte-identical** to an unkilled run's.
+//!
+//! ## Network plane
+//!
+//! One TCP listener serves three kinds of peer, discriminated by their
+//! first frame: workers (`Register` → leases/terminates, heartbeat
+//! lease enforcement, preempt-and-requeue degradation on loss), job
+//! clients (`Submit`, idempotent by client job id, journaled before
+//! ack), and status clients (`QueryStatus`). Duplicate registrations
+//! beyond the fleet size and conflicting resubmissions get a typed
+//! [`Message::Error`] — never a panic, never a silent double-admit.
 
+use super::journal::{self, JournalWriter, Record, JOURNAL_VERSION};
 use super::proto::{Conn, Message};
-use crate::cluster::{Fleet, GpuGen, ServerSpec, TypeSpec};
-use crate::coordinator::RoundPlanner;
-use crate::job::{Job, JobId, JobState, TenantId};
+use crate::cluster::{GpuGen, ServerSpec, TypeSpec};
+use crate::job::{Job, JobId, ModelKind, TenantId};
 use crate::mechanism::by_name as mechanism_by_name;
 use crate::metrics::{per_tenant_stats, JctStats};
-use crate::perf::PerfModel;
 use crate::policy::by_name as policy_by_name;
-use crate::profiler::{OptimisticProfiler, Sensitivity};
+use crate::sim::{
+    run_events_driven, CoreConfig, DriverEvent, FaultKind, FinishedJob,
+    FleetModel, RoundCtx, RoundDriver, SimConfig,
+};
+use crate::telemetry::{ServiceCounters, TelemetryConfig, TelemetryRecorder};
+use crate::util::fsx;
+use crate::util::json::Json;
 use crate::workload::{ReplaySource, TenantQuotas, WorkloadSource};
 use anyhow::{anyhow, Result};
-use std::collections::{BTreeMap, HashMap};
-use std::net::TcpListener;
-use std::sync::mpsc;
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::net::{TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Leader configuration.
@@ -48,6 +80,29 @@ pub struct LeaderConfig {
     /// Off by default: counter-only profiles stay deterministic in the
     /// round structure (sim-time stamps are nominal round multiples).
     pub telemetry_timing: bool,
+    /// Write-ahead journal directory. `None` = no journal (a crash
+    /// loses the run, like the pre-journal leader).
+    pub journal_dir: Option<String>,
+    /// Warm-start from the journal in `journal_dir` instead of starting
+    /// fresh: replay the journaled run deterministically, validate its
+    /// checkpoints, and resume live where it ended.
+    pub recover: bool,
+    /// Write the deterministic machine-readable final report (JSON)
+    /// here — a pure function of the schedule, byte-comparable across
+    /// a kill/recover and an unkilled control run.
+    pub report_path: Option<String>,
+    /// Hold the round loop until this many total jobs are admitted
+    /// (workload-source jobs + network submissions + journaled
+    /// submissions). 0 = start as soon as the source is drained.
+    pub expect_jobs: usize,
+    /// Worker heartbeat period, real seconds. A worker silent for 3
+    /// periods has its lease expired: it is failed over through the
+    /// same preempt-and-requeue churn path as a disconnect. 0 disables
+    /// heartbeats entirely (pre-heartbeat behaviour).
+    pub heartbeat_s: f64,
+    /// Write the bound address (`IP:PORT\n`) here once listening, so
+    /// subprocess harnesses can find an ephemeral port.
+    pub port_file: Option<String>,
 }
 
 impl Default for LeaderConfig {
@@ -64,6 +119,12 @@ impl Default for LeaderConfig {
             quotas: None,
             telemetry: None,
             telemetry_timing: false,
+            journal_dir: None,
+            recover: false,
+            report_path: None,
+            expect_jobs: 0,
+            heartbeat_s: 0.0,
+            port_file: None,
         }
     }
 }
@@ -71,7 +132,7 @@ impl Default for LeaderConfig {
 /// Outcome of a deploy run.
 #[derive(Debug)]
 pub struct LeaderReport {
-    /// (job id, JCT in simulated seconds).
+    /// (job id, JCT in simulated seconds), in completion order.
     pub jcts: Vec<(u64, f64)>,
     /// Owning tenant of every admitted job.
     pub tenant_of: BTreeMap<u64, TenantId>,
@@ -80,7 +141,19 @@ pub struct LeaderReport {
     /// Total real train steps executed across workers.
     pub total_steps: u64,
     pub rounds: usize,
+    /// Final simulated clock (deterministic — derived from the round
+    /// grid, not from wall time).
     pub makespan_sim_s: f64,
+    /// 1 when this run warm-started from a journal, else 0.
+    pub recoveries: u64,
+    /// Journal records replayed during warm start.
+    pub journal_records_replayed: u64,
+    /// Workers failed over because their heartbeat lease expired.
+    pub heartbeat_expiries: u64,
+    /// Jobs preempted-and-requeued by worker loss (work preserved).
+    pub preemptions: u64,
+    pub servers_failed: u64,
+    pub servers_restored: u64,
 }
 
 impl LeaderReport {
@@ -107,31 +180,92 @@ impl LeaderReport {
     }
 }
 
-/// Absolute-deadline round ticker. Round `k` ends at `k × period` from
-/// the run's start rather than `period` after the round's *work*
-/// finished — the old `sleep(period)`-after-planning accumulated every
-/// round's planning/reconcile cost into the wall grid, so N rounds took
-/// `N × period + Σ work` real seconds and drifted away from the nominal
-/// sim-time stamps telemetry records. Pure arithmetic so the policy is
-/// testable without a wall clock.
-struct RoundTicker {
-    period_s: f64,
-    next_tick_s: f64,
+/// Absolute wall-clock grid for scaled sim time: sim instant `t` has
+/// the fixed wall deadline `start + (t - sim0) / scale`. Sleeping to a
+/// deadline already past returns 0 — overruns are absorbed, the grid is
+/// held, never shifted (the old `sleep(period)`-after-planning loop
+/// accumulated every round's planning cost into the grid and drifted).
+/// Recovery re-anchors the grid at the replay's end, so live rounds
+/// resume on-cadence from the warm-started sim clock. Pure arithmetic
+/// so the policy is testable without a wall clock.
+struct WallGrid {
+    start: Instant,
+    sim0: f64,
+    scale: f64,
 }
 
-impl RoundTicker {
-    fn new(period_s: f64) -> RoundTicker {
-        RoundTicker { period_s, next_tick_s: period_s }
+impl WallGrid {
+    fn new(scale: f64) -> WallGrid {
+        WallGrid { start: Instant::now(), sim0: 0.0, scale }
     }
 
-    /// Seconds to sleep at `elapsed_s` (time since run start) to reach
-    /// the next round boundary, advancing the boundary one period. An
-    /// overrunning round returns 0 — the grid is held, not shifted.
-    fn sleep_s(&mut self, elapsed_s: f64) -> f64 {
-        let s = (self.next_tick_s - elapsed_s).max(0.0);
-        self.next_tick_s += self.period_s;
-        s
+    /// Restart the grid: sim instant `sim_now` maps to "now" on the
+    /// wall, later instants to their scaled offsets from it.
+    fn re_anchor(&mut self, sim_now: f64) {
+        self.start = Instant::now();
+        self.sim0 = sim_now;
     }
+
+    /// Wall deadline (seconds past the anchor) of sim instant `t`.
+    fn deadline_s(&self, t_sim: f64) -> f64 {
+        (t_sim - self.sim0) / self.scale
+    }
+
+    /// Seconds to sleep at `elapsed_s` (wall time since the anchor) to
+    /// reach sim instant `t_sim`'s deadline; 0 when already past it.
+    fn sleep_s(&self, t_sim: f64, elapsed_s: f64) -> f64 {
+        (self.deadline_s(t_sim) - elapsed_s).max(0.0)
+    }
+}
+
+/// Run-progress counters shared with `QueryStatus` client sessions.
+#[derive(Debug, Clone, Copy, Default)]
+struct StatusShared {
+    submitted: u64,
+    finished: u64,
+    rounds: u64,
+    recoveries: u64,
+}
+
+/// A worker connection mid-handshake: `Register` read, ack not sent.
+struct PendingWorker {
+    conn: Conn,
+    gpus: u32,
+    cpus: u32,
+    mem_gb: f64,
+    gen: String,
+}
+
+/// One client submission awaiting admission, with its reply channel.
+/// `Ok(duplicate)` acks; `Err(reason)` becomes a typed `Error` frame.
+struct SubmitReq {
+    job_id: u64,
+    tenant: String,
+    model: String,
+    gpus: u32,
+    arrival_s: f64,
+    duration_s: f64,
+    resp: mpsc::Sender<std::result::Result<bool, String>>,
+}
+
+/// Admission record for idempotent resubmission: what job id N was
+/// admitted *as*. `arrival_bits` is the journaled effective arrival
+/// (clamped to admission time for mid-run submissions).
+#[derive(Debug, Clone, PartialEq)]
+struct SubKey {
+    tenant: u32,
+    model: String,
+    gpus: u32,
+    arrival_bits: u64,
+    duration_bits: u64,
+}
+
+enum Mode {
+    /// Warm start: rounds execute instantly against the journal's
+    /// churn/checkpoint timeline; no leases are sent, nothing is
+    /// journaled. `until` is the journal's sim-time frontier.
+    Replay { until: f64 },
+    Live,
 }
 
 /// The leader process body.
@@ -153,439 +287,1230 @@ impl Leader {
         self.run_stream(Box::new(ReplaySource::from_jobs(jobs)))
     }
 
-    /// Like [`Leader::run`], but arrivals stream from a
-    /// [`WorkloadSource`] instead of an up-front job list: the leader
-    /// pulls the next spec lazily as simulated time passes it, so an
-    /// unbounded or file-backed trace deploys without materialising the
-    /// whole workload. The run ends when the source is exhausted and all
-    /// admitted jobs finished (or at `max_real_s`).
+    /// Like [`Leader::run`], but jobs come from a [`WorkloadSource`]
+    /// plus any network submissions gathered while `expect_jobs` is
+    /// unmet. The run ends when every admitted job finished (or at
+    /// `max_real_s`).
     pub fn run_stream(
         &self,
-        mut source: Box<dyn WorkloadSource>,
+        source: Box<dyn WorkloadSource>,
     ) -> Result<LeaderReport> {
         let listener = TcpListener::bind(&self.cfg.bind)?;
-        *self.addr.lock().unwrap() = Some(listener.local_addr()?);
+        let addr = listener.local_addr()?;
+        *self.addr.lock().unwrap() = Some(addr);
+        if let Some(pf) = &self.cfg.port_file {
+            fsx::write_creating(Path::new(pf), format!("{addr}\n").as_bytes())
+                .map_err(|e| anyhow!("port file: {e}"))?;
+        }
 
-        // --- accept workers -------------------------------------------
-        let mut conns: Vec<Conn> = Vec::new();
-        let mut spec: Option<ServerSpec> = None;
-        let mut fleet_gen: Option<GpuGen> = None;
-        for server_id in 0..self.cfg.n_workers {
-            let (stream, _) = listener.accept()?;
-            let mut conn = Conn::new(stream)?;
-            match conn.recv()? {
-                Some(Message::Register { gpus, cpus, mem_gb, gen }) => {
-                    let s = ServerSpec { gpus, cpus, mem_gb };
-                    let g = GpuGen::by_name(&gen).ok_or_else(|| {
-                        anyhow!("worker registered unknown gen {gen:?}")
-                    })?;
-                    if let Some(prev) = spec {
-                        if prev != s {
+        let status = Arc::new(Mutex::new(StatusShared::default()));
+        let (reg_tx, reg_rx) = mpsc::channel::<PendingWorker>();
+        let (sub_tx, sub_rx) = mpsc::channel::<SubmitReq>();
+        let stop = Arc::new(AtomicBool::new(false));
+        {
+            let listener = listener.try_clone()?;
+            let stop = Arc::clone(&stop);
+            let status = Arc::clone(&status);
+            std::thread::spawn(move || {
+                acceptor(listener, stop, reg_tx, sub_tx, status)
+            });
+        }
+
+        let result = self.serve(source, reg_rx, sub_rx, status);
+        // Unblock the acceptor so its thread exits with the run.
+        stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(addr);
+        result
+    }
+
+    /// Canonical signature of the schedule-determining configuration.
+    /// Recovery refuses a journal written under a different signature —
+    /// replaying submissions under a different policy would silently
+    /// produce a different (valid-looking) schedule.
+    fn config_sig(&self) -> String {
+        format!(
+            "v{} policy={} mechanism={} workers={} round_bits={:016x} \
+             scale_bits={:016x} expect={} quota_tenants={}",
+            JOURNAL_VERSION,
+            self.cfg.policy,
+            self.cfg.mechanism,
+            self.cfg.n_workers,
+            self.cfg.round_real_s.to_bits(),
+            self.cfg.time_scale.to_bits(),
+            self.cfg.expect_jobs,
+            self.cfg.quotas.as_ref().map_or(0, |q| q.len()),
+        )
+    }
+
+    fn serve(
+        &self,
+        mut source: Box<dyn WorkloadSource>,
+        reg_rx: mpsc::Receiver<PendingWorker>,
+        sub_rx: mpsc::Receiver<SubmitReq>,
+        status: Arc<Mutex<StatusShared>>,
+    ) -> Result<LeaderReport> {
+        let run_start = Instant::now();
+
+        // --- journal bootstrap -----------------------------------------
+        let sig = self.config_sig();
+        let (journal, recovered) =
+            match (&self.cfg.journal_dir, self.cfg.recover) {
+                (Some(dir), true) => {
+                    let (w, recs) = JournalWriter::recover(Path::new(dir))
+                        .map_err(|e| anyhow!("journal: {e}"))?;
+                    match recs.first() {
+                        Some(Record::Meta { version, sig: s })
+                            if *version == JOURNAL_VERSION && *s == sig => {}
+                        Some(Record::Meta { version, sig: s }) => {
                             return Err(anyhow!(
-                                "heterogeneous workers unsupported"
-                            ));
+                                "journal/config mismatch: journal v{version} \
+                                 sig {s:?} vs leader v{JOURNAL_VERSION} sig \
+                                 {sig:?}"
+                            ))
+                        }
+                        _ => {
+                            return Err(anyhow!(
+                                "journal has no meta record"
+                            ))
                         }
                     }
-                    // Workers report their generation; the mirror fleet
-                    // is still one-type, so a mixed registration is
-                    // rejected up front rather than silently mis-modeled.
-                    if fleet_gen.is_some_and(|prev| prev != g) {
-                        return Err(anyhow!(
-                            "mixed-generation workers unsupported: \
-                             {gen:?} after {fleet_gen:?}"
-                        ));
-                    }
-                    spec = Some(s);
-                    fleet_gen = Some(g);
-                    conn.send(&Message::RegisterAck { server_id })?;
+                    (Some(w), recs)
                 }
-                other => return Err(anyhow!("expected register, got {other:?}")),
+                (Some(dir), false) => {
+                    let mut w = JournalWriter::create(Path::new(dir))
+                        .map_err(|e| anyhow!("journal: {e}"))?;
+                    w.append(&Record::Meta { version: JOURNAL_VERSION, sig })
+                        .map_err(|e| anyhow!("journal: {e}"))?;
+                    (Some(w), Vec::new())
+                }
+                (None, true) => {
+                    return Err(anyhow!("recover requires a journal dir"))
+                }
+                (None, false) => (None, Vec::new()),
+            };
+
+        // --- registration gate -----------------------------------------
+        let mut pending: Vec<PendingWorker> = Vec::new();
+        let mut spec: Option<ServerSpec> = None;
+        let mut fleet_gen: Option<GpuGen> = None;
+        while pending.len() < self.cfg.n_workers {
+            if run_start.elapsed().as_secs_f64() > self.cfg.max_real_s {
+                return Err(anyhow!(
+                    "timed out waiting for {} workers ({} registered)",
+                    self.cfg.n_workers,
+                    pending.len()
+                ));
             }
-            conns.push(conn);
+            let Ok(mut pw) = reg_rx.recv_timeout(Duration::from_millis(100))
+            else {
+                continue;
+            };
+            let s =
+                ServerSpec { gpus: pw.gpus, cpus: pw.cpus, mem_gb: pw.mem_gb };
+            let Some(g) = GpuGen::by_name(&pw.gen) else {
+                let reason = format!("unknown gpu gen {:?}", pw.gen);
+                let _ = pw.conn.send(&Message::Error { reason: reason.clone() });
+                return Err(anyhow!("worker registered {reason}"));
+            };
+            if spec.is_some_and(|prev| prev != s) {
+                let _ = pw.conn.send(&Message::Error {
+                    reason: "heterogeneous workers unsupported".into(),
+                });
+                return Err(anyhow!("heterogeneous workers unsupported"));
+            }
+            // Workers report their generation; the mirror fleet is still
+            // one-type, so a mixed registration is rejected up front
+            // rather than silently mis-modeled.
+            if fleet_gen.is_some_and(|prev| prev != g) {
+                let _ = pw.conn.send(&Message::Error {
+                    reason: "mixed-generation workers unsupported".into(),
+                });
+                return Err(anyhow!(
+                    "mixed-generation workers unsupported: {:?} after \
+                     {fleet_gen:?}",
+                    g
+                ));
+            }
+            spec = Some(s);
+            fleet_gen = Some(g);
+            pending.push(pw);
         }
         let spec = spec.ok_or_else(|| anyhow!("no workers"))?;
         let gen = fleet_gen.ok_or_else(|| anyhow!("no workers"))?;
 
-        // Reader threads funnel worker messages into one channel; `None`
-        // signals the worker's connection is gone (crash/EOF) so the
-        // leader can fail the worker over.
-        let (tx, rx) = mpsc::channel::<(usize, Option<Message>)>();
-        let mut senders: Vec<Conn> = Vec::new();
-        for (wid, conn) in conns.into_iter().enumerate() {
-            // Split: clone underlying stream for writing.
-            let read_conn = conn;
-            let tx = tx.clone();
-            // Recreate a write-side Conn from the same socket.
-            // (Conn::send uses its own cloned stream.)
-            let write_conn = read_conn.try_clone_writer()?;
-            senders.push(write_conn);
-            std::thread::spawn(move || {
-                let mut rc = read_conn;
-                loop {
-                    match rc.recv() {
-                        Ok(Some(m)) => {
-                            if tx.send((wid, Some(m))).is_err() {
-                                break;
-                            }
-                        }
-                        Ok(None) => break, // clean EOF
-                        Err(e) => {
-                            // A malformed frame is a protocol bug; losing
-                            // the reader silently stalls every job on this
-                            // worker, so shout before giving up.
-                            eprintln!("[leader] worker {wid} recv: {e}");
-                            break;
-                        }
-                    }
-                }
-                let _ = tx.send((wid, None));
-            });
+        // Ack registrations; reader threads funnel worker messages into
+        // one channel, `None` marking a dead connection.
+        let (worker_tx, worker_rx) =
+            mpsc::channel::<(usize, Option<Message>)>();
+        let mut senders: Vec<Option<Conn>> = Vec::new();
+        for (wid, mut pw) in pending.into_iter().enumerate() {
+            pw.conn.send(&Message::RegisterAck {
+                server_id: wid,
+                heartbeat_s: self.cfg.heartbeat_s,
+            })?;
+            senders.push(Some(pw.conn.try_clone_writer()?));
+            spawn_reader(pw.conn, wid, worker_tx.clone());
+        }
+        let total_gpus = spec.gpus * self.cfg.n_workers as u32;
+
+        // Validate policy/mechanism before the model build (which
+        // panics on an unknown mechanism).
+        let policy = policy_by_name(&self.cfg.policy)
+            .ok_or_else(|| anyhow!("bad policy {:?}", self.cfg.policy))?;
+        if mechanism_by_name(&self.cfg.mechanism).is_none() {
+            return Err(anyhow!("bad mechanism {:?}", self.cfg.mechanism));
         }
 
-        // --- scheduling state ------------------------------------------
-        // Full-capacity mirror (admission + proportional shares); each
-        // round replans over only the workers still alive. Workers are a
-        // one-type fleet of whatever generation they registered
-        // (heterogeneous workers register identical specs today; the
-        // planner itself is fleet-generic).
-        let fleet = Fleet::new(&[TypeSpec {
-            gen,
+        let tenant_names = source.tenant_names();
+        let mut driver = LeaderDriver {
+            cfg: &self.cfg,
+            run_start,
+            grid: WallGrid::new(self.cfg.time_scale),
+            mode: Mode::Live,
+            gating: false,
+            journal,
+            reg_rx,
+            sub_rx,
+            worker_rx,
+            worker_tx,
+            status: Arc::clone(&status),
             spec,
-            machines: self.cfg.n_workers,
-        }]);
-        let mut alive = vec![true; self.cfg.n_workers];
-        let world = PerfModel::with_gen(spec, gen);
-        let profiler = OptimisticProfiler::noiseless_fleet(&fleet);
-        let planner = RoundPlanner::with_quotas(
-            policy_by_name(&self.cfg.policy)
-                .ok_or_else(|| anyhow!("bad policy"))?,
-            mechanism_by_name(&self.cfg.mechanism)
-                .ok_or_else(|| anyhow!("bad mechanism"))?,
-            self.cfg.quotas.clone(),
+            gen,
+            total_gpus,
+            senders,
+            last_hb: vec![Instant::now(); self.cfg.n_workers],
+            fleet_online: vec![true; self.cfg.n_workers],
+            hosted_on: HashMap::new(),
+            pending_churn: Vec::new(),
+            submitted: BTreeMap::new(),
+            tenant_ids: BTreeMap::new(),
+            next_tenant: 0,
+            tenant_of: BTreeMap::new(),
+            deferred: Vec::new(),
+            replay_churn: VecDeque::new(),
+            replay_ckpts: VecDeque::new(),
+            replay_dones: BTreeMap::new(),
+            completion_hash: journal::fnv1a(&[]),
+            losses: BTreeMap::new(),
+            steps_total: BTreeMap::new(),
+            counters: ServiceCounters::default(),
+            fatal: None,
+        };
+        for (i, name) in tenant_names.iter().enumerate() {
+            driver.tenant_ids.insert(name.clone(), i as u32);
+        }
+
+        // --- initial jobs ----------------------------------------------
+        let mut jobs: Vec<Job> = Vec::new();
+        if self.cfg.recover {
+            // The journal is the single source of jobs on recovery; the
+            // workload source was already folded into it by the
+            // original run.
+            for rec in &recovered {
+                match rec {
+                    Record::Submit {
+                        id,
+                        tenant,
+                        tname,
+                        model,
+                        gpus,
+                        arrival_bits,
+                        duration_bits,
+                    } => {
+                        let model =
+                            ModelKind::from_name(model).ok_or_else(|| {
+                                anyhow!("journal names unknown model {model:?}")
+                            })?;
+                        jobs.push(
+                            Job::new(
+                                JobId(*id),
+                                model,
+                                *gpus,
+                                f64::from_bits(*arrival_bits),
+                                f64::from_bits(*duration_bits),
+                            )
+                            .with_tenant(TenantId(*tenant)),
+                        );
+                        driver.submitted.insert(
+                            *id,
+                            SubKey {
+                                tenant: *tenant,
+                                model: model.name().into(),
+                                gpus: *gpus,
+                                arrival_bits: *arrival_bits,
+                                duration_bits: *duration_bits,
+                            },
+                        );
+                        driver.tenant_ids.insert(tname.clone(), *tenant);
+                        driver.tenant_of.insert(*id, TenantId(*tenant));
+                    }
+                    Record::Churn { fail, at_bits, .. } => driver
+                        .replay_churn
+                        .push_back((f64::from_bits(*at_bits), *fail)),
+                    Record::Ckpt { round, at_bits, finished, hash } => {
+                        driver
+                            .replay_ckpts
+                            .push_back((*round, *at_bits, *finished, *hash))
+                    }
+                    Record::Done { id, jct_bits, finish_bits } => {
+                        driver
+                            .replay_dones
+                            .insert(*id, (*jct_bits, *finish_bits));
+                    }
+                    Record::Meta { .. } => {}
+                }
+            }
+            let until = recovered
+                .iter()
+                .filter_map(|r| match r {
+                    Record::Churn { at_bits, .. }
+                    | Record::Ckpt { at_bits, .. } => {
+                        Some(f64::from_bits(*at_bits))
+                    }
+                    _ => None,
+                })
+                .fold(0.0f64, f64::max);
+            driver.mode = Mode::Replay { until };
+            driver.counters.recoveries = 1;
+            driver.counters.journal_records_replayed = recovered.len() as u64;
+        } else {
+            while let Some(job) = pull_feasible(source.as_mut(), total_gpus) {
+                let tname = tenant_names
+                    .get(job.tenant.0 as usize)
+                    .cloned()
+                    .unwrap_or_else(|| format!("t{}", job.tenant.0));
+                driver
+                    .admit_source_job(&job, &tname)
+                    .map_err(|e| anyhow!(e))?;
+                jobs.push(job);
+            }
+        }
+        driver.next_tenant = driver
+            .tenant_ids
+            .values()
+            .copied()
+            .max()
+            .map_or(0, |m| m + 1);
+
+        // --- submission gate -------------------------------------------
+        // Serve the network until `expect_jobs` distinct jobs are known.
+        // Gate admissions become initial jobs; journaled submissions
+        // (on recovery) already count.
+        driver.gating = true;
+        while driver.submitted.len() < self.cfg.expect_jobs {
+            if let Some(f) = driver.fatal.take() {
+                return Err(anyhow!(f));
+            }
+            if run_start.elapsed().as_secs_f64() > self.cfg.max_real_s {
+                return Err(anyhow!(
+                    "timed out waiting for {} submissions ({} admitted)",
+                    self.cfg.expect_jobs,
+                    driver.submitted.len()
+                ));
+            }
+            let mut inbox = Vec::new();
+            driver.pump_network(0.0, &mut inbox);
+            for ev in inbox {
+                if let DriverEvent::Submit(j) = ev {
+                    jobs.push(j);
+                }
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        driver.gating = false;
+        {
+            let mut s = status.lock().unwrap();
+            s.submitted = driver.submitted.len().max(jobs.len()) as u64;
+            s.recoveries = driver.counters.recoveries;
+        }
+
+        // --- the round loop: the simulator's own core ------------------
+        let sim_cfg = SimConfig {
+            round_s: self.cfg.round_real_s * self.cfg.time_scale,
+            max_sim_s: self.cfg.max_real_s * self.cfg.time_scale,
+            policy: self.cfg.policy.clone(),
+            mechanism: self.cfg.mechanism.clone(),
+            types: Some(vec![TypeSpec {
+                gen,
+                spec,
+                machines: self.cfg.n_workers,
+            }]),
+            ..SimConfig::default()
+        };
+        let core_cfg = CoreConfig {
+            round_s: sim_cfg.round_s,
+            max_sim_s: sim_cfg.max_sim_s,
+            force_replan: false,
+        };
+        let mut model = FleetModel::from_config(&sim_cfg);
+        model.enable_grant_capture();
+        let mut recorder = self.cfg.telemetry.as_ref().map(|_| {
+            TelemetryRecorder::new(TelemetryConfig {
+                timing: self.cfg.telemetry_timing,
+            })
+        });
+        driver.grid.re_anchor(0.0);
+        let result = run_events_driven(
+            &mut model,
+            policy.as_ref(),
+            self.cfg.quotas.as_ref(),
+            &core_cfg,
+            jobs,
+            recorder.as_mut(),
+            &[],
+            &mut driver,
         );
 
-        let total_gpus = fleet.total_gpus();
-        // The streaming head: the next not-yet-arrived job, pulled from
-        // the source only when simulated time reaches it.
-        let mut next_job: Option<Job> =
-            pull_feasible(source.as_mut(), total_gpus);
-        let mut active: BTreeMap<JobId, Job> = BTreeMap::new();
-        let mut contexts: BTreeMap<JobId, Sensitivity> = BTreeMap::new();
-        let mut tenant_of: BTreeMap<u64, TenantId> = BTreeMap::new();
-        // job -> worker currently hosting it.
-        let mut hosted_on: HashMap<u64, usize> = HashMap::new();
-        let mut losses: BTreeMap<u64, f64> = BTreeMap::new();
-        let mut steps_total: BTreeMap<u64, u64> = BTreeMap::new();
-        let mut jcts: Vec<(u64, f64)> = Vec::new();
-
-        let start = Instant::now();
-        let mut rounds = 0usize;
-        let mut ticker = RoundTicker::new(self.cfg.round_real_s);
-        // Same recorder as the simulator, fed by the live round loop.
-        let mut recorder = self.cfg.telemetry.as_ref().map(|_| {
-            crate::telemetry::TelemetryRecorder::new(
-                crate::telemetry::TelemetryConfig {
-                    timing: self.cfg.telemetry_timing,
-                },
-            )
-        });
-        while (next_job.is_some() || !active.is_empty())
-            && start.elapsed().as_secs_f64() < self.cfg.max_real_s
-        {
-            let now_sim = start.elapsed().as_secs_f64() * self.cfg.time_scale;
-
-            // Drain worker messages.
-            while let Ok((wid, msg)) = rx.try_recv() {
-                let Some(msg) = msg else {
-                    // Worker `wid` died: fail it over. Its jobs return to
-                    // the queue and resume from the leader's last
-                    // progress view on the next round's lease.
-                    if alive[wid] {
-                        alive[wid] = false;
-                        eprintln!(
-                            "[leader] worker {wid} down; requeueing its jobs"
-                        );
-                        hosted_on.retain(|_, w| *w != wid);
-                    }
-                    continue;
-                };
-                match msg {
-                    Message::Progress { job_id, samples_done, loss, steps } => {
-                        if let Some(j) = active.get_mut(&JobId(job_id)) {
-                            j.progress_samples =
-                                samples_done.min(j.total_samples);
-                        }
-                        if loss.is_finite() {
-                            losses.insert(job_id, loss);
-                        }
-                        steps_total.insert(job_id, steps);
-                    }
-                    Message::Finished { job_id } => {
-                        if let Some(mut j) = active.remove(&JobId(job_id)) {
-                            contexts.remove(&j.id);
-                            j.state = JobState::Finished;
-                            jcts.push((job_id, now_sim - j.arrival_s));
-                            if let Some(wid) = hosted_on.remove(&job_id) {
-                                let _ = senders[wid]
-                                    .send(&Message::Terminate { job_id });
-                            }
-                        }
-                    }
-                    _ => {}
-                }
-            }
-
-            // Admit arrivals (profile on arrival), pulling the stream
-            // forward only as far as simulated time has reached.
-            while next_job
-                .as_ref()
-                .is_some_and(|j| j.arrival_s <= now_sim)
-            {
-                let mut job = next_job.take().unwrap();
-                let sens = profiler.profile(&job);
-                job.total_samples =
-                    job.duration_prop_s * sens.fair_throughput();
-                tenant_of.insert(job.id.0, job.tenant);
-                contexts.insert(job.id, sens);
-                active.insert(job.id, job);
-                next_job = pull_feasible(source.as_mut(), total_gpus);
-            }
-
-            // Plan the round over the alive workers only.
-            let alive_ids: Vec<usize> = (0..alive.len())
-                .filter(|&w| alive[w])
-                .collect();
-            if alive_ids.is_empty() {
-                return Err(anyhow!("all workers died"));
-            }
-            let mut round_fleet =
-                Fleet::with_server_ids_of(gen, spec, &alive_ids);
-            let refs: Vec<(&Job, &Sensitivity)> =
-                active.values().map(|j| (j, &contexts[&j.id])).collect();
-            let planned_jobs = refs.len();
-            let plan = planner.plan(&mut round_fleet, &refs, now_sim);
-
-            // Reconcile leases with workers.
-            let mut newly_hosted: HashMap<u64, usize> = HashMap::new();
-            for (id, grant) in &plan.grants {
-                // Primary worker: the server holding the most GPUs.
-                let primary = grant
-                    .placement
-                    .shares
-                    .iter()
-                    .max_by_key(|(_, s)| s.gpus)
-                    .map(|(&sid, _)| sid)
-                    .unwrap_or(0);
-                newly_hosted.insert(id.0, primary);
-            }
-            // Terminate moved/preempted jobs.
-            let to_stop: Vec<u64> = hosted_on
-                .iter()
-                .filter(|(jid, wid)| newly_hosted.get(*jid) != Some(*wid))
-                .map(|(&jid, _)| jid)
-                .collect();
-            for jid in to_stop {
-                if let Some(wid) = hosted_on.remove(&jid) {
-                    if senders[wid]
-                        .send(&Message::Terminate { job_id: jid })
-                        .is_err()
-                    {
-                        // Send failure == worker death; the reader thread
-                        // will also report it, but react immediately.
-                        alive[wid] = false;
-                        hosted_on.retain(|_, w| *w != wid);
-                    }
-                }
-            }
-            // Grant/renew leases.
-            for (id, grant) in &plan.grants {
-                let job = &active[id];
-                let wid = newly_hosted[&id.0];
-                if !alive[wid] {
-                    continue; // re-planned next round over survivors
-                }
-                let tput = world.throughput(
-                    job.model,
-                    job.gpus,
-                    grant.demand.cpus,
-                    grant.demand.mem_gb,
-                );
-                let sent = senders[wid].send(&Message::Lease {
-                    job_id: id.0,
-                    model: job.model.name().into(),
-                    variant: self.cfg.variant.clone(),
-                    gpus: job.gpus,
-                    cpus: grant.demand.cpus,
-                    mem_gb: grant.demand.mem_gb,
-                    // Worker-side progress runs in real time.
-                    target_tput: tput * self.cfg.time_scale,
-                    round_s: self.cfg.round_real_s,
-                    total_samples: job.total_samples,
-                    done_samples: job.progress_samples,
-                });
-                if sent.is_err() {
-                    alive[wid] = false;
-                    hosted_on.retain(|_, w| *w != wid);
-                    continue;
-                }
-                hosted_on.insert(id.0, wid);
-            }
-            for job in active.values_mut() {
-                job.state = if plan.grants.contains_key(&job.id) {
-                    JobState::Running
-                } else {
-                    JobState::Queued
-                };
-            }
-
-            if let Some(rec) = recorder.as_mut() {
-                use crate::telemetry as tm;
-                // Counters only by default. Time stamps are *nominal*
-                // (round index × round length × time_scale), not wall
-                // clock, so the recorded round structure is a pure
-                // function of the schedule; wall time goes into
-                // `wall_ms` only under `telemetry_timing`.
-                let nominal_s = rounds as f64
-                    * self.cfg.round_real_s
-                    * self.cfg.time_scale;
-                let mut pools: Vec<tm::PoolCounters> = Vec::new();
-                let mut fit_walk = 0u64;
-                for p in &round_fleet.pools {
-                    pools.push(tm::PoolCounters {
-                        gen: p.gen,
-                        free_gpus: p.cluster.free_gpus(),
-                        total_gpus: p.cluster.total_gpus(),
-                        free_cpus: p.cluster.free_cpus_gauge(),
-                        total_cpus: p.cluster.total_cpus(),
-                        free_mem_gb: p.cluster.free_mem_gb_gauge(),
-                        total_mem_gb: p.cluster.total_mem_gb(),
-                    });
-                    fit_walk += p.cluster.take_fit_walk();
-                }
-                let mut tenants: BTreeMap<TenantId, tm::TenantCounters> =
-                    BTreeMap::new();
-                for job in active.values() {
-                    let e = tenants.entry(job.tenant).or_insert(
-                        tm::TenantCounters {
-                            tenant: job.tenant,
-                            running: 0,
-                            pending: 0,
-                            admitted_gpus: 0,
-                            spilled_gpus: 0,
-                        },
-                    );
-                    if job.state == JobState::Running {
-                        e.running += 1;
-                        e.admitted_gpus += job.gpus;
-                    } else {
-                        e.pending += 1;
-                    }
-                }
-                // Gang counters off the planned grants (the mirror fleet
-                // is flat today, so cross_rack stays 0 — the field keeps
-                // the row layout identical to the simulator's).
-                let mut gangs_placed = 0u32;
-                let mut cross_rack_gangs = 0u32;
-                for grant in plan.grants.values() {
-                    if grant.placement.span() > 1 {
-                        gangs_placed += 1;
-                        if round_fleet.pool(grant.gen).is_some_and(|p| {
-                            p.cluster.racks_spanned(&grant.placement) > 1
-                        }) {
-                            cross_rack_gangs += 1;
-                        }
-                    }
-                }
-                let running =
-                    tenants.values().map(|t| t.running).sum::<u32>();
-                let queued =
-                    tenants.values().map(|t| t.pending).sum::<u32>();
-                let admitted_gpus =
-                    tenants.values().map(|t| t.admitted_gpus).sum::<u32>();
-                rec.record_round(&tm::RoundSample {
-                    round: rounds as u64,
-                    time_ms: tm::milli(nominal_s),
-                    queued,
-                    running,
-                    admitted_gpus,
-                    spilled_gpus: 0,
-                    free_gpus: pools.iter().map(|p| p.free_gpus).sum(),
-                    total_gpus: pools.iter().map(|p| p.total_gpus).sum(),
-                    free_cpus: pools.iter().map(|p| p.free_cpus).sum(),
-                    total_cpus: pools.iter().map(|p| p.total_cpus).sum(),
-                    free_mem_gb: pools
-                        .iter()
-                        .map(|p| p.free_mem_gb)
-                        .sum(),
-                    total_mem_gb: pools
-                        .iter()
-                        .map(|p| p.total_mem_gb)
-                        .sum(),
-                    gangs_placed,
-                    cross_rack_gangs,
-                    // The live leader replans over survivors instead of
-                    // modelling churn events; the counters exist so the
-                    // row layout matches the simulator's.
-                    preemptions: 0,
-                    servers_failed: 0,
-                    servers_restored: 0,
-                    wall_ms: start.elapsed().as_millis() as i64,
-                    pools,
-                    tenants: tenants.values().copied().collect(),
-                });
-                // The live planner replans from scratch every round:
-                // always a full-tier plan over the active set.
-                rec.record_plan(&tm::PlanEvent {
-                    round: rounds as u64,
-                    tier: tm::PlanTier::Full,
-                    steps_total: planned_jobs as u64,
-                    steps_reused: 0,
-                    rollback_depth: 0,
-                    fit_walk,
-                    pools: Vec::new(),
-                });
-            }
-
-            if std::env::var_os("SYNERGY_DEPLOY_DEBUG").is_some() {
-                eprintln!(
-                    "[leader] round={} now_sim={:.0} active={} grants={} \
-                     finished={} remaining_hint={:?}",
-                    rounds,
-                    now_sim,
-                    active.len(),
-                    plan.grants.len(),
-                    jcts.len(),
-                    source.len_hint()
-                );
-            }
-            rounds += 1;
-            let sleep_s = ticker.sleep_s(start.elapsed().as_secs_f64());
-            if sleep_s > 0.0 {
-                std::thread::sleep(Duration::from_secs_f64(sleep_s));
-            }
-        }
-
-        // Shutdown.
-        for s in &mut senders {
+        // --- shutdown + reports ----------------------------------------
+        for s in driver.senders.iter_mut().flatten() {
             let _ = s.send(&Message::Shutdown);
         }
+        if let Some(f) = driver.fatal.take() {
+            return Err(anyhow!(f));
+        }
+        if let Some(rec) = recorder.as_mut() {
+            rec.record_service(driver.counters);
+        }
         if let (Some(path), Some(rec)) = (&self.cfg.telemetry, &recorder) {
-            crate::util::fsx::write_creating(
-                std::path::Path::new(path),
+            fsx::write_creating(
+                Path::new(path),
                 rec.render_for_path(path).as_bytes(),
             )
             .map_err(|e| anyhow!("telemetry: {e}"))?;
         }
-        let makespan_sim_s =
-            start.elapsed().as_secs_f64() * self.cfg.time_scale;
-        Ok(LeaderReport {
-            jcts,
-            tenant_of,
-            losses,
-            total_steps: steps_total.values().sum(),
-            rounds,
-            makespan_sim_s,
+        {
+            let mut s = status.lock().unwrap();
+            s.finished = result.finished.len() as u64;
+            s.rounds = result.rounds as u64;
+        }
+        let report = LeaderReport {
+            jcts: result.finished.iter().map(|f| (f.id.0, f.jct_s)).collect(),
+            tenant_of: driver.tenant_of.clone(),
+            losses: driver.losses.clone(),
+            total_steps: driver.steps_total.values().sum(),
+            rounds: result.rounds,
+            makespan_sim_s: result.makespan_s,
+            recoveries: driver.counters.recoveries,
+            journal_records_replayed: driver.counters.journal_records_replayed,
+            heartbeat_expiries: driver.counters.heartbeat_expiries,
+            preemptions: result.preemptions,
+            servers_failed: result.servers_failed,
+            servers_restored: result.servers_restored,
+        };
+        if let Some(path) = &self.cfg.report_path {
+            fsx::write_creating(
+                Path::new(path),
+                render_report(&report).as_bytes(),
+            )
+            .map_err(|e| anyhow!("report: {e}"))?;
+        }
+        Ok(report)
+    }
+}
+
+/// Deterministic machine-readable report: a pure function of the
+/// schedule (JCTs as f64 bit patterns, completion order), so a
+/// recovered run's file is byte-identical to the unkilled control's.
+/// Worker-reported fields (losses, steps) and recovery counters are
+/// deliberately excluded — they describe the *process*, not the
+/// schedule.
+fn render_report(r: &LeaderReport) -> String {
+    let jcts: Vec<Json> = r
+        .jcts
+        .iter()
+        .map(|&(id, jct)| {
+            Json::arr(vec![
+                Json::num(id as f64),
+                Json::str(format!("{:016x}", jct.to_bits())),
+            ])
         })
+        .collect();
+    let tenants: Vec<Json> = r
+        .tenant_of
+        .iter()
+        .map(|(&id, t)| {
+            Json::arr(vec![Json::num(id as f64), Json::num(t.0 as f64)])
+        })
+        .collect();
+    let mut doc = Json::obj(vec![
+        ("kind", Json::str("synergy_deploy_report")),
+        ("finished", Json::num(r.jcts.len() as f64)),
+        ("rounds", Json::num(r.rounds as f64)),
+        (
+            "makespan_bits",
+            Json::str(format!("{:016x}", r.makespan_sim_s.to_bits())),
+        ),
+        ("preemptions", Json::num(r.preemptions as f64)),
+        ("servers_failed", Json::num(r.servers_failed as f64)),
+        ("servers_restored", Json::num(r.servers_restored as f64)),
+        ("jcts", Json::arr(jcts)),
+        ("tenants", Json::arr(tenants)),
+    ])
+    .encode();
+    doc.push('\n');
+    doc
+}
+
+/// Accept loop: every connection gets a greeter thread that routes it
+/// by its first frame (worker registration vs client session).
+fn acceptor(
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    reg_tx: mpsc::Sender<PendingWorker>,
+    sub_tx: mpsc::Sender<SubmitReq>,
+    status: Arc<Mutex<StatusShared>>,
+) {
+    loop {
+        let Ok((stream, _)) = listener.accept() else { break };
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let reg_tx = reg_tx.clone();
+        let sub_tx = sub_tx.clone();
+        let status = Arc::clone(&status);
+        std::thread::spawn(move || greet(stream, reg_tx, sub_tx, status));
+    }
+}
+
+/// Route one fresh connection. Workers hand their conn to the leader's
+/// registration queue; clients get an in-thread session loop (Submit /
+/// QueryStatus until they disconnect or idle out).
+fn greet(
+    stream: TcpStream,
+    reg_tx: mpsc::Sender<PendingWorker>,
+    sub_tx: mpsc::Sender<SubmitReq>,
+    status: Arc<Mutex<StatusShared>>,
+) {
+    let Ok(mut conn) = Conn::new(stream) else { return };
+    if conn.set_read_timeout(Some(Duration::from_secs(30))).is_err() {
+        return;
+    }
+    loop {
+        match conn.recv() {
+            Ok(Some(Message::Register { gpus, cpus, mem_gb, gen })) => {
+                // Worker: hand the whole connection over; the leader
+                // acks (or rejects) and owns it from here.
+                let _ = conn.set_read_timeout(None);
+                let _ = reg_tx
+                    .send(PendingWorker { conn, gpus, cpus, mem_gb, gen });
+                return;
+            }
+            Ok(Some(Message::Submit {
+                job_id,
+                tenant,
+                model,
+                gpus,
+                arrival_s,
+                duration_s,
+            })) => {
+                let (tx, rx) = mpsc::channel();
+                let req = SubmitReq {
+                    job_id,
+                    tenant,
+                    model,
+                    gpus,
+                    arrival_s,
+                    duration_s,
+                    resp: tx,
+                };
+                if sub_tx.send(req).is_err() {
+                    let _ = conn.send(&Message::Error {
+                        reason: "leader is shutting down".into(),
+                    });
+                    return;
+                }
+                match rx.recv_timeout(Duration::from_secs(30)) {
+                    Ok(Ok(duplicate)) => {
+                        if conn
+                            .send(&Message::SubmitAck { job_id, duplicate })
+                            .is_err()
+                        {
+                            return;
+                        }
+                    }
+                    Ok(Err(reason)) => {
+                        if conn.send(&Message::Error { reason }).is_err() {
+                            return;
+                        }
+                    }
+                    Err(_) => {
+                        let _ = conn.send(&Message::Error {
+                            reason: "submission not processed in time".into(),
+                        });
+                        return;
+                    }
+                }
+            }
+            Ok(Some(Message::QueryStatus)) => {
+                let s = *status.lock().unwrap();
+                if conn
+                    .send(&Message::Status {
+                        submitted: s.submitted,
+                        finished: s.finished,
+                        rounds: s.rounds,
+                        recoveries: s.recoveries,
+                    })
+                    .is_err()
+                {
+                    return;
+                }
+            }
+            Ok(Some(_)) => {
+                let _ = conn.send(&Message::Error {
+                    reason: "expected register, submit, or query_status"
+                        .into(),
+                });
+                return;
+            }
+            Ok(None) => return,
+            Err(_) => return, // idle timeout, oversized frame, bad JSON
+        }
+    }
+}
+
+/// Reader thread for one worker connection: frames in, `(wid, None)`
+/// on death.
+fn spawn_reader(
+    mut conn: Conn,
+    wid: usize,
+    tx: mpsc::Sender<(usize, Option<Message>)>,
+) {
+    std::thread::spawn(move || {
+        loop {
+            match conn.recv() {
+                Ok(Some(m)) => {
+                    if tx.send((wid, Some(m))).is_err() {
+                        break;
+                    }
+                }
+                Ok(None) => break, // clean EOF
+                Err(e) => {
+                    // A malformed frame is a protocol bug; losing the
+                    // reader silently stalls every job on this worker,
+                    // so shout before giving up.
+                    eprintln!("[leader] worker {wid} recv: {e}");
+                    break;
+                }
+            }
+        }
+        let _ = tx.send((wid, None));
+    });
+}
+
+/// The leader as a [`RoundDriver`]: owns the network plane, the worker
+/// fleet mirror, the journal, and the replay plan, while the sim core
+/// owns planning, admission, progress, and completion accounting.
+struct LeaderDriver<'a> {
+    cfg: &'a LeaderConfig,
+    run_start: Instant,
+    grid: WallGrid,
+    mode: Mode,
+    /// True during the pre-loop submission gate (admissions become
+    /// initial jobs and are never deferred).
+    gating: bool,
+    journal: Option<JournalWriter>,
+    reg_rx: mpsc::Receiver<PendingWorker>,
+    sub_rx: mpsc::Receiver<SubmitReq>,
+    worker_rx: mpsc::Receiver<(usize, Option<Message>)>,
+    worker_tx: mpsc::Sender<(usize, Option<Message>)>,
+    status: Arc<Mutex<StatusShared>>,
+    spec: ServerSpec,
+    gen: GpuGen,
+    total_gpus: u32,
+    /// Worker slots: write handles, `None` = down. Slot index is the
+    /// worker's server id for the protocol; it is NOT a fleet scan
+    /// position — see `fleet_online`.
+    senders: Vec<Option<Conn>>,
+    last_hb: Vec<Instant>,
+    /// Mirror of the model fleet's per-position online state. The core
+    /// fails the *highest* online scan position and revives the
+    /// *lowest* offline one; lease routing maps the i-th online
+    /// position to the i-th alive worker slot, so the mapping is
+    /// deterministic without the model ever knowing slot identities.
+    fleet_online: Vec<bool>,
+    /// job id -> worker slot currently holding its lease.
+    hosted_on: HashMap<u64, usize>,
+    /// Observed churn (fail/rejoin, worker slot) not yet journaled and
+    /// injected — drained in live mode only, so a replaying grid never
+    /// sees unjournaled membership changes mid-replay.
+    pending_churn: Vec<(bool, usize)>,
+    submitted: BTreeMap<u64, SubKey>,
+    tenant_ids: BTreeMap<String, u32>,
+    next_tenant: u32,
+    tenant_of: BTreeMap<u64, TenantId>,
+    /// Mid-replay submissions with unknown ids, admitted at the live
+    /// flip (new work cannot enter a replaying round grid).
+    deferred: Vec<SubmitReq>,
+    replay_churn: VecDeque<(f64, bool)>,
+    /// (round, at_bits, finished, hash) checkpoints left to validate.
+    replay_ckpts: VecDeque<(u64, u64, u64, u64)>,
+    /// id -> (jct_bits, finish_bits) completions the dead leader
+    /// journaled; replayed completions must match bitwise.
+    replay_dones: BTreeMap<u64, (u64, u64)>,
+    /// Incremental FNV-1a over (id, jct_bits) in completion order —
+    /// the checkpoint hash.
+    completion_hash: u64,
+    losses: BTreeMap<u64, f64>,
+    steps_total: BTreeMap<u64, u64>,
+    counters: ServiceCounters,
+    fatal: Option<String>,
+}
+
+/// Fold one completion into the checkpoint hash (FNV-1a continuation).
+fn fold_completion(h: u64, id: u64, jct_bits: u64) -> u64 {
+    let mut acc = h;
+    for b in id.to_le_bytes().into_iter().chain(jct_bits.to_le_bytes()) {
+        acc ^= b as u64;
+        acc = acc.wrapping_mul(0x100000001b3);
+    }
+    acc
+}
+
+impl LeaderDriver<'_> {
+    fn journal_append(&mut self, rec: &Record) -> std::result::Result<(), String> {
+        match self.journal.as_mut() {
+            Some(w) => w.append(rec),
+            None => Ok(()),
+        }
+    }
+
+    /// Journal + bookkeep one workload-source job (fresh runs fold the
+    /// source into the journal so recovery needs only the journal).
+    fn admit_source_job(
+        &mut self,
+        job: &Job,
+        tname: &str,
+    ) -> std::result::Result<(), String> {
+        self.journal_append(&Record::Submit {
+            id: job.id.0,
+            tenant: job.tenant.0,
+            tname: tname.into(),
+            model: job.model.name().into(),
+            gpus: job.gpus,
+            arrival_bits: job.arrival_s.to_bits(),
+            duration_bits: job.duration_prop_s.to_bits(),
+        })?;
+        self.submitted.insert(
+            job.id.0,
+            SubKey {
+                tenant: job.tenant.0,
+                model: job.model.name().into(),
+                gpus: job.gpus,
+                arrival_bits: job.arrival_s.to_bits(),
+                duration_bits: job.duration_prop_s.to_bits(),
+            },
+        );
+        self.tenant_of.insert(job.id.0, job.tenant);
+        Ok(())
+    }
+
+    fn tenant_id(&mut self, name: &str) -> u32 {
+        if let Some(&t) = self.tenant_ids.get(name) {
+            return t;
+        }
+        let t = self.next_tenant;
+        self.next_tenant += 1;
+        self.tenant_ids.insert(name.into(), t);
+        t
+    }
+
+    fn note_worker_down(&mut self, wid: usize) {
+        if !matches!(self.senders.get(wid), Some(Some(_))) {
+            return;
+        }
+        self.senders[wid] = None;
+        self.hosted_on.retain(|_, w| *w != wid);
+        self.pending_churn.push((true, wid));
+        eprintln!("[leader] worker {wid} down; requeueing its jobs");
+    }
+
+    /// Drain worker messages, heartbeat leases, rejoins, submissions.
+    /// Shared by the live `poll` hook and the pre-loop gate.
+    fn pump_network(&mut self, now: f64, inbox: &mut Vec<DriverEvent>) {
+        while let Ok((wid, msg)) = self.worker_rx.try_recv() {
+            let Some(msg) = msg else {
+                self.note_worker_down(wid);
+                continue;
+            };
+            match msg {
+                Message::Heartbeat { .. } => {
+                    if let Some(hb) = self.last_hb.get_mut(wid) {
+                        *hb = Instant::now();
+                    }
+                }
+                Message::Progress { job_id, loss, steps, .. } => {
+                    // Any frame proves liveness; progress numbers feed
+                    // the report only — the sim core is the single
+                    // arbiter of job progress and completion.
+                    if let Some(hb) = self.last_hb.get_mut(wid) {
+                        *hb = Instant::now();
+                    }
+                    if loss.is_finite() {
+                        self.losses.insert(job_id, loss);
+                    }
+                    self.steps_total.insert(job_id, steps);
+                }
+                _ => {}
+            }
+        }
+        if self.cfg.heartbeat_s > 0.0 {
+            let cutoff = 3.0 * self.cfg.heartbeat_s;
+            for wid in 0..self.senders.len() {
+                if self.senders[wid].is_some()
+                    && self.last_hb[wid].elapsed().as_secs_f64() > cutoff
+                {
+                    self.counters.heartbeat_expiries += 1;
+                    eprintln!(
+                        "[leader] worker {wid} heartbeat lease expired \
+                         (silent > {cutoff:.1}s)"
+                    );
+                    self.note_worker_down(wid);
+                }
+            }
+        }
+        while let Ok(pw) = self.reg_rx.try_recv() {
+            self.handle_rejoin(pw);
+        }
+        while let Ok(req) = self.sub_rx.try_recv() {
+            let replaying = matches!(self.mode, Mode::Replay { .. });
+            if replaying
+                && !self.gating
+                && !self.submitted.contains_key(&req.job_id)
+            {
+                self.deferred.push(req);
+            } else {
+                self.handle_submit(req, now, inbox);
+            }
+        }
+    }
+
+    /// Process one client submission: validate, dedup idempotently,
+    /// journal *before* acking, inject.
+    fn handle_submit(
+        &mut self,
+        req: SubmitReq,
+        now: f64,
+        inbox: &mut Vec<DriverEvent>,
+    ) {
+        let Some(model) = ModelKind::from_name(&req.model) else {
+            let _ = req
+                .resp
+                .send(Err(format!("unknown model {:?}", req.model)));
+            return;
+        };
+        if req.gpus == 0 || req.gpus > self.total_gpus {
+            let _ = req.resp.send(Err(format!(
+                "job {} demands {} GPUs; cluster capacity is {}",
+                req.job_id, req.gpus, self.total_gpus
+            )));
+            return;
+        }
+        if !req.arrival_s.is_finite()
+            || req.arrival_s < 0.0
+            || !req.duration_s.is_finite()
+            || req.duration_s <= 0.0
+        {
+            let _ = req.resp.send(Err(
+                "arrival_s must be finite and >= 0, duration_s finite and > 0"
+                    .into(),
+            ));
+            return;
+        }
+        // Mid-run submissions are admitted "now": the clamped arrival
+        // is what gets journaled, so replay reproduces it bitwise.
+        let arrival = req.arrival_s.max(now);
+        let tenant = self.tenant_id(&req.tenant);
+        if let Some(k) = self.submitted.get(&req.job_id) {
+            // Idempotent resubmission: same spec (the stored arrival
+            // may exceed the requested one — that is the clamp above,
+            // not a conflict).
+            let same = k.tenant == tenant
+                && k.model == req.model
+                && k.gpus == req.gpus
+                && k.duration_bits == req.duration_s.to_bits()
+                && f64::from_bits(k.arrival_bits) >= req.arrival_s;
+            let _ = if same {
+                req.resp.send(Ok(true))
+            } else {
+                req.resp.send(Err(format!(
+                    "job id {} already admitted with a different spec",
+                    req.job_id
+                )))
+            };
+            return;
+        }
+        let rec = Record::Submit {
+            id: req.job_id,
+            tenant,
+            tname: req.tenant.clone(),
+            model: req.model.clone(),
+            gpus: req.gpus,
+            arrival_bits: arrival.to_bits(),
+            duration_bits: req.duration_s.to_bits(),
+        };
+        if let Err(e) = self.journal_append(&rec) {
+            let _ = req.resp.send(Err(format!("journal append failed: {e}")));
+            self.fatal = Some(format!("journal append failed: {e}"));
+            return;
+        }
+        self.submitted.insert(
+            req.job_id,
+            SubKey {
+                tenant,
+                model: req.model.clone(),
+                gpus: req.gpus,
+                arrival_bits: arrival.to_bits(),
+                duration_bits: req.duration_s.to_bits(),
+            },
+        );
+        self.tenant_of.insert(req.job_id, TenantId(tenant));
+        if let Ok(mut s) = self.status.lock() {
+            s.submitted = self.submitted.len() as u64;
+        }
+        let _ = req.resp.send(Ok(false));
+        inbox.push(DriverEvent::Submit(
+            Job::new(JobId(req.job_id), model, req.gpus, arrival, req.duration_s)
+                .with_tenant(TenantId(tenant)),
+        ));
+    }
+
+    /// A registration after the fleet is full is a duplicate (typed
+    /// `Error`, no panic); one naming a dead slot's spec revives the
+    /// lowest dead slot and re-adds a server through the churn path.
+    fn handle_rejoin(&mut self, mut pw: PendingWorker) {
+        let s = ServerSpec { gpus: pw.gpus, cpus: pw.cpus, mem_gb: pw.mem_gb };
+        if GpuGen::by_name(&pw.gen) != Some(self.gen) || s != self.spec {
+            let _ = pw.conn.send(&Message::Error {
+                reason: format!(
+                    "rejoin spec mismatch: fleet is {:?} {:?}",
+                    self.gen, self.spec
+                ),
+            });
+            return;
+        }
+        let Some(slot) = self.senders.iter().position(|x| x.is_none()) else {
+            let _ = pw.conn.send(&Message::Error {
+                reason: format!(
+                    "fleet full: all {} worker slots alive (duplicate \
+                     registration rejected)",
+                    self.senders.len()
+                ),
+            });
+            return;
+        };
+        if pw
+            .conn
+            .send(&Message::RegisterAck {
+                server_id: slot,
+                heartbeat_s: self.cfg.heartbeat_s,
+            })
+            .is_err()
+        {
+            return;
+        }
+        let Ok(writer) = pw.conn.try_clone_writer() else { return };
+        spawn_reader(pw.conn, slot, self.worker_tx.clone());
+        self.senders[slot] = Some(writer);
+        self.last_hb[slot] = Instant::now();
+        self.pending_churn.push((false, slot));
+        eprintln!("[leader] worker {slot} rejoined");
+    }
+
+    /// Apply one churn event to the fleet-position mirror, exactly as
+    /// the model will: fail the highest online position, revive the
+    /// lowest offline one.
+    fn mirror_churn(&mut self, fail: bool) {
+        if fail {
+            if let Some(p) = self.fleet_online.iter().rposition(|&b| b) {
+                self.fleet_online[p] = false;
+            }
+        } else if let Some(p) = self.fleet_online.iter().position(|&b| !b) {
+            self.fleet_online[p] = true;
+        } else {
+            self.fleet_online.push(true); // pool grows past its start size
+        }
+    }
+
+    /// Live mode: journal + inject churn observed since the last round.
+    fn inject_pending(&mut self, now: f64, inbox: &mut Vec<DriverEvent>) {
+        for (fail, slot) in std::mem::take(&mut self.pending_churn) {
+            if let Err(e) = self.journal_append(&Record::Churn {
+                fail,
+                slot,
+                at_bits: now.to_bits(),
+            }) {
+                self.fatal = Some(format!("journal append failed: {e}"));
+                return;
+            }
+            self.mirror_churn(fail);
+            inbox.push(DriverEvent::Churn {
+                kind: if fail { FaultKind::Fail } else { FaultKind::Add },
+                pool: 0,
+            });
+        }
+    }
+
+    /// Replay mode: re-inject journaled churn at its recorded sim time
+    /// (bitwise — the grid is deterministic, so the times coincide).
+    fn inject_replayed(&mut self, now: f64, inbox: &mut Vec<DriverEvent>) {
+        while let Some(&(at, fail)) = self.replay_churn.front() {
+            if at > now {
+                break;
+            }
+            self.replay_churn.pop_front();
+            self.mirror_churn(fail);
+            inbox.push(DriverEvent::Churn {
+                kind: if fail { FaultKind::Fail } else { FaultKind::Add },
+                pool: 0,
+            });
+        }
+    }
+
+    /// Replay is exhausted: re-anchor the wall grid at the warm-started
+    /// sim clock and resume live pacing, leases, and journaling.
+    fn flip_live(&mut self, now: f64) {
+        self.mode = Mode::Live;
+        self.grid.re_anchor(now);
+        for hb in &mut self.last_hb {
+            *hb = Instant::now();
+        }
+        eprintln!(
+            "[leader] replayed {} journal records; live at sim t={now:.0}s",
+            self.counters.journal_records_replayed
+        );
+    }
+
+    /// Map this round's committed grants onto alive workers: terminate
+    /// moved leases, send new ones. Grant server ids are fleet scan
+    /// positions; the i-th online position routes to the i-th alive
+    /// worker slot.
+    fn deploy_leases(&mut self, ctx: &RoundCtx) {
+        let online: Vec<usize> = self
+            .fleet_online
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &b)| b.then_some(i))
+            .collect();
+        let alive: Vec<usize> = self
+            .senders
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.is_some().then_some(i))
+            .collect();
+        let slot_of_pos: HashMap<usize, usize> =
+            online.into_iter().zip(alive).collect();
+
+        let mut newly: HashMap<u64, usize> = HashMap::new();
+        for g in ctx.grants {
+            let job = ctx.arena.job(ctx.arena.index_of(g.id));
+            if job.is_finished() {
+                continue; // completed this round; lease already released
+            }
+            if let Some(&slot) = slot_of_pos.get(&g.server) {
+                newly.insert(g.id.0, slot);
+            }
+        }
+        // Terminate moved/preempted/paused jobs on their old workers.
+        let to_stop: Vec<(u64, usize)> = self
+            .hosted_on
+            .iter()
+            .filter(|(jid, wid)| newly.get(*jid) != Some(*wid))
+            .map(|(&jid, &wid)| (jid, wid))
+            .collect();
+        for (jid, wid) in to_stop {
+            self.hosted_on.remove(&jid);
+            let sent = match self.senders[wid].as_mut() {
+                Some(conn) => conn.send(&Message::Terminate { job_id: jid }),
+                None => continue,
+            };
+            if sent.is_err() {
+                self.note_worker_down(wid);
+            }
+        }
+        // Grant/renew leases.
+        for g in ctx.grants {
+            let Some(&slot) = newly.get(&g.id.0) else { continue };
+            let job = ctx.arena.job(ctx.arena.index_of(g.id));
+            let msg = Message::Lease {
+                job_id: g.id.0,
+                model: job.model.name().into(),
+                variant: self.cfg.variant.clone(),
+                gpus: g.gpus,
+                cpus: g.cpus,
+                mem_gb: g.mem_gb,
+                // Worker-side progress runs in real time.
+                target_tput: job.progress_rate * self.cfg.time_scale,
+                round_s: self.cfg.round_real_s,
+                total_samples: job.total_samples,
+                done_samples: job.progress_samples,
+            };
+            let sent = match self.senders[slot].as_mut() {
+                Some(conn) => conn.send(&msg),
+                None => continue,
+            };
+            match sent {
+                Ok(()) => {
+                    self.hosted_on.insert(g.id.0, slot);
+                }
+                Err(_) => self.note_worker_down(slot),
+            }
+        }
+    }
+}
+
+impl RoundDriver for LeaderDriver<'_> {
+    fn poll(&mut self, now: f64, inbox: &mut Vec<DriverEvent>) {
+        self.pump_network(now, inbox);
+        if let Mode::Replay { until } = self.mode {
+            self.inject_replayed(now, inbox);
+            // Flip once the journal's plan is consumed and the clock
+            // has reached its frontier — this round runs live.
+            if self.replay_churn.is_empty()
+                && self.replay_ckpts.is_empty()
+                && now >= until
+            {
+                self.flip_live(now);
+            }
+        }
+        if matches!(self.mode, Mode::Live) {
+            for req in std::mem::take(&mut self.deferred) {
+                self.handle_submit(req, now, inbox);
+            }
+            self.inject_pending(now, inbox);
+        }
+    }
+
+    fn wants_grants(&self) -> bool {
+        true
+    }
+
+    fn on_round(&mut self, ctx: &RoundCtx) {
+        if let Ok(mut s) = self.status.lock() {
+            s.submitted = ctx.n_total as u64;
+            s.finished = ctx.finished as u64;
+            s.rounds = (ctx.round + 1) as u64;
+            s.recoveries = self.counters.recoveries;
+        }
+        match self.mode {
+            Mode::Replay { .. } => {
+                while let Some(&(round, at_bits, fin, hash)) =
+                    self.replay_ckpts.front()
+                {
+                    if round > ctx.round as u64 {
+                        break;
+                    }
+                    self.replay_ckpts.pop_front();
+                    if round < ctx.round as u64
+                        || at_bits != ctx.now.to_bits()
+                        || fin != ctx.finished as u64
+                        || hash != self.completion_hash
+                    {
+                        self.fatal = Some(format!(
+                            "replay divergence at journal checkpoint round \
+                             {round}: journal (at={at_bits:016x} \
+                             finished={fin} hash={hash:016x}) vs replayed \
+                             round {} (at={:016x} finished={} hash={:016x}) \
+                             — the journal was not produced by this \
+                             configuration",
+                            ctx.round,
+                            ctx.now.to_bits(),
+                            ctx.finished,
+                            self.completion_hash,
+                        ));
+                        return;
+                    }
+                }
+            }
+            Mode::Live => {
+                if let Err(e) = self.journal_append(&Record::Ckpt {
+                    round: ctx.round as u64,
+                    at_bits: ctx.now.to_bits(),
+                    finished: ctx.finished as u64,
+                    hash: self.completion_hash,
+                }) {
+                    self.fatal = Some(format!("journal append failed: {e}"));
+                    return;
+                }
+                self.deploy_leases(ctx);
+            }
+        }
+        if std::env::var_os("SYNERGY_DEPLOY_DEBUG").is_some() {
+            eprintln!(
+                "[leader] round={} now_sim={:.0} active={} grants={} \
+                 finished={}",
+                ctx.round,
+                ctx.now,
+                ctx.arena.n_active(),
+                ctx.grants.len(),
+                ctx.finished,
+            );
+        }
+    }
+
+    fn on_finished(&mut self, f: &FinishedJob, _now: f64) {
+        self.completion_hash =
+            fold_completion(self.completion_hash, f.id.0, f.jct_s.to_bits());
+        let finish_bits = (f.arrival_s + f.jct_s).to_bits();
+        if let Some((jct_bits, done_finish)) =
+            self.replay_dones.remove(&f.id.0)
+        {
+            // The dead leader journaled this completion; the replayed
+            // one must match bitwise.
+            if jct_bits != f.jct_s.to_bits() || done_finish != finish_bits {
+                self.fatal = Some(format!(
+                    "replay divergence: job {} completed with \
+                     jct={:016x}/finish={finish_bits:016x}, journal says \
+                     jct={jct_bits:016x}/finish={done_finish:016x}",
+                    f.id.0,
+                    f.jct_s.to_bits(),
+                ));
+            }
+            return;
+        }
+        if let Mode::Live = self.mode {
+            if let Err(e) = self.journal_append(&Record::Done {
+                id: f.id.0,
+                jct_bits: f.jct_s.to_bits(),
+                finish_bits,
+            }) {
+                self.fatal = Some(format!("journal append failed: {e}"));
+                return;
+            }
+            if let Some(wid) = self.hosted_on.remove(&f.id.0) {
+                let sent = match self.senders[wid].as_mut() {
+                    Some(conn) => {
+                        conn.send(&Message::Terminate { job_id: f.id.0 })
+                    }
+                    None => return,
+                };
+                if sent.is_err() {
+                    self.note_worker_down(wid);
+                }
+            }
+        }
+    }
+
+    fn advance(&mut self, now: f64, target: f64) -> Option<f64> {
+        if self.fatal.is_some() {
+            return None;
+        }
+        if let Mode::Replay { .. } = self.mode {
+            return Some(target); // replay runs at memory speed
+        }
+        if self.senders.iter().all(|s| s.is_none()) {
+            self.fatal = Some("all workers died".into());
+            return None;
+        }
+        if self.run_start.elapsed().as_secs_f64() >= self.cfg.max_real_s {
+            return None; // wall cap: normal (partial) stop
+        }
+        let _ = now;
+        let sleep =
+            self.grid.sleep_s(target, self.grid.start.elapsed().as_secs_f64());
+        if sleep > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(sleep));
+        }
+        Some(target)
     }
 }
 
@@ -611,42 +1536,59 @@ fn pull_feasible(
 
 #[cfg(test)]
 mod tests {
-    use super::RoundTicker;
+    use super::{fold_completion, WallGrid};
 
     #[test]
-    fn ticker_subtracts_work_time_from_each_sleep() {
-        let mut t = RoundTicker::new(2.0);
-        // Round 0's work took 0.5 s: sleep only the remaining 1.5 s so
-        // the boundary lands at exactly 2.0 s.
-        assert!((t.sleep_s(0.5) - 1.5).abs() < 1e-12);
-        // Round 1's work ran until 2.3 s: the 4.0 s boundary needs 1.7 s
-        // — the sleep does NOT reset to a full period.
-        assert!((t.sleep_s(2.3) - 1.7).abs() < 1e-12);
+    fn grid_subtracts_work_time_from_each_sleep() {
+        let g = WallGrid::new(1.0);
+        // Sim t=2.0 at scale 1 deadlines at wall 2.0 s; with 0.5 s of
+        // work already elapsed, sleep only the remaining 1.5 s.
+        assert!((g.sleep_s(2.0, 0.5) - 1.5).abs() < 1e-12);
+        // Work ran until 2.3 s: the 4.0 s deadline needs 1.7 s — the
+        // sleep does NOT reset to a full period.
+        assert!((g.sleep_s(4.0, 2.3) - 1.7).abs() < 1e-12);
     }
 
     #[test]
-    fn ticker_absorbs_overruns_without_shifting_the_grid() {
-        let mut t = RoundTicker::new(1.0);
-        // Round 0 overran its whole budget: no sleep...
-        assert_eq!(t.sleep_s(2.5), 0.0);
-        // ...and the next boundary is still the absolute 2.0 s mark
-        // (already passed), then 3.0 s — the grid never drifts.
-        assert_eq!(t.sleep_s(2.6), 0.0);
-        assert!((t.sleep_s(2.7) - 0.3).abs() < 1e-12);
+    fn grid_absorbs_overruns_without_shifting() {
+        let g = WallGrid::new(1.0);
+        // Deadline already passed: no sleep...
+        assert_eq!(g.sleep_s(1.0, 2.5), 0.0);
+        assert_eq!(g.sleep_s(2.0, 2.6), 0.0);
+        // ...and later deadlines are still the absolute marks — the
+        // grid never drifts.
+        assert!((g.sleep_s(3.0, 2.7) - 0.3).abs() < 1e-12);
     }
 
     #[test]
-    fn ticker_boundaries_are_absolute_multiples_of_the_period() {
-        let mut t = RoundTicker::new(0.25);
+    fn grid_deadlines_are_absolute_and_re_anchor_rescales() {
+        let g = WallGrid::new(600.0);
         let mut elapsed = 0.0;
         for k in 1..=20 {
-            // Each round does 0.01 s of "work" past the last boundary.
+            // Each round does 0.01 s of "work" past the last boundary;
+            // sim t = 150k at scale 600 must land at wall 0.25k exactly.
             elapsed += 0.01;
-            elapsed += t.sleep_s(elapsed);
+            elapsed += g.sleep_s(150.0 * k as f64, elapsed);
             assert!(
                 (elapsed - 0.25 * k as f64).abs() < 1e-9,
                 "round {k} must end on the absolute grid, not drift"
             );
         }
+        // Recovery: re-anchor at sim 3000 — deadlines restart from the
+        // new anchor, so sim 3600 is 1.0 wall second out.
+        let mut g = g;
+        g.re_anchor(3000.0);
+        assert!((g.sleep_s(3600.0, 0.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn completion_hash_is_order_sensitive() {
+        let h0 = super::journal::fnv1a(&[]);
+        let a = fold_completion(fold_completion(h0, 1, 10), 2, 20);
+        let b = fold_completion(fold_completion(h0, 2, 20), 1, 10);
+        assert_ne!(a, b, "checkpoint hash must pin completion order");
+        // Deterministic: same fold, same hash.
+        let a2 = fold_completion(fold_completion(h0, 1, 10), 2, 20);
+        assert_eq!(a, a2);
     }
 }

@@ -3,9 +3,14 @@
 //! The paper's physical deployment runs a gRPC control plane between the
 //! scheduler and per-job Synergy iterators. Here:
 //!
-//! - [`leader`] — the scheduler process: accepts worker registrations,
-//!   runs the same [`crate::coordinator::RoundPlanner`] as the simulator
-//!   every (scaled) round, grants/terminates leases, aggregates progress.
+//! - [`leader`] — the scheduler process: accepts worker registrations
+//!   and network job submissions, drives the *simulator's own*
+//!   event-driven round loop ([`crate::sim::run_events_driven`]) in
+//!   scaled real time, grants/terminates leases, and write-ahead
+//!   journals its state so a killed leader recovers bit-exactly.
+//! - [`journal`] — the write-ahead state journal: fsync'd append-only
+//!   JSONL segments recording submissions, churn, round checkpoints,
+//!   and completions; recovery truncates torn tails and replays.
 //! - [`worker`] — one process (or thread) per server: hosts
 //!   [`JobRunner`]s that execute *real* training iterations of the AOT
 //!   transformer through the PJRT runtime, with input-pipeline stalls
@@ -18,6 +23,7 @@
 //! Lease semantics follow §4.3: every running job asks to continue each
 //! round; the leader either renews or terminates (checkpoint + requeue).
 
+pub mod journal;
 pub mod leader;
 pub mod proto;
 pub mod worker;

@@ -14,8 +14,33 @@ pub enum Message {
     /// the GPU generation name (mixed-generation fleets); senders that
     /// predate the field are decoded as `"v100"`.
     Register { gpus: u32, cpus: u32, mem_gb: f64, gen: String },
-    /// leader -> worker: accepted; assigned server id.
-    RegisterAck { server_id: usize },
+    /// leader -> worker: accepted; assigned server id. `heartbeat_s` is
+    /// the lease period the leader enforces (0 = heartbeats disabled);
+    /// senders that predate the field decode as 0.
+    RegisterAck { server_id: usize, heartbeat_s: f64 },
+    /// worker -> leader: lease renewal; proof of liveness.
+    Heartbeat { server_id: usize },
+    /// client -> leader: submit a job. Idempotent by client-supplied
+    /// `job_id`; `arrival_s`/`duration_s` are sim-time seconds.
+    Submit {
+        job_id: u64,
+        tenant: String,
+        model: String,
+        gpus: u32,
+        arrival_s: f64,
+        duration_s: f64,
+    },
+    /// leader -> client: submission journaled (durable). `duplicate`
+    /// marks an identical resubmission that was already admitted.
+    SubmitAck { job_id: u64, duplicate: bool },
+    /// client -> leader: ask for run progress counters.
+    QueryStatus,
+    /// leader -> client: run progress counters.
+    Status { submitted: u64, finished: u64, rounds: u64, recoveries: u64 },
+    /// leader -> peer: typed rejection (duplicate registration,
+    /// conflicting resubmission, malformed request). The connection
+    /// stays usable unless the peer closes it.
+    Error { reason: String },
     /// leader -> worker: start (or renew) a job lease for one round.
     Lease {
         job_id: u64,
@@ -53,9 +78,51 @@ impl Message {
                 ("mem_gb", Json::num(*mem_gb)),
                 ("gen", Json::str(gen.clone())),
             ]),
-            Message::RegisterAck { server_id } => Json::obj(vec![
+            Message::RegisterAck { server_id, heartbeat_s } => Json::obj(vec![
                 ("type", Json::str("register_ack")),
                 ("server_id", Json::num(*server_id as f64)),
+                ("heartbeat_s", Json::num(*heartbeat_s)),
+            ]),
+            Message::Heartbeat { server_id } => Json::obj(vec![
+                ("type", Json::str("heartbeat")),
+                ("server_id", Json::num(*server_id as f64)),
+            ]),
+            Message::Submit {
+                job_id,
+                tenant,
+                model,
+                gpus,
+                arrival_s,
+                duration_s,
+            } => Json::obj(vec![
+                ("type", Json::str("submit")),
+                ("job_id", Json::num(*job_id as f64)),
+                ("tenant", Json::str(tenant.clone())),
+                ("model", Json::str(model.clone())),
+                ("gpus", Json::num(*gpus as f64)),
+                ("arrival_s", Json::num(*arrival_s)),
+                ("duration_s", Json::num(*duration_s)),
+            ]),
+            Message::SubmitAck { job_id, duplicate } => Json::obj(vec![
+                ("type", Json::str("submit_ack")),
+                ("job_id", Json::num(*job_id as f64)),
+                ("duplicate", Json::Bool(*duplicate)),
+            ]),
+            Message::QueryStatus => {
+                Json::obj(vec![("type", Json::str("query_status"))])
+            }
+            Message::Status { submitted, finished, rounds, recoveries } => {
+                Json::obj(vec![
+                    ("type", Json::str("status")),
+                    ("submitted", Json::num(*submitted as f64)),
+                    ("finished", Json::num(*finished as f64)),
+                    ("rounds", Json::num(*rounds as f64)),
+                    ("recoveries", Json::num(*recoveries as f64)),
+                ])
+            }
+            Message::Error { reason } => Json::obj(vec![
+                ("type", Json::str("error")),
+                ("reason", Json::str(reason.clone())),
             ]),
             Message::Lease {
                 job_id,
@@ -126,9 +193,38 @@ impl Message {
                 // register.
                 gen: st("gen").unwrap_or_else(|_| "v100".into()),
             },
-            "register_ack" => {
-                Message::RegisterAck { server_id: num("server_id")? as usize }
+            "register_ack" => Message::RegisterAck {
+                server_id: num("server_id")? as usize,
+                // Pre-heartbeat leaders omit the field; 0 disables the
+                // worker's heartbeat thread.
+                heartbeat_s: num("heartbeat_s").unwrap_or(0.0),
+            },
+            "heartbeat" => {
+                Message::Heartbeat { server_id: num("server_id")? as usize }
             }
+            "submit" => Message::Submit {
+                job_id: num("job_id")? as u64,
+                tenant: st("tenant")?,
+                model: st("model")?,
+                gpus: num("gpus")? as u32,
+                arrival_s: num("arrival_s")?,
+                duration_s: num("duration_s")?,
+            },
+            "submit_ack" => Message::SubmitAck {
+                job_id: num("job_id")? as u64,
+                duplicate: j
+                    .get("duplicate")
+                    .as_bool()
+                    .ok_or("missing duplicate")?,
+            },
+            "query_status" => Message::QueryStatus,
+            "status" => Message::Status {
+                submitted: num("submitted")? as u64,
+                finished: num("finished")? as u64,
+                rounds: num("rounds")? as u64,
+                recoveries: num("recoveries")? as u64,
+            },
+            "error" => Message::Error { reason: st("reason")? },
             "lease" => Message::Lease {
                 job_id: num("job_id")? as u64,
                 model: st("model")?,
@@ -157,6 +253,11 @@ impl Message {
     }
 }
 
+/// Hard cap on one incoming frame. Every legitimate message is well
+/// under 1 KiB; the cap bounds buffer growth against a peer that
+/// streams bytes without ever sending '\n'.
+pub const MAX_LINE_BYTES: usize = 64 * 1024;
+
 /// Framed connection: one JSON message per line.
 pub struct Conn {
     reader: BufReader<TcpStream>,
@@ -176,11 +277,30 @@ impl Conn {
         self.writer.flush()
     }
 
-    /// Blocking receive; None on clean EOF.
+    /// Blocking receive; None on clean EOF (including EOF mid-line — a
+    /// peer that died mid-write is a disconnect, not a decode error).
+    /// A line longer than [`MAX_LINE_BYTES`] is an `InvalidData` error:
+    /// the buffer never grows past the cap, so a hostile or broken peer
+    /// cannot balloon leader memory.
     pub fn recv(&mut self) -> std::io::Result<Option<Message>> {
+        use std::io::Read;
         let mut line = String::new();
-        let n = self.reader.read_line(&mut line)?;
+        let n = (&mut self.reader)
+            .take(MAX_LINE_BYTES as u64 + 1)
+            .read_line(&mut line)?;
         if n == 0 {
+            return Ok(None);
+        }
+        if !line.ends_with('\n') {
+            if n > MAX_LINE_BYTES {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("frame exceeds {MAX_LINE_BYTES} byte cap"),
+                ));
+            }
+            // Mid-line EOF: the peer closed (or was killed) between
+            // bytes of a frame. Nothing durable was promised for an
+            // unterminated frame — treat it as a clean disconnect.
             return Ok(None);
         }
         Message::decode(line.trim_end()).map(Some).map_err(|e| {
@@ -219,7 +339,25 @@ mod tests {
                 mem_gb: 500.0,
                 gen: "p100".into(),
             },
-            Message::RegisterAck { server_id: 3 },
+            Message::RegisterAck { server_id: 3, heartbeat_s: 1.5 },
+            Message::Heartbeat { server_id: 3 },
+            Message::Submit {
+                job_id: 11,
+                tenant: "ops".into(),
+                model: "lstm".into(),
+                gpus: 2,
+                arrival_s: 60.0,
+                duration_s: 1800.0,
+            },
+            Message::SubmitAck { job_id: 11, duplicate: true },
+            Message::QueryStatus,
+            Message::Status {
+                submitted: 5,
+                finished: 2,
+                rounds: 9,
+                recoveries: 1,
+            },
+            Message::Error { reason: "duplicate server".into() },
             Message::Lease {
                 job_id: 7,
                 model: "resnet18".into(),
@@ -271,6 +409,57 @@ mod tests {
         assert!(Message::decode("not json").is_err());
         assert!(Message::decode(r#"{"type": "warp"}"#).is_err());
         assert!(Message::decode(r#"{"type": "lease"}"#).is_err());
+    }
+
+    #[test]
+    fn register_ack_without_heartbeat_defaults_to_zero() {
+        // Frames from a pre-heartbeat leader must still parse; 0
+        // disables the worker-side heartbeat thread.
+        let old = r#"{"type": "register_ack", "server_id": 2}"#;
+        assert_eq!(
+            Message::decode(old).unwrap(),
+            Message::RegisterAck { server_id: 2, heartbeat_s: 0.0 }
+        );
+    }
+
+    #[test]
+    fn recv_caps_line_length() {
+        use std::net::TcpListener;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            // A frame body beyond the cap, never newline-terminated
+            // from the reader's point of view until far too late.
+            let junk = vec![b'x'; MAX_LINE_BYTES + 1024];
+            s.write_all(&junk).unwrap();
+            s.write_all(b"\n").unwrap();
+        });
+        let mut conn = Conn::new(TcpStream::connect(addr).unwrap()).unwrap();
+        let err = conn.recv().expect_err("oversize frame must error");
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("cap"), "{err}");
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn recv_treats_mid_line_eof_as_clean_disconnect() {
+        use std::net::TcpListener;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            // Die mid-frame: bytes but no terminating newline.
+            s.write_all(b"{\"type\": \"finis").unwrap();
+            // socket drops here
+        });
+        let mut conn = Conn::new(TcpStream::connect(addr).unwrap()).unwrap();
+        t.join().unwrap();
+        assert_eq!(
+            conn.recv().expect("mid-line EOF is not an error"),
+            None,
+            "partial frame at EOF must read as a disconnect"
+        );
     }
 
     #[test]

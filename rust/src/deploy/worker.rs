@@ -82,14 +82,45 @@ impl Worker {
             mem_gb: cfg.mem_gb,
             gen: cfg.gen.clone(),
         })?;
-        let server_id = match conn.recv()? {
-            Some(Message::RegisterAck { server_id }) => server_id,
+        let (server_id, heartbeat_s) = match conn.recv()? {
+            Some(Message::RegisterAck { server_id, heartbeat_s }) => {
+                (server_id, heartbeat_s)
+            }
+            Some(Message::Error { reason }) => {
+                return Err(anyhow!("leader rejected registration: {reason}"))
+            }
             other => return Err(anyhow!("expected ack, got {other:?}")),
         };
 
         // Shared writer for runner threads.
         let writer: Arc<Mutex<TcpStream>> =
             Arc::new(Mutex::new(stream.try_clone()?));
+
+        // Heartbeat lease: beat at half the leader's period so one lost
+        // frame never expires the lease. The thread dies with the
+        // socket (write failure) or when the main loop exits.
+        let hb_stop = Arc::new(AtomicBool::new(false));
+        if heartbeat_s > 0.0 {
+            let writer = Arc::clone(&writer);
+            let stop = Arc::clone(&hb_stop);
+            std::thread::spawn(move || {
+                use std::io::Write;
+                let mut line =
+                    Message::Heartbeat { server_id }.encode();
+                line.push('\n');
+                while !stop.load(Ordering::SeqCst) {
+                    {
+                        let Ok(mut w) = writer.lock() else { break };
+                        if w.write_all(line.as_bytes()).is_err() {
+                            break;
+                        }
+                    }
+                    std::thread::sleep(Duration::from_secs_f64(
+                        heartbeat_s / 2.0,
+                    ));
+                }
+            });
+        }
         // Checkpoint store: job -> host params.
         let checkpoints: Arc<Mutex<HashMap<u64, Vec<f32>>>> =
             Arc::new(Mutex::new(HashMap::new()));
@@ -108,7 +139,12 @@ impl Worker {
             if let Some(t) = cfg.fail_after_s {
                 if started.elapsed().as_secs_f64() >= t {
                     // Simulated crash: stop runners' progress and vanish
-                    // without a protocol goodbye. The leader sees EOF.
+                    // without a protocol goodbye. Shut the socket down
+                    // at the fd level — runner/heartbeat threads hold
+                    // clones, and the leader must see EOF *now*, not
+                    // when the last clone drops.
+                    hb_stop.store(true, Ordering::SeqCst);
+                    let _ = stream.shutdown(std::net::Shutdown::Both);
                     for (_, h) in runners.drain() {
                         h.stop.store(true, Ordering::SeqCst);
                         let _ = h.join.join();
@@ -201,10 +237,17 @@ impl Worker {
                 }
                 Message::Shutdown => break,
                 other => {
-                    return Err(anyhow!("worker got unexpected {other:?}"))
+                    // Unknown frames are ignored, not fatal: a newer
+                    // leader may speak a superset of this protocol, and
+                    // dying here would turn that into a worker "crash"
+                    // the leader then fails over.
+                    if std::env::var_os("SYNERGY_DEPLOY_DEBUG").is_some() {
+                        eprintln!("[worker] ignoring frame {other:?}");
+                    }
                 }
             }
         }
+        hb_stop.store(true, Ordering::SeqCst);
         // Drain runners.
         for (_, h) in runners {
             h.stop.store(true, Ordering::SeqCst);

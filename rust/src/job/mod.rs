@@ -147,6 +147,20 @@ impl JobArena {
         JobArena { jobs, active: Vec::new(), by_id }
     }
 
+    /// Append a job mid-run (live submission injected by a
+    /// [`crate::sim::RoundDriver`]); returns its arena index. Ids must
+    /// stay unique — duplicates panic, like [`JobArena::new`].
+    pub fn push(&mut self, job: Job) -> usize {
+        let idx = self.jobs.len() as u32;
+        let pos = self
+            .by_id
+            .binary_search_by_key(&job.id, |e| e.0)
+            .expect_err(&format!("duplicate job id {:?}", job.id));
+        self.by_id.insert(pos, (job.id, idx));
+        self.jobs.push(job);
+        idx as usize
+    }
+
     /// Total jobs in the arena (active or not).
     pub fn n_jobs(&self) -> usize {
         self.jobs.len()
@@ -248,6 +262,31 @@ mod tests {
     fn arena_rejects_duplicate_ids() {
         let j = Job::new(JobId(1), ModelKind::Lstm, 1, 0.0, 60.0);
         JobArena::new(vec![j.clone(), j]);
+    }
+
+    #[test]
+    fn push_appends_and_keeps_id_lookup_sorted() {
+        let jobs: Vec<Job> = [5u64, 1]
+            .iter()
+            .map(|&i| Job::new(JobId(i), ModelKind::Lstm, 1, 0.0, 60.0))
+            .collect();
+        let mut a = JobArena::new(jobs);
+        // An id between the existing ones: lookup table must re-sort.
+        let idx = a.push(Job::new(JobId(3), ModelKind::Gnmt, 2, 9.0, 60.0));
+        assert_eq!(idx, 2);
+        assert_eq!(a.n_jobs(), 3);
+        assert_eq!(a.index_of(JobId(3)), 2);
+        assert_eq!(a.index_of(JobId(5)), 0);
+        a.activate(idx);
+        assert_eq!(a.n_active(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate job id")]
+    fn push_rejects_duplicate_ids() {
+        let j = Job::new(JobId(1), ModelKind::Lstm, 1, 0.0, 60.0);
+        let mut a = JobArena::new(vec![j.clone()]);
+        a.push(j);
     }
 
     #[test]

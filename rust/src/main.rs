@@ -30,7 +30,18 @@
 //! synergy models    # print the model zoo + CPU knees (Fig 2 data)
 //! synergy trace     --jobs 100 --load 8 --out trace.json
 //! synergy leader    --workers 2 --port 7331 --variant tiny ...
+//!                   [--journal wal/ [--recover]]  # write-ahead state
+//!                   # journal; --recover warm-starts bit-exactly
+//!                   [--report out.json]  # deterministic schedule report
+//!                   [--expect-jobs N]    # gate the round loop on N
+//!                   # admissions (source + network submissions)
+//!                   [--heartbeat S]      # worker lease period; silent
+//!                   # for 3S => fail over via preempt-and-requeue
+//!                   [--port-file f]      # write bound IP:PORT here
 //! synergy worker    --leader 127.0.0.1:7331 --artifacts artifacts
+//! synergy submit    --leader 127.0.0.1:7331 --id 7 --model resnet18 \
+//!                   --gpus 2 --duration 3600 [--tenant team-a]
+//!                   [--arrival S] | --status   # query run progress
 //! synergy config    --file experiment.json   # run from a config file
 //! ```
 //!
@@ -66,11 +77,12 @@ fn main() {
         Some("trace") => cmd_trace(&args),
         Some("leader") => cmd_leader(&args),
         Some("worker") => cmd_worker(&args),
+        Some("submit") => cmd_submit(&args),
         Some("config") => cmd_config(&args),
         Some("hetero") => cmd_hetero(&args),
         Some("version") => println!("synergy {}", synergy::VERSION),
         _ => {
-            eprintln!("usage: synergy <sim|sweep|compare|profile|models|trace|leader|worker|config|hetero> [--flags]");
+            eprintln!("usage: synergy <sim|sweep|compare|profile|models|trace|leader|worker|submit|config|hetero> [--flags]");
             eprintln!("see README.md for the full flag reference");
             std::process::exit(2);
         }
@@ -726,6 +738,12 @@ fn cmd_leader(args: &Args) {
         quotas,
         telemetry: args.get("telemetry").map(str::to_string),
         telemetry_timing: args.flag("telemetry-timing"),
+        journal_dir: args.get("journal").map(str::to_string),
+        recover: args.flag("recover"),
+        report_path: args.get("report").map(str::to_string),
+        expect_jobs: args.usize("expect-jobs", 0),
+        heartbeat_s: args.f64("heartbeat", 0.0),
+        port_file: args.get("port-file").map(str::to_string),
     };
     let leader = Leader::new(cfg);
     match leader.run_stream(source) {
@@ -779,6 +797,63 @@ fn cmd_worker(args: &Args) {
         Ok(n) => println!("worker done; ran {n} jobs"),
         Err(e) => {
             eprintln!("worker failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// Network job-submission client: one `Submit` (idempotent by
+/// `--id` — re-running the same command is acked as a duplicate, never
+/// double-admitted) or one `QueryStatus` (`--status`), then print the
+/// leader's reply.
+fn cmd_submit(args: &Args) {
+    use synergy::deploy::proto::Conn;
+    use synergy::deploy::Message;
+    let addr = args.get_or("leader", "127.0.0.1:7331");
+    let stream = std::net::TcpStream::connect(addr)
+        .unwrap_or_else(|e| panic!("connect {addr}: {e}"));
+    let mut conn = Conn::new(stream).expect("clone stream");
+    conn.set_read_timeout(Some(std::time::Duration::from_secs(30)))
+        .expect("set timeout");
+    let req = if args.flag("status") {
+        Message::QueryStatus
+    } else {
+        Message::Submit {
+            job_id: args.u64("id", u64::MAX),
+            tenant: args.get_or("tenant", "default").into(),
+            model: args
+                .get("model")
+                .expect("--model <name> required (see `synergy models`)")
+                .into(),
+            gpus: args.usize("gpus", 1) as u32,
+            arrival_s: args.f64("arrival", 0.0),
+            duration_s: args.f64("duration", 0.0),
+        }
+    };
+    if let Message::Submit { job_id, duration_s, .. } = &req {
+        assert!(*job_id != u64::MAX, "--id <job id> required");
+        assert!(*duration_s > 0.0, "--duration <seconds> required");
+    }
+    conn.send(&req).expect("send");
+    match conn.recv() {
+        Ok(Some(Message::SubmitAck { job_id, duplicate })) => {
+            println!(
+                "accepted job {job_id}{}",
+                if duplicate { " (duplicate: already admitted)" } else { "" }
+            );
+        }
+        Ok(Some(Message::Status { submitted, finished, rounds, recoveries })) => {
+            println!(
+                "submitted={submitted} finished={finished} rounds={rounds} \
+                 recoveries={recoveries}"
+            );
+        }
+        Ok(Some(Message::Error { reason })) => {
+            eprintln!("rejected: {reason}");
+            std::process::exit(1);
+        }
+        other => {
+            eprintln!("unexpected reply: {other:?}");
             std::process::exit(1);
         }
     }

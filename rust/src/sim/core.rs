@@ -152,6 +152,15 @@ impl RoundRates {
     pub fn get(&self, idx: usize) -> Option<f64> {
         self.placed[idx].then(|| self.rates[idx])
     }
+
+    /// Extend the slots to cover `n_jobs` arena entries (mid-run job
+    /// injection via a [`RoundDriver`]); existing entries are untouched.
+    pub fn grow(&mut self, n_jobs: usize) {
+        if n_jobs > self.rates.len() {
+            self.rates.resize(n_jobs, 0.0);
+            self.placed.resize(n_jobs, false);
+        }
+    }
 }
 
 /// Statistics of one planning round, as reported by
@@ -262,6 +271,116 @@ pub trait ClusterModel {
     fn pool_counters(&self, out: &mut Vec<crate::telemetry::PoolCounters>) {
         out.clear();
     }
+
+    /// Snapshot the currently committed placements as deployable grants
+    /// (primary-server assignment per placed job) into `out`, for a
+    /// [`RoundDriver`] that executes the plan on real workers. Read-only
+    /// on the schedule; called only when the driver asks for grants
+    /// ([`RoundDriver::wants_grants`]). The default reports none.
+    fn deployed_grants(&self, out: &mut Vec<DeployedGrant>) {
+        out.clear();
+    }
+}
+
+/// One committed placement, as a live driver deploys it: which server
+/// primarily hosts the gang and what the grant's demand vector is.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeployedGrant {
+    pub id: JobId,
+    /// Primary hosting server (the share with the most GPUs; lowest
+    /// server id on ties — deterministic).
+    pub server: usize,
+    pub gpus: u32,
+    pub cpus: f64,
+    pub mem_gb: f64,
+}
+
+/// Work or churn injected into a running core loop by a
+/// [`RoundDriver`].
+#[derive(Debug)]
+pub enum DriverEvent {
+    /// A job submitted mid-run. The core admits it through the normal
+    /// arrival path (profiling included) at
+    /// `max(job.arrival_s, now)`; jobs no pool can ever fit are
+    /// dropped, mirroring the up-front `fits` retain — drivers
+    /// validate before injecting.
+    Submit(Job),
+    /// Churn on type pool `pool` at the current sim time, routed
+    /// through the same [`ClusterModel::apply_fault`] preempt-and-
+    /// requeue path as a scripted fault timeline.
+    Churn { kind: FaultKind, pool: usize },
+}
+
+/// Hook surface that lets an external round executor (the live deploy
+/// leader) ride the event-driven core: the core remains the single
+/// owner of planning, admission, progress arithmetic, and completion
+/// accounting, while the driver feeds submissions/churn in and carries
+/// grants out to real workers. [`NullDriver`] implements every hook as
+/// a no-op, and `run_events_with_faults` runs through it — pure
+/// simulation paths are byte-identical to the pre-driver core.
+pub trait RoundDriver {
+    /// `true` while more work may still arrive: the loop keeps ticking
+    /// rounds even when every admitted job has finished.
+    fn stream_open(&self) -> bool {
+        false
+    }
+
+    /// Collect externally injected events at the top of a round
+    /// iteration. `now` is the current sim time; push into `inbox`.
+    fn poll(&mut self, now: f64, inbox: &mut Vec<DriverEvent>) {
+        let _ = (now, inbox);
+    }
+
+    /// Whether [`RoundDriver::on_round`] needs the committed grants
+    /// snapshot (skipped when `false`, so simulation paths never pay
+    /// for it).
+    fn wants_grants(&self) -> bool {
+        false
+    }
+
+    /// Observe one executed round after the plan is deployed and the
+    /// round's completions are folded.
+    fn on_round(&mut self, ctx: &RoundCtx) {
+        let _ = ctx;
+    }
+
+    /// Observe one exact completion, in completion order.
+    fn on_finished(&mut self, f: &FinishedJob, now: f64) {
+        let _ = (f, now);
+    }
+
+    /// Advance sim time toward `target` (the next event horizon). A
+    /// real-time driver sleeps the scaled wall interval and returns
+    /// `Some(target)`; returning `None` stops the loop (wall deadline
+    /// reached). The returned time must equal `target` whenever the
+    /// run is to stay byte-identical to a pure simulation.
+    fn advance(&mut self, now: f64, target: f64) -> Option<f64> {
+        let _ = now;
+        Some(target)
+    }
+}
+
+/// The inert driver behind every pure-simulation entry point.
+pub struct NullDriver;
+
+impl RoundDriver for NullDriver {}
+
+/// What [`RoundDriver::on_round`] sees of an executed round.
+pub struct RoundCtx<'a> {
+    /// Round counter (0-based, pre-increment).
+    pub round: usize,
+    /// Round start, sim seconds.
+    pub now: f64,
+    /// Round end: the earliest of lease expiry and the next event.
+    pub horizon: f64,
+    pub arena: &'a JobArena,
+    /// Committed placements (empty unless
+    /// [`RoundDriver::wants_grants`]).
+    pub grants: &'a [DeployedGrant],
+    /// Completions folded so far, run total.
+    pub finished: usize,
+    /// Jobs admitted so far, run total.
+    pub n_total: usize,
 }
 
 /// An event in the simulation queue.
@@ -719,24 +838,60 @@ pub fn run_events_with_faults<M: ClusterModel + ?Sized>(
     policy: &dyn SchedulingPolicy,
     quotas: Option<&TenantQuotas>,
     cfg: &CoreConfig,
+    jobs: Vec<Job>,
+    telemetry: Option<&mut TelemetryRecorder>,
+    faults: &[FaultEntry],
+) -> SimResult {
+    run_events_driven(
+        model,
+        policy,
+        quotas,
+        cfg,
+        jobs,
+        telemetry,
+        faults,
+        &mut NullDriver,
+    )
+}
+
+/// [`run_events_with_faults`] with a [`RoundDriver`] attached — the
+/// full core loop. The driver can hold the stream open past the last
+/// known job, inject submissions and churn mid-run, read each round's
+/// committed grants, observe exact completions, and pace (or stop) the
+/// advance of sim time. Every pure-simulation entry point runs through
+/// [`NullDriver`], whose hooks are all no-ops — those paths are
+/// byte-identical to the pre-driver core. The live deploy leader is
+/// the real driver: it shares this exact planning/accounting code
+/// path with the simulator, which is what makes a recovered leader's
+/// replay byte-identical to the run it resumes.
+#[allow(clippy::too_many_arguments)]
+pub fn run_events_driven<M: ClusterModel + ?Sized, D: RoundDriver>(
+    model: &mut M,
+    policy: &dyn SchedulingPolicy,
+    quotas: Option<&TenantQuotas>,
+    cfg: &CoreConfig,
     mut jobs: Vec<Job>,
     mut telemetry: Option<&mut TelemetryRecorder>,
     faults: &[FaultEntry],
+    driver: &mut D,
 ) -> SimResult {
     jobs.sort_by(|a, b| {
         a.arrival_s.total_cmp(&b.arrival_s).then(a.id.cmp(&b.id))
     });
     // Reject jobs that can never fit.
     jobs.retain(|j| model.fits(j));
-    let n_total = jobs.len();
+    let mut n_total = jobs.len();
 
     let mut queue = EventQueue::new();
     for (idx, j) in jobs.iter().enumerate() {
         queue.push(SimEvent::Arrival { at: j.arrival_s, idx });
     }
-    // The whole churn timeline is known up front (it is a pure function
-    // of the fault spec) — enqueue it; `seq` indexes back into `faults`.
-    for (seq, f) in faults.iter().enumerate() {
+    // The scripted churn timeline is known up front (it is a pure
+    // function of the fault spec) — enqueue it; `seq` indexes into
+    // `fault_log`, which grows past the scripted entries when a driver
+    // injects live churn.
+    let mut fault_log: Vec<FaultEntry> = faults.to_vec();
+    for (seq, f) in fault_log.iter().enumerate() {
         queue.push(match f.kind {
             FaultKind::Fail => SimEvent::ServerFailed { at: f.at, seq },
             FaultKind::Add => SimEvent::ServerAdded { at: f.at, seq },
@@ -777,6 +932,8 @@ pub fn run_events_with_faults<M: ClusterModel + ?Sized>(
     let mut planned_runnable: Vec<u32> = Vec::new();
     let mut have_plan = false;
     let mut done: Vec<u32> = Vec::new();
+    let mut inbox: Vec<DriverEvent> = Vec::new();
+    let mut grants_buf: Vec<DeployedGrant> = Vec::new();
 
     // Telemetry state. Zero-cost when no recorder is attached: the
     // buffers stay empty and every recording block is skipped.
@@ -800,7 +957,39 @@ pub fn run_events_with_faults<M: ClusterModel + ?Sized>(
     let mut gangs_placed_total = 0u64;
     let mut cross_rack_total = 0u64;
 
-    while finished.len() < n_total && now < cfg.max_sim_s {
+    while (finished.len() < n_total || driver.stream_open())
+        && now < cfg.max_sim_s
+    {
+        // Externally injected work and churn first, so events injected
+        // "now" fire inside this round's event drain (churn before
+        // arrivals at equal times, as always).
+        driver.poll(now, &mut inbox);
+        for ev in inbox.drain(..) {
+            match ev {
+                DriverEvent::Submit(job) => {
+                    if !model.fits(&job) {
+                        continue; // mirrors the up-front `fits` retain
+                    }
+                    let at = job.arrival_s.max(now);
+                    let idx = arena.push(job);
+                    rates.grow(arena.n_jobs());
+                    queue.push(SimEvent::Arrival { at, idx });
+                    n_total += 1;
+                }
+                DriverEvent::Churn { kind, pool } => {
+                    let seq = fault_log.len();
+                    fault_log.push(FaultEntry { at: now, pool, kind });
+                    queue.push(match kind {
+                        FaultKind::Fail => {
+                            SimEvent::ServerFailed { at: now, seq }
+                        }
+                        FaultKind::Add => {
+                            SimEvent::ServerAdded { at: now, seq }
+                        }
+                    });
+                }
+            }
+        }
         let mut planned_this_round: Option<PlanStats> = None;
         // Per-round churn telemetry tallies (events are instantaneous,
         // so unlike the admission/gang gauges nothing carries across
@@ -818,7 +1007,7 @@ pub fn run_events_with_faults<M: ClusterModel + ?Sized>(
                 preempted_buf.clear();
                 if model.apply_fault(
                     kind,
-                    faults[seq].pool,
+                    fault_log[seq].pool,
                     &arena,
                     &mut preempted_buf,
                 ) {
@@ -995,16 +1184,34 @@ pub fn run_events_with_faults<M: ClusterModel + ?Sized>(
                 arena.deactivate(idx);
                 model.forget(idx);
                 let j = arena.job(idx);
-                finished.push(FinishedJob {
+                let fj = FinishedJob {
                     id: j.id,
                     tenant: j.tenant,
                     gpus: j.gpus,
                     arrival_s: j.arrival_s,
                     duration_prop_s: j.duration_prop_s,
                     jct_s: j.finish_s - j.arrival_s,
-                });
+                };
+                finished.push(fj);
+                driver.on_finished(&fj, now);
             }
         }
+
+        // Hand the executed round to the driver (lease deployment on
+        // real workers, journal checkpointing). Strictly read-only on
+        // the schedule; a no-op for [`NullDriver`].
+        if driver.wants_grants() {
+            model.deployed_grants(&mut grants_buf);
+        }
+        driver.on_round(&RoundCtx {
+            round: rounds,
+            now,
+            horizon,
+            arena: &arena,
+            grants: &grants_buf,
+            finished: finished.len(),
+            n_total,
+        });
 
         // Sample utilization once per executed round.
         let sample = model.utilization(now, &arena);
@@ -1108,15 +1315,18 @@ pub fn run_events_with_faults<M: ClusterModel + ?Sized>(
         rounds += 1;
         // Jump straight to the next arrival or churn event when idle.
         // The round counter just advanced, so this round's lease is
-        // already stale.
-        if arena.n_active() == 0 {
-            match queue.next_wake_at(rounds) {
-                Some(at) => now = at,
-                None => now = horizon,
-            }
+        // already stale. The driver paces the advance (a real-time
+        // driver sleeps the scaled interval; `None` = wall deadline,
+        // stop). NullDriver advances instantly to the target.
+        let target = if arena.n_active() == 0 {
+            queue.next_wake_at(rounds).unwrap_or(horizon)
         } else {
-            now = horizon;
-        }
+            horizon
+        };
+        now = match driver.advance(now, target) {
+            Some(t) => t,
+            None => break,
+        };
     }
 
     let makespan_s = finished

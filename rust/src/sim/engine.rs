@@ -13,7 +13,7 @@
 
 use super::core::{
     run_events_with_faults, utilization_sample, ClusterModel, CoreConfig,
-    PlanStats, RoundRates, SimResult,
+    DeployedGrant, PlanStats, RoundRates, SimResult,
 };
 use super::faults::{FaultKind, FaultSpec};
 use crate::cluster::{Fleet, GpuGen, ServerSpec, TopologySpec, TypeSpec};
@@ -140,6 +140,13 @@ pub struct FleetModel {
     /// Checkpoint of the previous plan (valid while the fleet is
     /// untouched, which the core guarantees between plans).
     trace: Option<PlanTrace>,
+    /// Capture each plan's committed placements as [`DeployedGrant`]s
+    /// for a live round driver. Off (and cost-free) on pure simulation
+    /// paths.
+    capture_grants: bool,
+    /// The last planned round's grants (valid across memoized rounds —
+    /// placements stay committed until the next replan).
+    last_grants: Vec<DeployedGrant>,
 }
 
 impl FleetModel {
@@ -187,7 +194,15 @@ impl FleetModel {
             max_pool_gpus,
             resume,
             trace: None,
+            capture_grants: false,
+            last_grants: Vec::new(),
         }
+    }
+
+    /// Turn on per-plan grant capture (the deploy leader's driver needs
+    /// server assignments; simulation paths never pay for them).
+    pub fn enable_grant_capture(&mut self) {
+        self.capture_grants = true;
     }
 
     fn sens(&self, idx: usize) -> &Sensitivity {
@@ -279,6 +294,9 @@ impl ClusterModel for FleetModel {
         // so their rates stay bit-identical to pre-topology builds.
         let mut gangs_placed = 0u32;
         let mut cross_rack_gangs = 0u32;
+        if self.capture_grants {
+            self.last_grants.clear();
+        }
         for &idx in runnable {
             let job = arena.job(idx as usize);
             if let Some(grant) = grants.get(&job.id) {
@@ -308,6 +326,26 @@ impl ClusterModel for FleetModel {
                     }
                 }
                 rates.set(idx as usize, rate);
+                if self.capture_grants {
+                    // Primary host: the share holding the most GPUs,
+                    // lowest server id on ties — deterministic.
+                    let server = grant
+                        .placement
+                        .shares
+                        .iter()
+                        .max_by(|(ia, a), (ib, b)| {
+                            a.gpus.cmp(&b.gpus).then(ib.cmp(ia))
+                        })
+                        .map(|(&sid, _)| sid)
+                        .expect("grant has at least one share");
+                    self.last_grants.push(DeployedGrant {
+                        id: job.id,
+                        server,
+                        gpus: job.gpus,
+                        cpus: grant.demand.cpus,
+                        mem_gb: grant.demand.mem_gb,
+                    });
+                }
             }
         }
         // Drain the per-pool fit-walk counters unconditionally so the
@@ -387,6 +425,13 @@ impl ClusterModel for FleetModel {
             mem_util,
             self.fleet.total_cpus(),
         )
+    }
+
+    fn deployed_grants(&self, out: &mut Vec<DeployedGrant>) {
+        out.clear();
+        if self.capture_grants {
+            out.extend(self.last_grants.iter().cloned());
+        }
     }
 
     fn pool_counters(

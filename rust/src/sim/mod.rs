@@ -38,9 +38,10 @@ mod engine;
 mod faults;
 
 pub use self::core::{
-    run_events, run_events_recorded, run_events_with_faults,
-    utilization_sample, ClusterModel, CoreConfig, FinishedJob, PlanStats,
-    RoundRates, SimEvent, SimResult,
+    run_events, run_events_driven, run_events_recorded,
+    run_events_with_faults, utilization_sample, ClusterModel, CoreConfig,
+    DeployedGrant, DriverEvent, FinishedJob, NullDriver, PlanStats,
+    RoundCtx, RoundDriver, RoundRates, SimEvent, SimResult,
 };
 pub use engine::{FleetModel, HomoModel, SimConfig, Simulator};
 pub use faults::{FaultEntry, FaultKind, FaultSpec, ScriptFault};

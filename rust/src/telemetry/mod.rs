@@ -302,6 +302,22 @@ pub struct TelemetryConfig {
     pub timing: bool,
 }
 
+/// Live-service lifecycle counters (deploy leader only): how the run
+/// *started* and how the fleet *degraded*, as opposed to what was
+/// scheduled. Counters only — no wall clock — so counters-only profiles
+/// stay deterministic; note these describe the service process, not the
+/// schedule (a recovered run records `recoveries: 1` while producing a
+/// schedule byte-identical to an unkilled run's).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServiceCounters {
+    /// 1 when the leader warm-started from a write-ahead journal.
+    pub recoveries: u64,
+    /// Journal records replayed during warm start.
+    pub journal_records_replayed: u64,
+    /// Workers failed over because their heartbeat lease expired.
+    pub heartbeat_expiries: u64,
+}
+
 /// The run recorder: two [`DeltaLog`] arenas (round samples, plan
 /// events) plus the fixed pool shape captured at the first sample.
 #[derive(Debug, Clone, Default)]
@@ -311,6 +327,7 @@ pub struct TelemetryRecorder {
     plans: DeltaLog,
     pool_gens: Vec<GpuGen>,
     scratch: Vec<i64>,
+    service: Option<ServiceCounters>,
 }
 
 impl TelemetryRecorder {
@@ -321,7 +338,19 @@ impl TelemetryRecorder {
             plans: DeltaLog::new(PLAN_PREFIX),
             pool_gens: Vec::new(),
             scratch: Vec::new(),
+            service: None,
         }
+    }
+
+    /// Attach the service-lifecycle counters (deploy leader). Absent
+    /// from simulator profiles; at most one `service` line per export.
+    pub fn record_service(&mut self, c: ServiceCounters) {
+        self.service = Some(c);
+    }
+
+    /// The recorded service counters, if any.
+    pub fn service(&self) -> Option<ServiceCounters> {
+        self.service
     }
 
     pub fn config(&self) -> TelemetryConfig {
@@ -640,6 +669,22 @@ impl TelemetryRecorder {
             out.push_str(&Self::plan_json(&e).encode());
             out.push('\n');
         }
+        if let Some(c) = self.service {
+            let line = Json::obj(vec![
+                ("kind", Json::str("service")),
+                ("recoveries", Json::num(c.recoveries as f64)),
+                (
+                    "journal_records_replayed",
+                    Json::num(c.journal_records_replayed as f64),
+                ),
+                (
+                    "heartbeat_expiries",
+                    Json::num(c.heartbeat_expiries as f64),
+                ),
+            ]);
+            out.push_str(&line.encode());
+            out.push('\n');
+        }
         out
     }
 
@@ -923,6 +968,32 @@ mod tests {
         assert!(!rec.to_csv().contains("wall_ms"));
         // Export is a pure function of recorded state.
         assert_eq!(jsonl, rec.to_jsonl());
+    }
+
+    #[test]
+    fn service_counters_are_optional_and_counters_only() {
+        let mut rec = TelemetryRecorder::new(TelemetryConfig::default());
+        rec.record_round(&sample(0, 1));
+        // Simulator profiles carry no service line at all.
+        assert!(rec.service().is_none());
+        assert!(!rec.to_jsonl().contains("\"kind\":\"service\""));
+        rec.record_service(ServiceCounters {
+            recoveries: 1,
+            journal_records_replayed: 42,
+            heartbeat_expiries: 2,
+        });
+        let jsonl = rec.to_jsonl();
+        let line = jsonl
+            .lines()
+            .find(|l| l.contains("\"kind\":\"service\""))
+            .expect("service line");
+        assert!(line.contains("\"recoveries\":1"));
+        assert!(line.contains("\"journal_records_replayed\":42"));
+        assert!(line.contains("\"heartbeat_expiries\":2"));
+        // Still counters-only: no wall clock sneaks in via the service
+        // line, and CSV shape is untouched.
+        assert!(!jsonl.contains("wall_ms"));
+        assert!(!rec.to_csv().contains("service"));
     }
 
     #[test]

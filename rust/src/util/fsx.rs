@@ -42,6 +42,40 @@ pub fn write_or_exit(path: &str, contents: &str, what: &str) {
     }
 }
 
+/// Append `bytes` to `path` (creating it and any missing parents) and
+/// fsync the file data before returning. Write-ahead-log contract: once
+/// this returns `Ok`, the record survives a crash of the process — the
+/// caller may acknowledge it.
+pub fn append_durable(path: &Path, bytes: &[u8]) -> Result<(), String> {
+    use std::io::Write;
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent).map_err(|e| {
+                format!("cannot create directory {}: {}", parent.display(), e)
+            })?;
+        }
+    }
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .map_err(|e| format!("cannot open {}: {}", path.display(), e))?;
+    f.write_all(bytes)
+        .map_err(|e| format!("cannot append {}: {}", path.display(), e))?;
+    f.sync_data()
+        .map_err(|e| format!("cannot fsync {}: {}", path.display(), e))
+}
+
+/// fsync a directory so entries created or renamed inside it are
+/// durable (segment rotation: create the new segment, then sync its
+/// parent so the directory entry itself survives a crash).
+pub fn sync_dir(dir: &Path) -> Result<(), String> {
+    let f = std::fs::File::open(dir)
+        .map_err(|e| format!("cannot open {}: {}", dir.display(), e))?;
+    f.sync_all()
+        .map_err(|e| format!("cannot fsync {}: {}", dir.display(), e))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -88,6 +122,17 @@ mod tests {
         let path = root.join("flat.txt");
         write_creating(&path, b"ok").expect("flat write");
         assert_eq!(std::fs::read(&path).unwrap(), b"ok");
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn append_durable_accumulates_records() {
+        let root = scratch("wal");
+        let path = root.join("seg/wal-000000.jsonl");
+        append_durable(&path, b"a\n").expect("first append");
+        append_durable(&path, b"b\n").expect("second append");
+        assert_eq!(std::fs::read(&path).unwrap(), b"a\nb\n");
+        sync_dir(&path.parent().unwrap()).expect("dir fsync");
         std::fs::remove_dir_all(&root).unwrap();
     }
 

@@ -3,13 +3,19 @@
 //!
 //! Runtime tests require `make artifacts` to have produced the `tiny`
 //! variant; they are skipped (with a note) when artifacts are absent so
-//! `cargo test` works on a fresh checkout.
+//! `cargo test` works on a fresh checkout. Deploy tests are
+//! protocol-only (`real_compute: false`) and run on localhost.
 
-use synergy::deploy::{Leader, LeaderConfig, Worker, WorkerConfig};
+use synergy::deploy::proto::Conn;
+use synergy::deploy::{
+    Leader, LeaderConfig, Message, Worker, WorkerConfig,
+};
+use synergy::job::{Job, JobId, ModelKind};
 use synergy::runtime::{Runtime, SyntheticCorpus, Trainer};
 use synergy::trace::{generate, Split, TraceConfig};
 use synergy::workload::{SyntheticSource, TenantSpec, WorkloadSource};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 fn artifacts_dir() -> Option<String> {
     let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
@@ -18,6 +24,28 @@ fn artifacts_dir() -> Option<String> {
     } else {
         eprintln!("skipping: artifacts not built (run `make artifacts`)");
         None
+    }
+}
+
+/// Hand-built jobs with exactly known GPU-proportional durations, so a
+/// test can pick its wall-clock envelope: under `mechanism:
+/// "proportional"` a job of duration D finishes after D simulated
+/// seconds of allocation, i.e. D / time_scale wall seconds of runtime.
+fn fixed_jobs(n: usize, gpus: u32, duration_s: f64) -> Vec<Job> {
+    (0..n)
+        .map(|i| {
+            Job::new(JobId(i as u64), ModelKind::ResNet18, gpus, 0.0, duration_s)
+        })
+        .collect()
+}
+
+/// Wait for the leader thread to publish its ephemeral bind address.
+fn wait_addr(leader: &Arc<Leader>) -> std::net::SocketAddr {
+    loop {
+        if let Some(a) = *leader.addr.lock().unwrap() {
+            break a;
+        }
+        std::thread::sleep(Duration::from_millis(10));
     }
 }
 
@@ -92,18 +120,11 @@ fn deploy_protocol_roundtrip_without_compute() {
         mechanism: "tune".into(),
         variant: "tiny".into(),
         max_real_s: 60.0,
-        quotas: None,
-        telemetry: None,
-        telemetry_timing: false,
+        ..LeaderConfig::default()
     }));
     let l2 = Arc::clone(&leader);
     let t = std::thread::spawn(move || l2.run(jobs));
-    let addr = loop {
-        if let Some(a) = *leader.addr.lock().unwrap() {
-            break a;
-        }
-        std::thread::sleep(std::time::Duration::from_millis(10));
-    };
+    let addr = wait_addr(&leader);
     let mut workers = Vec::new();
     for _ in 0..2 {
         let cfg = WorkerConfig {
@@ -119,6 +140,7 @@ fn deploy_protocol_roundtrip_without_compute() {
     }
     assert_eq!(report.jcts.len(), n, "all jobs must finish");
     assert!(report.rounds > 0);
+    assert_eq!(report.recoveries, 0, "fresh run must not report recovery");
     for (_, jct) in &report.jcts {
         assert!(*jct > 0.0 && jct.is_finite());
     }
@@ -126,9 +148,9 @@ fn deploy_protocol_roundtrip_without_compute() {
 
 #[test]
 fn deploy_streams_arrivals_from_a_workload_source() {
-    // run_stream: the leader pulls jobs from a WorkloadSource as
-    // simulated time passes their arrivals (no up-front job list), and
-    // the report carries tenant tags through to per-tenant stats.
+    // run_stream: the leader admits every job a WorkloadSource yields
+    // (arrival times respected by the event-driven core), and the report
+    // carries tenant tags through to per-tenant stats.
     let source = SyntheticSource::new(TraceConfig {
         n_jobs: 6,
         split: Split::new(0, 100, 0),
@@ -147,18 +169,11 @@ fn deploy_streams_arrivals_from_a_workload_source() {
         mechanism: "tune".into(),
         variant: "tiny".into(),
         max_real_s: 60.0,
-        quotas: None,
-        telemetry: None,
-        telemetry_timing: false,
+        ..LeaderConfig::default()
     }));
     let l2 = Arc::clone(&leader);
     let t = std::thread::spawn(move || l2.run_stream(Box::new(source)));
-    let addr = loop {
-        if let Some(a) = *leader.addr.lock().unwrap() {
-            break a;
-        }
-        std::thread::sleep(std::time::Duration::from_millis(10));
-    };
+    let addr = wait_addr(&leader);
     let cfg = WorkerConfig {
         leader_addr: addr.to_string(),
         real_compute: false,
@@ -177,19 +192,15 @@ fn deploy_streams_arrivals_from_a_workload_source() {
 
 #[test]
 fn deploy_round_cadence_follows_absolute_grid() {
-    // The leader schedules round boundaries on absolute multiples of
-    // `round_real_s` (RoundTicker), subtracting planning time from each
-    // sleep instead of sleeping the full period after planning. Smoke
-    // check with generous CI tolerance: R rounds must take at least
-    // (R-1) periods of wall time (rounds can never fire early) and not
-    // wildly more than R periods.
-    let jobs = generate(&TraceConfig {
-        n_jobs: 4,
-        split: Split::new(0, 100, 0),
-        multi_gpu: false,
-        jobs_per_hour: None,
-        seed: 5,
-    });
+    // Round boundaries land on absolute multiples of `round_real_s`
+    // (WallGrid), subtracting planning time from each sleep instead of
+    // sleeping the full period after planning. Smoke check with generous
+    // CI tolerance: R rounds must take at least (R-1) periods of wall
+    // time (rounds can never fire early) and not wildly more than R
+    // periods. Fixed-duration jobs pin the round count: 3 one-GPU jobs
+    // of 25 000 sim-seconds at scale 40 000 under proportional
+    // allocation span 3 rounds of 10 000 sim-seconds.
+    let jobs = fixed_jobs(3, 1, 25_000.0);
     let n = jobs.len();
     let period = 0.25;
     let leader = Arc::new(Leader::new(LeaderConfig {
@@ -198,25 +209,18 @@ fn deploy_round_cadence_follows_absolute_grid() {
         round_real_s: period,
         time_scale: 40_000.0,
         policy: "fifo".into(),
-        mechanism: "tune".into(),
+        mechanism: "proportional".into(),
         variant: "tiny".into(),
         max_real_s: 60.0,
-        quotas: None,
-        telemetry: None,
-        telemetry_timing: false,
+        ..LeaderConfig::default()
     }));
     let l2 = Arc::clone(&leader);
     let t = std::thread::spawn(move || {
-        let t0 = std::time::Instant::now();
+        let t0 = Instant::now();
         let report = l2.run(jobs);
         (report, t0.elapsed().as_secs_f64())
     });
-    let addr = loop {
-        if let Some(a) = *leader.addr.lock().unwrap() {
-            break a;
-        }
-        std::thread::sleep(std::time::Duration::from_millis(10));
-    };
+    let addr = wait_addr(&leader);
     let cfg = WorkerConfig {
         leader_addr: addr.to_string(),
         real_compute: false,
@@ -245,37 +249,28 @@ fn deploy_round_cadence_follows_absolute_grid() {
 #[test]
 fn deploy_survives_worker_crash() {
     // Leader + 2 workers; one worker crashes mid-run (fault injection).
-    // The leader must fail it over and drain the whole trace on the
-    // survivor.
-    let jobs = generate(&TraceConfig {
-        n_jobs: 5,
-        split: Split::new(0, 100, 0),
-        multi_gpu: false,
-        jobs_per_hour: None,
-        seed: 4,
-    });
+    // The leader must fail it over through the preempt-and-requeue
+    // churn path and drain the whole trace on the survivor. Four 4-GPU
+    // jobs fill both 8-GPU workers, so the crashed worker is guaranteed
+    // to be hosting jobs when it dies; 2400 sim-second durations at
+    // scale 600 put the unperturbed drain at ~4 s wall — the 2 s crash
+    // lands mid-run.
+    let jobs = fixed_jobs(4, 4, 2400.0);
     let n = jobs.len();
     let leader = Arc::new(Leader::new(LeaderConfig {
         bind: "127.0.0.1:0".into(),
         n_workers: 2,
         round_real_s: 0.2,
-        time_scale: 40_000.0,
+        time_scale: 600.0,
         policy: "srtf".into(),
-        mechanism: "tune".into(),
+        mechanism: "proportional".into(),
         variant: "tiny".into(),
         max_real_s: 90.0,
-        quotas: None,
-        telemetry: None,
-        telemetry_timing: false,
+        ..LeaderConfig::default()
     }));
     let l2 = Arc::clone(&leader);
     let t = std::thread::spawn(move || l2.run(jobs));
-    let addr = loop {
-        if let Some(a) = *leader.addr.lock().unwrap() {
-            break a;
-        }
-        std::thread::sleep(std::time::Duration::from_millis(10));
-    };
+    let addr = wait_addr(&leader);
     let mut workers = Vec::new();
     for i in 0..2 {
         let cfg = WorkerConfig {
@@ -296,4 +291,379 @@ fn deploy_survives_worker_crash() {
         n,
         "all jobs must finish despite the worker crash"
     );
+    assert_eq!(report.servers_failed, 1, "crash must register as churn");
+    assert!(
+        report.preemptions >= 1,
+        "jobs on the crashed worker must be preempted-and-requeued, \
+         not lost"
+    );
+}
+
+#[test]
+fn heartbeat_lease_expiry_fails_over_a_silent_worker() {
+    // A worker that registers but never heartbeats has its lease
+    // expired after 3 periods and is failed over exactly like a
+    // disconnect — its jobs requeue with progress preserved and the
+    // run drains on the live worker.
+    let jobs = fixed_jobs(4, 4, 1800.0);
+    let n = jobs.len();
+    let leader = Arc::new(Leader::new(LeaderConfig {
+        bind: "127.0.0.1:0".into(),
+        n_workers: 2,
+        round_real_s: 0.2,
+        time_scale: 600.0,
+        policy: "srtf".into(),
+        mechanism: "proportional".into(),
+        variant: "tiny".into(),
+        max_real_s: 90.0,
+        heartbeat_s: 0.3,
+        ..LeaderConfig::default()
+    }));
+    let l2 = Arc::clone(&leader);
+    let t = std::thread::spawn(move || l2.run(jobs));
+    let addr = wait_addr(&leader);
+    // Worker 0: a real worker (its heartbeat thread beats at 0.15 s).
+    let cfg = WorkerConfig {
+        leader_addr: addr.to_string(),
+        real_compute: false,
+        ..Default::default()
+    };
+    let w = std::thread::spawn(move || Worker::run(cfg));
+    // Worker 1: registers by hand, then goes silent — the connection
+    // stays open (no EOF), so only the heartbeat lease can catch it.
+    let stream = std::net::TcpStream::connect(addr).expect("connect");
+    let mut silent = Conn::new(stream).expect("conn");
+    silent
+        .send(&Message::Register {
+            gpus: 8,
+            cpus: 24,
+            mem_gb: 500.0,
+            gen: "v100".into(),
+        })
+        .expect("register");
+    match silent.recv().expect("ack") {
+        Some(Message::RegisterAck { heartbeat_s, .. }) => {
+            assert_eq!(heartbeat_s, 0.3, "ack must carry the lease period");
+        }
+        other => panic!("expected ack, got {other:?}"),
+    }
+    let report = t.join().unwrap().expect("leader must survive the expiry");
+    drop(silent);
+    let _ = w.join();
+    assert_eq!(report.jcts.len(), n, "all jobs must finish");
+    assert!(
+        report.heartbeat_expiries >= 1,
+        "the silent worker's lease must expire"
+    );
+    assert_eq!(report.servers_failed, 1);
+}
+
+#[test]
+fn duplicate_registration_gets_a_typed_fleet_full_error() {
+    // The fleet is full (1/1 workers alive): a second registration must
+    // be answered with a typed Error frame — not a panic, not a silent
+    // replacement of the live worker.
+    let jobs = fixed_jobs(2, 1, 2400.0); // ~4 s run: plenty of rounds
+    let leader = Arc::new(Leader::new(LeaderConfig {
+        bind: "127.0.0.1:0".into(),
+        n_workers: 1,
+        round_real_s: 0.2,
+        time_scale: 600.0,
+        policy: "fifo".into(),
+        mechanism: "proportional".into(),
+        variant: "tiny".into(),
+        max_real_s: 60.0,
+        ..LeaderConfig::default()
+    }));
+    let l2 = Arc::clone(&leader);
+    let t = std::thread::spawn(move || l2.run(jobs));
+    let addr = wait_addr(&leader);
+    let cfg = WorkerConfig {
+        leader_addr: addr.to_string(),
+        real_compute: false,
+        ..Default::default()
+    };
+    let w = std::thread::spawn(move || Worker::run(cfg));
+    // Give the round loop time to start (rejoins drain once per poll).
+    std::thread::sleep(Duration::from_millis(600));
+    let stream = std::net::TcpStream::connect(addr).expect("connect");
+    let mut dup = Conn::new(stream).expect("conn");
+    dup.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    dup.send(&Message::Register {
+        gpus: 8,
+        cpus: 24,
+        mem_gb: 500.0,
+        gen: "v100".into(),
+    })
+    .expect("register");
+    match dup.recv().expect("reply") {
+        Some(Message::Error { reason }) => {
+            assert!(
+                reason.contains("fleet full"),
+                "duplicate registration must be rejected as fleet-full, \
+                 got: {reason}"
+            );
+        }
+        other => panic!("expected Error, got {other:?}"),
+    }
+    let report = t.join().unwrap().expect("leader run");
+    let _ = w.join();
+    assert_eq!(report.jcts.len(), 2, "run must be undisturbed");
+    assert_eq!(report.servers_failed, 0, "no churn from the duplicate");
+}
+
+#[test]
+fn submissions_are_idempotent_and_conflicts_get_typed_errors() {
+    // Network admission: a resubmitted job id with the same spec is
+    // acked as a duplicate (never double-admitted), a conflicting spec
+    // under a known id gets a typed Error, and malformed submissions
+    // (unknown model, infeasible gang) are rejected before admission.
+    let leader = Arc::new(Leader::new(LeaderConfig {
+        bind: "127.0.0.1:0".into(),
+        n_workers: 1,
+        round_real_s: 0.2,
+        time_scale: 600.0,
+        policy: "fifo".into(),
+        mechanism: "proportional".into(),
+        variant: "tiny".into(),
+        max_real_s: 60.0,
+        expect_jobs: 2,
+        ..LeaderConfig::default()
+    }));
+    let l2 = Arc::clone(&leader);
+    let t = std::thread::spawn(move || l2.run(Vec::new()));
+    let addr = wait_addr(&leader);
+    let cfg = WorkerConfig {
+        leader_addr: addr.to_string(),
+        real_compute: false,
+        ..Default::default()
+    };
+    let w = std::thread::spawn(move || Worker::run(cfg));
+
+    let stream = std::net::TcpStream::connect(addr).expect("connect");
+    let mut client = Conn::new(stream).expect("conn");
+    client.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let submit = |c: &mut Conn, id: u64, gpus: u32, model: &str| {
+        c.send(&Message::Submit {
+            job_id: id,
+            tenant: "team-a".into(),
+            model: model.into(),
+            gpus,
+            arrival_s: 0.0,
+            duration_s: 600.0,
+        })
+        .expect("send");
+        c.recv().expect("reply").expect("reply frame")
+    };
+    // Fresh admission.
+    match submit(&mut client, 7, 1, "resnet18") {
+        Message::SubmitAck { job_id: 7, duplicate: false } => {}
+        other => panic!("expected fresh ack, got {other:?}"),
+    }
+    // Same id, same spec: idempotent duplicate ack.
+    match submit(&mut client, 7, 1, "resnet18") {
+        Message::SubmitAck { job_id: 7, duplicate: true } => {}
+        other => panic!("expected duplicate ack, got {other:?}"),
+    }
+    // Same id, different spec: typed conflict error.
+    match submit(&mut client, 7, 2, "resnet18") {
+        Message::Error { reason } => {
+            assert!(reason.contains("different spec"), "got: {reason}")
+        }
+        other => panic!("expected conflict Error, got {other:?}"),
+    }
+    // Unknown model: rejected before admission.
+    match submit(&mut client, 9, 1, "not-a-model") {
+        Message::Error { reason } => {
+            assert!(reason.contains("unknown model"), "got: {reason}")
+        }
+        other => panic!("expected Error, got {other:?}"),
+    }
+    // Infeasible gang (one 8-GPU worker): rejected.
+    match submit(&mut client, 9, 99, "resnet18") {
+        Message::Error { reason } => {
+            assert!(reason.contains("capacity"), "got: {reason}")
+        }
+        other => panic!("expected Error, got {other:?}"),
+    }
+    // Second distinct job releases the expect_jobs gate.
+    match submit(&mut client, 8, 1, "resnet18") {
+        Message::SubmitAck { job_id: 8, duplicate: false } => {}
+        other => panic!("expected fresh ack, got {other:?}"),
+    }
+    // Status query on the same connection (client sessions are loops).
+    client.send(&Message::QueryStatus).expect("query");
+    match client.recv().expect("status").expect("frame") {
+        Message::Status { submitted, .. } => assert_eq!(submitted, 2),
+        other => panic!("expected Status, got {other:?}"),
+    }
+    drop(client);
+
+    let report = t.join().unwrap().expect("leader run");
+    let _ = w.join();
+    assert_eq!(
+        report.jcts.len(),
+        2,
+        "exactly the two distinct jobs run — duplicates are not \
+         double-admitted"
+    );
+    let ids: Vec<u64> = report.jcts.iter().map(|&(id, _)| id).collect();
+    assert!(ids.contains(&7) && ids.contains(&8), "ids 7 and 8: {ids:?}");
+}
+
+// ---------------------------------------------------------------------
+// Kill-and-recover: the tentpole invariant, driven end-to-end through
+// the real binary (SIGKILL, new process, --recover).
+// ---------------------------------------------------------------------
+
+/// Wait for the leader subprocess to write its port file; return the
+/// dial address.
+fn wait_port_file(path: &std::path::Path) -> String {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        if let Ok(s) = std::fs::read_to_string(path) {
+            let s = s.trim();
+            if let Some(port) = s.rsplit(':').next() {
+                if !port.is_empty() && s.contains(':') {
+                    return format!("127.0.0.1:{port}");
+                }
+            }
+        }
+        assert!(Instant::now() < deadline, "leader never wrote {path:?}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+fn spawn_leader(
+    bin: &str,
+    dir: &std::path::Path,
+    recover: bool,
+) -> std::process::Child {
+    let mut cmd = std::process::Command::new(bin);
+    cmd.args([
+        "leader",
+        "--port",
+        "0",
+        "--workers",
+        "1",
+        "--jobs",
+        "0", // empty source: jobs arrive over the network
+        "--round-real",
+        "0.2",
+        "--time-scale",
+        "600",
+        "--policy",
+        "srtf",
+        "--mechanism",
+        "proportional",
+        "--max-real",
+        "90",
+        "--expect-jobs",
+        "3",
+    ])
+    .arg("--journal")
+    .arg(dir.join("wal"))
+    .arg("--report")
+    .arg(dir.join("report.json"))
+    .arg("--port-file")
+    .arg(dir.join("port"))
+    .stdout(std::process::Stdio::null())
+    .stderr(std::process::Stdio::null());
+    if recover {
+        cmd.arg("--recover");
+    }
+    cmd.spawn().expect("spawn leader")
+}
+
+fn spawn_worker(bin: &str, addr: &str) -> std::process::Child {
+    std::process::Command::new(bin)
+        .args(["worker", "--leader", addr, "--no-compute"])
+        .stdout(std::process::Stdio::null())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawn worker")
+}
+
+fn submit_job(bin: &str, addr: &str, id: u64) {
+    let id_s = id.to_string();
+    let out = std::process::Command::new(bin)
+        .args([
+            "submit",
+            "--leader",
+            addr,
+            "--id",
+            id_s.as_str(),
+            "--model",
+            "resnet18",
+            "--gpus",
+            "2",
+            "--duration",
+            "2400",
+            "--tenant",
+            "team-a",
+        ])
+        .output()
+        .expect("run submit");
+    assert!(
+        out.status.success(),
+        "submit {id} failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+#[test]
+fn killed_and_recovered_leader_matches_unkilled_run_bytewise() {
+    let bin = env!("CARGO_BIN_EXE_synergy");
+    let base = std::env::temp_dir()
+        .join(format!("synergy-recover-test-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+
+    // One deploy service run: leader + worker subprocesses, 3 network
+    // submissions. When `kill_after` is set, SIGKILL the leader mid-run
+    // (then the worker), restart with --recover, and let the recovered
+    // leader finish the run. Returns the final report bytes.
+    let run = |tag: &str, kill_after: Option<Duration>| -> Vec<u8> {
+        let dir = base.join(tag);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut leader = spawn_leader(bin, &dir, false);
+        let addr = wait_port_file(&dir.join("port"));
+        let mut worker = spawn_worker(bin, &addr);
+        for id in 1..=3 {
+            submit_job(bin, &addr, id);
+        }
+        if let Some(delay) = kill_after {
+            std::thread::sleep(delay);
+            // SIGKILL the leader first: the worker must NOT die before
+            // the leader does, or the leader would journal churn the
+            // control run never saw.
+            leader.kill().expect("kill leader");
+            let _ = leader.wait();
+            let _ = worker.kill();
+            let _ = worker.wait();
+            // Cold restart from the journal: a new process, a fresh
+            // worker, the same flags.
+            std::fs::remove_file(dir.join("port")).unwrap();
+            leader = spawn_leader(bin, &dir, true);
+            let addr = wait_port_file(&dir.join("port"));
+            worker = spawn_worker(bin, &addr);
+        }
+        let status = leader.wait().expect("leader wait");
+        assert!(status.success(), "[{tag}] leader exited with {status}");
+        let _ = worker.wait();
+        std::fs::read(dir.join("report.json")).expect("report written")
+    };
+
+    // Control: never killed. Then the same workload killed mid-run
+    // (~1.5 s in = several journaled round checkpoints, jobs part-done)
+    // and recovered in a new process.
+    let control = run("control", None);
+    let recovered = run("killed", Some(Duration::from_millis(1500)));
+    assert!(!control.is_empty());
+    assert_eq!(
+        String::from_utf8_lossy(&control),
+        String::from_utf8_lossy(&recovered),
+        "recovered leader must produce a schedule byte-identical to the \
+         unkilled control run"
+    );
+    let _ = std::fs::remove_dir_all(&base);
 }

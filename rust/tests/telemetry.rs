@@ -248,6 +248,43 @@ fn fault_counters_ride_the_round_rows() {
     assert!(rec.to_jsonl().contains("\"servers_failed\""));
 }
 
+#[test]
+fn service_line_is_deploy_only_and_counters_only() {
+    // ISSUE 10: the deploy leader's lifecycle counters (recoveries,
+    // journal replay size, heartbeat expiries) ride the same profile as
+    // one `service` JSONL line — opt-in via record_service, absent from
+    // simulator runs, counters-only, and invisible to the CSV shape.
+    use synergy::telemetry::ServiceCounters;
+    let (jobs, _) = tenant_trace(40, 2);
+    let cfg = SimConfig {
+        n_servers: 2,
+        policy: "fifo".into(),
+        mechanism: "tune".into(),
+        ..Default::default()
+    };
+    let mut rec = TelemetryRecorder::new(TelemetryConfig::default());
+    Simulator::new(cfg).run_with_telemetry(jobs, Some(&mut rec));
+    assert!(
+        !rec.to_jsonl().contains("\"kind\":\"service\""),
+        "simulator profiles must carry no service line"
+    );
+    let csv_before = rec.to_csv();
+    rec.record_service(ServiceCounters {
+        recoveries: 1,
+        journal_records_replayed: 9,
+        heartbeat_expiries: 2,
+    });
+    let jsonl = rec.to_jsonl();
+    let last = jsonl.lines().last().unwrap();
+    assert!(
+        last.contains("\"kind\":\"service\"")
+            && last.contains("\"journal_records_replayed\":9"),
+        "service line must close the export: {last}"
+    );
+    assert!(!jsonl.contains("wall_ms"), "service line leaked wall time");
+    assert_eq!(rec.to_csv(), csv_before, "CSV shape must be untouched");
+}
+
 // ------------------------------------------------------------- CLI layer
 
 fn bin() -> Command {
